@@ -1,0 +1,139 @@
+//! **End-to-end validation driver** (paper §4.3 at repo scale): federated
+//! full SFT of a ~100M-parameter GPT (d=768, 12 layers, 12 heads,
+//! vocab 16384 — the paper used 1.3B on A100s; this is the same system at
+//! single-CPU-core scale).
+//!
+//! Three in-process clients each hold a distinct instruction corpus
+//! (alpaca/dolly/oasst-like skills). Every FedAvg round streams the full
+//! ~373 MB parameter payload through the SFM layer (1 MB chunks) to and
+//! from every client — the paper's "SFT needs the streaming API" point —
+//! and the validation-loss curve on a combined held-out set is logged.
+//!
+//! ```text
+//! make artifacts                       # builds gpt_100m_* (once)
+//! cargo run --release --example federated_sft            # full ~100M run
+//! cargo run --release --example federated_sft -- --family gpt_small   # quick
+//! ```
+
+use std::time::Instant;
+
+use anyhow::{anyhow, Result};
+use fedflare::config::JobConfig;
+use fedflare::coordinator::FedAvg;
+use fedflare::data::instruct::{InstructGen, Skill};
+use fedflare::metrics::write_csv;
+use fedflare::repro::common;
+use fedflare::runtime::RuntimeClient;
+use fedflare::sim::{self, DriverKind};
+use fedflare::util::cli::Args;
+
+fn main() -> Result<()> {
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    let p = Args::new("federated_sft", "e2e federated SFT of a ~100M GPT")
+        .opt("family", Some("gpt_100m"), "gpt_100m (default) or gpt_small")
+        .opt("rounds", Some("5"), "FL rounds")
+        .opt("local-steps", Some("20"), "client steps per round")
+        .opt("train-per-skill", Some("400"), "training samples per corpus")
+        .opt("eval-batches", Some("3"), "validation batches per round")
+        .opt("artifacts-dir", Some("artifacts"), "artifacts directory")
+        .opt("out-dir", Some("results"), "CSV output directory")
+        .parse(&argv)
+        .map_err(|e| anyhow!(e))?;
+
+    let family = p.get("family").unwrap().to_string();
+    let rc = RuntimeClient::start(p.get("artifacts-dir").unwrap())?;
+    let m = rc.manifest(&format!("{family}_train"))?;
+    let n_params: usize = m.params.iter().map(|s| s.shape.iter().product::<usize>()).sum();
+    println!(
+        "federated_sft: {family} — {:.1}M params, {:.1} MB payload/round/client, vocab {}, seq {}",
+        n_params as f64 / 1e6,
+        m.param_bytes() as f64 / (1 << 20) as f64,
+        m.meta.get("vocab").as_usize().unwrap_or(0),
+        m.seq()
+    );
+
+    let mut job = JobConfig::named("e2e_sft", &family);
+    job.rounds = p.get_usize("rounds").map_err(|e| anyhow!(e))?;
+    job.min_clients = 3;
+    job.train.local_steps = p.get_usize("local-steps").map_err(|e| anyhow!(e))?;
+    job.train.eval_batches = p.get_usize("eval-batches").map_err(|e| anyhow!(e))?;
+    job.clients = (0..3)
+        .map(|i| fedflare::config::ClientSpec {
+            name: format!("site-{}", i + 1),
+            bandwidth_bps: 0,
+            partition: i,
+        })
+        .collect();
+
+    let vocab = m.meta.get("vocab").as_usize().unwrap_or(512);
+    let gen = InstructGen::new(vocab, m.seq());
+    let per_skill = p.get_usize("train-per-skill").map_err(|e| anyhow!(e))?;
+    let val = gen.combined(40, job.seed ^ 0xE2E);
+    let data: Vec<Vec<fedflare::data::Sample>> = Skill::ALL
+        .iter()
+        .map(|&s| gen.dataset(s, per_skill, job.seed))
+        .collect();
+    for (i, d) in data.iter().enumerate() {
+        println!(
+            "site-{}: {} samples of skill '{}'",
+            i + 1,
+            d.len(),
+            Skill::ALL[i].name()
+        );
+    }
+
+    println!("compiling + initializing (first PJRT compile of {family} takes a while)...");
+    let t_init = Instant::now();
+    let initial = common::initial_model(&job, Some(&rc))?;
+    println!("init done in {:.1}s; starting {} rounds\n", t_init.elapsed().as_secs_f64(), job.rounds);
+
+    let mut ctl = FedAvg::new(initial, job.rounds, job.min_clients);
+    let rc2 = rc.clone();
+    let job2 = job.clone();
+    let val2 = val.clone();
+    let mut factory: Box<sim::ExecutorFactory> = Box::new(move |i, _spec| {
+        common::token_train_executor(&rc2, &job2.artifact, data[i].clone(), val2.clone(), false, &job2, i)
+    });
+    let t0 = Instant::now();
+    sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut factory, p.get("out-dir").unwrap())?;
+    let wall = t0.elapsed().as_secs_f64();
+
+    println!("\nvalidation-loss curve (combined held-out set):");
+    let mut rows = Vec::new();
+    for r in &ctl.history {
+        println!(
+            "  round {}: val_loss {:.4}  val_acc {:.3}  train_loss {:.4}",
+            r.round, r.val_loss, r.val_acc, r.train_loss
+        );
+        rows.push(vec![
+            r.round.to_string(),
+            format!("{:.4}", r.val_loss),
+            format!("{:.4}", r.val_acc),
+            format!("{:.4}", r.train_loss),
+        ]);
+    }
+    let out = format!("{}/e2e_sft_{family}.csv", p.get("out-dir").unwrap());
+    write_csv(
+        std::path::Path::new(&out),
+        &["round", "val_loss", "val_acc", "train_loss"],
+        &rows,
+    )?;
+
+    let total_steps = job.rounds * job.train.local_steps * 3;
+    let comm_gb = (ctl.history.len() * 2 * 3 * m.param_bytes()) as f64 / 1e9;
+    println!(
+        "\ne2e summary: {} rounds, {} client-steps, {wall:.0}s wall \
+         ({:.1}s/client-step incl. comm), {comm_gb:.1} GB streamed",
+        ctl.history.len(),
+        total_steps,
+        wall / total_steps as f64
+    );
+    let first = ctl.history.first().map(|r| r.val_loss).unwrap_or(f64::NAN);
+    let last = ctl.history.last().map(|r| r.val_loss).unwrap_or(f64::NAN);
+    println!("val loss {first:.3} -> {last:.3}; curve: {out}");
+    if last >= first {
+        eprintln!("warning: validation loss did not improve");
+    }
+    println!("federated_sft OK");
+    Ok(())
+}

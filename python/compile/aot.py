@@ -1,0 +1,420 @@
+"""AOT lowering: JAX step functions -> HLO text + manifest JSON.
+
+This is the only bridge between the Python build path and the Rust
+runtime. For every artifact we emit:
+
+  artifacts/<name>.hlo.txt   HLO *text* (NOT a serialized HloModuleProto:
+                             jax >= 0.5 emits 64-bit instruction ids that
+                             xla_extension 0.5.1 rejects; the text parser
+                             reassigns ids and round-trips cleanly — see
+                             /opt/xla-example/README.md)
+  artifacts/<name>.json      manifest: flat input order (params sorted by
+                             name, then opt m/v, then data inputs), output
+                             order, shapes/dtypes, init specs, task meta
+
+plus a top-level artifacts/manifest.json index. The Rust runtime
+(rust/src/runtime/) marshals buffers in exactly the manifest order.
+
+Usage:  cd python && python -m compile.aot --out-dir ../artifacts [--skip-heavy]
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+# ---------------------------------------------------------------------------
+# lowering helpers
+# ---------------------------------------------------------------------------
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo -> XlaComputation -> HLO text (return_tuple so the Rust
+    side always unwraps a tuple, even for single outputs)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _spec_entry(name, shape, dtype="f32", init=None):
+    e = {"name": name, "shape": list(shape), "dtype": dtype}
+    if init is not None:
+        e["init"] = init
+    return e
+
+
+def _shape_struct(shape, dtype=jnp.float32):
+    return jax.ShapeDtypeStruct(tuple(shape), dtype)
+
+
+class ArtifactBuilder:
+    """Accumulates artifacts and writes the index."""
+
+    def __init__(self, out_dir):
+        self.out_dir = out_dir
+        self.index = []
+        os.makedirs(out_dir, exist_ok=True)
+
+    def emit(self, name, kind, fn, inputs, outputs, params, opt_params, meta):
+        """Lower ``fn(*flat)`` against ``inputs`` (list of (name, ShapeDtypeStruct))
+        and write hlo + manifest."""
+        structs = [s for _, s in inputs]
+        lowered = jax.jit(fn).lower(*structs)
+        hlo = to_hlo_text(lowered)
+        hlo_file = f"{name}.hlo.txt"
+        with open(os.path.join(self.out_dir, hlo_file), "w") as f:
+            f.write(hlo)
+        manifest = {
+            "artifact": name,
+            "hlo": hlo_file,
+            "kind": kind,
+            "params": params,
+            "opt_params": opt_params,
+            "inputs": [
+                _spec_entry(n, s.shape, _dt(s.dtype)) for n, s in inputs
+            ],
+            "outputs": outputs,
+            "meta": meta,
+        }
+        with open(os.path.join(self.out_dir, f"{name}.json"), "w") as f:
+            json.dump(manifest, f, indent=1)
+        self.index.append(name)
+        print(f"  wrote {name}: {len(hlo) / 1e6:.2f} MB hlo, "
+              f"{len(inputs)} inputs, {len(outputs)} outputs")
+
+    def finish(self):
+        """Write the artifact index, merging with artifacts already on disk
+        (so `--only` partial rebuilds never drop entries)."""
+        names = set(self.index)
+        for f in os.listdir(self.out_dir):
+            if f.endswith(".json") and f != "manifest.json":
+                names.add(f[: -len(".json")])
+        with open(os.path.join(self.out_dir, "manifest.json"), "w") as f:
+            json.dump({"artifacts": sorted(names)}, f, indent=1)
+
+
+def _dt(dtype) -> str:
+    return {"float32": "f32", "int32": "i32"}[jnp.dtype(dtype).name]
+
+
+# ---------------------------------------------------------------------------
+# flat-signature adapters
+# ---------------------------------------------------------------------------
+
+
+def flat_train_fn(cfg, step, param_names, opt_names, n_data):
+    """Build fn(*flat) = step(params, m, v, bc, *data) with explicit order:
+    params (sorted), m, v (over opt_names, sorted), bc, data inputs.
+    Returns (fn, output_packer_names)."""
+
+    np_, no = len(param_names), len(opt_names)
+
+    def fn(*flat):
+        params = dict(zip(param_names, flat[:np_]))
+        m = dict(zip(opt_names, flat[np_ : np_ + no]))
+        v = dict(zip(opt_names, flat[np_ + no : np_ + 2 * no]))
+        bc = flat[np_ + 2 * no]
+        data = flat[np_ + 2 * no + 1 :]
+        new_p, new_m, new_v, loss, acc = step(params, m, v, bc, *data)
+        out = [new_p[k] for k in param_names]
+        out += [new_m[k] for k in opt_names]
+        out += [new_v[k] for k in opt_names]
+        out += [loss, acc]
+        return tuple(out)
+
+    return fn
+
+
+def train_io(cfg, specs, opt_names, data_inputs, lr, kind_meta):
+    """Common manifest plumbing for train-style artifacts."""
+    param_names = sorted(specs)
+    params = [_spec_entry(n, specs[n][0], "f32", specs[n][1]) for n in param_names]
+    inputs = [(n, _shape_struct(specs[n][0])) for n in param_names]
+    inputs += [(f"m.{n}", _shape_struct(specs[n][0])) for n in opt_names]
+    inputs += [(f"v.{n}", _shape_struct(specs[n][0])) for n in opt_names]
+    inputs += [("bc", _shape_struct((1, 2)))]
+    inputs += [(n, s) for n, s in data_inputs]
+    outputs = [_spec_entry(n, specs[n][0]) for n in param_names]
+    outputs += [_spec_entry(f"m.{n}", specs[n][0]) for n in opt_names]
+    outputs += [_spec_entry(f"v.{n}", specs[n][0]) for n in opt_names]
+    outputs += [_spec_entry("loss", ()), _spec_entry("acc", ())]
+    return param_names, params, inputs, outputs
+
+
+def eval_io(specs, data_inputs, metrics=("loss", "acc")):
+    param_names = sorted(specs)
+    params = [_spec_entry(n, specs[n][0], "f32", specs[n][1]) for n in param_names]
+    inputs = [(n, _shape_struct(specs[n][0])) for n in param_names]
+    inputs += [(n, s) for n, s in data_inputs]
+    outputs = [_spec_entry(m, ()) for m in metrics]
+    return param_names, params, inputs, outputs
+
+
+# ---------------------------------------------------------------------------
+# artifact definitions
+# ---------------------------------------------------------------------------
+
+
+def build_gpt(b: ArtifactBuilder, cfg: M.ModelConfig, lr: float, with_score: bool):
+    specs = M.param_specs(cfg)
+    meta = {
+        "model": cfg.name, "vocab": cfg.vocab, "seq": cfg.seq,
+        "d_model": cfg.d_model, "n_layers": cfg.n_layers,
+        "n_heads": cfg.n_heads, "pad": M.PAD,
+        "label_tokens": list(M.LABEL_TOKENS), "lr": lr,
+        "use_pallas": cfg.use_pallas, "causal": cfg.causal,
+    }
+    tok_t = _shape_struct((cfg.train_batch, cfg.seq), jnp.int32)
+    tok_e = _shape_struct((cfg.eval_batch, cfg.seq), jnp.int32)
+
+    # ---- LM train (full SFT)
+    opt_names = sorted(specs)
+    step = M.lm_train_step(cfg, lr)
+    pn, params, inputs, outputs = train_io(
+        cfg, specs, opt_names, [("tokens", tok_t)], lr, meta
+    )
+    fn = flat_train_fn(cfg, step, pn, opt_names, 1)
+    b.emit(f"{cfg.name}_train", "train", fn, inputs, outputs, params, opt_names,
+           {**meta, "batch": cfg.train_batch})
+
+    # ---- LM eval
+    pn, params, inputs, outputs = eval_io(specs, [("tokens", tok_e)])
+    ev = M.lm_eval_step(cfg)
+
+    def eval_fn(*flat):
+        p = dict(zip(pn, flat[: len(pn)]))
+        return tuple(ev(p, *flat[len(pn) :]))
+
+    b.emit(f"{cfg.name}_eval", "eval", eval_fn, inputs, outputs, params, [],
+           {**meta, "batch": cfg.eval_batch})
+
+    # ---- MC scoring (Table 1)
+    if with_score:
+        mask_e = _shape_struct((cfg.eval_batch, cfg.seq))
+        pn, params, inputs, outputs = eval_io(
+            specs, [("tokens", tok_e), ("cont_mask", mask_e)],
+            metrics=(),
+        )
+        outputs = [
+            _spec_entry("sum_logp", (cfg.eval_batch,)),
+            _spec_entry("n_cont", (cfg.eval_batch,)),
+        ]
+        sc = M.score_step(cfg)
+
+        def score_fn(*flat):
+            p = dict(zip(pn, flat[: len(pn)]))
+            return tuple(sc(p, *flat[len(pn) :]))
+
+        b.emit(f"{cfg.name}_score", "score", score_fn, inputs, outputs, params, [],
+               {**meta, "batch": cfg.eval_batch})
+
+
+def build_cls(b: ArtifactBuilder, cfg: M.ModelConfig, lr: float, name: str):
+    """Full-FT verbalizer-classification artifacts (used to *pretrain* the
+    PEFT base model: the paper fine-tunes a pretrained foundation model;
+    here the foundation competence is built by full-FT on a noisier
+    pre-training domain before adapters take over)."""
+    specs = M.param_specs(cfg)
+    meta = {
+        "model": name, "vocab": cfg.vocab, "seq": cfg.seq, "pad": M.PAD,
+        "label_tokens": list(M.LABEL_TOKENS), "lr": lr,
+        "use_pallas": cfg.use_pallas,
+    }
+    tok_t = _shape_struct((cfg.train_batch, cfg.seq), jnp.int32)
+    lab_t = _shape_struct((cfg.train_batch,), jnp.int32)
+    tok_e = _shape_struct((cfg.eval_batch, cfg.seq), jnp.int32)
+    lab_e = _shape_struct((cfg.eval_batch,), jnp.int32)
+
+    opt_names = sorted(specs)
+    step = M.cls_train_step(cfg, lr)
+    pn, params, inputs, outputs = train_io(
+        cfg, specs, opt_names, [("tokens", tok_t), ("labels", lab_t)], lr, meta
+    )
+    fn = flat_train_fn(cfg, step, pn, opt_names, 2)
+    b.emit(f"{name}_train", "train", fn, inputs, outputs, params, opt_names,
+           {**meta, "batch": cfg.train_batch})
+
+    pn, params, inputs, outputs = eval_io(
+        specs, [("tokens", tok_e), ("labels", lab_e)]
+    )
+    ev = M.cls_eval_step(cfg)
+
+    def eval_fn(*flat):
+        p = dict(zip(pn, flat[: len(pn)]))
+        return tuple(ev(p, *flat[len(pn) :]))
+
+    b.emit(f"{name}_eval", "eval", eval_fn, inputs, outputs, params, [],
+           {**meta, "batch": cfg.eval_batch})
+
+
+def build_train_k(b: ArtifactBuilder, cfg: M.ModelConfig, lr: float, k: int):
+    """K-fused LM train artifact (perf variant of `<name>_train`)."""
+    specs = M.param_specs(cfg)
+    meta = {
+        "model": cfg.name, "vocab": cfg.vocab, "seq": cfg.seq, "pad": M.PAD,
+        "lr": lr, "k": k, "use_pallas": cfg.use_pallas,
+    }
+    tok_k = _shape_struct((k, cfg.train_batch, cfg.seq), jnp.int32)
+    opt_names = sorted(specs)
+    step = M.lm_train_step_k(cfg, lr, k)
+    pn, params, inputs, outputs = train_io(
+        cfg, specs, opt_names, [("tokens_k", tok_k)], lr, meta
+    )
+    fn = flat_train_fn(cfg, step, pn, opt_names, 1)
+    b.emit(f"{cfg.name}_train_k{k}", "train", fn, inputs, outputs, params,
+           opt_names, {**meta, "batch": cfg.train_batch})
+
+
+def build_lora(b: ArtifactBuilder, cfg: M.ModelConfig, lr: float):
+    """PEFT artifacts: verbalizer-classification train/eval; optimizer state
+    covers only the adapter params (what FedAvg communicates)."""
+    specs = M.param_specs(cfg)
+    lora_names = M.lora_param_names(cfg)
+    meta = {
+        "model": cfg.name, "vocab": cfg.vocab, "seq": cfg.seq, "pad": M.PAD,
+        "label_tokens": list(M.LABEL_TOKENS), "lr": lr, "lora_r": cfg.lora_r,
+        "lora_alpha": cfg.lora_alpha, "trainable": lora_names,
+        "use_pallas": cfg.use_pallas,
+    }
+    tok_t = _shape_struct((cfg.train_batch, cfg.seq), jnp.int32)
+    lab_t = _shape_struct((cfg.train_batch,), jnp.int32)
+    tok_e = _shape_struct((cfg.eval_batch, cfg.seq), jnp.int32)
+    lab_e = _shape_struct((cfg.eval_batch,), jnp.int32)
+
+    step = M.cls_train_step(cfg, lr, trainable=lora_names)
+    pn, params, inputs, outputs = train_io(
+        cfg, specs, lora_names, [("tokens", tok_t), ("labels", lab_t)], lr, meta
+    )
+    fn = flat_train_fn(cfg, step, pn, lora_names, 2)
+    b.emit(f"{cfg.name}_train", "train", fn, inputs, outputs, params, lora_names,
+           {**meta, "batch": cfg.train_batch})
+
+    pn, params, inputs, outputs = eval_io(
+        specs, [("tokens", tok_e), ("labels", lab_e)]
+    )
+    ev = M.cls_eval_step(cfg)
+
+    def eval_fn(*flat):
+        p = dict(zip(pn, flat[: len(pn)]))
+        return tuple(ev(p, *flat[len(pn) :]))
+
+    b.emit(f"{cfg.name}_eval", "eval", eval_fn, inputs, outputs, params, [],
+           {**meta, "batch": cfg.eval_batch})
+
+
+def build_embed(b: ArtifactBuilder, cfg: M.ModelConfig):
+    specs = M.param_specs(cfg)
+    meta = {
+        "model": cfg.name, "vocab": cfg.vocab, "seq": cfg.seq,
+        "d_model": cfg.d_model, "pad": M.PAD, "use_pallas": cfg.use_pallas,
+    }
+    tok = _shape_struct((cfg.eval_batch, cfg.seq), jnp.int32)
+    pn, params, inputs, outputs = eval_io(specs, [("tokens", tok)], metrics=())
+    outputs = [_spec_entry("embeddings", (cfg.eval_batch, cfg.d_model))]
+    em = M.embed_step(cfg)
+
+    def fn(*flat):
+        p = dict(zip(pn, flat[: len(pn)]))
+        return (em(p, *flat[len(pn) :]),)
+
+    b.emit(f"{cfg.name}_embed", "embed", fn, inputs, outputs, params, [],
+           {**meta, "batch": cfg.eval_batch})
+
+
+def build_mlp(b: ArtifactBuilder, name: str, sizes, in_dim: int, lr: float,
+              batch: int = 64):
+    specs = M.mlp_param_specs(sizes, in_dim)
+    meta = {"sizes": list(sizes), "in_dim": in_dim, "classes": M.MLP_CLASSES,
+            "lr": lr}
+    x_t = _shape_struct((batch, in_dim))
+    y_t = _shape_struct((batch,), jnp.int32)
+
+    opt_names = sorted(specs)
+    step = M.mlp_train_step(lr)
+    cfg = M.ModelConfig(name, 0, 0, 0, 1, 1)  # dummy; mlp never uses pallas
+    pn, params, inputs, outputs = train_io(
+        cfg, specs, opt_names, [("x", x_t), ("y", y_t)], lr, meta
+    )
+    fn = flat_train_fn(cfg, step, pn, opt_names, 2)
+    b.emit(f"{name}_train", "train", fn, inputs, outputs, params, opt_names,
+           {**meta, "batch": batch})
+
+    pn, params, inputs, outputs = eval_io(specs, [("x", x_t), ("y", y_t)])
+    ev = M.mlp_eval_step()
+
+    def eval_fn(*flat):
+        p = dict(zip(pn, flat[: len(pn)]))
+        return tuple(ev(p, *flat[len(pn) :]))
+
+    b.emit(f"{name}_eval", "eval", eval_fn, inputs, outputs, params, [],
+           {**meta, "batch": batch})
+
+
+def build_addnum(b: ArtifactBuilder, n: int = 524288):
+    """Fig-5 streaming workload: x + delta over one 2MB (n*4 bytes) key."""
+    fn = M.add_delta_step(n, use_pallas=True)
+    inputs = [("x", _shape_struct((n,))), ("delta", _shape_struct((1, 1)))]
+    outputs = [_spec_entry("y", (n,))]
+    b.emit("addnum", "addnum", lambda x, d: fn(x, d), inputs, outputs, [], [],
+           {"n": n, "use_pallas": True})
+
+
+# ---------------------------------------------------------------------------
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--skip-heavy", action="store_true",
+                    help="skip gpt_100m / esm_44m (CI-speed builds)")
+    ap.add_argument("--only", default=None,
+                    help="comma-separated artifact-family filter")
+    args = ap.parse_args()
+
+    only = set(args.only.split(",")) if args.only else None
+
+    def want(fam):
+        return only is None or fam in only
+
+    b = ArtifactBuilder(args.out_dir)
+    if want("addnum"):
+        build_addnum(b)
+    if want("gpt_nano"):
+        build_gpt(b, M.CONFIGS["gpt_nano"], lr=1e-3, with_score=False)
+    if want("gpt_small"):
+        build_gpt(b, M.CONFIGS["gpt_small"], lr=1e-3, with_score=True)
+    if want("gpt_small_k"):
+        build_train_k(b, M.CONFIGS["gpt_small"], lr=1e-3, k=8)
+    if want("gpt_small_lora"):
+        build_lora(b, M.CONFIGS["gpt_small_lora"], lr=3e-3)
+    if want("gpt_small_cls"):
+        build_cls(b, M.CONFIGS["gpt_small"], lr=1e-3, name="gpt_small_cls")
+    if want("esm_small"):
+        build_embed(b, M.CONFIGS["esm_small"])
+    if want("mlp"):
+        for name, sizes in M.MLP_SIZES.items():
+            build_mlp(b, name, sizes, in_dim=M.CONFIGS["esm_small"].d_model,
+                      lr=1e-3)
+    if not args.skip_heavy:
+        if want("gpt_100m"):
+            build_gpt(b, M.CONFIGS["gpt_100m"], lr=2e-4, with_score=False)
+        if want("gpt_100m_k"):
+            build_train_k(b, M.CONFIGS["gpt_100m"], lr=2e-4, k=5)
+        if want("esm_44m"):
+            build_embed(b, M.CONFIGS["esm_44m"])
+    b.finish()
+    print(f"manifest: {len(b.index)} artifacts -> {args.out_dir}/manifest.json")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,15 @@
+"""L1 — Pallas TPU kernels for the paper's compute hot-spots.
+
+Exports:
+  flash_attention — blockwise online-softmax attention (the LLM hot-spot)
+  lora_matmul     — fused base + rank-r adapter projection (the PEFT hot-spot)
+  fused_adamw     — single-pass optimizer update (the memory-bound tail)
+  ref             — pure-jnp oracles for all of the above
+"""
+
+from .flash_attention import flash_attention
+from .fused_adamw import fused_adamw
+from .lora_matmul import lora_matmul
+from . import ref
+
+__all__ = ["flash_attention", "lora_matmul", "fused_adamw", "ref"]

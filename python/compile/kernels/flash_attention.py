@@ -1,0 +1,177 @@
+"""Blockwise (flash-style) attention as a Pallas TPU kernel.
+
+TPU adaptation of the GPU flash-attention insight (the paper's LLM
+workloads run attention as their hot-spot): instead of threadblock tiles
+in shared memory, the HBM->VMEM schedule is expressed with BlockSpecs —
+the grid walks (batch*heads, q-panel, k-panel), the q/k/v panels are
+staged into VMEM by the Pallas pipeline, and the softmax is computed
+online (running max / running sum) in VMEM scratch so the (S, S) score
+matrix is never materialized in HBM.
+
+Grid layout (k innermost, sequential):
+    (bh, qi, ki)   bh, qi parallel; ki is the reduction sweep.
+
+Scratch (persistent across the ki sweep for a fixed (bh, qi)):
+    m_ref   (block_q,)        running row max
+    l_ref   (block_q,)        running row sum of exp
+    acc_ref (block_q, d)      unnormalized output accumulator
+
+VMEM footprint per grid step (f32):
+    q/o: block_q*d, k/v: 2*block_k*d, scratch: block_q*(d+2)
+    e.g. block_q=block_k=128, d=64  =>  ~165 KiB  (well under 16 MiB VMEM)
+
+MXU notes: the two dots per step are (block_q, d) @ (d, block_k) and
+(block_q, block_k) @ (block_k, d); with block_* multiples of 128 and
+d >= 64 both map onto full systolic-array passes.
+
+interpret=True everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret-mode lowers to plain HLO, which is what the Rust
+runtime loads. See ref.attention for the oracle.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(
+    q_ref,
+    k_ref,
+    v_ref,
+    o_ref,
+    m_ref,
+    l_ref,
+    acc_ref,
+    *,
+    nk: int,
+    block_q: int,
+    block_k: int,
+    scale: float,
+    causal: bool,
+):
+    """One (bh, qi, ki) grid step of the online-softmax sweep."""
+    qi = pl.program_id(1)
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0]  # (block_q, d)
+    k = k_ref[0]  # (block_k, d)
+    v = v_ref[0]  # (block_k, d)
+
+    s = jnp.dot(q, k.T) * scale  # (block_q, block_k) — MXU pass 1
+    if causal:
+        qpos = qi * block_q + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 0
+        )
+        kpos = ki * block_k + jax.lax.broadcasted_iota(
+            jnp.int32, (block_q, block_k), 1
+        )
+        s = jnp.where(qpos >= kpos, s, NEG_INF)
+
+    m_prev = m_ref[...]
+    m_cur = jnp.maximum(m_prev, s.max(axis=-1))
+    alpha = jnp.exp(m_prev - m_cur)  # rescale factor for old accumulators
+    p = jnp.exp(s - m_cur[:, None])
+    l_ref[...] = l_ref[...] * alpha + p.sum(axis=-1)
+    acc_ref[...] = acc_ref[...] * alpha[:, None] + jnp.dot(p, v)  # MXU pass 2
+    m_ref[...] = m_cur
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        o_ref[0] = (acc_ref[...] / l_ref[...][:, None]).astype(o_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnames=("causal", "block_q", "block_k"))
+def flash_attention(q, k, v, causal=True, block_q=128, block_k=128):
+    """Blockwise attention over (BH, S, D) operands.
+
+    Block sizes are clamped to the sequence length; S must be divisible by
+    the (clamped) block sizes — the model pads sequences to a multiple of
+    the block already.
+
+    Differentiable: the forward pass is the Pallas kernel; the backward
+    pass is the VJP of the (bit-equivalent-up-to-fp) reference attention —
+    recompute-based, like flash-attention's own backward. On a real TPU the
+    backward would be a second Pallas kernel; on this CPU testbed the
+    reference VJP lowers to the same HLO XLA would fuse anyway.
+    """
+    return _flash_attention_fwd_only(q, k, v, causal, block_q, block_k)
+
+
+def _flash_attention_fwd_only(q, k, v, causal, block_q, block_k):
+    bh, s, d = q.shape
+    assert k.shape == (bh, s, d) and v.shape == (bh, s, d)
+    block_q = min(block_q, s)
+    block_k = min(block_k, s)
+    if s % block_q or s % block_k:
+        raise ValueError(f"seq len {s} not divisible by blocks ({block_q},{block_k})")
+    nq, nk = s // block_q, s // block_k
+    scale = 1.0 / (d**0.5)
+
+    kern = functools.partial(
+        _attn_kernel,
+        nk=nk,
+        block_q=block_q,
+        block_k=block_k,
+        scale=scale,
+        causal=causal,
+    )
+    return pl.pallas_call(
+        kern,
+        grid=(bh, nq, nk),
+        in_specs=[
+            pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q,), jnp.float32),
+            pltpu.VMEM((block_q, d), jnp.float32),
+        ],
+        interpret=True,
+    )(q, k, v)
+
+
+def _ref_attention(q, k, v, causal):
+    """Reference forward (shared with ref.py; duplicated to avoid an import
+    cycle) used by the backward pass."""
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / (d**0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), bool))
+        s = jnp.where(mask, s, NEG_INF)
+    return jnp.einsum("bqk,bkd->bqd", jax.nn.softmax(s, axis=-1), v)
+
+
+def _fa_fwd(q, k, v, causal, block_q, block_k):
+    out = _flash_attention_fwd_only(q, k, v, causal, block_q, block_k)
+    return out, (q, k, v)
+
+
+def _fa_bwd(causal, block_q, block_k, res, g):
+    q, k, v = res
+    _, vjp = jax.vjp(lambda q, k, v: _ref_attention(q, k, v, causal), q, k, v)
+    return vjp(g)
+
+
+flash_attention.defvjp(_fa_fwd, _fa_bwd)
+
+
+def vmem_bytes(block_q: int, block_k: int, d: int, itemsize: int = 4) -> int:
+    """Static VMEM footprint of one grid step (for DESIGN.md perf estimates)."""
+    io = (2 * block_q * d) + (2 * block_k * d)  # q, o, k, v panels
+    scratch = block_q * (d + 2)
+    return itemsize * (io + scratch)

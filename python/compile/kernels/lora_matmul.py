@@ -1,0 +1,132 @@
+"""Fused LoRA projection as a Pallas TPU kernel: ``x @ w + scale*(x@a)@b``.
+
+This is the PEFT hot-spot (paper §3.2/§4.2: LoRA fine-tuning of a GPT).
+The naive formulation launches three matmuls and round-trips the rank-r
+intermediate ``x @ a`` through HBM. The fusion insight, rethought for TPU:
+
+  * grid = (mi, ni, ki) with ki the contraction sweep; the (block_m,
+    block_n) base-path accumulator and the tiny (block_m, r) LoRA
+    bottleneck accumulator both live in VMEM scratch for the whole sweep;
+  * the LoRA up-projection ``(x@a) @ b`` happens once, at the last ki
+    step, straight out of VMEM — the rank-r intermediate never sees HBM;
+  * ``a``'s (block_k, r) and ``b``'s (r, block_n) panels are tiny, so the
+    extra VMEM cost over a plain matmul is ~(block_m + block_k + block_n)*r
+    floats.
+
+VMEM per step (f32): block_m*block_k + block_k*block_n + r*(block_k +
+block_n + block_m) + block_m*block_n*2 ; with 128^2 blocks and r=16 this
+is ~0.4 MiB.
+
+interpret=True: see flash_attention.py for why.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _lora_kernel(
+    x_ref,
+    w_ref,
+    a_ref,
+    b_ref,
+    o_ref,
+    acc_ref,
+    xa_ref,
+    *,
+    nk: int,
+    scale: float,
+):
+    ki = pl.program_id(2)
+
+    @pl.when(ki == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+        xa_ref[...] = jnp.zeros_like(xa_ref)
+
+    x = x_ref[...]  # (block_m, block_k)
+    acc_ref[...] += jnp.dot(x, w_ref[...])  # base path, MXU
+    xa_ref[...] += jnp.dot(x, a_ref[...])  # rank-r bottleneck
+
+    @pl.when(ki == nk - 1)
+    def _finalize():
+        out = acc_ref[...] + scale * jnp.dot(xa_ref[...], b_ref[...])
+        o_ref[...] = out.astype(o_ref.dtype)
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnames=("block_m", "block_n", "block_k"))
+def lora_matmul(x, w, a, b, scale, block_m=128, block_n=128, block_k=128):
+    """Fused ``x @ w + scale * (x @ a) @ b``.
+
+    Args:
+      x: (M, K); w: (K, N); a: (K, r); b: (r, N). M, N, K must be
+      divisible by the clamped block sizes (the model pads to multiples).
+
+    Differentiable: forward = Pallas kernel; backward = the closed-form
+    matmul gradients (dx = g wᵀ + scale (g bᵀ) aᵀ, dw = xᵀ g,
+    da = scale xᵀ (g bᵀ), db = scale (x a)ᵀ g).
+    """
+    return _lora_fwd_only(x, w, a, b, scale, block_m, block_n, block_k)
+
+
+def _lora_fwd_only(x, w, a, b, scale, block_m, block_n, block_k):
+    m, k = x.shape
+    k2, n = w.shape
+    kr, r = a.shape
+    rb, n2 = b.shape
+    assert k == k2 == kr and n == n2 and r == rb, "shape mismatch"
+    block_m = min(block_m, m)
+    block_n = min(block_n, n)
+    block_k = min(block_k, k)
+    if m % block_m or n % block_n or k % block_k:
+        raise ValueError(f"dims ({m},{n},{k}) not divisible by blocks")
+    nm, nn, nk = m // block_m, n // block_n, k // block_k
+
+    kern = functools.partial(_lora_kernel, nk=nk, scale=float(scale))
+    return pl.pallas_call(
+        kern,
+        grid=(nm, nn, nk),
+        in_specs=[
+            pl.BlockSpec((block_m, block_k), lambda i, j, kk: (i, kk)),
+            pl.BlockSpec((block_k, block_n), lambda i, j, kk: (kk, j)),
+            pl.BlockSpec((block_k, r), lambda i, j, kk: (kk, 0)),
+            pl.BlockSpec((r, block_n), lambda i, j, kk: (0, j)),
+        ],
+        out_specs=pl.BlockSpec((block_m, block_n), lambda i, j, kk: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), x.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_m, block_n), jnp.float32),
+            pltpu.VMEM((block_m, r), jnp.float32),
+        ],
+        interpret=True,
+    )(x, w, a, b)
+
+
+def _lora_fwd(x, w, a, b, scale, block_m, block_n, block_k):
+    out = _lora_fwd_only(x, w, a, b, scale, block_m, block_n, block_k)
+    return out, (x, w, a, b, scale)
+
+
+def _lora_bwd(block_m, block_n, block_k, res, g):
+    x, w, a, b, scale = res
+    gbt = g @ b.T  # (M, r)
+    dx = g @ w.T + scale * (gbt @ a.T)
+    dw = x.T @ g
+    da = scale * (x.T @ gbt)
+    db = scale * ((x @ a).T @ g)
+    dscale = jnp.sum(((x @ a) @ b) * g)
+    return dx, dw, da, db, dscale
+
+
+lora_matmul.defvjp(_lora_fwd, _lora_bwd)
+
+
+def vmem_bytes(block_m, block_n, block_k, r, itemsize=4):
+    """Static VMEM footprint of one grid step (perf estimates)."""
+    io = block_m * block_k + block_k * block_n + block_k * r + r * block_n
+    out = block_m * block_n
+    scratch = block_m * block_n + block_m * r
+    return itemsize * (io + out + scratch)

@@ -1,0 +1,67 @@
+"""Pure-jnp oracles for the Pallas kernels (L1 correctness reference).
+
+Every Pallas kernel in this package has an exact-semantics reference here.
+pytest + hypothesis sweep shapes/dtypes and assert_allclose kernel vs ref.
+The L2 model can be lowered against either implementation (``use_pallas``):
+the reference path is what the CPU-PJRT artifacts for the large model use
+(interpret-mode Pallas is a correctness vehicle, not a CPU-speed one); the
+Pallas path is lowered into the nano artifacts so the Rust runtime
+executes genuinely Pallas-authored HLO end-to-end.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def attention(q, k, v, causal=True):
+    """Reference multi-head attention.
+
+    Args:
+      q, k, v: (BH, S, D) — batch*heads folded into the leading dim.
+      causal: apply a lower-triangular mask.
+
+    Returns:
+      (BH, S, D) attention output, f32.
+    """
+    d = q.shape[-1]
+    s = jnp.einsum("bqd,bkd->bqk", q, k) / (d**0.5)
+    if causal:
+        mask = jnp.tril(jnp.ones((q.shape[1], k.shape[1]), bool))
+        s = jnp.where(mask, s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bqk,bkd->bqd", p, v)
+
+
+def lora_matmul(x, w, a, b, scale):
+    """Reference fused LoRA projection: ``x @ w + scale * (x @ a) @ b``.
+
+    Args:
+      x: (M, K) activations.
+      w: (K, N) frozen base weight.
+      a: (K, r) LoRA down-projection.
+      b: (r, N) LoRA up-projection.
+      scale: alpha / r.
+    """
+    return x @ w + scale * ((x @ a) @ b)
+
+
+def adamw(p, g, m, v, t, lr, beta1=0.9, beta2=0.999, eps=1e-8, weight_decay=0.0):
+    """Reference AdamW update (single tensor).
+
+    Args:
+      p, g, m, v: parameter, gradient, first/second moment (same shape).
+      t: step count (>= 1), scalar f32.
+
+    Returns:
+      (new_p, new_m, new_v).
+    """
+    m_new = beta1 * m + (1.0 - beta1) * g
+    v_new = beta2 * v + (1.0 - beta2) * (g * g)
+    bc1 = 1.0 - beta1**t
+    bc2 = 1.0 - beta2**t
+    m_hat = m_new / bc1
+    v_hat = v_new / bc2
+    p_new = p - lr * (m_hat / (jnp.sqrt(v_hat) + eps) + weight_decay * p)
+    return p_new, m_new, v_new

@@ -1,0 +1,551 @@
+"""L2 — JAX model definitions and training/eval step functions.
+
+Everything here is build-time only: ``aot.py`` lowers the step functions to
+HLO text which the Rust runtime (rust/src/runtime/) loads and executes via
+PJRT. Nothing in this package is imported at FL runtime.
+
+Models
+  * GPT        — decoder-only transformer (the paper's NeMo GPT stand-in):
+                 learned positions, pre-norm, flash attention, GELU MLP,
+                 weight-tied LM head; per-layer params stacked for lax.scan.
+  * GPT + LoRA — rank-r adapters on the qkv and output projections
+                 (paper §4.2 PEFT); only adapter params are trainable.
+  * ESM        — bidirectional encoder (paper §3.3, ESM-1nv-style) used as
+                 a frozen embedding extractor (mean-pooled).
+  * MLP        — scikit-learn-style classifier head for subcellular
+                 location (paper §4.4 / Fig 9).
+
+Step functions (all pure, all lowered AOT)
+  * lm_train_step / lm_eval_step       — next-token LM (SFT, Fig 8)
+  * cls_train_step / cls_eval_step     — verbalizer classification via the
+                                         LM head at the last position
+                                         (PEFT sentiment, Fig 7)
+  * score_step                         — MC log-likelihood scoring
+                                         (lm-eval-style acc/acc_norm, Table 1)
+  * embed_step                         — mean-pooled encoder embedding (Fig 9)
+  * mlp_train_step / mlp_eval_step     — classifier on fixed embeddings
+  * add_delta_step                     — the Fig-5 streaming workload
+                                         ("add a small number to the arrays")
+
+Parameter convention: params are a flat ``dict[str, Array]``; the AOT
+manifest records names in sorted order and the Rust side marshals buffers
+in exactly that order. Optimizer state mirrors the trainable subset.
+"""
+
+import dataclasses
+import functools
+from typing import Callable
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import flash_attention, fused_adamw, lora_matmul, ref
+
+# ---------------------------------------------------------------------------
+# configs
+# ---------------------------------------------------------------------------
+
+
+@dataclasses.dataclass(frozen=True)
+class ModelConfig:
+    """Transformer hyper-parameters for one artifact family."""
+
+    name: str
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    seq: int
+    causal: bool = True  # False => ESM-style bidirectional encoder
+    lora_r: int = 0  # 0 => no adapters
+    lora_alpha: float = 16.0
+    use_pallas: bool = False  # lower Pallas kernels into the HLO
+    train_batch: int = 8
+    eval_batch: int = 16
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    @property
+    def lora_scale(self) -> float:
+        return self.lora_alpha / self.lora_r if self.lora_r else 0.0
+
+
+# Reserved token ids shared with the Rust data generators (see manifest meta).
+PAD = 0
+LABEL_TOKENS = (1, 2, 3)  # negative / neutral / positive verbalizers
+
+CONFIGS = {
+    # Pallas-lowered end-to-end proof: the Rust runtime executes HLO whose
+    # attention / LoRA / AdamW all came from the Pallas kernels.
+    "gpt_nano": ModelConfig(
+        name="gpt_nano", vocab=256, d_model=64, n_layers=2, n_heads=2,
+        seq=32, use_pallas=True, train_batch=4, eval_batch=8,
+    ),
+    # Figure-run scale (Fig 7/8/Table 1 sweeps on one CPU core).
+    "gpt_small": ModelConfig(
+        name="gpt_small", vocab=512, d_model=128, n_layers=4, n_heads=4,
+        seq=64, train_batch=8, eval_batch=16,
+    ),
+    "gpt_small_lora": ModelConfig(
+        name="gpt_small_lora", vocab=512, d_model=128, n_layers=4, n_heads=4,
+        seq=64, lora_r=8, train_batch=8, eval_batch=16,
+    ),
+    # ~100M-parameter e2e model (paper's 345M/1.3B scaled to one CPU core):
+    # wte 16384*768 = 12.6M, 12 layers x ~7.1M = 85M  =>  ~98M total.
+    "gpt_100m": ModelConfig(
+        name="gpt_100m", vocab=16384, d_model=768, n_layers=12, n_heads=12,
+        seq=64, train_batch=4, eval_batch=8,
+    ),
+    # ESM-style encoders (paper: 6 layers / 12 heads / 768 hidden = 44M).
+    "esm_small": ModelConfig(
+        name="esm_small", vocab=32, d_model=128, n_layers=4, n_heads=4,
+        seq=64, causal=False, train_batch=8, eval_batch=32,
+    ),
+    "esm_44m": ModelConfig(
+        name="esm_44m", vocab=32, d_model=768, n_layers=6, n_heads=12,
+        seq=64, causal=False, train_batch=4, eval_batch=16,
+    ),
+}
+
+# Fig 9 MLP ladder: paper sweeps one layer of 32 units up to [512,256,128,64].
+MLP_SIZES = {
+    "mlp_32": (32,),
+    "mlp_128_64": (128, 64),
+    "mlp_256_128_64": (256, 128, 64),
+    "mlp_512_256_128_64": (512, 256, 128, 64),
+}
+MLP_CLASSES = 10  # subcellular locations (nucleus, cytoplasm, ...)
+
+# ---------------------------------------------------------------------------
+# initialization specs (mirrored by the Rust side, see manifest "init")
+# ---------------------------------------------------------------------------
+
+
+def param_specs(cfg: ModelConfig) -> dict[str, tuple[tuple[int, ...], str]]:
+    """name -> (shape, init spec). Init specs the Rust RNG understands:
+    ``normal:<std>``, ``zeros``, ``ones``."""
+    d, L, v, s = cfg.d_model, cfg.n_layers, cfg.vocab, cfg.seq
+    resid_std = 0.02 / (2 * L) ** 0.5
+    specs = {
+        "wte": ((v, d), "normal:0.02"),
+        "wpe": ((s, d), "normal:0.02"),
+        "ln_f.scale": ((d,), "ones"),
+        "ln_f.bias": ((d,), "zeros"),
+        # per-layer tensors stacked on a leading L axis for lax.scan
+        "blocks.ln1.scale": ((L, d), "ones"),
+        "blocks.ln1.bias": ((L, d), "zeros"),
+        "blocks.ln2.scale": ((L, d), "ones"),
+        "blocks.ln2.bias": ((L, d), "zeros"),
+        "blocks.attn.w_qkv": ((L, d, 3 * d), "normal:0.02"),
+        "blocks.attn.b_qkv": ((L, 3 * d), "zeros"),
+        "blocks.attn.w_o": ((L, d, d), f"normal:{resid_std:.6g}"),
+        "blocks.attn.b_o": ((L, d), "zeros"),
+        "blocks.mlp.w_fc": ((L, d, 4 * d), "normal:0.02"),
+        "blocks.mlp.b_fc": ((L, 4 * d), "zeros"),
+        "blocks.mlp.w_proj": ((L, 4 * d, d), f"normal:{resid_std:.6g}"),
+        "blocks.mlp.b_proj": ((L, d), "zeros"),
+    }
+    if cfg.lora_r:
+        r = cfg.lora_r
+        specs.update(
+            {
+                "blocks.attn.lora_a_qkv": ((L, d, r), "normal:0.01"),
+                "blocks.attn.lora_b_qkv": ((L, r, 3 * d), "zeros"),
+                "blocks.attn.lora_a_o": ((L, d, r), "normal:0.01"),
+                "blocks.attn.lora_b_o": ((L, r, d), "zeros"),
+            }
+        )
+    return specs
+
+
+def lora_param_names(cfg: ModelConfig) -> list[str]:
+    return sorted(n for n in param_specs(cfg) if ".lora_" in n)
+
+
+def mlp_param_specs(sizes, in_dim, n_classes=MLP_CLASSES):
+    """Fig-9 MLP: in_dim -> sizes... -> n_classes."""
+    specs = {}
+    dims = (in_dim, *sizes, n_classes)
+    for i in range(len(dims) - 1):
+        fan_in = dims[i]
+        std = (2.0 / fan_in) ** 0.5  # He init for ReLU
+        specs[f"layer{i}.w"] = ((dims[i], dims[i + 1]), f"normal:{std:.6g}")
+        specs[f"layer{i}.b"] = ((dims[i + 1],), "zeros")
+    return specs
+
+
+def init_params(specs, key) -> dict[str, jax.Array]:
+    """Python-side init (tests only; the Rust runtime inits from the manifest)."""
+    params = {}
+    for name in sorted(specs):
+        shape, init = specs[name]
+        key, sub = jax.random.split(key)
+        if init == "zeros":
+            params[name] = jnp.zeros(shape, jnp.float32)
+        elif init == "ones":
+            params[name] = jnp.ones(shape, jnp.float32)
+        elif init.startswith("normal:"):
+            std = float(init.split(":")[1])
+            params[name] = jax.random.normal(sub, shape, jnp.float32) * std
+        else:
+            raise ValueError(f"unknown init {init}")
+    return params
+
+
+# ---------------------------------------------------------------------------
+# transformer forward
+# ---------------------------------------------------------------------------
+
+
+def _layernorm(x, scale, bias, eps=1e-5):
+    mu = x.mean(-1, keepdims=True)
+    var = ((x - mu) ** 2).mean(-1, keepdims=True)
+    return (x - mu) / jnp.sqrt(var + eps) * scale + bias
+
+
+def _pick_block(dim: int, preferred: int = 128) -> int:
+    """Largest power-of-two block <= preferred that divides dim."""
+    b = min(preferred, dim)
+    while dim % b:
+        b //= 2
+    return max(b, 1)
+
+
+def _attention(cfg: ModelConfig, q, k, v):
+    """(B, H, S, Dh) x3 -> (B, H, S, Dh); Pallas or reference."""
+    b, h, s, dh = q.shape
+    qf = q.reshape(b * h, s, dh)
+    kf = k.reshape(b * h, s, dh)
+    vf = v.reshape(b * h, s, dh)
+    if cfg.use_pallas:
+        blk = _pick_block(s)
+        out = flash_attention(qf, kf, vf, causal=cfg.causal, block_q=blk, block_k=blk)
+    else:
+        out = ref.attention(qf, kf, vf, causal=cfg.causal)
+    return out.reshape(b, h, s, dh)
+
+
+def _project(cfg: ModelConfig, x2d, w, b, a=None, bb=None):
+    """(M, K) @ (K, N) (+ LoRA) + bias — Pallas or reference."""
+    if a is None:
+        return x2d @ w + b
+    if cfg.use_pallas:
+        m, k = x2d.shape
+        n = w.shape[1]
+        out = lora_matmul(
+            x2d, w, a, bb, cfg.lora_scale,
+            block_m=_pick_block(m), block_n=_pick_block(n), block_k=_pick_block(k),
+        )
+    else:
+        out = ref.lora_matmul(x2d, w, a, bb, cfg.lora_scale)
+    return out + b
+
+
+def _block(cfg: ModelConfig, x, layer):
+    """One pre-norm transformer block. ``layer`` = dict of per-layer slices."""
+    b, s, d = x.shape
+    h, dh = cfg.n_heads, cfg.d_head
+
+    ln1 = _layernorm(x, layer["ln1.scale"], layer["ln1.bias"])
+    qkv = _project(
+        cfg, ln1.reshape(b * s, d), layer["attn.w_qkv"], layer["attn.b_qkv"],
+        layer.get("attn.lora_a_qkv"), layer.get("attn.lora_b_qkv"),
+    ).reshape(b, s, 3, h, dh)
+    q, k, v = (qkv[:, :, i].transpose(0, 2, 1, 3) for i in range(3))
+    att = _attention(cfg, q, k, v).transpose(0, 2, 1, 3).reshape(b * s, d)
+    att = _project(
+        cfg, att, layer["attn.w_o"], layer["attn.b_o"],
+        layer.get("attn.lora_a_o"), layer.get("attn.lora_b_o"),
+    ).reshape(b, s, d)
+    x = x + att
+
+    ln2 = _layernorm(x, layer["ln2.scale"], layer["ln2.bias"])
+    hdn = jax.nn.gelu(ln2.reshape(b * s, d) @ layer["mlp.w_fc"] + layer["mlp.b_fc"])
+    out = (hdn @ layer["mlp.w_proj"] + layer["mlp.b_proj"]).reshape(b, s, d)
+    return x + out
+
+
+def forward_hidden(cfg: ModelConfig, params, tokens):
+    """tokens (B, S) int32 -> final hidden states (B, S, D)."""
+    b, s = tokens.shape
+    x = params["wte"][tokens] + params["wpe"][jnp.arange(s)][None]
+
+    block_keys = sorted(k[len("blocks.") :] for k in params if k.startswith("blocks."))
+    stacked = {k: params["blocks." + k] for k in block_keys}
+
+    def body(x, layer):
+        return _block(cfg, x, layer), None
+
+    x, _ = jax.lax.scan(body, x, stacked)
+    return _layernorm(x, params["ln_f.scale"], params["ln_f.bias"])
+
+
+def logits_fn(cfg: ModelConfig, params, tokens):
+    """LM logits via the weight-tied head: (B, S, V)."""
+    hidden = forward_hidden(cfg, params, tokens)
+    return hidden @ params["wte"].T
+
+
+# ---------------------------------------------------------------------------
+# losses / metrics
+# ---------------------------------------------------------------------------
+
+
+def lm_loss(cfg: ModelConfig, params, tokens):
+    """Mean next-token cross-entropy over non-pad targets. Returns (loss, acc)."""
+    logits = logits_fn(cfg, params, tokens)[:, :-1]  # predict t+1 from t
+    targets = tokens[:, 1:]
+    mask = (targets != PAD).astype(jnp.float32)
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+    denom = jnp.maximum(mask.sum(), 1.0)
+    loss = (nll * mask).sum() / denom
+    acc = ((logits.argmax(-1) == targets).astype(jnp.float32) * mask).sum() / denom
+    return loss, acc
+
+
+def cls_loss(cfg: ModelConfig, params, tokens, labels):
+    """Verbalizer classification: logits over LABEL_TOKENS at the last
+    position (inputs are left-padded so position S-1 is the final prompt
+    token). Returns (loss, acc)."""
+    logits = logits_fn(cfg, params, tokens)[:, -1]  # (B, V)
+    label_logits = logits[:, jnp.array(LABEL_TOKENS)]  # (B, 3)
+    logp = jax.nn.log_softmax(label_logits, axis=-1)
+    nll = -jnp.take_along_axis(logp, labels[:, None], axis=-1)[:, 0]
+    acc = (label_logits.argmax(-1) == labels).astype(jnp.float32).mean()
+    return nll.mean(), acc
+
+
+# ---------------------------------------------------------------------------
+# optimizer (AdamW; fused Pallas kernel or reference)
+# ---------------------------------------------------------------------------
+
+
+def adamw_update(cfg: ModelConfig, params, grads, m, v, bc, lr, weight_decay=0.01):
+    """Apply AdamW to every trainable tensor. ``bc`` is the (1,2) bias-
+    correction operand [1-b1^t, 1-b2^t] so one executable serves all steps."""
+    new_p, new_m, new_v = {}, {}, {}
+    for name in sorted(grads):
+        p, g = params[name], grads[name]
+        flat_p, flat_g = p.reshape(-1), g.reshape(-1)
+        flat_m, flat_v = m[name].reshape(-1), v[name].reshape(-1)
+        wd = 0.0 if _no_decay(name) else weight_decay
+        if cfg.use_pallas:
+            n = flat_p.shape[0]
+            blk = _pick_block(n, 65536)
+            p2, m2, v2 = fused_adamw(
+                flat_p, flat_g, flat_m, flat_v, bc, lr=lr, weight_decay=wd, block=blk
+            )
+        else:
+            t_eff = None  # reference path consumes bc directly below
+            m2 = 0.9 * flat_m + 0.1 * flat_g
+            v2 = 0.999 * flat_v + 0.001 * flat_g * flat_g
+            m_hat = m2 / bc[0, 0]
+            v_hat = v2 / bc[0, 1]
+            p2 = flat_p - lr * (m_hat / (jnp.sqrt(v_hat) + 1e-8) + wd * flat_p)
+        new_p[name] = p2.reshape(p.shape)
+        new_m[name] = m2.reshape(p.shape)
+        new_v[name] = v2.reshape(p.shape)
+    return new_p, new_m, new_v
+
+
+def _no_decay(name: str) -> bool:
+    return ".bias" in name or ".scale" in name or name.startswith(("ln", "wpe"))
+
+
+# ---------------------------------------------------------------------------
+# step functions (lowered by aot.py)
+# ---------------------------------------------------------------------------
+
+
+def lm_train_step(cfg: ModelConfig, lr: float, trainable: list[str] | None = None):
+    """Returns f(params, m, v, bc, tokens) -> (params', m', v', loss, acc).
+
+    ``trainable`` restricts grads/optimizer to a param subset (PEFT); m/v
+    cover only that subset.
+    """
+
+    def step(params, m, v, bc, tokens):
+        train_keys = trainable or sorted(params)
+        frozen = {k: params[k] for k in params if k not in train_keys}
+
+        def loss_fn(tp):
+            return lm_loss(cfg, {**frozen, **tp}, tokens)
+
+        tp = {k: params[k] for k in train_keys}
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(tp)
+        new_p, new_m, new_v = adamw_update(cfg, tp, grads, m, v, bc, lr)
+        return {**frozen, **new_p}, new_m, new_v, loss, acc
+
+    return step
+
+
+def lm_train_step_k(cfg: ModelConfig, lr: float, k: int):
+    """K fused optimizer steps in one executable (perf: the Rust<->PJRT
+    boundary marshals params/opt state once per *call*, so folding K steps
+    into a lax.scan cuts marshal traffic by K — see EXPERIMENTS.md §Perf).
+
+    Returns f(params, m, v, bc, tokens_k) with tokens_k (K, B, S); bc is
+    the bias correction of the *first* step, advanced inside the scan.
+    outputs: (params', m', v', mean_loss, mean_acc).
+    """
+
+    def step(params, m, v, bc, tokens_k):
+        names = sorted(params)
+
+        def body(carry, tokens):
+            params, m, v, bc = carry
+            new_p, new_m, new_v, loss, acc = lm_train_step(cfg, lr)(
+                params, m, v, bc, tokens
+            )
+            # advance bias correction: bc' = 1 - (1 - bc) * beta
+            bc1 = 1.0 - (1.0 - bc[0, 0]) * 0.9
+            bc2 = 1.0 - (1.0 - bc[0, 1]) * 0.999
+            bc_next = jnp.stack([bc1, bc2]).reshape(1, 2)
+            return (new_p, new_m, new_v, bc_next), (loss, acc)
+
+        (params, m, v, _), (losses, accs) = jax.lax.scan(
+            body, (params, m, v, bc), tokens_k
+        )
+        _ = names
+        return params, m, v, losses.mean(), accs.mean()
+
+    return step
+
+
+def lm_eval_step(cfg: ModelConfig):
+    def step(params, tokens):
+        loss, acc = lm_loss(cfg, params, tokens)
+        return loss, acc
+
+    return step
+
+
+def cls_train_step(cfg: ModelConfig, lr: float, trainable: list[str] | None = None):
+    def step(params, m, v, bc, tokens, labels):
+        train_keys = trainable or sorted(params)
+        frozen = {k: params[k] for k in params if k not in train_keys}
+
+        def loss_fn(tp):
+            return cls_loss(cfg, {**frozen, **tp}, tokens, labels)
+
+        tp = {k: params[k] for k in train_keys}
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(tp)
+        new_p, new_m, new_v = adamw_update(cfg, tp, grads, m, v, bc, lr)
+        return {**frozen, **new_p}, new_m, new_v, loss, acc
+
+    return step
+
+
+def cls_eval_step(cfg: ModelConfig):
+    def step(params, tokens, labels):
+        return cls_loss(cfg, params, tokens, labels)
+
+    return step
+
+
+def score_step(cfg: ModelConfig):
+    """MC-scoring (lm-eval style): f(params, tokens, cont_mask) ->
+    (sum_logp (B,), n_cont (B,)). acc uses sum_logp; acc_norm divides by
+    continuation length on the Rust side."""
+
+    def step(params, tokens, cont_mask):
+        logits = logits_fn(cfg, params, tokens)[:, :-1]
+        targets = tokens[:, 1:]
+        mask = cont_mask[:, 1:]  # mask marks continuation *target* positions
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        tok_logp = jnp.take_along_axis(logp, targets[..., None], axis=-1)[..., 0]
+        return (tok_logp * mask).sum(-1), mask.sum(-1)
+
+    return step
+
+
+def embed_step(cfg: ModelConfig):
+    """f(params, tokens) -> (B, D) mean-pooled over non-pad positions."""
+
+    def step(params, tokens):
+        hidden = forward_hidden(cfg, params, tokens)
+        mask = (tokens != PAD).astype(jnp.float32)[..., None]
+        return (hidden * mask).sum(1) / jnp.maximum(mask.sum(1), 1.0)
+
+    return step
+
+
+# ----------------------------------------------------------------- MLP (Fig 9)
+
+
+def mlp_forward(params, x):
+    n_layers = len(params) // 2
+    for i in range(n_layers):
+        x = x @ params[f"layer{i}.w"] + params[f"layer{i}.b"]
+        if i < n_layers - 1:
+            x = jax.nn.relu(x)
+    return x
+
+
+def mlp_train_step(lr: float):
+    def step(params, m, v, bc, x, y):
+        def loss_fn(p):
+            logits = mlp_forward(p, x)
+            logp = jax.nn.log_softmax(logits, axis=-1)
+            nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+            acc = (logits.argmax(-1) == y).astype(jnp.float32).mean()
+            return nll.mean(), acc
+
+        (loss, acc), grads = jax.value_and_grad(loss_fn, has_aux=True)(params)
+        # plain (non-pallas) AdamW: MLPs are tiny
+        cfg = ModelConfig("mlp", 0, 0, 0, 1, 1)
+        new_p, new_m, new_v = adamw_update(cfg, params, grads, m, v, bc, lr, 1e-4)
+        return new_p, new_m, new_v, loss, acc
+
+    return step
+
+
+def mlp_eval_step():
+    def step(params, x, y):
+        logits = mlp_forward(params, x)
+        logp = jax.nn.log_softmax(logits, axis=-1)
+        nll = -jnp.take_along_axis(logp, y[:, None], axis=-1)[:, 0]
+        acc = (logits.argmax(-1) == y).astype(jnp.float32).mean()
+        return nll.mean(), acc
+
+    return step
+
+
+# ----------------------------------------------------- Fig-5 streaming workload
+
+
+def add_delta_step(n: int, use_pallas: bool = True):
+    """The paper's §4.1 local 'training' task: add a small number to a 2GB
+    array (here scaled). Authored as a Pallas elementwise kernel so even the
+    streaming benchmark exercises kernel-lowered HLO."""
+
+    if not use_pallas:
+        return lambda x, delta: (x + delta[0, 0],)
+
+    from jax.experimental import pallas as pl
+
+    def kern(d_ref, x_ref, o_ref):
+        o_ref[...] = x_ref[...] + d_ref[0, 0]
+
+    blk = _pick_block(n, 65536)
+
+    def step(x, delta):
+        return (
+            pl.pallas_call(
+                kern,
+                grid=(n // blk,),
+                in_specs=[
+                    pl.BlockSpec((1, 1), lambda i: (0, 0)),
+                    pl.BlockSpec((blk,), lambda i: (i,)),
+                ],
+                out_specs=pl.BlockSpec((blk,), lambda i: (i,)),
+                out_shape=jax.ShapeDtypeStruct((n,), jnp.float32),
+                interpret=True,
+            )(delta, x),
+        )
+
+    return step

@@ -1,0 +1,124 @@
+"""AOT manifest consistency: every artifact's manifest must describe its
+HLO faithfully — the Rust runtime marshals buffers purely positionally, so
+a drifting manifest is the most dangerous failure mode in the repo."""
+
+import json
+import os
+
+import pytest
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts")
+
+pytestmark = pytest.mark.skipif(
+    not os.path.exists(os.path.join(ART, "manifest.json")),
+    reason="run `make artifacts` first",
+)
+
+
+def artifacts():
+    with open(os.path.join(ART, "manifest.json")) as f:
+        return json.load(f)["artifacts"]
+
+
+def load(name):
+    with open(os.path.join(ART, f"{name}.json")) as f:
+        return json.load(f)
+
+
+def test_index_lists_files_that_exist():
+    names = artifacts()
+    assert len(names) >= 20
+    for n in names:
+        m = load(n)
+        assert os.path.exists(os.path.join(ART, m["hlo"])), n
+
+
+@pytest.mark.parametrize("name", artifacts() if os.path.exists(os.path.join(ART, "manifest.json")) else [])
+def test_manifest_structure(name):
+    m = load(name)
+    assert m["artifact"] == name
+    inputs = m["inputs"]
+    params = m["params"]
+    opt = m["opt_params"]
+    # params come first in input order, sorted by name
+    pnames = [p["name"] for p in params]
+    assert pnames == sorted(pnames)
+    assert [i["name"] for i in inputs[: len(pnames)]] == pnames
+    if m["kind"] == "train":
+        # then m.*, v.*, bc
+        off = len(pnames)
+        assert [i["name"] for i in inputs[off : off + len(opt)]] == [
+            f"m.{n}" for n in opt
+        ]
+        off += len(opt)
+        assert [i["name"] for i in inputs[off : off + len(opt)]] == [
+            f"v.{n}" for n in opt
+        ]
+        off += len(opt)
+        assert inputs[off]["name"] == "bc"
+        assert inputs[off]["shape"] == [1, 2]
+        # train outputs: params', m', v', then scalars
+        out_names = [o["name"] for o in m["outputs"]]
+        assert out_names[: len(pnames)] == pnames
+        assert "loss" in out_names
+    # every input/output has a valid dtype and shape
+    for io in inputs + m["outputs"]:
+        assert io["dtype"] in ("f32", "i32")
+        assert all(isinstance(d, int) and d > 0 for d in io["shape"])
+    # init specs parseable
+    for p in params:
+        init = p["init"]
+        assert (
+            init in ("zeros", "ones") or init.startswith("normal:")
+        ), f"{name}: {init}"
+        if init.startswith("normal:"):
+            float(init.split(":")[1])
+
+
+def test_hlo_parameter_counts_match_manifest():
+    # the entry computation's `parameter(N)` instructions == manifest inputs
+    import re
+
+    for name in artifacts():
+        m = load(name)
+        with open(os.path.join(ART, m["hlo"])) as f:
+            text = f.read()
+        # parameters of the entry computation appear as "parameter(N)";
+        # nested computations reuse the instruction, so count distinct N of
+        # the ENTRY block only
+        entry = text.split("ENTRY", 1)[1]
+        ids = set(re.findall(r"parameter\((\d+)\)", entry))
+        assert len(ids) == len(m["inputs"]), f"{name}: {len(ids)} vs {len(m['inputs'])}"
+
+
+def test_train_and_eval_share_param_schema():
+    fams = ["gpt_nano", "gpt_small", "gpt_100m", "gpt_small_lora"]
+    for fam in fams:
+        tr = load(f"{fam}_train")
+        ev = load(f"{fam}_eval")
+        tp = {(p["name"], tuple(p["shape"])) for p in tr["params"]}
+        ep = {(p["name"], tuple(p["shape"])) for p in ev["params"]}
+        assert tp == ep, fam
+
+
+def test_lora_opt_params_are_adapters_only():
+    m = load("gpt_small_lora_train")
+    assert m["opt_params"]
+    assert all("lora" in n for n in m["opt_params"])
+    # and the full-SFT artifact optimizes everything
+    m2 = load("gpt_small_train")
+    assert len(m2["opt_params"]) == len(m2["params"])
+
+
+def test_kernel_vmem_estimates_fit_tpu_budget():
+    """The BlockSpec-derived VMEM footprints must fit a TPU core's ~16 MiB."""
+    import importlib
+
+    # (the package exports the kernel *functions* under the same names, so
+    # fetch the module objects explicitly)
+    fa = importlib.import_module("compile.kernels.flash_attention")
+    lm = importlib.import_module("compile.kernels.lora_matmul")
+
+    assert fa.vmem_bytes(128, 128, 64) < 16 << 20
+    assert fa.vmem_bytes(256, 256, 128) < 16 << 20
+    assert lm.vmem_bytes(128, 128, 128, 16) < 16 << 20

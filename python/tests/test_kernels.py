@@ -1,0 +1,152 @@
+"""Pallas kernels vs pure-jnp oracles — the core L1 correctness signal.
+
+hypothesis sweeps shapes/blocks/dtypes; every property asserts allclose
+against compile.kernels.ref.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import flash_attention, fused_adamw, lora_matmul, ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+SETTINGS = dict(max_examples=25, deadline=None)
+
+
+def _rand(key, shape, dtype=jnp.float32, scale=1.0):
+    return (jax.random.normal(key, shape) * scale).astype(dtype)
+
+
+# ---------------------------------------------------------------- attention
+@settings(**SETTINGS)
+@given(
+    bh=st.integers(1, 4),
+    s_blocks=st.integers(1, 4),
+    block=st.sampled_from([8, 16, 32]),
+    d=st.sampled_from([8, 16, 64]),
+    causal=st.booleans(),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_flash_attention_matches_ref(bh, s_blocks, block, d, causal, seed):
+    s = s_blocks * block
+    k0, k1, k2 = jax.random.split(jax.random.PRNGKey(seed), 3)
+    q = _rand(k0, (bh, s, d))
+    k = _rand(k1, (bh, s, d))
+    v = _rand(k2, (bh, s, d))
+    out = flash_attention(q, k, v, causal=causal, block_q=block, block_k=block)
+    expected = ref.attention(q, k, v, causal=causal)
+    np.testing.assert_allclose(out, expected, atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_rejects_indivisible_seq():
+    q = jnp.zeros((1, 24, 8))
+    with pytest.raises(ValueError):
+        flash_attention(q, q, q, block_q=32, block_k=16)
+
+
+def test_flash_attention_causal_ignores_future():
+    """Perturbing future keys/values must not change earlier outputs."""
+    key = jax.random.PRNGKey(0)
+    q = _rand(key, (2, 32, 16))
+    k = _rand(jax.random.PRNGKey(1), (2, 32, 16))
+    v = _rand(jax.random.PRNGKey(2), (2, 32, 16))
+    out1 = flash_attention(q, k, v, causal=True, block_q=16, block_k=16)
+    k2 = k.at[:, 31].set(99.0)
+    v2 = v.at[:, 31].set(-99.0)
+    out2 = flash_attention(q, k2, v2, causal=True, block_q=16, block_k=16)
+    np.testing.assert_allclose(out1[:, :31], out2[:, :31], atol=1e-6)
+
+
+def test_flash_attention_block_size_invariance():
+    """Same numerics regardless of block decomposition."""
+    key = jax.random.PRNGKey(7)
+    q = _rand(key, (1, 64, 32))
+    k = _rand(jax.random.PRNGKey(8), (1, 64, 32))
+    v = _rand(jax.random.PRNGKey(9), (1, 64, 32))
+    o8 = flash_attention(q, k, v, block_q=8, block_k=8)
+    o64 = flash_attention(q, k, v, block_q=64, block_k=64)
+    np.testing.assert_allclose(o8, o64, atol=2e-5, rtol=2e-5)
+
+
+# ---------------------------------------------------------------- lora
+@settings(**SETTINGS)
+@given(
+    mb=st.integers(1, 3),
+    nb=st.integers(1, 3),
+    kb=st.integers(1, 3),
+    block=st.sampled_from([8, 16, 32]),
+    r=st.sampled_from([2, 4, 8]),
+    scale=st.floats(0.1, 4.0),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_lora_matmul_matches_ref(mb, nb, kb, block, r, scale, seed):
+    m, n, k = mb * block, nb * block, kb * block
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    x = _rand(ks[0], (m, k))
+    w = _rand(ks[1], (k, n), scale=0.1)
+    a = _rand(ks[2], (k, r), scale=0.1)
+    b = _rand(ks[3], (r, n), scale=0.1)
+    out = lora_matmul(x, w, a, b, scale, block_m=block, block_n=block, block_k=block)
+    expected = ref.lora_matmul(x, w, a, b, scale)
+    np.testing.assert_allclose(out, expected, atol=1e-4, rtol=1e-4)
+
+
+def test_lora_zero_adapter_is_base_matmul():
+    """With b == 0 the fused kernel must reduce to x @ w exactly."""
+    ks = jax.random.split(jax.random.PRNGKey(3), 3)
+    x = _rand(ks[0], (32, 32))
+    w = _rand(ks[1], (32, 32))
+    a = _rand(ks[2], (32, 4))
+    b = jnp.zeros((4, 32))
+    out = lora_matmul(x, w, a, b, 2.0, block_m=16, block_n=16, block_k=16)
+    np.testing.assert_allclose(out, x @ w, atol=1e-5, rtol=1e-5)
+
+
+def test_lora_shape_mismatch_raises():
+    x = jnp.zeros((16, 16))
+    w = jnp.zeros((16, 16))
+    a = jnp.zeros((16, 4))
+    b = jnp.zeros((8, 16))  # rank mismatch vs a
+    with pytest.raises(AssertionError):
+        lora_matmul(x, w, a, b, 1.0)
+
+
+# ---------------------------------------------------------------- adamw
+@settings(**SETTINGS)
+@given(
+    nb=st.integers(1, 4),
+    block=st.sampled_from([16, 64, 256]),
+    t=st.integers(1, 500),
+    lr=st.floats(1e-5, 1e-1),
+    wd=st.floats(0.0, 0.1),
+    seed=st.integers(0, 2**31 - 1),
+)
+def test_fused_adamw_matches_ref(nb, block, t, lr, wd, seed):
+    n = nb * block
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    p = _rand(ks[0], (n,))
+    g = _rand(ks[1], (n,))
+    m = _rand(ks[2], (n,), scale=0.1)
+    v = jnp.abs(_rand(ks[3], (n,), scale=0.1))
+    bc = jnp.array([[1.0 - 0.9**t, 1.0 - 0.999**t]], jnp.float32)
+    p2, m2, v2 = fused_adamw(p, g, m, v, bc, lr=lr, weight_decay=wd, block=block)
+    ep, em, ev = ref.adamw(p, g, m, v, float(t), lr, weight_decay=wd)
+    np.testing.assert_allclose(p2, ep, atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(m2, em, atol=1e-6, rtol=1e-6)
+    np.testing.assert_allclose(v2, ev, atol=1e-6, rtol=1e-6)
+
+
+def test_fused_adamw_zero_grad_is_pure_decay():
+    """g == 0, m == v == 0: update must be exactly -lr*wd*p."""
+    n = 64
+    p = jnp.ones((n,))
+    z = jnp.zeros((n,))
+    bc = jnp.array([[0.1, 0.001]], jnp.float32)
+    p2, m2, v2 = fused_adamw(p, z, z, z, bc, lr=0.1, weight_decay=0.01, block=64)
+    np.testing.assert_allclose(p2, p - 0.1 * 0.01 * p, atol=1e-7)
+    np.testing.assert_allclose(m2, z, atol=0)
+    np.testing.assert_allclose(v2, z, atol=0)

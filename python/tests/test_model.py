@@ -1,0 +1,207 @@
+"""L2 model correctness: shapes, losses, training dynamics, LoRA freezing."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+
+jax.config.update("jax_platform_name", "cpu")
+
+NANO = M.CONFIGS["gpt_nano"]
+# a non-pallas twin of nano so most tests run fast
+FAST = M.ModelConfig(
+    name="fast", vocab=64, d_model=32, n_layers=2, n_heads=2, seq=16,
+    train_batch=4, eval_batch=4,
+)
+FAST_LORA = M.ModelConfig(
+    name="fast_lora", vocab=64, d_model=32, n_layers=2, n_heads=2, seq=16,
+    lora_r=4, train_batch=4, eval_batch=4,
+)
+ESM_FAST = M.ModelConfig(
+    name="esm_fast", vocab=32, d_model=32, n_layers=2, n_heads=2, seq=16,
+    causal=False, train_batch=4, eval_batch=4,
+)
+
+
+def _params(cfg, seed=0):
+    return M.init_params(M.param_specs(cfg), jax.random.PRNGKey(seed))
+
+
+def _tokens(cfg, batch, seed=1):
+    key = jax.random.PRNGKey(seed)
+    return jax.random.randint(key, (batch, cfg.seq), 4, cfg.vocab, jnp.int32)
+
+
+def test_param_specs_cover_lora_only_when_requested():
+    assert not any(".lora_" in n for n in M.param_specs(FAST))
+    lora = M.lora_param_names(FAST_LORA)
+    assert len(lora) == 4
+    assert all(n.startswith("blocks.attn.lora_") for n in lora)
+
+
+def test_forward_shapes():
+    params = _params(FAST)
+    tokens = _tokens(FAST, 4)
+    logits = M.logits_fn(FAST, params, tokens)
+    assert logits.shape == (4, FAST.seq, FAST.vocab)
+
+
+def test_random_init_loss_near_uniform():
+    """Untrained LM loss should be ~= ln(vocab)."""
+    params = _params(FAST)
+    tokens = _tokens(FAST, 8)
+    loss, _ = M.lm_loss(FAST, params, tokens)
+    assert abs(float(loss) - np.log(FAST.vocab)) < 0.5
+
+
+def test_pad_positions_excluded_from_loss():
+    params = _params(FAST)
+    tokens = _tokens(FAST, 4)
+    # padding the tail must not change the masked mean loss much, and a
+    # fully-padded-target batch must not produce NaN
+    padded = tokens.at[:, 8:].set(M.PAD)
+    loss, _ = M.lm_loss(FAST, params, padded)
+    assert np.isfinite(float(loss))
+    all_pad = jnp.full_like(tokens, M.PAD)
+    loss2, _ = M.lm_loss(FAST, params, all_pad)
+    assert np.isfinite(float(loss2))
+
+
+def test_lm_train_step_decreases_loss():
+    params = _params(FAST)
+    names = sorted(params)
+    m = {k: jnp.zeros_like(params[k]) for k in names}
+    v = {k: jnp.zeros_like(params[k]) for k in names}
+    step = jax.jit(M.lm_train_step(FAST, lr=1e-2))
+    tokens = _tokens(FAST, 4)
+    losses = []
+    for t in range(1, 16):
+        bc = jnp.array([[1 - 0.9**t, 1 - 0.999**t]], jnp.float32)
+        params, m, v, loss, _ = step(params, m, v, bc, tokens)
+        losses.append(float(loss))
+    assert losses[-1] < losses[0] - 0.5, losses
+
+
+def test_lora_train_freezes_base_weights():
+    cfg = FAST_LORA
+    params = _params(cfg)
+    lora = M.lora_param_names(cfg)
+    m = {k: jnp.zeros_like(params[k]) for k in lora}
+    v = {k: jnp.zeros_like(params[k]) for k in lora}
+    step = jax.jit(M.cls_train_step(cfg, lr=1e-2, trainable=lora))
+    tokens = _tokens(cfg, 4)
+    labels = jnp.array([0, 1, 2, 0], jnp.int32)
+    bc = jnp.array([[0.1, 0.001]], jnp.float32)
+    new_params, _, _, loss, acc = step(params, m, v, bc, tokens, labels)
+    for k in params:
+        same = np.array_equal(np.asarray(params[k]), np.asarray(new_params[k]))
+        if k in lora:
+            assert not same, f"adapter {k} did not move"
+        else:
+            assert same, f"frozen {k} moved"
+
+
+def test_lora_zero_b_matches_base_model():
+    """lora_b is zero-initialized => logits identical to the no-LoRA model."""
+    cfg = FAST_LORA
+    params = _params(cfg)
+    tokens = _tokens(cfg, 2)
+    logits = M.logits_fn(cfg, params, tokens)
+    base_params = {k: v for k, v in params.items() if ".lora_" not in k}
+    base = M.ModelConfig(
+        name="b", vocab=cfg.vocab, d_model=cfg.d_model, n_layers=cfg.n_layers,
+        n_heads=cfg.n_heads, seq=cfg.seq, train_batch=4, eval_batch=4,
+    )
+    base_logits = M.logits_fn(base, base_params, tokens)
+    np.testing.assert_allclose(logits, base_logits, atol=1e-5)
+
+
+def test_cls_loss_and_acc_range():
+    cfg = FAST_LORA
+    params = _params(cfg)
+    tokens = _tokens(cfg, 4)
+    labels = jnp.array([0, 1, 2, 1], jnp.int32)
+    loss, acc = M.cls_loss(cfg, params, tokens, labels)
+    assert 0.0 <= float(acc) <= 1.0
+    assert abs(float(loss) - np.log(3)) < 1.0  # ~uniform over 3 labels
+
+
+def test_score_step_matches_manual_loglik():
+    cfg = FAST
+    params = _params(cfg)
+    tokens = _tokens(cfg, 2)
+    cont_mask = jnp.zeros((2, cfg.seq)).at[:, 8:].set(1.0)
+    sum_logp, n = M.score_step(cfg)(params, tokens, cont_mask)
+    logits = M.logits_fn(cfg, params, tokens)[:, :-1]
+    logp = jax.nn.log_softmax(logits, -1)
+    tgt = tokens[:, 1:]
+    tl = jnp.take_along_axis(logp, tgt[..., None], -1)[..., 0]
+    expected = (tl * cont_mask[:, 1:]).sum(-1)
+    np.testing.assert_allclose(sum_logp, expected, atol=1e-5)
+    np.testing.assert_allclose(n, cont_mask[:, 1:].sum(-1))
+
+
+def test_embed_step_ignores_padding():
+    cfg = ESM_FAST
+    params = _params(cfg)
+    tokens = _tokens(cfg, 4).at[:, 10:].set(M.PAD)
+    emb = M.embed_step(cfg)(params, tokens)
+    assert emb.shape == (4, cfg.d_model)
+    # changing a padded position's id must not change the embedding
+    tokens2 = tokens.at[:, 12].set(5).at[:, 12].set(M.PAD)
+    emb2 = M.embed_step(cfg)(params, tokens2)
+    np.testing.assert_allclose(emb, emb2, atol=0)
+
+
+def test_embed_bidirectional_sees_future():
+    """Non-causal encoder: early positions' contribution changes when a
+    late token changes (unlike a causal model's early logits)."""
+    cfg = ESM_FAST
+    params = _params(cfg)
+    tokens = _tokens(cfg, 1)
+    h1 = M.forward_hidden(cfg, params, tokens)
+    h2 = M.forward_hidden(cfg, params, tokens.at[0, -1].set(7))
+    assert float(jnp.abs(h1[0, 0] - h2[0, 0]).max()) > 1e-6
+
+
+def test_mlp_train_learns_separable_data():
+    sizes = (32,)
+    specs = M.mlp_param_specs(sizes, in_dim=8)
+    params = M.init_params(specs, jax.random.PRNGKey(0))
+    m = {k: jnp.zeros_like(v) for k, v in params.items()}
+    v_ = {k: jnp.zeros_like(v) for k, v in params.items()}
+    key = jax.random.PRNGKey(1)
+    x = jax.random.normal(key, (64, 8))
+    y = (x[:, 0] > 0).astype(jnp.int32)  # linearly separable
+    step = jax.jit(M.mlp_train_step(lr=1e-2))
+    for t in range(1, 60):
+        bc = jnp.array([[1 - 0.9**t, 1 - 0.999**t]], jnp.float32)
+        params, m, v_, loss, acc = step(params, m, v_, bc, x, y)
+    assert float(acc) > 0.9, float(acc)
+    _, eval_acc = M.mlp_eval_step()(params, x, y)
+    assert float(eval_acc) > 0.9
+
+
+def test_add_delta_step_pallas_matches_plain():
+    n = 256
+    x = jnp.arange(n, dtype=jnp.float32)
+    d = jnp.array([[0.25]], jnp.float32)
+    (y,) = M.add_delta_step(n, use_pallas=True)(x, d)
+    np.testing.assert_allclose(y, x + 0.25, atol=0)
+
+
+def test_nano_pallas_forward_matches_ref_path():
+    """The pallas-lowered nano model must agree with a ref-path twin."""
+    cfg = NANO
+    ref_cfg = M.ModelConfig(
+        name="nano_ref", vocab=cfg.vocab, d_model=cfg.d_model,
+        n_layers=cfg.n_layers, n_heads=cfg.n_heads, seq=cfg.seq,
+        use_pallas=False, train_batch=4, eval_batch=8,
+    )
+    params = _params(cfg)
+    tokens = _tokens(cfg, 2)
+    lp = M.logits_fn(cfg, params, tokens)
+    lr = M.logits_fn(ref_cfg, params, tokens)
+    np.testing.assert_allclose(lp, lr, atol=2e-5, rtol=2e-5)

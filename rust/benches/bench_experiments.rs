@@ -1,0 +1,98 @@
+//! End-to-end experiment-shaped benchmarks: per-round latency of complete
+//! FL jobs, driver comparison (the paper's SFM pluggability claim in
+//! numbers), chunk-size sweep at Fig-5 scale, and filter-pipeline cost at
+//! round granularity.
+//!
+//! Run with `cargo bench --bench bench_experiments`.
+
+use fedflare::config::{FilterSpec, JobConfig};
+use fedflare::coordinator::FedAvg;
+use fedflare::executor::{Executor, StreamTestExecutor};
+use fedflare::sim::{self, DriverKind};
+use fedflare::util::bench::{bench, header, report};
+
+fn run_once(
+    kind: DriverKind,
+    chunk: usize,
+    keys: usize,
+    key_elems: usize,
+    rounds: usize,
+    filters: Vec<FilterSpec>,
+) {
+    let mut job = JobConfig::named("bench_job", "stream_test");
+    job.rounds = rounds;
+    job.min_clients = 2;
+    job.stream.chunk_bytes = chunk;
+    job.filters = filters;
+    let initial = StreamTestExecutor::build_model(keys, key_elems, 1.0);
+    let mut ctl = FedAvg::new(initial, rounds, 2);
+    ctl.task_name = "stream_test".into();
+    let mut factory: Box<sim::ExecutorFactory> =
+        Box::new(|_i, _s| Ok(Box::new(StreamTestExecutor::new(None, 0.01)) as Box<dyn Executor>));
+    let dir = std::env::temp_dir().join("fedflare_bench");
+    sim::run_job(&job, kind, &mut ctl, &mut factory, &dir.to_string_lossy()).unwrap();
+    std::hint::black_box(ctl.history.len());
+}
+
+fn main() {
+    // 16 MB model (8 keys x 2 MB), 2 clients, 1 round => 64 MB total moved
+    let keys = 8usize;
+    let key_elems = 524_288usize;
+    let model_mb = keys * key_elems * 4 / (1 << 20);
+    let moved_mb = (model_mb * 2 * 2) as f64; // 2 clients x both directions
+
+    header(&format!(
+        "one FedAvg round, {model_mb} MB model, 2 clients (driver comparison)"
+    ));
+    for (name, kind) in [("inproc", DriverKind::InProc), ("tcp", DriverKind::Tcp)] {
+        let s = bench(name, 1, 5, || {
+            run_once(kind, 1 << 20, keys, key_elems, 1, vec![]);
+        });
+        report(
+            &s,
+            Some(format!("{:.0} MB/s end-to-end", s.mb_per_sec(moved_mb * 1e6))),
+        );
+    }
+
+    header("chunk-size sweep (inproc, same job)");
+    for chunk in [64 << 10, 256 << 10, 1 << 20, 4 << 20] {
+        let s = bench(&format!("chunk={}K", chunk >> 10), 1, 5, || {
+            run_once(DriverKind::InProc, chunk, keys, key_elems, 1, vec![]);
+        });
+        report(
+            &s,
+            Some(format!("{:.0} MB/s end-to-end", s.mb_per_sec(moved_mb * 1e6))),
+        );
+    }
+
+    header("filter pipelines at round granularity (inproc)");
+    let cases: Vec<(&str, Vec<FilterSpec>)> = vec![
+        ("no filters", vec![]),
+        (
+            "gaussian_dp",
+            vec![FilterSpec::GaussianDp { clip: 10.0, sigma: 0.01 }],
+        ),
+        ("quantize_f16", vec![FilterSpec::QuantizeF16]),
+        ("secure_agg", vec![FilterSpec::SecureAgg { seed: 3 }]),
+    ];
+    for (name, filters) in cases {
+        let f = filters.clone();
+        let s = bench(name, 1, 4, || {
+            run_once(DriverKind::InProc, 1 << 20, keys, key_elems, 1, f.clone());
+        });
+        report(&s, None);
+    }
+
+    header("round scaling (model size sweep, inproc, 1 round)");
+    for mb in [4usize, 16, 64] {
+        let k = mb / 2;
+        let s = bench(&format!("{mb} MB model"), 1, 4, || {
+            run_once(DriverKind::InProc, 1 << 20, k, key_elems, 1, vec![]);
+        });
+        let moved = (mb * 4) as f64;
+        report(&s, Some(format!("{:.0} MB/s end-to-end", s.mb_per_sec(moved * 1e6))));
+    }
+
+    let _ = std::fs::remove_dir_all(std::env::temp_dir().join("fedflare_bench"));
+    println!("\nbench_experiments done");
+}

@@ -1,0 +1,126 @@
+//! PJRT runtime benchmarks: per-step latency of the AOT-compiled
+//! artifacts and the marshaling overhead around them (the L3<->PJRT
+//! boundary the perf pass optimizes).
+//!
+//! Requires `make artifacts`. Run with `cargo bench --bench bench_runtime`.
+
+use fedflare::runtime::{RuntimeClient, Trainer};
+use fedflare::tensor::{Tensor, TensorDict};
+use fedflare::util::bench::{bench, header, report};
+use fedflare::util::rng::Rng;
+
+fn random_tokens(rng: &mut Rng, batch: usize, seq: usize, vocab: usize) -> Tensor {
+    let data: Vec<i32> = (0..batch * seq)
+        .map(|_| rng.range(4, vocab as u64) as i32)
+        .collect();
+    Tensor::i32(vec![batch, seq], data)
+}
+
+fn main() {
+    if !std::path::Path::new("artifacts/manifest.json").exists() {
+        eprintln!("bench_runtime: run `make artifacts` first — skipping");
+        return;
+    }
+    let rc = RuntimeClient::start("artifacts").unwrap();
+    let mut rng = Rng::new(11);
+
+    header("addnum (Fig-5 workload, 2 MB key, Pallas-lowered)");
+    {
+        let m = rc.manifest("addnum").unwrap();
+        let n = m.meta.get("n").as_usize().unwrap();
+        let mut inputs = TensorDict::new();
+        inputs.insert("x", Tensor::f32(vec![n], vec![1.0; n]));
+        inputs.insert("delta", Tensor::f32(vec![1, 1], vec![0.5]));
+        let s = bench("execute", 2, 16, || {
+            std::hint::black_box(rc.execute("addnum", inputs.clone()).unwrap().len());
+        });
+        report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((n * 4) as f64))));
+    }
+
+    for family in ["gpt_nano", "gpt_small"] {
+        header(&format!("{family} train/eval step (single CPU core)"));
+        let mut tr = Trainer::new(rc.clone(), family, 3).unwrap();
+        let (b, s_, vocab, params_mb) = {
+            let m = tr.train_manifest().unwrap();
+            (
+                m.batch(),
+                m.seq(),
+                m.meta.get("vocab").as_usize().unwrap(),
+                m.param_bytes() as f64 / (1 << 20) as f64,
+            )
+        };
+        let mut batch = TensorDict::new();
+        batch.insert("tokens", random_tokens(&mut rng, b, s_, vocab));
+        let st = bench("train_step (fwd+bwd+adamw)", 1, 8, || {
+            std::hint::black_box(tr.train_step(&batch).unwrap().loss);
+        });
+        let tokens_per = (b * s_) as f64;
+        report(&st, Some(format!("{:.0} tok/s", st.per_sec(tokens_per))));
+
+        let eb = tr.manifest(&format!("{family}_eval")).unwrap().batch();
+        let mut ebatch = TensorDict::new();
+        ebatch.insert("tokens", random_tokens(&mut rng, eb, s_, vocab));
+        let se = bench("eval_step (fwd only)", 1, 8, || {
+            std::hint::black_box(tr.eval_batch(&ebatch).unwrap().loss);
+        });
+        report(&se, Some(format!("{:.0} tok/s", se.per_sec((eb * s_) as f64))));
+
+        // marshal overhead estimate: state I/O = 3x params (p, m, v) both
+        // directions per train step
+        println!(
+            "  (state payload {params_mb:.2} MB x3 opt, marshaled per step through the literal path)"
+        );
+    }
+
+    header("perf: K-fused train vs per-step marshaling (gpt_small, 8 steps)");
+    {
+        let mut tr = Trainer::new(rc.clone(), "gpt_small", 3).unwrap();
+        let (b, s_, vocab) = {
+            let m = tr.train_manifest().unwrap();
+            (m.batch(), m.seq(), m.meta.get("vocab").as_usize().unwrap())
+        };
+        let mut batch = TensorDict::new();
+        batch.insert("tokens", random_tokens(&mut rng, b, s_, vocab));
+        let before = bench("8x train_step (marshal per step)", 1, 4, || {
+            for _ in 0..8 {
+                std::hint::black_box(tr.train_step(&batch).unwrap().loss);
+            }
+        });
+        report(&before, Some(format!("{:.1} steps/s", before.per_sec(8.0))));
+
+        if tr.manifest("gpt_small_train_k8").is_ok() {
+            let toks: Vec<i32> = (0..8 * b * s_)
+                .map(|_| rng.range(4, vocab as u64) as i32)
+                .collect();
+            let tk = Tensor::i32(vec![8, b, s_], toks);
+            let after = bench("train_k8 (marshal once per 8 steps)", 1, 4, || {
+                std::hint::black_box(
+                    tr.train_chunk("gpt_small_train_k8", tk.clone()).unwrap().loss,
+                );
+            });
+            report(&after, Some(format!("{:.1} steps/s", after.per_sec(8.0))));
+            println!(
+                "  => speedup: {:.2}x (before/after mean)",
+                before.mean_ns / after.mean_ns
+            );
+        }
+    }
+
+    header("state marshaling (TensorDict clone + literal conversion proxy)");
+    {
+        let mut tr = Trainer::new(rc.clone(), "gpt_small", 3).unwrap();
+        let _ = tr.train_manifest().unwrap();
+        let params = tr.state.params.clone();
+        let s = bench("params clone (3.3 MB)", 2, 32, || {
+            std::hint::black_box(params.clone().len());
+        });
+        report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec(params.byte_size() as f64))));
+        let s = bench("params to_bytes+from_bytes", 2, 16, || {
+            let b = params.to_bytes();
+            std::hint::black_box(TensorDict::from_bytes(&b).unwrap().len());
+        });
+        report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec(params.byte_size() as f64))));
+    }
+
+    println!("\nbench_runtime done");
+}

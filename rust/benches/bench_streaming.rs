@@ -1,0 +1,123 @@
+//! Streaming-layer benchmarks (paper §2.4 / Fig 5 microscale):
+//! chunk/reassemble throughput vs chunk size, frame encode/decode, CRC,
+//! and full object round-trips over both drivers.
+//!
+//! Run with `cargo bench --bench bench_streaming`.
+
+use fedflare::message::FlMessage;
+use fedflare::sfm::{chunk_frames, inproc, tcp, Frame, Reassembler};
+use fedflare::streaming::Messenger;
+use fedflare::tensor::{Tensor, TensorDict};
+use fedflare::util::bench::{bench, header, report};
+
+fn model_of(mb: usize) -> TensorDict {
+    let mut d = TensorDict::new();
+    let elems = mb * (1 << 20) / 4;
+    d.insert("weights", Tensor::f32(vec![elems], vec![0.5; elems]));
+    d
+}
+
+fn main() {
+    let payload_mb = 16usize;
+    let payload = vec![0xA5u8; payload_mb << 20];
+
+    header("chunk + reassemble (16 MB payload)");
+    for chunk in [64 << 10, 256 << 10, 1 << 20, 4 << 20] {
+        let s = bench(&format!("chunk_bytes={}K", chunk >> 10), 1, 8, || {
+            let mut re = Reassembler::new();
+            let mut out = None;
+            for f in chunk_frames(0, 1, &payload, chunk) {
+                if let Some(d) = re.push(f).unwrap() {
+                    out = Some(d);
+                }
+            }
+            let (_, _, p) = out.unwrap();
+            fedflare::util::mem::track_free(p.len());
+            std::hint::black_box(p.len());
+        });
+        let tp = s.mb_per_sec((payload_mb << 20) as f64);
+        report(&s, Some(format!("{tp:.0} MB/s")));
+    }
+
+    header("frame encode/decode + CRC (1 MB frame)");
+    let frame = Frame {
+        flags: 3,
+        kind: 2,
+        stream: 9,
+        seq: 0,
+        total: 1,
+        payload: vec![7u8; 1 << 20],
+    };
+    let s = bench("encode", 2, 32, || {
+        std::hint::black_box(frame.encode().len());
+    });
+    report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((1 << 20) as f64))));
+    let encoded = frame.encode();
+    let s = bench("decode+crc", 2, 32, || {
+        std::hint::black_box(Frame::decode(&encoded, true).unwrap().payload.len());
+    });
+    report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((1 << 20) as f64))));
+    let s = bench("decode no-crc", 2, 32, || {
+        std::hint::black_box(Frame::decode(&encoded, false).unwrap().payload.len());
+    });
+    report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((1 << 20) as f64))));
+    let s = bench("crc32 only", 2, 32, || {
+        std::hint::black_box(fedflare::util::bytes::crc32(&encoded));
+    });
+    report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec(encoded.len() as f64))));
+
+    header("object round-trip: serialize + stream + reassemble + parse");
+    for mb in [1usize, 8, 32] {
+        let model = model_of(mb);
+        let msg = FlMessage::task("train", 0, model);
+        let s = bench(&format!("{mb} MB model, inproc driver"), 1, 6, || {
+            let (a, b) = inproc::pair(64, "bench");
+            let mut tx = Messenger::new(Box::new(a), 1 << 20, 1);
+            let mut rx = Messenger::new(Box::new(b), 1 << 20, 2);
+            let m = msg.clone();
+            let h = std::thread::spawn(move || {
+                tx.send_msg(&m).unwrap();
+            });
+            let got = rx.recv_msg().unwrap();
+            h.join().unwrap();
+            std::hint::black_box(got.body.len());
+        });
+        report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((mb << 20) as f64))));
+    }
+
+    {
+        let mb = 8usize;
+        let msg = FlMessage::task("train", 0, model_of(mb));
+        let s = bench(&format!("{mb} MB model, tcp loopback"), 1, 6, || {
+            let listener = tcp::bind("127.0.0.1:0").unwrap();
+            let addr = listener.local_addr().unwrap();
+            let m = msg.clone();
+            let h = std::thread::spawn(move || {
+                let drv = tcp::TcpDriver::connect(addr, true).unwrap();
+                let mut tx = Messenger::new(Box::new(drv), 1 << 20, 1);
+                tx.send_msg(&m).unwrap();
+            });
+            let (conn, _) = listener.accept().unwrap();
+            let drv = tcp::TcpDriver::from_stream(conn, true).unwrap();
+            let mut rx = Messenger::new(Box::new(drv), 1 << 20, 2);
+            let got = rx.recv_msg().unwrap();
+            h.join().unwrap();
+            std::hint::black_box(got.body.len());
+        });
+        report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((mb << 20) as f64))));
+    }
+
+    header("tensor wire format (8 MB dict)");
+    let model = model_of(8);
+    let s = bench("to_bytes", 1, 16, || {
+        std::hint::black_box(model.to_bytes().len());
+    });
+    report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((8 << 20) as f64))));
+    let bytes = model.to_bytes();
+    let s = bench("from_bytes", 1, 16, || {
+        std::hint::black_box(TensorDict::from_bytes(&bytes).unwrap().len());
+    });
+    report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((8 << 20) as f64))));
+
+    println!("\nbench_streaming done");
+}

@@ -1,0 +1,350 @@
+//! Typed configuration system (JSON-backed).
+//!
+//! A job file fully describes an FL run — workflow, rounds, clients, model
+//! artifacts, streaming parameters, filters — so every experiment in
+//! EXPERIMENTS.md is `fedflare run --job <file>` (or a `repro` preset that
+//! builds the same struct in code).
+
+use std::path::Path;
+
+use crate::util::json::Json;
+
+/// Which server workflow drives the job (paper §2.1/§2.3).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Workflow {
+    /// FedAvg: broadcast global model, aggregate weighted updates.
+    FedAvg,
+    /// Cyclic weight transfer: pass the model client-to-client.
+    Cyclic,
+    /// Federated evaluation only (no training).
+    FedEval,
+    /// Federated inference: clients compute embeddings/outputs locally.
+    FedInference,
+}
+
+impl Workflow {
+    pub fn from_str(s: &str) -> Result<Workflow, ConfigError> {
+        match s {
+            "fedavg" => Ok(Workflow::FedAvg),
+            "cyclic" => Ok(Workflow::Cyclic),
+            "fedeval" => Ok(Workflow::FedEval),
+            "fedinference" => Ok(Workflow::FedInference),
+            other => Err(ConfigError(format!("unknown workflow '{other}'"))),
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Workflow::FedAvg => "fedavg",
+            Workflow::Cyclic => "cyclic",
+            Workflow::FedEval => "fedeval",
+            Workflow::FedInference => "fedinference",
+        }
+    }
+}
+
+/// Streaming-layer parameters (paper §2.4).
+#[derive(Debug, Clone)]
+pub struct StreamConfig {
+    /// Chunk size; the paper streams in 1 MB chunks.
+    pub chunk_bytes: usize,
+    /// Max in-flight chunks per stream before the sender blocks
+    /// (backpressure window).
+    pub window: usize,
+    /// Verify per-frame CRC32 on receive.
+    pub verify_crc: bool,
+}
+
+impl Default for StreamConfig {
+    fn default() -> StreamConfig {
+        StreamConfig {
+            chunk_bytes: crate::DEFAULT_CHUNK_BYTES,
+            window: 16,
+            verify_crc: true,
+        }
+    }
+}
+
+impl StreamConfig {
+    pub fn from_json(j: &Json) -> Result<StreamConfig, ConfigError> {
+        let mut c = StreamConfig::default();
+        if let Some(n) = j.get("chunk_bytes").as_usize() {
+            if n == 0 {
+                return Err(ConfigError("chunk_bytes must be > 0".into()));
+            }
+            c.chunk_bytes = n;
+        }
+        if let Some(n) = j.get("window").as_usize() {
+            if n == 0 {
+                return Err(ConfigError("window must be > 0".into()));
+            }
+            c.window = n;
+        }
+        if let Some(b) = j.get("verify_crc").as_bool() {
+            c.verify_crc = b;
+        }
+        Ok(c)
+    }
+}
+
+/// A data/result filter spec (paper §2.3: DP, HE; plus transport
+/// quantization). Applied in order on the client's outgoing result.
+#[derive(Debug, Clone, PartialEq)]
+pub enum FilterSpec {
+    /// Gaussian DP: clip update to `clip` L2 norm, add N(0, sigma^2).
+    GaussianDp { clip: f64, sigma: f64 },
+    /// f16 transport quantization.
+    QuantizeF16,
+    /// Pairwise-mask secure aggregation (stands in for the paper's HE).
+    SecureAgg { seed: u64 },
+}
+
+impl FilterSpec {
+    pub fn from_json(j: &Json) -> Result<FilterSpec, ConfigError> {
+        match j.get("type").as_str() {
+            Some("gaussian_dp") => Ok(FilterSpec::GaussianDp {
+                clip: j.get("clip").as_f64().unwrap_or(1.0),
+                sigma: j.get("sigma").as_f64().unwrap_or(0.01),
+            }),
+            Some("quantize_f16") => Ok(FilterSpec::QuantizeF16),
+            Some("secure_agg") => Ok(FilterSpec::SecureAgg {
+                seed: j.get("seed").as_f64().unwrap_or(0.0) as u64,
+            }),
+            other => Err(ConfigError(format!("unknown filter type {other:?}"))),
+        }
+    }
+}
+
+/// Per-client launch spec.
+#[derive(Debug, Clone)]
+pub struct ClientSpec {
+    pub name: String,
+    /// Simulated link bandwidth in bytes/sec (0 = unthrottled). Models the
+    /// paper's fast Site-1 / slow Site-2 asymmetry.
+    pub bandwidth_bps: u64,
+    /// Index into the data partition (defaults to position in list).
+    pub partition: usize,
+}
+
+/// Local-training parameters given to each client per task.
+#[derive(Debug, Clone)]
+pub struct TrainConfig {
+    /// Local steps per FL round.
+    pub local_steps: usize,
+    /// Batches evaluated for validation metrics.
+    pub eval_batches: usize,
+    pub seed: u64,
+}
+
+impl Default for TrainConfig {
+    fn default() -> TrainConfig {
+        TrainConfig {
+            local_steps: 20,
+            eval_batches: 4,
+            seed: 17,
+        }
+    }
+}
+
+/// Everything needed to run one FL job.
+#[derive(Debug, Clone)]
+pub struct JobConfig {
+    pub name: String,
+    pub workflow: Workflow,
+    pub rounds: usize,
+    pub min_clients: usize,
+    pub clients: Vec<ClientSpec>,
+    /// Artifact family, e.g. "gpt_small" — the runtime loads
+    /// `<artifact>_train` / `<artifact>_eval` / ... from `artifacts_dir`.
+    pub artifact: String,
+    pub artifacts_dir: String,
+    pub stream: StreamConfig,
+    pub train: TrainConfig,
+    pub filters: Vec<FilterSpec>,
+    /// Communicate only these parameter names (PEFT); empty = all.
+    pub trainable_only: bool,
+    pub seed: u64,
+}
+
+impl JobConfig {
+    /// A reasonable default job for programmatic construction.
+    pub fn named(name: &str, artifact: &str) -> JobConfig {
+        JobConfig {
+            name: name.to_string(),
+            workflow: Workflow::FedAvg,
+            rounds: 3,
+            min_clients: 2,
+            clients: vec![
+                ClientSpec {
+                    name: "site-1".into(),
+                    bandwidth_bps: 0,
+                    partition: 0,
+                },
+                ClientSpec {
+                    name: "site-2".into(),
+                    bandwidth_bps: 0,
+                    partition: 1,
+                },
+            ],
+            artifact: artifact.to_string(),
+            artifacts_dir: "artifacts".to_string(),
+            stream: StreamConfig::default(),
+            train: TrainConfig::default(),
+            filters: Vec::new(),
+            trainable_only: false,
+            seed: 17,
+        }
+    }
+
+    pub fn from_json(j: &Json) -> Result<JobConfig, ConfigError> {
+        let name = j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| ConfigError("job needs a 'name'".into()))?
+            .to_string();
+        let artifact = j
+            .get("artifact")
+            .as_str()
+            .ok_or_else(|| ConfigError("job needs an 'artifact'".into()))?
+            .to_string();
+        let mut job = JobConfig::named(&name, &artifact);
+        if let Some(s) = j.get("workflow").as_str() {
+            job.workflow = Workflow::from_str(s)?;
+        }
+        if let Some(n) = j.get("rounds").as_usize() {
+            job.rounds = n;
+        }
+        if let Some(n) = j.get("min_clients").as_usize() {
+            job.min_clients = n;
+        }
+        if let Some(s) = j.get("artifacts_dir").as_str() {
+            job.artifacts_dir = s.to_string();
+        }
+        if let Some(arr) = j.get("clients").as_arr() {
+            job.clients = arr
+                .iter()
+                .enumerate()
+                .map(|(i, c)| {
+                    Ok(ClientSpec {
+                        name: c
+                            .get("name")
+                            .as_str()
+                            .map(|s| s.to_string())
+                            .unwrap_or_else(|| format!("site-{}", i + 1)),
+                        bandwidth_bps: c.get("bandwidth_bps").as_f64().unwrap_or(0.0) as u64,
+                        partition: c.get("partition").as_usize().unwrap_or(i),
+                    })
+                })
+                .collect::<Result<_, ConfigError>>()?;
+        }
+        if !j.get("stream").is_null() {
+            job.stream = StreamConfig::from_json(j.get("stream"))?;
+        }
+        if let Some(n) = j.get("local_steps").as_usize() {
+            job.train.local_steps = n;
+        }
+        if let Some(n) = j.get("eval_batches").as_usize() {
+            job.train.eval_batches = n;
+        }
+        if let Some(n) = j.get("seed").as_f64() {
+            job.seed = n as u64;
+            job.train.seed = n as u64;
+        }
+        if let Some(arr) = j.get("filters").as_arr() {
+            job.filters = arr
+                .iter()
+                .map(FilterSpec::from_json)
+                .collect::<Result<_, ConfigError>>()?;
+        }
+        if let Some(b) = j.get("trainable_only").as_bool() {
+            job.trainable_only = b;
+        }
+        if job.min_clients > job.clients.len() {
+            return Err(ConfigError(format!(
+                "min_clients {} > clients {}",
+                job.min_clients,
+                job.clients.len()
+            )));
+        }
+        Ok(job)
+    }
+
+    pub fn from_file(path: &Path) -> Result<JobConfig, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("read {}: {e}", path.display())))?;
+        let j = Json::parse(&text).map_err(|e| ConfigError(e.to_string()))?;
+        JobConfig::from_json(&j)
+    }
+}
+
+/// Config validation/parsing error.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("config error: {0}")]
+pub struct ConfigError(pub String);
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_are_sane() {
+        let j = JobConfig::named("t", "gpt_small");
+        assert_eq!(j.workflow, Workflow::FedAvg);
+        assert_eq!(j.stream.chunk_bytes, 1 << 20);
+        assert!(j.min_clients <= j.clients.len());
+    }
+
+    #[test]
+    fn parse_full_job() {
+        let src = r#"{
+            "name": "peft",
+            "artifact": "gpt_small_lora",
+            "workflow": "fedavg",
+            "rounds": 5,
+            "min_clients": 3,
+            "local_steps": 10,
+            "seed": 42,
+            "trainable_only": true,
+            "clients": [
+                {"name": "a"},
+                {"name": "b", "bandwidth_bps": 1000000},
+                {"name": "c", "partition": 7}
+            ],
+            "stream": {"chunk_bytes": 65536, "window": 4},
+            "filters": [
+                {"type": "gaussian_dp", "clip": 2.0, "sigma": 0.5},
+                {"type": "quantize_f16"}
+            ]
+        }"#;
+        let job = JobConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(job.rounds, 5);
+        assert_eq!(job.clients.len(), 3);
+        assert_eq!(job.clients[1].bandwidth_bps, 1_000_000);
+        assert_eq!(job.clients[2].partition, 7);
+        assert_eq!(job.stream.chunk_bytes, 65536);
+        assert_eq!(job.filters.len(), 2);
+        assert!(job.trainable_only);
+        assert_eq!(job.train.local_steps, 10);
+        assert_eq!(
+            job.filters[0],
+            FilterSpec::GaussianDp { clip: 2.0, sigma: 0.5 }
+        );
+    }
+
+    #[test]
+    fn rejects_bad_configs() {
+        let missing_name = Json::parse(r#"{"artifact": "x"}"#).unwrap();
+        assert!(JobConfig::from_json(&missing_name).is_err());
+        let bad_workflow =
+            Json::parse(r#"{"name":"a","artifact":"x","workflow":"nope"}"#).unwrap();
+        assert!(JobConfig::from_json(&bad_workflow).is_err());
+        let too_few = Json::parse(
+            r#"{"name":"a","artifact":"x","min_clients":5,
+                "clients":[{"name":"one"}]}"#,
+        )
+        .unwrap();
+        assert!(JobConfig::from_json(&too_few).is_err());
+        let zero_chunk =
+            Json::parse(r#"{"name":"a","artifact":"x","stream":{"chunk_bytes":0}}"#).unwrap();
+        assert!(JobConfig::from_json(&zero_chunk).is_err());
+    }
+}

@@ -1,0 +1,242 @@
+//! FedAvg [McMahan et al. 2017] — the paper's reference workflow
+//! (Listing 3), with sample-count-weighted aggregation, per-round global
+//! validation (clients evaluate the incoming global model, enabling
+//! server-side model selection — paper Listing 2 step 3), and streaming
+//! in-place aggregation so server memory stays at one accumulator
+//! regardless of client count.
+
+use anyhow::{bail, Result};
+
+use super::{Communicator, Controller, ServerCtx};
+use crate::message::FlMessage;
+use crate::tensor::TensorDict;
+use crate::util::json::Json;
+
+/// Per-round aggregate metrics (one entry per completed round).
+#[derive(Debug, Clone)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// Mean of clients' validation of the *incoming global* model.
+    pub val_loss: f64,
+    pub val_acc: f64,
+    /// Mean of clients' local training loss (last step).
+    pub train_loss: f64,
+    /// Per-client (name, val_loss, val_acc, n_samples).
+    pub per_client: Vec<(String, f64, f64, f64)>,
+}
+
+/// FedAvg controller.
+pub struct FedAvg {
+    pub rounds: usize,
+    pub min_clients: usize,
+    /// Task name sent to executors ("train" by default).
+    pub task_name: String,
+    /// The global model (communicated subset).
+    pub model: TensorDict,
+    /// Completed-round metrics.
+    pub history: Vec<RoundMetrics>,
+    /// Best (lowest) mean val loss and its round.
+    pub best: Option<(usize, f64)>,
+    /// Snapshot of the best global model (by val loss).
+    pub best_model: Option<TensorDict>,
+}
+
+impl FedAvg {
+    pub fn new(model: TensorDict, rounds: usize, min_clients: usize) -> FedAvg {
+        FedAvg {
+            rounds,
+            min_clients,
+            task_name: "train".to_string(),
+            model,
+            history: Vec::new(),
+            best: None,
+            best_model: None,
+        }
+    }
+
+    /// Weighted in-place aggregation: `sum_i w_i * params_i` with
+    /// `w_i = n_i / sum n`. Runs one accumulator (the new global model),
+    /// streaming each result through `axpy`.
+    fn aggregate(&self, results: &[FlMessage]) -> Result<TensorDict> {
+        let total: f64 = results
+            .iter()
+            .map(|r| r.metric("n_samples").unwrap_or(1.0).max(0.0))
+            .sum();
+        if total <= 0.0 {
+            bail!("aggregate: no samples reported");
+        }
+        let mut agg = self.model.zeros_like();
+        for r in results {
+            if !agg.same_schema(&r.body) {
+                bail!(
+                    "aggregate: client {} returned mismatched schema ({} tensors vs {})",
+                    r.client,
+                    r.body.len(),
+                    agg.len()
+                );
+            }
+            let w = (r.metric("n_samples").unwrap_or(1.0).max(0.0) / total) as f32;
+            agg.axpy(w, &r.body);
+        }
+        Ok(agg)
+    }
+}
+
+impl Controller for FedAvg {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+
+    fn run(&mut self, comm: &mut Communicator, ctx: &mut ServerCtx) -> Result<()> {
+        log::info!("Start FedAvg: {} rounds", self.rounds);
+        for round in 0..self.rounds {
+            // 1. sample the available clients
+            let clients = comm.sample_clients(self.min_clients)?;
+            // 2. send the current global model and receive updates
+            let task = FlMessage::task(&self.task_name, round, self.model.clone())
+                .with_meta("rounds_total", Json::num(self.rounds as f64));
+            let results = comm.broadcast_and_wait(&task, &clients)?;
+            // 3. aggregate
+            let agg = self.aggregate(&results)?;
+            // 4. update the global model
+            self.model = agg;
+            // bookkeeping: global-model validation scores from clients
+            let mean = |key: &str| -> f64 {
+                let vals: Vec<f64> = results.iter().filter_map(|r| r.metric(key)).collect();
+                if vals.is_empty() {
+                    f64::NAN
+                } else {
+                    vals.iter().sum::<f64>() / vals.len() as f64
+                }
+            };
+            let rm = RoundMetrics {
+                round,
+                val_loss: mean("val_loss"),
+                val_acc: mean("val_acc"),
+                train_loss: mean("train_loss"),
+                per_client: results
+                    .iter()
+                    .map(|r| {
+                        (
+                            r.client.clone(),
+                            r.metric("val_loss").unwrap_or(f64::NAN),
+                            r.metric("val_acc").unwrap_or(f64::NAN),
+                            r.metric("n_samples").unwrap_or(0.0),
+                        )
+                    })
+                    .collect(),
+            };
+            ctx.sink.event(
+                "fedavg_round",
+                &[
+                    ("round", Json::num(round as f64)),
+                    ("val_loss", Json::num(rm.val_loss)),
+                    ("val_acc", Json::num(rm.val_acc)),
+                    ("train_loss", Json::num(rm.train_loss)),
+                ],
+            );
+            // 5. model selection + save
+            if rm.val_loss.is_finite()
+                && self.best.map(|(_, b)| rm.val_loss < b).unwrap_or(true)
+            {
+                self.best = Some((round, rm.val_loss));
+                self.best_model = Some(self.model.clone());
+            }
+            if let Some(dir) = &ctx.ckpt_dir {
+                std::fs::create_dir_all(dir)?;
+                let path = dir.join(format!("{}_global.bin", ctx.job_name));
+                std::fs::write(path, self.model.to_bytes())?;
+            }
+            log::info!(
+                "round {round}: val_loss={:.4} val_acc={:.4} train_loss={:.4}",
+                rm.val_loss,
+                rm.val_acc,
+                rm.train_loss
+            );
+            self.history.push(rm);
+        }
+        comm.shutdown();
+        log::info!("Finished FedAvg.");
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn model(vals: &[f32]) -> TensorDict {
+        let mut d = TensorDict::new();
+        d.insert("w", Tensor::f32(vec![vals.len()], vals.to_vec()));
+        d
+    }
+
+    fn result(client: &str, vals: &[f32], n: f64) -> FlMessage {
+        FlMessage::result("train", 0, client, model(vals))
+            .with_meta("n_samples", Json::num(n))
+    }
+
+    #[test]
+    fn aggregate_is_weighted_mean() {
+        let f = FedAvg::new(model(&[0.0, 0.0]), 1, 2);
+        let results = vec![
+            result("a", &[1.0, 2.0], 100.0),
+            result("b", &[3.0, 6.0], 300.0),
+        ];
+        let agg = f.aggregate(&results).unwrap();
+        let v = agg.get("w").unwrap().as_f32().unwrap();
+        // weights 0.25 / 0.75
+        assert!((v[0] - 2.5).abs() < 1e-6);
+        assert!((v[1] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aggregate_defaults_to_uniform_weights() {
+        let f = FedAvg::new(model(&[0.0]), 1, 2);
+        let results = vec![
+            FlMessage::result("train", 0, "a", model(&[2.0])),
+            FlMessage::result("train", 0, "b", model(&[4.0])),
+        ];
+        let agg = f.aggregate(&results).unwrap();
+        assert!((agg.get("w").unwrap().as_f32().unwrap()[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aggregate_rejects_schema_mismatch() {
+        let f = FedAvg::new(model(&[0.0, 0.0]), 1, 1);
+        let bad = vec![result("a", &[1.0], 1.0)]; // wrong shape
+        assert!(f.aggregate(&bad).is_err());
+    }
+
+    #[test]
+    fn aggregate_matches_f64_oracle_property() {
+        crate::util::prop::check("fedavg weighted mean oracle", 40, |g| {
+            let len = g.usize_in(1, 50);
+            let k = g.usize_in(1, 5);
+            let mut results = Vec::new();
+            let mut weights = Vec::new();
+            for i in 0..k {
+                let vals: Vec<f32> = (0..len).map(|_| g.f32_in(-5.0, 5.0)).collect();
+                let n = g.usize_in(1, 1000) as f64;
+                results.push(result(&format!("c{i}"), &vals, n));
+                weights.push(n);
+            }
+            let f = FedAvg::new(model(&vec![0.0; len]), 1, k);
+            let agg = f.aggregate(&results).unwrap();
+            let got = agg.get("w").unwrap().as_f32().unwrap();
+            let total: f64 = weights.iter().sum();
+            for j in 0..len {
+                let oracle: f64 = results
+                    .iter()
+                    .zip(&weights)
+                    .map(|(r, w)| {
+                        r.body.get("w").unwrap().as_f32().unwrap()[j] as f64 * w / total
+                    })
+                    .sum();
+                crate::util::prop::assert_close(got[j] as f64, oracle, 1e-5, "agg elem")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,210 @@
+//! Server-side coordination (paper §2.1/§2.3): the Controller programming
+//! model, the Communicator, and the built-in workflows.
+//!
+//! A [`Controller`] runs on the FL server and drives [`Executor`]s on the
+//! clients through tasks — mirroring the paper's Listing 3:
+//!
+//! ```text
+//! for round in 0..num_rounds {
+//!     let clients = self.sample_clients(min_clients);
+//!     let results = self.scatter_and_gather_model(&clients);
+//!     let aggregate = self.aggregate(results);
+//!     self.update_model(aggregate);
+//!     self.save_model();
+//! }
+//! ```
+//!
+//! Each connected client is serviced by its own worker thread holding the
+//! client's [`Messenger`], so a broadcast to a fast and a slow client
+//! overlaps in time exactly like the paper's Fig-5 cross-region setup.
+
+mod fedavg;
+mod workflows;
+
+pub use fedavg::{FedAvg, RoundMetrics};
+pub use workflows::{CyclicWeightTransfer, FederatedEval, FederatedInference};
+
+use std::sync::mpsc::{Receiver, Sender};
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::message::{FlMessage, Kind};
+use crate::metrics::MetricsSink;
+use crate::streaming::{Messenger, StreamError};
+use crate::util::rng::Rng;
+
+/// Server-side handle to one connected client: a worker thread owns the
+/// messenger; tasks go down a channel, results come back up.
+pub struct ClientHandle {
+    pub name: String,
+    task_tx: Sender<FlMessage>,
+    result_rx: Receiver<Result<FlMessage, String>>,
+    worker: Option<std::thread::JoinHandle<()>>,
+}
+
+impl ClientHandle {
+    /// Spawn the worker for an already-registered client connection.
+    pub fn spawn(name: String, mut messenger: Messenger) -> ClientHandle {
+        let (task_tx, task_rx) = std::sync::mpsc::channel::<FlMessage>();
+        let (result_tx, result_rx) = std::sync::mpsc::channel();
+        let wname = name.clone();
+        let worker = std::thread::Builder::new()
+            .name(format!("client-io-{wname}"))
+            .spawn(move || {
+                while let Ok(task) = task_rx.recv() {
+                    let is_bye = task.kind == Kind::Bye;
+                    let outcome = (|| -> Result<FlMessage, StreamError> {
+                        messenger.send_msg(&task)?;
+                        if is_bye {
+                            return Ok(FlMessage::bye());
+                        }
+                        messenger.recv_msg()
+                    })();
+                    let send_failed = result_tx
+                        .send(outcome.map_err(|e| e.to_string()))
+                        .is_err();
+                    if is_bye || send_failed {
+                        break;
+                    }
+                }
+            })
+            .expect("spawn client worker");
+        ClientHandle {
+            name,
+            task_tx,
+            result_rx,
+            worker: Some(worker),
+        }
+    }
+
+    fn dispatch(&self, task: FlMessage) -> Result<()> {
+        self.task_tx
+            .send(task)
+            .map_err(|_| anyhow!("client {} worker gone", self.name))
+    }
+
+    fn collect(&self) -> Result<FlMessage> {
+        self.result_rx
+            .recv()
+            .map_err(|_| anyhow!("client {} worker gone", self.name))?
+            .map_err(|e| anyhow!("client {}: {e}", self.name))
+    }
+}
+
+impl Drop for ClientHandle {
+    fn drop(&mut self) {
+        // best-effort bye so the peer's loop can exit
+        let _ = self.task_tx.send(FlMessage::bye());
+        if let Some(w) = self.worker.take() {
+            let _ = w.join();
+        }
+    }
+}
+
+/// The communicator native to each Controller (paper Listing 3's
+/// `self.communicator`).
+pub struct Communicator {
+    clients: Vec<ClientHandle>,
+    rng: Rng,
+}
+
+impl Communicator {
+    pub fn new(clients: Vec<ClientHandle>, seed: u64) -> Communicator {
+        Communicator {
+            clients,
+            rng: Rng::new(seed ^ 0xC0_0515),
+        }
+    }
+
+    pub fn n_clients(&self) -> usize {
+        self.clients.len()
+    }
+
+    pub fn client_names(&self) -> Vec<String> {
+        self.clients.iter().map(|c| c.name.clone()).collect()
+    }
+
+    /// Random subset of `min_clients` distinct client indices (the paper's
+    /// `sample_clients`, with the "optional random sampling strategy").
+    pub fn sample_clients(&mut self, min_clients: usize) -> Result<Vec<usize>> {
+        if min_clients > self.clients.len() {
+            bail!(
+                "min_clients {} > connected clients {}",
+                min_clients,
+                self.clients.len()
+            );
+        }
+        Ok(self.rng.choose(self.clients.len(), min_clients))
+    }
+
+    /// `broadcast_and_wait`: send `task` to every target concurrently (each
+    /// worker thread streams independently) and gather all results.
+    pub fn broadcast_and_wait(
+        &mut self,
+        task: &FlMessage,
+        targets: &[usize],
+    ) -> Result<Vec<FlMessage>> {
+        for &t in targets {
+            let mut msg = task.clone();
+            msg.client = self.clients[t].name.clone();
+            self.clients[t].dispatch(msg)?;
+        }
+        let mut results = Vec::with_capacity(targets.len());
+        for &t in targets {
+            results.push(self.clients[t].collect()?);
+        }
+        Ok(results)
+    }
+
+    /// Send to one client and wait (cyclic weight transfer's primitive).
+    pub fn send_and_wait(&mut self, task: &FlMessage, target: usize) -> Result<FlMessage> {
+        self.broadcast_and_wait(task, &[target])
+            .map(|mut v| v.pop().unwrap())
+    }
+
+    /// End the job on all clients.
+    pub fn shutdown(&mut self) {
+        for c in &self.clients {
+            let _ = c.dispatch(FlMessage::bye());
+        }
+        for c in &self.clients {
+            let _ = c.collect();
+        }
+    }
+}
+
+/// Server context handed to controllers (metrics, checkpointing).
+pub struct ServerCtx {
+    pub sink: MetricsSink,
+    /// Where to save global-model checkpoints (None = don't).
+    pub ckpt_dir: Option<std::path::PathBuf>,
+    pub job_name: String,
+}
+
+impl ServerCtx {
+    pub fn new(sink: MetricsSink, job_name: &str) -> ServerCtx {
+        ServerCtx {
+            sink,
+            ckpt_dir: None,
+            job_name: job_name.to_string(),
+        }
+    }
+}
+
+/// A server workflow (paper's Controller base class).
+pub trait Controller {
+    fn run(&mut self, comm: &mut Communicator, ctx: &mut ServerCtx) -> Result<()>;
+    fn name(&self) -> &'static str;
+}
+
+/// Accept-side handshake: wait for a `register` message on a fresh
+/// connection and return the client's name.
+pub fn accept_registration(messenger: &mut Messenger) -> Result<String> {
+    let msg = messenger
+        .recv_msg()
+        .map_err(|e| anyhow!("registration: {e}"))?;
+    if msg.kind != Kind::Register {
+        bail!("expected register, got {:?}", msg.kind);
+    }
+    Ok(msg.client)
+}

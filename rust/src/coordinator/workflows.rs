@@ -1,0 +1,167 @@
+//! Additional server workflows beyond FedAvg (paper §2.1: "FedAvg and
+//! cyclic weight transfer are examples of such workflows"; §1: "FL
+//! infrastructure ... can also be utilized for tasks such as inference and
+//! federated evaluation").
+
+use anyhow::Result;
+
+use super::{Communicator, Controller, ServerCtx};
+use crate::message::FlMessage;
+use crate::tensor::TensorDict;
+use crate::util::json::Json;
+
+/// Cyclic weight transfer [Chang et al. 2018]: the model visits each
+/// client in turn; each client trains locally and passes the updated
+/// weights on. No aggregation — the model itself travels.
+pub struct CyclicWeightTransfer {
+    pub rounds: usize,
+    pub model: TensorDict,
+    /// (round, client, train_loss) trace.
+    pub trace: Vec<(usize, String, f64)>,
+}
+
+impl CyclicWeightTransfer {
+    pub fn new(model: TensorDict, rounds: usize) -> CyclicWeightTransfer {
+        CyclicWeightTransfer {
+            rounds,
+            model,
+            trace: Vec::new(),
+        }
+    }
+}
+
+impl Controller for CyclicWeightTransfer {
+    fn name(&self) -> &'static str {
+        "cyclic"
+    }
+
+    fn run(&mut self, comm: &mut Communicator, ctx: &mut ServerCtx) -> Result<()> {
+        let n = comm.n_clients();
+        for round in 0..self.rounds {
+            for target in 0..n {
+                let task = FlMessage::task("train", round, self.model.clone());
+                let result = comm.send_and_wait(&task, target)?;
+                self.model = result.body.clone();
+                let loss = result.metric("train_loss").unwrap_or(f64::NAN);
+                ctx.sink.event(
+                    "cyclic_step",
+                    &[
+                        ("round", Json::num(round as f64)),
+                        ("client", Json::str(result.client.clone())),
+                        ("train_loss", Json::num(loss)),
+                    ],
+                );
+                self.trace.push((round, result.client.clone(), loss));
+            }
+        }
+        comm.shutdown();
+        Ok(())
+    }
+}
+
+/// Federated evaluation: broadcast the (fixed) model with an "eval" task
+/// and average client metrics — no training, no model update.
+pub struct FederatedEval {
+    pub model: TensorDict,
+    /// (client, loss, acc, n_samples) after run.
+    pub results: Vec<(String, f64, f64, f64)>,
+    /// Sample-weighted means.
+    pub mean_loss: f64,
+    pub mean_acc: f64,
+}
+
+impl FederatedEval {
+    pub fn new(model: TensorDict) -> FederatedEval {
+        FederatedEval {
+            model,
+            results: Vec::new(),
+            mean_loss: f64::NAN,
+            mean_acc: f64::NAN,
+        }
+    }
+}
+
+impl Controller for FederatedEval {
+    fn name(&self) -> &'static str {
+        "fedeval"
+    }
+
+    fn run(&mut self, comm: &mut Communicator, ctx: &mut ServerCtx) -> Result<()> {
+        let n = comm.n_clients();
+        let targets: Vec<usize> = (0..n).collect();
+        let task = FlMessage::task("eval", 0, self.model.clone());
+        let results = comm.broadcast_and_wait(&task, &targets)?;
+        let mut wsum = 0.0;
+        let mut loss = 0.0;
+        let mut acc = 0.0;
+        for r in &results {
+            let w = r.metric("n_samples").unwrap_or(1.0).max(0.0);
+            let l = r.metric("val_loss").unwrap_or(f64::NAN);
+            let a = r.metric("val_acc").unwrap_or(f64::NAN);
+            self.results.push((r.client.clone(), l, a, w));
+            wsum += w;
+            loss += w * l;
+            acc += w * a;
+        }
+        if wsum > 0.0 {
+            self.mean_loss = loss / wsum;
+            self.mean_acc = acc / wsum;
+        }
+        ctx.sink.event(
+            "fedeval",
+            &[
+                ("mean_loss", Json::num(self.mean_loss)),
+                ("mean_acc", Json::num(self.mean_acc)),
+            ],
+        );
+        comm.shutdown();
+        Ok(())
+    }
+}
+
+/// Federated inference (paper §3.3/§4.4 stage 1): broadcast an "embed"
+/// task; each client runs the (frozen) model over its local data and
+/// keeps the outputs locally — only counts come back. This is the
+/// privacy-preserving pattern for the ESM-embedding extraction step.
+pub struct FederatedInference {
+    pub model: TensorDict,
+    pub task_name: String,
+    /// (client, n_embedded) after run.
+    pub counts: Vec<(String, usize)>,
+}
+
+impl FederatedInference {
+    pub fn new(model: TensorDict) -> FederatedInference {
+        FederatedInference {
+            model,
+            task_name: "embed".to_string(),
+            counts: Vec::new(),
+        }
+    }
+}
+
+impl Controller for FederatedInference {
+    fn name(&self) -> &'static str {
+        "fedinference"
+    }
+
+    fn run(&mut self, comm: &mut Communicator, ctx: &mut ServerCtx) -> Result<()> {
+        let n = comm.n_clients();
+        let targets: Vec<usize> = (0..n).collect();
+        let task = FlMessage::task(&self.task_name, 0, self.model.clone());
+        let results = comm.broadcast_and_wait(&task, &targets)?;
+        for r in &results {
+            let count = r.metric("n_embedded").unwrap_or(0.0) as usize;
+            self.counts.push((r.client.clone(), count));
+            ctx.sink.event(
+                "fedinference",
+                &[
+                    ("client", Json::str(r.client.clone())),
+                    ("n_embedded", Json::num(count as f64)),
+                ],
+            );
+        }
+        comm.shutdown();
+        Ok(())
+    }
+}

@@ -1,0 +1,217 @@
+//! Zero-shot multiple-choice eval suites — the Table-1 stand-ins for
+//! HellaSwag (H), PIQA (P), and WinoGrande (W).
+//!
+//! Each suite tests one [`Skill`](super::instruct::Skill): an item is a
+//! pattern-consistent context plus four candidate continuations — one
+//! correct (continues the pattern), three corrupted. Scoring follows the
+//! lm-eval harness the paper cites [9]: the model scores
+//! `sum log p(continuation | context)` per choice; `acc` picks the raw
+//! argmax, `acc_norm` the length-normalized argmax. Continuation lengths
+//! vary per choice so the two metrics genuinely differ.
+
+use super::instruct::{InstructGen, Skill};
+use crate::util::rng::Rng;
+
+/// One MC item: shared context, N choices (token suffixes), gold index.
+#[derive(Debug, Clone)]
+pub struct McItem {
+    pub context: Vec<i32>,
+    pub choices: Vec<Vec<i32>>,
+    pub gold: usize,
+}
+
+/// A named eval suite.
+#[derive(Debug, Clone)]
+pub struct Suite {
+    pub name: &'static str,
+    pub skill: Skill,
+    pub items: Vec<McItem>,
+}
+
+/// Build the three Table-1 suites over a model's vocab/seq.
+pub fn standard_suites(vocab: usize, seq: usize, n_items: usize, seed: u64) -> Vec<Suite> {
+    let names = ["hellaswag-like", "piqa-like", "winogrande-like"];
+    Skill::ALL
+        .iter()
+        .zip(names)
+        .map(|(&skill, name)| Suite {
+            name,
+            skill,
+            items: gen_items(vocab, seq, skill, n_items, seed ^ skill as u64),
+        })
+        .collect()
+}
+
+fn gen_items(vocab: usize, seq: usize, skill: Skill, n: usize, seed: u64) -> Vec<McItem> {
+    let gen = InstructGen::new(vocab, seq);
+    let mut rng = Rng::new(seed);
+    (0..n)
+        .map(|_| {
+            let full = gen.sample(skill, &mut rng).tokens;
+            // context = header + ~60% of the body; continuation lengths vary
+            let ctx_len = (seq * 3) / 5;
+            let context = full[..ctx_len].to_vec();
+            let gold_len = 4 + rng.usize_below(4); // 4..8 tokens
+            let correct = full[ctx_len..ctx_len + gold_len].to_vec();
+            let mut choices = Vec::with_capacity(4);
+            let gold = rng.usize_below(4);
+            for c in 0..4 {
+                if c == gold {
+                    choices.push(correct.clone());
+                } else {
+                    choices.push(corrupt(&full, ctx_len, &mut rng, vocab));
+                }
+            }
+            McItem {
+                context,
+                choices,
+                gold,
+            }
+        })
+        .collect()
+}
+
+/// A distractor: same region of the sequence but with the pattern broken
+/// (random tokens, shifted copy, or shuffled gold), with its own length.
+fn corrupt(full: &[i32], ctx_len: usize, rng: &mut Rng, vocab: usize) -> Vec<i32> {
+    let len = 4 + rng.usize_below(4);
+    match rng.usize_below(3) {
+        0 => (0..len)
+            .map(|_| rng.range(12, vocab as u64) as i32)
+            .collect(),
+        1 => {
+            // shifted continuation (breaks increment/mirror alignment)
+            let shift = 2 + rng.usize_below(4);
+            full[ctx_len + shift..ctx_len + shift + len].to_vec()
+        }
+        _ => {
+            let mut c = full[ctx_len..ctx_len + len].to_vec();
+            // perturb half the tokens
+            for i in 0..c.len() {
+                if i % 2 == 0 {
+                    c[i] = rng.range(12, vocab as u64) as i32;
+                }
+            }
+            c
+        }
+    }
+}
+
+/// Suite-level scoring bookkeeping: feed per-choice `sum_logp` and
+/// continuation length, read off acc / acc_norm.
+#[derive(Debug, Default, Clone)]
+pub struct McScorer {
+    pub n: usize,
+    pub correct_raw: usize,
+    pub correct_norm: usize,
+}
+
+impl McScorer {
+    /// `scores[i] = (sum_logp, cont_len)` for choice i.
+    pub fn add_item(&mut self, scores: &[(f64, f64)], gold: usize) {
+        let argmax = |vals: Vec<f64>| {
+            vals.iter()
+                .enumerate()
+                .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                .map(|(i, _)| i)
+                .unwrap()
+        };
+        let raw = argmax(scores.iter().map(|(s, _)| *s).collect());
+        let norm = argmax(scores.iter().map(|(s, l)| s / l.max(1.0)).collect());
+        self.n += 1;
+        if raw == gold {
+            self.correct_raw += 1;
+        }
+        if norm == gold {
+            self.correct_norm += 1;
+        }
+    }
+
+    pub fn acc(&self) -> f64 {
+        self.correct_raw as f64 / self.n.max(1) as f64
+    }
+
+    pub fn acc_norm(&self) -> f64 {
+        self.correct_norm as f64 / self.n.max(1) as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn suites_have_valid_items() {
+        let suites = standard_suites(512, 64, 20, 3);
+        assert_eq!(suites.len(), 3);
+        for suite in &suites {
+            assert_eq!(suite.items.len(), 20);
+            for item in &suite.items {
+                assert_eq!(item.choices.len(), 4);
+                assert!(item.gold < 4);
+                assert!(!item.context.is_empty());
+                for ch in &item.choices {
+                    assert!((4..=8).contains(&ch.len()));
+                    assert!(
+                        item.context.len() + ch.len() <= 64,
+                        "item longer than seq"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn gold_positions_are_uniformish() {
+        let suites = standard_suites(512, 64, 200, 5);
+        let mut counts = [0usize; 4];
+        for s in &suites {
+            for item in &s.items {
+                counts[item.gold] += 1;
+            }
+        }
+        for c in counts {
+            assert!(c > 80, "gold position skew: {counts:?}");
+        }
+    }
+
+    #[test]
+    fn scorer_separates_raw_and_norm() {
+        let mut sc = McScorer::default();
+        // gold=0: raw argmax -> choice 1 (-3 > -4), but per-token argmax ->
+        // choice 0 (-0.5 > -0.75)
+        sc.add_item(&[(-4.0, 8.0), (-3.0, 4.0)], 0);
+        assert_eq!(sc.correct_raw, 0);
+        assert_eq!(sc.correct_norm, 1);
+        assert_eq!(sc.acc(), 0.0);
+        assert_eq!(sc.acc_norm(), 1.0);
+    }
+
+    #[test]
+    fn an_oracle_model_scores_perfectly() {
+        // "oracle" scorer: log-prob = -hamming distance to the true
+        // continuation; must pick gold every time
+        let suites = standard_suites(512, 64, 30, 7);
+        let gen = InstructGen::new(512, 64);
+        let mut rng = Rng::new(7 ^ suites[0].skill as u64);
+        let _ = (&gen, &mut rng);
+        for suite in &suites {
+            let mut sc = McScorer::default();
+            for item in &suite.items {
+                // regenerate what the pattern implies: the correct choice is
+                // by construction one of the four; score = 0 for exact
+                // pattern match impossible to recompute here, so instead use
+                // the gold index directly as a self-check of the scorer
+                let scores: Vec<(f64, f64)> = (0..4)
+                    .map(|i| {
+                        let s = if i == item.gold { -1.0 } else { -10.0 };
+                        (s, item.choices[i].len() as f64)
+                    })
+                    .collect();
+                sc.add_item(&scores, item.gold);
+            }
+            assert_eq!(sc.acc(), 1.0);
+            assert_eq!(sc.acc_norm(), 1.0);
+        }
+    }
+}

@@ -1,0 +1,230 @@
+//! Instruction-corpus stand-ins for the paper's §4.3 SFT experiment
+//! (Alpaca / databricks-dolly-15k / OpenAssistant, one per client).
+//!
+//! What Fig 8 + Table 1 actually measure is *distributional heterogeneity*:
+//! three differently-flavoured corpora, one per client, such that a model
+//! fine-tuned on one transfers only partially to the others while FedAvg
+//! (or centralized "Combined") covers all three. We reproduce that with
+//! three synthetic "skills", each a structured sequence family a small
+//! decoder can learn:
+//!
+//! * [`Skill::Increment`] ("alpaca-like") — arithmetic-progression runs:
+//!   `x, x+d, x+2d, ...` (mod the content range), prefixed by a skill tag.
+//! * [`Skill::Repeat`] ("dolly-like") — a short motif tiled to fill the
+//!   sequence.
+//! * [`Skill::Mirror`] ("oasst-like") — a random half followed by its
+//!   reverse (palindrome).
+//!
+//! Every sequence starts with a shared "instruction header" (skill tag +
+//! separator) so the formats look alike while the *content rule* differs —
+//! like instruction datasets sharing a prompt format but differing in
+//! task mix.
+
+use super::{Sample, CONTENT_BASE};
+use crate::util::rng::Rng;
+
+/// The three synthetic instruction "datasets".
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Skill {
+    Increment,
+    Repeat,
+    Mirror,
+}
+
+impl Skill {
+    pub const ALL: [Skill; 3] = [Skill::Increment, Skill::Repeat, Skill::Mirror];
+
+    pub fn name(&self) -> &'static str {
+        match self {
+            Skill::Increment => "alpaca-like/increment",
+            Skill::Repeat => "dolly-like/repeat",
+            Skill::Mirror => "oasst-like/mirror",
+        }
+    }
+
+    /// Tag token identifying the skill in the shared header.
+    fn tag(&self, vocab: usize) -> i32 {
+        let base = CONTENT_BASE as usize;
+        (base + *self as usize % (vocab - base)) as i32
+    }
+}
+
+/// Generator over a given model vocab/seq (works for both `gpt_small`
+/// (512) and `gpt_100m` (16384)).
+#[derive(Debug, Clone)]
+pub struct InstructGen {
+    pub vocab: usize,
+    pub seq: usize,
+}
+
+impl InstructGen {
+    pub fn new(vocab: usize, seq: usize) -> InstructGen {
+        assert!(vocab > 32 && seq >= 16);
+        InstructGen { vocab, seq }
+    }
+
+    fn content_span(&self) -> (i64, i64) {
+        (CONTENT_BASE as i64 + 8, self.vocab as i64)
+    }
+
+    fn wrap(&self, x: i64) -> i32 {
+        let (lo, hi) = self.content_span();
+        let span = hi - lo;
+        (lo + (x - lo).rem_euclid(span)) as i32
+    }
+
+    /// One sequence of the given skill (fills the whole seq; LM loss is
+    /// computed over all positions).
+    pub fn sample(&self, skill: Skill, rng: &mut Rng) -> Sample {
+        let (lo, hi) = self.content_span();
+        let n = self.seq;
+        let mut tokens = Vec::with_capacity(n);
+        // shared instruction header: tag, separator
+        tokens.push(skill.tag(self.vocab));
+        tokens.push(CONTENT_BASE + 4); // separator token
+        match skill {
+            Skill::Increment => {
+                let start = rng.range(lo as u64, hi as u64) as i64;
+                let d = rng.range(1, 8) as i64;
+                for i in 0..(n - 2) as i64 {
+                    tokens.push(self.wrap(start + i * d));
+                }
+            }
+            Skill::Repeat => {
+                let motif_len = rng.range(3, 7) as usize;
+                let motif: Vec<i32> = (0..motif_len)
+                    .map(|_| rng.range(lo as u64, hi as u64) as i32)
+                    .collect();
+                for i in 0..(n - 2) {
+                    tokens.push(motif[i % motif_len]);
+                }
+            }
+            Skill::Mirror => {
+                let half = (n - 2) / 2;
+                let first: Vec<i32> = (0..half)
+                    .map(|_| rng.range(lo as u64, hi as u64) as i32)
+                    .collect();
+                tokens.extend_from_slice(&first);
+                // mirror (handles odd remainder by repeating the pivot)
+                for i in 0..(n - 2 - half) {
+                    tokens.push(first[half - 1 - (i % half)]);
+                }
+            }
+        }
+        debug_assert_eq!(tokens.len(), n);
+        Sample { tokens, label: skill as i32 }
+    }
+
+    /// A dataset of one skill (one client's corpus).
+    pub fn dataset(&self, skill: Skill, n: usize, seed: u64) -> Vec<Sample> {
+        let mut rng = Rng::new(seed ^ (skill as u64) << 17);
+        (0..n).map(|_| self.sample(skill, &mut rng)).collect()
+    }
+
+    /// The combined corpus (the paper's centralized baseline).
+    pub fn combined(&self, n_per_skill: usize, seed: u64) -> Vec<Sample> {
+        let mut all = Vec::new();
+        for s in Skill::ALL {
+            all.extend(self.dataset(s, n_per_skill, seed));
+        }
+        let mut rng = Rng::new(seed ^ 0xC0FFEE);
+        rng.shuffle(&mut all);
+        all
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn gen() -> InstructGen {
+        InstructGen::new(512, 64)
+    }
+
+    #[test]
+    fn sequences_fill_seq_and_stay_in_vocab() {
+        let g = gen();
+        let mut rng = Rng::new(1);
+        for skill in Skill::ALL {
+            let s = g.sample(skill, &mut rng);
+            assert_eq!(s.tokens.len(), 64);
+            assert!(s.tokens.iter().all(|&t| (4..512).contains(&t)), "{skill:?}");
+        }
+    }
+
+    #[test]
+    fn increment_is_arithmetic() {
+        let g = gen();
+        let mut rng = Rng::new(2);
+        let s = g.sample(Skill::Increment, &mut rng);
+        let body = &s.tokens[2..];
+        let (lo, hi) = g.content_span();
+        let span = hi - lo;
+        let d = (body[1] as i64 - body[0] as i64).rem_euclid(span);
+        for w in body.windows(2) {
+            let step = (w[1] as i64 - w[0] as i64).rem_euclid(span);
+            assert_eq!(step, d);
+        }
+    }
+
+    #[test]
+    fn repeat_is_periodic() {
+        let g = gen();
+        let mut rng = Rng::new(3);
+        let s = g.sample(Skill::Repeat, &mut rng);
+        let body = &s.tokens[2..];
+        // find the period (3..7)
+        let period = (3..7)
+            .find(|&p| body.iter().enumerate().all(|(i, &t)| t == body[i % p]))
+            .expect("no period found");
+        assert!(period >= 3);
+    }
+
+    #[test]
+    fn mirror_is_palindromic_prefix() {
+        let g = gen();
+        let mut rng = Rng::new(4);
+        let s = g.sample(Skill::Mirror, &mut rng);
+        let body = &s.tokens[2..];
+        let half = body.len() / 2;
+        for i in 0..half.min(body.len() - half) {
+            assert_eq!(body[half + i], body[half - 1 - i], "mirror mismatch at {i}");
+        }
+    }
+
+    #[test]
+    fn skills_have_distinct_tags() {
+        let g = gen();
+        let tags: Vec<i32> = Skill::ALL.iter().map(|s| s.tag(512)).collect();
+        let mut uniq = tags.clone();
+        uniq.dedup();
+        assert_eq!(tags.len(), uniq.len());
+        let mut rng = Rng::new(5);
+        for skill in Skill::ALL {
+            assert_eq!(g.sample(skill, &mut rng).tokens[0], skill.tag(512));
+        }
+    }
+
+    #[test]
+    fn combined_mixes_all_skills() {
+        let g = gen();
+        let all = g.combined(20, 9);
+        assert_eq!(all.len(), 60);
+        for skill in Skill::ALL {
+            assert!(all.iter().any(|s| s.label == skill as i32));
+        }
+        // shuffled: not grouped by skill
+        let first_10_same = all[..10].iter().all(|s| s.label == all[0].label);
+        assert!(!first_10_same);
+    }
+
+    #[test]
+    fn works_at_large_vocab() {
+        let g = InstructGen::new(16384, 64);
+        let mut rng = Rng::new(6);
+        for skill in Skill::ALL {
+            let s = g.sample(skill, &mut rng);
+            assert!(s.tokens.iter().all(|&t| (4..16384).contains(&t)));
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Financial-sentiment headline generator — the stand-in for the paper's
+//! §4.2 PEFT task (Financial PhraseBank [21]: 1 800 headline/sentiment
+//! pairs, 3 classes).
+//!
+//! Token layout inside the `gpt_small_lora` vocab (512):
+//!
+//! ```text
+//! 0        PAD
+//! 1..=3    label verbalizers (negative / neutral / positive)
+//! 4..=99   shared filler ("the", "company", numbers, ...)
+//! 100..199 negative-indicative tokens ("decreased", "loss", ...)
+//! 200..299 neutral-indicative
+//! 300..399 positive-indicative
+//! 400..511 entity tokens (company names)
+//! ```
+//!
+//! A headline mixes entity + filler tokens with `k` sentiment-bearing
+//! tokens, each drawn from its class range with probability `1 - noise`
+//! (else a random class) — so the task is learnable but not trivial,
+//! mirroring the ~85-90 % accuracies the paper's Fig 7 reaches.
+
+use super::{Sample, CONTENT_BASE};
+use crate::util::rng::Rng;
+
+pub const N_CLASSES: usize = 3;
+pub const DATASET_SIZE: usize = 1800;
+
+const FILLER: (i32, i32) = (CONTENT_BASE, 100);
+const CLASS_RANGES: [(i32, i32); 3] = [(100, 200), (200, 300), (300, 400)];
+const ENTITY: (i32, i32) = (400, 512);
+
+/// Generator parameters.
+#[derive(Debug, Clone)]
+pub struct SentimentGen {
+    /// Sentiment-bearing tokens per headline.
+    pub indicators: usize,
+    /// Probability an indicator is drawn from a *wrong* class range.
+    pub noise: f64,
+    /// Headline length range (tokens, before padding).
+    pub min_len: usize,
+    pub max_len: usize,
+}
+
+impl Default for SentimentGen {
+    fn default() -> SentimentGen {
+        SentimentGen {
+            indicators: 4,
+            noise: 0.12,
+            min_len: 10,
+            max_len: 24,
+        }
+    }
+}
+
+impl SentimentGen {
+    fn draw(range: (i32, i32), rng: &mut Rng) -> i32 {
+        rng.range(range.0 as u64, range.1 as u64) as i32
+    }
+
+    /// One headline of the given class.
+    pub fn sample(&self, class: usize, rng: &mut Rng) -> Sample {
+        assert!(class < N_CLASSES);
+        let len = rng.range(self.min_len as u64, self.max_len as u64 + 1) as usize;
+        // entity prefix, then filler with indicators scattered through
+        let mut tokens = Vec::with_capacity(len);
+        tokens.push(Self::draw(ENTITY, rng));
+        for _ in 1..len {
+            tokens.push(Self::draw(FILLER, rng));
+        }
+        // place indicators at random interior positions
+        let mut positions: Vec<usize> = (1..len).collect();
+        rng.shuffle(&mut positions);
+        for &p in positions.iter().take(self.indicators.min(len - 1)) {
+            let effective = if rng.bool(self.noise) {
+                rng.usize_below(N_CLASSES)
+            } else {
+                class
+            };
+            tokens[p] = Self::draw(CLASS_RANGES[effective], rng);
+        }
+        Sample {
+            tokens,
+            label: class as i32,
+        }
+    }
+
+    /// The full balanced dataset (paper: 1 800 pairs).
+    pub fn dataset(&self, n: usize, seed: u64) -> Vec<Sample> {
+        let mut rng = Rng::new(seed);
+        (0..n).map(|i| self.sample(i % N_CLASSES, &mut rng)).collect()
+    }
+}
+
+/// Standard train/eval split of the 1 800-sample dataset.
+pub fn standard_split(seed: u64) -> (Vec<Sample>, Vec<Sample>) {
+    let all = SentimentGen::default().dataset(DATASET_SIZE, seed);
+    // balanced eval: last 300 (100/class given round-robin class order)
+    let eval = all[DATASET_SIZE - 300..].to_vec();
+    let train = all[..DATASET_SIZE - 300].to_vec();
+    (train, eval)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn dataset_is_balanced_and_sized() {
+        let (train, eval) = standard_split(7);
+        assert_eq!(train.len() + eval.len(), DATASET_SIZE);
+        for class in 0..3 {
+            let n = eval.iter().filter(|s| s.label == class as i32).count();
+            assert_eq!(n, 100);
+        }
+    }
+
+    #[test]
+    fn tokens_in_valid_ranges() {
+        let gen = SentimentGen::default();
+        let mut rng = Rng::new(1);
+        for class in 0..3 {
+            let s = gen.sample(class, &mut rng);
+            assert!(s.tokens.len() >= gen.min_len && s.tokens.len() <= gen.max_len);
+            assert!(s.tokens.iter().all(|&t| (4..512).contains(&t)));
+            assert_eq!(s.label, class as i32);
+        }
+    }
+
+    #[test]
+    fn class_signal_is_present() {
+        // majority of indicator-range tokens should match the true class
+        let gen = SentimentGen::default();
+        let mut rng = Rng::new(2);
+        let mut correct = 0usize;
+        let mut total = 0usize;
+        for _ in 0..300 {
+            let class = rng.usize_below(3);
+            let s = gen.sample(class, &mut rng);
+            for &t in &s.tokens {
+                for (c, (lo, hi)) in CLASS_RANGES.iter().enumerate() {
+                    if (*lo..*hi).contains(&t) {
+                        total += 1;
+                        if c == class {
+                            correct += 1;
+                        }
+                    }
+                }
+            }
+        }
+        let frac = correct as f64 / total as f64;
+        assert!(frac > 0.8, "class signal too weak: {frac}");
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = SentimentGen::default().dataset(50, 9);
+        let b = SentimentGen::default().dataset(50, 9);
+        assert_eq!(a.len(), b.len());
+        assert!(a.iter().zip(&b).all(|(x, y)| x.tokens == y.tokens));
+    }
+}

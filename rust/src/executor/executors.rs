@@ -1,0 +1,498 @@
+//! Built-in executors: local training (SFT/PEFT/MLP), embedding
+//! extraction (federated inference), and the Fig-5 streaming workload.
+
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Result};
+
+use super::Executor;
+use crate::message::FlMessage;
+use crate::runtime::Trainer;
+use crate::tensor::{Tensor, TensorDict};
+use crate::util::json::Json;
+use crate::util::rng::Rng;
+
+/// Supplies model-ready batches from a client's local data.
+pub trait BatchSource: Send {
+    fn train_batch(&mut self, batch: usize) -> TensorDict;
+    fn eval_batch(&mut self, batch: usize) -> TensorDict;
+    /// Local training-set size (FedAvg aggregation weight).
+    fn n_samples(&self) -> usize;
+}
+
+/// Batch source over token samples (LM or classification).
+pub struct TokenSource {
+    train: crate::data::TokenBatcher,
+    eval: crate::data::TokenBatcher,
+    /// Emit `labels` alongside `tokens`.
+    cls: bool,
+    n: usize,
+}
+
+impl TokenSource {
+    pub fn new(
+        train_samples: Vec<crate::data::Sample>,
+        eval_samples: Vec<crate::data::Sample>,
+        seq: usize,
+        cls: bool,
+        seed: u64,
+    ) -> TokenSource {
+        let n = train_samples.len();
+        TokenSource {
+            // classification prompts are left-padded (predict at last pos),
+            // LM training right-padded
+            train: crate::data::TokenBatcher::new(train_samples, seq, cls, seed),
+            eval: crate::data::TokenBatcher::new(eval_samples, seq, cls, seed ^ 1),
+            cls,
+            n,
+        }
+    }
+}
+
+impl BatchSource for TokenSource {
+    fn train_batch(&mut self, batch: usize) -> TensorDict {
+        if self.cls {
+            self.train.cls_batch(batch)
+        } else {
+            self.train.lm_batch(batch)
+        }
+    }
+    fn eval_batch(&mut self, batch: usize) -> TensorDict {
+        if self.cls {
+            self.eval.cls_batch(batch)
+        } else {
+            self.eval.lm_batch(batch)
+        }
+    }
+    fn n_samples(&self) -> usize {
+        self.n
+    }
+}
+
+/// Batch source over dense vectors (the Fig-9 MLP-on-embeddings stage).
+pub struct VecBatchSource {
+    x: Vec<Vec<f32>>,
+    y: Vec<i32>,
+    train_idx: Vec<usize>,
+    eval_idx: Vec<usize>,
+    cursor: usize,
+    ecursor: usize,
+    rng: Rng,
+}
+
+impl VecBatchSource {
+    /// `eval_frac` of the data is held out for validation.
+    pub fn new(x: Vec<Vec<f32>>, y: Vec<i32>, eval_frac: f64, seed: u64) -> VecBatchSource {
+        assert_eq!(x.len(), y.len());
+        assert!(!x.is_empty());
+        let mut rng = Rng::new(seed);
+        let mut idx: Vec<usize> = (0..x.len()).collect();
+        rng.shuffle(&mut idx);
+        let n_eval = ((x.len() as f64 * eval_frac) as usize).clamp(1, x.len() - 1);
+        let eval_idx = idx[..n_eval].to_vec();
+        let train_idx = idx[n_eval..].to_vec();
+        VecBatchSource {
+            x,
+            y,
+            train_idx,
+            eval_idx,
+            cursor: 0,
+            ecursor: 0,
+            rng,
+        }
+    }
+
+    fn batch_from(&mut self, idx_kind: bool, batch: usize) -> TensorDict {
+        let dim = self.x[0].len();
+        let mut xs = Vec::with_capacity(batch * dim);
+        let mut ys = Vec::with_capacity(batch);
+        for _ in 0..batch {
+            let (idx, cursor) = if idx_kind {
+                (&self.train_idx, &mut self.cursor)
+            } else {
+                (&self.eval_idx, &mut self.ecursor)
+            };
+            if *cursor >= idx.len() {
+                *cursor = 0;
+                if idx_kind {
+                    let mut order = std::mem::take(&mut self.train_idx);
+                    self.rng.shuffle(&mut order);
+                    self.train_idx = order;
+                }
+            }
+            let (idx, cursor) = if idx_kind {
+                (&self.train_idx, &mut self.cursor)
+            } else {
+                (&self.eval_idx, &mut self.ecursor)
+            };
+            let i = idx[*cursor];
+            *cursor += 1;
+            xs.extend_from_slice(&self.x[i]);
+            ys.push(self.y[i]);
+        }
+        let mut d = TensorDict::new();
+        d.insert("x", Tensor::f32(vec![batch, dim], xs));
+        d.insert("y", Tensor::i32(vec![batch], ys));
+        d
+    }
+}
+
+impl BatchSource for VecBatchSource {
+    fn train_batch(&mut self, batch: usize) -> TensorDict {
+        self.batch_from(true, batch)
+    }
+    fn eval_batch(&mut self, batch: usize) -> TensorDict {
+        self.batch_from(false, batch)
+    }
+    fn n_samples(&self) -> usize {
+        self.train_idx.len()
+    }
+}
+
+// --------------------------------------------------------------- train
+
+/// Local trainer executor (paper Listing 2 semantics): on each "train"
+/// task it (1) applies the incoming global model, (2) *validates the
+/// global model* on local data (enabling server-side selection),
+/// (3) trains `local_steps`, (4) returns the communicated params with
+/// `n_samples` / `val_*` / `train_loss` metadata. An "eval" task does
+/// only (1)+(2).
+pub struct TrainExecutor {
+    pub trainer: Trainer,
+    source: Box<dyn BatchSource>,
+    pub local_steps: usize,
+    pub eval_batches: usize,
+    pub trainable_only: bool,
+    train_batch: usize,
+    eval_batch: usize,
+    /// K-fused LM train artifact, when one exists for this family
+    /// (`<family>_train_k<K>`): params cross the PJRT boundary once per
+    /// K steps (§Perf).
+    fused: Option<(String, usize)>,
+}
+
+impl TrainExecutor {
+    pub fn new(
+        mut trainer: Trainer,
+        source: Box<dyn BatchSource>,
+        local_steps: usize,
+        eval_batches: usize,
+        trainable_only: bool,
+    ) -> Result<TrainExecutor> {
+        let train_batch = trainer.train_manifest()?.batch();
+        let eval_batch = trainer
+            .manifest(&format!("{}_eval", trainer.family()))
+            .map(|m| m.batch())
+            .unwrap_or(train_batch);
+        // probe for a K-fused train artifact usable with this step count
+        let mut fused = None;
+        for k in [8usize, 5, 4, 2] {
+            if local_steps % k != 0 {
+                continue;
+            }
+            let name = format!("{}_train_k{k}", trainer.family());
+            if trainer.manifest(&name).is_ok() {
+                fused = Some((name, k));
+                break;
+            }
+        }
+        Ok(TrainExecutor {
+            trainer,
+            source,
+            local_steps,
+            eval_batches,
+            trainable_only,
+            train_batch,
+            eval_batch,
+            fused,
+        })
+    }
+
+    fn validate(&mut self) -> Result<(f64, f64)> {
+        let mut loss = 0.0;
+        let mut acc = 0.0;
+        for _ in 0..self.eval_batches {
+            let b = self.source.eval_batch(self.eval_batch);
+            let m = self.trainer.eval_batch(&b)?;
+            loss += m.loss as f64;
+            acc += m.acc as f64;
+        }
+        Ok((
+            loss / self.eval_batches as f64,
+            acc / self.eval_batches as f64,
+        ))
+    }
+}
+
+impl Executor for TrainExecutor {
+    fn execute(&mut self, task: &FlMessage) -> Result<FlMessage> {
+        match task.task.as_str() {
+            "train" => {
+                self.trainer.state.apply_global(&task.body);
+                let (val_loss, val_acc) = self.validate()?;
+                let mut train_loss = f64::NAN;
+                let mut train_acc = f64::NAN;
+                // fused path: only valid for tokens-only (LM) batches
+                let lm_batches = self
+                    .fused
+                    .as_ref()
+                    .map(|_| self.source.train_batch(self.train_batch).get("labels").is_none())
+                    .unwrap_or(false);
+                if let (Some((artifact, k)), true) = (self.fused.clone(), lm_batches) {
+                    for _ in 0..self.local_steps / k {
+                        let mut toks = Vec::new();
+                        let mut shape = vec![k];
+                        for _ in 0..k {
+                            let b = self.source.train_batch(self.train_batch);
+                            let t = b.get("tokens").expect("lm batch");
+                            if shape.len() == 1 {
+                                shape.extend_from_slice(&t.shape);
+                            }
+                            toks.extend_from_slice(t.as_i32().unwrap());
+                        }
+                        let m = self
+                            .trainer
+                            .train_chunk(&artifact, Tensor::i32(shape.clone(), toks))?;
+                        train_loss = m.loss as f64;
+                        train_acc = m.acc as f64;
+                    }
+                } else {
+                    for _ in 0..self.local_steps {
+                        let b = self.source.train_batch(self.train_batch);
+                        let m = self.trainer.train_step(&b)?;
+                        train_loss = m.loss as f64;
+                        train_acc = m.acc as f64;
+                    }
+                }
+                let body = self.trainer.state.communicated(self.trainable_only);
+                Ok(FlMessage::result(&task.task, task.round, "", body)
+                    .with_meta("n_samples", Json::num(self.source.n_samples() as f64))
+                    .with_meta("val_loss", Json::num(val_loss))
+                    .with_meta("val_acc", Json::num(val_acc))
+                    .with_meta("train_loss", Json::num(train_loss))
+                    .with_meta("train_acc", Json::num(train_acc)))
+            }
+            "eval" => {
+                self.trainer.state.apply_global(&task.body);
+                let (val_loss, val_acc) = self.validate()?;
+                Ok(
+                    FlMessage::result(&task.task, task.round, "", TensorDict::new())
+                        .with_meta("n_samples", Json::num(self.source.n_samples() as f64))
+                        .with_meta("val_loss", Json::num(val_loss))
+                        .with_meta("val_acc", Json::num(val_acc)),
+                )
+            }
+            other => Err(anyhow!("TrainExecutor: unknown task '{other}'")),
+        }
+    }
+}
+
+// --------------------------------------------------------------- embed
+
+/// Federated-inference executor (Fig 9 stage 1): runs the frozen encoder
+/// over all local samples and stores mean-pooled embeddings in a local
+/// store shared with the next pipeline stage. Only counts leave the
+/// client.
+pub struct EmbedExecutor {
+    pub trainer: Trainer,
+    artifact: String,
+    samples: Vec<crate::data::Sample>,
+    /// (embedding, label) pairs — local to the client.
+    pub store: Arc<Mutex<Vec<(Vec<f32>, i32)>>>,
+}
+
+impl EmbedExecutor {
+    pub fn new(
+        trainer: Trainer,
+        artifact: &str,
+        samples: Vec<crate::data::Sample>,
+    ) -> EmbedExecutor {
+        EmbedExecutor {
+            trainer,
+            artifact: artifact.to_string(),
+            samples,
+            store: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+}
+
+impl Executor for EmbedExecutor {
+    fn execute(&mut self, task: &FlMessage) -> Result<FlMessage> {
+        if task.task != "embed" {
+            return Err(anyhow!("EmbedExecutor: unknown task '{}'", task.task));
+        }
+        self.trainer.state.apply_global(&task.body);
+        let m = self.trainer.manifest(&self.artifact)?;
+        let batch = m.batch();
+        let seq = m.seq();
+        let dim = m.meta.get("d_model").as_usize().unwrap_or(0);
+        let mut store = self.store.lock().unwrap();
+        store.clear();
+        for chunk in self.samples.chunks(batch) {
+            // pad the final chunk by repeating the first sample
+            let mut toks = Vec::with_capacity(batch * seq);
+            for i in 0..batch {
+                let s = chunk.get(i).unwrap_or(&chunk[0]);
+                toks.extend_from_slice(&crate::data::right_pad(&s.tokens, seq));
+            }
+            let mut b = TensorDict::new();
+            b.insert("tokens", Tensor::i32(vec![batch, seq], toks));
+            let out = self.trainer.run_artifact(&self.artifact, &b)?;
+            let emb = out
+                .get("embeddings")
+                .ok_or_else(|| anyhow!("embed artifact returned no embeddings"))?;
+            let flat = emb.as_f32().unwrap();
+            for (i, s) in chunk.iter().enumerate() {
+                store.push((flat[i * dim..(i + 1) * dim].to_vec(), s.label));
+            }
+        }
+        let n = store.len();
+        drop(store);
+        Ok(
+            FlMessage::result(&task.task, task.round, "", TensorDict::new())
+                .with_meta("n_embedded", Json::num(n as f64))
+                .with_meta("n_samples", Json::num(n as f64)),
+        )
+    }
+}
+
+// --------------------------------------------------------------- fig 5
+
+/// The paper's §4.1 streaming workload: "the local training task was to
+/// add a small number to those arrays" — a dict of `keys` arrays of
+/// `key_elems` f32 each, optionally pushed through the Pallas-lowered
+/// `addnum` artifact (else plain Rust).
+pub struct StreamTestExecutor {
+    trainer: Option<Trainer>,
+    delta: f32,
+    /// Simulated compute time per key (lets Fig-5 runs model slow local
+    /// training without a GPU).
+    pub work_ms: u64,
+}
+
+impl StreamTestExecutor {
+    pub fn new(trainer: Option<Trainer>, delta: f32) -> StreamTestExecutor {
+        StreamTestExecutor {
+            trainer,
+            delta,
+            work_ms: 0,
+        }
+    }
+
+    /// Build the synthetic model: `keys` tensors of `key_elems` f32 each
+    /// (the paper used 64 keys x 2 GB; the repro scales it down).
+    pub fn build_model(keys: usize, key_elems: usize, fill: f32) -> TensorDict {
+        let mut d = TensorDict::new();
+        for k in 0..keys {
+            d.insert(
+                format!("key_{k:03}"),
+                Tensor::f32(vec![key_elems], vec![fill; key_elems]),
+            );
+        }
+        d
+    }
+}
+
+impl Executor for StreamTestExecutor {
+    fn execute(&mut self, task: &FlMessage) -> Result<FlMessage> {
+        let mut body = task.body.clone();
+        let delta_t = Tensor::f32(vec![1, 1], vec![self.delta]);
+        for (_name, t) in body.iter_mut() {
+            if self.work_ms > 0 {
+                std::thread::sleep(std::time::Duration::from_millis(self.work_ms));
+            }
+            let Some(v) = t.as_f32_mut() else { continue };
+            match &mut self.trainer {
+                Some(tr) => {
+                    // run through the Pallas-lowered addnum artifact when the
+                    // key size matches its fixed shape, else fall back
+                    let n = tr
+                        .manifest("addnum")?
+                        .meta
+                        .get("n")
+                        .as_usize()
+                        .unwrap_or(0);
+                    if v.len() == n {
+                        let mut inputs = TensorDict::new();
+                        inputs.insert("x", Tensor::f32(vec![n], v.to_vec()));
+                        inputs.insert("delta", delta_t.clone());
+                        #[allow(clippy::let_and_return)]
+                        let out = tr.runtime().execute("addnum", inputs)?;
+                        v.copy_from_slice(out.get("y").unwrap().as_f32().unwrap());
+                    } else {
+                        v.iter_mut().for_each(|x| *x += self.delta);
+                    }
+                }
+                None => v.iter_mut().for_each(|x| *x += self.delta),
+            }
+        }
+        Ok(FlMessage::result(&task.task, task.round, "", body)
+            .with_meta("n_samples", Json::num(1.0)))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::Sample;
+
+    #[test]
+    fn token_source_shapes() {
+        let samples: Vec<Sample> = (0..6)
+            .map(|i| Sample {
+                tokens: vec![5 + i as i32; 4],
+                label: (i % 3) as i32,
+            })
+            .collect();
+        let mut src = TokenSource::new(samples.clone(), samples, 8, true, 1);
+        assert_eq!(src.n_samples(), 6);
+        let b = src.train_batch(4);
+        assert_eq!(b.get("tokens").unwrap().shape, vec![4, 8]);
+        assert_eq!(b.get("labels").unwrap().shape, vec![4]);
+        let mut lm = TokenSource::new(
+            (0..4)
+                .map(|_| Sample { tokens: vec![7; 8], label: 0 })
+                .collect(),
+            vec![Sample { tokens: vec![7; 8], label: 0 }],
+            8,
+            false,
+            2,
+        );
+        let b = lm.train_batch(2);
+        assert!(b.get("labels").is_none());
+    }
+
+    #[test]
+    fn vec_source_splits_and_cycles() {
+        let x: Vec<Vec<f32>> = (0..20).map(|i| vec![i as f32; 3]).collect();
+        let y: Vec<i32> = (0..20).map(|i| (i % 2) as i32).collect();
+        let mut src = VecBatchSource::new(x, y, 0.25, 7);
+        assert_eq!(src.n_samples(), 15);
+        for _ in 0..10 {
+            let b = src.train_batch(4);
+            assert_eq!(b.get("x").unwrap().shape, vec![4, 3]);
+            assert_eq!(b.get("y").unwrap().shape, vec![4]);
+        }
+        let e = src.eval_batch(3);
+        assert_eq!(e.get("x").unwrap().shape, vec![3, 3]);
+    }
+
+    #[test]
+    fn stream_test_adds_delta_without_artifact() {
+        let mut exec = StreamTestExecutor::new(None, 0.5);
+        let model = StreamTestExecutor::build_model(4, 16, 1.0);
+        let task = FlMessage::task("stream_test", 0, model);
+        let result = exec.execute(&task).unwrap();
+        assert_eq!(result.body.len(), 4);
+        for (_n, t) in result.body.iter() {
+            assert!(t.as_f32().unwrap().iter().all(|&v| (v - 1.5).abs() < 1e-6));
+        }
+    }
+
+    #[test]
+    fn stream_test_model_sizing() {
+        let m = StreamTestExecutor::build_model(64, 512, 0.0);
+        assert_eq!(m.len(), 64);
+        assert_eq!(m.byte_size(), 64 * 512 * 4);
+    }
+}

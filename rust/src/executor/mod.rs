@@ -1,0 +1,281 @@
+//! Client-side execution (paper §2.2/§2.3): the [`Executor`] trait, the
+//! task loop, and the [`ClientApi`] facade mirroring the paper's
+//! Listing 1 (`init` / `receive` / `send` / `is_running`).
+
+mod executors;
+
+pub use executors::{
+    BatchSource, EmbedExecutor, StreamTestExecutor, TokenSource, TrainExecutor, VecBatchSource,
+};
+
+use anyhow::{anyhow, Result};
+
+use crate::filters::Filter;
+use crate::message::{FlMessage, Kind};
+use crate::streaming::Messenger;
+
+/// A client-side task handler (the paper's Executor running inside each
+/// FL client).
+pub trait Executor: Send {
+    /// Handle one task; the returned message is sent back as the result.
+    fn execute(&mut self, task: &FlMessage) -> Result<FlMessage>;
+}
+
+/// The client runtime: registers with the server, then loops
+/// receive-task -> execute -> filter -> send-result until `bye`.
+pub struct ClientRuntime {
+    pub name: String,
+    messenger: Messenger,
+    executor: Box<dyn Executor>,
+    filters: Vec<Box<dyn Filter>>,
+    /// Per-task wall timings: (recv_s, exec_s, send_s). `recv_s` includes
+    /// idle time waiting for the server's next task (the paper's Fig-5
+    /// "nearly idle state" of the fast client shows up here).
+    pub timings: Vec<(f64, f64, f64)>,
+}
+
+impl ClientRuntime {
+    pub fn new(
+        name: &str,
+        messenger: Messenger,
+        executor: Box<dyn Executor>,
+        filters: Vec<Box<dyn Filter>>,
+    ) -> ClientRuntime {
+        ClientRuntime {
+            name: name.to_string(),
+            messenger,
+            executor,
+            filters,
+            timings: Vec::new(),
+        }
+    }
+
+    /// Run the task loop to completion. Returns the number of tasks done.
+    pub fn run_loop(&mut self) -> Result<usize> {
+        self.messenger
+            .send_msg(&FlMessage::register(&self.name))
+            .map_err(|e| anyhow!("register: {e}"))?;
+        let mut done = 0usize;
+        loop {
+            let t0 = std::time::Instant::now();
+            let task = self
+                .messenger
+                .recv_msg()
+                .map_err(|e| anyhow!("{}: recv task: {e}", self.name))?;
+            let recv_s = t0.elapsed().as_secs_f64();
+            if task.kind == Kind::Bye {
+                return Ok(done);
+            }
+            let t1 = std::time::Instant::now();
+            let mut result = self.executor.execute(&task)?;
+            result.client = self.name.clone();
+            result.round = task.round;
+            result.body =
+                crate::filters::apply_result_chain(&mut self.filters, result.body, task.round);
+            let exec_s = t1.elapsed().as_secs_f64();
+            let t2 = std::time::Instant::now();
+            self.messenger
+                .send_msg(&result)
+                .map_err(|e| anyhow!("{}: send result: {e}", self.name))?;
+            self.timings.push((recv_s, exec_s, t2.elapsed().as_secs_f64()));
+            done += 1;
+        }
+    }
+}
+
+/// The paper's Listing-1 Client API, for users converting local training
+/// loops by hand (see `examples/quickstart.rs`):
+///
+/// ```ignore
+/// let mut api = ClientApi::init("site-1", messenger)?;
+/// while api.is_running() {
+///     let input_model = api.receive()?;          // global model
+///     let new_params = local_train(input_model); // your code
+///     api.send(new_params)?;                     // back to the server
+/// }
+/// ```
+pub struct ClientApi {
+    name: String,
+    messenger: Messenger,
+    running: bool,
+    round: usize,
+}
+
+impl ClientApi {
+    /// Step 1: initialize the client environment (registers with the
+    /// server).
+    pub fn init(name: &str, mut messenger: Messenger) -> Result<ClientApi> {
+        messenger
+            .send_msg(&FlMessage::register(name))
+            .map_err(|e| anyhow!("register: {e}"))?;
+        Ok(ClientApi {
+            name: name.to_string(),
+            messenger,
+            running: true,
+            round: 0,
+        })
+    }
+
+    /// Whether the FL job is still running (false after the server's bye).
+    pub fn is_running(&self) -> bool {
+        self.running
+    }
+
+    /// FL system info (paper Listing 2's `system_info`).
+    pub fn system_info(&self) -> String {
+        format!(
+            "client={} round={} driver={}",
+            self.name,
+            self.round,
+            self.messenger.driver_name()
+        )
+    }
+
+    /// Step 2: receive the global model for this round. Returns `None`
+    /// when the job has finished.
+    pub fn receive(&mut self) -> Result<Option<FlMessage>> {
+        if !self.running {
+            return Ok(None);
+        }
+        let msg = self
+            .messenger
+            .recv_msg()
+            .map_err(|e| anyhow!("receive: {e}"))?;
+        if msg.kind == Kind::Bye {
+            self.running = false;
+            return Ok(None);
+        }
+        self.round = msg.round;
+        Ok(Some(msg))
+    }
+
+    /// Step 5: send the updated model back to the server.
+    pub fn send(&mut self, mut result: FlMessage) -> Result<()> {
+        result.client = self.name.clone();
+        result.round = self.round;
+        self.messenger
+            .send_msg(&result)
+            .map_err(|e| anyhow!("send: {e}"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::{accept_registration, ClientHandle, Communicator};
+    use crate::sfm::inproc;
+    use crate::tensor::{Tensor, TensorDict};
+    use crate::util::json::Json;
+
+    /// Echo executor: returns the task body incremented by 1.
+    struct Echo;
+    impl Executor for Echo {
+        fn execute(&mut self, task: &FlMessage) -> Result<FlMessage> {
+            let mut body = task.body.clone();
+            for (_n, t) in body.iter_mut() {
+                if let Some(v) = t.as_f32_mut() {
+                    v.iter_mut().for_each(|x| *x += 1.0);
+                }
+            }
+            Ok(FlMessage::result(&task.task, task.round, "", body)
+                .with_meta("n_samples", Json::num(10.0)))
+        }
+    }
+
+    fn model(vals: &[f32]) -> TensorDict {
+        let mut d = TensorDict::new();
+        d.insert("w", Tensor::f32(vec![vals.len()], vals.to_vec()));
+        d
+    }
+
+    #[test]
+    fn task_loop_round_trip_over_inproc() {
+        let (sa, ca) = inproc::pair(16, "loop");
+        let server_m = Messenger::new(Box::new(sa), 1024, 0);
+        let client_m = Messenger::new(Box::new(ca), 1024, 1);
+
+        let client = std::thread::spawn(move || {
+            let mut rt = ClientRuntime::new("c1", client_m, Box::new(Echo), vec![]);
+            rt.run_loop().unwrap()
+        });
+
+        let mut sm = server_m;
+        let name = accept_registration(&mut sm).unwrap();
+        assert_eq!(name, "c1");
+        let handle = ClientHandle::spawn(name, sm);
+        let mut comm = Communicator::new(vec![handle], 0);
+        let task = FlMessage::task("train", 0, model(&[1.0, 2.0]));
+        let results = comm.broadcast_and_wait(&task, &[0]).unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(
+            results[0].body.get("w").unwrap().as_f32().unwrap(),
+            &[2.0, 3.0]
+        );
+        assert_eq!(results[0].client, "c1");
+        comm.shutdown();
+        assert_eq!(client.join().unwrap(), 1);
+    }
+
+    #[test]
+    fn client_api_mirrors_listing1() {
+        let (sa, ca) = inproc::pair(16, "api");
+        let mut server_m = Messenger::new(Box::new(sa), 1024, 0);
+        let client_m = Messenger::new(Box::new(ca), 1024, 1);
+
+        let client = std::thread::spawn(move || {
+            // Listing 1 shape:
+            let mut api = ClientApi::init("site-1", client_m).unwrap();
+            let mut rounds_done = 0;
+            while api.is_running() {
+                let Some(input_model) = api.receive().unwrap() else {
+                    break;
+                };
+                let params = input_model.body; // 3. obtain params
+                let mut new_params = params.clone(); // "local training"
+                new_params.scale(2.0);
+                let out = FlMessage::result("train", 0, "", new_params);
+                api.send(out).unwrap(); // 5. send
+                rounds_done += 1;
+            }
+            rounds_done
+        });
+
+        let name = accept_registration(&mut server_m).unwrap();
+        assert_eq!(name, "site-1");
+        for round in 0..3 {
+            server_m
+                .send_msg(&FlMessage::task("train", round, model(&[1.5])))
+                .unwrap();
+            let r = server_m.recv_msg().unwrap();
+            assert_eq!(r.body.get("w").unwrap().as_f32().unwrap(), &[3.0]);
+        }
+        server_m.send_msg(&FlMessage::bye()).unwrap();
+        assert_eq!(client.join().unwrap(), 3);
+    }
+
+    #[test]
+    fn filters_run_on_outgoing_results() {
+        use crate::config::FilterSpec;
+        let (sa, ca) = inproc::pair(16, "filt");
+        let mut server_m = Messenger::new(Box::new(sa), 1024, 0);
+        let client_m = Messenger::new(Box::new(ca), 1024, 1);
+        let chain = crate::filters::build_chain(
+            &[FilterSpec::GaussianDp { clip: 0.5, sigma: 0.0 }],
+            0,
+            1,
+        );
+        let client = std::thread::spawn(move || {
+            let mut rt = ClientRuntime::new("c", client_m, Box::new(Echo), chain);
+            rt.run_loop().unwrap();
+        });
+        let _ = accept_registration(&mut server_m).unwrap();
+        server_m
+            .send_msg(&FlMessage::task("train", 0, model(&[3.0, 4.0])))
+            .unwrap();
+        let r = server_m.recv_msg().unwrap();
+        // echo makes [4,5] (norm ~6.4); DP clips to 0.5
+        assert!((r.body.l2_norm() - 0.5).abs() < 1e-4);
+        server_m.send_msg(&FlMessage::bye()).unwrap();
+        client.join().unwrap();
+    }
+}

@@ -1,0 +1,45 @@
+//! # FedFlare — federated learning for massive models
+//!
+//! A Rust + JAX + Pallas reproduction of *"Empowering Federated Learning for
+//! Massive Models with NVIDIA FLARE"* (Roth et al., NVIDIA, 2024).
+//!
+//! Architecture (three layers, Python never on the request path):
+//!
+//! * **L3 (this crate)** — the FL coordinator: task-based
+//!   [`coordinator::Controller`]/[`executor::Executor`] collaboration, the
+//!   [`sfm`] **Streamable Framed Message** layer (1 MB chunking, pluggable
+//!   drivers), [`streaming`] object/file streamers, [`filters`] on task
+//!   data/results, and the [`runtime`] PJRT executor that runs the
+//!   AOT-compiled models.
+//! * **L2 (python/compile/model.py)** — JAX model fwd/bwd, lowered once to
+//!   HLO text in `artifacts/` by `python/compile/aot.py`.
+//! * **L1 (python/compile/kernels/)** — Pallas TPU kernels (flash
+//!   attention, fused LoRA matmul, fused AdamW) called from L2.
+//!
+//! The crate is self-contained after `make artifacts`: the [`runtime`]
+//! loads HLO text via PJRT (`xla` crate) and every FL workflow —
+//! [`coordinator::FedAvg`], cyclic weight transfer, federated evaluation,
+//! federated inference — runs pure Rust.
+
+pub mod config;
+pub mod coordinator;
+pub mod data;
+pub mod executor;
+pub mod filters;
+pub mod message;
+pub mod metrics;
+pub mod model;
+pub mod repro;
+pub mod runtime;
+pub mod sfm;
+pub mod sim;
+pub mod streaming;
+pub mod tensor;
+pub mod util;
+
+/// Crate version (mirrors Cargo.toml).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");
+
+/// Default chunk size of the streaming layer: the paper's §2.4 splits
+/// large messages into 1 MB chunks.
+pub const DEFAULT_CHUNK_BYTES: usize = 1 << 20;

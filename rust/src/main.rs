@@ -1,0 +1,438 @@
+//! `fedflare` — CLI launcher.
+//!
+//! ```text
+//! fedflare repro <fig5|fig6|fig7|fig8|table1|fig9|all> [opts]
+//!     regenerate a paper figure/table into results/
+//! fedflare run --job <job.json> [--driver inproc|tcp]
+//!     run an FL job described by a JSON job file (in-process simulation)
+//! fedflare server --port <p> --job <job.json>
+//! fedflare client --connect <host:port> --name <site> --job <job.json>
+//!     multi-process deployment (server + one process per client)
+//! fedflare list-artifacts [--artifacts-dir artifacts]
+//! fedflare fig5-worker ...            (internal: spawned by `repro fig5`)
+//! ```
+
+use anyhow::{anyhow, bail, Result};
+
+use fedflare::config::JobConfig;
+use fedflare::coordinator::{
+    accept_registration, ClientHandle, Communicator, Controller, FedAvg, ServerCtx,
+};
+use fedflare::executor::ClientRuntime;
+use fedflare::metrics::MetricsSink;
+use fedflare::repro;
+use fedflare::runtime::RuntimeClient;
+use fedflare::sim;
+use fedflare::streaming::Messenger;
+use fedflare::util::cli::Args;
+
+fn main() {
+    let args: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&args) {
+        let msg = e.to_string();
+        if let Some(help) = msg.strip_prefix("HELP\n") {
+            println!("{help}");
+            std::process::exit(0);
+        }
+        eprintln!("error: {msg}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(args: &[String]) -> Result<()> {
+    let Some(cmd) = args.first() else {
+        print_usage();
+        return Ok(());
+    };
+    let rest = &args[1..];
+    match cmd.as_str() {
+        "repro" => cmd_repro(rest),
+        "run" => cmd_run(rest),
+        "server" => cmd_server(rest),
+        "client" => cmd_client(rest),
+        "list-artifacts" => cmd_list(rest),
+        "fig5-worker" => cmd_fig5_worker(rest),
+        "--help" | "-h" | "help" => {
+            print_usage();
+            Ok(())
+        }
+        other => bail!("unknown command '{other}' (try --help)"),
+    }
+}
+
+fn print_usage() {
+    println!(
+        "fedflare {} — federated learning for massive models (paper repro)\n\n\
+         commands:\n\
+         \x20 repro <fig5|fig6|fig7|fig8|table1|fig9|all>   regenerate paper experiments\n\
+         \x20 run --job <file>                              run an FL job (in-process)\n\
+         \x20 server / client                               multi-process deployment\n\
+         \x20 list-artifacts                                show compiled model artifacts\n\n\
+         run `fedflare repro fig5 --help` etc. for per-command options",
+        fedflare::VERSION
+    );
+}
+
+// ----------------------------------------------------------------- repro
+
+fn cmd_repro(args: &[String]) -> Result<()> {
+    let Some(which) = args.first() else {
+        bail!("usage: fedflare repro <fig5|fig6|fig7|fig8|table1|fig9|all>");
+    };
+    let rest = &args[1..];
+    match which.as_str() {
+        "fig5" => repro_fig5(rest),
+        "fig6" => repro_fig6(rest),
+        "fig7" => repro_fig7(rest),
+        "fig8" => repro_fig8(rest),
+        "table1" => repro_table1(rest),
+        "fig9" => repro_fig9(rest),
+        "all" => {
+            repro_fig6(rest)?;
+            repro_fig5(rest)?;
+            repro_fig7(rest)?;
+            repro_fig8(rest)?;
+            repro_table1(rest)?;
+            repro_fig9(rest)
+        }
+        other => bail!("unknown experiment '{other}'"),
+    }
+}
+
+fn common_args(name: &str, about: &'static str) -> Args {
+    Args::new(name, about)
+        .opt("out-dir", Some("results"), "output directory for CSV series")
+        .opt("artifacts-dir", Some("artifacts"), "compiled artifacts dir")
+        .opt("seed", None, "override the experiment seed")
+}
+
+fn repro_fig5(args: &[String]) -> Result<()> {
+    let p = common_args("repro fig5", "memory during large-model streaming")
+        .opt("keys", Some("64"), "number of model keys")
+        .opt("key-mb", Some("2"), "MB per key (paper: 2 GB)")
+        .opt("rounds", Some("3"), "FL rounds")
+        .opt("site1-mbps", Some("40"), "site-1 bandwidth, MB/s")
+        .opt("site2-mbps", Some("8"), "site-2 bandwidth, MB/s")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let mut o = repro::fig5::Fig5Opts::default();
+    o.keys = p.get_usize("keys").map_err(|e| anyhow!(e))?;
+    o.key_elems = p.get_usize("key-mb").map_err(|e| anyhow!(e))? * (1 << 20) / 4;
+    o.rounds = p.get_usize("rounds").map_err(|e| anyhow!(e))?;
+    o.clients = vec![
+        (
+            "site-1".into(),
+            p.get_u64("site1-mbps").map_err(|e| anyhow!(e))? * 1_000_000,
+        ),
+        (
+            "site-2".into(),
+            p.get_u64("site2-mbps").map_err(|e| anyhow!(e))? * 1_000_000,
+        ),
+    ];
+    o.out_dir = p.get("out-dir").unwrap().to_string();
+    o.artifacts_dir = p.get("artifacts-dir").unwrap().to_string();
+    repro::fig5::run(&o)
+}
+
+fn repro_fig6(args: &[String]) -> Result<()> {
+    let p = common_args("repro fig6", "Dirichlet partition heterogeneity")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let seed = p.get("seed").map(|s| s.parse().unwrap()).unwrap_or(13);
+    repro::fig6::run(p.get("out-dir").unwrap(), seed)
+}
+
+fn repro_fig7(args: &[String]) -> Result<()> {
+    let p = common_args("repro fig7", "federated PEFT vs local accuracy")
+        .opt("rounds", Some("6"), "FL rounds")
+        .opt("local-steps", Some("20"), "client steps per round")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let mut o = repro::fig7::Fig7Opts::default();
+    o.rounds = p.get_usize("rounds").map_err(|e| anyhow!(e))?;
+    o.local_steps = p.get_usize("local-steps").map_err(|e| anyhow!(e))?;
+    if let Some(s) = p.get("seed") {
+        o.seed = s.parse()?;
+    }
+    o.out_dir = p.get("out-dir").unwrap().to_string();
+    o.artifacts_dir = p.get("artifacts-dir").unwrap().to_string();
+    repro::fig7::run(&o).map(|_| ())
+}
+
+fn repro_fig8(args: &[String]) -> Result<()> {
+    let p = common_args("repro fig8", "federated SFT validation-loss curves")
+        .opt("family", Some("gpt_small"), "model family (gpt_small|gpt_100m)")
+        .opt("rounds", Some("5"), "FL rounds")
+        .opt("local-steps", Some("30"), "client steps per round")
+        .opt("train-per-skill", Some("600"), "training samples per corpus")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let mut o = repro::fig8::Fig8Opts::default();
+    o.family = p.get("family").unwrap().to_string();
+    o.rounds = p.get_usize("rounds").map_err(|e| anyhow!(e))?;
+    o.local_steps = p.get_usize("local-steps").map_err(|e| anyhow!(e))?;
+    o.train_per_skill = p.get_usize("train-per-skill").map_err(|e| anyhow!(e))?;
+    if let Some(s) = p.get("seed") {
+        o.seed = s.parse()?;
+    }
+    o.out_dir = p.get("out-dir").unwrap().to_string();
+    o.artifacts_dir = p.get("artifacts-dir").unwrap().to_string();
+    repro::fig8::run(&o)
+}
+
+fn repro_table1(args: &[String]) -> Result<()> {
+    let p = common_args("repro table1", "zero-shot MC benchmarks of Fig-8 checkpoints")
+        .opt("family", Some("gpt_small"), "model family")
+        .opt("items", Some("60"), "MC items per suite")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let mut o = repro::table1::Table1Opts::default();
+    o.family = p.get("family").unwrap().to_string();
+    o.items_per_suite = p.get_usize("items").map_err(|e| anyhow!(e))?;
+    if let Some(s) = p.get("seed") {
+        o.seed = s.parse()?;
+    }
+    o.out_dir = p.get("out-dir").unwrap().to_string();
+    o.artifacts_dir = p.get("artifacts-dir").unwrap().to_string();
+    // auto-run fig8 if checkpoints are missing
+    let first = repro::fig8::ckpt_path(&o.out_dir, &o.family, "base");
+    if !std::path::Path::new(&first).exists() {
+        println!("table1: checkpoints missing, running fig8 first...");
+        let mut f8 = repro::fig8::Fig8Opts::default();
+        f8.family = o.family.clone();
+        f8.out_dir = o.out_dir.clone();
+        f8.artifacts_dir = o.artifacts_dir.clone();
+        repro::fig8::run(&f8)?;
+    }
+    repro::table1::run(&o).map(|_| ())
+}
+
+fn repro_fig9(args: &[String]) -> Result<()> {
+    let p = common_args("repro fig9", "protein subcellular location, MLP ladder")
+        .opt("rounds", Some("8"), "FL rounds for the MLP stage")
+        .opt("local-steps", Some("25"), "client steps per round")
+        .opt("train-total", Some("900"), "total training sequences")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let mut o = repro::fig9::Fig9Opts::default();
+    o.rounds = p.get_usize("rounds").map_err(|e| anyhow!(e))?;
+    o.local_steps = p.get_usize("local-steps").map_err(|e| anyhow!(e))?;
+    o.train_total = p.get_usize("train-total").map_err(|e| anyhow!(e))?;
+    if let Some(s) = p.get("seed") {
+        o.seed = s.parse()?;
+    }
+    o.out_dir = p.get("out-dir").unwrap().to_string();
+    o.artifacts_dir = p.get("artifacts-dir").unwrap().to_string();
+    repro::fig9::run(&o).map(|_| ())
+}
+
+// ----------------------------------------------------------------- run
+
+fn cmd_run(args: &[String]) -> Result<()> {
+    let p = Args::new("run", "run an FL job file in-process")
+        .opt("job", None, "path to job JSON (required)")
+        .opt("driver", Some("inproc"), "transport: inproc | tcp")
+        .opt("out-dir", Some("results"), "metrics/results directory")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let job = JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
+    let kind = match p.get("driver").unwrap() {
+        "inproc" => sim::DriverKind::InProc,
+        "tcp" => sim::DriverKind::Tcp,
+        other => bail!("unknown driver {other}"),
+    };
+    let rc = if job.artifact == "stream_test" {
+        RuntimeClient::start(&job.artifacts_dir).ok()
+    } else {
+        Some(RuntimeClient::start(&job.artifacts_dir)?)
+    };
+    let initial = repro::common::initial_model(&job, rc.as_ref())?;
+    println!(
+        "job '{}': workflow={} rounds={} clients={} payload={:.1} MB",
+        job.name,
+        job.workflow.as_str(),
+        job.rounds,
+        job.clients.len(),
+        initial.byte_size() as f64 / (1 << 20) as f64
+    );
+    let mut ctl: Box<dyn Controller> = match job.workflow {
+        fedflare::config::Workflow::FedAvg => {
+            let mut c = FedAvg::new(initial, job.rounds, job.min_clients);
+            if job.artifact == "stream_test" {
+                c.task_name = "stream_test".into();
+            }
+            Box::new(c)
+        }
+        fedflare::config::Workflow::Cyclic => Box::new(
+            fedflare::coordinator::CyclicWeightTransfer::new(initial, job.rounds),
+        ),
+        fedflare::config::Workflow::FedEval => {
+            Box::new(fedflare::coordinator::FederatedEval::new(initial))
+        }
+        fedflare::config::Workflow::FedInference => {
+            Box::new(fedflare::coordinator::FederatedInference::new(initial))
+        }
+    };
+    let job2 = job.clone();
+    let rc2 = rc.clone();
+    let mut factory: Box<sim::ExecutorFactory> =
+        Box::new(move |i, _spec| repro::common::build_executor(&job2, i, rc2.as_ref()));
+    let out_dir = p.get("out-dir").unwrap().to_string();
+    sim::run_job(&job, kind, ctl.as_mut(), &mut factory, &out_dir)?;
+    println!(
+        "job '{}' finished; events in {}/{}.events.jsonl",
+        job.name, out_dir, job.name
+    );
+    Ok(())
+}
+
+// ------------------------------------------------------------ server/client
+
+fn cmd_server(args: &[String]) -> Result<()> {
+    let p = Args::new("server", "FL server (multi-process deployment)")
+        .opt("port", Some("8787"), "listen port")
+        .opt("job", None, "path to job JSON (required)")
+        .opt("out-dir", Some("results"), "metrics directory")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let job = JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
+    let port: u16 = p.get("port").unwrap().parse()?;
+    let rc = RuntimeClient::start(&job.artifacts_dir).ok();
+    let initial = repro::common::initial_model(&job, rc.as_ref())?;
+
+    let listener = fedflare::sfm::tcp::bind(("0.0.0.0", port))?;
+    println!(
+        "server: listening on :{port}, waiting for {} clients",
+        job.clients.len()
+    );
+    let mut handles = Vec::new();
+    for _ in 0..job.clients.len() {
+        let (conn, peer) = listener.accept()?;
+        let drv = fedflare::sfm::tcp::TcpDriver::from_stream(conn, job.stream.verify_crc)?;
+        let mut m = Messenger::new(Box::new(drv), job.stream.chunk_bytes, 0);
+        let name = accept_registration(&mut m)?;
+        println!("server: registered '{name}' from {peer}");
+        handles.push(ClientHandle::spawn(name, m));
+    }
+    let mut comm = Communicator::new(handles, job.seed);
+    let sink = MetricsSink::create(p.get("out-dir").unwrap(), &job.name)?;
+    let mut ctx = ServerCtx::new(sink, &job.name);
+    let mut ctl = FedAvg::new(initial, job.rounds, job.min_clients);
+    if job.artifact == "stream_test" {
+        ctl.task_name = "stream_test".into();
+    }
+    ctl.run(&mut comm, &mut ctx)?;
+    println!("server: job complete ({} rounds)", ctl.history.len());
+    Ok(())
+}
+
+fn cmd_client(args: &[String]) -> Result<()> {
+    let p = Args::new("client", "FL client (multi-process deployment)")
+        .opt("connect", Some("127.0.0.1:8787"), "server address")
+        .opt("name", None, "client/site name (required)")
+        .opt("job", None, "path to job JSON (required)")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let job = JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
+    let name = p.req("name").map_err(|e| anyhow!(e))?;
+    let idx = job
+        .clients
+        .iter()
+        .position(|c| c.name == name)
+        .ok_or_else(|| anyhow!("client '{name}' not in job file"))?;
+    let spec = &job.clients[idx];
+    let drv = fedflare::sfm::tcp::TcpDriver::connect(
+        p.get("connect").unwrap(),
+        job.stream.verify_crc,
+    )?;
+    let driver: Box<dyn fedflare::sfm::Driver> = if spec.bandwidth_bps > 0 {
+        Box::new(fedflare::sfm::throttle::Throttled::new(
+            drv,
+            spec.bandwidth_bps,
+            job.stream.chunk_bytes as u64,
+        ))
+    } else {
+        Box::new(drv)
+    };
+    let messenger = Messenger::new(driver, job.stream.chunk_bytes, (idx + 1) as u32);
+    let rc = RuntimeClient::start(&job.artifacts_dir).ok();
+    let executor = repro::common::build_executor(&job, idx, rc.as_ref())?;
+    let filters = fedflare::filters::build_chain(&job.filters, idx, job.clients.len());
+    let mut rt = ClientRuntime::new(name, messenger, executor, filters);
+    let tasks = rt.run_loop()?;
+    println!("client '{name}': {tasks} tasks completed");
+    Ok(())
+}
+
+fn cmd_list(args: &[String]) -> Result<()> {
+    let p = Args::new("list-artifacts", "show compiled model artifacts")
+        .opt("artifacts-dir", Some("artifacts"), "artifacts directory")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let rc = RuntimeClient::start(p.get("artifacts-dir").unwrap())?;
+    println!("platform: {}", rc.platform()?);
+    for name in rc.available()? {
+        let m = rc.manifest(&name)?;
+        println!(
+            "  {name:<28} kind={:<6} params={:>3} ({:>8.2} MB)  inputs={} outputs={}",
+            m.kind,
+            m.params.len(),
+            m.param_bytes() as f64 / (1 << 20) as f64,
+            m.inputs.len(),
+            m.outputs.len(),
+        );
+    }
+    Ok(())
+}
+
+// ----------------------------------------------------------- fig5 worker
+
+fn cmd_fig5_worker(args: &[String]) -> Result<()> {
+    let Some(role) = args.first() else {
+        bail!("usage: fedflare fig5-worker <server|client> ...");
+    };
+    let rest = &args[1..];
+    match role.as_str() {
+        "server" => {
+            let p = Args::new("fig5-worker server", "internal")
+                .opt("port", None, "port")
+                .opt("keys", Some("64"), "")
+                .opt("key-elems", Some("524288"), "")
+                .opt("rounds", Some("3"), "")
+                .opt("n-clients", Some("2"), "")
+                .opt("chunk-bytes", Some("1048576"), "")
+                .opt("out-dir", Some("results"), "")
+                .parse(rest)
+                .map_err(|e| anyhow!(e))?;
+            repro::fig5::worker_server(
+                p.req("port").map_err(|e| anyhow!(e))?.parse()?,
+                p.get_usize("keys").map_err(|e| anyhow!(e))?,
+                p.get_usize("key-elems").map_err(|e| anyhow!(e))?,
+                p.get_usize("rounds").map_err(|e| anyhow!(e))?,
+                p.get_usize("n-clients").map_err(|e| anyhow!(e))?,
+                p.get_usize("chunk-bytes").map_err(|e| anyhow!(e))?,
+                p.get("out-dir").unwrap(),
+            )
+        }
+        "client" => {
+            let p = Args::new("fig5-worker client", "internal")
+                .opt("connect", None, "server addr")
+                .opt("name", None, "site name")
+                .opt("bandwidth", Some("0"), "bytes/sec (0=unlimited)")
+                .opt("chunk-bytes", Some("1048576"), "")
+                .opt("out-dir", Some("results"), "")
+                .opt("artifacts-dir", Some("artifacts"), "")
+                .parse(rest)
+                .map_err(|e| anyhow!(e))?;
+            repro::fig5::worker_client(
+                p.req("connect").map_err(|e| anyhow!(e))?,
+                p.req("name").map_err(|e| anyhow!(e))?,
+                p.get_u64("bandwidth").map_err(|e| anyhow!(e))?,
+                p.get_usize("chunk-bytes").map_err(|e| anyhow!(e))?,
+                p.get("out-dir").unwrap(),
+                p.get("artifacts-dir").unwrap(),
+            )
+        }
+        other => bail!("unknown fig5-worker role '{other}'"),
+    }
+}

@@ -1,0 +1,236 @@
+//! `FLMessage` — the application-level message exchanged between the FL
+//! server and clients (the paper's "task data" / "task result").
+//!
+//! Wire layout (what the SFM layer chunks and streams):
+//!
+//! ```text
+//! u32 header_len | header JSON (utf-8) | body bytes (TensorDict wire fmt)
+//! ```
+//!
+//! The JSON header carries routing/meta (message kind, task name, round,
+//! client, metrics); the body carries the model payload. Keeping the body
+//! binary means a 128 MB model costs zero JSON overhead.
+
+use crate::tensor::TensorDict;
+use crate::util::bytes::{ByteError, Reader, Writer};
+use crate::util::json::Json;
+
+/// Message kinds of the FL protocol.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Kind {
+    /// Client -> server on connect.
+    Register,
+    /// Server -> client: execute a task (train/eval/embed/...).
+    Task,
+    /// Client -> server: task result.
+    Result,
+    /// Either direction: end of job.
+    Bye,
+}
+
+impl Kind {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            Kind::Register => "register",
+            Kind::Task => "task",
+            Kind::Result => "result",
+            Kind::Bye => "bye",
+        }
+    }
+    pub fn from_str(s: &str) -> Option<Kind> {
+        match s {
+            "register" => Some(Kind::Register),
+            "task" => Some(Kind::Task),
+            "result" => Some(Kind::Result),
+            "bye" => Some(Kind::Bye),
+            _ => None,
+        }
+    }
+}
+
+/// An FL protocol message: typed header + tensor payload.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FlMessage {
+    pub kind: Kind,
+    /// Task name, e.g. "train", "validate", "embed", "stream_test".
+    pub task: String,
+    /// FL round the message belongs to.
+    pub round: usize,
+    /// Originating/target client name ("" for server).
+    pub client: String,
+    /// Free-form metadata (metrics, sample counts, timings...).
+    pub meta: Json,
+    /// Model payload.
+    pub body: TensorDict,
+}
+
+impl FlMessage {
+    pub fn task(task: &str, round: usize, body: TensorDict) -> FlMessage {
+        FlMessage {
+            kind: Kind::Task,
+            task: task.to_string(),
+            round,
+            client: String::new(),
+            meta: Json::obj([]),
+            body,
+        }
+    }
+
+    pub fn result(task: &str, round: usize, client: &str, body: TensorDict) -> FlMessage {
+        FlMessage {
+            kind: Kind::Result,
+            task: task.to_string(),
+            round,
+            client: client.to_string(),
+            meta: Json::obj([]),
+            body,
+        }
+    }
+
+    pub fn register(client: &str) -> FlMessage {
+        FlMessage {
+            kind: Kind::Register,
+            task: String::new(),
+            round: 0,
+            client: client.to_string(),
+            meta: Json::obj([]),
+            body: TensorDict::new(),
+        }
+    }
+
+    pub fn bye() -> FlMessage {
+        FlMessage {
+            kind: Kind::Bye,
+            task: String::new(),
+            round: 0,
+            client: String::new(),
+            meta: Json::obj([]),
+            body: TensorDict::new(),
+        }
+    }
+
+    /// Attach a metadata key (chainable).
+    pub fn with_meta(mut self, key: &str, value: Json) -> FlMessage {
+        if let Json::Obj(map) = &mut self.meta {
+            map.insert(key.to_string(), value);
+        }
+        self
+    }
+
+    /// Read a float metric from meta.
+    pub fn metric(&self, key: &str) -> Option<f64> {
+        self.meta.get(key).as_f64()
+    }
+
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let header = Json::obj([
+            ("kind", Json::str(self.kind.as_str())),
+            ("task", Json::str(self.task.clone())),
+            ("round", Json::num(self.round as f64)),
+            ("client", Json::str(self.client.clone())),
+            ("meta", self.meta.clone()),
+        ])
+        .to_string();
+        let body = self.body.to_bytes();
+        let mut w = Writer::with_capacity(4 + header.len() + body.len());
+        w.str(&header);
+        w.bytes(&body);
+        w.into_vec()
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<FlMessage, MessageError> {
+        let mut r = Reader::new(buf);
+        let header_text = r.str().map_err(MessageError::Bytes)?;
+        let header =
+            Json::parse(&header_text).map_err(|e| MessageError::Header(e.to_string()))?;
+        let kind = header
+            .get("kind")
+            .as_str()
+            .and_then(Kind::from_str)
+            .ok_or_else(|| MessageError::Header("missing/invalid kind".into()))?;
+        let body_bytes = &buf[r.pos()..];
+        let body = TensorDict::from_bytes(body_bytes).map_err(MessageError::Bytes)?;
+        Ok(FlMessage {
+            kind,
+            task: header.get("task").as_str().unwrap_or("").to_string(),
+            round: header.get("round").as_usize().unwrap_or(0),
+            client: header.get("client").as_str().unwrap_or("").to_string(),
+            meta: header.get("meta").clone(),
+            body,
+        })
+    }
+}
+
+/// Message decode error.
+#[derive(Debug, thiserror::Error)]
+pub enum MessageError {
+    #[error("message bytes: {0}")]
+    Bytes(ByteError),
+    #[error("message header: {0}")]
+    Header(String),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+    use crate::util::prop;
+
+    fn msg() -> FlMessage {
+        let mut body = TensorDict::new();
+        body.insert("w", Tensor::f32(vec![2, 2], vec![1., 2., 3., 4.]));
+        FlMessage::result("train", 3, "site-1", body)
+            .with_meta("loss", Json::num(0.25))
+            .with_meta("n_samples", Json::num(600.0))
+    }
+
+    #[test]
+    fn roundtrip() {
+        let m = msg();
+        let m2 = FlMessage::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(m, m2);
+        assert_eq!(m2.metric("loss"), Some(0.25));
+        assert_eq!(m2.round, 3);
+        assert_eq!(m2.kind, Kind::Result);
+    }
+
+    #[test]
+    fn kinds_roundtrip() {
+        for k in [Kind::Register, Kind::Task, Kind::Result, Kind::Bye] {
+            assert_eq!(Kind::from_str(k.as_str()), Some(k));
+        }
+        assert_eq!(Kind::from_str("wat"), None);
+    }
+
+    #[test]
+    fn corrupt_header_rejected() {
+        let mut bytes = msg().to_bytes();
+        bytes[5] = b'}'; // smash the JSON header
+        assert!(FlMessage::from_bytes(&bytes).is_err());
+        assert!(FlMessage::from_bytes(&[0, 0]).is_err());
+    }
+
+    #[test]
+    fn empty_body_ok() {
+        let m = FlMessage::register("c1");
+        let m2 = FlMessage::from_bytes(&m.to_bytes()).unwrap();
+        assert_eq!(m2.client, "c1");
+        assert!(m2.body.is_empty());
+    }
+
+    #[test]
+    fn prop_roundtrip_arbitrary_meta_and_body() {
+        prop::check("flmessage roundtrip", 50, |g| {
+            let mut body = TensorDict::new();
+            for i in 0..g.usize_in(0, 4) {
+                let data = g.f32s(0, 64);
+                body.insert(format!("t{i}"), Tensor::f32(vec![data.len()], data));
+            }
+            let m = FlMessage::task(&g.ident(), g.usize_in(0, 100), body)
+                .with_meta("x", Json::num(g.f64()))
+                .with_meta("s", Json::str(g.ident()));
+            let m2 = FlMessage::from_bytes(&m.to_bytes()).map_err(|e| e.to_string())?;
+            prop::assert_that(m == m2, "roundtrip mismatch")
+        });
+    }
+}

@@ -1,0 +1,172 @@
+//! Experiment metrics: JSONL event log, CSV series writers, and a
+//! paper-style table printer. Every repro driver (`fedflare repro figN`)
+//! writes its series here so figures are regenerable from `results/`.
+
+use std::fs::File;
+use std::io::{BufWriter, Write};
+use std::path::{Path, PathBuf};
+use std::time::Instant;
+
+use anyhow::{Context, Result};
+
+use crate::util::json::Json;
+
+/// Append-only JSONL event sink + CSV writer rooted at a results dir.
+pub struct MetricsSink {
+    dir: PathBuf,
+    events: BufWriter<File>,
+    t0: Instant,
+}
+
+impl MetricsSink {
+    pub fn create(dir: impl AsRef<Path>, job: &str) -> Result<MetricsSink> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(&dir).with_context(|| format!("mkdir {}", dir.display()))?;
+        let path = dir.join(format!("{job}.events.jsonl"));
+        let events = BufWriter::new(File::create(&path)?);
+        Ok(MetricsSink {
+            dir,
+            events,
+            t0: Instant::now(),
+        })
+    }
+
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// Log one event (timestamped since sink creation).
+    pub fn event(&mut self, kind: &str, fields: &[(&str, Json)]) {
+        let mut obj = std::collections::BTreeMap::new();
+        obj.insert(
+            "t_ms".to_string(),
+            Json::num(self.t0.elapsed().as_millis() as f64),
+        );
+        obj.insert("kind".to_string(), Json::str(kind));
+        for (k, v) in fields {
+            obj.insert(k.to_string(), v.clone());
+        }
+        let line = Json::Obj(obj).to_string();
+        let _ = writeln!(self.events, "{line}");
+        let _ = self.events.flush();
+    }
+
+    /// Write a CSV file into the results dir.
+    pub fn csv(&self, name: &str, header: &[&str], rows: &[Vec<String>]) -> Result<PathBuf> {
+        let path = self.dir.join(name);
+        write_csv(&path, header, rows)?;
+        Ok(path)
+    }
+}
+
+/// Standalone CSV writer.
+pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
+    let mut f = BufWriter::new(File::create(path).with_context(|| format!("{}", path.display()))?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+/// Fixed-width table printer (paper-style result tables on stdout).
+pub struct Table {
+    header: Vec<String>,
+    rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(header: &[&str]) -> Table {
+        Table {
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        assert_eq!(cells.len(), self.header.len(), "table row width");
+        self.rows.push(cells);
+    }
+
+    pub fn to_string(&self) -> String {
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (w, c) in widths.iter_mut().zip(row) {
+                *w = (*w).max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            cells
+                .iter()
+                .zip(&widths)
+                .map(|(c, w)| format!("{c:<w$}"))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        let mut out = String::new();
+        out.push_str(&fmt_row(&self.header));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (widths.len() - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.to_string());
+    }
+}
+
+/// Format helper: 3-decimal fixed (paper-style metric cells).
+pub fn f3(x: f64) -> String {
+    format!("{x:.3}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_writes_events_and_csv() {
+        let dir = std::env::temp_dir().join("fedflare_metrics_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut sink = MetricsSink::create(&dir, "job1").unwrap();
+        sink.event("round", &[("round", Json::num(1.0)), ("loss", Json::num(0.5))]);
+        sink.event("round", &[("round", Json::num(2.0))]);
+        let text = std::fs::read_to_string(dir.join("job1.events.jsonl")).unwrap();
+        assert_eq!(text.lines().count(), 2);
+        let first = Json::parse(text.lines().next().unwrap()).unwrap();
+        assert_eq!(first.get("kind").as_str(), Some("round"));
+        assert_eq!(first.get("loss").as_f64(), Some(0.5));
+
+        sink.csv(
+            "series.csv",
+            &["step", "value"],
+            &[vec!["1".into(), "0.5".into()], vec!["2".into(), "0.4".into()]],
+        )
+        .unwrap();
+        let csv = std::fs::read_to_string(dir.join("series.csv")).unwrap();
+        assert!(csv.starts_with("step,value\n1,0.5\n"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn table_aligns() {
+        let mut t = Table::new(&["name", "acc"]);
+        t.row(vec!["BaseModel".into(), f3(0.541)]);
+        t.row(vec!["FedAvg".into(), f3(0.556)]);
+        let s = t.to_string();
+        assert!(s.contains("BaseModel  0.541"));
+        assert!(s.lines().count() == 4);
+    }
+
+    #[test]
+    #[should_panic(expected = "table row width")]
+    fn table_rejects_ragged_rows() {
+        let mut t = Table::new(&["a", "b"]);
+        t.row(vec!["only-one".into()]);
+    }
+}

@@ -1,0 +1,265 @@
+//! Model state: parameters + optimizer moments + step counter, initialized
+//! from the artifact manifest's init specs, with checkpoint save/load.
+//!
+//! Initialization happens on the Rust side (deterministic from a seed) so
+//! no multi-hundred-MB init files have to ship with the artifacts: the
+//! manifest records `normal:<std>` / `zeros` / `ones` per parameter and
+//! [`ModelState::init`] reproduces it with the crate PRNG.
+
+use std::path::Path;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::Manifest;
+use crate::tensor::{Tensor, TensorDict};
+use crate::util::bytes::{Reader, Writer};
+use crate::util::rng::Rng;
+
+const CKPT_MAGIC: u32 = 0x4646_434B; // "FFCK"
+
+/// Full trainable state of one model replica.
+#[derive(Debug, Clone)]
+pub struct ModelState {
+    pub params: TensorDict,
+    /// AdamW first/second moments, covering `trainable` names only.
+    pub opt_m: TensorDict,
+    pub opt_v: TensorDict,
+    /// Optimizer step count (for bias correction).
+    pub step: u64,
+    /// Parameter names with optimizer state (PEFT: adapters only).
+    pub trainable: Vec<String>,
+}
+
+impl ModelState {
+    /// Initialize from a manifest's param specs.
+    pub fn init(manifest: &Manifest, seed: u64) -> Result<ModelState> {
+        let mut rng = Rng::new(seed);
+        let mut params = TensorDict::new();
+        for spec in &manifest.params {
+            let numel: usize = spec.shape.iter().product();
+            let data = if spec.init == "zeros" {
+                vec![0.0f32; numel]
+            } else if spec.init == "ones" {
+                vec![1.0f32; numel]
+            } else if let Some(stdtxt) = spec.init.strip_prefix("normal:") {
+                let std: f32 = stdtxt
+                    .parse()
+                    .map_err(|e| anyhow!("bad init '{}': {e}", spec.init))?;
+                // fork per tensor so init is order-independent
+                let mut trng = rng.fork(hash_name(&spec.name));
+                let mut v = vec![0.0f32; numel];
+                trng.fill_normal(&mut v, 0.0, std);
+                v
+            } else {
+                bail!("unknown init spec '{}' for {}", spec.init, spec.name);
+            };
+            params.insert(spec.name.clone(), Tensor::f32(spec.shape.clone(), data));
+        }
+        let mut opt_m = TensorDict::new();
+        let mut opt_v = TensorDict::new();
+        for name in &manifest.opt_params {
+            let p = params
+                .get(name)
+                .ok_or_else(|| anyhow!("opt param {name} not in params"))?;
+            opt_m.insert(name.clone(), Tensor::zeros(p.shape.clone()));
+            opt_v.insert(name.clone(), Tensor::zeros(p.shape.clone()));
+        }
+        Ok(ModelState {
+            params,
+            opt_m,
+            opt_v,
+            step: 0,
+            trainable: manifest.opt_params.clone(),
+        })
+    }
+
+    /// The AdamW bias-correction operand for the *next* step:
+    /// `[1 - b1^t, 1 - b2^t]` with `t = step + 1`.
+    pub fn bc_tensor(&self) -> Tensor {
+        let t = (self.step + 1) as f64;
+        let bc1 = 1.0 - 0.9f64.powf(t);
+        let bc2 = 1.0 - 0.999f64.powf(t);
+        Tensor::f32(vec![1, 2], vec![bc1 as f32, bc2 as f32])
+    }
+
+    /// The tensors FedAvg communicates: all params, or only the trainable
+    /// subset for PEFT jobs.
+    pub fn communicated(&self, trainable_only: bool) -> TensorDict {
+        if trainable_only && !self.trainable.is_empty() {
+            self.params.subset(&self.trainable)
+        } else {
+            self.params.clone()
+        }
+    }
+
+    /// Apply a (possibly partial) global model received from the server.
+    pub fn apply_global(&mut self, global: &TensorDict) {
+        self.params.merge(global);
+    }
+
+    /// Payload size of one FL round's upload.
+    pub fn comm_bytes(&self, trainable_only: bool) -> usize {
+        self.communicated(trainable_only).byte_size()
+    }
+
+    // -------------------------------------------------------- checkpoints
+
+    /// Binary checkpoint: magic, version, step, params, opt_m, opt_v.
+    pub fn save(&self, path: &Path) -> Result<()> {
+        let mut w = Writer::new();
+        w.u32(CKPT_MAGIC);
+        w.u8(1);
+        w.u64(self.step);
+        w.u32(self.trainable.len() as u32);
+        for t in &self.trainable {
+            w.str(t);
+        }
+        for dict in [&self.params, &self.opt_m, &self.opt_v] {
+            let b = dict.to_bytes();
+            w.blob(&b);
+        }
+        std::fs::write(path, w.into_vec())
+            .with_context(|| format!("write checkpoint {}", path.display()))?;
+        Ok(())
+    }
+
+    pub fn load(path: &Path) -> Result<ModelState> {
+        let buf =
+            std::fs::read(path).with_context(|| format!("read checkpoint {}", path.display()))?;
+        let mut r = Reader::new(&buf);
+        let magic = r.u32().map_err(|e| anyhow!("{e}"))?;
+        if magic != CKPT_MAGIC {
+            bail!("not a fedflare checkpoint (magic {magic:#x})");
+        }
+        let ver = r.u8().map_err(|e| anyhow!("{e}"))?;
+        if ver != 1 {
+            bail!("unsupported checkpoint version {ver}");
+        }
+        let step = r.u64().map_err(|e| anyhow!("{e}"))?;
+        let n = r.u32().map_err(|e| anyhow!("{e}"))? as usize;
+        let mut trainable = Vec::with_capacity(n);
+        for _ in 0..n {
+            trainable.push(r.str().map_err(|e| anyhow!("{e}"))?);
+        }
+        let params = TensorDict::from_bytes(r.blob().map_err(|e| anyhow!("{e}"))?)
+            .map_err(|e| anyhow!("params: {e}"))?;
+        let opt_m = TensorDict::from_bytes(r.blob().map_err(|e| anyhow!("{e}"))?)
+            .map_err(|e| anyhow!("opt_m: {e}"))?;
+        let opt_v = TensorDict::from_bytes(r.blob().map_err(|e| anyhow!("{e}"))?)
+            .map_err(|e| anyhow!("opt_v: {e}"))?;
+        r.expect_end().map_err(|e| anyhow!("{e}"))?;
+        Ok(ModelState {
+            params,
+            opt_m,
+            opt_v,
+            step,
+            trainable,
+        })
+    }
+}
+
+fn hash_name(name: &str) -> u64 {
+    // FNV-1a
+    let mut h = 0xcbf2_9ce4_8422_2325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Manifest;
+
+    fn toy_manifest() -> Manifest {
+        Manifest::parse(
+            r#"{
+          "artifact": "toy",
+          "hlo": "toy.hlo.txt",
+          "kind": "train",
+          "params": [
+            {"name": "w", "shape": [4, 4], "dtype": "f32", "init": "normal:0.1"},
+            {"name": "b", "shape": [4], "dtype": "f32", "init": "zeros"},
+            {"name": "s", "shape": [4], "dtype": "f32", "init": "ones"}
+          ],
+          "opt_params": ["w", "b", "s"],
+          "inputs": [], "outputs": [], "meta": {}
+        }"#,
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn init_respects_specs_and_seed() {
+        let m = toy_manifest();
+        let s1 = ModelState::init(&m, 42).unwrap();
+        let s2 = ModelState::init(&m, 42).unwrap();
+        let s3 = ModelState::init(&m, 43).unwrap();
+        assert_eq!(s1.params, s2.params);
+        assert!(s1.params.max_abs_diff(&s3.params) > 0.0);
+        assert_eq!(s1.params.get("b").unwrap().as_f32().unwrap(), &[0.0; 4]);
+        assert_eq!(s1.params.get("s").unwrap().as_f32().unwrap(), &[1.0; 4]);
+        let w = s1.params.get("w").unwrap().as_f32().unwrap();
+        let std = (w.iter().map(|x| (x * x) as f64).sum::<f64>() / 16.0).sqrt();
+        assert!(std > 0.03 && std < 0.25, "std={std}");
+        assert!(s1.opt_m.same_schema(&s1.params));
+        assert_eq!(s1.step, 0);
+    }
+
+    #[test]
+    fn bc_tensor_tracks_step() {
+        let m = toy_manifest();
+        let mut s = ModelState::init(&m, 1).unwrap();
+        let bc0 = s.bc_tensor();
+        assert!((bc0.as_f32().unwrap()[0] - 0.1).abs() < 1e-6);
+        s.step = 99;
+        let bc = s.bc_tensor().as_f32().unwrap().to_vec();
+        assert!(bc[0] > 0.99 && bc[1] < 0.1);
+    }
+
+    #[test]
+    fn communicated_respects_peft_subset() {
+        let mut m = toy_manifest();
+        m.opt_params = vec!["b".to_string()];
+        let s = ModelState::init(&m, 1).unwrap();
+        assert_eq!(s.communicated(true).len(), 1);
+        assert_eq!(s.communicated(false).len(), 3);
+        assert!(s.comm_bytes(true) < s.comm_bytes(false));
+    }
+
+    #[test]
+    fn apply_global_merges_partial() {
+        let m = toy_manifest();
+        let mut s = ModelState::init(&m, 1).unwrap();
+        let mut update = TensorDict::new();
+        update.insert("b", Tensor::f32(vec![4], vec![9.0; 4]));
+        s.apply_global(&update);
+        assert_eq!(s.params.get("b").unwrap().as_f32().unwrap(), &[9.0; 4]);
+        // others untouched
+        assert_eq!(s.params.get("s").unwrap().as_f32().unwrap(), &[1.0; 4]);
+    }
+
+    #[test]
+    fn checkpoint_roundtrip() {
+        let m = toy_manifest();
+        let mut s = ModelState::init(&m, 7).unwrap();
+        s.step = 123;
+        let path = std::env::temp_dir().join("fedflare_ckpt_test.bin");
+        s.save(&path).unwrap();
+        let loaded = ModelState::load(&path).unwrap();
+        assert_eq!(loaded.step, 123);
+        assert_eq!(loaded.params, s.params);
+        assert_eq!(loaded.trainable, s.trainable);
+        let _ = std::fs::remove_file(&path);
+    }
+
+    #[test]
+    fn checkpoint_rejects_garbage() {
+        let path = std::env::temp_dir().join("fedflare_ckpt_garbage.bin");
+        std::fs::write(&path, b"nonsense").unwrap();
+        assert!(ModelState::load(&path).is_err());
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -1,0 +1,247 @@
+//! Shared plumbing for the repro drivers: data partitioning into client
+//! sources, local (non-federated) training loops, and executor factories
+//! usable by `fedflare run` / `server` / `client`.
+
+use anyhow::{anyhow, Result};
+
+use crate::config::JobConfig;
+use crate::data::{self, Sample};
+use crate::executor::{Executor, StreamTestExecutor, TokenSource, TrainExecutor};
+use crate::runtime::{RuntimeClient, Trainer};
+use crate::tensor::TensorDict;
+
+/// Default results directory.
+pub const RESULTS_DIR: &str = "results";
+
+/// Partition samples among clients with Dirichlet(alpha) over labels.
+pub fn partition_samples(
+    samples: &[Sample],
+    n_clients: usize,
+    alpha: f64,
+    seed: u64,
+) -> Vec<Vec<Sample>> {
+    let labels: Vec<i32> = samples.iter().map(|s| s.label).collect();
+    let mut rng = crate::util::rng::Rng::new(seed);
+    data::dirichlet_partition(&labels, n_clients, alpha, &mut rng)
+        .into_iter()
+        .map(|idx| idx.into_iter().map(|i| samples[i].clone()).collect())
+        .collect()
+}
+
+/// A local (centralized, non-federated) training run: train on `train`,
+/// evaluate on `eval` every `eval_every` steps. Returns
+/// (step, val_loss, val_acc) series. This is the paper's "Local"/"Combined"
+/// baseline loop.
+#[allow(clippy::too_many_arguments)]
+pub fn local_train_curve(
+    rc: &RuntimeClient,
+    family: &str,
+    train: Vec<Sample>,
+    eval: Vec<Sample>,
+    cls: bool,
+    steps: usize,
+    eval_every: usize,
+    eval_batches: usize,
+    seed: u64,
+    base: Option<&TensorDict>,
+) -> Result<Vec<(usize, f64, f64)>> {
+    let mut trainer = Trainer::new(rc.clone(), family, seed)?;
+    if let Some(b) = base {
+        trainer.state.params.merge(b);
+    }
+    let m = trainer.train_manifest()?;
+    let (tb, seq) = (m.batch(), m.seq());
+    let eb = trainer.manifest(&format!("{family}_eval"))?.batch();
+    let mut src = TokenSource::new(train, eval, seq, cls, seed ^ 0xB00);
+    let mut series = Vec::new();
+    use crate::executor::BatchSource;
+    let evalf = |trainer: &mut Trainer, src: &mut TokenSource, step: usize| -> Result<(usize, f64, f64)> {
+        let mut loss = 0.0;
+        let mut acc = 0.0;
+        for _ in 0..eval_batches {
+            let b = src.eval_batch(eb);
+            let sm = trainer.eval_batch(&b)?;
+            loss += sm.loss as f64;
+            acc += sm.acc as f64;
+        }
+        Ok((step, loss / eval_batches as f64, acc / eval_batches as f64))
+    };
+    series.push(evalf(&mut trainer, &mut src, 0)?);
+    for step in 1..=steps {
+        let b = src.train_batch(tb);
+        trainer.train_step(&b)?;
+        if step % eval_every == 0 || step == steps {
+            series.push(evalf(&mut trainer, &mut src, step)?);
+        }
+    }
+    Ok(series)
+}
+
+/// Final params of a local training run (for Table 1 checkpoints).
+pub fn local_train_params(
+    rc: &RuntimeClient,
+    family: &str,
+    train: Vec<Sample>,
+    steps: usize,
+    seed: u64,
+) -> Result<TensorDict> {
+    let mut trainer = Trainer::new(rc.clone(), family, seed)?;
+    let m = trainer.train_manifest()?;
+    let (tb, seq) = (m.batch(), m.seq());
+    let mut src = TokenSource::new(train.clone(), train, seq, false, seed ^ 0xB01);
+    use crate::executor::BatchSource;
+    for _ in 0..steps {
+        let b = src.train_batch(tb);
+        trainer.train_step(&b)?;
+    }
+    Ok(trainer.state.params.clone())
+}
+
+/// Build a TrainExecutor for a token-data client.
+#[allow(clippy::too_many_arguments)]
+pub fn token_train_executor(
+    rc: &RuntimeClient,
+    family: &str,
+    train: Vec<Sample>,
+    eval: Vec<Sample>,
+    cls: bool,
+    job: &JobConfig,
+    client_idx: usize,
+) -> Result<Box<dyn Executor>> {
+    token_train_executor_from(rc, family, train, eval, cls, job, client_idx, None)
+}
+
+/// Like [`token_train_executor`], starting from pretrained base params.
+#[allow(clippy::too_many_arguments)]
+pub fn token_train_executor_from(
+    rc: &RuntimeClient,
+    family: &str,
+    train: Vec<Sample>,
+    eval: Vec<Sample>,
+    cls: bool,
+    job: &JobConfig,
+    client_idx: usize,
+    base: Option<&TensorDict>,
+) -> Result<Box<dyn Executor>> {
+    let mut trainer = Trainer::new(rc.clone(), family, job.seed ^ (client_idx as u64 + 1))?;
+    if let Some(b) = base {
+        trainer.state.params.merge(b);
+    }
+    let seq = trainer.train_manifest()?.seq();
+    let src = TokenSource::new(train, eval, seq, cls, job.seed ^ 0xC11E ^ client_idx as u64);
+    Ok(Box::new(TrainExecutor::new(
+        trainer,
+        Box::new(src),
+        job.train.local_steps,
+        job.train.eval_batches,
+        job.trainable_only,
+    )?))
+}
+
+/// Generic executor factory for `fedflare run/server/client`: maps the
+/// job's artifact family to a data setup.
+///
+/// * `stream_test` — Fig-5 add-delta workload (no model data needed)
+/// * `gpt_small_lora` — sentiment classification, Dirichlet(alpha=1.0)
+/// * `gpt_nano` / `gpt_small` / `gpt_100m` — instruction SFT, one skill
+///   per client (cycled)
+pub fn build_executor(
+    job: &JobConfig,
+    client_idx: usize,
+    rc: Option<&RuntimeClient>,
+) -> Result<Box<dyn Executor>> {
+    let family = job.artifact.as_str();
+    match family {
+        "stream_test" => {
+            let trainer = rc
+                .map(|rc| Trainer::eval_only(rc.clone(), "addnum", "addnum", 0))
+                .transpose()
+                .unwrap_or(None);
+            Ok(Box::new(StreamTestExecutor::new(trainer, 0.01)))
+        }
+        "gpt_small_lora" => {
+            let rc = rc.ok_or_else(|| anyhow!("artifact {family} needs a runtime"))?;
+            let (train_all, eval) = crate::data::sentiment::standard_split(job.seed);
+            let parts = partition_samples(&train_all, job.clients.len(), 1.0, job.seed);
+            let part = job
+                .clients
+                .get(client_idx)
+                .map(|c| c.partition)
+                .unwrap_or(client_idx);
+            let train = parts
+                .get(part)
+                .cloned()
+                .ok_or_else(|| anyhow!("partition {part} out of range"))?;
+            token_train_executor(rc, family, train, eval, true, job, client_idx)
+        }
+        "gpt_nano" | "gpt_small" | "gpt_100m" => {
+            let rc = rc.ok_or_else(|| anyhow!("artifact {family} needs a runtime"))?;
+            let m = rc.manifest(&format!("{family}_train"))?;
+            let vocab = m.meta.get("vocab").as_usize().unwrap_or(512);
+            let gen = crate::data::instruct::InstructGen::new(vocab, m.seq());
+            let skills = crate::data::instruct::Skill::ALL;
+            let skill = skills[client_idx % skills.len()];
+            let train = gen.dataset(skill, 600, job.seed);
+            let eval = gen.combined(60, job.seed ^ 0xE7A1);
+            token_train_executor(rc, family, train, eval, false, job, client_idx)
+        }
+        other => Err(anyhow!(
+            "no executor mapping for artifact '{other}' \
+             (supported: stream_test, gpt_small_lora, gpt_nano, gpt_small, gpt_100m)"
+        )),
+    }
+}
+
+/// Initial global model for a job (what the server seeds FedAvg with).
+pub fn initial_model(job: &JobConfig, rc: Option<&RuntimeClient>) -> Result<TensorDict> {
+    if job.artifact == "stream_test" {
+        // Fig-5 model: 64 keys x 2 MB by default
+        return Ok(StreamTestExecutor::build_model(64, 524_288, 1.0));
+    }
+    let rc = rc.ok_or_else(|| anyhow!("artifact {} needs a runtime", job.artifact))?;
+    let m = rc.manifest(&format!("{}_train", job.artifact))?;
+    let state = crate::model::ModelState::init(&m, job.seed)?;
+    Ok(state.communicated(job.trainable_only))
+}
+
+/// Mean and sample standard deviation.
+pub fn mean_std(xs: &[f64]) -> (f64, f64) {
+    let n = xs.len().max(1) as f64;
+    let mean = xs.iter().sum::<f64>() / n;
+    let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / (n - 1.0).max(1.0);
+    (mean, var.sqrt())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn partition_covers_everything() {
+        let (train, _) = crate::data::sentiment::standard_split(1);
+        let parts = partition_samples(&train, 3, 0.5, 2);
+        assert_eq!(parts.iter().map(|p| p.len()).sum::<usize>(), train.len());
+    }
+
+    #[test]
+    fn mean_std_basics() {
+        let (m, s) = mean_std(&[1.0, 2.0, 3.0]);
+        assert!((m - 2.0).abs() < 1e-12);
+        assert!((s - 1.0).abs() < 1e-12);
+        let (m1, s1) = mean_std(&[5.0]);
+        assert_eq!(m1, 5.0);
+        assert_eq!(s1, 0.0);
+    }
+
+    #[test]
+    fn build_executor_stream_test_without_runtime() {
+        let job = JobConfig::named("t", "stream_test");
+        assert!(build_executor(&job, 0, None).is_ok());
+    }
+
+    #[test]
+    fn build_executor_unknown_artifact_errors() {
+        let job = JobConfig::named("t", "mystery");
+        assert!(build_executor(&job, 0, None).is_err());
+    }
+}

@@ -1,0 +1,224 @@
+//! Fig 8 — "SFT validation loss curve".
+//!
+//! Paper setup (§4.3): full supervised fine-tuning of a 1.3 B GPT under
+//! five settings — local-only on each of Alpaca / Dolly / OASST1, the
+//! combined dataset, and FedAvg with one dataset per client (5 rounds).
+//! All curves are validation loss; the FL curve shows "steps" at round
+//! boundaries (global aggregation).
+//!
+//! Repro: `gpt_small` (or `gpt_100m` via opts) full SFT over the three
+//! skill corpora; validation = a held-out *combined* set, shared by every
+//! setting. The final params of each setting are checkpointed for the
+//! Table-1 zero-shot evaluation.
+
+use anyhow::Result;
+
+use super::common::{self, RESULTS_DIR};
+use crate::config::JobConfig;
+use crate::coordinator::FedAvg;
+use crate::data::instruct::{InstructGen, Skill};
+use crate::metrics::{write_csv, Table};
+use crate::model::ModelState;
+use crate::runtime::RuntimeClient;
+use crate::sim::{self, DriverKind};
+use crate::tensor::TensorDict;
+
+/// Fig-8 knobs.
+#[derive(Debug, Clone)]
+pub struct Fig8Opts {
+    /// Artifact family: `gpt_small` (default) or `gpt_100m`.
+    pub family: String,
+    pub rounds: usize,
+    pub local_steps: usize,
+    pub eval_batches: usize,
+    pub train_per_skill: usize,
+    pub seed: u64,
+    pub out_dir: String,
+    pub artifacts_dir: String,
+}
+
+impl Default for Fig8Opts {
+    fn default() -> Fig8Opts {
+        Fig8Opts {
+            family: "gpt_small".into(),
+            rounds: 5,
+            local_steps: 30,
+            eval_batches: 4,
+            train_per_skill: 600,
+            seed: 23,
+            out_dir: RESULTS_DIR.into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+pub const SETTINGS: [&str; 6] = [
+    "base",
+    "alpaca-like",
+    "dolly-like",
+    "oasst-like",
+    "combined",
+    "fedavg",
+];
+
+/// Checkpoint path for one setting.
+pub fn ckpt_path(out_dir: &str, family: &str, setting: &str) -> String {
+    format!("{out_dir}/fig8_{family}_ckpt_{setting}.bin")
+}
+
+pub fn run(opts: &Fig8Opts) -> Result<()> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let rc = RuntimeClient::start(&opts.artifacts_dir)?;
+    let family = opts.family.as_str();
+    let m = rc.manifest(&format!("{family}_train"))?;
+    let vocab = m.meta.get("vocab").as_usize().unwrap_or(512);
+    let gen = InstructGen::new(vocab, m.seq());
+
+    // shared validation set: combined held-out
+    let val = gen.combined(50, opts.seed ^ 0xEA1);
+    let datasets: Vec<(Skill, Vec<crate::data::Sample>)> = Skill::ALL
+        .iter()
+        .map(|&s| (s, gen.dataset(s, opts.train_per_skill, opts.seed)))
+        .collect();
+    let total_steps = opts.rounds * opts.local_steps;
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut finals: Vec<(String, f64)> = Vec::new();
+
+    // --- base model checkpoint (before SFT)
+    let base = ModelState::init(&m, opts.seed)?;
+    save_ckpt(&opts.out_dir, family, "base", &base.params)?;
+
+    // --- local-only per dataset
+    for (skill, train) in &datasets {
+        let name = setting_name(*skill);
+        println!("fig8: local {name} ({} samples)", train.len());
+        let series = common::local_train_curve(
+            &rc,
+            family,
+            train.clone(),
+            val.clone(),
+            false,
+            total_steps,
+            opts.local_steps / 2,
+            opts.eval_batches,
+            opts.seed,
+            None,
+        )?;
+        for (step, loss, _acc) in &series {
+            rows.push(vec![name.into(), step.to_string(), format!("{loss:.4}")]);
+        }
+        finals.push((name.into(), series.last().unwrap().1));
+        let params =
+            common::local_train_params(&rc, family, train.clone(), total_steps, opts.seed)?;
+        save_ckpt(&opts.out_dir, family, name, &params)?;
+    }
+
+    // --- combined (centralized)
+    {
+        println!("fig8: combined");
+        let combined = gen.combined(opts.train_per_skill, opts.seed);
+        let series = common::local_train_curve(
+            &rc,
+            family,
+            combined.clone(),
+            val.clone(),
+            false,
+            total_steps,
+            opts.local_steps / 2,
+            opts.eval_batches,
+            opts.seed,
+            None,
+        )?;
+        for (step, loss, _acc) in &series {
+            rows.push(vec![
+                "combined".into(),
+                step.to_string(),
+                format!("{loss:.4}"),
+            ]);
+        }
+        finals.push(("combined".into(), series.last().unwrap().1));
+        let params = common::local_train_params(&rc, family, combined, total_steps, opts.seed)?;
+        save_ckpt(&opts.out_dir, family, "combined", &params)?;
+    }
+
+    // --- FedAvg (one skill per client)
+    {
+        println!("fig8: fedavg ({} rounds)", opts.rounds);
+        let mut job = JobConfig::named(&format!("fig8_{family}"), family);
+        job.rounds = opts.rounds;
+        job.min_clients = 3;
+        job.train.local_steps = opts.local_steps;
+        job.train.eval_batches = opts.eval_batches;
+        job.seed = opts.seed;
+        job.clients = (0..3)
+            .map(|i| crate::config::ClientSpec {
+                name: format!("site-{}", i + 1),
+                bandwidth_bps: 0,
+                partition: i,
+            })
+            .collect();
+        let initial = common::initial_model(&job, Some(&rc))?;
+        println!(
+            "  full-model payload: {:.1} MB/round/client",
+            initial.byte_size() as f64 / (1 << 20) as f64
+        );
+        let mut ctl = FedAvg::new(initial, job.rounds, job.min_clients);
+        let rc2 = rc.clone();
+        let val2 = val.clone();
+        let job2 = job.clone();
+        let data2: Vec<Vec<crate::data::Sample>> =
+            datasets.iter().map(|(_, d)| d.clone()).collect();
+        let mut factory: Box<sim::ExecutorFactory> = Box::new(move |i, _spec| {
+            common::token_train_executor(
+                &rc2,
+                family,
+                data2[i].clone(),
+                val2.clone(),
+                false,
+                &job2,
+                i,
+            )
+        });
+        sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut factory, &opts.out_dir)?;
+        // FL "step curve": the global model's val loss at round boundaries
+        for rmet in &ctl.history {
+            rows.push(vec![
+                "fedavg".into(),
+                (rmet.round * opts.local_steps).to_string(),
+                format!("{:.4}", rmet.val_loss),
+            ]);
+        }
+        if let Some(last) = ctl.history.last() {
+            finals.push(("fedavg".into(), last.val_loss));
+        }
+        save_ckpt(&opts.out_dir, family, "fedavg", &ctl.model)?;
+    }
+
+    write_csv(
+        std::path::Path::new(&format!("{}/fig8_{family}_sft.csv", opts.out_dir)),
+        &["setting", "step", "val_loss"],
+        &rows,
+    )?;
+
+    let mut t = Table::new(&["setting", "final val loss (combined val set)"]);
+    for (name, loss) in &finals {
+        t.row(vec![name.clone(), format!("{loss:.4}")]);
+    }
+    println!("\nFig 8 summary:");
+    t.print();
+    println!("series: {}/fig8_{family}_sft.csv", opts.out_dir);
+    Ok(())
+}
+
+fn setting_name(skill: Skill) -> &'static str {
+    match skill {
+        Skill::Increment => "alpaca-like",
+        Skill::Repeat => "dolly-like",
+        Skill::Mirror => "oasst-like",
+    }
+}
+
+fn save_ckpt(out_dir: &str, family: &str, setting: &str, params: &TensorDict) -> Result<()> {
+    std::fs::write(ckpt_path(out_dir, family, setting), params.to_bytes())?;
+    Ok(())
+}

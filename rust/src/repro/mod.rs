@@ -1,0 +1,21 @@
+//! Experiment reproduction drivers — one per table/figure in the paper's
+//! evaluation section (§4). Each driver regenerates its figure's data as
+//! CSV under `results/` and prints the paper-style summary, from fixed
+//! seeds. See EXPERIMENTS.md for paper-vs-measured.
+//!
+//! | Driver | Paper artifact |
+//! |--------|----------------|
+//! | [`fig5::run`]   | Fig 5 — memory during 128 GB-class streaming (scaled) |
+//! | [`fig6::run`]   | Fig 6 — Dirichlet partition heterogeneity |
+//! | [`fig7::run`]   | Fig 7 — federated PEFT vs local accuracy |
+//! | [`fig8::run`]   | Fig 8 — federated SFT validation-loss curves |
+//! | [`table1::run`] | Table 1 — zero-shot MC benchmarks |
+//! | [`fig9::run`]   | Fig 9 — protein subcellular location, MLP ladder |
+
+pub mod common;
+pub mod fig5;
+pub mod fig6;
+pub mod fig7;
+pub mod fig8;
+pub mod fig9;
+pub mod table1;

@@ -1,0 +1,191 @@
+//! Table 1 — "Model performance on three benchmark tasks: HellaSwag (H),
+//! PIQA (P), and WinoGrande (W)".
+//!
+//! Paper setup (§4.3): zero-shot MC evaluation of every Fig-8 checkpoint
+//! (BaseModel, the three single-dataset SFT models, Combined, FedAvg)
+//! using lm-eval-harness scoring: unnormalized accuracy (argmax of summed
+//! continuation log-prob) and length-normalized accuracy. The paper's
+//! headline: FedAvg attains the best mean.
+//!
+//! Repro: the three skill suites from [`crate::data::evalsuite`], scored
+//! through the `<family>_score` artifact (sum log p + continuation token
+//! count per row). H and P report acc + acc_norm; W (like the paper)
+//! reports acc only.
+
+use anyhow::{Context, Result};
+
+use super::common::RESULTS_DIR;
+use super::fig8;
+use crate::data::evalsuite::{standard_suites, McScorer, Suite};
+use crate::metrics::{f3, write_csv, Table};
+use crate::runtime::{RuntimeClient, Trainer};
+use crate::tensor::{Tensor, TensorDict};
+
+/// Table-1 knobs.
+#[derive(Debug, Clone)]
+pub struct Table1Opts {
+    pub family: String,
+    pub items_per_suite: usize,
+    pub seed: u64,
+    pub out_dir: String,
+    pub artifacts_dir: String,
+}
+
+impl Default for Table1Opts {
+    fn default() -> Table1Opts {
+        Table1Opts {
+            family: "gpt_small".into(),
+            items_per_suite: 60,
+            seed: 29,
+            out_dir: RESULTS_DIR.into(),
+            artifacts_dir: "artifacts".into(),
+        }
+    }
+}
+
+/// Row of the final table.
+#[derive(Debug, Clone)]
+pub struct ModelScores {
+    pub model: String,
+    /// Per suite: (acc, acc_norm).
+    pub suites: Vec<(f64, f64)>,
+    pub mean: f64,
+}
+
+pub fn run(opts: &Table1Opts) -> Result<Vec<ModelScores>> {
+    std::fs::create_dir_all(&opts.out_dir)?;
+    let rc = RuntimeClient::start(&opts.artifacts_dir)?;
+    let family = opts.family.as_str();
+    let score_art = format!("{family}_score");
+    let mut trainer = Trainer::eval_only(rc.clone(), family, &score_art, opts.seed)?;
+    let m = trainer.manifest(&score_art)?;
+    let vocab = m.meta.get("vocab").as_usize().unwrap_or(512);
+    let suites = standard_suites(vocab, m.seq(), opts.items_per_suite, opts.seed);
+
+    let mut out = Vec::new();
+    let mut rows = Vec::new();
+    for setting in fig8::SETTINGS {
+        let path = fig8::ckpt_path(&opts.out_dir, family, setting);
+        let bytes = std::fs::read(&path).with_context(|| {
+            format!("missing checkpoint {path} — run `fedflare repro fig8` first")
+        })?;
+        let params = TensorDict::from_bytes(&bytes)
+            .map_err(|e| anyhow::anyhow!("checkpoint {path}: {e}"))?;
+        trainer.state.params = params;
+        let model_name = pretty(setting);
+        let mut suite_scores = Vec::new();
+        for suite in &suites {
+            let sc = score_suite(&mut trainer, &score_art, suite)?;
+            suite_scores.push((sc.acc(), sc.acc_norm()));
+        }
+        // paper's mean: H acc, H acc_norm, P acc, P acc_norm, W acc
+        let mean = (suite_scores[0].0
+            + suite_scores[0].1
+            + suite_scores[1].0
+            + suite_scores[1].1
+            + suite_scores[2].0)
+            / 5.0;
+        println!(
+            "table1: {model_name:<12} H={:.3}/{:.3} P={:.3}/{:.3} W={:.3}  mean={mean:.3}",
+            suite_scores[0].0,
+            suite_scores[0].1,
+            suite_scores[1].0,
+            suite_scores[1].1,
+            suite_scores[2].0
+        );
+        rows.push(vec![
+            model_name.to_string(),
+            f3(suite_scores[0].0),
+            f3(suite_scores[0].1),
+            f3(suite_scores[1].0),
+            f3(suite_scores[1].1),
+            f3(suite_scores[2].0),
+            f3(mean),
+        ]);
+        out.push(ModelScores {
+            model: model_name.to_string(),
+            suites: suite_scores,
+            mean,
+        });
+    }
+
+    let header = ["", "H_acc", "H_accn", "P_acc", "P_accn", "W_acc", "Mean"];
+    let mut t = Table::new(&header);
+    for r in &rows {
+        t.row(r.clone());
+    }
+    println!("\nTable 1 (zero-shot MC benchmarks):");
+    t.print();
+    write_csv(
+        std::path::Path::new(&format!("{}/table1_{family}.csv", opts.out_dir)),
+        &header,
+        &rows,
+    )?;
+    println!("csv: {}/table1_{family}.csv", opts.out_dir);
+    Ok(out)
+}
+
+fn pretty(setting: &str) -> &str {
+    match setting {
+        "base" => "BaseModel",
+        "alpaca-like" => "Alpaca*",
+        "dolly-like" => "Dolly*",
+        "oasst-like" => "Oasst1*",
+        "combined" => "Combined",
+        "fedavg" => "FedAvg",
+        s => s,
+    }
+}
+
+/// Score one suite with the current trainer params.
+pub fn score_suite(trainer: &mut Trainer, score_art: &str, suite: &Suite) -> Result<McScorer> {
+    let m = trainer.manifest(score_art)?;
+    let (batch, seq) = (m.batch(), m.seq());
+    // flatten (item, choice) pairs into rows
+    struct Row {
+        tokens: Vec<i32>,
+        mask: Vec<f32>,
+    }
+    let mut rowdefs = Vec::new();
+    for item in &suite.items {
+        for choice in &item.choices {
+            let mut tokens = item.context.clone();
+            tokens.extend_from_slice(choice);
+            let mut mask = vec![0.0f32; seq];
+            for i in item.context.len()..tokens.len().min(seq) {
+                mask[i] = 1.0;
+            }
+            rowdefs.push(Row {
+                tokens: crate::data::right_pad(&tokens, seq),
+                mask,
+            });
+        }
+    }
+    // batch through the score artifact
+    let mut scores: Vec<(f64, f64)> = Vec::with_capacity(rowdefs.len());
+    for chunk in rowdefs.chunks(batch) {
+        let mut toks = Vec::with_capacity(batch * seq);
+        let mut masks = Vec::with_capacity(batch * seq);
+        for i in 0..batch {
+            let r = chunk.get(i).unwrap_or(&chunk[0]); // pad by repetition
+            toks.extend_from_slice(&r.tokens);
+            masks.extend_from_slice(&r.mask);
+        }
+        let mut b = TensorDict::new();
+        b.insert("tokens", Tensor::i32(vec![batch, seq], toks));
+        b.insert("cont_mask", Tensor::f32(vec![batch, seq], masks));
+        let out = trainer.run_artifact(score_art, &b)?;
+        let sum_logp = out.get("sum_logp").unwrap().as_f32().unwrap();
+        let n_cont = out.get("n_cont").unwrap().as_f32().unwrap();
+        for i in 0..chunk.len() {
+            scores.push((sum_logp[i] as f64, n_cont[i] as f64));
+        }
+    }
+    // fold back into items
+    let mut sc = McScorer::default();
+    for (i, item) in suite.items.iter().enumerate() {
+        let s = &scores[i * 4..(i + 1) * 4];
+        sc.add_item(s, item.gold);
+    }
+    Ok(sc)
+}

@@ -1,0 +1,229 @@
+//! Artifact manifest schema — the contract between `python/compile/aot.py`
+//! and the Rust runtime. Input/output order in the manifest is the
+//! positional order of HLO parameters / tuple elements.
+
+use std::path::Path;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::DType;
+use crate::util::json::Json;
+
+/// One input/output slot.
+#[derive(Debug, Clone, PartialEq)]
+pub struct IoSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+/// One model parameter (with its init spec for Rust-side initialization).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ParamSpec {
+    pub name: String,
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+    /// `"zeros" | "ones" | "normal:<std>"` — mirrored from
+    /// `model.param_specs` so both sides agree on initialization.
+    pub init: String,
+}
+
+/// Parsed `artifacts/<name>.json`.
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub artifact: String,
+    pub hlo: String,
+    /// `"train" | "eval" | "score" | "embed" | "addnum"`.
+    pub kind: String,
+    /// Model parameters in input order (sorted by name).
+    pub params: Vec<ParamSpec>,
+    /// Names of params with optimizer state (the *trainable* subset — for
+    /// PEFT this is just the adapters).
+    pub opt_params: Vec<String>,
+    /// Full positional input list (params, then m.*, v.*, bc, then data).
+    pub inputs: Vec<IoSpec>,
+    /// Positional output list.
+    pub outputs: Vec<IoSpec>,
+    /// Task metadata (vocab, seq, pad, label tokens, lr, batch, ...).
+    pub meta: Json,
+}
+
+fn io_spec(j: &Json) -> Result<IoSpec> {
+    Ok(IoSpec {
+        name: j
+            .get("name")
+            .as_str()
+            .ok_or_else(|| anyhow!("io spec missing name"))?
+            .to_string(),
+        shape: j
+            .get("shape")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|d| d.as_usize().ok_or_else(|| anyhow!("bad dim")))
+            .collect::<Result<_>>()?,
+        dtype: j
+            .get("dtype")
+            .as_str()
+            .and_then(DType::from_str)
+            .unwrap_or(DType::F32),
+    })
+}
+
+impl Manifest {
+    pub fn parse(text: &str) -> Result<Manifest> {
+        let j = Json::parse(text).map_err(|e| anyhow!("manifest json: {e}"))?;
+        let artifact = j
+            .get("artifact")
+            .as_str()
+            .ok_or_else(|| anyhow!("manifest missing artifact"))?
+            .to_string();
+        let params = j
+            .get("params")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(|p| {
+                let io = io_spec(p)?;
+                Ok(ParamSpec {
+                    name: io.name,
+                    shape: io.shape,
+                    dtype: io.dtype,
+                    init: p.get("init").as_str().unwrap_or("zeros").to_string(),
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let opt_params = j
+            .get("opt_params")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|s| s.as_str().map(String::from))
+            .collect();
+        let inputs = j
+            .get("inputs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(io_spec)
+            .collect::<Result<Vec<_>>>()?;
+        let outputs = j
+            .get("outputs")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .map(io_spec)
+            .collect::<Result<Vec<_>>>()?;
+        Ok(Manifest {
+            artifact,
+            hlo: j
+                .get("hlo")
+                .as_str()
+                .ok_or_else(|| anyhow!("manifest missing hlo"))?
+                .to_string(),
+            kind: j.get("kind").as_str().unwrap_or("").to_string(),
+            params,
+            opt_params,
+            inputs,
+            outputs,
+            meta: j.get("meta").clone(),
+        })
+    }
+
+    pub fn load(dir: &Path, name: &str) -> Result<Manifest> {
+        let path = dir.join(format!("{name}.json"));
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("read {} (run `make artifacts`)", path.display()))?;
+        Manifest::parse(&text)
+    }
+
+    /// Names of the data inputs (inputs that are not params/opt/bc).
+    pub fn data_input_names(&self) -> Vec<&str> {
+        let param_count = self.params.len();
+        let opt_count = self.opt_params.len();
+        let skip = if self.kind == "train" {
+            param_count + 2 * opt_count + 1 // + bc
+        } else {
+            param_count
+        };
+        self.inputs.iter().skip(skip).map(|s| s.name.as_str()).collect()
+    }
+
+    /// Batch size of the task's data inputs (from meta).
+    pub fn batch(&self) -> usize {
+        self.meta.get("batch").as_usize().unwrap_or(1)
+    }
+
+    /// Sequence length (LM artifacts).
+    pub fn seq(&self) -> usize {
+        self.meta.get("seq").as_usize().unwrap_or(0)
+    }
+
+    /// Model parameter byte size (f32).
+    pub fn param_bytes(&self) -> usize {
+        self.params
+            .iter()
+            .map(|p| 4 * p.shape.iter().product::<usize>())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifact": "toy_train",
+      "hlo": "toy_train.hlo.txt",
+      "kind": "train",
+      "params": [
+        {"name": "a", "shape": [2, 3], "dtype": "f32", "init": "normal:0.02"},
+        {"name": "b", "shape": [3], "dtype": "f32", "init": "zeros"}
+      ],
+      "opt_params": ["a", "b"],
+      "inputs": [
+        {"name": "a", "shape": [2, 3], "dtype": "f32"},
+        {"name": "b", "shape": [3], "dtype": "f32"},
+        {"name": "m.a", "shape": [2, 3], "dtype": "f32"},
+        {"name": "m.b", "shape": [3], "dtype": "f32"},
+        {"name": "v.a", "shape": [2, 3], "dtype": "f32"},
+        {"name": "v.b", "shape": [3], "dtype": "f32"},
+        {"name": "bc", "shape": [1, 2], "dtype": "f32"},
+        {"name": "tokens", "shape": [4, 8], "dtype": "i32"}
+      ],
+      "outputs": [
+        {"name": "loss", "shape": [], "dtype": "f32"}
+      ],
+      "meta": {"batch": 4, "seq": 8, "lr": 0.001}
+    }"#;
+
+    #[test]
+    fn parses_sample() {
+        let m = Manifest::parse(SAMPLE).unwrap();
+        assert_eq!(m.artifact, "toy_train");
+        assert_eq!(m.params.len(), 2);
+        assert_eq!(m.params[0].init, "normal:0.02");
+        assert_eq!(m.inputs.len(), 8);
+        assert_eq!(m.outputs[0].shape, Vec::<usize>::new());
+        assert_eq!(m.batch(), 4);
+        assert_eq!(m.seq(), 8);
+        assert_eq!(m.param_bytes(), 4 * (6 + 3));
+        assert_eq!(m.data_input_names(), vec!["tokens"]);
+        assert_eq!(m.inputs[7].dtype, DType::I32);
+    }
+
+    #[test]
+    fn data_inputs_for_eval_kind() {
+        let m = Manifest::parse(&SAMPLE.replace("\"kind\": \"train\"", "\"kind\": \"eval\"")
+            .replace(r#""opt_params": ["a", "b"]"#, r#""opt_params": []"#))
+        .unwrap();
+        // eval kind: skip = params only
+        assert_eq!(m.data_input_names().len(), 6);
+    }
+
+    #[test]
+    fn rejects_missing_fields() {
+        assert!(Manifest::parse("{}").is_err());
+        assert!(Manifest::parse("not json").is_err());
+    }
+}

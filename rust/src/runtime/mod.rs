@@ -1,0 +1,262 @@
+//! PJRT runtime: loads the AOT artifacts (`artifacts/*.hlo.txt` +
+//! manifests) produced by `python/compile/aot.py` and executes them on the
+//! CPU PJRT client via the `xla` crate. This is the only place the Rust
+//! side touches XLA; everything above works in
+//! [`TensorDict`](crate::tensor::TensorDict)s.
+//!
+//! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
+//! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
+//! parser reassigns ids (see /opt/xla-example/README.md).
+
+mod manifest;
+mod service;
+mod trainer;
+
+pub use manifest::{IoSpec, Manifest, ParamSpec};
+pub use service::RuntimeClient;
+pub use trainer::{StepMetrics, Trainer};
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::{DType, Tensor, TensorDict};
+use crate::util::bytes;
+
+/// A compiled artifact: PJRT executable + its manifest.
+pub struct Executable {
+    pub manifest: Manifest,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+impl Executable {
+    /// Execute with named inputs. `inputs` must contain a tensor for every
+    /// name in `manifest.inputs` (params, `m.*`/`v.*` opt state, `bc`,
+    /// and data inputs alike); outputs are returned keyed by
+    /// `manifest.outputs` names.
+    pub fn execute(&self, inputs: &TensorDict) -> Result<TensorDict> {
+        let literals = self.marshal_inputs(inputs)?;
+        let result = self
+            .exe
+            .execute::<xla::Literal>(&literals)
+            .map_err(|e| anyhow!("execute {}: {e}", self.manifest.artifact))?;
+        let tuple = result[0][0]
+            .to_literal_sync()
+            .map_err(|e| anyhow!("fetch result literal: {e}"))?;
+        self.unmarshal_outputs(tuple)
+    }
+
+    fn marshal_inputs(&self, inputs: &TensorDict) -> Result<Vec<xla::Literal>> {
+        let mut literals = Vec::with_capacity(self.manifest.inputs.len());
+        for spec in &self.manifest.inputs {
+            let t = inputs.get(&spec.name).ok_or_else(|| {
+                anyhow!(
+                    "{}: missing input tensor '{}'",
+                    self.manifest.artifact,
+                    spec.name
+                )
+            })?;
+            if t.shape != spec.shape {
+                bail!(
+                    "{}: input '{}' shape {:?} != manifest {:?}",
+                    self.manifest.artifact,
+                    spec.name,
+                    t.shape,
+                    spec.shape
+                );
+            }
+            literals.push(tensor_to_literal(t)?);
+        }
+        Ok(literals)
+    }
+
+    fn unmarshal_outputs(&self, tuple: xla::Literal) -> Result<TensorDict> {
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose output tuple: {e}"))?;
+        if parts.len() != self.manifest.outputs.len() {
+            bail!(
+                "{}: {} outputs, manifest says {}",
+                self.manifest.artifact,
+                parts.len(),
+                self.manifest.outputs.len()
+            );
+        }
+        let mut out = TensorDict::new();
+        for (spec, lit) in self.manifest.outputs.iter().zip(parts) {
+            out.insert(spec.name.clone(), literal_to_tensor(&lit, spec)?);
+        }
+        Ok(out)
+    }
+}
+
+fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+    let (ty, raw): (xla::ElementType, &[u8]) = match &t.data {
+        crate::tensor::Data::F32(v) => (xla::ElementType::F32, bytes::f32_slice_as_bytes(v)),
+        crate::tensor::Data::I32(v) => (xla::ElementType::S32, bytes::i32_slice_as_bytes(v)),
+    };
+    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, raw)
+        .map_err(|e| anyhow!("literal create: {e}"))
+}
+
+fn literal_to_tensor(lit: &xla::Literal, spec: &IoSpec) -> Result<Tensor> {
+    Ok(match spec.dtype {
+        DType::F32 => Tensor::f32(
+            spec.shape.clone(),
+            lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?,
+        ),
+        DType::I32 => Tensor::i32(
+            spec.shape.clone(),
+            lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?,
+        ),
+    })
+}
+
+/// The runtime: one PJRT client + a compile cache keyed by artifact name.
+/// Compilation of a 100 M-param module takes seconds; every FL client in a
+/// simulation shares the cache through an [`Arc<Runtime>`].
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime rooted at the artifacts directory.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+        Ok(Runtime {
+            client,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// List artifacts available in the manifest index.
+    pub fn available(&self) -> Result<Vec<String>> {
+        let index = std::fs::read_to_string(self.dir.join("manifest.json"))
+            .context("read artifacts/manifest.json (run `make artifacts`)")?;
+        let j = crate::util::json::Json::parse(&index).map_err(|e| anyhow!("{e}"))?;
+        Ok(j.get("artifacts")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|a| a.as_str().map(String::from))
+            .collect())
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let manifest = Manifest::load(&self.dir, name)?;
+        let hlo_path = self.dir.join(&manifest.hlo);
+        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+            .map_err(|e| anyhow!("parse {}: {e}", hlo_path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .map_err(|e| anyhow!("compile {name}: {e}"))?;
+        let executable = Arc::new(Executable { manifest, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifacts_dir() -> PathBuf {
+        PathBuf::from("artifacts")
+    }
+
+    fn have_artifacts() -> bool {
+        artifacts_dir().join("manifest.json").exists()
+    }
+
+    #[test]
+    fn addnum_executes_correctly() {
+        if !have_artifacts() {
+            eprintln!("skipping: run `make artifacts` first");
+            return;
+        }
+        let rt = Runtime::cpu(artifacts_dir()).unwrap();
+        let exe = rt.load("addnum").unwrap();
+        let n = exe.manifest.meta.get("n").as_usize().unwrap();
+        let mut inputs = TensorDict::new();
+        inputs.insert("x", Tensor::f32(vec![n], vec![1.5; n]));
+        inputs.insert("delta", Tensor::f32(vec![1, 1], vec![0.25]));
+        let out = exe.execute(&inputs).unwrap();
+        let y = out.get("y").unwrap().as_f32().unwrap();
+        assert_eq!(y.len(), n);
+        assert!(y.iter().all(|&v| (v - 1.75).abs() < 1e-6));
+    }
+
+    #[test]
+    fn addnum_is_deterministic_and_cached() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu(artifacts_dir()).unwrap();
+        let exe = rt.load("addnum").unwrap();
+        let exe2 = rt.load("addnum").unwrap(); // cache hit
+        assert!(Arc::ptr_eq(&exe, &exe2));
+        let n = exe.manifest.meta.get("n").as_usize().unwrap();
+        let mut inputs = TensorDict::new();
+        inputs.insert("x", Tensor::f32(vec![n], (0..n).map(|i| i as f32).collect()));
+        inputs.insert("delta", Tensor::f32(vec![1, 1], vec![1.0]));
+        let a = exe.execute(&inputs).unwrap();
+        let b = exe.execute(&inputs).unwrap();
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn missing_input_is_reported() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu(artifacts_dir()).unwrap();
+        let exe = rt.load("addnum").unwrap();
+        let err = exe.execute(&TensorDict::new()).unwrap_err();
+        assert!(err.to_string().contains("missing input"), "{err}");
+    }
+
+    #[test]
+    fn wrong_shape_is_reported() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu(artifacts_dir()).unwrap();
+        let exe = rt.load("addnum").unwrap();
+        let mut inputs = TensorDict::new();
+        inputs.insert("x", Tensor::f32(vec![3], vec![0.0; 3]));
+        inputs.insert("delta", Tensor::f32(vec![1, 1], vec![0.0]));
+        let err = exe.execute(&inputs).unwrap_err();
+        assert!(err.to_string().contains("shape"), "{err}");
+    }
+
+    #[test]
+    fn unknown_artifact_errors() {
+        if !have_artifacts() {
+            return;
+        }
+        let rt = Runtime::cpu(artifacts_dir()).unwrap();
+        assert!(rt.load("no_such_artifact").is_err());
+    }
+}

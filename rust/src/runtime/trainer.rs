@@ -1,0 +1,361 @@
+//! `Trainer` — the high-level local-training handle each FL client holds:
+//! an artifact family (`<model>_train` / `<model>_eval` / `<model>_score`
+//! / `<model>_embed`) plus a [`ModelState`], with the input marshaling
+//! (params, opt moments, bias correction, data batch) handled internally.
+//!
+//! Trainers talk to the PJRT runtime through the thread-safe
+//! [`RuntimeClient`], so FL clients on separate threads share one compile
+//! cache.
+
+use std::collections::HashMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{Manifest, RuntimeClient};
+use crate::model::ModelState;
+use crate::tensor::{Tensor, TensorDict};
+
+/// Scalar metrics of one train/eval call.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct StepMetrics {
+    pub loss: f32,
+    pub acc: f32,
+}
+
+/// High-level executor over one artifact family.
+pub struct Trainer {
+    rc: RuntimeClient,
+    family: String,
+    manifests: HashMap<String, Manifest>,
+    pub state: ModelState,
+}
+
+impl Trainer {
+    /// Load `<family>_train`, initializing fresh state from its manifest.
+    pub fn new(rc: RuntimeClient, family: &str, seed: u64) -> Result<Trainer> {
+        let train = rc.manifest(&format!("{family}_train"))?;
+        let state = ModelState::init(&train, seed)?;
+        let mut manifests = HashMap::new();
+        manifests.insert(format!("{family}_train"), train);
+        Ok(Trainer {
+            rc,
+            family: family.to_string(),
+            manifests,
+            state,
+        })
+    }
+
+    /// Eval/embed-only trainer: state initialized from `artifact`'s
+    /// manifest (no `_train` required).
+    pub fn eval_only(rc: RuntimeClient, family: &str, artifact: &str, seed: u64) -> Result<Trainer> {
+        let m = rc.manifest(artifact)?;
+        let state = ModelState::init(&m, seed)?;
+        let mut manifests = HashMap::new();
+        manifests.insert(artifact.to_string(), m);
+        Ok(Trainer {
+            rc,
+            family: family.to_string(),
+            manifests,
+            state,
+        })
+    }
+
+    pub fn family(&self) -> &str {
+        &self.family
+    }
+
+    pub fn runtime(&self) -> &RuntimeClient {
+        &self.rc
+    }
+
+    /// Cached manifest fetch.
+    pub fn manifest(&mut self, artifact: &str) -> Result<Manifest> {
+        if let Some(m) = self.manifests.get(artifact) {
+            return Ok(m.clone());
+        }
+        let m = self.rc.manifest(artifact)?;
+        self.manifests.insert(artifact.to_string(), m.clone());
+        Ok(m)
+    }
+
+    pub fn train_manifest(&mut self) -> Result<Manifest> {
+        let name = format!("{}_train", self.family);
+        self.manifest(&name)
+    }
+
+    /// One optimizer step on a data batch (names must match the manifest's
+    /// data inputs, e.g. `tokens` / `labels` / `x` / `y`).
+    pub fn train_step(&mut self, batch: &TensorDict) -> Result<StepMetrics> {
+        let m = self.train_manifest()?;
+        let mut inputs = TensorDict::new();
+        for p in &m.params {
+            inputs.insert(
+                p.name.clone(),
+                self.state
+                    .params
+                    .get(&p.name)
+                    .ok_or_else(|| anyhow!("state missing param {}", p.name))?
+                    .clone(),
+            );
+        }
+        for name in &m.opt_params {
+            inputs.insert(
+                format!("m.{name}"),
+                self.state
+                    .opt_m
+                    .get(name)
+                    .ok_or_else(|| anyhow!("state missing m.{name}"))?
+                    .clone(),
+            );
+            inputs.insert(
+                format!("v.{name}"),
+                self.state
+                    .opt_v
+                    .get(name)
+                    .ok_or_else(|| anyhow!("state missing v.{name}"))?
+                    .clone(),
+            );
+        }
+        inputs.insert("bc", self.state.bc_tensor());
+        for (k, v) in batch.iter() {
+            inputs.insert(k.to_string(), v.clone());
+        }
+
+        let mut out = self.rc.execute(&m.artifact, inputs)?;
+        // outputs: params (same names), m.*, v.*, loss, acc
+        for p in &m.params {
+            let t = out
+                .remove(&p.name)
+                .ok_or_else(|| anyhow!("output missing param {}", p.name))?;
+            self.state.params.insert(p.name.clone(), t);
+        }
+        for name in &m.opt_params {
+            let tm = out
+                .remove(&format!("m.{name}"))
+                .ok_or_else(|| anyhow!("output missing m.{name}"))?;
+            let tv = out
+                .remove(&format!("v.{name}"))
+                .ok_or_else(|| anyhow!("output missing v.{name}"))?;
+            self.state.opt_m.insert(name.clone(), tm);
+            self.state.opt_v.insert(name.clone(), tv);
+        }
+        self.state.step += 1;
+        let loss = out
+            .get("loss")
+            .ok_or_else(|| anyhow!("output missing loss"))?
+            .item();
+        let acc = out.get("acc").map(|t| t.item()).unwrap_or(f32::NAN);
+        if !loss.is_finite() {
+            bail!("{}: non-finite loss at step {}", self.family, self.state.step);
+        }
+        Ok(StepMetrics { loss, acc })
+    }
+
+    /// K fused optimizer steps through a `<family>_train_k<K>` artifact
+    /// (the §Perf optimization: params/opt state cross the PJRT boundary
+    /// once per K steps instead of once per step). `tokens_k` must be
+    /// (K, B, S) matching the artifact. Returns mean metrics of the K
+    /// steps.
+    pub fn train_chunk(&mut self, artifact: &str, tokens_k: Tensor) -> Result<StepMetrics> {
+        let m = self.manifest(artifact)?;
+        let k = m.meta.get("k").as_usize().unwrap_or(1) as u64;
+        let mut inputs = TensorDict::new();
+        for p in &m.params {
+            inputs.insert(
+                p.name.clone(),
+                self.state
+                    .params
+                    .get(&p.name)
+                    .ok_or_else(|| anyhow!("state missing param {}", p.name))?
+                    .clone(),
+            );
+        }
+        for name in &m.opt_params {
+            inputs.insert(
+                format!("m.{name}"),
+                self.state.opt_m.get(name).unwrap().clone(),
+            );
+            inputs.insert(
+                format!("v.{name}"),
+                self.state.opt_v.get(name).unwrap().clone(),
+            );
+        }
+        inputs.insert("bc", self.state.bc_tensor());
+        inputs.insert("tokens_k", tokens_k);
+        let mut out = self.rc.execute(artifact, inputs)?;
+        for p in &m.params {
+            let t = out
+                .remove(&p.name)
+                .ok_or_else(|| anyhow!("output missing param {}", p.name))?;
+            self.state.params.insert(p.name.clone(), t);
+        }
+        for name in &m.opt_params {
+            self.state
+                .opt_m
+                .insert(name.clone(), out.remove(&format!("m.{name}")).unwrap());
+            self.state
+                .opt_v
+                .insert(name.clone(), out.remove(&format!("v.{name}")).unwrap());
+        }
+        self.state.step += k;
+        let loss = out.get("loss").map(|t| t.item()).unwrap_or(f32::NAN);
+        let acc = out.get("acc").map(|t| t.item()).unwrap_or(f32::NAN);
+        if !loss.is_finite() {
+            bail!("{}: non-finite loss in train_chunk", self.family);
+        }
+        Ok(StepMetrics { loss, acc })
+    }
+
+    /// Evaluate the current params on a batch; returns (loss, acc).
+    pub fn eval_batch(&mut self, batch: &TensorDict) -> Result<StepMetrics> {
+        let name = format!("{}_eval", self.family);
+        let out = self.run_artifact(&name, batch)?;
+        Ok(StepMetrics {
+            loss: out.get("loss").map(|t| t.item()).unwrap_or(f32::NAN),
+            acc: out.get("acc").map(|t| t.item()).unwrap_or(f32::NAN),
+        })
+    }
+
+    /// Run any forward-only artifact of this family (`_score`, `_embed`,
+    /// `_eval`) against the current params.
+    pub fn run_artifact(&mut self, artifact: &str, batch: &TensorDict) -> Result<TensorDict> {
+        let m = self.manifest(artifact)?;
+        let mut inputs = TensorDict::new();
+        for p in &m.params {
+            inputs.insert(
+                p.name.clone(),
+                self.state
+                    .params
+                    .get(&p.name)
+                    .ok_or_else(|| anyhow!("state missing param {}", p.name))?
+                    .clone(),
+            );
+        }
+        for (k, v) in batch.iter() {
+            inputs.insert(k.to_string(), v.clone());
+        }
+        self.rc.execute(artifact, inputs)
+    }
+
+    /// Mean eval metrics over several batches from a closure.
+    pub fn eval_epoch(
+        &mut self,
+        n_batches: usize,
+        mut next_batch: impl FnMut(usize) -> TensorDict,
+    ) -> Result<StepMetrics> {
+        let mut loss = 0.0;
+        let mut acc = 0.0;
+        for i in 0..n_batches {
+            let m = self.eval_batch(&next_batch(i))?;
+            loss += m.loss;
+            acc += m.acc;
+        }
+        Ok(StepMetrics {
+            loss: loss / n_batches as f32,
+            acc: acc / n_batches as f32,
+        })
+    }
+}
+
+/// Convenience: a scalar-f32 tensor batch entry (used by examples).
+#[allow(dead_code)]
+pub fn scalar(v: f32) -> Tensor {
+    Tensor::scalar_f32(v)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn rc() -> Option<RuntimeClient> {
+        if !std::path::Path::new("artifacts/manifest.json").exists() {
+            return None;
+        }
+        Some(RuntimeClient::start("artifacts").unwrap())
+    }
+
+    fn random_tokens(rng: &mut Rng, batch: usize, seq: usize, vocab: usize) -> Tensor {
+        let data: Vec<i32> = (0..batch * seq)
+            .map(|_| rng.range(4, vocab as u64) as i32)
+            .collect();
+        Tensor::i32(vec![batch, seq], data)
+    }
+
+    #[test]
+    fn nano_train_decreases_loss_and_eval_runs() {
+        let Some(rc) = rc() else { return };
+        let mut tr = Trainer::new(rc, "gpt_nano", 7).unwrap();
+        let (b, s, vocab) = {
+            let m = tr.train_manifest().unwrap();
+            (m.batch(), m.seq(), m.meta.get("vocab").as_usize().unwrap())
+        };
+        let mut rng = Rng::new(3);
+        let batch_t = random_tokens(&mut rng, b, s, vocab);
+        let mut batch = TensorDict::new();
+        batch.insert("tokens", batch_t);
+
+        let first = tr.train_step(&batch).unwrap();
+        assert!((first.loss - (vocab as f32).ln()).abs() < 1.0, "{first:?}");
+        let mut last = first;
+        for _ in 0..8 {
+            last = tr.train_step(&batch).unwrap();
+        }
+        assert!(
+            last.loss < first.loss - 0.2,
+            "no learning: {first:?} -> {last:?}"
+        );
+        assert_eq!(tr.state.step, 9);
+
+        // eval on a fresh batch
+        let eb = tr.manifest("gpt_nano_eval").unwrap().batch();
+        let mut ebatch = TensorDict::new();
+        ebatch.insert("tokens", random_tokens(&mut rng, eb, s, vocab));
+        let em = tr.eval_batch(&ebatch).unwrap();
+        assert!(em.loss.is_finite() && em.acc >= 0.0 && em.acc <= 1.0);
+    }
+
+    #[test]
+    fn lora_train_moves_only_adapters() {
+        let Some(rc) = rc() else { return };
+        let mut tr = Trainer::new(rc, "gpt_small_lora", 9).unwrap();
+        let m = tr.train_manifest().unwrap();
+        assert!(!m.opt_params.is_empty());
+        assert!(m.opt_params.iter().all(|n| n.contains("lora")));
+        let (b, s) = (m.batch(), m.seq());
+        let vocab = m.meta.get("vocab").as_usize().unwrap();
+        let mut rng = Rng::new(5);
+        let mut batch = TensorDict::new();
+        batch.insert("tokens", random_tokens(&mut rng, b, s, vocab));
+        batch.insert(
+            "labels",
+            Tensor::i32(vec![b], (0..b).map(|i| (i % 3) as i32).collect()),
+        );
+        let before = tr.state.params.clone();
+        tr.train_step(&batch).unwrap();
+        for (name, t) in tr.state.params.iter() {
+            let moved = before.get(name).unwrap().as_f32().unwrap() != t.as_f32().unwrap();
+            if m.opt_params.iter().any(|n| n == name) {
+                assert!(moved, "adapter {name} frozen");
+            } else {
+                assert!(!moved, "base weight {name} moved");
+            }
+        }
+    }
+
+    #[test]
+    fn esm_embed_shapes() {
+        let Some(rc) = rc() else { return };
+        let mut tr = Trainer::eval_only(rc, "esm_small", "esm_small_embed", 1).unwrap();
+        let m = tr.manifest("esm_small_embed").unwrap();
+        let (b, s) = (m.batch(), m.seq());
+        let d = m.meta.get("d_model").as_usize().unwrap();
+        let mut rng = Rng::new(2);
+        let mut batch = TensorDict::new();
+        batch.insert("tokens", random_tokens(&mut rng, b, s, 30));
+        let out = tr.run_artifact("esm_small_embed", &batch).unwrap();
+        let emb = out.get("embeddings").unwrap();
+        assert_eq!(emb.shape, vec![b, d]);
+        assert!(emb.as_f32().unwrap().iter().all(|x| x.is_finite()));
+    }
+}

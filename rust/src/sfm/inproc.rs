@@ -1,0 +1,132 @@
+//! In-process SFM driver: a pair of bounded channels. Used by the
+//! single-process simulator ([`crate::sim`]) so multi-client FL jobs run
+//! through exactly the same chunk/stream/reassemble code path as TCP.
+//!
+//! The bounded send channel *is* the backpressure window: once `window`
+//! frames are in flight the sender blocks, the same semantics a full TCP
+//! socket buffer provides.
+
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::{Driver, Frame, SfmError};
+
+/// One endpoint of an in-process duplex link.
+pub struct InProcDriver {
+    tx: SyncSender<Frame>,
+    rx: Arc<Mutex<Receiver<Frame>>>,
+    label: String,
+}
+
+/// Create a connected (a, b) driver pair with a bounded window per
+/// direction (frames in flight before the sender blocks).
+pub fn pair(window: usize, label: &str) -> (InProcDriver, InProcDriver) {
+    let (tx_ab, rx_ab) = std::sync::mpsc::sync_channel(window);
+    let (tx_ba, rx_ba) = std::sync::mpsc::sync_channel(window);
+    (
+        InProcDriver {
+            tx: tx_ab,
+            rx: Arc::new(Mutex::new(rx_ba)),
+            label: format!("inproc:{label}:a"),
+        },
+        InProcDriver {
+            tx: tx_ba,
+            rx: Arc::new(Mutex::new(rx_ab)),
+            label: format!("inproc:{label}:b"),
+        },
+    )
+}
+
+impl Driver for InProcDriver {
+    fn send(&mut self, frame: Frame) -> Result<(), SfmError> {
+        self.tx.send(frame).map_err(|_| SfmError::Closed)
+    }
+
+    fn recv(&mut self) -> Result<Frame, SfmError> {
+        let rx = self.rx.lock().expect("inproc rx poisoned");
+        // poll with timeout so shutdown is observable even without senders
+        loop {
+            match rx.recv_timeout(Duration::from_millis(200)) {
+                Ok(f) => return Ok(f),
+                Err(RecvTimeoutError::Timeout) => continue,
+                Err(RecvTimeoutError::Disconnected) => return Err(SfmError::Closed),
+            }
+        }
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
+    }
+}
+
+impl InProcDriver {
+    /// Non-blocking send attempt (used by tests to observe backpressure).
+    pub fn try_send(&mut self, frame: Frame) -> Result<(), SfmError> {
+        match self.tx.try_send(frame) {
+            Ok(()) => Ok(()),
+            Err(TrySendError::Full(_)) => Err(SfmError::Decode("window full".into())),
+            Err(TrySendError::Disconnected(_)) => Err(SfmError::Closed),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sfm::{chunk_frames, Reassembler};
+
+    #[test]
+    fn duplex_roundtrip() {
+        let (mut a, mut b) = pair(8, "t");
+        let data = vec![5u8; 3000];
+        for f in chunk_frames(1, 10, &data, 1024) {
+            a.send(f).unwrap();
+        }
+        let mut re = Reassembler::new();
+        let mut got = None;
+        while got.is_none() {
+            got = re.push(b.recv().unwrap()).unwrap();
+        }
+        let (_, _, payload) = got.unwrap();
+        assert_eq!(payload, data);
+        crate::util::mem::track_free(payload.len());
+
+        // reverse direction works too
+        b.send(chunk_frames(0, 11, b"pong", 64).remove(0)).unwrap();
+        assert_eq!(a.recv().unwrap().payload, b"pong");
+    }
+
+    #[test]
+    fn window_blocks_via_try_send() {
+        let (mut a, _b) = pair(2, "w");
+        let f = Frame {
+            flags: 0,
+            kind: 0,
+            stream: 1,
+            seq: 0,
+            total: 10,
+            payload: vec![0; 8],
+        };
+        assert!(a.try_send(f.clone()).is_ok());
+        assert!(a.try_send(f.clone()).is_ok());
+        // third frame exceeds the window
+        assert!(a.try_send(f).is_err());
+    }
+
+    #[test]
+    fn closed_peer_reports_closed() {
+        let (mut a, b) = pair(2, "c");
+        drop(b);
+        let f = Frame {
+            flags: 0,
+            kind: 0,
+            stream: 1,
+            seq: 0,
+            total: 1,
+            payload: vec![],
+        };
+        assert!(matches!(a.send(f), Err(SfmError::Closed)));
+        assert!(matches!(a.recv(), Err(SfmError::Closed)));
+    }
+}

@@ -1,0 +1,304 @@
+//! Multi-client simulation harness: runs a full FL job — server controller
+//! plus N client task loops — in one process, over either the in-process
+//! channel driver or real TCP loopback connections, with optional
+//! per-client bandwidth throttling (the paper's fast/slow-site asymmetry).
+//!
+//! This is the engine behind `fedflare repro *`, the examples, and the
+//! integration tests. Multi-process deployment (`fedflare server` /
+//! `fedflare client`) shares all the same code paths; only connection
+//! setup differs (see `main.rs`).
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::config::{ClientSpec, JobConfig};
+use crate::coordinator::{accept_registration, ClientHandle, Communicator, Controller, ServerCtx};
+use crate::executor::{ClientRuntime, Executor};
+use crate::filters::build_chain;
+use crate::metrics::MetricsSink;
+use crate::sfm::{inproc, tcp, throttle::Throttled, Driver};
+use crate::streaming::Messenger;
+
+/// Which transport the simulation uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DriverKind {
+    /// Bounded in-process channels.
+    InProc,
+    /// Real TCP connections over loopback.
+    Tcp,
+}
+
+/// Build the per-client executor (index, spec) -> Executor.
+pub type ExecutorFactory<'a> = dyn FnMut(usize, &ClientSpec) -> Result<Box<dyn Executor>> + 'a;
+
+/// Run a job to completion inside this process. The controller's own
+/// fields (history, best model, ...) carry the results.
+pub fn run_job(
+    job: &JobConfig,
+    kind: DriverKind,
+    controller: &mut dyn Controller,
+    make_executor: &mut ExecutorFactory,
+    results_dir: &str,
+) -> Result<()> {
+    let sink = MetricsSink::create(results_dir, &job.name)?;
+    let mut ctx = ServerCtx::new(sink, &job.name);
+    let chunk = job.stream.chunk_bytes;
+    let window = job.stream.window;
+    let verify = job.stream.verify_crc;
+
+    // --- build transport pairs + client runtimes
+    let mut client_threads = Vec::new();
+    let mut server_messengers: Vec<Messenger> = Vec::new();
+
+    match kind {
+        DriverKind::InProc => {
+            for (i, spec) in job.clients.iter().enumerate() {
+                let (sa, ca) = inproc::pair(window, &spec.name);
+                let client_driver: Box<dyn Driver> = wrap_throttle(Box::new(ca), spec);
+                let server_driver: Box<dyn Driver> = wrap_throttle(Box::new(sa), spec);
+                server_messengers.push(Messenger::new(server_driver, chunk, 0));
+                let messenger = Messenger::new(client_driver, chunk, (i + 1) as u32);
+                client_threads.push(spawn_client(job, i, spec, messenger, make_executor)?);
+            }
+        }
+        DriverKind::Tcp => {
+            let listener = tcp::bind("127.0.0.1:0")?;
+            let addr = listener.local_addr().context("local addr")?;
+            for (i, spec) in job.clients.iter().enumerate() {
+                let drv = tcp::TcpDriver::connect(addr, verify)?;
+                let client_driver: Box<dyn Driver> = wrap_throttle(Box::new(drv), spec);
+                let messenger = Messenger::new(client_driver, chunk, (i + 1) as u32);
+                client_threads.push(spawn_client(job, i, spec, messenger, make_executor)?);
+                let (conn, _) = listener.accept().context("accept")?;
+                let sdrv = tcp::TcpDriver::from_stream(conn, verify)?;
+                // server->client direction throttled too (a slow link is
+                // slow both ways)
+                let server_driver: Box<dyn Driver> = wrap_throttle(Box::new(sdrv), spec);
+                server_messengers.push(Messenger::new(server_driver, chunk, 0));
+            }
+        }
+    }
+
+    // --- registration handshake, then per-client IO workers
+    let mut handles = Vec::new();
+    for mut m in server_messengers {
+        let name = accept_registration(&mut m)?;
+        handles.push(ClientHandle::spawn(name, m));
+    }
+    // order handles to match job.clients order (TCP accepts may race)
+    handles.sort_by_key(|h| {
+        job.clients
+            .iter()
+            .position(|c| c.name == h.name)
+            .unwrap_or(usize::MAX)
+    });
+    let mut comm = Communicator::new(handles, job.seed);
+
+    // --- run the workflow
+    let run_result = controller.run(&mut comm, &mut ctx);
+
+    // --- join clients
+    let mut client_errs = Vec::new();
+    for (name, t) in client_threads {
+        match t.join() {
+            Ok(Ok(_tasks)) => {}
+            Ok(Err(e)) => client_errs.push(format!("{name}: {e}")),
+            Err(_) => client_errs.push(format!("{name}: panicked")),
+        }
+    }
+    run_result?;
+    if !client_errs.is_empty() {
+        return Err(anyhow!("client failures: {}", client_errs.join("; ")));
+    }
+    Ok(())
+}
+
+fn wrap_throttle(driver: Box<dyn Driver>, spec: &ClientSpec) -> Box<dyn Driver> {
+    if spec.bandwidth_bps > 0 {
+        Box::new(Throttled::new(
+            BoxedDriver(driver),
+            spec.bandwidth_bps,
+            crate::DEFAULT_CHUNK_BYTES as u64,
+        ))
+    } else {
+        driver
+    }
+}
+
+/// Adapter: `Box<dyn Driver>` itself as a Driver (for the Throttled
+/// decorator, which is generic).
+struct BoxedDriver(Box<dyn Driver>);
+
+impl Driver for BoxedDriver {
+    fn send(&mut self, frame: crate::sfm::Frame) -> Result<(), crate::sfm::SfmError> {
+        self.0.send(frame)
+    }
+    fn recv(&mut self) -> Result<crate::sfm::Frame, crate::sfm::SfmError> {
+        self.0.recv()
+    }
+    fn name(&self) -> String {
+        self.0.name()
+    }
+}
+
+type ClientThread = (String, std::thread::JoinHandle<Result<usize>>);
+
+fn spawn_client(
+    job: &JobConfig,
+    idx: usize,
+    spec: &ClientSpec,
+    messenger: Messenger,
+    make_executor: &mut ExecutorFactory,
+) -> Result<ClientThread> {
+    let executor = make_executor(idx, spec)?;
+    let filters = build_chain(&job.filters, idx, job.clients.len());
+    let name = spec.name.clone();
+    let tname = name.clone();
+    let handle = std::thread::Builder::new()
+        .name(format!("client-{name}"))
+        .spawn(move || {
+            let mut rt = ClientRuntime::new(&tname, messenger, executor, filters);
+            rt.run_loop()
+        })
+        .context("spawn client thread")?;
+    Ok((name, handle))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::FedAvg;
+    use crate::executor::StreamTestExecutor;
+    use crate::message::FlMessage;
+    use crate::util::json::Json;
+
+    fn results_dir() -> String {
+        let d = std::env::temp_dir().join("fedflare_sim_tests");
+        let _ = std::fs::create_dir_all(&d);
+        d.to_string_lossy().to_string()
+    }
+
+    /// FedAvg over the add-delta workload: after R rounds with all clients
+    /// adding d, the global model is exactly initial + R*d (weights sum
+    /// to 1 each round).
+    fn add_delta_fedavg(kind: DriverKind, chunk: usize) {
+        let mut job = crate::config::JobConfig::named("sim_add", "none");
+        job.rounds = 3;
+        job.min_clients = 2;
+        job.stream.chunk_bytes = chunk;
+        let initial = StreamTestExecutor::build_model(4, 1000, 1.0);
+        let mut ctl = FedAvg::new(initial, job.rounds, job.min_clients);
+        ctl.task_name = "stream_test".into();
+        let mut factory: Box<ExecutorFactory> = Box::new(|_i, _s| {
+            Ok(Box::new(StreamTestExecutor::new(None, 0.5)) as Box<dyn Executor>)
+        });
+        run_job(&job, kind, &mut ctl, &mut factory, &results_dir()).unwrap();
+        let v = ctl.model.get("key_000").unwrap().as_f32().unwrap();
+        assert!(
+            v.iter().all(|&x| (x - 2.5).abs() < 1e-5),
+            "expected 1.0 + 3*0.5, got {}",
+            v[0]
+        );
+        assert_eq!(ctl.history.len(), 3);
+    }
+
+    #[test]
+    fn fedavg_add_delta_inproc() {
+        add_delta_fedavg(DriverKind::InProc, 1024);
+    }
+
+    #[test]
+    fn fedavg_add_delta_tcp() {
+        add_delta_fedavg(DriverKind::Tcp, 1024);
+    }
+
+    #[test]
+    fn driver_swap_changes_nothing_above_sfm() {
+        // the paper's SFM claim: same job, same numbers, different driver
+        let run = |kind| {
+            let mut job = crate::config::JobConfig::named("sim_swap", "none");
+            job.rounds = 2;
+            let initial = StreamTestExecutor::build_model(2, 100, 0.0);
+            let mut ctl = FedAvg::new(initial, 2, 2);
+            ctl.task_name = "stream_test".into();
+            let mut f: Box<ExecutorFactory> = Box::new(|_i, _s| {
+                Ok(Box::new(StreamTestExecutor::new(None, 0.25)) as Box<dyn Executor>)
+            });
+            run_job(&job, kind, &mut ctl, &mut f, &results_dir()).unwrap();
+            ctl.model
+        };
+        let a = run(DriverKind::InProc);
+        let b = run(DriverKind::Tcp);
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn throttled_client_still_completes() {
+        let mut job = crate::config::JobConfig::named("sim_throttle", "none");
+        job.rounds = 1;
+        job.stream.chunk_bytes = 4096;
+        // site-2 at 2 MB/s with a ~80 kB model: measurable but quick
+        job.clients[1].bandwidth_bps = 2_000_000;
+        let initial = StreamTestExecutor::build_model(2, 10_000, 0.0);
+        let mut ctl = FedAvg::new(initial, 1, 2);
+        ctl.task_name = "stream_test".into();
+        let mut f: Box<ExecutorFactory> = Box::new(|_i, _s| {
+            Ok(Box::new(StreamTestExecutor::new(None, 1.0)) as Box<dyn Executor>)
+        });
+        run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+        let v = ctl.model.get("key_000").unwrap().as_f32().unwrap();
+        assert!((v[0] - 1.0).abs() < 1e-6);
+    }
+
+    /// An executor that fails — the job must surface the error.
+    struct Failing;
+    impl Executor for Failing {
+        fn execute(&mut self, _t: &FlMessage) -> Result<FlMessage> {
+            Err(anyhow!("injected failure"))
+        }
+    }
+
+    #[test]
+    fn client_failure_propagates() {
+        let mut job = crate::config::JobConfig::named("sim_fail", "none");
+        job.rounds = 1;
+        let initial = StreamTestExecutor::build_model(1, 10, 0.0);
+        let mut ctl = FedAvg::new(initial, 1, 2);
+        ctl.task_name = "stream_test".into();
+        let mut f: Box<ExecutorFactory> =
+            Box::new(|_i, _s| Ok(Box::new(Failing) as Box<dyn Executor>));
+        let err = run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir());
+        assert!(err.is_err());
+    }
+
+    #[test]
+    fn filters_compose_with_fedavg() {
+        // secure-agg masks must cancel in the FedAvg sum: same result as
+        // without the filter
+        let base = {
+            let mut job = crate::config::JobConfig::named("sim_nofilter", "none");
+            job.rounds = 2;
+            let mut ctl = FedAvg::new(StreamTestExecutor::build_model(2, 50, 1.0), 2, 2);
+            ctl.task_name = "stream_test".into();
+            let mut f: Box<ExecutorFactory> = Box::new(|_i, _s| {
+                Ok(Box::new(StreamTestExecutor::new(None, 0.5)) as Box<dyn Executor>)
+            });
+            run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+            ctl.model
+        };
+        let masked = {
+            let mut job = crate::config::JobConfig::named("sim_secureagg", "none");
+            job.rounds = 2;
+            job.filters = vec![crate::config::FilterSpec::SecureAgg { seed: 5 }];
+            let mut ctl = FedAvg::new(StreamTestExecutor::build_model(2, 50, 1.0), 2, 2);
+            ctl.task_name = "stream_test".into();
+            let mut f: Box<ExecutorFactory> = Box::new(|_i, _s| {
+                Ok(Box::new(StreamTestExecutor::new(None, 0.5)) as Box<dyn Executor>)
+            });
+            run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+            ctl.model
+        };
+        // equal-weight (n_samples=1 each) FedAvg: masks cancel
+        assert!(base.max_abs_diff(&masked) < 1e-4, "{}", base.max_abs_diff(&masked));
+        let _ = std::fs::remove_dir_all(std::env::temp_dir().join("fedflare_sim_tests"));
+    }
+}

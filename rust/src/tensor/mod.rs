@@ -1,0 +1,578 @@
+//! `TensorDict` — the model/update payload type that flows through the FL
+//! system (what the paper calls the "model" in `FLModel(params=...)`).
+//!
+//! An ordered map from parameter name to a dense tensor (f32 or i32), with
+//! a compact binary wire format (what the streaming layer chunks), a f16
+//! transport encoding for the quantization filter, and the in-place math
+//! the aggregator hot loop needs (`axpy`, `scale`).
+
+use std::collections::BTreeMap;
+
+use crate::util::bytes::{self, ByteError, Reader, Writer};
+
+/// Element type of a tensor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+impl DType {
+    pub fn from_str(s: &str) -> Option<DType> {
+        match s {
+            "f32" => Some(DType::F32),
+            "i32" => Some(DType::I32),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            DType::F32 => "f32",
+            DType::I32 => "i32",
+        }
+    }
+    fn tag(&self) -> u8 {
+        match self {
+            DType::F32 => 0,
+            DType::I32 => 1,
+        }
+    }
+    fn from_tag(t: u8) -> Option<DType> {
+        match t {
+            0 => Some(DType::F32),
+            1 => Some(DType::I32),
+            _ => None,
+        }
+    }
+}
+
+/// Dense tensor storage.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Data {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+impl Data {
+    pub fn len(&self) -> usize {
+        match self {
+            Data::F32(v) => v.len(),
+            Data::I32(v) => v.len(),
+        }
+    }
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+    pub fn dtype(&self) -> DType {
+        match self {
+            Data::F32(_) => DType::F32,
+            Data::I32(_) => DType::I32,
+        }
+    }
+}
+
+/// A named dense tensor.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: Data,
+}
+
+impl Tensor {
+    pub fn f32(shape: Vec<usize>, data: Vec<f32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape,
+            data: Data::F32(data),
+        }
+    }
+    pub fn i32(shape: Vec<usize>, data: Vec<i32>) -> Tensor {
+        assert_eq!(shape.iter().product::<usize>(), data.len(), "shape/data mismatch");
+        Tensor {
+            shape,
+            data: Data::I32(data),
+        }
+    }
+    pub fn zeros(shape: Vec<usize>) -> Tensor {
+        let n = shape.iter().product();
+        Tensor::f32(shape, vec![0.0; n])
+    }
+    pub fn scalar_f32(v: f32) -> Tensor {
+        Tensor::f32(vec![], vec![v])
+    }
+
+    pub fn numel(&self) -> usize {
+        self.shape.iter().product()
+    }
+    pub fn dtype(&self) -> DType {
+        self.data.dtype()
+    }
+    /// Payload bytes (excluding name/shape header).
+    pub fn byte_size(&self) -> usize {
+        self.data.len() * 4
+    }
+
+    pub fn as_f32(&self) -> Option<&[f32]> {
+        match &self.data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_f32_mut(&mut self) -> Option<&mut [f32]> {
+        match &mut self.data {
+            Data::F32(v) => Some(v),
+            _ => None,
+        }
+    }
+    pub fn as_i32(&self) -> Option<&[i32]> {
+        match &self.data {
+            Data::I32(v) => Some(v),
+            _ => None,
+        }
+    }
+    /// First element as f32 (for scalar metric outputs).
+    pub fn item(&self) -> f32 {
+        match &self.data {
+            Data::F32(v) => v[0],
+            Data::I32(v) => v[0] as f32,
+        }
+    }
+}
+
+/// Ordered name → tensor map. Iteration order is the sorted name order —
+/// the same order the AOT manifest records, so marshaling is positional.
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct TensorDict {
+    map: BTreeMap<String, Tensor>,
+}
+
+impl TensorDict {
+    pub fn new() -> TensorDict {
+        TensorDict::default()
+    }
+
+    pub fn insert(&mut self, name: impl Into<String>, t: Tensor) {
+        self.map.insert(name.into(), t);
+    }
+    pub fn get(&self, name: &str) -> Option<&Tensor> {
+        self.map.get(name)
+    }
+    pub fn get_mut(&mut self, name: &str) -> Option<&mut Tensor> {
+        self.map.get_mut(name)
+    }
+    pub fn remove(&mut self, name: &str) -> Option<Tensor> {
+        self.map.remove(name)
+    }
+    pub fn contains(&self, name: &str) -> bool {
+        self.map.contains_key(name)
+    }
+    pub fn len(&self) -> usize {
+        self.map.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.map.is_empty()
+    }
+    pub fn names(&self) -> impl Iterator<Item = &str> {
+        self.map.keys().map(|s| s.as_str())
+    }
+    pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
+        self.map.iter().map(|(k, v)| (k.as_str(), v))
+    }
+    pub fn iter_mut(&mut self) -> impl Iterator<Item = (&str, &mut Tensor)> {
+        self.map.iter_mut().map(|(k, v)| (k.as_str(), v))
+    }
+
+    /// Total payload bytes across tensors.
+    pub fn byte_size(&self) -> usize {
+        self.map.values().map(|t| t.byte_size()).sum()
+    }
+
+    /// Total element count.
+    pub fn numel(&self) -> usize {
+        self.map.values().map(|t| t.numel()).sum()
+    }
+
+    /// Sub-dict with only the named keys (PEFT: communicate adapters only).
+    pub fn subset(&self, names: &[String]) -> TensorDict {
+        let mut out = TensorDict::new();
+        for n in names {
+            if let Some(t) = self.map.get(n) {
+                out.insert(n.clone(), t.clone());
+            }
+        }
+        out
+    }
+
+    /// Merge `other`'s tensors into self (overwrites same-name entries).
+    pub fn merge(&mut self, other: &TensorDict) {
+        for (k, v) in other.iter() {
+            self.map.insert(k.to_string(), v.clone());
+        }
+    }
+
+    // ------------------------------------------------------------- math
+
+    /// `self += alpha * other` over all matching f32 tensors (i32 tensors
+    /// are passed through untouched, mirroring [`TensorDict::scale`]).
+    /// Panics on missing names or length mismatch (caller validates via
+    /// [`TensorDict::same_schema`]).
+    pub fn axpy(&mut self, alpha: f32, other: &TensorDict) {
+        for (name, t) in self.map.iter_mut() {
+            let o = other
+                .map
+                .get(name)
+                .unwrap_or_else(|| panic!("axpy: missing tensor {name}"));
+            let (Some(a), Some(b)) = (t.as_f32_mut(), o.as_f32()) else {
+                continue; // non-f32: not aggregatable, leave as-is
+            };
+            assert_eq!(a.len(), b.len(), "axpy: length mismatch for {name}");
+            axpy_slice(a, alpha, b);
+        }
+    }
+
+    /// `self *= alpha` over all f32 tensors.
+    pub fn scale(&mut self, alpha: f32) {
+        for t in self.map.values_mut() {
+            if let Some(a) = t.as_f32_mut() {
+                for x in a.iter_mut() {
+                    *x *= alpha;
+                }
+            }
+        }
+    }
+
+    /// Zeroed clone (same schema, f32 zeros / i32 zeros).
+    pub fn zeros_like(&self) -> TensorDict {
+        let mut out = TensorDict::new();
+        for (k, t) in self.iter() {
+            let z = match &t.data {
+                Data::F32(v) => Tensor::f32(t.shape.clone(), vec![0.0; v.len()]),
+                Data::I32(v) => Tensor::i32(t.shape.clone(), vec![0; v.len()]),
+            };
+            out.insert(k.to_string(), z);
+        }
+        out
+    }
+
+    /// True if `other` has exactly the same names/shapes/dtypes.
+    pub fn same_schema(&self, other: &TensorDict) -> bool {
+        self.len() == other.len()
+            && self.iter().all(|(k, t)| {
+                other
+                    .get(k)
+                    .map(|o| o.shape == t.shape && o.dtype() == t.dtype())
+                    .unwrap_or(false)
+            })
+    }
+
+    /// L2 norm over all f32 tensors (for DP clipping).
+    pub fn l2_norm(&self) -> f64 {
+        let mut acc = 0.0f64;
+        for t in self.map.values() {
+            if let Some(v) = t.as_f32() {
+                for &x in v {
+                    acc += (x as f64) * (x as f64);
+                }
+            }
+        }
+        acc.sqrt()
+    }
+
+    /// Max absolute difference vs another dict (test helper).
+    pub fn max_abs_diff(&self, other: &TensorDict) -> f32 {
+        let mut m = 0.0f32;
+        for (k, t) in self.iter() {
+            if let (Some(a), Some(b)) = (t.as_f32(), other.get(k).and_then(|o| o.as_f32())) {
+                for (x, y) in a.iter().zip(b) {
+                    m = m.max((x - y).abs());
+                }
+            }
+        }
+        m
+    }
+
+    // ----------------------------------------------------------- wire
+
+    /// Serialize to the binary wire format:
+    /// `u32 count | per tensor: str name, u8 dtype, u8 ndim, u32 dims.., u32 len, payload`.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let mut w = Writer::with_capacity(self.byte_size() + 64 * self.len() + 4);
+        w.u32(self.map.len() as u32);
+        for (name, t) in &self.map {
+            w.str(name);
+            w.u8(t.dtype().tag());
+            w.u8(t.shape.len() as u8);
+            for &d in &t.shape {
+                w.u32(d as u32);
+            }
+            match &t.data {
+                Data::F32(v) => {
+                    w.u32(v.len() as u32);
+                    w.bytes(bytes::f32_slice_as_bytes(v));
+                }
+                Data::I32(v) => {
+                    w.u32(v.len() as u32);
+                    w.bytes(bytes::i32_slice_as_bytes(v));
+                }
+            }
+        }
+        w.into_vec()
+    }
+
+    pub fn from_bytes(buf: &[u8]) -> Result<TensorDict, ByteError> {
+        let mut r = Reader::new(buf);
+        let count = r.u32()? as usize;
+        let mut out = TensorDict::new();
+        for _ in 0..count {
+            let name = r.str()?;
+            let dtype = DType::from_tag(r.u8()?).ok_or(ByteError {
+                offset: r.pos(),
+                msg: "bad dtype tag".into(),
+            })?;
+            let ndim = r.u8()? as usize;
+            let mut shape = Vec::with_capacity(ndim);
+            for _ in 0..ndim {
+                shape.push(r.u32()? as usize);
+            }
+            let len = r.u32()? as usize;
+            if shape.iter().product::<usize>() != len {
+                return Err(ByteError {
+                    offset: r.pos(),
+                    msg: format!("tensor {name}: shape/len mismatch"),
+                });
+            }
+            let raw = r.take(len * 4)?;
+            let t = match dtype {
+                DType::F32 => Tensor::f32(shape, bytes::bytes_to_f32_vec(raw)?),
+                DType::I32 => Tensor::i32(shape, bytes::bytes_to_i32_vec(raw)?),
+            };
+            out.insert(name, t);
+        }
+        r.expect_end()?;
+        Ok(out)
+    }
+}
+
+/// The aggregation hot loop: `a[i] += alpha * b[i]`. Kept as a free fn so
+/// benches can hit it directly; written to let LLVM auto-vectorize.
+#[inline]
+pub fn axpy_slice(a: &mut [f32], alpha: f32, b: &[f32]) {
+    let n = a.len().min(b.len());
+    let (a, b) = (&mut a[..n], &b[..n]);
+    for i in 0..n {
+        a[i] += alpha * b[i];
+    }
+}
+
+// --------------------------------------------------------------------- f16
+
+/// Encode an f32 slice as IEEE half-precision bytes (quantization filter's
+/// transport format).
+pub fn f32_to_f16_bytes(v: &[f32]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(v.len() * 2);
+    for &x in v {
+        out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
+    }
+    out
+}
+
+/// Decode IEEE half-precision bytes back to f32.
+pub fn f16_bytes_to_f32(b: &[u8]) -> Result<Vec<f32>, ByteError> {
+    if b.len() % 2 != 0 {
+        return Err(ByteError {
+            offset: 0,
+            msg: "f16 payload length must be even".into(),
+        });
+    }
+    Ok(b.chunks_exact(2)
+        .map(|c| f16_bits_to_f32(u16::from_le_bytes(c.try_into().unwrap())))
+        .collect())
+}
+
+fn f32_to_f16_bits(x: f32) -> u16 {
+    let bits = x.to_bits();
+    let sign = ((bits >> 16) & 0x8000) as u16;
+    let exp = ((bits >> 23) & 0xFF) as i32;
+    let frac = bits & 0x007F_FFFF;
+    if exp == 255 {
+        // Inf/NaN
+        return sign | 0x7C00 | if frac != 0 { 0x0200 } else { 0 };
+    }
+    let new_exp = exp - 127 + 15;
+    if new_exp >= 31 {
+        return sign | 0x7C00; // overflow -> Inf
+    }
+    if new_exp <= 0 {
+        // subnormal or zero
+        if new_exp < -10 {
+            return sign;
+        }
+        let mant = frac | 0x0080_0000;
+        let shift = 14 - new_exp;
+        let mut half = (mant >> shift) as u16;
+        // round to nearest even
+        if (mant >> (shift - 1)) & 1 != 0 {
+            half += 1;
+        }
+        return sign | half;
+    }
+    let mut half = sign | ((new_exp as u16) << 10) | ((frac >> 13) as u16);
+    // round to nearest (ties up — fine for transport)
+    if frac & 0x1000 != 0 {
+        half = half.wrapping_add(1);
+    }
+    half
+}
+
+fn f16_bits_to_f32(h: u16) -> f32 {
+    let sign = ((h & 0x8000) as u32) << 16;
+    let exp = ((h >> 10) & 0x1F) as u32;
+    let frac = (h & 0x03FF) as u32;
+    let bits = if exp == 0 {
+        if frac == 0 {
+            sign
+        } else {
+            // subnormal: normalize
+            let mut e = -1i32;
+            let mut f = frac;
+            while f & 0x0400 == 0 {
+                f <<= 1;
+                e -= 1;
+            }
+            let f = (f & 0x03FF) << 13;
+            let e = (127 - 15 + e + 1) as u32;
+            sign | (e << 23) | f
+        }
+    } else if exp == 31 {
+        sign | 0x7F80_0000 | (frac << 13)
+    } else {
+        sign | ((exp + 127 - 15) << 23) | (frac << 13)
+    };
+    f32::from_bits(bits)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn sample_dict() -> TensorDict {
+        let mut d = TensorDict::new();
+        d.insert("b.weight", Tensor::f32(vec![2, 3], vec![1., 2., 3., 4., 5., 6.]));
+        d.insert("a.bias", Tensor::f32(vec![3], vec![-1., 0., 1.]));
+        d.insert("ids", Tensor::i32(vec![2], vec![7, -9]));
+        d
+    }
+
+    #[test]
+    fn iteration_is_sorted_by_name() {
+        let d = sample_dict();
+        let names: Vec<&str> = d.names().collect();
+        assert_eq!(names, vec!["a.bias", "b.weight", "ids"]);
+    }
+
+    #[test]
+    fn wire_roundtrip() {
+        let d = sample_dict();
+        let bytes = d.to_bytes();
+        let d2 = TensorDict::from_bytes(&bytes).unwrap();
+        assert_eq!(d, d2);
+    }
+
+    #[test]
+    fn wire_rejects_corruption() {
+        let d = sample_dict();
+        let mut bytes = d.to_bytes();
+        bytes.truncate(bytes.len() - 3);
+        assert!(TensorDict::from_bytes(&bytes).is_err());
+        assert!(TensorDict::from_bytes(&[9, 9]).is_err());
+    }
+
+    #[test]
+    fn axpy_and_scale() {
+        let mut a = sample_dict();
+        let b = sample_dict();
+        a.axpy(2.0, &b);
+        assert_eq!(a.get("a.bias").unwrap().as_f32().unwrap(), &[-3., 0., 3.]);
+        // i32 tensors are untouched by scale
+        a.scale(0.5);
+        assert_eq!(a.get("a.bias").unwrap().as_f32().unwrap(), &[-1.5, 0., 1.5]);
+        assert_eq!(a.get("ids").unwrap().as_i32().unwrap(), &[7, -9]);
+    }
+
+    #[test]
+    fn subset_and_schema() {
+        let d = sample_dict();
+        let s = d.subset(&["a.bias".to_string(), "missing".to_string()]);
+        assert_eq!(s.len(), 1);
+        assert!(d.same_schema(&d.clone()));
+        assert!(!d.same_schema(&s));
+        let mut wrong_shape = d.clone();
+        wrong_shape.insert("a.bias", Tensor::zeros(vec![4]));
+        assert!(!d.same_schema(&wrong_shape));
+    }
+
+    #[test]
+    fn zeros_like_and_norm() {
+        let d = sample_dict();
+        let z = d.zeros_like();
+        assert!(d.same_schema(&z));
+        assert_eq!(z.l2_norm(), 0.0);
+        let expected = (1.0f64 + 4. + 9. + 16. + 25. + 36. + 1. + 0. + 1.).sqrt();
+        assert!((d.l2_norm() - expected).abs() < 1e-9);
+    }
+
+    #[test]
+    fn f16_roundtrip_known_values() {
+        for &x in &[0.0f32, 1.0, -1.0, 0.5, 65504.0, 1e-8, -2.25, 3.14159] {
+            let enc = f32_to_f16_bytes(&[x]);
+            let dec = f16_bytes_to_f32(&enc).unwrap()[0];
+            let tol = (x.abs() * 1e-3).max(1e-7);
+            assert!((dec - x).abs() <= tol, "{x} -> {dec}");
+        }
+        // overflow saturates to Inf
+        let enc = f32_to_f16_bytes(&[1e9]);
+        assert!(f16_bytes_to_f32(&enc).unwrap()[0].is_infinite());
+    }
+
+    #[test]
+    fn prop_wire_roundtrip() {
+        prop::check("tensordict wire roundtrip", 60, |g| {
+            let mut d = TensorDict::new();
+            let n_tensors = g.usize_in(0, 6);
+            for i in 0..n_tensors {
+                let data = g.f32s(0, 200);
+                let name = format!("{}_{i}", g.ident());
+                d.insert(name, Tensor::f32(vec![data.len()], data));
+            }
+            let d2 = TensorDict::from_bytes(&d.to_bytes()).map_err(|e| e.to_string())?;
+            prop::assert_that(d == d2, "roundtrip mismatch")
+        });
+    }
+
+    #[test]
+    fn prop_f16_roundtrip_within_half_precision() {
+        prop::check("f16 transport error bound", 100, |g| {
+            let x = g.f32_in(-1000.0, 1000.0);
+            let dec = f16_bytes_to_f32(&f32_to_f16_bytes(&[x])).unwrap()[0];
+            // half has ~2^-11 relative precision
+            prop::assert_close(dec as f64, x as f64, 2e-3, "f16")
+        });
+    }
+
+    #[test]
+    fn prop_axpy_matches_f64_oracle() {
+        prop::check("axpy vs f64 oracle", 60, |g| {
+            let a0 = g.f32s(1, 300);
+            let b: Vec<f32> = (0..a0.len()).map(|_| g.f32_in(-10.0, 10.0)).collect();
+            let alpha = g.f32_in(-2.0, 2.0);
+            let mut a = a0.clone();
+            axpy_slice(&mut a, alpha, &b);
+            for i in 0..a.len() {
+                let oracle = a0[i] as f64 + alpha as f64 * b[i] as f64;
+                prop::assert_close(a[i] as f64, oracle, 1e-5, "axpy elem")?;
+            }
+            Ok(())
+        });
+    }
+}

@@ -1,0 +1,138 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set):
+//! warmup + timed iterations, reporting mean / p50 / p95 and derived
+//! throughput. Used by the `cargo bench` targets in `rust/benches/`.
+
+use std::time::{Duration, Instant};
+
+/// Result of one benchmark case.
+#[derive(Debug, Clone)]
+pub struct BenchStats {
+    pub name: String,
+    pub iters: usize,
+    pub mean_ns: f64,
+    pub p50_ns: f64,
+    pub p95_ns: f64,
+    pub min_ns: f64,
+}
+
+impl BenchStats {
+    /// Mean throughput in items/sec given items processed per iteration.
+    pub fn per_sec(&self, items_per_iter: f64) -> f64 {
+        items_per_iter / (self.mean_ns / 1e9)
+    }
+
+    /// Mean throughput in MB/s given bytes per iteration.
+    pub fn mb_per_sec(&self, bytes_per_iter: f64) -> f64 {
+        self.per_sec(bytes_per_iter) / 1e6
+    }
+}
+
+/// Time `f` for `iters` iterations after `warmup` runs.
+pub fn bench(name: &str, warmup: usize, iters: usize, mut f: impl FnMut()) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_nanos() as f64);
+    }
+    stats_from(name, samples)
+}
+
+/// Like [`bench`] but each iteration may return early-exit data; iteration
+/// count adapts so the total run stays under `budget`.
+pub fn bench_budget(name: &str, budget: Duration, mut f: impl FnMut()) -> BenchStats {
+    // calibrate with one run
+    let t0 = Instant::now();
+    f();
+    let once = t0.elapsed();
+    let iters = ((budget.as_secs_f64() / once.as_secs_f64().max(1e-9)) as usize).clamp(3, 1000);
+    bench(name, 1.min(iters / 3), iters, f)
+}
+
+fn stats_from(name: &str, mut samples: Vec<f64>) -> BenchStats {
+    samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = samples.len();
+    let mean = samples.iter().sum::<f64>() / n as f64;
+    BenchStats {
+        name: name.to_string(),
+        iters: n,
+        mean_ns: mean,
+        p50_ns: samples[n / 2],
+        p95_ns: samples[(n * 95 / 100).min(n - 1)],
+        min_ns: samples[0],
+    }
+}
+
+/// Pretty-print a stats row (optionally with a throughput column).
+pub fn report(s: &BenchStats, throughput: Option<String>) {
+    let fmt = |ns: f64| -> String {
+        if ns >= 1e9 {
+            format!("{:.2}s", ns / 1e9)
+        } else if ns >= 1e6 {
+            format!("{:.2}ms", ns / 1e6)
+        } else if ns >= 1e3 {
+            format!("{:.2}us", ns / 1e3)
+        } else {
+            format!("{ns:.0}ns")
+        }
+    };
+    println!(
+        "  {:<44} {:>9} {:>9} {:>9}  x{:<5} {}",
+        s.name,
+        fmt(s.mean_ns),
+        fmt(s.p50_ns),
+        fmt(s.p95_ns),
+        s.iters,
+        throughput.unwrap_or_default()
+    );
+}
+
+/// Section header matching [`report`] columns.
+pub fn header(title: &str) {
+    println!("\n== {title} ==");
+    println!(
+        "  {:<44} {:>9} {:>9} {:>9}  {:<6} {}",
+        "case", "mean", "p50", "p95", "iters", "throughput"
+    );
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_stats() {
+        let s = bench("noop-ish", 2, 50, || {
+            std::hint::black_box((0..100).sum::<u64>());
+        });
+        assert_eq!(s.iters, 50);
+        assert!(s.mean_ns > 0.0);
+        assert!(s.p50_ns <= s.p95_ns);
+        assert!(s.min_ns <= s.p50_ns);
+    }
+
+    #[test]
+    fn throughput_math() {
+        let s = BenchStats {
+            name: "t".into(),
+            iters: 1,
+            mean_ns: 1e9, // 1 second
+            p50_ns: 1e9,
+            p95_ns: 1e9,
+            min_ns: 1e9,
+        };
+        assert!((s.per_sec(10.0) - 10.0).abs() < 1e-9);
+        assert!((s.mb_per_sec(5e6) - 5.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn budget_adapts_iters() {
+        let s = bench_budget("b", Duration::from_millis(20), || {
+            std::thread::sleep(Duration::from_millis(2));
+        });
+        assert!(s.iters >= 3 && s.iters <= 20, "{}", s.iters);
+    }
+}

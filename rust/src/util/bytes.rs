@@ -1,0 +1,267 @@
+//! Little-endian byte buffer reader/writer + CRC32, the wire-format
+//! substrate under [`crate::tensor`] serialization and the [`crate::sfm`]
+//! frame layer.
+
+/// Append-only little-endian writer over a `Vec<u8>`.
+#[derive(Debug, Default)]
+pub struct Writer {
+    buf: Vec<u8>,
+}
+
+impl Writer {
+    pub fn new() -> Writer {
+        Writer { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(cap: usize) -> Writer {
+        Writer {
+            buf: Vec::with_capacity(cap),
+        }
+    }
+
+    pub fn u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+    pub fn u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+    pub fn bytes(&mut self, v: &[u8]) {
+        self.buf.extend_from_slice(v);
+    }
+    /// Length-prefixed (u32) string.
+    pub fn str(&mut self, s: &str) {
+        self.u32(s.len() as u32);
+        self.bytes(s.as_bytes());
+    }
+    /// Length-prefixed (u32) byte blob.
+    pub fn blob(&mut self, b: &[u8]) {
+        self.u32(b.len() as u32);
+        self.bytes(b);
+    }
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+/// Error for truncated or malformed binary input.
+#[derive(Debug, Clone, PartialEq, Eq, thiserror::Error)]
+#[error("bytes error at offset {offset}: {msg}")]
+pub struct ByteError {
+    pub offset: usize,
+    pub msg: String,
+}
+
+/// Cursor-based little-endian reader.
+#[derive(Debug)]
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Reader<'a> {
+        Reader { buf, pos: 0 }
+    }
+
+    fn err(&self, msg: &str) -> ByteError {
+        ByteError {
+            offset: self.pos,
+            msg: msg.to_string(),
+        }
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], ByteError> {
+        if self.pos + n > self.buf.len() {
+            return Err(self.err(&format!(
+                "need {n} bytes, {} remain",
+                self.buf.len() - self.pos
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, ByteError> {
+        Ok(self.take(1)?[0])
+    }
+    pub fn u16(&mut self) -> Result<u16, ByteError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+    pub fn u32(&mut self) -> Result<u32, ByteError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn u64(&mut self) -> Result<u64, ByteError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+    pub fn f32(&mut self) -> Result<f32, ByteError> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+    pub fn str(&mut self) -> Result<String, ByteError> {
+        let n = self.u32()? as usize;
+        let bytes = self.take(n)?;
+        String::from_utf8(bytes.to_vec()).map_err(|_| self.err("invalid utf8"))
+    }
+    pub fn blob(&mut self) -> Result<&'a [u8], ByteError> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+    pub fn pos(&self) -> usize {
+        self.pos
+    }
+    pub fn expect_end(&self) -> Result<(), ByteError> {
+        if self.remaining() == 0 {
+            Ok(())
+        } else {
+            Err(self.err(&format!("{} trailing bytes", self.remaining())))
+        }
+    }
+}
+
+/// CRC-32 (IEEE 802.3, reflected 0xEDB88320) with a lazily-built table.
+/// Used as the per-frame checksum in the SFM layer.
+pub fn crc32(data: &[u8]) -> u32 {
+    crc32_update(0xFFFF_FFFF, data) ^ 0xFFFF_FFFF
+}
+
+/// Streaming form: feed successive chunks with `state` starting at
+/// `0xFFFF_FFFF`, then XOR the final state with `0xFFFF_FFFF`.
+pub fn crc32_update(mut state: u32, data: &[u8]) -> u32 {
+    static TABLE: std::sync::OnceLock<[u32; 256]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0u32; 256];
+        for (i, e) in t.iter_mut().enumerate() {
+            let mut c = i as u32;
+            for _ in 0..8 {
+                c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            }
+            *e = c;
+        }
+        t
+    });
+    for &b in data {
+        state = table[((state ^ b as u32) & 0xFF) as usize] ^ (state >> 8);
+    }
+    state
+}
+
+/// Reinterpret f32 slice as bytes (little-endian hosts only, which this
+/// crate targets; asserts at compile time below).
+pub fn f32_slice_as_bytes(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Copy bytes into an f32 vec (handles unaligned input).
+pub fn bytes_to_f32_vec(b: &[u8]) -> Result<Vec<f32>, ByteError> {
+    if b.len() % 4 != 0 {
+        return Err(ByteError {
+            offset: 0,
+            msg: format!("byte length {} not a multiple of 4", b.len()),
+        });
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| f32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+/// Same for i32.
+pub fn bytes_to_i32_vec(b: &[u8]) -> Result<Vec<i32>, ByteError> {
+    if b.len() % 4 != 0 {
+        return Err(ByteError {
+            offset: 0,
+            msg: format!("byte length {} not a multiple of 4", b.len()),
+        });
+    }
+    Ok(b.chunks_exact(4)
+        .map(|c| i32::from_le_bytes(c.try_into().unwrap()))
+        .collect())
+}
+
+pub fn i32_slice_as_bytes(v: &[i32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+#[cfg(target_endian = "big")]
+compile_error!("fedflare wire format assumes a little-endian host");
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_all_types() {
+        let mut w = Writer::new();
+        w.u8(7);
+        w.u16(300);
+        w.u32(70_000);
+        w.u64(1 << 40);
+        w.f32(2.5);
+        w.str("hello");
+        w.blob(&[1, 2, 3]);
+        let buf = w.into_vec();
+        let mut r = Reader::new(&buf);
+        assert_eq!(r.u8().unwrap(), 7);
+        assert_eq!(r.u16().unwrap(), 300);
+        assert_eq!(r.u32().unwrap(), 70_000);
+        assert_eq!(r.u64().unwrap(), 1 << 40);
+        assert_eq!(r.f32().unwrap(), 2.5);
+        assert_eq!(r.str().unwrap(), "hello");
+        assert_eq!(r.blob().unwrap(), &[1, 2, 3]);
+        r.expect_end().unwrap();
+    }
+
+    #[test]
+    fn truncation_is_detected() {
+        let mut w = Writer::new();
+        w.u32(5);
+        let buf = w.into_vec();
+        let mut r = Reader::new(&buf[..2]);
+        assert!(r.u32().is_err());
+    }
+
+    #[test]
+    fn crc32_known_vectors() {
+        // standard test vector
+        assert_eq!(crc32(b"123456789"), 0xCBF4_3926);
+        assert_eq!(crc32(b""), 0);
+    }
+
+    #[test]
+    fn crc32_streaming_equals_oneshot() {
+        let data = b"the quick brown fox jumps over the lazy dog";
+        let mut st = 0xFFFF_FFFFu32;
+        for chunk in data.chunks(7) {
+            st = crc32_update(st, chunk);
+        }
+        assert_eq!(st ^ 0xFFFF_FFFF, crc32(data));
+    }
+
+    #[test]
+    fn f32_bytes_roundtrip() {
+        let v = vec![1.0f32, -2.5, 3.25e7];
+        let b = f32_slice_as_bytes(&v);
+        assert_eq!(bytes_to_f32_vec(b).unwrap(), v);
+        assert!(bytes_to_f32_vec(&b[..5]).is_err());
+    }
+}

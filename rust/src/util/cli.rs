@@ -1,0 +1,224 @@
+//! Minimal declarative CLI argument parser (clap is not in the offline
+//! vendor set). Supports `--flag`, `--key value`, `--key=value`, and
+//! positional arguments, with generated `--help` text.
+
+use std::collections::BTreeMap;
+
+/// One declared option.
+#[derive(Debug, Clone)]
+struct Opt {
+    name: &'static str,
+    help: &'static str,
+    takes_value: bool,
+    default: Option<String>,
+}
+
+/// Declarative parser for one (sub)command.
+#[derive(Debug)]
+pub struct Args {
+    program: String,
+    about: &'static str,
+    opts: Vec<Opt>,
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn new(program: &str, about: &'static str) -> Args {
+        Args {
+            program: program.to_string(),
+            about,
+            opts: Vec::new(),
+            values: BTreeMap::new(),
+            flags: BTreeMap::new(),
+            positional: Vec::new(),
+        }
+    }
+
+    /// Declare `--name <value>` with an optional default.
+    pub fn opt(mut self, name: &'static str, default: Option<&str>, help: &'static str) -> Args {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: true,
+            default: default.map(|s| s.to_string()),
+        });
+        self
+    }
+
+    /// Declare a boolean `--name` flag.
+    pub fn flag(mut self, name: &'static str, help: &'static str) -> Args {
+        self.opts.push(Opt {
+            name,
+            help,
+            takes_value: false,
+            default: None,
+        });
+        self
+    }
+
+    /// Parse a raw token list (without the program name). Returns an error
+    /// string suitable for printing; `--help` returns `Err` carrying the
+    /// usage text with an `"HELP"` marker prefix.
+    pub fn parse(mut self, tokens: &[String]) -> Result<Parsed, String> {
+        let mut i = 0;
+        while i < tokens.len() {
+            let tok = &tokens[i];
+            if tok == "--help" || tok == "-h" {
+                return Err(format!("HELP\n{}", self.usage()));
+            }
+            if let Some(rest) = tok.strip_prefix("--") {
+                let (name, inline) = match rest.split_once('=') {
+                    Some((n, v)) => (n.to_string(), Some(v.to_string())),
+                    None => (rest.to_string(), None),
+                };
+                let opt = self
+                    .opts
+                    .iter()
+                    .find(|o| o.name == name)
+                    .ok_or_else(|| format!("unknown option --{name}\n{}", self.usage()))?
+                    .clone();
+                if opt.takes_value {
+                    let value = match inline {
+                        Some(v) => v,
+                        None => {
+                            i += 1;
+                            tokens
+                                .get(i)
+                                .cloned()
+                                .ok_or_else(|| format!("--{name} requires a value"))?
+                        }
+                    };
+                    self.values.insert(name, value);
+                } else {
+                    if inline.is_some() {
+                        return Err(format!("--{name} does not take a value"));
+                    }
+                    self.flags.insert(name, true);
+                }
+            } else {
+                self.positional.push(tok.clone());
+            }
+            i += 1;
+        }
+        // apply defaults
+        for opt in &self.opts {
+            if opt.takes_value && !self.values.contains_key(opt.name) {
+                if let Some(d) = &opt.default {
+                    self.values.insert(opt.name.to_string(), d.clone());
+                }
+            }
+        }
+        Ok(Parsed {
+            values: self.values,
+            flags: self.flags,
+            positional: self.positional,
+        })
+    }
+
+    pub fn usage(&self) -> String {
+        let mut s = format!("{} — {}\n\noptions:\n", self.program, self.about);
+        for opt in &self.opts {
+            let left = if opt.takes_value {
+                format!("  --{} <v>", opt.name)
+            } else {
+                format!("  --{}", opt.name)
+            };
+            let default = opt
+                .default
+                .as_ref()
+                .map(|d| format!(" [default: {d}]"))
+                .unwrap_or_default();
+            s.push_str(&format!("{left:<26}{}{default}\n", opt.help));
+        }
+        s
+    }
+}
+
+/// Parsed argument values with typed accessors.
+#[derive(Debug)]
+pub struct Parsed {
+    values: BTreeMap<String, String>,
+    flags: BTreeMap<String, bool>,
+    positional: Vec<String>,
+}
+
+impl Parsed {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(|s| s.as_str())
+    }
+    pub fn req(&self, name: &str) -> Result<&str, String> {
+        self.get(name).ok_or_else(|| format!("--{name} is required"))
+    }
+    pub fn get_usize(&self, name: &str) -> Result<usize, String> {
+        self.req(name)?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+    pub fn get_u64(&self, name: &str) -> Result<u64, String> {
+        self.req(name)?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+    pub fn get_f64(&self, name: &str) -> Result<f64, String> {
+        self.req(name)?
+            .parse()
+            .map_err(|e| format!("--{name}: {e}"))
+    }
+    pub fn has(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toks(s: &[&str]) -> Vec<String> {
+        s.iter().map(|t| t.to_string()).collect()
+    }
+
+    fn build() -> Args {
+        Args::new("test", "a test command")
+            .opt("rounds", Some("3"), "number of rounds")
+            .opt("name", None, "a name")
+            .flag("verbose", "chatty output")
+    }
+
+    #[test]
+    fn parses_values_flags_positional() {
+        let p = build()
+            .parse(&toks(&["--rounds", "5", "--verbose", "pos1", "--name=x"]))
+            .unwrap();
+        assert_eq!(p.get_usize("rounds").unwrap(), 5);
+        assert_eq!(p.get("name"), Some("x"));
+        assert!(p.has("verbose"));
+        assert_eq!(p.positional(), &["pos1".to_string()]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let p = build().parse(&toks(&[])).unwrap();
+        assert_eq!(p.get_usize("rounds").unwrap(), 3);
+        assert_eq!(p.get("name"), None);
+        assert!(!p.has("verbose"));
+    }
+
+    #[test]
+    fn unknown_and_missing_value_error() {
+        assert!(build().parse(&toks(&["--nope"])).is_err());
+        assert!(build().parse(&toks(&["--name"])).is_err());
+        assert!(build().parse(&toks(&["--verbose=1"])).is_err());
+    }
+
+    #[test]
+    fn help_contains_options() {
+        let err = build().parse(&toks(&["--help"])).unwrap_err();
+        assert!(err.starts_with("HELP"));
+        assert!(err.contains("--rounds"));
+    }
+}

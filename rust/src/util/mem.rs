@@ -1,0 +1,184 @@
+//! Memory accounting for the Fig-5 experiment: a global tracked-buffer
+//! counter (incremented by the streaming layer's payload allocations) plus
+//! a `/proc/self/status` RSS reader, and a background sampler thread that
+//! writes a time series.
+
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
+
+/// Bytes currently held by tracked streaming buffers (global).
+static TRACKED: AtomicI64 = AtomicI64::new(0);
+/// High-water mark of `TRACKED`.
+static TRACKED_PEAK: AtomicU64 = AtomicU64::new(0);
+
+/// Record an allocation of `n` bytes in the streaming layer.
+pub fn track_alloc(n: usize) {
+    let cur = TRACKED.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
+    TRACKED_PEAK.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+}
+
+/// Record a release of `n` bytes.
+pub fn track_free(n: usize) {
+    TRACKED.fetch_sub(n as i64, Ordering::Relaxed);
+}
+
+/// Current tracked bytes.
+pub fn tracked_bytes() -> i64 {
+    TRACKED.load(Ordering::Relaxed)
+}
+
+/// High-water mark since process start (or [`reset_peak`]).
+pub fn tracked_peak() -> u64 {
+    TRACKED_PEAK.load(Ordering::Relaxed)
+}
+
+pub fn reset_peak() {
+    TRACKED_PEAK.store(tracked_bytes().max(0) as u64, Ordering::Relaxed);
+}
+
+/// RAII guard that tracks a buffer's size for its lifetime.
+#[derive(Debug)]
+pub struct TrackedBuf {
+    data: Vec<u8>,
+}
+
+impl TrackedBuf {
+    pub fn new(data: Vec<u8>) -> TrackedBuf {
+        track_alloc(data.len());
+        TrackedBuf { data }
+    }
+    pub fn as_slice(&self) -> &[u8] {
+        &self.data
+    }
+    pub fn len(&self) -> usize {
+        self.data.len()
+    }
+    pub fn is_empty(&self) -> bool {
+        self.data.is_empty()
+    }
+    /// Release tracking and return the inner buffer.
+    pub fn into_vec(mut self) -> Vec<u8> {
+        track_free(self.data.len());
+        std::mem::take(&mut self.data)
+    }
+}
+
+impl Drop for TrackedBuf {
+    fn drop(&mut self) {
+        track_free(self.data.len());
+    }
+}
+
+/// Resident set size of this process in bytes (Linux `/proc/self/status`,
+/// `VmRSS`). Returns 0 if unavailable.
+pub fn rss_bytes() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("VmRSS:") {
+            let kb: u64 = rest
+                .trim()
+                .trim_end_matches(" kB")
+                .trim()
+                .parse()
+                .unwrap_or(0);
+            return kb * 1024;
+        }
+    }
+    0
+}
+
+/// One memory sample.
+#[derive(Debug, Clone)]
+pub struct MemSample {
+    pub t_ms: u64,
+    pub tracked: i64,
+    pub rss: u64,
+    pub label: String,
+}
+
+/// Background sampler: records tracked + RSS every `period` until stopped.
+pub struct MemSampler {
+    stop_tx: mpsc::Sender<()>,
+    handle: std::thread::JoinHandle<Vec<MemSample>>,
+}
+
+impl MemSampler {
+    pub fn start(period: Duration, label: &str) -> MemSampler {
+        let (stop_tx, stop_rx) = mpsc::channel();
+        let label = label.to_string();
+        let handle = std::thread::spawn(move || {
+            let t0 = Instant::now();
+            let mut samples = Vec::new();
+            loop {
+                samples.push(MemSample {
+                    t_ms: t0.elapsed().as_millis() as u64,
+                    tracked: tracked_bytes(),
+                    rss: rss_bytes(),
+                    label: label.clone(),
+                });
+                match stop_rx.recv_timeout(period) {
+                    Ok(()) | Err(mpsc::RecvTimeoutError::Disconnected) => break,
+                    Err(mpsc::RecvTimeoutError::Timeout) => continue,
+                }
+            }
+            samples
+        });
+        MemSampler { stop_tx, handle }
+    }
+
+    /// Stop and collect the series.
+    pub fn stop(self) -> Vec<MemSample> {
+        let _ = self.stop_tx.send(());
+        self.handle.join().unwrap_or_default()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn tracked_buf_balances() {
+        let before = tracked_bytes();
+        {
+            let _b = TrackedBuf::new(vec![0u8; 4096]);
+            assert!(tracked_bytes() >= before + 4096);
+        }
+        assert_eq!(tracked_bytes(), before);
+    }
+
+    #[test]
+    fn into_vec_releases_tracking() {
+        let before = tracked_bytes();
+        let b = TrackedBuf::new(vec![1u8; 128]);
+        let v = b.into_vec();
+        assert_eq!(v.len(), 128);
+        assert_eq!(tracked_bytes(), before);
+    }
+
+    #[test]
+    fn peak_moves_up() {
+        reset_peak();
+        let base = tracked_peak();
+        let _b = TrackedBuf::new(vec![0u8; 1 << 16]);
+        assert!(tracked_peak() >= base);
+    }
+
+    #[test]
+    fn rss_reads_something_on_linux() {
+        let rss = rss_bytes();
+        assert!(rss > 1024 * 1024, "rss={rss}");
+    }
+
+    #[test]
+    fn sampler_collects() {
+        let s = MemSampler::start(Duration::from_millis(5), "test");
+        std::thread::sleep(Duration::from_millis(30));
+        let samples = s.stop();
+        assert!(samples.len() >= 3);
+        assert!(samples.iter().all(|s| s.label == "test"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Substrate utilities built from scratch (no external crates available
+//! offline beyond the `xla` closure): JSON, PRNG + distributions, byte
+//! buffers + CRC32, CLI parsing, memory accounting, and a mini
+//! property-testing framework.
+
+pub mod bench;
+pub mod bytes;
+pub mod cli;
+pub mod json;
+pub mod mem;
+pub mod prop;
+pub mod rng;

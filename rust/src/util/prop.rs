@@ -1,0 +1,189 @@
+//! Mini property-testing framework (proptest is not in the offline vendor
+//! set). Seeded case generation with failure seeds printed for replay:
+//!
+//! ```ignore
+//! prop::check("chunk/reassemble identity", 200, |g| {
+//!     let data = g.bytes(0, 1 << 16);
+//!     let chunk = g.usize_in(1, 4096);
+//!     prop::assert_that(reassemble(chunkify(&data, chunk)) == data, "mismatch")
+//! });
+//! ```
+
+use crate::util::rng::Rng;
+
+/// Per-case generator handed to the property closure.
+pub struct Gen {
+    rng: Rng,
+    /// Case index (0..n); early cases bias small so shrinking is less needed.
+    pub case: usize,
+    total: usize,
+}
+
+impl Gen {
+    /// Size hint in [0,1]: early cases are "small", later cases large.
+    fn size(&self) -> f64 {
+        if self.total <= 1 {
+            1.0
+        } else {
+            (self.case as f64 / (self.total - 1) as f64).max(0.05)
+        }
+    }
+
+    pub fn u64(&mut self) -> u64 {
+        self.rng.next_u64()
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        self.rng.f64()
+    }
+
+    pub fn f32_in(&mut self, lo: f32, hi: f32) -> f32 {
+        lo + (hi - lo) * self.rng.f32()
+    }
+
+    /// usize in [lo, hi], biased toward lo for early cases.
+    pub fn usize_in(&mut self, lo: usize, hi: usize) -> usize {
+        assert!(hi >= lo);
+        let span = ((hi - lo) as f64 * self.size()).ceil() as usize;
+        lo + self.rng.usize_below(span.max(1).min(hi - lo + 1))
+    }
+
+    pub fn bool(&mut self) -> bool {
+        self.rng.bool(0.5)
+    }
+
+    /// Random byte vector with length in [min_len, max_len].
+    pub fn bytes(&mut self, min_len: usize, max_len: usize) -> Vec<u8> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| (self.rng.next_u64() & 0xFF) as u8).collect()
+    }
+
+    /// Random f32 vector (finite values).
+    pub fn f32s(&mut self, min_len: usize, max_len: usize) -> Vec<f32> {
+        let n = self.usize_in(min_len, max_len);
+        (0..n).map(|_| self.f32_in(-100.0, 100.0)).collect()
+    }
+
+    /// Random short ASCII identifier.
+    pub fn ident(&mut self) -> String {
+        let n = self.usize_in(1, 12);
+        (0..n)
+            .map(|_| (b'a' + (self.rng.below(26) as u8)) as char)
+            .collect()
+    }
+
+    /// Pick one element of a slice.
+    pub fn pick<'a, T>(&mut self, items: &'a [T]) -> &'a T {
+        &items[self.rng.usize_below(items.len())]
+    }
+
+    /// Access the underlying RNG for custom sampling.
+    pub fn rng(&mut self) -> &mut Rng {
+        &mut self.rng
+    }
+}
+
+/// Run `n` cases of a property. Panics (with the failing seed) on the
+/// first failure. Set `FEDFLARE_PROP_SEED` to replay a single case.
+pub fn check(name: &str, n: usize, mut property: impl FnMut(&mut Gen) -> Result<(), String>) {
+    if let Ok(seed_str) = std::env::var("FEDFLARE_PROP_SEED") {
+        let seed: u64 = seed_str.parse().expect("FEDFLARE_PROP_SEED must be u64");
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            case: n.saturating_sub(1),
+            total: n,
+        };
+        if let Err(msg) = property(&mut g) {
+            panic!("property '{name}' failed on replay seed {seed}: {msg}");
+        }
+        return;
+    }
+    let base = 0xFEDF_1A2Eu64 ^ (name.len() as u64).wrapping_mul(0x9E37_79B9);
+    for case in 0..n {
+        let seed = base.wrapping_add(case as u64).wrapping_mul(0x2545_F491_4F6C_DD1D);
+        let mut g = Gen {
+            rng: Rng::new(seed),
+            case,
+            total: n,
+        };
+        if let Err(msg) = property(&mut g) {
+            panic!(
+                "property '{name}' failed at case {case}/{n}: {msg}\n\
+                 replay with FEDFLARE_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+/// Helper: convert a boolean condition into the property result type.
+pub fn assert_that(cond: bool, msg: impl Into<String>) -> Result<(), String> {
+    if cond {
+        Ok(())
+    } else {
+        Err(msg.into())
+    }
+}
+
+/// Helper: approximate float equality with context.
+pub fn assert_close(a: f64, b: f64, tol: f64, ctx: &str) -> Result<(), String> {
+    if (a - b).abs() <= tol * (1.0 + a.abs().max(b.abs())) {
+        Ok(())
+    } else {
+        Err(format!("{ctx}: {a} != {b} (tol {tol})"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut count = 0;
+        check("always true", 50, |_g| {
+            count += 1;
+            Ok(())
+        });
+        assert_eq!(count, 50);
+    }
+
+    #[test]
+    #[should_panic(expected = "replay with FEDFLARE_PROP_SEED=")]
+    fn failing_property_reports_seed() {
+        check("always false", 10, |_g| Err("nope".to_string()));
+    }
+
+    #[test]
+    fn generators_respect_bounds() {
+        check("bounds", 100, |g| {
+            let x = g.usize_in(3, 17);
+            assert_that((3..=17).contains(&x), format!("usize_in out of range: {x}"))?;
+            let b = g.bytes(2, 64);
+            assert_that(b.len() >= 2 && b.len() <= 64, "bytes len")?;
+            let f = g.f32_in(-1.0, 1.0);
+            assert_that((-1.0..=1.0).contains(&f), "f32 range")
+        });
+    }
+
+    #[test]
+    fn size_grows_with_case() {
+        let mut first_len = None;
+        let mut last_len = 0;
+        check("sizing", 60, |g| {
+            let v = g.bytes(0, 10_000);
+            if g.case == 0 {
+                first_len = Some(v.len());
+            }
+            last_len = v.len();
+            Ok(())
+        });
+        // later cases are allowed to be big; early biased small
+        assert!(first_len.unwrap() <= 10_000);
+    }
+
+    #[test]
+    fn assert_close_tolerates() {
+        assert!(assert_close(1.0, 1.0 + 1e-12, 1e-9, "x").is_ok());
+        assert!(assert_close(1.0, 2.0, 1e-9, "x").is_err());
+    }
+}

@@ -1,0 +1,322 @@
+//! Deterministic PRNG + sampling distributions (the `rand` crate is not in
+//! the offline vendor set).
+//!
+//! Core generator: **xoshiro256++** seeded via **SplitMix64** — fast,
+//! well-tested statistical quality, trivially reproducible across runs,
+//! which the experiment harness depends on (every figure is regenerated
+//! from a fixed seed).
+
+/// xoshiro256++ generator.
+#[derive(Debug, Clone)]
+pub struct Rng {
+    s: [u64; 4],
+}
+
+impl Rng {
+    /// Seed via SplitMix64 so any u64 (including 0) gives a good state.
+    pub fn new(seed: u64) -> Rng {
+        let mut sm = seed;
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        Rng {
+            s: [next(), next(), next(), next()],
+        }
+    }
+
+    /// Derive an independent stream (for per-client / per-task rngs).
+    pub fn fork(&mut self, tag: u64) -> Rng {
+        Rng::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    pub fn next_u64(&mut self) -> u64 {
+        let s = &mut self.s;
+        let result = s[0]
+            .wrapping_add(s[3])
+            .rotate_left(23)
+            .wrapping_add(s[0]);
+        let t = s[1] << 17;
+        s[2] ^= s[0];
+        s[3] ^= s[1];
+        s[1] ^= s[2];
+        s[0] ^= s[3];
+        s[2] ^= t;
+        s[3] = s[3].rotate_left(45);
+        result
+    }
+
+    /// Uniform in [0, 1).
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform f32 in [0, 1).
+    pub fn f32(&mut self) -> f32 {
+        (self.next_u64() >> 40) as f32 * (1.0 / (1u64 << 24) as f32)
+    }
+
+    /// Uniform integer in [0, n) without modulo bias (Lemire's method).
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        loop {
+            let x = self.next_u64();
+            let (hi, lo) = mul_u64(x, n);
+            if lo >= n || lo >= x.wrapping_neg() % n {
+                return hi;
+            }
+        }
+    }
+
+    /// Uniform in [lo, hi).
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        assert!(hi > lo);
+        lo + self.below(hi - lo)
+    }
+
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    pub fn bool(&mut self, p: f64) -> bool {
+        self.f64() < p
+    }
+
+    /// Standard normal via Box–Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = loop {
+            let u = self.f64();
+            if u > 0.0 {
+                break u;
+            }
+        };
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    pub fn normal_f32(&mut self, mean: f32, std: f32) -> f32 {
+        mean + std * self.normal() as f32
+    }
+
+    /// Gamma(shape, 1) via Marsaglia–Tsang (with Ahrens boost for shape<1).
+    pub fn gamma(&mut self, shape: f64) -> f64 {
+        if shape < 1.0 {
+            // Gamma(a) = Gamma(a+1) * U^(1/a)
+            let g = self.gamma(shape + 1.0);
+            let u = loop {
+                let u = self.f64();
+                if u > 0.0 {
+                    break u;
+                }
+            };
+            return g * u.powf(1.0 / shape);
+        }
+        let d = shape - 1.0 / 3.0;
+        let c = 1.0 / (9.0 * d).sqrt();
+        loop {
+            let x = self.normal();
+            let v = (1.0 + c * x).powi(3);
+            if v <= 0.0 {
+                continue;
+            }
+            let u = self.f64();
+            if u < 1.0 - 0.0331 * x.powi(4)
+                || u.ln() < 0.5 * x * x + d * (1.0 - v + v.ln())
+            {
+                return d * v;
+            }
+        }
+    }
+
+    /// Dirichlet(alpha * ones(k)) — the paper's §4.2 heterogeneity knob.
+    pub fn dirichlet(&mut self, alpha: f64, k: usize) -> Vec<f64> {
+        let mut draws: Vec<f64> = (0..k).map(|_| self.gamma(alpha)).collect();
+        let sum: f64 = draws.iter().sum();
+        if sum <= 0.0 {
+            // pathological underflow at tiny alpha: put all mass on one bin
+            let i = self.usize_below(k);
+            draws.iter_mut().for_each(|d| *d = 0.0);
+            draws[i] = 1.0;
+            return draws;
+        }
+        draws.iter_mut().for_each(|d| *d /= sum);
+        draws
+    }
+
+    /// Sample an index from (unnormalized, non-negative) weights.
+    pub fn categorical(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0, "categorical needs positive mass");
+        let mut x = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            x -= w;
+            if x < 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fisher–Yates shuffle.
+    pub fn shuffle<T>(&mut self, items: &mut [T]) {
+        for i in (1..items.len()).rev() {
+            let j = self.usize_below(i + 1);
+            items.swap(i, j);
+        }
+    }
+
+    /// Sample `n` distinct indices from [0, pool) (partial Fisher–Yates).
+    pub fn choose(&mut self, pool: usize, n: usize) -> Vec<usize> {
+        assert!(n <= pool);
+        let mut idx: Vec<usize> = (0..pool).collect();
+        for i in 0..n {
+            let j = i + self.usize_below(pool - i);
+            idx.swap(i, j);
+        }
+        idx.truncate(n);
+        idx
+    }
+
+    /// Fill with iid N(mean, std) f32 — the manifest `normal:<std>` init.
+    pub fn fill_normal(&mut self, out: &mut [f32], mean: f32, std: f32) {
+        for x in out.iter_mut() {
+            *x = self.normal_f32(mean, std);
+        }
+    }
+}
+
+#[inline]
+fn mul_u64(a: u64, b: u64) -> (u64, u64) {
+    let wide = (a as u128) * (b as u128);
+    ((wide >> 64) as u64, wide as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_and_seed_sensitive() {
+        let mut a = Rng::new(7);
+        let mut b = Rng::new(7);
+        let mut c = Rng::new(8);
+        let xa: Vec<u64> = (0..8).map(|_| a.next_u64()).collect();
+        let xb: Vec<u64> = (0..8).map(|_| b.next_u64()).collect();
+        let xc: Vec<u64> = (0..8).map(|_| c.next_u64()).collect();
+        assert_eq!(xa, xb);
+        assert_ne!(xa, xc);
+    }
+
+    #[test]
+    fn uniform_mean() {
+        let mut r = Rng::new(1);
+        let n = 20_000;
+        let mean: f64 = (0..n).map(|_| r.f64()).sum::<f64>() / n as f64;
+        assert!((mean - 0.5).abs() < 0.01, "{mean}");
+    }
+
+    #[test]
+    fn below_is_in_range_and_covers() {
+        let mut r = Rng::new(2);
+        let mut seen = [false; 7];
+        for _ in 0..1000 {
+            let x = r.below(7) as usize;
+            assert!(x < 7);
+            seen[x] = true;
+        }
+        assert!(seen.iter().all(|&s| s));
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Rng::new(3);
+        let n = 50_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean).powi(2)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "{mean}");
+        assert!((var - 1.0).abs() < 0.05, "{var}");
+    }
+
+    #[test]
+    fn gamma_mean_matches_shape() {
+        let mut r = Rng::new(4);
+        for shape in [0.3, 1.0, 5.0] {
+            let n = 20_000;
+            let mean = (0..n).map(|_| r.gamma(shape)).sum::<f64>() / n as f64;
+            assert!((mean - shape).abs() < 0.1 * shape.max(1.0), "{shape} {mean}");
+        }
+    }
+
+    #[test]
+    fn dirichlet_sums_to_one_and_alpha_controls_spread() {
+        let mut r = Rng::new(5);
+        for alpha in [0.1, 1.0, 10.0] {
+            let p = r.dirichlet(alpha, 5);
+            assert!((p.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+            assert!(p.iter().all(|&x| x >= 0.0));
+        }
+        // small alpha => concentrated; large alpha => near-uniform (on average)
+        let max_small: f64 = (0..200)
+            .map(|_| {
+                r.dirichlet(0.05, 5)
+                    .into_iter()
+                    .fold(0.0f64, f64::max)
+            })
+            .sum::<f64>()
+            / 200.0;
+        let max_large: f64 = (0..200)
+            .map(|_| r.dirichlet(50.0, 5).into_iter().fold(0.0f64, f64::max))
+            .sum::<f64>()
+            / 200.0;
+        assert!(max_small > 0.8, "{max_small}");
+        assert!(max_large < 0.4, "{max_large}");
+    }
+
+    #[test]
+    fn categorical_respects_weights() {
+        let mut r = Rng::new(6);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[r.categorical(&[1.0, 2.0, 7.0])] += 1;
+        }
+        let total = 30_000f64;
+        assert!((counts[0] as f64 / total - 0.1).abs() < 0.02);
+        assert!((counts[2] as f64 / total - 0.7).abs() < 0.02);
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Rng::new(7);
+        let mut v: Vec<usize> = (0..50).collect();
+        r.shuffle(&mut v);
+        let mut sorted = v.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..50).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn choose_returns_distinct() {
+        let mut r = Rng::new(8);
+        let picked = r.choose(10, 4);
+        assert_eq!(picked.len(), 4);
+        let mut s = picked.clone();
+        s.sort();
+        s.dedup();
+        assert_eq!(s.len(), 4);
+    }
+
+    #[test]
+    fn fork_streams_diverge() {
+        let mut root = Rng::new(9);
+        let mut a = root.fork(1);
+        let mut b = root.fork(2);
+        assert_ne!(
+            (0..4).map(|_| a.next_u64()).collect::<Vec<_>>(),
+            (0..4).map(|_| b.next_u64()).collect::<Vec<_>>()
+        );
+    }
+}

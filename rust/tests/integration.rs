@@ -1,0 +1,264 @@
+//! Integration tests: complete FL jobs over both SFM drivers, runtime +
+//! coordinator + executor composed, with the real AOT artifacts when
+//! available (tests gracefully skip if `make artifacts` has not run).
+
+use fedflare::config::{ClientSpec, FilterSpec, JobConfig};
+use fedflare::coordinator::{CyclicWeightTransfer, FedAvg, FederatedEval};
+use fedflare::executor::{Executor, StreamTestExecutor};
+use fedflare::message::FlMessage;
+use fedflare::runtime::RuntimeClient;
+use fedflare::sim::{self, DriverKind};
+use fedflare::tensor::TensorDict;
+use fedflare::util::json::Json;
+
+fn results_dir() -> String {
+    let d = std::env::temp_dir().join("fedflare_integration");
+    let _ = std::fs::create_dir_all(&d);
+    d.to_string_lossy().to_string()
+}
+
+fn have_artifacts() -> bool {
+    std::path::Path::new("artifacts/manifest.json").exists()
+}
+
+fn three_clients() -> Vec<ClientSpec> {
+    (0..3)
+        .map(|i| ClientSpec {
+            name: format!("site-{}", i + 1),
+            bandwidth_bps: 0,
+            partition: i,
+        })
+        .collect()
+}
+
+// ---------------------------------------------------------------- core FL
+
+#[test]
+fn fedavg_stream_test_over_both_drivers_same_result() {
+    let run = |kind| {
+        let mut job = JobConfig::named("it_drivers", "stream_test");
+        job.rounds = 3;
+        job.min_clients = 2;
+        job.stream.chunk_bytes = 8192;
+        let initial = StreamTestExecutor::build_model(4, 2048, 1.0);
+        let mut ctl = FedAvg::new(initial, 3, 2);
+        ctl.task_name = "stream_test".into();
+        let mut f: Box<sim::ExecutorFactory> = Box::new(|_i, _s| {
+            Ok(Box::new(StreamTestExecutor::new(None, 0.5)) as Box<dyn Executor>)
+        });
+        sim::run_job(&job, kind, &mut ctl, &mut f, &results_dir()).unwrap();
+        ctl.model
+    };
+    let inproc = run(DriverKind::InProc);
+    let tcp = run(DriverKind::Tcp);
+    assert_eq!(inproc, tcp, "driver must not affect results");
+    let v = inproc.get("key_000").unwrap().as_f32().unwrap();
+    assert!((v[0] - 2.5).abs() < 1e-5);
+}
+
+#[test]
+fn cyclic_weight_transfer_visits_all_clients() {
+    let mut job = JobConfig::named("it_cyclic", "stream_test");
+    job.rounds = 2;
+    job.clients = three_clients();
+    job.min_clients = 3;
+    let initial = StreamTestExecutor::build_model(2, 512, 0.0);
+    let mut ctl = CyclicWeightTransfer::new(initial, 2);
+    let mut f: Box<sim::ExecutorFactory> =
+        Box::new(|_i, _s| Ok(Box::new(StreamTestExecutor::new(None, 1.0)) as Box<dyn Executor>));
+    sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+    // 2 rounds x 3 clients, each adds 1.0 => model value 6.0
+    let v = ctl.model.get("key_000").unwrap().as_f32().unwrap();
+    assert!((v[0] - 6.0).abs() < 1e-5);
+    assert_eq!(ctl.trace.len(), 6);
+    // every client visited each round, in order
+    let names: Vec<&str> = ctl.trace.iter().map(|(_, c, _)| c.as_str()).collect();
+    assert_eq!(
+        names,
+        vec!["site-1", "site-2", "site-3", "site-1", "site-2", "site-3"]
+    );
+}
+
+/// Executor reporting a fixed val metric, for FederatedEval.
+struct FixedEval(f64);
+impl Executor for FixedEval {
+    fn execute(&mut self, task: &FlMessage) -> anyhow::Result<FlMessage> {
+        Ok(FlMessage::result(&task.task, task.round, "", TensorDict::new())
+            .with_meta("val_loss", Json::num(self.0))
+            .with_meta("val_acc", Json::num(1.0 - self.0))
+            .with_meta("n_samples", Json::num(100.0)))
+    }
+}
+
+#[test]
+fn federated_eval_aggregates_weighted_metrics() {
+    let mut job = JobConfig::named("it_fedeval", "stream_test");
+    job.clients = three_clients();
+    job.min_clients = 3;
+    let mut ctl = FederatedEval::new(TensorDict::new());
+    let mut f: Box<sim::ExecutorFactory> = Box::new(|i, _s| {
+        Ok(Box::new(FixedEval(0.1 * (i + 1) as f64)) as Box<dyn Executor>)
+    });
+    sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+    assert_eq!(ctl.results.len(), 3);
+    assert!((ctl.mean_loss - 0.2).abs() < 1e-9); // equal weights
+    assert!((ctl.mean_acc - 0.8).abs() < 1e-9);
+}
+
+#[test]
+fn dp_filter_changes_results_secure_agg_does_not() {
+    let run = |filters: Vec<FilterSpec>| {
+        let mut job = JobConfig::named("it_filters", "stream_test");
+        job.rounds = 1;
+        job.filters = filters;
+        let initial = StreamTestExecutor::build_model(1, 256, 0.0);
+        let mut ctl = FedAvg::new(initial, 1, 2);
+        ctl.task_name = "stream_test".into();
+        let mut f: Box<sim::ExecutorFactory> = Box::new(|_i, _s| {
+            Ok(Box::new(StreamTestExecutor::new(None, 1.0)) as Box<dyn Executor>)
+        });
+        sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+        ctl.model
+    };
+    let plain = run(vec![]);
+    let dp = run(vec![FilterSpec::GaussianDp { clip: 0.5, sigma: 0.1 }]);
+    let masked = run(vec![FilterSpec::SecureAgg { seed: 9 }]);
+    // DP (tight clip) visibly distorts the aggregate
+    assert!(plain.max_abs_diff(&dp) > 0.1);
+    // secure-agg masks cancel: aggregate unchanged up to float noise
+    assert!(plain.max_abs_diff(&masked) < 1e-4);
+}
+
+// ------------------------------------------------------------- with PJRT
+
+#[test]
+fn fedavg_trains_nano_gpt_end_to_end() {
+    if !have_artifacts() {
+        eprintln!("skipping (run `make artifacts`)");
+        return;
+    }
+    let rc = RuntimeClient::start("artifacts").unwrap();
+    let mut job = JobConfig::named("it_nano", "gpt_nano");
+    job.rounds = 3;
+    job.min_clients = 2;
+    job.train.local_steps = 4;
+    job.train.eval_batches = 1;
+    let initial = fedflare::repro::common::initial_model(&job, Some(&rc)).unwrap();
+    let mut ctl = FedAvg::new(initial, job.rounds, job.min_clients);
+    let job2 = job.clone();
+    let rc2 = rc.clone();
+    let mut f: Box<sim::ExecutorFactory> = Box::new(move |i, _s| {
+        fedflare::repro::common::build_executor(&job2, i, Some(&rc2))
+    });
+    sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+    assert_eq!(ctl.history.len(), 3);
+    let first = ctl.history.first().unwrap().val_loss;
+    let last = ctl.history.last().unwrap().val_loss;
+    assert!(
+        last < first,
+        "global val loss should improve: {first} -> {last}"
+    );
+    // model selection must have picked something
+    assert!(ctl.best.is_some());
+    assert!(ctl.best_model.is_some());
+}
+
+#[test]
+fn fedavg_nano_over_tcp_matches_learning() {
+    if !have_artifacts() {
+        return;
+    }
+    let rc = RuntimeClient::start("artifacts").unwrap();
+    let mut job = JobConfig::named("it_nano_tcp", "gpt_nano");
+    job.rounds = 2;
+    job.min_clients = 2;
+    job.train.local_steps = 2;
+    job.train.eval_batches = 1;
+    let initial = fedflare::repro::common::initial_model(&job, Some(&rc)).unwrap();
+    let mut ctl = FedAvg::new(initial, job.rounds, job.min_clients);
+    let job2 = job.clone();
+    let rc2 = rc.clone();
+    let mut f: Box<sim::ExecutorFactory> = Box::new(move |i, _s| {
+        fedflare::repro::common::build_executor(&job2, i, Some(&rc2))
+    });
+    sim::run_job(&job, DriverKind::Tcp, &mut ctl, &mut f, &results_dir()).unwrap();
+    assert_eq!(ctl.history.len(), 2);
+    assert!(ctl.history.iter().all(|r| r.val_loss.is_finite()));
+}
+
+#[test]
+fn peft_job_moves_only_adapter_payload() {
+    if !have_artifacts() {
+        return;
+    }
+    let rc = RuntimeClient::start("artifacts").unwrap();
+    let mut job = JobConfig::named("it_peft", "gpt_small_lora");
+    job.rounds = 1;
+    job.min_clients = 2;
+    job.trainable_only = true;
+    job.train.local_steps = 1;
+    job.train.eval_batches = 1;
+    let initial = fedflare::repro::common::initial_model(&job, Some(&rc)).unwrap();
+    // adapters only: a few hundred KB, not the 3.4 MB full model
+    let full = rc.manifest("gpt_small_lora_train").unwrap().param_bytes();
+    assert!(initial.byte_size() * 10 < full, "adapter payload too large");
+    assert!(initial.names().all(|n| n.contains("lora")));
+    let mut ctl = FedAvg::new(initial, 1, 2);
+    let job2 = job.clone();
+    let rc2 = rc.clone();
+    let mut f: Box<sim::ExecutorFactory> = Box::new(move |i, _s| {
+        fedflare::repro::common::build_executor(&job2, i, Some(&rc2))
+    });
+    sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+    assert!(ctl.model.names().all(|n| n.contains("lora")));
+}
+
+#[test]
+fn checkpoint_roundtrip_through_model_state() {
+    if !have_artifacts() {
+        return;
+    }
+    let rc = RuntimeClient::start("artifacts").unwrap();
+    let m = rc.manifest("gpt_nano_train").unwrap();
+    let mut state = fedflare::model::ModelState::init(&m, 5).unwrap();
+    state.step = 42;
+    let path = std::env::temp_dir().join("it_ckpt.bin");
+    state.save(&path).unwrap();
+    let loaded = fedflare::model::ModelState::load(&path).unwrap();
+    assert_eq!(loaded.step, 42);
+    assert_eq!(loaded.params, state.params);
+    let _ = std::fs::remove_file(&path);
+}
+
+#[test]
+fn throttled_fig5_shape_fast_vs_slow_transfer() {
+    // micro Fig-5: slow client's send takes measurably longer
+    let mut job = JobConfig::named("it_fig5_shape", "stream_test");
+    job.rounds = 1;
+    job.stream.chunk_bytes = 64 << 10;
+    job.clients = vec![
+        ClientSpec {
+            name: "fast".into(),
+            bandwidth_bps: 0,
+            partition: 0,
+        },
+        ClientSpec {
+            name: "slow".into(),
+            bandwidth_bps: 3_000_000, // 3 MB/s on a ~4 MB model
+            partition: 1,
+        },
+    ];
+    let initial = StreamTestExecutor::build_model(2, 524_288, 1.0);
+    let mut ctl = FedAvg::new(initial, 1, 2);
+    ctl.task_name = "stream_test".into();
+    let t0 = std::time::Instant::now();
+    let mut f: Box<sim::ExecutorFactory> =
+        Box::new(|_i, _s| Ok(Box::new(StreamTestExecutor::new(None, 0.1)) as Box<dyn Executor>));
+    sim::run_job(&job, DriverKind::Tcp, &mut ctl, &mut f, &results_dir()).unwrap();
+    let wall = t0.elapsed();
+    // 4 MB model, both directions at 3 MB/s => > 2 s; unthrottled would be ms
+    assert!(
+        wall > std::time::Duration::from_millis(1500),
+        "throttling had no effect: {wall:?}"
+    );
+}
