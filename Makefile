@@ -1,0 +1,26 @@
+# FedFlare build entry points.
+#
+#   make artifacts   AOT-lower the JAX models to HLO text + manifests in
+#                    rust/artifacts/ (needs Python with jax installed;
+#                    artifact-dependent Rust tests skip when absent)
+#   make test        tier-1 verification: release build + full test suite
+#   make bench       run every Rust benchmark target
+#   make lint        rustfmt + clippy, as CI runs them
+
+.PHONY: artifacts test bench lint
+
+artifacts:
+	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
+
+test:
+	cargo build --release && cargo test -q
+
+bench:
+	cargo bench --bench bench_streaming
+	cargo bench --bench bench_aggregation
+	cargo bench --bench bench_experiments
+	cargo bench --bench bench_runtime
+
+lint:
+	cargo fmt --check
+	cargo clippy --all-targets -- -D warnings

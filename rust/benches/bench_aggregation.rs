@@ -5,12 +5,15 @@
 //! Run with `cargo bench --bench bench_aggregation`.
 
 use fedflare::config::FilterSpec;
-use fedflare::coordinator::FedAvg;
+use fedflare::coordinator::StreamingMean;
 use fedflare::filters::{build_chain, Filter};
 use fedflare::message::FlMessage;
-use fedflare::tensor::{axpy_slice, f16_bytes_to_f32, f32_to_f16_bytes, Tensor, TensorDict};
+use fedflare::tensor::{
+    axpy_slice, f16_bytes_to_f32, f32_to_f16_bytes, lerp_slice, Tensor, TensorDict,
+};
 use fedflare::util::bench::{bench, header, report};
 use fedflare::util::json::Json;
+use fedflare::util::mem;
 
 fn dict_of(total_mb: usize, tensors: usize) -> TensorDict {
     let mut d = TensorDict::new();
@@ -19,6 +22,28 @@ fn dict_of(total_mb: usize, tensors: usize) -> TensorDict {
         d.insert(format!("t{i:03}"), Tensor::f32(vec![elems], vec![0.1; elems]));
     }
     d
+}
+
+fn results_of(model: &TensorDict, clients: usize) -> Vec<FlMessage> {
+    (0..clients)
+        .map(|i| {
+            FlMessage::result("train", 0, &format!("c{i}"), model.clone())
+                .with_meta("n_samples", Json::num(100.0 * (i + 1) as f64))
+        })
+        .collect()
+}
+
+/// f64 oracle of the weighted mean's first element.
+fn oracle_elem0(results: &[FlMessage]) -> f64 {
+    let total: f64 = results.iter().map(|r| r.metric("n_samples").unwrap()).sum();
+    results
+        .iter()
+        .map(|r| {
+            r.body.get("t000").unwrap().as_f32().unwrap()[0] as f64
+                * r.metric("n_samples").unwrap()
+                / total
+        })
+        .sum()
 }
 
 fn main() {
@@ -35,25 +60,28 @@ fn main() {
         report(&s, Some(format!("{:.1} GB/s", s.mb_per_sec((mb << 20) as f64 * 3.0) / 1000.0)));
     }
 
-    header("FedAvg round aggregation (weighted mean over clients)");
+    header("lerp hot loop (a += c * (b - a), streaming-mean fold)");
+    for mb in [1usize, 16, 64] {
+        let n = mb * (1 << 20) / 4;
+        let mut a = vec![1.0f32; n];
+        let b = vec![0.5f32; n];
+        let s = bench(&format!("{mb} MB slice"), 2, 16, || {
+            lerp_slice(&mut a, 0.25, &b);
+            std::hint::black_box(a[0]);
+        });
+        report(&s, Some(format!("{:.1} GB/s", s.mb_per_sec((mb << 20) as f64 * 3.0) / 1000.0)));
+    }
+
+    header("FedAvg round aggregation (streaming weighted mean)");
     for (clients, mb) in [(3usize, 12usize), (8, 12), (3, 128)] {
         let model = dict_of(mb, 16);
-        let results: Vec<FlMessage> = (0..clients)
-            .map(|i| {
-                FlMessage::result("train", 0, &format!("c{i}"), model.clone())
-                    .with_meta("n_samples", Json::num(100.0 * (i + 1) as f64))
-            })
-            .collect();
-        let ctl = FedAvg::new(model.zeros_like(), 1, clients);
+        let results = results_of(&model, clients);
         let s = bench(&format!("{clients} clients x {mb} MB"), 1, 8, || {
-            // aggregate is private; go through the public path: rebuild
-            // using axpy exactly as FedAvg does
-            let total: f64 = results.iter().map(|r| r.metric("n_samples").unwrap()).sum();
-            let mut agg = ctl.model.zeros_like();
+            let mut agg = StreamingMean::new(&model);
             for r in &results {
-                agg.axpy((r.metric("n_samples").unwrap() / total) as f32, &r.body);
+                agg.fold(r).unwrap();
             }
-            std::hint::black_box(agg.len());
+            std::hint::black_box(agg.finish().unwrap().len());
         });
         report(
             &s,
@@ -61,6 +89,55 @@ fn main() {
                 "{:.1} GB/s aggregated",
                 s.mb_per_sec((clients * mb) as f64 * (1 << 20) as f64) / 1000.0
             )),
+        );
+    }
+
+    header("peak gather bytes: streaming fold vs all-at-once (8 MB model)");
+    for clients in [2usize, 4, 8, 16] {
+        let model = dict_of(8, 16);
+        let result_bytes = model.byte_size();
+        let results = results_of(&model, clients);
+
+        // all-at-once: every result held until the batch aggregate runs
+        mem::reset_gather_peak();
+        {
+            let held: Vec<mem::GatherGuard> = results
+                .iter()
+                .map(|r| mem::GatherGuard::new(r.body.byte_size()))
+                .collect();
+            let total: f64 = results.iter().map(|r| r.metric("n_samples").unwrap()).sum();
+            let mut agg = model.zeros_like();
+            for r in &results {
+                agg.axpy((r.metric("n_samples").unwrap() / total) as f32, &r.body);
+            }
+            std::hint::black_box(agg.len());
+            drop(held);
+        }
+        let batch_peak = mem::gather_peak();
+
+        // streaming: one in-flight result at a time
+        mem::reset_gather_peak();
+        let mut agg = StreamingMean::new(&model);
+        for r in &results {
+            let _held = mem::GatherGuard::new(r.body.byte_size());
+            agg.fold(r).unwrap();
+        }
+        let stream_peak = mem::gather_peak();
+        let folded = agg.finish().unwrap();
+        let got = folded.get("t000").unwrap().as_f32().unwrap()[0] as f64;
+        let oracle = oracle_elem0(&results);
+        assert!(
+            (got - oracle).abs() < 1e-5,
+            "{clients} clients: {got} vs oracle {oracle}"
+        );
+
+        println!(
+            "  {clients:>2} clients: all-at-once peak {:>4} MB ({}x result)  \
+             streaming peak {:>2} MB ({}x result)  oracle ok",
+            batch_peak >> 20,
+            batch_peak / result_bytes as u64,
+            stream_peak >> 20,
+            stream_peak / result_bytes as u64,
         );
     }
 

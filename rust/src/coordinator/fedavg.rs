@@ -1,9 +1,12 @@
 //! FedAvg [McMahan et al. 2017] — the paper's reference workflow
 //! (Listing 3), with sample-count-weighted aggregation, per-round global
 //! validation (clients evaluate the incoming global model, enabling
-//! server-side model selection — paper Listing 2 step 3), and streaming
-//! in-place aggregation so server memory stays at one accumulator
-//! regardless of client count.
+//! server-side model selection — paper Listing 2 step 3), and **streaming
+//! in-place aggregation**: each client result is folded into the single
+//! accumulator the moment it arrives (completion order) and dropped, and
+//! the gather's flow gate caps decoded in-flight results at two (one
+//! folding + one staging), so server memory stays at one accumulator plus
+//! O(1) results regardless of client count.
 
 use anyhow::{bail, Result};
 
@@ -21,8 +24,102 @@ pub struct RoundMetrics {
     pub val_acc: f64,
     /// Mean of clients' local training loss (last step).
     pub train_loss: f64,
-    /// Per-client (name, val_loss, val_acc, n_samples).
+    /// Per-client (name, val_loss, val_acc, n_samples), sorted by name
+    /// (gather completion order is nondeterministic).
     pub per_client: Vec<(String, f64, f64, f64)>,
+}
+
+/// Streaming weighted mean over client updates — the aggregation side of
+/// the gather-iterator redesign. Each result is folded in completion
+/// order via the running-mean update
+///
+/// ```text
+/// W += w_i
+/// agg += (w_i / W) * (x_i - agg)
+/// ```
+///
+/// which after k folds equals `sum_i (w_i / W_k) * x_i` without ever
+/// needing the total weight up front or more than one client result in
+/// memory. Weights come from the `n_samples` metric (default 1, floored
+/// at 0 — a zero-weight result is schema-checked but contributes
+/// nothing).
+pub struct StreamingMean {
+    agg: TensorDict,
+    weight: f64,
+    folded: usize,
+}
+
+impl StreamingMean {
+    /// Fresh accumulator with `schema`'s names/shapes, starting at zero.
+    pub fn new(schema: &TensorDict) -> StreamingMean {
+        StreamingMean {
+            agg: schema.zeros_like(),
+            weight: 0.0,
+            folded: 0,
+        }
+    }
+
+    /// Aggregation weight of one result.
+    pub fn weight_of(r: &FlMessage) -> f64 {
+        r.metric("n_samples").unwrap_or(1.0).max(0.0)
+    }
+
+    /// Fold one client result into the accumulator. The caller drops the
+    /// result right after — nothing of it is retained here.
+    pub fn fold(&mut self, r: &FlMessage) -> Result<()> {
+        if !self.agg.same_schema(&r.body) {
+            bail!(
+                "aggregate: client {} returned mismatched schema ({} tensors vs {})",
+                r.client,
+                r.body.len(),
+                self.agg.len()
+            );
+        }
+        self.folded += 1;
+        let w = Self::weight_of(r);
+        if w <= 0.0 {
+            return Ok(());
+        }
+        self.weight += w;
+        self.agg.lerp((w / self.weight) as f32, &r.body);
+        Ok(())
+    }
+
+    /// Results folded so far (including zero-weight ones).
+    pub fn folded(&self) -> usize {
+        self.folded
+    }
+
+    /// Cumulative weight so far.
+    pub fn total_weight(&self) -> f64 {
+        self.weight
+    }
+
+    /// Finish: the weighted mean of everything folded.
+    pub fn finish(self) -> Result<TensorDict> {
+        if self.weight <= 0.0 {
+            bail!("aggregate: no samples reported");
+        }
+        Ok(self.agg)
+    }
+}
+
+/// Metric rows collected while streaming a round's gather (bodies are
+/// folded and dropped; only these scalars survive the round).
+#[derive(Default)]
+struct RoundAcc {
+    per_client: Vec<(String, f64, f64, f64)>,
+    val_loss: Vec<f64>,
+    val_acc: Vec<f64>,
+    train_loss: Vec<f64>,
+}
+
+fn mean(vals: &[f64]) -> f64 {
+    if vals.is_empty() {
+        f64::NAN
+    } else {
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
 }
 
 /// FedAvg controller.
@@ -53,33 +150,6 @@ impl FedAvg {
             best_model: None,
         }
     }
-
-    /// Weighted in-place aggregation: `sum_i w_i * params_i` with
-    /// `w_i = n_i / sum n`. Runs one accumulator (the new global model),
-    /// streaming each result through `axpy`.
-    fn aggregate(&self, results: &[FlMessage]) -> Result<TensorDict> {
-        let total: f64 = results
-            .iter()
-            .map(|r| r.metric("n_samples").unwrap_or(1.0).max(0.0))
-            .sum();
-        if total <= 0.0 {
-            bail!("aggregate: no samples reported");
-        }
-        let mut agg = self.model.zeros_like();
-        for r in results {
-            if !agg.same_schema(&r.body) {
-                bail!(
-                    "aggregate: client {} returned mismatched schema ({} tensors vs {})",
-                    r.client,
-                    r.body.len(),
-                    agg.len()
-                );
-            }
-            let w = (r.metric("n_samples").unwrap_or(1.0).max(0.0) / total) as f32;
-            agg.axpy(w, &r.body);
-        }
-        Ok(agg)
-    }
 }
 
 impl Controller for FedAvg {
@@ -92,39 +162,46 @@ impl Controller for FedAvg {
         for round in 0..self.rounds {
             // 1. sample the available clients
             let clients = comm.sample_clients(self.min_clients)?;
-            // 2. send the current global model and receive updates
+            // 2. send the current global model; 3. fold each update into
+            // the single accumulator as it arrives (completion order —
+            // a fast site aggregates while a slow site still streams)
             let task = FlMessage::task(&self.task_name, round, self.model.clone())
                 .with_meta("rounds_total", Json::num(self.rounds as f64));
-            let results = comm.broadcast_and_wait(&task, &clients)?;
-            // 3. aggregate
-            let agg = self.aggregate(&results)?;
+            let mut agg = StreamingMean::new(&self.model);
+            let mut stats = comm.broadcast_and_reduce(
+                &task,
+                &clients,
+                RoundAcc::default(),
+                |mut acc, r| {
+                    agg.fold(&r)?;
+                    acc.per_client.push((
+                        r.client.clone(),
+                        r.metric("val_loss").unwrap_or(f64::NAN),
+                        r.metric("val_acc").unwrap_or(f64::NAN),
+                        r.metric("n_samples").unwrap_or(0.0),
+                    ));
+                    if let Some(v) = r.metric("val_loss") {
+                        acc.val_loss.push(v);
+                    }
+                    if let Some(v) = r.metric("val_acc") {
+                        acc.val_acc.push(v);
+                    }
+                    if let Some(v) = r.metric("train_loss") {
+                        acc.train_loss.push(v);
+                    }
+                    Ok(acc)
+                },
+            )?;
             // 4. update the global model
-            self.model = agg;
+            self.model = agg.finish()?;
             // bookkeeping: global-model validation scores from clients
-            let mean = |key: &str| -> f64 {
-                let vals: Vec<f64> = results.iter().filter_map(|r| r.metric(key)).collect();
-                if vals.is_empty() {
-                    f64::NAN
-                } else {
-                    vals.iter().sum::<f64>() / vals.len() as f64
-                }
-            };
+            stats.per_client.sort_by(|a, b| a.0.cmp(&b.0));
             let rm = RoundMetrics {
                 round,
-                val_loss: mean("val_loss"),
-                val_acc: mean("val_acc"),
-                train_loss: mean("train_loss"),
-                per_client: results
-                    .iter()
-                    .map(|r| {
-                        (
-                            r.client.clone(),
-                            r.metric("val_loss").unwrap_or(f64::NAN),
-                            r.metric("val_acc").unwrap_or(f64::NAN),
-                            r.metric("n_samples").unwrap_or(0.0),
-                        )
-                    })
-                    .collect(),
+                val_loss: mean(&stats.val_loss),
+                val_acc: mean(&stats.val_acc),
+                train_loss: mean(&stats.train_loss),
+                per_client: stats.per_client,
             };
             ctx.sink.event(
                 "fedavg_round",
@@ -177,14 +254,23 @@ mod tests {
             .with_meta("n_samples", Json::num(n))
     }
 
+    /// Fold `results` in slice order through a fresh StreamingMean.
+    fn aggregate(schema: &TensorDict, results: &[FlMessage]) -> Result<TensorDict> {
+        let mut agg = StreamingMean::new(schema);
+        for r in results {
+            agg.fold(r)?;
+        }
+        agg.finish()
+    }
+
     #[test]
     fn aggregate_is_weighted_mean() {
-        let f = FedAvg::new(model(&[0.0, 0.0]), 1, 2);
+        let schema = model(&[0.0, 0.0]);
         let results = vec![
             result("a", &[1.0, 2.0], 100.0),
             result("b", &[3.0, 6.0], 300.0),
         ];
-        let agg = f.aggregate(&results).unwrap();
+        let agg = aggregate(&schema, &results).unwrap();
         let v = agg.get("w").unwrap().as_f32().unwrap();
         // weights 0.25 / 0.75
         assert!((v[0] - 2.5).abs() < 1e-6);
@@ -193,25 +279,45 @@ mod tests {
 
     #[test]
     fn aggregate_defaults_to_uniform_weights() {
-        let f = FedAvg::new(model(&[0.0]), 1, 2);
+        let schema = model(&[0.0]);
         let results = vec![
             FlMessage::result("train", 0, "a", model(&[2.0])),
             FlMessage::result("train", 0, "b", model(&[4.0])),
         ];
-        let agg = f.aggregate(&results).unwrap();
+        let agg = aggregate(&schema, &results).unwrap();
         assert!((agg.get("w").unwrap().as_f32().unwrap()[0] - 3.0).abs() < 1e-6);
     }
 
     #[test]
     fn aggregate_rejects_schema_mismatch() {
-        let f = FedAvg::new(model(&[0.0, 0.0]), 1, 1);
+        let schema = model(&[0.0, 0.0]);
         let bad = vec![result("a", &[1.0], 1.0)]; // wrong shape
-        assert!(f.aggregate(&bad).is_err());
+        assert!(aggregate(&schema, &bad).is_err());
+    }
+
+    #[test]
+    fn aggregate_requires_positive_weight() {
+        let schema = model(&[0.0]);
+        assert!(aggregate(&schema, &[]).is_err());
+        let zeroed = vec![result("a", &[1.0], 0.0)];
+        assert!(aggregate(&schema, &zeroed).is_err());
+    }
+
+    #[test]
+    fn zero_weight_results_contribute_nothing() {
+        let schema = model(&[0.0]);
+        let results = vec![
+            result("a", &[2.0], 50.0),
+            result("b", &[100.0], 0.0), // ignored
+            result("c", &[4.0], 50.0),
+        ];
+        let agg = aggregate(&schema, &results).unwrap();
+        assert!((agg.get("w").unwrap().as_f32().unwrap()[0] - 3.0).abs() < 1e-6);
     }
 
     #[test]
     fn aggregate_matches_f64_oracle_property() {
-        crate::util::prop::check("fedavg weighted mean oracle", 40, |g| {
+        crate::util::prop::check("streaming mean oracle", 40, |g| {
             let len = g.usize_in(1, 50);
             let k = g.usize_in(1, 5);
             let mut results = Vec::new();
@@ -222,8 +328,8 @@ mod tests {
                 results.push(result(&format!("c{i}"), &vals, n));
                 weights.push(n);
             }
-            let f = FedAvg::new(model(&vec![0.0; len]), 1, k);
-            let agg = f.aggregate(&results).unwrap();
+            let agg = aggregate(&model(&vec![0.0; len]), &results)
+                .map_err(|e| e.to_string())?;
             let got = agg.get("w").unwrap().as_f32().unwrap();
             let total: f64 = weights.iter().sum();
             for j in 0..len {
@@ -235,6 +341,44 @@ mod tests {
                     })
                     .sum();
                 crate::util::prop::assert_close(got[j] as f64, oracle, 1e-5, "agg elem")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn completion_order_does_not_change_the_aggregate() {
+        // the streaming fold must match the old all-at-once weighted sum
+        // (and the f64 oracle) regardless of arrival order
+        crate::util::prop::check("fold order invariance", 30, |g| {
+            let len = g.usize_in(1, 40);
+            let k = g.usize_in(2, 6);
+            let mut results = Vec::new();
+            for i in 0..k {
+                let vals: Vec<f32> = (0..len).map(|_| g.f32_in(-5.0, 5.0)).collect();
+                let n = g.usize_in(1, 1000) as f64;
+                results.push(result(&format!("c{i}"), &vals, n));
+            }
+            let schema = model(&vec![0.0; len]);
+            // completion order: a random shuffle of dispatch order
+            let mut shuffled = results.clone();
+            g.rng().shuffle(&mut shuffled);
+            let streamed = aggregate(&schema, &shuffled).map_err(|e| e.to_string())?;
+            // old all-at-once path: axpy with the precomputed total
+            let total: f64 = results.iter().map(|r| StreamingMean::weight_of(r)).sum();
+            let mut batch = schema.zeros_like();
+            for r in &results {
+                batch.axpy((StreamingMean::weight_of(r) / total) as f32, &r.body);
+            }
+            let a = streamed.get("w").unwrap().as_f32().unwrap();
+            let b = batch.get("w").unwrap().as_f32().unwrap();
+            for j in 0..len {
+                crate::util::prop::assert_close(
+                    a[j] as f64,
+                    b[j] as f64,
+                    1e-5,
+                    "streamed vs batch elem",
+                )?;
             }
             Ok(())
         });

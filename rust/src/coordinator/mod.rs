@@ -17,53 +17,148 @@
 //! Each connected client is serviced by its own worker thread holding the
 //! client's [`Messenger`], so a broadcast to a fast and a slow client
 //! overlaps in time exactly like the paper's Fig-5 cross-region setup.
+//!
+//! Gathering is **streaming**: [`Communicator::broadcast_stream`] hands
+//! back a [`Gather`] that yields each client's result the moment its
+//! worker finishes receiving it — in completion order, not target order —
+//! so a fast site's update can be folded into the aggregate while a
+//! throttled slow site is still mid-transfer (the paper's Fig-5
+//! fast/slow-site asymmetry). [`Communicator::broadcast_and_reduce`]
+//! wraps that in a fold, and the legacy
+//! [`Communicator::broadcast_and_wait`] survives as a thin compatibility
+//! wrapper that materializes the full result vector.
 
 mod fedavg;
 mod workflows;
 
-pub use fedavg::{FedAvg, RoundMetrics};
+pub use fedavg::{FedAvg, RoundMetrics, StreamingMean};
 pub use workflows::{CyclicWeightTransfer, FederatedEval, FederatedInference};
 
 use std::sync::mpsc::{Receiver, Sender};
+use std::sync::Arc;
 
 use anyhow::{anyhow, bail, Result};
 
 use crate::message::{FlMessage, Kind};
 use crate::metrics::MetricsSink;
 use crate::streaming::{Messenger, StreamError};
+use crate::util::mem;
 use crate::util::rng::Rng;
 
+/// How many decoded results a *streaming* gather may hold at once: one
+/// being folded by the consumer plus one being received/staged by a
+/// worker — enough to overlap communication with aggregation, while
+/// decoded-result memory on the server stays O(1) in the client count.
+const STREAM_INFLIGHT: usize = 2;
+
+/// Counting semaphore bounding a gather's in-flight decoded results.
+/// Workers acquire a slot after sending the task but before receiving
+/// the (potentially huge) result, so excess clients are held back by
+/// transport backpressure instead of materializing on the server.
+struct FlowGate {
+    state: std::sync::Mutex<usize>,
+    cv: std::sync::Condvar,
+}
+
+impl FlowGate {
+    fn new(slots: usize) -> Arc<FlowGate> {
+        Arc::new(FlowGate {
+            state: std::sync::Mutex::new(slots),
+            cv: std::sync::Condvar::new(),
+        })
+    }
+
+    fn acquire(gate: &Arc<FlowGate>) -> FlowPermit {
+        let mut avail = gate.state.lock().unwrap();
+        while *avail == 0 {
+            avail = gate.cv.wait(avail).unwrap();
+        }
+        *avail -= 1;
+        FlowPermit { gate: gate.clone() }
+    }
+}
+
+/// One occupied slot of a [`FlowGate`]; freed on drop.
+struct FlowPermit {
+    gate: Arc<FlowGate>,
+}
+
+impl Drop for FlowPermit {
+    fn drop(&mut self) {
+        *self.gate.state.lock().unwrap() += 1;
+        self.gate.cv.notify_one();
+    }
+}
+
+/// Accounting and flow-control baggage riding with each gathered result:
+/// counts the decoded bytes against [`mem::gather_bytes`] and (for
+/// bounded gathers) occupies one in-flight slot — both released when the
+/// consumer drops it after folding.
+pub struct HeldResult {
+    _bytes: mem::GatherGuard,
+    _permit: Option<FlowPermit>,
+}
+
+/// What a gather hands back per dispatched task: the dispatch position
+/// (index into the gather's target list) and the outcome.
+type Reply = (usize, Result<(FlMessage, HeldResult), String>);
+
+/// One unit of work handed to a client's IO worker: the message to send,
+/// the reply channel of the gather that wants the result, and the
+/// gather's flow gate (None = unbounded, e.g. byes and the legacy wait
+/// path).
+struct WorkerTask {
+    msg: FlMessage,
+    tag: usize,
+    reply: Sender<Reply>,
+    gate: Option<Arc<FlowGate>>,
+}
+
 /// Server-side handle to one connected client: a worker thread owns the
-/// messenger; tasks go down a channel, results come back up.
+/// messenger; tasks (each carrying its gather's reply channel) go down a
+/// channel, results come back on the per-gather channel — which is what
+/// lets a single gather multiplex many clients in completion order.
 pub struct ClientHandle {
     pub name: String,
-    task_tx: Sender<FlMessage>,
-    result_rx: Receiver<Result<FlMessage, String>>,
+    task_tx: Sender<WorkerTask>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
 impl ClientHandle {
     /// Spawn the worker for an already-registered client connection.
     pub fn spawn(name: String, mut messenger: Messenger) -> ClientHandle {
-        let (task_tx, task_rx) = std::sync::mpsc::channel::<FlMessage>();
-        let (result_tx, result_rx) = std::sync::mpsc::channel();
+        let (task_tx, task_rx) = std::sync::mpsc::channel::<WorkerTask>();
         let wname = name.clone();
         let worker = std::thread::Builder::new()
             .name(format!("client-io-{wname}"))
             .spawn(move || {
-                while let Ok(task) = task_rx.recv() {
-                    let is_bye = task.kind == Kind::Bye;
-                    let outcome = (|| -> Result<FlMessage, StreamError> {
-                        messenger.send_msg(&task)?;
+                while let Ok(WorkerTask { msg, tag, reply, gate }) = task_rx.recv() {
+                    let is_bye = msg.kind == Kind::Bye;
+                    let outcome = (|| -> Result<(FlMessage, Option<FlowPermit>), StreamError> {
+                        messenger.send_msg(&msg)?;
                         if is_bye {
-                            return Ok(FlMessage::bye());
+                            return Ok((FlMessage::bye(), None));
                         }
-                        messenger.recv_msg()
+                        // claim an in-flight slot before receiving: until
+                        // one frees, this client is held back by transport
+                        // backpressure instead of materializing here
+                        let permit = gate.as_ref().map(FlowGate::acquire);
+                        let m = messenger.recv_msg()?;
+                        Ok((m, permit))
                     })();
-                    let send_failed = result_tx
-                        .send(outcome.map_err(|e| e.to_string()))
-                        .is_err();
-                    if is_bye || send_failed {
+                    let outcome = outcome
+                        .map(|(m, permit)| {
+                            let held = HeldResult {
+                                _bytes: mem::GatherGuard::new(m.body.byte_size()),
+                                _permit: permit,
+                            };
+                            (m, held)
+                        })
+                        .map_err(|e| e.to_string());
+                    // a dropped reply receiver means that gather was
+                    // abandoned; the worker stays alive for the next task
+                    let _ = reply.send((tag, outcome));
+                    if is_bye {
                         break;
                     }
                 }
@@ -72,31 +167,87 @@ impl ClientHandle {
         ClientHandle {
             name,
             task_tx,
-            result_rx,
             worker: Some(worker),
         }
     }
 
-    fn dispatch(&self, task: FlMessage) -> Result<()> {
+    fn dispatch(
+        &self,
+        msg: FlMessage,
+        tag: usize,
+        reply: Sender<Reply>,
+        gate: Option<Arc<FlowGate>>,
+    ) -> Result<()> {
         self.task_tx
-            .send(task)
+            .send(WorkerTask {
+                msg,
+                tag,
+                reply,
+                gate,
+            })
             .map_err(|_| anyhow!("client {} worker gone", self.name))
-    }
-
-    fn collect(&self) -> Result<FlMessage> {
-        self.result_rx
-            .recv()
-            .map_err(|_| anyhow!("client {} worker gone", self.name))?
-            .map_err(|e| anyhow!("client {}: {e}", self.name))
     }
 }
 
 impl Drop for ClientHandle {
     fn drop(&mut self) {
         // best-effort bye so the peer's loop can exit
-        let _ = self.task_tx.send(FlMessage::bye());
+        let (reply, _ack) = std::sync::mpsc::channel();
+        let _ = self.dispatch(FlMessage::bye(), 0, reply, None);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
+        }
+    }
+}
+
+/// An in-flight broadcast. Yields one result per dispatched target, in
+/// **completion order** — the multiplexed gather that makes server-side
+/// aggregation streaming.
+pub struct Gather {
+    rx: Receiver<Reply>,
+    /// Client name per dispatch position (for error attribution).
+    names: Vec<String>,
+    remaining: usize,
+}
+
+/// One result yielded by a [`Gather`]: the dispatch position (index into
+/// the original target slice), the message, and its accounting/flow
+/// baggage — drop `held` once the message has been folded (keeping it
+/// alive keeps the result counted as in-flight and, for bounded gathers,
+/// keeps its slot occupied).
+pub struct GatheredResult {
+    pub pos: usize,
+    pub msg: FlMessage,
+    pub held: HeldResult,
+}
+
+impl Gather {
+    /// Results not yet yielded.
+    pub fn remaining(&self) -> usize {
+        self.remaining
+    }
+
+    /// Block for the next arriving result, in completion order. Returns
+    /// `None` once every target has reported.
+    pub fn next_result(&mut self) -> Option<Result<GatheredResult>> {
+        if self.remaining == 0 {
+            return None;
+        }
+        match self.rx.recv() {
+            Ok((pos, Ok((msg, held)))) => {
+                self.remaining -= 1;
+                Some(Ok(GatheredResult { pos, msg, held }))
+            }
+            Ok((pos, Err(e))) => {
+                self.remaining -= 1;
+                let name = self.names.get(pos).map(String::as_str).unwrap_or("?");
+                Some(Err(anyhow!("client {name}: {e}")))
+            }
+            Err(_) => {
+                // every worker dropped its reply sender without reporting
+                self.remaining = 0;
+                Some(Err(anyhow!("client workers disconnected mid-gather")))
+            }
         }
     }
 }
@@ -137,38 +288,117 @@ impl Communicator {
         Ok(self.rng.choose(self.clients.len(), min_clients))
     }
 
-    /// `broadcast_and_wait`: send `task` to every target concurrently (each
-    /// worker thread streams independently) and gather all results.
+    /// Start a broadcast: send `task` to every target concurrently (each
+    /// worker thread streams independently) and return a [`Gather`] that
+    /// yields the results as they complete.
+    ///
+    /// `max_inflight` bounds how many decoded results may exist at once
+    /// (0 = unbounded): beyond the bound, workers wait to *receive*, so
+    /// the surplus clients are held back by transport backpressure rather
+    /// than materializing server-side. When bounded, consume each
+    /// [`GatheredResult`] (dropping its `held`) before expecting the next
+    /// — hoarding more than `max_inflight` results deadlocks the gather.
+    pub fn broadcast_stream(
+        &mut self,
+        task: &FlMessage,
+        targets: &[usize],
+        max_inflight: usize,
+    ) -> Result<Gather> {
+        let gate = if max_inflight == 0 || max_inflight >= targets.len() {
+            None
+        } else {
+            Some(FlowGate::new(max_inflight))
+        };
+        let (reply_tx, rx) = std::sync::mpsc::channel();
+        let mut names = Vec::with_capacity(targets.len());
+        for (pos, &t) in targets.iter().enumerate() {
+            let client = self
+                .clients
+                .get(t)
+                .ok_or_else(|| anyhow!("broadcast: no client at index {t}"))?;
+            let mut msg = task.clone();
+            msg.client = client.name.clone();
+            client.dispatch(msg, pos, reply_tx.clone(), gate.clone())?;
+            names.push(client.name.clone());
+        }
+        Ok(Gather {
+            rx,
+            names,
+            remaining: targets.len(),
+        })
+    }
+
+    /// `broadcast_and_reduce`: stream the gather through a fold, consuming
+    /// each client result **in completion order** and dropping it
+    /// immediately after folding. In-flight decoded results are capped at
+    /// [`STREAM_INFLIGHT`] (one folding + one staging), so peak server
+    /// memory is one accumulator plus O(1) results independent of client
+    /// count (paper §2.4 / Fig-5) — enforced by the flow gate and
+    /// measured by [`mem::gather_bytes`].
+    pub fn broadcast_and_reduce<A>(
+        &mut self,
+        task: &FlMessage,
+        targets: &[usize],
+        init: A,
+        mut fold: impl FnMut(A, FlMessage) -> Result<A>,
+    ) -> Result<A> {
+        let mut gather = self.broadcast_stream(task, targets, STREAM_INFLIGHT)?;
+        let mut acc = init;
+        while let Some(next) = gather.next_result() {
+            let r = next?;
+            let held = r.held;
+            acc = fold(acc, r.msg)?;
+            drop(held); // frees the result's bytes + in-flight slot
+        }
+        Ok(acc)
+    }
+
+    /// Legacy all-at-once gather: send `task` to every target and
+    /// materialize every result (in target order) before returning.
+    /// Compatibility wrapper over [`Communicator::broadcast_stream`] —
+    /// prefer [`Communicator::broadcast_and_reduce`], which does not hold
+    /// O(clients × model) on the server.
     pub fn broadcast_and_wait(
         &mut self,
         task: &FlMessage,
         targets: &[usize],
     ) -> Result<Vec<FlMessage>> {
-        for &t in targets {
-            let mut msg = task.clone();
-            msg.client = self.clients[t].name.clone();
-            self.clients[t].dispatch(msg)?;
+        // unbounded: this path deliberately materializes everything, and
+        // a flow gate would deadlock against the hoarded results
+        let mut gather = self.broadcast_stream(task, targets, 0)?;
+        let mut slots: Vec<Option<FlMessage>> = (0..targets.len()).map(|_| None).collect();
+        let mut held = Vec::with_capacity(targets.len());
+        while let Some(next) = gather.next_result() {
+            let r = next?;
+            held.push(r.held);
+            slots[r.pos] = Some(r.msg);
         }
-        let mut results = Vec::with_capacity(targets.len());
-        for &t in targets {
-            results.push(self.clients[t].collect()?);
-        }
-        Ok(results)
+        Ok(slots
+            .into_iter()
+            .map(|s| s.expect("gather yields one result per target"))
+            .collect())
     }
 
     /// Send to one client and wait (cyclic weight transfer's primitive).
     pub fn send_and_wait(&mut self, task: &FlMessage, target: usize) -> Result<FlMessage> {
-        self.broadcast_and_wait(task, &[target])
-            .map(|mut v| v.pop().unwrap())
+        self.broadcast_and_reduce(task, &[target], None, |_, m| Ok(Some(m)))?
+            .ok_or_else(|| anyhow!("no result from client {target}"))
     }
 
     /// End the job on all clients.
     pub fn shutdown(&mut self) {
+        let (reply_tx, rx) = std::sync::mpsc::channel();
+        let mut sent = 0usize;
         for c in &self.clients {
-            let _ = c.dispatch(FlMessage::bye());
+            if c.dispatch(FlMessage::bye(), 0, reply_tx.clone(), None).is_ok() {
+                sent += 1;
+            }
         }
-        for c in &self.clients {
-            let _ = c.collect();
+        drop(reply_tx);
+        for _ in 0..sent {
+            if rx.recv().is_err() {
+                break;
+            }
         }
     }
 }

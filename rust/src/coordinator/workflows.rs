@@ -2,6 +2,11 @@
 //! cyclic weight transfer are examples of such workflows"; §1: "FL
 //! infrastructure ... can also be utilized for tasks such as inference and
 //! federated evaluation").
+//!
+//! All three workflows consume client results through the streaming
+//! gather ([`Communicator::broadcast_and_reduce`]): each result is
+//! reduced into scalar state the moment it arrives and dropped, so none
+//! of them holds more than one client payload at a time.
 
 use anyhow::Result;
 
@@ -41,17 +46,19 @@ impl Controller for CyclicWeightTransfer {
             for target in 0..n {
                 let task = FlMessage::task("train", round, self.model.clone());
                 let result = comm.send_and_wait(&task, target)?;
-                self.model = result.body.clone();
                 let loss = result.metric("train_loss").unwrap_or(f64::NAN);
+                let client = result.client.clone();
+                // the model travels: this client's output is the next input
+                self.model = result.body;
                 ctx.sink.event(
                     "cyclic_step",
                     &[
                         ("round", Json::num(round as f64)),
-                        ("client", Json::str(result.client.clone())),
+                        ("client", Json::str(client.clone())),
                         ("train_loss", Json::num(loss)),
                     ],
                 );
-                self.trace.push((round, result.client.clone(), loss));
+                self.trace.push((round, client, loss));
             }
         }
         comm.shutdown();
@@ -60,10 +67,12 @@ impl Controller for CyclicWeightTransfer {
 }
 
 /// Federated evaluation: broadcast the (fixed) model with an "eval" task
-/// and average client metrics — no training, no model update.
+/// and average client metrics — no training, no model update. Metrics are
+/// reduced as each client reports (streaming gather); result bodies are
+/// dropped immediately.
 pub struct FederatedEval {
     pub model: TensorDict,
-    /// (client, loss, acc, n_samples) after run.
+    /// (client, loss, acc, n_samples) after run, sorted by client name.
     pub results: Vec<(String, f64, f64, f64)>,
     /// Sample-weighted means.
     pub mean_loss: f64,
@@ -90,19 +99,20 @@ impl Controller for FederatedEval {
         let n = comm.n_clients();
         let targets: Vec<usize> = (0..n).collect();
         let task = FlMessage::task("eval", 0, self.model.clone());
-        let results = comm.broadcast_and_wait(&task, &targets)?;
-        let mut wsum = 0.0;
-        let mut loss = 0.0;
-        let mut acc = 0.0;
-        for r in &results {
-            let w = r.metric("n_samples").unwrap_or(1.0).max(0.0);
-            let l = r.metric("val_loss").unwrap_or(f64::NAN);
-            let a = r.metric("val_acc").unwrap_or(f64::NAN);
-            self.results.push((r.client.clone(), l, a, w));
-            wsum += w;
-            loss += w * l;
-            acc += w * a;
-        }
+        let (mut rows, wsum, loss, acc) = comm.broadcast_and_reduce(
+            &task,
+            &targets,
+            (Vec::with_capacity(n), 0.0f64, 0.0f64, 0.0f64),
+            |(mut rows, wsum, loss, acc), r| {
+                let w = r.metric("n_samples").unwrap_or(1.0).max(0.0);
+                let l = r.metric("val_loss").unwrap_or(f64::NAN);
+                let a = r.metric("val_acc").unwrap_or(f64::NAN);
+                rows.push((r.client.clone(), l, a, w));
+                Ok((rows, wsum + w, loss + w * l, acc + w * a))
+            },
+        )?;
+        rows.sort_by(|a, b| a.0.cmp(&b.0)); // completion order varies
+        self.results = rows;
         if wsum > 0.0 {
             self.mean_loss = loss / wsum;
             self.mean_acc = acc / wsum;
@@ -126,7 +136,7 @@ impl Controller for FederatedEval {
 pub struct FederatedInference {
     pub model: TensorDict,
     pub task_name: String,
-    /// (client, n_embedded) after run.
+    /// (client, n_embedded) after run, sorted by client name.
     pub counts: Vec<(String, usize)>,
 }
 
@@ -149,18 +159,27 @@ impl Controller for FederatedInference {
         let n = comm.n_clients();
         let targets: Vec<usize> = (0..n).collect();
         let task = FlMessage::task(&self.task_name, 0, self.model.clone());
-        let results = comm.broadcast_and_wait(&task, &targets)?;
-        for r in &results {
-            let count = r.metric("n_embedded").unwrap_or(0.0) as usize;
-            self.counts.push((r.client.clone(), count));
+        let mut counts = comm.broadcast_and_reduce(
+            &task,
+            &targets,
+            Vec::with_capacity(n),
+            |mut counts: Vec<(String, usize)>, r| {
+                let count = r.metric("n_embedded").unwrap_or(0.0) as usize;
+                counts.push((r.client.clone(), count));
+                Ok(counts)
+            },
+        )?;
+        counts.sort_by(|a, b| a.0.cmp(&b.0)); // completion order varies
+        for (client, count) in &counts {
             ctx.sink.event(
                 "fedinference",
                 &[
-                    ("client", Json::str(r.client.clone())),
-                    ("n_embedded", Json::num(count as f64)),
+                    ("client", Json::str(client.clone())),
+                    ("n_embedded", Json::num(*count as f64)),
                 ],
             );
         }
+        self.counts = counts;
         comm.shutdown();
         Ok(())
     }

@@ -16,10 +16,23 @@
 //! * **L1 (python/compile/kernels/)** — Pallas TPU kernels (flash
 //!   attention, fused LoRA matmul, fused AdamW) called from L2.
 //!
-//! The crate is self-contained after `make artifacts`: the [`runtime`]
-//! loads HLO text via PJRT (`xla` crate) and every FL workflow —
-//! [`coordinator::FedAvg`], cyclic weight transfer, federated evaluation,
-//! federated inference — runs pure Rust.
+//! The FL system itself — [`coordinator::FedAvg`], cyclic weight
+//! transfer, federated evaluation, federated inference, the full
+//! streaming stack — is pure Rust and needs no artifacts at all. Model
+//! execution additionally needs the AOT artifacts from `make artifacts`
+//! (run at the repo root; writes `rust/artifacts/`) and a build with
+//! `--features pjrt` so the [`runtime`] can load HLO text via PJRT (the
+//! vendored `xla` crate); without them, artifact-dependent tests and
+//! examples skip themselves.
+//!
+//! Server-side aggregation is **streaming**: the Communicator's
+//! gather-iterator ([`coordinator::Communicator::broadcast_stream`] /
+//! [`coordinator::Communicator::broadcast_and_reduce`]) yields each
+//! client result in completion order and FedAvg folds it into a single
+//! running-mean accumulator; a flow gate caps decoded in-flight results
+//! at two (one folding + one staging), so peak server memory is one
+//! accumulator plus O(1) results — independent of client count (paper
+//! §2.4 / Fig 5).
 
 pub mod config;
 pub mod coordinator;

@@ -154,6 +154,7 @@ fn summarize(opts: &Fig5Opts) -> Result<()> {
         "model(MB)",
         "peak_tracked(MB)",
         "peak/model",
+        "peak_gather(MB)",
         "duration(s)",
     ]);
     let parties: Vec<String> = std::iter::once("server".to_string())
@@ -164,6 +165,7 @@ fn summarize(opts: &Fig5Opts) -> Result<()> {
         let text =
             std::fs::read_to_string(&path).with_context(|| format!("missing {path}"))?;
         let mut peak = 0.0f64;
+        let mut gather_peak = 0.0f64;
         let mut t_last = 0.0f64;
         for line in text.lines().skip(1) {
             let cols: Vec<&str> = line.split(',').collect();
@@ -171,19 +173,23 @@ fn summarize(opts: &Fig5Opts) -> Result<()> {
                 t_last = cols[0].parse::<f64>().unwrap_or(0.0) / 1000.0;
                 peak = peak.max(cols[1].parse::<f64>().unwrap_or(0.0));
             }
+            if cols.len() >= 4 {
+                gather_peak = gather_peak.max(cols[3].parse::<f64>().unwrap_or(0.0));
+            }
         }
         table.row(vec![
             p.clone(),
             format!("{model_mb:.0}"),
             format!("{:.0}", peak / mb),
             format!("{:.2}", peak / model_bytes(opts) as f64),
+            format!("{:.0}", gather_peak / mb),
             format!("{t_last:.1}"),
         ]);
     }
     println!("\nFig 5 summary (per-party tracked streaming memory):");
     table.print();
     println!(
-        "series: {}/fig5_<party>_mem.csv  (t_ms, tracked_bytes, rss_bytes)",
+        "series: {}/fig5_<party>_mem.csv  (t_ms, tracked_bytes, rss_bytes, gather_bytes)",
         opts.out_dir
     );
     Ok(())
@@ -287,12 +293,13 @@ fn write_samples(
                 s.t_ms.to_string(),
                 s.tracked.max(0).to_string(),
                 s.rss.to_string(),
+                s.gather.max(0).to_string(),
             ]
         })
         .collect();
     write_csv(
         std::path::Path::new(&format!("{out_dir}/fig5_{party}_mem.csv")),
-        &["t_ms", "tracked_bytes", "rss_bytes"],
+        &["t_ms", "tracked_bytes", "rss_bytes", "gather_bytes"],
         &rows,
     )
 }

@@ -7,6 +7,11 @@
 //! Interchange is HLO *text*: jax >= 0.5 serializes HloModuleProto with
 //! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
+//!
+//! The XLA dependency is gated behind the `pjrt` cargo feature so the FL
+//! system builds (and its full test suite runs) without the vendored `xla`
+//! crate. Without the feature, [`Runtime::cpu`] fails at startup with a
+//! clear message and every artifact-dependent code path skips.
 
 mod manifest;
 mod service;
@@ -14,173 +19,249 @@ mod trainer;
 
 pub use manifest::{IoSpec, Manifest, ParamSpec};
 pub use service::RuntimeClient;
-pub use trainer::{StepMetrics, Trainer};
+pub use trainer::{scalar, StepMetrics, Trainer};
 
-use std::collections::HashMap;
-use std::path::{Path, PathBuf};
-use std::sync::{Arc, Mutex};
+pub use backend::{Executable, Runtime};
 
-use anyhow::{anyhow, bail, Context, Result};
+#[cfg(feature = "pjrt")]
+mod backend {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+    use std::sync::{Arc, Mutex};
 
-use crate::tensor::{DType, Tensor, TensorDict};
-use crate::util::bytes;
+    use anyhow::{anyhow, bail, Context, Result};
 
-/// A compiled artifact: PJRT executable + its manifest.
-pub struct Executable {
-    pub manifest: Manifest,
-    exe: xla::PjRtLoadedExecutable,
-}
+    use super::{IoSpec, Manifest};
+    use crate::tensor::{DType, Tensor, TensorDict};
+    use crate::util::bytes;
 
-impl Executable {
-    /// Execute with named inputs. `inputs` must contain a tensor for every
-    /// name in `manifest.inputs` (params, `m.*`/`v.*` opt state, `bc`,
-    /// and data inputs alike); outputs are returned keyed by
-    /// `manifest.outputs` names.
-    pub fn execute(&self, inputs: &TensorDict) -> Result<TensorDict> {
-        let literals = self.marshal_inputs(inputs)?;
-        let result = self
-            .exe
-            .execute::<xla::Literal>(&literals)
-            .map_err(|e| anyhow!("execute {}: {e}", self.manifest.artifact))?;
-        let tuple = result[0][0]
-            .to_literal_sync()
-            .map_err(|e| anyhow!("fetch result literal: {e}"))?;
-        self.unmarshal_outputs(tuple)
+    /// A compiled artifact: PJRT executable + its manifest.
+    pub struct Executable {
+        pub manifest: Manifest,
+        exe: xla::PjRtLoadedExecutable,
     }
 
-    fn marshal_inputs(&self, inputs: &TensorDict) -> Result<Vec<xla::Literal>> {
-        let mut literals = Vec::with_capacity(self.manifest.inputs.len());
-        for spec in &self.manifest.inputs {
-            let t = inputs.get(&spec.name).ok_or_else(|| {
-                anyhow!(
-                    "{}: missing input tensor '{}'",
-                    self.manifest.artifact,
-                    spec.name
-                )
-            })?;
-            if t.shape != spec.shape {
+    impl Executable {
+        /// Execute with named inputs. `inputs` must contain a tensor for every
+        /// name in `manifest.inputs` (params, `m.*`/`v.*` opt state, `bc`,
+        /// and data inputs alike); outputs are returned keyed by
+        /// `manifest.outputs` names.
+        pub fn execute(&self, inputs: &TensorDict) -> Result<TensorDict> {
+            let literals = self.marshal_inputs(inputs)?;
+            let result = self
+                .exe
+                .execute::<xla::Literal>(&literals)
+                .map_err(|e| anyhow!("execute {}: {e}", self.manifest.artifact))?;
+            let tuple = result[0][0]
+                .to_literal_sync()
+                .map_err(|e| anyhow!("fetch result literal: {e}"))?;
+            self.unmarshal_outputs(tuple)
+        }
+
+        fn marshal_inputs(&self, inputs: &TensorDict) -> Result<Vec<xla::Literal>> {
+            let mut literals = Vec::with_capacity(self.manifest.inputs.len());
+            for spec in &self.manifest.inputs {
+                let t = inputs.get(&spec.name).ok_or_else(|| {
+                    anyhow!(
+                        "{}: missing input tensor '{}'",
+                        self.manifest.artifact,
+                        spec.name
+                    )
+                })?;
+                if t.shape != spec.shape {
+                    bail!(
+                        "{}: input '{}' shape {:?} != manifest {:?}",
+                        self.manifest.artifact,
+                        spec.name,
+                        t.shape,
+                        spec.shape
+                    );
+                }
+                literals.push(tensor_to_literal(t)?);
+            }
+            Ok(literals)
+        }
+
+        fn unmarshal_outputs(&self, tuple: xla::Literal) -> Result<TensorDict> {
+            let parts = tuple
+                .to_tuple()
+                .map_err(|e| anyhow!("decompose output tuple: {e}"))?;
+            if parts.len() != self.manifest.outputs.len() {
                 bail!(
-                    "{}: input '{}' shape {:?} != manifest {:?}",
+                    "{}: {} outputs, manifest says {}",
                     self.manifest.artifact,
-                    spec.name,
-                    t.shape,
-                    spec.shape
+                    parts.len(),
+                    self.manifest.outputs.len()
                 );
             }
-            literals.push(tensor_to_literal(t)?);
+            let mut out = TensorDict::new();
+            for (spec, lit) in self.manifest.outputs.iter().zip(parts) {
+                out.insert(spec.name.clone(), literal_to_tensor(&lit, spec)?);
+            }
+            Ok(out)
         }
-        Ok(literals)
     }
 
-    fn unmarshal_outputs(&self, tuple: xla::Literal) -> Result<TensorDict> {
-        let parts = tuple
-            .to_tuple()
-            .map_err(|e| anyhow!("decompose output tuple: {e}"))?;
-        if parts.len() != self.manifest.outputs.len() {
-            bail!(
-                "{}: {} outputs, manifest says {}",
-                self.manifest.artifact,
-                parts.len(),
-                self.manifest.outputs.len()
-            );
-        }
-        let mut out = TensorDict::new();
-        for (spec, lit) in self.manifest.outputs.iter().zip(parts) {
-            out.insert(spec.name.clone(), literal_to_tensor(&lit, spec)?);
-        }
-        Ok(out)
+    fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
+        let (ty, raw): (xla::ElementType, &[u8]) = match &t.data {
+            crate::tensor::Data::F32(v) => (xla::ElementType::F32, bytes::f32_slice_as_bytes(v)),
+            crate::tensor::Data::I32(v) => (xla::ElementType::S32, bytes::i32_slice_as_bytes(v)),
+        };
+        xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, raw)
+            .map_err(|e| anyhow!("literal create: {e}"))
     }
-}
 
-fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
-    let (ty, raw): (xla::ElementType, &[u8]) = match &t.data {
-        crate::tensor::Data::F32(v) => (xla::ElementType::F32, bytes::f32_slice_as_bytes(v)),
-        crate::tensor::Data::I32(v) => (xla::ElementType::S32, bytes::i32_slice_as_bytes(v)),
-    };
-    xla::Literal::create_from_shape_and_untyped_data(ty, &t.shape, raw)
-        .map_err(|e| anyhow!("literal create: {e}"))
-}
-
-fn literal_to_tensor(lit: &xla::Literal, spec: &IoSpec) -> Result<Tensor> {
-    Ok(match spec.dtype {
-        DType::F32 => Tensor::f32(
-            spec.shape.clone(),
-            lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?,
-        ),
-        DType::I32 => Tensor::i32(
-            spec.shape.clone(),
-            lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?,
-        ),
-    })
-}
-
-/// The runtime: one PJRT client + a compile cache keyed by artifact name.
-/// Compilation of a 100 M-param module takes seconds; every FL client in a
-/// simulation shares the cache through an [`Arc<Runtime>`].
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: Mutex<HashMap<String, Arc<Executable>>>,
-}
-
-impl Runtime {
-    /// Create a CPU-PJRT runtime rooted at the artifacts directory.
-    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
-        let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-        Ok(Runtime {
-            client,
-            dir: artifacts_dir.as_ref().to_path_buf(),
-            cache: Mutex::new(HashMap::new()),
+    fn literal_to_tensor(lit: &xla::Literal, spec: &IoSpec) -> Result<Tensor> {
+        Ok(match spec.dtype {
+            DType::F32 => Tensor::f32(
+                spec.shape.clone(),
+                lit.to_vec::<f32>().map_err(|e| anyhow!("to_vec f32: {e}"))?,
+            ),
+            DType::I32 => Tensor::i32(
+                spec.shape.clone(),
+                lit.to_vec::<i32>().map_err(|e| anyhow!("to_vec i32: {e}"))?,
+            ),
         })
     }
 
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
+    /// The runtime: one PJRT client + a compile cache keyed by artifact name.
+    /// Compilation of a 100 M-param module takes seconds; every FL client in a
+    /// simulation shares the cache through an [`Arc<Runtime>`].
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: Mutex<HashMap<String, Arc<Executable>>>,
     }
 
-    pub fn artifacts_dir(&self) -> &Path {
-        &self.dir
-    }
-
-    /// List artifacts available in the manifest index.
-    pub fn available(&self) -> Result<Vec<String>> {
-        let index = std::fs::read_to_string(self.dir.join("manifest.json"))
-            .context("read artifacts/manifest.json (run `make artifacts`)")?;
-        let j = crate::util::json::Json::parse(&index).map_err(|e| anyhow!("{e}"))?;
-        Ok(j.get("artifacts")
-            .as_arr()
-            .unwrap_or(&[])
-            .iter()
-            .filter_map(|a| a.as_str().map(String::from))
-            .collect())
-    }
-
-    /// Load + compile an artifact (cached).
-    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-        if let Some(e) = self.cache.lock().unwrap().get(name) {
-            return Ok(e.clone());
+    impl Runtime {
+        /// Create a CPU-PJRT runtime rooted at the artifacts directory.
+        pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+            Ok(Runtime {
+                client,
+                dir: artifacts_dir.as_ref().to_path_buf(),
+                cache: Mutex::new(HashMap::new()),
+            })
         }
-        let manifest = Manifest::load(&self.dir, name)?;
-        let hlo_path = self.dir.join(&manifest.hlo);
-        let proto = xla::HloModuleProto::from_text_file(&hlo_path)
-            .map_err(|e| anyhow!("parse {}: {e}", hlo_path.display()))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .map_err(|e| anyhow!("compile {name}: {e}"))?;
-        let executable = Arc::new(Executable { manifest, exe });
-        self.cache
-            .lock()
-            .unwrap()
-            .insert(name.to_string(), executable.clone());
-        Ok(executable)
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn artifacts_dir(&self) -> &Path {
+            &self.dir
+        }
+
+        /// List artifacts available in the manifest index.
+        pub fn available(&self) -> Result<Vec<String>> {
+            let index = std::fs::read_to_string(self.dir.join("manifest.json"))
+                .context("read artifacts/manifest.json (run `make artifacts`)")?;
+            let j = crate::util::json::Json::parse(&index).map_err(|e| anyhow!("{e}"))?;
+            Ok(j.get("artifacts")
+                .as_arr()
+                .unwrap_or(&[])
+                .iter()
+                .filter_map(|a| a.as_str().map(String::from))
+                .collect())
+        }
+
+        /// Load + compile an artifact (cached).
+        pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+            if let Some(e) = self.cache.lock().unwrap().get(name) {
+                return Ok(e.clone());
+            }
+            let manifest = Manifest::load(&self.dir, name)?;
+            let hlo_path = self.dir.join(&manifest.hlo);
+            let proto = xla::HloModuleProto::from_text_file(&hlo_path)
+                .map_err(|e| anyhow!("parse {}: {e}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?;
+            let executable = Arc::new(Executable { manifest, exe });
+            self.cache
+                .lock()
+                .unwrap()
+                .insert(name.to_string(), executable.clone());
+            Ok(executable)
+        }
     }
 }
 
-#[cfg(test)]
+#[cfg(not(feature = "pjrt"))]
+mod backend {
+    //! Stub backend used when the `pjrt` feature is off: the runtime API
+    //! type-checks identically, but startup fails with an explanatory
+    //! error, so `RuntimeClient::start(...)` returns `Err` and every
+    //! artifact-dependent caller takes its skip/fallback path.
+
+    use std::path::Path;
+    use std::sync::Arc;
+
+    use anyhow::{bail, Result};
+
+    use super::Manifest;
+    use crate::tensor::TensorDict;
+
+    /// A compiled artifact (stub — cannot be constructed without `pjrt`).
+    pub struct Executable {
+        pub manifest: Manifest,
+    }
+
+    impl Executable {
+        pub fn execute(&self, _inputs: &TensorDict) -> Result<TensorDict> {
+            bail!("fedflare was built without the `pjrt` feature")
+        }
+    }
+
+    /// Stub runtime: creation always fails.
+    pub struct Runtime {}
+
+    impl Runtime {
+        pub fn cpu(_artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+            bail!(
+                "PJRT runtime unavailable: fedflare was built without the `pjrt` \
+                 feature (which needs the vendored `xla` crate). Rebuild with \
+                 `cargo build --features pjrt` after `make artifacts`."
+            )
+        }
+
+        pub fn platform(&self) -> String {
+            "unavailable (built without the pjrt feature)".to_string()
+        }
+
+        pub fn artifacts_dir(&self) -> &Path {
+            Path::new("")
+        }
+
+        pub fn available(&self) -> Result<Vec<String>> {
+            bail!("fedflare was built without the `pjrt` feature")
+        }
+
+        pub fn load(&self, _name: &str) -> Result<Arc<Executable>> {
+            bail!("fedflare was built without the `pjrt` feature")
+        }
+    }
+}
+
+#[cfg(all(test, not(feature = "pjrt")))]
+mod stub_tests {
+    use super::*;
+
+    #[test]
+    fn stub_runtime_fails_with_clear_message() {
+        let err = Runtime::cpu("artifacts").err().expect("stub must fail");
+        assert!(err.to_string().contains("pjrt"), "{err}");
+    }
+}
+
+#[cfg(all(test, feature = "pjrt"))]
 mod tests {
     use super::*;
+    use crate::tensor::{Tensor, TensorDict};
+    use std::path::PathBuf;
+    use std::sync::Arc;
 
     fn artifacts_dir() -> PathBuf {
         PathBuf::from("artifacts")

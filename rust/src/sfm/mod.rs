@@ -152,6 +152,9 @@ pub fn chunk_frames(kind: u16, stream: u64, payload: &[u8], chunk_bytes: usize) 
 
 /// Per-stream reassembly state.
 struct Partial {
+    /// Application tag latched from the stream's first-seen frame; every
+    /// later frame must agree (like the `total` consistency check).
+    kind: u16,
     chunks: Vec<Option<Vec<u8>>>,
     received: usize,
     bytes: usize,
@@ -180,6 +183,7 @@ impl Reassembler {
             return Err(SfmError::Decode("frame with total=0".into()));
         }
         let entry = self.partials.entry(stream).or_insert_with(|| Partial {
+            kind: frame.kind,
             chunks: {
                 let mut v = Vec::with_capacity(total);
                 v.resize_with(total, || None);
@@ -192,6 +196,12 @@ impl Reassembler {
             return Err(SfmError::Decode(format!(
                 "stream {stream}: inconsistent total ({} vs {total})",
                 entry.chunks.len()
+            )));
+        }
+        if entry.kind != frame.kind {
+            return Err(SfmError::Decode(format!(
+                "stream {stream}: inconsistent kind ({} vs {})",
+                frame.kind, entry.kind
             )));
         }
         let seq = frame.seq as usize;
@@ -215,9 +225,10 @@ impl Reassembler {
                 out.extend_from_slice(&c.unwrap());
             }
             mem::track_free(p.bytes);
-            // hand off as a tracked allocation owned by the caller
+            // hand off as a tracked allocation owned by the caller,
+            // tagged with the kind latched on the stream's first frame
             mem::track_alloc(out.len());
-            return Ok(Some((stream, frame.kind, out)));
+            return Ok(Some((stream, p.kind, out)));
         }
         Ok(None)
     }
@@ -401,6 +412,31 @@ mod tests {
         let mut re2 = Reassembler::new();
         assert!(re2.push(mk(7, 3)).is_err()); // seq out of range
         assert!(re2.push(mk(0, 0)).is_err()); // zero total
+    }
+
+    #[test]
+    fn inconsistent_kind_rejected_and_first_kind_latched() {
+        let mk = |kind, seq| Frame {
+            flags: 0,
+            kind,
+            stream: 6,
+            seq,
+            total: 2,
+            payload: vec![1; 10],
+        };
+        // kind drift inside one stream is an error, not a silent accept
+        let mut re = Reassembler::new();
+        re.push(mk(3, 0)).unwrap();
+        let err = re.push(mk(4, 1)).unwrap_err();
+        assert!(err.to_string().contains("inconsistent kind"), "{err}");
+
+        // the completed payload reports the FIRST frame's kind even when
+        // chunks arrive out of order
+        let mut re = Reassembler::new();
+        assert!(re.push(mk(7, 1)).unwrap().is_none());
+        let (_, kind, payload) = re.push(mk(7, 0)).unwrap().unwrap();
+        assert_eq!(kind, 7);
+        crate::util::mem::track_free(payload.len());
     }
 
     #[test]

@@ -96,6 +96,14 @@ pub fn run_job(
     // --- run the workflow
     let run_result = controller.run(&mut comm, &mut ctx);
 
+    // tear the transport down even when the controller failed mid-round,
+    // so idle clients observe a bye (or a closed channel) instead of
+    // blocking on their next task while we join them below
+    if run_result.is_err() {
+        comm.shutdown();
+    }
+    drop(comm);
+
     // --- join clients
     let mut client_errs = Vec::new();
     for (name, t) in client_threads {
@@ -247,6 +255,76 @@ mod tests {
         run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
         let v = ctl.model.get("key_000").unwrap().as_f32().unwrap();
         assert!((v[0] - 1.0).abs() < 1e-6);
+    }
+
+    /// Controller that records the order (and spacing) in which client
+    /// results complete the streaming gather.
+    struct OrderProbe {
+        model: crate::tensor::TensorDict,
+        order: Vec<String>,
+        arrivals: Vec<std::time::Instant>,
+    }
+
+    impl crate::coordinator::Controller for OrderProbe {
+        fn name(&self) -> &'static str {
+            "order_probe"
+        }
+        fn run(
+            &mut self,
+            comm: &mut crate::coordinator::Communicator,
+            _ctx: &mut crate::coordinator::ServerCtx,
+        ) -> anyhow::Result<()> {
+            let targets: Vec<usize> = (0..comm.n_clients()).collect();
+            let task = FlMessage::task("stream_test", 0, self.model.clone());
+            let (order, arrivals) = comm.broadcast_and_reduce(
+                &task,
+                &targets,
+                (Vec::new(), Vec::new()),
+                |(mut order, mut arrivals): (Vec<String>, Vec<_>), r| {
+                    order.push(r.client.clone());
+                    arrivals.push(std::time::Instant::now());
+                    Ok((order, arrivals))
+                },
+            )?;
+            self.order = order;
+            self.arrivals = arrivals;
+            comm.shutdown();
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn fast_client_is_folded_before_slow_client_arrives() {
+        // site-2 is throttled to 8 MB/s on a 4 MB model (both directions;
+        // the token bucket's 1 MB burst covers only the first chunk-span),
+        // so its round trip takes ~0.75 s while site-1 finishes in
+        // milliseconds; the streaming gather must hand site-1's result to
+        // the fold while site-2 is still mid-transfer.
+        let mut job = crate::config::JobConfig::named("sim_order", "none");
+        job.rounds = 1;
+        job.stream.chunk_bytes = 64 << 10;
+        job.clients[1].bandwidth_bps = 8_000_000;
+        let mut ctl = OrderProbe {
+            model: StreamTestExecutor::build_model(4, 262_144, 1.0),
+            order: Vec::new(),
+            arrivals: Vec::new(),
+        };
+        let mut f: Box<ExecutorFactory> = Box::new(|_i, _s| {
+            Ok(Box::new(StreamTestExecutor::new(None, 0.5)) as Box<dyn Executor>)
+        });
+        run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+        assert_eq!(
+            ctl.order,
+            vec!["site-1".to_string(), "site-2".to_string()],
+            "fast client must complete the gather first"
+        );
+        // the fold of the fast result happened well before the slow one
+        // arrived (throttling stretches the gap to ~1 s; demand 200 ms)
+        let gap = ctl.arrivals[1].duration_since(ctl.arrivals[0]);
+        assert!(
+            gap > std::time::Duration::from_millis(200),
+            "no overlap between fold and slow transfer: gap {gap:?}"
+        );
     }
 
     /// An executor that fails — the job must surface the error.

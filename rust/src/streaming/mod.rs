@@ -192,9 +192,14 @@ impl Messenger {
 
     /// Receive a file stream directly to disk, writing chunks as the
     /// contiguous prefix grows (out-of-order chunks are buffered).
+    ///
+    /// The first frame latches the stream id and chunk count; frames from
+    /// any other stream — or frames whose `total` disagrees — are a
+    /// protocol error rather than silent corruption of the output file.
     pub fn recv_file(&mut self, out: &Path) -> Result<u64, StreamError> {
         let mut file = std::fs::File::create(out)?;
         let mut pending: std::collections::BTreeMap<u32, Vec<u8>> = Default::default();
+        let mut latched: Option<(u64, u32)> = None; // (stream id, total)
         let mut next_seq = 0u32;
         let mut written = 0u64;
         loop {
@@ -204,8 +209,37 @@ impl Messenger {
                     "interleaved non-file stream during recv_file".into(),
                 ));
             }
+            let (stream, total) = match latched {
+                None => {
+                    if frame.total == 0 {
+                        return Err(StreamError::Protocol(
+                            "file stream with total=0".into(),
+                        ));
+                    }
+                    latched = Some((frame.stream, frame.total));
+                    (frame.stream, frame.total)
+                }
+                Some(l) => l,
+            };
+            if frame.stream != stream {
+                return Err(StreamError::Protocol(format!(
+                    "interleaved file stream {} during recv_file of stream {stream}",
+                    frame.stream
+                )));
+            }
+            if frame.total != total {
+                return Err(StreamError::Protocol(format!(
+                    "file stream {stream}: inconsistent total ({} vs {total})",
+                    frame.total
+                )));
+            }
+            if frame.seq >= total {
+                return Err(StreamError::Protocol(format!(
+                    "file stream {stream}: seq {} >= total {total}",
+                    frame.seq
+                )));
+            }
             self.recv_bytes += frame.payload.len() as u64;
-            let total = frame.total;
             pending.insert(frame.seq, frame.payload);
             while let Some(chunk) = pending.remove(&next_seq) {
                 file.write_all(&chunk)?;
@@ -297,6 +331,62 @@ mod tests {
         assert_eq!(written, data.len() as u64);
         assert_eq!(std::fs::read(&dst).unwrap(), data);
         let _ = std::fs::remove_file(&src);
+        let _ = std::fs::remove_file(&dst);
+    }
+
+    #[test]
+    fn recv_file_rejects_interleaved_second_stream() {
+        use crate::sfm::{Driver, Frame};
+        let (mut raw, b) = inproc::pair(64, "ifile");
+        let mut b = Messenger::new(Box::new(b), 1024, 2);
+        let mk = |stream: u64, seq: u32, total: u32| Frame {
+            flags: 0,
+            kind: KIND_FILE,
+            stream,
+            seq,
+            total,
+            payload: vec![seq as u8; 16],
+        };
+        raw.send(mk(1, 0, 3)).unwrap();
+        raw.send(mk(2, 0, 3)).unwrap(); // second stream interleaves
+        let dst = std::env::temp_dir().join("fedflare_recv_file_interleave.bin");
+        let err = b.recv_file(&dst).unwrap_err();
+        assert!(
+            err.to_string().contains("interleaved file stream"),
+            "{err}"
+        );
+        let _ = std::fs::remove_file(&dst);
+    }
+
+    #[test]
+    fn recv_file_rejects_inconsistent_total() {
+        use crate::sfm::{Driver, Frame};
+        let (mut raw, b) = inproc::pair(64, "tfile");
+        let mut b = Messenger::new(Box::new(b), 1024, 2);
+        let mk = |seq: u32, total: u32| Frame {
+            flags: 0,
+            kind: KIND_FILE,
+            stream: 9,
+            seq,
+            total,
+            payload: vec![seq as u8; 16],
+        };
+        raw.send(mk(0, 3)).unwrap();
+        raw.send(mk(1, 4)).unwrap(); // total changed mid-stream
+        let dst = std::env::temp_dir().join("fedflare_recv_file_total.bin");
+        let err = b.recv_file(&dst).unwrap_err();
+        assert!(err.to_string().contains("inconsistent total"), "{err}");
+        let _ = std::fs::remove_file(&dst);
+
+        // out-of-range seq and zero total are rejected too
+        let (mut raw, b) = inproc::pair(64, "sfile");
+        let mut b = Messenger::new(Box::new(b), 1024, 2);
+        raw.send(mk(7, 3)).unwrap();
+        assert!(b.recv_file(&dst).is_err());
+        let (mut raw, b) = inproc::pair(64, "zfile");
+        let mut b = Messenger::new(Box::new(b), 1024, 2);
+        raw.send(mk(0, 0)).unwrap();
+        assert!(b.recv_file(&dst).is_err());
         let _ = std::fs::remove_file(&dst);
     }
 

@@ -230,6 +230,26 @@ impl TensorDict {
         }
     }
 
+    /// `self += c * (other - self)` over all matching f32 tensors — the
+    /// running-weighted-mean fold of the streaming aggregator
+    /// (`agg += (w_i / W_cum) * (x_i - agg)`). i32 tensors pass through
+    /// untouched, mirroring [`TensorDict::axpy`]. Panics on missing names
+    /// or length mismatch (caller validates via
+    /// [`TensorDict::same_schema`]).
+    pub fn lerp(&mut self, c: f32, other: &TensorDict) {
+        for (name, t) in self.map.iter_mut() {
+            let o = other
+                .map
+                .get(name)
+                .unwrap_or_else(|| panic!("lerp: missing tensor {name}"));
+            let (Some(a), Some(b)) = (t.as_f32_mut(), o.as_f32()) else {
+                continue; // non-f32: not aggregatable, leave as-is
+            };
+            assert_eq!(a.len(), b.len(), "lerp: length mismatch for {name}");
+            lerp_slice(a, c, b);
+        }
+    }
+
     /// `self *= alpha` over all f32 tensors.
     pub fn scale(&mut self, alpha: f32) {
         for t in self.map.values_mut() {
@@ -361,6 +381,18 @@ pub fn axpy_slice(a: &mut [f32], alpha: f32, b: &[f32]) {
     let (a, b) = (&mut a[..n], &b[..n]);
     for i in 0..n {
         a[i] += alpha * b[i];
+    }
+}
+
+/// The streaming-aggregation hot loop: `a[i] += c * (b[i] - a[i])`, the
+/// incremental weighted-mean update. Free fn for the same bench reasons
+/// as [`axpy_slice`].
+#[inline]
+pub fn lerp_slice(a: &mut [f32], c: f32, b: &[f32]) {
+    let n = a.len().min(b.len());
+    let (a, b) = (&mut a[..n], &b[..n]);
+    for i in 0..n {
+        a[i] += c * (b[i] - a[i]);
     }
 }
 
@@ -557,6 +589,36 @@ mod tests {
             let dec = f16_bytes_to_f32(&f32_to_f16_bytes(&[x])).unwrap()[0];
             // half has ~2^-11 relative precision
             prop::assert_close(dec as f64, x as f64, 2e-3, "f16")
+        });
+    }
+
+    #[test]
+    fn lerp_is_running_mean_step() {
+        let mut a = sample_dict();
+        let b = sample_dict();
+        // lerp toward an identical dict is a no-op
+        a.lerp(0.5, &b);
+        assert_eq!(a, b);
+        // halfway toward zeros halves every f32 value, leaves i32 alone
+        let z = b.zeros_like();
+        a.lerp(0.5, &z);
+        assert_eq!(a.get("a.bias").unwrap().as_f32().unwrap(), &[-0.5, 0., 0.5]);
+        assert_eq!(a.get("ids").unwrap().as_i32().unwrap(), &[7, -9]);
+    }
+
+    #[test]
+    fn prop_lerp_matches_f64_oracle() {
+        prop::check("lerp vs f64 oracle", 60, |g| {
+            let a0 = g.f32s(1, 300);
+            let b: Vec<f32> = (0..a0.len()).map(|_| g.f32_in(-10.0, 10.0)).collect();
+            let c = g.f32_in(0.0, 1.0);
+            let mut a = a0.clone();
+            lerp_slice(&mut a, c, &b);
+            for i in 0..a.len() {
+                let oracle = a0[i] as f64 + c as f64 * (b[i] as f64 - a0[i] as f64);
+                prop::assert_close(a[i] as f64, oracle, 1e-5, "lerp elem")?;
+            }
+            Ok(())
         });
     }
 

@@ -11,6 +11,13 @@ use std::time::{Duration, Instant};
 static TRACKED: AtomicI64 = AtomicI64::new(0);
 /// High-water mark of `TRACKED`.
 static TRACKED_PEAK: AtomicU64 = AtomicU64::new(0);
+/// Bytes of client results currently held by the server's gather path
+/// (the streaming aggregator's in-flight inputs) — separate from
+/// `TRACKED` so a single-process simulation can still observe the
+/// server-side aggregation footprint in isolation.
+static GATHER: AtomicI64 = AtomicI64::new(0);
+/// High-water mark of `GATHER`.
+static GATHER_PEAK: AtomicU64 = AtomicU64::new(0);
 
 /// Record an allocation of `n` bytes in the streaming layer.
 pub fn track_alloc(n: usize) {
@@ -35,6 +42,55 @@ pub fn tracked_peak() -> u64 {
 
 pub fn reset_peak() {
     TRACKED_PEAK.store(tracked_bytes().max(0) as u64, Ordering::Relaxed);
+}
+
+/// Record `n` bytes entering the server-side gather path.
+pub fn gather_track_alloc(n: usize) {
+    let cur = GATHER.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
+    GATHER_PEAK.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+}
+
+/// Record `n` bytes leaving the gather path (folded into the accumulator
+/// and dropped).
+pub fn gather_track_free(n: usize) {
+    GATHER.fetch_sub(n as i64, Ordering::Relaxed);
+}
+
+/// Bytes of in-flight gathered results right now.
+pub fn gather_bytes() -> i64 {
+    GATHER.load(Ordering::Relaxed)
+}
+
+/// High-water mark of the gather counter since start (or
+/// [`reset_gather_peak`]).
+pub fn gather_peak() -> u64 {
+    GATHER_PEAK.load(Ordering::Relaxed)
+}
+
+pub fn reset_gather_peak() {
+    GATHER_PEAK.store(gather_bytes().max(0) as u64, Ordering::Relaxed);
+}
+
+/// RAII guard counting `n` bytes against the gather counter for its
+/// lifetime: the Communicator creates one per result it hands to the
+/// aggregation fold, so `gather_peak()` measures how many client updates
+/// the server actually held at once.
+#[derive(Debug)]
+pub struct GatherGuard {
+    n: usize,
+}
+
+impl GatherGuard {
+    pub fn new(n: usize) -> GatherGuard {
+        gather_track_alloc(n);
+        GatherGuard { n }
+    }
+}
+
+impl Drop for GatherGuard {
+    fn drop(&mut self) {
+        gather_track_free(self.n);
+    }
 }
 
 /// RAII guard that tracks a buffer's size for its lifetime.
@@ -96,6 +152,8 @@ pub struct MemSample {
     pub t_ms: u64,
     pub tracked: i64,
     pub rss: u64,
+    /// Server-side gather bytes (in-flight aggregation inputs).
+    pub gather: i64,
     pub label: String,
 }
 
@@ -117,6 +175,7 @@ impl MemSampler {
                     t_ms: t0.elapsed().as_millis() as u64,
                     tracked: tracked_bytes(),
                     rss: rss_bytes(),
+                    gather: gather_bytes(),
                     label: label.clone(),
                 });
                 match stop_rx.recv_timeout(period) {
@@ -165,6 +224,19 @@ mod tests {
         let base = tracked_peak();
         let _b = TrackedBuf::new(vec![0u8; 1 << 16]);
         assert!(tracked_peak() >= base);
+    }
+
+    #[test]
+    fn gather_guard_counts_while_alive() {
+        // other tests in this binary may run gathers concurrently, so only
+        // assert lower bounds / monotonic effects of our own guard
+        let big = 1usize << 22; // far larger than any sibling test's payloads
+        {
+            let _g = GatherGuard::new(big);
+            assert!(gather_bytes() >= big as i64);
+            assert!(gather_peak() >= big as u64);
+        }
+        assert!(gather_bytes() < big as i64);
     }
 
     #[test]

@@ -231,6 +231,49 @@ fn checkpoint_roundtrip_through_model_state() {
 }
 
 #[test]
+fn broadcast_and_wait_returns_target_order_despite_completion_order() {
+    use fedflare::coordinator::{accept_registration, ClientHandle, Communicator};
+    use fedflare::executor::ClientRuntime;
+    use fedflare::sfm::{inproc, throttle::Throttled, Driver};
+    use fedflare::streaming::Messenger;
+
+    // client 0's link is throttled so it completes LAST even though it is
+    // dispatched first; the compat wrapper must still hand results back in
+    // target order
+    let mut handles = Vec::new();
+    let mut joins = Vec::new();
+    for i in 0..2usize {
+        let (sa, ca) = inproc::pair(64, &format!("order{i}"));
+        let server_driver: Box<dyn Driver> = if i == 0 {
+            Box::new(Throttled::new(sa, 4_000_000, 32 << 10))
+        } else {
+            Box::new(sa)
+        };
+        let mut server_m = Messenger::new(server_driver, 32 << 10, 0);
+        let client_m = Messenger::new(Box::new(ca), 32 << 10, (i + 1) as u32);
+        let name = format!("site-{}", i + 1);
+        joins.push(std::thread::spawn(move || {
+            let exec = Box::new(StreamTestExecutor::new(None, 1.0));
+            ClientRuntime::new(&name, client_m, exec, vec![]).run_loop().unwrap()
+        }));
+        let registered = accept_registration(&mut server_m).unwrap();
+        handles.push(ClientHandle::spawn(registered, server_m));
+    }
+    let mut comm = Communicator::new(handles, 3);
+    let model = StreamTestExecutor::build_model(2, 65_536, 0.0); // 512 kB
+    let task = FlMessage::task("stream_test", 0, model);
+    let results = comm.broadcast_and_wait(&task, &[0, 1]).unwrap();
+    assert_eq!(results.len(), 2);
+    assert_eq!(results[0].client, "site-1");
+    assert_eq!(results[1].client, "site-2");
+    comm.shutdown();
+    drop(comm);
+    for j in joins {
+        assert_eq!(j.join().unwrap(), 1);
+    }
+}
+
+#[test]
 fn throttled_fig5_shape_fast_vs_slow_transfer() {
     // micro Fig-5: slow client's send takes measurably longer
     let mut job = JobConfig::named("it_fig5_shape", "stream_test");

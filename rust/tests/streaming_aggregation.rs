@@ -1,0 +1,197 @@
+//! Streaming-aggregation acceptance tests: peak server-side gather memory
+//! must be independent of client count (paper §2.4 / Fig-5 memory
+//! accounting), while the aggregate matches an f64 oracle.
+//!
+//! These tests read the process-global gather counter
+//! (`fedflare::util::mem::gather_*`), so every test that runs an FL job
+//! serializes on [`JOBS`] — and they live in their own integration-test
+//! binary so no other test's gathers pollute the counter.
+
+use std::sync::Mutex;
+
+use fedflare::config::{ClientSpec, JobConfig};
+use fedflare::coordinator::{accept_registration, ClientHandle, Communicator, FedAvg};
+use fedflare::executor::{ClientRuntime, Executor, StreamTestExecutor};
+use fedflare::message::FlMessage;
+use fedflare::sfm::inproc;
+use fedflare::sim::{self, DriverKind};
+use fedflare::streaming::Messenger;
+use fedflare::util::mem;
+
+static JOBS: Mutex<()> = Mutex::new(());
+
+fn results_dir() -> String {
+    let d = std::env::temp_dir().join("fedflare_streamagg");
+    let _ = std::fs::create_dir_all(&d);
+    d.to_string_lossy().to_string()
+}
+
+fn client_specs(n: usize) -> Vec<ClientSpec> {
+    (0..n)
+        .map(|i| ClientSpec {
+            name: format!("site-{}", i + 1),
+            bandwidth_bps: 0,
+            partition: i,
+        })
+        .collect()
+}
+
+/// Run a stream_test FedAvg job with `n` clients and return the peak
+/// gather bytes observed plus the final model for oracle checking.
+fn run_fedavg(n: usize, keys: usize, key_elems: usize, rounds: usize, delta: f32) -> (u64, FedAvg) {
+    let mut job = JobConfig::named(&format!("sa_peak_{n}"), "stream_test");
+    job.rounds = rounds;
+    job.min_clients = n;
+    job.clients = client_specs(n);
+    job.stream.chunk_bytes = 16 << 10;
+    let initial = StreamTestExecutor::build_model(keys, key_elems, 1.0);
+    let mut ctl = FedAvg::new(initial, rounds, n);
+    ctl.task_name = "stream_test".into();
+    let mut f: Box<sim::ExecutorFactory> = Box::new(move |_i, _s| {
+        Ok(Box::new(StreamTestExecutor::new(None, delta)) as Box<dyn Executor>)
+    });
+    mem::reset_gather_peak();
+    sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+    (mem::gather_peak(), ctl)
+}
+
+#[test]
+fn gather_peak_is_flat_across_client_counts() {
+    let _lock = JOBS.lock().unwrap_or_else(|p| p.into_inner());
+    let (keys, key_elems, rounds) = (4usize, 8192usize, 2usize);
+    let result_bytes = (keys * key_elems * 4) as u64; // one client update
+    let chunk = 16u64 << 10;
+
+    let mut peaks = Vec::new();
+    for &n in &[2usize, 4, 8, 16] {
+        let (peak, ctl) = run_fedavg(n, keys, key_elems, rounds, 0.5);
+        // oracle (f64): every client adds delta each round, weights equal,
+        // so the aggregate is exactly initial + rounds * delta
+        let oracle = 1.0f64 + rounds as f64 * 0.5f64;
+        for (name, t) in ctl.model.iter() {
+            let v = t.as_f32().expect("f32 model");
+            assert!(
+                v.iter().all(|&x| (x as f64 - oracle).abs() < 1e-5),
+                "client count {n}: {name} diverged from oracle {oracle}: {}",
+                v[0]
+            );
+        }
+        peaks.push(peak);
+    }
+
+    // the gather's flow gate caps decoded in-flight results at 2 (one
+    // being folded + one staging), so the peak is client-count
+    // independent: between one and two updates whether 2 or 16 clients
+    // reported, never O(clients)
+    let lo = *peaks.iter().min().unwrap();
+    let hi = *peaks.iter().max().unwrap();
+    assert!(
+        hi - lo <= result_bytes + chunk,
+        "gather peak grew with client count: {peaks:?}"
+    );
+    for (i, &p) in peaks.iter().enumerate() {
+        assert!(
+            p >= result_bytes && p <= 2 * result_bytes + chunk,
+            "peak #{i} = {p} outside [1, 2] results ({result_bytes}/result): {peaks:?}"
+        );
+    }
+}
+
+#[test]
+fn legacy_wait_path_scales_with_client_count_streaming_does_not() {
+    // broadcast_and_wait materializes every result before returning —
+    // O(clients x model) on the server — while broadcast_and_reduce folds
+    // and drops each result, holding at most two (flow gate). Measure
+    // both against the same live cluster.
+    let _lock = JOBS.lock().unwrap_or_else(|p| p.into_inner());
+    let (k, keys, elems) = (6usize, 4usize, 8192usize);
+    let result_bytes = (keys * elems * 4) as u64;
+
+    let mut handles = Vec::new();
+    let mut joins = Vec::new();
+    for i in 0..k {
+        let (sa, ca) = inproc::pair(64, &format!("peakdemo{i}"));
+        let mut server_m = Messenger::new(Box::new(sa), 16 << 10, 0);
+        let client_m = Messenger::new(Box::new(ca), 16 << 10, (i + 1) as u32);
+        let name = format!("site-{}", i + 1);
+        joins.push(std::thread::spawn(move || {
+            let exec = Box::new(StreamTestExecutor::new(None, 0.5));
+            let mut rt = ClientRuntime::new(&name, client_m, exec, vec![]);
+            rt.run_loop().unwrap()
+        }));
+        let registered = accept_registration(&mut server_m).unwrap();
+        handles.push(ClientHandle::spawn(registered, server_m));
+    }
+    let mut comm = Communicator::new(handles, 1);
+    let all: Vec<usize> = (0..k).collect();
+    let model = StreamTestExecutor::build_model(keys, elems, 1.0);
+
+    mem::reset_gather_peak();
+    let results = comm
+        .broadcast_and_wait(&FlMessage::task("stream_test", 0, model.clone()), &all)
+        .unwrap();
+    let wait_peak = mem::gather_peak();
+    assert_eq!(results.len(), k);
+    drop(results);
+
+    mem::reset_gather_peak();
+    let folded = comm
+        .broadcast_and_reduce(
+            &FlMessage::task("stream_test", 1, model.clone()),
+            &all,
+            0usize,
+            |n, _r| Ok(n + 1),
+        )
+        .unwrap();
+    let reduce_peak = mem::gather_peak();
+    assert_eq!(folded, k);
+    comm.shutdown();
+    drop(comm);
+    for j in joins {
+        j.join().unwrap();
+    }
+
+    assert!(
+        wait_peak >= k as u64 * result_bytes,
+        "wait path should hold all {k} results: peak {wait_peak} vs {result_bytes}/result"
+    );
+    assert!(
+        reduce_peak >= result_bytes && reduce_peak <= 2 * result_bytes,
+        "streaming fold should hold at most 2 results (flow gate): \
+         peak {reduce_peak} vs {result_bytes}/result"
+    );
+}
+
+#[test]
+fn completion_order_equals_target_order_result() {
+    // throttle one client so completion order inverts dispatch order; the
+    // aggregate must match the unthrottled run within float tolerance
+    let _lock = JOBS.lock().unwrap_or_else(|p| p.into_inner());
+    let run = |throttle_first: bool| {
+        let mut job = JobConfig::named("sa_order", "stream_test");
+        job.rounds = 1;
+        job.min_clients = 2;
+        job.stream.chunk_bytes = 32 << 10;
+        if throttle_first {
+            // 1 MB burst covers ~half the 2 MB model; the rest crawls
+            job.clients[0].bandwidth_bps = 12_000_000;
+        }
+        let initial = StreamTestExecutor::build_model(2, 262_144, 1.0);
+        let mut ctl = FedAvg::new(initial, 1, 2);
+        ctl.task_name = "stream_test".into();
+        let mut f: Box<sim::ExecutorFactory> = Box::new(|i, _s| {
+            // distinct deltas so ordering mistakes change the mean
+            Ok(Box::new(StreamTestExecutor::new(None, 0.1 * (i + 1) as f32))
+                as Box<dyn Executor>)
+        });
+        sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+        ctl.model
+    };
+    let plain = run(false);
+    let inverted = run(true);
+    assert!(
+        plain.max_abs_diff(&inverted) < 1e-5,
+        "completion order changed the aggregate: {}",
+        plain.max_abs_diff(&inverted)
+    );
+}
