@@ -141,6 +141,60 @@ fn main() {
         );
     }
 
+    header("blob vs tensor-granular fold: peak + throughput (8 MB, 16 tensors)");
+    for clients in [4usize, 16] {
+        let model = dict_of(8, 16);
+        let result_bytes = model.byte_size();
+        let tensor_bytes = result_bytes / 16;
+        let results = results_of(&model, clients);
+
+        // blob granularity: each whole decoded result is staged while the
+        // accumulator folds it
+        mem::reset_gather_peak();
+        let blob_stats = bench(&format!("{clients} clients, blob fold"), 1, 6, || {
+            let mut agg = StreamingMean::new(&model);
+            for r in &results {
+                let _held = mem::GatherGuard::new(r.body.byte_size());
+                agg.fold(r).unwrap();
+            }
+            std::hint::black_box(agg.finish().unwrap().len());
+        });
+        let blob_peak = mem::gather_peak();
+
+        // tensor granularity: only the record being folded is staged
+        mem::reset_gather_peak();
+        let tensor_stats = bench(&format!("{clients} clients, tensor fold"), 1, 6, || {
+            let mut agg = StreamingMean::new(&model);
+            for r in &results {
+                let w = StreamingMean::weight_of(r);
+                let mut seen = 0usize;
+                for (name, t) in r.body.iter() {
+                    let _held = mem::GatherGuard::new(t.byte_size());
+                    agg.fold_tensor(name, t, w).unwrap();
+                    seen += 1;
+                }
+                agg.client_done(w, seen).unwrap();
+            }
+            std::hint::black_box(agg.finish().unwrap().len());
+        });
+        let tensor_peak = mem::gather_peak();
+
+        let gbs = |s: &fedflare::util::bench::BenchStats| {
+            s.mb_per_sec((clients * 8) as f64 * (1 << 20) as f64) / 1000.0
+        };
+        report(&blob_stats, Some(format!("{:.1} GB/s", gbs(&blob_stats))));
+        report(&tensor_stats, Some(format!("{:.1} GB/s", gbs(&tensor_stats))));
+        println!(
+            "  {clients:>2} clients: blob peak {:>8} KB ({}x result)   \
+             tensor peak {:>5} KB ({}x record) — {}x smaller",
+            blob_peak >> 10,
+            blob_peak / result_bytes as u64,
+            tensor_peak >> 10,
+            tensor_peak / tensor_bytes as u64,
+            if tensor_peak > 0 { blob_peak / tensor_peak } else { 0 },
+        );
+    }
+
     header("filters on a 12 MB update");
     let payload = dict_of(12, 16);
     {

@@ -17,6 +17,15 @@ fn model_of(mb: usize) -> TensorDict {
     d
 }
 
+fn split_model_of(mb: usize, tensors: usize) -> TensorDict {
+    let mut d = TensorDict::new();
+    let elems = mb * (1 << 20) / 4 / tensors;
+    for i in 0..tensors {
+        d.insert(format!("t{i:03}"), Tensor::f32(vec![elems], vec![0.5; elems]));
+    }
+    d
+}
+
 fn main() {
     let payload_mb = 16usize;
     let payload = vec![0xA5u8; payload_mb << 20];
@@ -105,6 +114,51 @@ fn main() {
             std::hint::black_box(got.body.len());
         });
         report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((mb << 20) as f64))));
+    }
+
+    header("v2 object round-trip vs chunk size (8 MB model, 16 tensors, inproc)");
+    {
+        let msg = FlMessage::task("train", 0, split_model_of(8, 16));
+        for chunk in [64 << 10, 256 << 10, 1 << 20, 4 << 20] {
+            let s = bench(&format!("chunk_bytes={}K", chunk >> 10), 1, 6, || {
+                let (a, b) = inproc::pair(64, "benchv2");
+                let mut tx = Messenger::new(Box::new(a), chunk, 1);
+                let mut rx = Messenger::new(Box::new(b), chunk, 2);
+                let m = msg.clone();
+                let h = std::thread::spawn(move || {
+                    tx.send_msg(&m).unwrap();
+                });
+                let got = rx.recv_msg().unwrap();
+                h.join().unwrap();
+                std::hint::black_box(got.body.len());
+            });
+            report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((8 << 20) as f64))));
+        }
+    }
+
+    header("v2 incremental receive (recv_msg_stream, 8 MB, 16 tensors)");
+    {
+        let msg = FlMessage::task("train", 0, split_model_of(8, 16));
+        let s = bench("fold tensors as frames arrive", 1, 6, || {
+            let (a, b) = inproc::pair(64, "benchinc");
+            let mut tx = Messenger::new(Box::new(a), 1 << 20, 1);
+            let mut rx = Messenger::new(Box::new(b), 1 << 20, 2);
+            let m = msg.clone();
+            let h = std::thread::spawn(move || {
+                tx.send_msg(&m).unwrap();
+            });
+            let mut folded = 0usize;
+            rx.recv_msg_stream(|_h, _name, t| {
+                // consume each record as it completes (stand-in for the
+                // aggregator's per-tensor lerp)
+                folded += t.as_f32().map(|v| v.len()).unwrap_or(0);
+                Ok(())
+            })
+            .unwrap();
+            h.join().unwrap();
+            std::hint::black_box(folded);
+        });
+        report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((8 << 20) as f64))));
     }
 
     header("tensor wire format (8 MB dict)");

@@ -99,6 +99,30 @@ pub enum FilterSpec {
 }
 
 impl FilterSpec {
+    /// The server-side receive mirror of this filter, if it is a
+    /// transport codec whose inverse must run per tensor record on the
+    /// server (`Filter::on_receive_tensor`). DP and secure-agg return
+    /// `None`: their noise/masks must survive untouched to the sum.
+    pub fn receive_mirror(&self) -> Option<FilterSpec> {
+        match self {
+            FilterSpec::QuantizeF16 => Some(FilterSpec::QuantizeF16),
+            FilterSpec::GaussianDp { .. } | FilterSpec::SecureAgg { .. } => None,
+        }
+    }
+
+    /// Server-side receive filters derived from a client chain: only the
+    /// **trailing** filter's mirror applies. A codec's receive hook must
+    /// see exactly what the codec emitted — re-rounding a payload that
+    /// was masked or noised *after* quantizing would break the
+    /// mask-cancellation / noise-calibration invariants.
+    pub fn receive_chain(filters: &[FilterSpec]) -> Vec<FilterSpec> {
+        filters
+            .last()
+            .and_then(FilterSpec::receive_mirror)
+            .into_iter()
+            .collect()
+    }
+
     pub fn from_json(j: &Json) -> Result<FilterSpec, ConfigError> {
         match j.get("type").as_str() {
             Some("gaussian_dp") => Ok(FilterSpec::GaussianDp {
@@ -328,6 +352,23 @@ mod tests {
             job.filters[0],
             FilterSpec::GaussianDp { clip: 2.0, sigma: 0.5 }
         );
+    }
+
+    #[test]
+    fn receive_chain_mirrors_only_trailing_codec() {
+        let dp = FilterSpec::GaussianDp { clip: 1.0, sigma: 0.1 };
+        let sa = FilterSpec::SecureAgg { seed: 1 };
+        assert_eq!(FilterSpec::receive_chain(&[]), Vec::new());
+        assert_eq!(
+            FilterSpec::receive_chain(&[dp.clone(), FilterSpec::QuantizeF16]),
+            vec![FilterSpec::QuantizeF16]
+        );
+        // quantize not last (payload masked afterwards): nothing mirrored
+        assert_eq!(
+            FilterSpec::receive_chain(&[FilterSpec::QuantizeF16, sa]),
+            Vec::new()
+        );
+        assert_eq!(FilterSpec::receive_chain(&[dp]), Vec::new());
     }
 
     #[test]

@@ -1,18 +1,21 @@
 //! FedAvg [McMahan et al. 2017] — the paper's reference workflow
 //! (Listing 3), with sample-count-weighted aggregation, per-round global
 //! validation (clients evaluate the incoming global model, enabling
-//! server-side model selection — paper Listing 2 step 3), and **streaming
-//! in-place aggregation**: each client result is folded into the single
-//! accumulator the moment it arrives (completion order) and dropped, and
-//! the gather's flow gate caps decoded in-flight results at two (one
-//! folding + one staging), so server memory stays at one accumulator plus
-//! O(1) results regardless of client count.
+//! server-side model selection — paper Listing 2 step 3), and
+//! **tensor-granular streaming aggregation**: every tensor record of a
+//! client result is folded into the single accumulator the moment its
+//! frames arrive (completion order, records from different clients
+//! interleaving freely) and dropped, and the gather's flow gate caps
+//! concurrent streaming receivers at two — so server memory stays at one
+//! accumulator plus O(largest tensor) regardless of client count and
+//! model size.
 
-use anyhow::{bail, Result};
+use anyhow::{anyhow, bail, Result};
 
 use super::{Communicator, Controller, ServerCtx};
+use crate::config::FilterSpec;
 use crate::message::FlMessage;
-use crate::tensor::TensorDict;
+use crate::tensor::{lerp_slice, Tensor, TensorDict};
 use crate::util::json::Json;
 
 /// Per-round aggregate metrics (one entry per completed round).
@@ -30,21 +33,28 @@ pub struct RoundMetrics {
 }
 
 /// Streaming weighted mean over client updates — the aggregation side of
-/// the gather-iterator redesign. Each result is folded in completion
-/// order via the running-mean update
+/// the gather-iterator redesign. The unit of folding is **one tensor**:
+/// each tensor carries its own cumulative weight and advances by the
+/// running-mean update
 ///
 /// ```text
-/// W += w_i
-/// agg += (w_i / W) * (x_i - agg)
+/// W_t += w_i
+/// agg_t += (w_i / W_t) * (x_t - agg_t)
 /// ```
 ///
-/// which after k folds equals `sum_i (w_i / W_k) * x_i` without ever
-/// needing the total weight up front or more than one client result in
-/// memory. Weights come from the `n_samples` metric (default 1, floored
-/// at 0 — a zero-weight result is schema-checked but contributes
-/// nothing).
+/// which after all folds equals `sum_i (w_i / W) * x_i` per tensor — so
+/// client updates may interleave at tensor granularity (client A's
+/// records folding while client B's are still arriving) and the result is
+/// order-invariant, never needing the total weight up front or a whole
+/// client result in memory. [`StreamingMean::fold`] keeps the
+/// result-at-a-time API as a loop over [`StreamingMean::fold_tensor`].
+/// Weights come from the `n_samples` metric (default 1, floored at 0 — a
+/// zero-weight result is schema-checked but contributes nothing).
 pub struct StreamingMean {
     agg: TensorDict,
+    /// Cumulative weight folded into each f32 tensor (i32 tensors pass
+    /// through unaggregated, mirroring [`TensorDict::lerp`]).
+    tensor_weight: std::collections::BTreeMap<String, f64>,
     weight: f64,
     folded: usize,
 }
@@ -54,18 +64,87 @@ impl StreamingMean {
     pub fn new(schema: &TensorDict) -> StreamingMean {
         StreamingMean {
             agg: schema.zeros_like(),
+            tensor_weight: Default::default(),
             weight: 0.0,
             folded: 0,
         }
     }
 
-    /// Aggregation weight of one result.
+    /// Aggregation weight of one result (read off the header meta, which
+    /// the v2 wire format delivers before any tensor record).
     pub fn weight_of(r: &FlMessage) -> f64 {
         r.metric("n_samples").unwrap_or(1.0).max(0.0)
     }
 
-    /// Fold one client result into the accumulator. The caller drops the
-    /// result right after — nothing of it is retained here.
+    /// Fold **one tensor record** of a client update with that client's
+    /// weight — the fold-as-frames-arrive entry point. Errors on names
+    /// outside the schema or shape/dtype drift; zero-weight records are
+    /// validated but contribute nothing.
+    ///
+    /// Contract: call at most once per tensor per client stream. The
+    /// accumulator itself cannot tell clients apart, so it enforces this
+    /// only in aggregate (record counts in [`StreamingMean::client_done`]
+    /// plus the per-tensor total-weight check in
+    /// [`StreamingMean::finish`]); name-level duplicate rejection within
+    /// one stream is done by the transport
+    /// (`Messenger::recv_msg_stream`).
+    pub fn fold_tensor(&mut self, name: &str, t: &Tensor, w: f64) -> Result<()> {
+        let cur = self
+            .agg
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("aggregate: tensor {name} not in schema"))?;
+        if cur.shape != t.shape || cur.dtype() != t.dtype() {
+            bail!(
+                "aggregate: tensor {name} mismatches schema ({:?} {} vs {:?} {})",
+                t.shape,
+                t.dtype().as_str(),
+                cur.shape,
+                cur.dtype().as_str()
+            );
+        }
+        if w <= 0.0 {
+            return Ok(());
+        }
+        let (Some(a), Some(b)) = (cur.as_f32_mut(), t.as_f32()) else {
+            return Ok(()); // non-f32: not aggregatable
+        };
+        // avoid entry(): it would allocate the key String on every fold,
+        // and this runs under the shared agg lock in the hot path
+        let c = match self.tensor_weight.get_mut(name) {
+            Some(wt) => {
+                *wt += w;
+                (w / *wt) as f32
+            }
+            None => {
+                self.tensor_weight.insert(name.to_string(), w);
+                1.0
+            }
+        };
+        lerp_slice(a, c, b);
+        Ok(())
+    }
+
+    /// Account one finished client stream: `seen` tensor records folded
+    /// with weight `w`. Errors unless the record count matches the schema
+    /// size — combined with the transport layer's duplicate-name
+    /// rejection and [`StreamingMean::finish`]'s per-tensor weight check,
+    /// this is the per-record path's equivalent of the old whole-dict
+    /// `same_schema` check.
+    pub fn client_done(&mut self, w: f64, seen: usize) -> Result<()> {
+        if seen != self.agg.len() {
+            bail!(
+                "aggregate: client streamed {seen} tensors, schema has {}",
+                self.agg.len()
+            );
+        }
+        self.folded += 1;
+        self.weight += w.max(0.0);
+        Ok(())
+    }
+
+    /// Fold one whole client result into the accumulator (batch
+    /// compatibility path over [`StreamingMean::fold_tensor`]). The caller
+    /// drops the result right after — nothing of it is retained here.
     pub fn fold(&mut self, r: &FlMessage) -> Result<()> {
         if !self.agg.same_schema(&r.body) {
             bail!(
@@ -75,14 +154,11 @@ impl StreamingMean {
                 self.agg.len()
             );
         }
-        self.folded += 1;
         let w = Self::weight_of(r);
-        if w <= 0.0 {
-            return Ok(());
+        for (name, t) in r.body.iter() {
+            self.fold_tensor(name, t, w)?;
         }
-        self.weight += w;
-        self.agg.lerp((w / self.weight) as f32, &r.body);
-        Ok(())
+        self.client_done(w, r.body.len())
     }
 
     /// Results folded so far (including zero-weight ones).
@@ -95,10 +171,24 @@ impl StreamingMean {
         self.weight
     }
 
-    /// Finish: the weighted mean of everything folded.
+    /// Finish: the weighted mean of everything folded. Errors if no
+    /// weight arrived, or if any f32 tensor's folded weight disagrees
+    /// with the total (a client stream that went missing partway).
     pub fn finish(self) -> Result<TensorDict> {
         if self.weight <= 0.0 {
             bail!("aggregate: no samples reported");
+        }
+        for (name, t) in self.agg.iter() {
+            if t.as_f32().is_none() {
+                continue;
+            }
+            let wt = self.tensor_weight.get(name).copied().unwrap_or(0.0);
+            if (wt - self.weight).abs() > self.weight * 1e-9 {
+                bail!(
+                    "aggregate: tensor {name} folded weight {wt} != total {}",
+                    self.weight
+                );
+            }
         }
         Ok(self.agg)
     }
@@ -130,6 +220,14 @@ pub struct FedAvg {
     pub task_name: String,
     /// The global model (communicated subset).
     pub model: TensorDict,
+    /// Server-side receive filter specs, applied per tensor record as it
+    /// arrives ([`crate::filters::Filter::on_receive_tensor`] — e.g.
+    /// `QuantizeF16` dequantizes each record; DP/secure-agg pass
+    /// through). Derive this from the client chain with
+    /// [`FilterSpec::receive_chain`], which mirrors only the trailing
+    /// transport codec — re-rounding payloads masked or noised after
+    /// quantization would corrupt them.
+    pub recv_filters: Vec<FilterSpec>,
     /// Completed-round metrics.
     pub history: Vec<RoundMetrics>,
     /// Best (lowest) mean val loss and its round.
@@ -145,6 +243,7 @@ impl FedAvg {
             min_clients,
             task_name: "train".to_string(),
             model,
+            recv_filters: Vec::new(),
             history: Vec::new(),
             best: None,
             best_model: None,
@@ -163,33 +262,35 @@ impl Controller for FedAvg {
             // 1. sample the available clients
             let clients = comm.sample_clients(self.min_clients)?;
             // 2. send the current global model; 3. fold each update into
-            // the single accumulator as it arrives (completion order —
-            // a fast site aggregates while a slow site still streams)
+            // the single accumulator tensor record by tensor record as
+            // frames arrive (completion order — a fast site aggregates
+            // while a slow site still streams, and no decoded result is
+            // ever staged whole)
             let task = FlMessage::task(&self.task_name, round, self.model.clone())
                 .with_meta("rounds_total", Json::num(self.rounds as f64));
-            let mut agg = StreamingMean::new(&self.model);
-            let mut stats = comm.broadcast_and_reduce(
+            let mut stats = RoundAcc::default();
+            let agg = comm.broadcast_and_fold(
                 &task,
                 &clients,
-                RoundAcc::default(),
-                |mut acc, r| {
-                    agg.fold(&r)?;
-                    acc.per_client.push((
+                StreamingMean::new(&self.model),
+                &self.recv_filters,
+                |r| {
+                    stats.per_client.push((
                         r.client.clone(),
                         r.metric("val_loss").unwrap_or(f64::NAN),
                         r.metric("val_acc").unwrap_or(f64::NAN),
                         r.metric("n_samples").unwrap_or(0.0),
                     ));
                     if let Some(v) = r.metric("val_loss") {
-                        acc.val_loss.push(v);
+                        stats.val_loss.push(v);
                     }
                     if let Some(v) = r.metric("val_acc") {
-                        acc.val_acc.push(v);
+                        stats.val_acc.push(v);
                     }
                     if let Some(v) = r.metric("train_loss") {
-                        acc.train_loss.push(v);
+                        stats.train_loss.push(v);
                     }
-                    Ok(acc)
+                    Ok(())
                 },
             )?;
             // 4. update the global model
@@ -313,6 +414,94 @@ mod tests {
         ];
         let agg = aggregate(&schema, &results).unwrap();
         assert!((agg.get("w").unwrap().as_f32().unwrap()[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fold_tensor_rejects_unknown_and_mismatched_records() {
+        let mut agg = StreamingMean::new(&model(&[0.0, 0.0]));
+        let t = crate::tensor::Tensor::f32(vec![2], vec![1.0, 2.0]);
+        assert!(agg.fold_tensor("nope", &t, 1.0).is_err());
+        let wrong = crate::tensor::Tensor::f32(vec![3], vec![0.0; 3]);
+        assert!(agg.fold_tensor("w", &wrong, 1.0).is_err());
+        assert!(agg.fold_tensor("w", &t, 1.0).is_ok());
+        // a client that covered only part of the schema is rejected
+        assert!(agg.client_done(1.0, 0).is_err());
+        assert!(agg.client_done(1.0, 1).is_ok());
+    }
+
+    #[test]
+    fn finish_detects_partially_folded_tensors() {
+        // two tensors, but the "client" only streamed one before its
+        // bookkeeping was forced through — finish must notice the
+        // imbalance rather than return a skewed mean
+        let mut d = TensorDict::new();
+        d.insert("a", crate::tensor::Tensor::f32(vec![1], vec![0.0]));
+        d.insert("b", crate::tensor::Tensor::f32(vec![1], vec![0.0]));
+        let mut agg = StreamingMean::new(&d);
+        let t = crate::tensor::Tensor::f32(vec![1], vec![2.0]);
+        agg.fold_tensor("a", &t, 5.0).unwrap();
+        agg.client_done(5.0, 2).unwrap(); // lies about coverage
+        assert!(agg.finish().is_err());
+    }
+
+    #[test]
+    fn prop_interleaved_tensor_folds_match_batch_path() {
+        // the tensor-granular fold: clients' records interleave at tensor
+        // granularity in arbitrary order; the result must equal the batch
+        // (whole-result) path and the f64 oracle
+        crate::util::prop::check("interleaved tensor folds", 30, |g| {
+            let n_tensors = g.usize_in(1, 4);
+            let len = g.usize_in(1, 30);
+            let k = g.usize_in(2, 5);
+            let mut schema = TensorDict::new();
+            for t in 0..n_tensors {
+                schema.insert(
+                    format!("t{t}"),
+                    crate::tensor::Tensor::f32(vec![len], vec![0.0; len]),
+                );
+            }
+            let mut results = Vec::new();
+            for i in 0..k {
+                let mut body = TensorDict::new();
+                for t in 0..n_tensors {
+                    let vals: Vec<f32> = (0..len).map(|_| g.f32_in(-5.0, 5.0)).collect();
+                    body.insert(format!("t{t}"), crate::tensor::Tensor::f32(vec![len], vals));
+                }
+                let n = g.usize_in(1, 1000) as f64;
+                results.push(
+                    FlMessage::result("train", 0, &format!("c{i}"), body)
+                        .with_meta("n_samples", Json::num(n)),
+                );
+            }
+            // batch path: whole results in order
+            let mut batch = StreamingMean::new(&schema);
+            for r in &results {
+                batch.fold(r).map_err(|e| e.to_string())?;
+            }
+            let batch = batch.finish().map_err(|e| e.to_string())?;
+            // interleaved path: all (client, tensor) records shuffled
+            let mut records: Vec<(usize, String)> = (0..k)
+                .flat_map(|i| (0..n_tensors).map(move |t| (i, format!("t{t}"))))
+                .collect();
+            g.rng().shuffle(&mut records);
+            let mut inter = StreamingMean::new(&schema);
+            for (i, name) in &records {
+                let r = &results[*i];
+                inter
+                    .fold_tensor(name, r.body.get(name).unwrap(), StreamingMean::weight_of(r))
+                    .map_err(|e| e.to_string())?;
+            }
+            for r in &results {
+                inter
+                    .client_done(StreamingMean::weight_of(r), n_tensors)
+                    .map_err(|e| e.to_string())?;
+            }
+            let inter = inter.finish().map_err(|e| e.to_string())?;
+            crate::util::prop::assert_that(
+                inter.max_abs_diff(&batch) < 1e-5,
+                "interleaved fold diverged from batch path",
+            )
+        });
     }
 
     #[test]

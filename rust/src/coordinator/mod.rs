@@ -27,6 +27,15 @@
 //! wraps that in a fold, and the legacy
 //! [`Communicator::broadcast_and_wait`] survives as a thin compatibility
 //! wrapper that materializes the full result vector.
+//!
+//! Aggregation itself is **tensor-granular**:
+//! [`Communicator::broadcast_and_fold`] streams every client's result
+//! record by record (wire format v2) straight into one [`StreamingMean`]
+//! — each tensor is decoded, filtered
+//! ([`crate::filters::Filter::on_receive_tensor`]), folded, and dropped
+//! the moment its frames arrive, so no decoded client result is ever
+//! staged whole and server peak memory is O(model + largest tensor +
+//! in-flight chunks).
 
 mod fedavg;
 mod workflows;
@@ -35,10 +44,11 @@ pub use fedavg::{FedAvg, RoundMetrics, StreamingMean};
 pub use workflows::{CyclicWeightTransfer, FederatedEval, FederatedInference};
 
 use std::sync::mpsc::{Receiver, Sender};
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::filters::Filter;
 use crate::message::{FlMessage, Kind};
 use crate::metrics::MetricsSink;
 use crate::streaming::{Messenger, StreamError};
@@ -90,6 +100,25 @@ impl Drop for FlowPermit {
     }
 }
 
+/// Shared fold target of a **tensor-granular** gather: every client
+/// worker folds each received tensor record straight into the single
+/// accumulator, holding the agg lock only for that tensor's lerp. No
+/// decoded client result is ever staged whole — server peak memory is the
+/// accumulator plus O(in-flight tensor records).
+pub struct TensorFold {
+    agg: Mutex<StreamingMean>,
+}
+
+/// A worker's share of one tensor-granular gather: the shared accumulator
+/// plus its **own** receive filter chain
+/// ([`Filter::on_receive_tensor`], e.g. per-record dequantization) — per
+/// worker, so filter work off the agg lock runs concurrently across
+/// clients and no filter state is accidentally shared between them.
+struct FoldTask {
+    shared: Arc<TensorFold>,
+    filters: Vec<Box<dyn Filter>>,
+}
+
 /// Accounting and flow-control baggage riding with each gathered result:
 /// counts the decoded bytes against [`mem::gather_bytes`] and (for
 /// bounded gathers) occupies one in-flight slot — both released when the
@@ -104,14 +133,17 @@ pub struct HeldResult {
 type Reply = (usize, Result<(FlMessage, HeldResult), String>);
 
 /// One unit of work handed to a client's IO worker: the message to send,
-/// the reply channel of the gather that wants the result, and the
-/// gather's flow gate (None = unbounded, e.g. byes and the legacy wait
-/// path).
+/// the reply channel of the gather that wants the result, the gather's
+/// flow gate (None = unbounded, e.g. byes and the legacy wait path), and
+/// — for tensor-granular gathers — the shared fold to stream each
+/// received tensor record into (the reply then carries only the body-less
+/// header).
 struct WorkerTask {
     msg: FlMessage,
     tag: usize,
     reply: Sender<Reply>,
     gate: Option<Arc<FlowGate>>,
+    fold: Option<FoldTask>,
 }
 
 /// Server-side handle to one connected client: a worker thread owns the
@@ -132,7 +164,7 @@ impl ClientHandle {
         let worker = std::thread::Builder::new()
             .name(format!("client-io-{wname}"))
             .spawn(move || {
-                while let Ok(WorkerTask { msg, tag, reply, gate }) = task_rx.recv() {
+                while let Ok(WorkerTask { msg, tag, reply, gate, mut fold }) = task_rx.recv() {
                     let is_bye = msg.kind == Kind::Bye;
                     let outcome = (|| -> Result<(FlMessage, Option<FlowPermit>), StreamError> {
                         messenger.send_msg(&msg)?;
@@ -143,9 +175,47 @@ impl ClientHandle {
                         // one frees, this client is held back by transport
                         // backpressure instead of materializing here
                         let permit = gate.as_ref().map(FlowGate::acquire);
-                        let m = messenger.recv_msg()?;
-                        Ok((m, permit))
+                        match fold.as_mut() {
+                            None => {
+                                let m = messenger.recv_msg()?;
+                                Ok((m, permit))
+                            }
+                            Some(ft) => {
+                                // tensor-granular: run each record through
+                                // this worker's own filter chain (no lock),
+                                // fold it into the shared accumulator the
+                                // moment its frames arrive, then drop it
+                                let mut seen = 0usize;
+                                let head = messenger.recv_msg_stream(|head, name, tensor| {
+                                    let _in_flight =
+                                        mem::GatherGuard::new(tensor.byte_size());
+                                    let w = StreamingMean::weight_of(head);
+                                    let t = ft.filters.iter_mut().fold(tensor, |t, flt| {
+                                        flt.on_receive_tensor(&name, t, head.round)
+                                    });
+                                    ft.shared
+                                        .agg
+                                        .lock()
+                                        .unwrap()
+                                        .fold_tensor(&name, &t, w)
+                                        .map_err(|e| StreamError::Protocol(e.to_string()))?;
+                                    seen += 1;
+                                    Ok(())
+                                })?;
+                                ft.shared
+                                    .agg
+                                    .lock()
+                                    .unwrap()
+                                    .client_done(StreamingMean::weight_of(&head), seen)
+                                    .map_err(|e| StreamError::Protocol(e.to_string()))?;
+                                Ok((head, permit))
+                            }
+                        }
                     })();
+                    // release the fold share *before* replying, so the
+                    // gather that sees the last reply can reclaim the
+                    // accumulator without racing this worker
+                    drop(fold);
                     let outcome = outcome
                         .map(|(m, permit)| {
                             let held = HeldResult {
@@ -177,6 +247,7 @@ impl ClientHandle {
         tag: usize,
         reply: Sender<Reply>,
         gate: Option<Arc<FlowGate>>,
+        fold: Option<FoldTask>,
     ) -> Result<()> {
         self.task_tx
             .send(WorkerTask {
@@ -184,6 +255,7 @@ impl ClientHandle {
                 tag,
                 reply,
                 gate,
+                fold,
             })
             .map_err(|_| anyhow!("client {} worker gone", self.name))
     }
@@ -193,7 +265,7 @@ impl Drop for ClientHandle {
     fn drop(&mut self) {
         // best-effort bye so the peer's loop can exit
         let (reply, _ack) = std::sync::mpsc::channel();
-        let _ = self.dispatch(FlMessage::bye(), 0, reply, None);
+        let _ = self.dispatch(FlMessage::bye(), 0, reply, None, None);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -309,6 +381,16 @@ impl Communicator {
         } else {
             Some(FlowGate::new(max_inflight))
         };
+        self.start_gather(task, targets, gate, |_| None)
+    }
+
+    fn start_gather(
+        &mut self,
+        task: &FlMessage,
+        targets: &[usize],
+        gate: Option<Arc<FlowGate>>,
+        mut fold: impl FnMut(usize) -> Option<FoldTask>,
+    ) -> Result<Gather> {
         let (reply_tx, rx) = std::sync::mpsc::channel();
         let mut names = Vec::with_capacity(targets.len());
         for (pos, &t) in targets.iter().enumerate() {
@@ -318,7 +400,7 @@ impl Communicator {
                 .ok_or_else(|| anyhow!("broadcast: no client at index {t}"))?;
             let mut msg = task.clone();
             msg.client = client.name.clone();
-            client.dispatch(msg, pos, reply_tx.clone(), gate.clone())?;
+            client.dispatch(msg, pos, reply_tx.clone(), gate.clone(), fold(pos))?;
             names.push(client.name.clone());
         }
         Ok(Gather {
@@ -326,6 +408,54 @@ impl Communicator {
             names,
             remaining: targets.len(),
         })
+    }
+
+    /// Tensor-granular gather-and-aggregate: send `task` to every target
+    /// and stream every client's result **tensor record by tensor record**
+    /// into `agg` as frames arrive — a record is decoded, passed through
+    /// that worker's receive filter chain (built per client from
+    /// `recv_filters`; [`Filter::on_receive_tensor`]), folded, and
+    /// dropped, so the server never holds a whole decoded client result.
+    /// Concurrent receivers are capped at [`STREAM_INFLIGHT`], bounding
+    /// staging to O(largest tensor + in-flight chunks) per slot.
+    ///
+    /// `on_header` runs once per client (completion order) with the
+    /// body-less result header, for metric collection. Any client failing
+    /// mid-stream fails the whole gather — the partially-folded
+    /// accumulator is discarded with the error.
+    pub fn broadcast_and_fold(
+        &mut self,
+        task: &FlMessage,
+        targets: &[usize],
+        agg: StreamingMean,
+        recv_filters: &[crate::config::FilterSpec],
+        mut on_header: impl FnMut(&FlMessage) -> Result<()>,
+    ) -> Result<StreamingMean> {
+        let gate = if STREAM_INFLIGHT >= targets.len() {
+            None
+        } else {
+            Some(FlowGate::new(STREAM_INFLIGHT))
+        };
+        let fold = Arc::new(TensorFold {
+            agg: Mutex::new(agg),
+        });
+        let n = targets.len().max(1);
+        let mut gather = self.start_gather(task, targets, gate, |pos| {
+            Some(FoldTask {
+                shared: fold.clone(),
+                filters: crate::filters::build_chain(recv_filters, pos, n),
+            })
+        })?;
+        while let Some(next) = gather.next_result() {
+            let r = next?;
+            on_header(&r.msg)?;
+            drop(r.held);
+        }
+        // every worker dropped its share before its final reply, so the
+        // accumulator is exclusively ours again
+        let fold = Arc::try_unwrap(fold)
+            .map_err(|_| anyhow!("tensor fold still shared after gather drained"))?;
+        Ok(fold.agg.into_inner().unwrap())
     }
 
     /// `broadcast_and_reduce`: stream the gather through a fold, consuming
@@ -390,7 +520,10 @@ impl Communicator {
         let (reply_tx, rx) = std::sync::mpsc::channel();
         let mut sent = 0usize;
         for c in &self.clients {
-            if c.dispatch(FlMessage::bye(), 0, reply_tx.clone(), None).is_ok() {
+            if c
+                .dispatch(FlMessage::bye(), 0, reply_tx.clone(), None, None)
+                .is_ok()
+            {
                 sent += 1;
             }
         }

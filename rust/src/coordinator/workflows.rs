@@ -6,7 +6,10 @@
 //! All three workflows consume client results through the streaming
 //! gather ([`Communicator::broadcast_and_reduce`]): each result is
 //! reduced into scalar state the moment it arrives and dropped, so none
-//! of them holds more than one client payload at a time.
+//! of them holds more than one client payload at a time. (FedAvg goes
+//! further and folds at tensor granularity via
+//! [`Communicator::broadcast_and_fold`]; these workflows reduce scalars
+//! or pass whole models along, so result-granularity is already O(1).)
 
 use anyhow::Result;
 

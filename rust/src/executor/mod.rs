@@ -1,6 +1,12 @@
 //! Client-side execution (paper §2.2/§2.3): the [`Executor`] trait, the
 //! task loop, and the [`ClientApi`] facade mirroring the paper's
 //! Listing 1 (`init` / `receive` / `send` / `is_running`).
+//!
+//! Results leave through `Messenger::send_msg`, which streams wire
+//! format v2 — one lazily-encoded tensor record at a time — so a client
+//! sending an LLM-sized update stages at most one tensor plus one chunk
+//! beyond the model itself; incoming tasks are likewise assembled tensor
+//! by tensor on receive.
 
 mod executors;
 

@@ -20,14 +20,19 @@ use crate::tensor::{Tensor, TensorDict};
 use crate::util::rng::Rng;
 
 /// A filter transforms the outgoing payload on the client and (optionally)
-/// inverts the transport encoding on the server.
+/// inverts the transport encoding on the server, one tensor record at a
+/// time.
 pub trait Filter: Send {
     /// Applied on the client to its result payload before sending.
     fn on_result(&mut self, payload: TensorDict, round: usize) -> TensorDict;
-    /// Applied on the server to each received result (e.g. de-quantize).
-    fn on_receive(&mut self, payload: TensorDict, round: usize) -> TensorDict {
-        let _ = round;
-        payload
+    /// Applied on the server to **one received tensor record** the moment
+    /// it completes — the filter half of tensor-granular streaming, called
+    /// by the fold-as-frames-arrive gather before the record reaches the
+    /// aggregator. Default: identity (DP and secure-agg act only on the
+    /// client's outgoing side; their masks/noise must survive to the sum).
+    fn on_receive_tensor(&mut self, name: &str, t: Tensor, round: usize) -> Tensor {
+        let _ = (name, round);
+        t
     }
     fn name(&self) -> &'static str;
 }
@@ -115,16 +120,33 @@ impl Filter for GaussianDp {
 /// effect; the byte saving is reported by the bench).
 pub struct QuantizeF16;
 
+impl QuantizeF16 {
+    /// Round one f32 tensor to half precision (encode + decode).
+    fn quantize(t: &mut Tensor) {
+        if let Some(v) = t.as_f32_mut() {
+            let enc = crate::tensor::f32_to_f16_bytes(v);
+            let dec = crate::tensor::f16_bytes_to_f32(&enc).expect("f16 decode");
+            v.copy_from_slice(&dec);
+        }
+    }
+}
+
 impl Filter for QuantizeF16 {
     fn on_result(&mut self, mut payload: TensorDict, _round: usize) -> TensorDict {
         for (_name, t) in payload.iter_mut() {
-            if let Some(v) = t.as_f32_mut() {
-                let enc = crate::tensor::f32_to_f16_bytes(v);
-                let dec = crate::tensor::f16_bytes_to_f32(&enc).expect("f16 decode");
-                v.copy_from_slice(&dec);
-            }
+            Self::quantize(t);
         }
         payload
+    }
+
+    /// Server side of the transport quantization: dequantize each record
+    /// to f32 transport precision as it arrives. The operation is
+    /// idempotent (re-rounding f16-rounded values is the identity), so
+    /// the tensor-granular gather can apply it per record whether or not
+    /// the client side already simulated the round trip.
+    fn on_receive_tensor(&mut self, _name: &str, mut t: Tensor, _round: usize) -> Tensor {
+        Self::quantize(&mut t);
+        t
     }
 
     fn name(&self) -> &'static str {
@@ -231,6 +253,25 @@ mod tests {
         for (a, b) in vals.iter().zip(v) {
             assert!((a - b).abs() <= a.abs() * 2e-3 + 1e-6, "{a} {b}");
         }
+    }
+
+    #[test]
+    fn receive_tensor_hook_dequantizes_and_is_idempotent() {
+        let mut f = QuantizeF16;
+        let t = Tensor::f32(vec![3], vec![0.1234567, -3.3331, 1e-4]);
+        let once = f.on_receive_tensor("w", t.clone(), 0);
+        // values land on the f16 grid, within half precision of the input
+        for (a, b) in t.as_f32().unwrap().iter().zip(once.as_f32().unwrap()) {
+            assert!((a - b).abs() <= a.abs() * 2e-3 + 1e-6, "{a} {b}");
+        }
+        let twice = f.on_receive_tensor("w", once.clone(), 0);
+        assert_eq!(once, twice, "f16 rounding must be idempotent");
+        // default hook (DP, secure-agg) is the identity
+        let mut dp = GaussianDp::new(1.0, 0.5, 3);
+        let kept = dp.on_receive_tensor("w", t.clone(), 0);
+        assert_eq!(kept, t);
+        let mut sa = SecureAgg::new(1, 0, 2);
+        assert_eq!(sa.on_receive_tensor("w", t.clone(), 0), t);
     }
 
     #[test]

@@ -25,14 +25,25 @@
 //! vendored `xla` crate); without them, artifact-dependent tests and
 //! examples skip themselves.
 //!
-//! Server-side aggregation is **streaming**: the Communicator's
-//! gather-iterator ([`coordinator::Communicator::broadcast_stream`] /
-//! [`coordinator::Communicator::broadcast_and_reduce`]) yields each
-//! client result in completion order and FedAvg folds it into a single
-//! running-mean accumulator; a flow gate caps decoded in-flight results
-//! at two (one folding + one staging), so peak server memory is one
-//! accumulator plus O(1) results — independent of client count (paper
-//! §2.4 / Fig 5).
+//! Server-side aggregation is **streaming at tensor granularity**:
+//! object payloads travel in wire format v2 (one self-delimiting record
+//! per named tensor; see [`message`]), the sender cuts frames lazily from
+//! one record at a time ([`message::FrameIter`]), the receiver yields
+//! each tensor the moment its frames arrive
+//! ([`streaming::Messenger::recv_msg_stream`] over
+//! [`sfm::RecordAssembler`]), and
+//! [`coordinator::Communicator::broadcast_and_fold`] folds every record
+//! straight into a per-tensor running-mean accumulator
+//! ([`coordinator::StreamingMean`]) after the receive filters
+//! ([`filters::Filter::on_receive_tensor`]). A flow gate caps concurrent
+//! streaming receivers at two, so peak server memory is one accumulator
+//! plus O(largest tensor + in-flight chunks) — independent of client
+//! count *and* of payload size beyond the largest tensor (paper §2.4 /
+//! Fig 5). The blob-granular paths
+//! ([`coordinator::Communicator::broadcast_and_reduce`] /
+//! `broadcast_and_wait`, `Messenger::send_msg_v1`) remain as
+//! compatibility wrappers; receivers accept both wire formats, while
+//! sending to a pre-v2 peer requires the explicit `send_msg_v1`.
 
 pub mod config;
 pub mod coordinator;

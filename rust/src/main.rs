@@ -233,9 +233,16 @@ fn cmd_run(args: &[String]) -> Result<()> {
         .opt("job", None, "path to job JSON (required)")
         .opt("driver", Some("inproc"), "transport: inproc | tcp")
         .opt("out-dir", Some("results"), "metrics/results directory")
+        .opt(
+            "chunk-bytes",
+            None,
+            "override the job's streaming chunk size (default 1 MB)",
+        )
         .parse(args)
         .map_err(|e| anyhow!(e))?;
-    let job = JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
+    let mut job =
+        JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
+    override_chunk(&mut job, &p)?;
     let kind = match p.get("driver").unwrap() {
         "inproc" => sim::DriverKind::InProc,
         "tcp" => sim::DriverKind::Tcp,
@@ -261,6 +268,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
             if job.artifact == "stream_test" {
                 c.task_name = "stream_test".into();
             }
+            c.recv_filters = fedflare::config::FilterSpec::receive_chain(&job.filters);
             Box::new(c)
         }
         fedflare::config::Workflow::Cyclic => Box::new(
@@ -286,6 +294,19 @@ fn cmd_run(args: &[String]) -> Result<()> {
     Ok(())
 }
 
+/// Apply a `--chunk-bytes` CLI override to the job's stream config (all
+/// `Messenger::new` call sites read `job.stream.chunk_bytes`).
+fn override_chunk(job: &mut JobConfig, p: &fedflare::util::cli::Parsed) -> Result<()> {
+    if p.get("chunk-bytes").is_some() {
+        let n = p.get_usize("chunk-bytes").map_err(|e| anyhow!(e))?;
+        if n == 0 {
+            bail!("--chunk-bytes must be > 0");
+        }
+        job.stream.chunk_bytes = n;
+    }
+    Ok(())
+}
+
 // ------------------------------------------------------------ server/client
 
 fn cmd_server(args: &[String]) -> Result<()> {
@@ -293,9 +314,16 @@ fn cmd_server(args: &[String]) -> Result<()> {
         .opt("port", Some("8787"), "listen port")
         .opt("job", None, "path to job JSON (required)")
         .opt("out-dir", Some("results"), "metrics directory")
+        .opt(
+            "chunk-bytes",
+            None,
+            "override the job's streaming chunk size (default 1 MB)",
+        )
         .parse(args)
         .map_err(|e| anyhow!(e))?;
-    let job = JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
+    let mut job =
+        JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
+    override_chunk(&mut job, &p)?;
     let port: u16 = p.get("port").unwrap().parse()?;
     let rc = RuntimeClient::start(&job.artifacts_dir).ok();
     let initial = repro::common::initial_model(&job, rc.as_ref())?;
@@ -321,6 +349,7 @@ fn cmd_server(args: &[String]) -> Result<()> {
     if job.artifact == "stream_test" {
         ctl.task_name = "stream_test".into();
     }
+    ctl.recv_filters = fedflare::config::FilterSpec::receive_chain(&job.filters);
     ctl.run(&mut comm, &mut ctx)?;
     println!("server: job complete ({} rounds)", ctl.history.len());
     Ok(())
@@ -331,9 +360,16 @@ fn cmd_client(args: &[String]) -> Result<()> {
         .opt("connect", Some("127.0.0.1:8787"), "server address")
         .opt("name", None, "client/site name (required)")
         .opt("job", None, "path to job JSON (required)")
+        .opt(
+            "chunk-bytes",
+            None,
+            "override the job's streaming chunk size (default 1 MB)",
+        )
         .parse(args)
         .map_err(|e| anyhow!(e))?;
-    let job = JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
+    let mut job =
+        JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
+    override_chunk(&mut job, &p)?;
     let name = p.req("name").map_err(|e| anyhow!(e))?;
     let idx = job
         .clients

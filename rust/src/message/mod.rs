@@ -1,19 +1,37 @@
 //! `FLMessage` — the application-level message exchanged between the FL
 //! server and clients (the paper's "task data" / "task result").
 //!
-//! Wire layout (what the SFM layer chunks and streams):
+//! Two wire layouts exist, both chunked by the SFM layer:
+//!
+//! **v1 (blob)** — one contiguous buffer:
 //!
 //! ```text
 //! u32 header_len | header JSON (utf-8) | body bytes (TensorDict wire fmt)
 //! ```
 //!
+//! **v2 (tensor-granular records)** — a self-delimiting record sequence,
+//! so a receiver can decode (and fold) each tensor the moment its bytes
+//! arrive instead of buffering the whole message:
+//!
+//! ```text
+//! u32 len | header record: u32 magic "FWv2" | u8 ver=2
+//!                        | str header JSON | u32 tensor_count
+//! u32 len | tensor record (see tensor::encode_record)   ... repeated
+//! ```
+//!
+//! The v2 sender is [`FrameIter`]: it lazily encodes one record at a time
+//! and cuts SFM frames from it, so sender peak memory is O(largest tensor
+//! + chunk) instead of the v1 path's full extra payload copy.
+//!
 //! The JSON header carries routing/meta (message kind, task name, round,
 //! client, metrics); the body carries the model payload. Keeping the body
 //! binary means a 128 MB model costs zero JSON overhead.
 
-use crate::tensor::TensorDict;
+use crate::sfm::{Frame, FLAG_FIRST, FLAG_LAST};
+use crate::tensor::{self, RecordEnc, Tensor, TensorDict};
 use crate::util::bytes::{ByteError, Reader, Writer};
 use crate::util::json::Json;
+use crate::util::mem;
 
 /// Message kinds of the FL protocol.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -122,15 +140,21 @@ impl FlMessage {
         self.meta.get(key).as_f64()
     }
 
-    pub fn to_bytes(&self) -> Vec<u8> {
-        let header = Json::obj([
+    /// The JSON routing/meta header shared by both wire versions.
+    fn header_json(&self) -> String {
+        Json::obj([
             ("kind", Json::str(self.kind.as_str())),
             ("task", Json::str(self.task.clone())),
             ("round", Json::num(self.round as f64)),
             ("client", Json::str(self.client.clone())),
             ("meta", self.meta.clone()),
         ])
-        .to_string();
+        .to_string()
+    }
+
+    /// Serialize to the v1 blob wire format.
+    pub fn to_bytes(&self) -> Vec<u8> {
+        let header = self.header_json();
         let body = self.body.to_bytes();
         let mut w = Writer::with_capacity(4 + header.len() + body.len());
         w.str(&header);
@@ -138,26 +162,243 @@ impl FlMessage {
         w.into_vec()
     }
 
-    pub fn from_bytes(buf: &[u8]) -> Result<FlMessage, MessageError> {
-        let mut r = Reader::new(buf);
-        let header_text = r.str().map_err(MessageError::Bytes)?;
-        let header =
-            Json::parse(&header_text).map_err(|e| MessageError::Header(e.to_string()))?;
+    /// Parse the JSON routing header into a body-less message.
+    fn from_header_json(text: &str) -> Result<FlMessage, MessageError> {
+        let header = Json::parse(text).map_err(|e| MessageError::Header(e.to_string()))?;
         let kind = header
             .get("kind")
             .as_str()
             .and_then(Kind::from_str)
             .ok_or_else(|| MessageError::Header("missing/invalid kind".into()))?;
-        let body_bytes = &buf[r.pos()..];
-        let body = TensorDict::from_bytes(body_bytes).map_err(MessageError::Bytes)?;
         Ok(FlMessage {
             kind,
             task: header.get("task").as_str().unwrap_or("").to_string(),
             round: header.get("round").as_usize().unwrap_or(0),
             client: header.get("client").as_str().unwrap_or("").to_string(),
             meta: header.get("meta").clone(),
-            body,
+            body: TensorDict::new(),
         })
+    }
+
+    /// Deserialize the v1 blob wire format.
+    pub fn from_bytes(buf: &[u8]) -> Result<FlMessage, MessageError> {
+        let mut r = Reader::new(buf);
+        let header_text = r.str().map_err(MessageError::Bytes)?;
+        let mut msg = Self::from_header_json(&header_text)?;
+        msg.body = TensorDict::from_bytes(&buf[r.pos()..]).map_err(MessageError::Bytes)?;
+        Ok(msg)
+    }
+
+    // ------------------------------------------------------------ wire v2
+
+    /// Payload of the v2 header record (without the u32 record prefix).
+    fn v2_header_payload(&self) -> Vec<u8> {
+        let header = self.header_json();
+        let mut w = Writer::with_capacity(4 + 1 + 4 + header.len() + 4);
+        w.u32(V2_MAGIC);
+        w.u8(V2_VERSION);
+        w.str(&header);
+        w.u32(self.body.len() as u32);
+        w.into_vec()
+    }
+
+    /// Parse a v2 header record payload: the body-less message plus the
+    /// declared tensor-record count.
+    pub fn parse_v2_header(payload: &[u8]) -> Result<(FlMessage, usize), MessageError> {
+        let mut r = Reader::new(payload);
+        let magic = r.u32().map_err(MessageError::Bytes)?;
+        if magic != V2_MAGIC {
+            return Err(MessageError::Header(format!("bad v2 magic {magic:#x}")));
+        }
+        let ver = r.u8().map_err(MessageError::Bytes)?;
+        if ver != V2_VERSION {
+            return Err(MessageError::Header(format!("unsupported v2 version {ver}")));
+        }
+        let header_text = r.str().map_err(MessageError::Bytes)?;
+        let count = r.u32().map_err(MessageError::Bytes)? as usize;
+        r.expect_end().map_err(MessageError::Bytes)?;
+        Ok((Self::from_header_json(&header_text)?, count))
+    }
+
+    /// Total encoded length of the v2 record sequence (every record's u32
+    /// prefix plus payload) — computable without materializing anything,
+    /// which is how [`FrameIter`] knows the frame count up front.
+    pub fn v2_encoded_len(&self, enc: RecordEnc) -> usize {
+        let mut n = 4 + self.v2_header_payload().len();
+        for (name, t) in self.body.iter() {
+            n += 4 + tensor::record_payload_len(name, t, enc);
+        }
+        n
+    }
+
+    /// Materialize the full v2 record sequence (compat path for receivers
+    /// that buffered the whole stream; the sender streams via
+    /// [`FrameIter`] instead).
+    pub fn to_v2_bytes(&self, enc: RecordEnc) -> Vec<u8> {
+        let mut w = Writer::with_capacity(self.v2_encoded_len(enc));
+        w.blob(&self.v2_header_payload());
+        for (name, t) in self.body.iter() {
+            w.blob(&tensor::encode_record(name, t, enc));
+        }
+        w.into_vec()
+    }
+
+    /// Deserialize a buffered v2 record sequence.
+    pub fn from_v2_bytes(buf: &[u8]) -> Result<FlMessage, MessageError> {
+        let mut r = Reader::new(buf);
+        let head = r.blob().map_err(MessageError::Bytes)?;
+        let (mut msg, count) = Self::parse_v2_header(head)?;
+        for _ in 0..count {
+            let rec = r.blob().map_err(MessageError::Bytes)?;
+            let (name, t) = tensor::decode_record(rec).map_err(MessageError::Bytes)?;
+            msg.body.insert(name, t);
+        }
+        r.expect_end().map_err(MessageError::Bytes)?;
+        if msg.body.len() != count {
+            return Err(MessageError::Header(format!(
+                "v2 stream: {count} records declared, {} distinct tensors",
+                msg.body.len()
+            )));
+        }
+        Ok(msg)
+    }
+}
+
+/// Wire format v2 header-record magic (`FWv2` little-endian).
+pub const V2_MAGIC: u32 = 0x3276_5746;
+/// Wire format v2 version byte.
+pub const V2_VERSION: u8 = 2;
+
+/// Lazy frame encoder for wire format v2: walks the message's records one
+/// at a time, cutting fixed-size SFM frames as it goes. At any moment it
+/// holds one encoded record plus one partial chunk — the sender-side
+/// memory story of tensor-granular streaming (tracked via
+/// [`crate::util::mem`] so Fig-5 curves show it).
+pub struct FrameIter<'a> {
+    entries: Vec<(&'a str, &'a Tensor)>,
+    next_entry: usize,
+    /// Current record, including its u32 length prefix.
+    record: Vec<u8>,
+    record_off: usize,
+    kind: u16,
+    stream: u64,
+    enc: RecordEnc,
+    chunk_bytes: usize,
+    seq: u32,
+    total: u32,
+}
+
+impl<'a> FrameIter<'a> {
+    pub fn new(
+        msg: &'a FlMessage,
+        kind: u16,
+        stream: u64,
+        chunk_bytes: usize,
+        enc: RecordEnc,
+    ) -> FrameIter<'a> {
+        assert!(chunk_bytes > 0);
+        // serialize the (small) header once; per-tensor lengths come from
+        // record_payload_len, so nothing big is materialized here
+        let head = msg.v2_header_payload();
+        let entries: Vec<(&str, &Tensor)> = msg.body.iter().collect();
+        let mut total_len = 4 + head.len();
+        for (name, t) in &entries {
+            total_len += 4 + tensor::record_payload_len(name, t, enc);
+        }
+        let total = total_len.div_ceil(chunk_bytes).max(1) as u32;
+        let record = prefixed(head);
+        mem::track_alloc(record.len());
+        FrameIter {
+            entries,
+            next_entry: 0,
+            record,
+            record_off: 0,
+            kind,
+            stream,
+            enc,
+            chunk_bytes,
+            seq: 0,
+            total,
+        }
+    }
+
+    /// Frames this iterator will produce in total.
+    pub fn total_frames(&self) -> u32 {
+        self.total
+    }
+
+    /// Swap the spent record buffer for the next one (tracking follows).
+    fn advance_record(&mut self) -> bool {
+        mem::track_free(self.record.len());
+        self.record = Vec::new();
+        self.record_off = 0;
+        if self.next_entry >= self.entries.len() {
+            return false;
+        }
+        let (name, t) = self.entries[self.next_entry];
+        self.next_entry += 1;
+        // length prefix and payload share one buffer: no re-copy of the
+        // encoded tensor bytes (record_payload_len is exact)
+        let len = tensor::record_payload_len(name, t, self.enc);
+        let mut w = Writer::with_capacity(4 + len);
+        w.u32(len as u32);
+        tensor::write_record(&mut w, name, t, self.enc);
+        debug_assert_eq!(w.len(), 4 + len);
+        self.record = w.into_vec();
+        mem::track_alloc(self.record.len());
+        true
+    }
+}
+
+fn prefixed(payload: Vec<u8>) -> Vec<u8> {
+    let mut v = Vec::with_capacity(4 + payload.len());
+    v.extend_from_slice(&(payload.len() as u32).to_le_bytes());
+    v.extend_from_slice(&payload);
+    v
+}
+
+impl Iterator for FrameIter<'_> {
+    type Item = Frame;
+
+    fn next(&mut self) -> Option<Frame> {
+        if self.seq >= self.total {
+            return None;
+        }
+        let mut payload = Vec::with_capacity(self.chunk_bytes);
+        while payload.len() < self.chunk_bytes {
+            if self.record_off >= self.record.len() {
+                if !self.advance_record() {
+                    break;
+                }
+            }
+            let want = self.chunk_bytes - payload.len();
+            let end = (self.record_off + want).min(self.record.len());
+            payload.extend_from_slice(&self.record[self.record_off..end]);
+            self.record_off = end;
+        }
+        let mut flags = 0;
+        if self.seq == 0 {
+            flags |= FLAG_FIRST;
+        }
+        if self.seq == self.total - 1 {
+            flags |= FLAG_LAST;
+        }
+        let frame = Frame {
+            flags,
+            kind: self.kind,
+            stream: self.stream,
+            seq: self.seq,
+            total: self.total,
+            payload,
+        };
+        self.seq += 1;
+        Some(frame)
+    }
+}
+
+impl Drop for FrameIter<'_> {
+    fn drop(&mut self) {
+        mem::track_free(self.record.len());
     }
 }
 
@@ -216,6 +457,72 @@ mod tests {
         let m2 = FlMessage::from_bytes(&m.to_bytes()).unwrap();
         assert_eq!(m2.client, "c1");
         assert!(m2.body.is_empty());
+    }
+
+    #[test]
+    fn v2_roundtrip() {
+        let m = msg();
+        let m2 = FlMessage::from_v2_bytes(&m.to_v2_bytes(RecordEnc::Raw)).unwrap();
+        assert_eq!(m, m2);
+        // empty body: header record only
+        let bye = FlMessage::bye();
+        let b2 = FlMessage::from_v2_bytes(&bye.to_v2_bytes(RecordEnc::Raw)).unwrap();
+        assert_eq!(bye, b2);
+    }
+
+    #[test]
+    fn v2_encoded_len_is_exact() {
+        for m in [msg(), FlMessage::bye(), FlMessage::register("c9")] {
+            for enc in [RecordEnc::Raw, RecordEnc::F16] {
+                assert_eq!(m.to_v2_bytes(enc).len(), m.v2_encoded_len(enc));
+            }
+        }
+    }
+
+    #[test]
+    fn v2_rejects_corruption() {
+        let bytes = msg().to_v2_bytes(RecordEnc::Raw);
+        assert!(FlMessage::from_v2_bytes(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad = bytes.clone();
+        bad[4] ^= 0xFF; // header magic
+        assert!(FlMessage::from_v2_bytes(&bad).is_err());
+        let mut bad = bytes;
+        bad[8] = 9; // version byte
+        assert!(FlMessage::from_v2_bytes(&bad).is_err());
+    }
+
+    #[test]
+    fn frame_iter_matches_materialized_chunking() {
+        use crate::sfm::chunk_frames;
+        let m = msg();
+        for chunk in [1usize, 7, 64, 1 << 20] {
+            let lazy: Vec<_> =
+                FrameIter::new(&m, 4, 42, chunk, RecordEnc::Raw).collect();
+            let eager = chunk_frames(4, 42, &m.to_v2_bytes(RecordEnc::Raw), chunk);
+            assert_eq!(lazy, eager, "chunk={chunk}");
+        }
+    }
+
+    // (FrameIter's staging-memory bound is asserted in
+    // tests/wire_golden.rs — its own process, so the process-global
+    // tracked-bytes counter is not raced by the lib tests' streaming.)
+
+    #[test]
+    fn prop_v1_v2_equivalence() {
+        // satellite: the two wire formats decode to identical messages
+        prop::check("v1 <-> v2 equivalence", 50, |g| {
+            let mut body = TensorDict::new();
+            for i in 0..g.usize_in(0, 5) {
+                let data = g.f32s(0, 80);
+                body.insert(format!("t{i}"), Tensor::f32(vec![data.len()], data));
+            }
+            let m = FlMessage::result(&g.ident(), g.usize_in(0, 50), &g.ident(), body)
+                .with_meta("n_samples", Json::num(g.f64()));
+            let via_v1 = FlMessage::from_bytes(&m.to_bytes()).map_err(|e| e.to_string())?;
+            let via_v2 =
+                FlMessage::from_v2_bytes(&m.to_v2_bytes(RecordEnc::Raw)).map_err(|e| e.to_string())?;
+            prop::assert_that(via_v1 == via_v2 && via_v2 == m, "wire formats disagree")
+        });
     }
 
     #[test]

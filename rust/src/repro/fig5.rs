@@ -12,9 +12,13 @@
 //! tracked-streaming-buffer bytes + RSS every 50 ms into
 //! `results/fig5_<party>_mem.csv`.
 //!
-//! Expected shape (paper): client steady state ≈ 2x model (model + runtime
-//! copy), peaks ≈ 3x at receive-end/send-start; the slow site's curve is
-//! stretched in time; server ≈ 2x per client with transient peaks above.
+//! Expected shape: with wire format v2 the sender stages one tensor
+//! record at a time (tracked curve ≈ largest tensor, not the paper's 2x
+//! full copy), the receiver's `stage_bytes` column shows record-assembly
+//! staging ≈ O(largest tensor + chunk window), and the server's
+//! `gather_bytes` column shows decoded in-flight records — tensor-sized,
+//! client-count independent — while the slow site's curve is stretched in
+//! time (the paper's fast/slow asymmetry).
 
 use std::process::{Command, Stdio};
 use std::time::{Duration, Instant};
@@ -155,6 +159,7 @@ fn summarize(opts: &Fig5Opts) -> Result<()> {
         "peak_tracked(MB)",
         "peak/model",
         "peak_gather(MB)",
+        "peak_stage(MB)",
         "duration(s)",
     ]);
     let parties: Vec<String> = std::iter::once("server".to_string())
@@ -166,6 +171,7 @@ fn summarize(opts: &Fig5Opts) -> Result<()> {
             std::fs::read_to_string(&path).with_context(|| format!("missing {path}"))?;
         let mut peak = 0.0f64;
         let mut gather_peak = 0.0f64;
+        let mut stage_peak = 0.0f64;
         let mut t_last = 0.0f64;
         for line in text.lines().skip(1) {
             let cols: Vec<&str> = line.split(',').collect();
@@ -176,6 +182,9 @@ fn summarize(opts: &Fig5Opts) -> Result<()> {
             if cols.len() >= 4 {
                 gather_peak = gather_peak.max(cols[3].parse::<f64>().unwrap_or(0.0));
             }
+            if cols.len() >= 5 {
+                stage_peak = stage_peak.max(cols[4].parse::<f64>().unwrap_or(0.0));
+            }
         }
         table.row(vec![
             p.clone(),
@@ -183,13 +192,15 @@ fn summarize(opts: &Fig5Opts) -> Result<()> {
             format!("{:.0}", peak / mb),
             format!("{:.2}", peak / model_bytes(opts) as f64),
             format!("{:.0}", gather_peak / mb),
+            format!("{:.1}", stage_peak / mb),
             format!("{t_last:.1}"),
         ]);
     }
     println!("\nFig 5 summary (per-party tracked streaming memory):");
     table.print();
     println!(
-        "series: {}/fig5_<party>_mem.csv  (t_ms, tracked_bytes, rss_bytes, gather_bytes)",
+        "series: {}/fig5_<party>_mem.csv  \
+         (t_ms, tracked_bytes, rss_bytes, gather_bytes, stage_bytes)",
         opts.out_dir
     );
     Ok(())
@@ -294,12 +305,13 @@ fn write_samples(
                 s.tracked.max(0).to_string(),
                 s.rss.to_string(),
                 s.gather.max(0).to_string(),
+                s.stage.max(0).to_string(),
             ]
         })
         .collect();
     write_csv(
         std::path::Path::new(&format!("{out_dir}/fig5_{party}_mem.csv")),
-        &["t_ms", "tracked_bytes", "rss_bytes", "gather_bytes"],
+        &["t_ms", "tracked_bytes", "rss_bytes", "gather_bytes", "stage_bytes"],
         &rows,
     )
 }

@@ -252,6 +252,158 @@ impl Drop for Reassembler {
     }
 }
 
+/// Latch-and-validate for single-stream frame consumers
+/// ([`RecordAssembler`], `Messenger::recv_file`): the first frame fixes
+/// `(stream, kind, total)`; every later frame must agree and carry an
+/// in-range `seq`. `what` names the stream flavor in error messages.
+/// Keeping this in one place keeps the protocol checks of the
+/// single-stream paths in lockstep ([`Reassembler`] intentionally
+/// differs: it multiplexes streams, so it latches per stream id).
+pub fn latch_frame(
+    latched: &mut Option<(u64, u16, u32)>,
+    frame: &Frame,
+    what: &str,
+) -> Result<(u64, u16, u32), SfmError> {
+    let (stream, kind, total) = match *latched {
+        None => {
+            if frame.total == 0 {
+                return Err(SfmError::Decode(format!("{what} stream with total=0")));
+            }
+            *latched = Some((frame.stream, frame.kind, frame.total));
+            (frame.stream, frame.kind, frame.total)
+        }
+        Some(l) => l,
+    };
+    if frame.stream != stream {
+        return Err(SfmError::Decode(format!(
+            "interleaved {what} stream {} during {what} stream {stream}",
+            frame.stream
+        )));
+    }
+    if frame.kind != kind {
+        return Err(SfmError::Decode(format!(
+            "{what} stream {stream}: inconsistent kind ({} vs {kind})",
+            frame.kind
+        )));
+    }
+    if frame.total != total {
+        return Err(SfmError::Decode(format!(
+            "{what} stream {stream}: inconsistent total ({} vs {total})",
+            frame.total
+        )));
+    }
+    if frame.seq >= total {
+        return Err(SfmError::Decode(format!(
+            "{what} stream {stream}: seq {} >= total {total}",
+            frame.seq
+        )));
+    }
+    Ok((stream, kind, total))
+}
+
+/// Incremental single-stream reassembly for record-oriented payloads
+/// (wire format v2): instead of buffering a whole stream like
+/// [`Reassembler`], it maintains the contiguous byte frontier and yields
+/// each length-prefixed record the moment its last byte arrives.
+/// Out-of-order frames are buffered only until the frontier reaches them,
+/// so staging stays O(largest record + in-flight chunk window) — the
+/// receive-side half of tensor-granular streaming.
+///
+/// The first frame latches the stream id, kind, and chunk count
+/// (mirroring [`Reassembler`]'s kind latch and `recv_file`'s stream
+/// latch); disagreeing frames are protocol errors. Staged bytes are
+/// tracked via [`mem::stage_track_alloc`] so the Fig-5 CSVs can plot
+/// them.
+#[derive(Default)]
+pub struct RecordAssembler {
+    latched: Option<(u64, u16, u32)>,
+    /// Out-of-order frames beyond the contiguous frontier.
+    pending: BTreeMap<u32, Vec<u8>>,
+    next_seq: u32,
+    /// Contiguous bytes not yet consumed as complete records.
+    buf: Vec<u8>,
+    /// Bytes currently counted against the staging counter.
+    staged: usize,
+}
+
+impl RecordAssembler {
+    pub fn new() -> RecordAssembler {
+        RecordAssembler::default()
+    }
+
+    /// Feed one frame; returns every record whose last byte just arrived
+    /// (record payloads, without their u32 length prefix), possibly empty.
+    pub fn push(&mut self, frame: Frame) -> Result<Vec<Vec<u8>>, SfmError> {
+        let (stream, _, total) = latch_frame(&mut self.latched, &frame, "record")?;
+        if frame.seq < self.next_seq || self.pending.contains_key(&frame.seq) {
+            // duplicate chunk: idempotent drop
+            return Ok(Vec::new());
+        }
+        self.pending.insert(frame.seq, frame.payload);
+        // advance the contiguous frontier...
+        while let Some(chunk) = self.pending.remove(&self.next_seq) {
+            self.buf.extend_from_slice(&chunk);
+            self.next_seq += 1;
+        }
+        // ...and slice complete records off its head
+        let mut out = Vec::new();
+        let mut consumed = 0usize;
+        loop {
+            let rest = &self.buf[consumed..];
+            if rest.len() < 4 {
+                break;
+            }
+            let len = u32::from_le_bytes(rest[..4].try_into().unwrap()) as usize;
+            if rest.len() < 4 + len {
+                break;
+            }
+            out.push(rest[4..4 + len].to_vec());
+            consumed += 4 + len;
+        }
+        if consumed > 0 {
+            self.buf.drain(..consumed);
+        }
+        self.retrack();
+        if self.next_seq == total && self.pending.is_empty() && !self.buf.is_empty() {
+            return Err(SfmError::Decode(format!(
+                "stream {stream}: {} trailing bytes after last record",
+                self.buf.len()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// True once every chunk has been absorbed and every complete record
+    /// handed out.
+    pub fn is_done(&self) -> bool {
+        matches!(self.latched, Some((_, _, total)) if self.next_seq == total)
+            && self.buf.is_empty()
+            && self.pending.is_empty()
+    }
+
+    /// Bytes currently staged (partial record + out-of-order chunks).
+    pub fn staged_bytes(&self) -> usize {
+        self.staged
+    }
+
+    /// Reconcile the staging counter with current buffer contents.
+    fn retrack(&mut self) {
+        let now = self.buf.len() + self.pending.values().map(Vec::len).sum::<usize>();
+        match now.cmp(&self.staged) {
+            std::cmp::Ordering::Greater => mem::stage_track_alloc(now - self.staged),
+            std::cmp::Ordering::Less => mem::stage_track_free(self.staged - now),
+            std::cmp::Ordering::Equal => {}
+        }
+        self.staged = now;
+    }
+}
+
+impl Drop for RecordAssembler {
+    fn drop(&mut self) {
+        mem::stage_track_free(self.staged);
+    }
+}
+
 /// SFM-layer errors.
 #[derive(Debug, thiserror::Error)]
 pub enum SfmError {
@@ -437,6 +589,144 @@ mod tests {
         let (_, kind, payload) = re.push(mk(7, 0)).unwrap().unwrap();
         assert_eq!(kind, 7);
         crate::util::mem::track_free(payload.len());
+    }
+
+    /// Concatenate length-prefixed records into one payload byte stream.
+    fn record_stream(records: &[&[u8]]) -> Vec<u8> {
+        let mut v = Vec::new();
+        for r in records {
+            v.extend_from_slice(&(r.len() as u32).to_le_bytes());
+            v.extend_from_slice(r);
+        }
+        v
+    }
+
+    #[test]
+    fn record_assembler_yields_records_as_frames_arrive() {
+        let recs: Vec<Vec<u8>> = vec![vec![1; 700], vec![2; 10], vec![], vec![3; 300]];
+        let stream = record_stream(&recs.iter().map(Vec::as_slice).collect::<Vec<_>>());
+        let frames = chunk_frames(4, 11, &stream, 256);
+        let mut asm = RecordAssembler::new();
+        let mut got = Vec::new();
+        for f in frames {
+            got.extend(asm.push(f).unwrap());
+        }
+        assert!(asm.is_done());
+        assert_eq!(asm.staged_bytes(), 0);
+        assert_eq!(got, recs);
+    }
+
+    #[test]
+    fn record_assembler_handles_out_of_order_within_window() {
+        let recs: Vec<Vec<u8>> = (0..6).map(|i| vec![i as u8; 400]).collect();
+        let stream = record_stream(&recs.iter().map(Vec::as_slice).collect::<Vec<_>>());
+        let mut frames = chunk_frames(4, 12, &stream, 128);
+        // swap adjacent frames pairwise: everything arrives out of order
+        for pair in frames.chunks_mut(2) {
+            pair.reverse();
+        }
+        let mut asm = RecordAssembler::new();
+        let mut got = Vec::new();
+        for f in frames {
+            got.extend(asm.push(f).unwrap());
+        }
+        assert!(asm.is_done());
+        assert_eq!(got, recs);
+    }
+
+    #[test]
+    fn record_assembler_staging_stays_near_one_record() {
+        // 16 records of 4 kB in 512 B chunks, delivered in order: staging
+        // must peak near one record, far below the 64 kB stream
+        let recs: Vec<Vec<u8>> = (0..16).map(|i| vec![i as u8; 4096]).collect();
+        let stream = record_stream(&recs.iter().map(Vec::as_slice).collect::<Vec<_>>());
+        let mut asm = RecordAssembler::new();
+        let mut peak = 0usize;
+        for f in chunk_frames(4, 13, &stream, 512) {
+            asm.push(f).unwrap();
+            peak = peak.max(asm.staged_bytes());
+        }
+        assert!(asm.is_done());
+        assert!(
+            peak <= 4096 + 512 + 8,
+            "staging peaked at {peak}, expected ~one record"
+        );
+    }
+
+    #[test]
+    fn record_assembler_latches_and_rejects_inconsistency() {
+        let mk = |stream: u64, kind: u16, seq: u32, total: u32| Frame {
+            flags: 0,
+            kind,
+            stream,
+            seq,
+            total,
+            payload: vec![0; 8],
+        };
+        let mut asm = RecordAssembler::new();
+        asm.push(mk(5, 4, 0, 3)).unwrap();
+        assert!(asm.push(mk(6, 4, 1, 3)).is_err()); // interleaved stream
+        let mut asm = RecordAssembler::new();
+        asm.push(mk(5, 4, 0, 3)).unwrap();
+        assert!(asm.push(mk(5, 7, 1, 3)).is_err()); // kind drift
+        let mut asm = RecordAssembler::new();
+        asm.push(mk(5, 4, 0, 3)).unwrap();
+        assert!(asm.push(mk(5, 4, 1, 4)).is_err()); // total drift
+        let mut asm = RecordAssembler::new();
+        assert!(asm.push(mk(5, 4, 9, 3)).is_err()); // seq out of range
+        let mut asm = RecordAssembler::new();
+        assert!(asm.push(mk(5, 4, 0, 0)).is_err()); // zero total
+    }
+
+    #[test]
+    fn record_assembler_duplicates_are_idempotent() {
+        let stream = record_stream(&[&[7u8; 100]]);
+        let frames = chunk_frames(4, 14, &stream, 64);
+        let mut asm = RecordAssembler::new();
+        assert!(asm.push(frames[0].clone()).unwrap().is_empty());
+        assert!(asm.push(frames[0].clone()).unwrap().is_empty()); // dup buffered region
+        let got = asm.push(frames[1].clone()).unwrap();
+        assert_eq!(got, vec![vec![7u8; 100]]);
+        // dup of an already-consumed seq
+        assert!(asm.push(frames[0].clone()).unwrap().is_empty());
+        assert!(asm.is_done());
+    }
+
+    #[test]
+    fn record_assembler_rejects_trailing_garbage() {
+        let mut stream = record_stream(&[&[1u8; 10]]);
+        stream.extend_from_slice(&[9, 9, 9]); // not a whole record
+        let mut err = None;
+        let mut asm = RecordAssembler::new();
+        for f in chunk_frames(4, 15, &stream, 8) {
+            match asm.push(f) {
+                Ok(_) => {}
+                Err(e) => err = Some(e),
+            }
+        }
+        assert!(err.unwrap().to_string().contains("trailing bytes"));
+    }
+
+    #[test]
+    fn prop_record_assembler_identity_random_order() {
+        prop::check("record assembler identity", 80, |g| {
+            let n_recs = g.usize_in(0, 8);
+            let recs: Vec<Vec<u8>> = (0..n_recs).map(|_| g.bytes(0, 2000)).collect();
+            let stream = record_stream(&recs.iter().map(Vec::as_slice).collect::<Vec<_>>());
+            let chunk = g.usize_in(1, 512);
+            let mut frames = chunk_frames(4, 77, &stream, chunk);
+            g.rng().shuffle(&mut frames);
+            let mut asm = RecordAssembler::new();
+            let mut got = Vec::new();
+            for f in frames {
+                got.extend(asm.push(f).map_err(|e| e.to_string())?);
+            }
+            prop::assert_that(asm.is_done(), "assembler not done")?;
+            // records may complete out of byte order only if frames jumped
+            // the frontier — the assembler is frontier-ordered, so order
+            // is preserved
+            prop::assert_that(got == recs, "record mismatch")
+        });
     }
 
     #[test]

@@ -7,12 +7,24 @@
 //! [`FlMessage`]. Send/receive of a 128 MB model and of a 40-byte control
 //! message go through the identical code path — only the chunk count
 //! differs.
+//!
+//! Object streams use **wire format v2** (tensor-granular records): the
+//! sender encodes one tensor record at a time via
+//! [`crate::message::FrameIter`] instead of materializing the payload,
+//! and [`Messenger::recv_msg_stream`] hands each decoded tensor to a
+//! callback the moment its frames arrive — the transport half of
+//! fold-as-frames-arrive aggregation. [`Messenger::send_msg_v1`] keeps
+//! the legacy blob format for compatibility, and every receive path
+//! accepts both.
 
 use std::io::{Read, Write};
 use std::path::Path;
 
-use crate::message::{FlMessage, MessageError};
-use crate::sfm::{chunk_frames, Driver, Frame, Reassembler, SfmError, FLAG_FIRST, FLAG_LAST};
+use crate::message::{FlMessage, FrameIter, MessageError};
+use crate::sfm::{
+    chunk_frames, Driver, Frame, Reassembler, RecordAssembler, SfmError, FLAG_FIRST, FLAG_LAST,
+};
+use crate::tensor::{RecordEnc, Tensor, TensorDict};
 use crate::util::mem;
 
 /// Application payload tags carried in the SFM `kind` field.
@@ -20,6 +32,8 @@ pub const KIND_BYTES: u16 = 0;
 pub const KIND_BLOB: u16 = 1;
 pub const KIND_OBJECT: u16 = 2;
 pub const KIND_FILE: u16 = 3;
+/// Object stream in wire format v2 (self-delimiting tensor records).
+pub const KIND_OBJECT_V2: u16 = 4;
 
 /// Streaming-layer errors.
 #[derive(Debug, thiserror::Error)]
@@ -79,6 +93,8 @@ impl Messenger {
     }
 
     /// Stream raw bytes (`kind` selects byte/blob semantics upstream).
+    /// Counters move only after each frame is accepted by the driver, so
+    /// a failed send does not overstate traffic.
     fn send_tagged(&mut self, kind: u16, payload: &[u8]) -> Result<(), StreamError> {
         let stream = self.alloc_stream();
         // Stage-and-send: the outgoing message is materialized once (this
@@ -87,8 +103,9 @@ impl Messenger {
         mem::track_alloc(payload.len());
         let result = (|| {
             for frame in chunk_frames(kind, stream, payload, self.chunk_bytes) {
-                self.sent_bytes += frame.payload.len() as u64;
+                let n = frame.payload.len() as u64;
                 self.driver.send(frame)?;
+                self.sent_bytes += n;
             }
             Ok(())
         })();
@@ -106,8 +123,30 @@ impl Messenger {
         self.send_tagged(KIND_BLOB, payload)
     }
 
-    /// Paper variation 4: object streaming — the FL workhorse.
+    /// Paper variation 4: object streaming — the FL workhorse. Uses wire
+    /// format v2: frames are cut lazily from one tensor record at a time
+    /// ([`FrameIter`]), so the sender never stages a second copy of the
+    /// payload — peak extra memory is O(largest tensor + chunk).
     pub fn send_msg(&mut self, msg: &FlMessage) -> Result<(), StreamError> {
+        self.send_msg_enc(msg, RecordEnc::Raw)
+    }
+
+    /// [`Messenger::send_msg`] with an explicit record transport encoding
+    /// (e.g. [`RecordEnc::F16`] to halve f32 bytes on the wire).
+    pub fn send_msg_enc(&mut self, msg: &FlMessage, enc: RecordEnc) -> Result<(), StreamError> {
+        let stream = self.alloc_stream();
+        for frame in FrameIter::new(msg, KIND_OBJECT_V2, stream, self.chunk_bytes, enc) {
+            let n = frame.payload.len() as u64;
+            self.driver.send(frame)?;
+            self.sent_bytes += n;
+        }
+        Ok(())
+    }
+
+    /// Legacy v1 object send: materialize the whole blob, then chunk it
+    /// (kept for compatibility tests and old peers; costs a full extra
+    /// payload copy on the sender).
+    pub fn send_msg_v1(&mut self, msg: &FlMessage) -> Result<(), StreamError> {
         let bytes = msg.to_bytes();
         self.send_tagged(KIND_OBJECT, &bytes)
     }
@@ -137,7 +176,6 @@ impl Messenger {
             if seq == total - 1 {
                 flags |= FLAG_LAST;
             }
-            self.sent_bytes += want as u64;
             self.driver.send(Frame {
                 flags,
                 kind: KIND_FILE,
@@ -146,6 +184,7 @@ impl Messenger {
                 total,
                 payload: buf[..want].to_vec(),
             })?;
+            self.sent_bytes += want as u64;
         }
         Ok(())
     }
@@ -154,14 +193,17 @@ impl Messenger {
     pub fn recv(&mut self) -> Result<Received, StreamError> {
         loop {
             let frame = self.driver.recv()?;
-            self.recv_bytes += frame.payload.len() as u64;
-            if let Some((_stream, kind, payload)) = self.reasm.push(frame)? {
+            let n = frame.payload.len() as u64;
+            let done = self.reasm.push(frame)?;
+            self.recv_bytes += n;
+            if let Some((_stream, kind, payload)) = done {
                 // ownership transferred to the caller; release tracking here
                 mem::track_free(payload.len());
                 return Ok(match kind {
                     KIND_BYTES => Received::Bytes(payload),
                     KIND_BLOB => Received::Blob(payload),
                     KIND_OBJECT => Received::Object(FlMessage::from_bytes(&payload)?),
+                    KIND_OBJECT_V2 => Received::Object(FlMessage::from_v2_bytes(&payload)?),
                     KIND_FILE => Received::File(payload),
                     other => {
                         return Err(StreamError::Protocol(format!(
@@ -174,18 +216,118 @@ impl Messenger {
     }
 
     /// Block until the next [`FlMessage`] arrives (errors on other kinds —
-    /// the FL protocol only exchanges objects).
+    /// the FL protocol only exchanges objects). Built on
+    /// [`Messenger::recv_msg_stream`], so a v2 stream is assembled tensor
+    /// by tensor without ever staging the full payload bytes.
     pub fn recv_msg(&mut self) -> Result<FlMessage, StreamError> {
-        match self.recv()? {
-            Received::Object(m) => Ok(m),
-            other => Err(StreamError::Protocol(format!(
-                "expected object stream, got {}",
-                match other {
-                    Received::Bytes(_) => "bytes",
-                    Received::Blob(_) => "blob",
-                    Received::File(_) => "file",
-                    Received::Object(_) => unreachable!(),
+        let mut body = TensorDict::new();
+        let mut head = self.recv_msg_stream(|_h, name, t| {
+            body.insert(name, t);
+            Ok(())
+        })?;
+        head.body = body;
+        Ok(head)
+    }
+
+    /// Incremental object receive — the tensor-granular API. Blocks until
+    /// one whole object stream has arrived, invoking `on_tensor(header,
+    /// name, tensor)` for **each tensor record the moment its frames
+    /// complete** (v2 streams; out-of-order frames within the in-flight
+    /// window are handled by [`RecordAssembler`]). Returns the body-less
+    /// header message. The v2 header record always precedes tensor
+    /// records, so the callback can read routing/meta (e.g. aggregation
+    /// weights) from its first argument.
+    ///
+    /// Legacy v1 blob streams are buffered whole, then drained through the
+    /// same callback — identical semantics, v1 memory cost.
+    ///
+    /// Frames of a different stream or a non-object kind arriving
+    /// mid-receive are protocol errors (object exchanges are strictly
+    /// sequential per peer, like `recv_file`).
+    pub fn recv_msg_stream(
+        &mut self,
+        mut on_tensor: impl FnMut(&FlMessage, String, Tensor) -> Result<(), StreamError>,
+    ) -> Result<FlMessage, StreamError> {
+        let first = self.driver.recv()?;
+        let stream = first.stream;
+        match first.kind {
+            KIND_OBJECT_V2 => {
+                let mut asm = RecordAssembler::new();
+                let mut head: Option<FlMessage> = None;
+                let mut declared = 0usize;
+                // distinct record names — duplicates are a protocol error,
+                // matching `FlMessage::from_v2_bytes` (last-insert-wins
+                // would silently drop a tensor)
+                let mut names = std::collections::BTreeSet::new();
+                let mut frame = first;
+                loop {
+                    let n = frame.payload.len() as u64;
+                    let records = asm.push(frame)?;
+                    self.recv_bytes += n;
+                    for rec in records {
+                        match &head {
+                            None => {
+                                let (h, count) = FlMessage::parse_v2_header(&rec)?;
+                                declared = count;
+                                head = Some(h);
+                            }
+                            Some(h) => {
+                                let (name, t) = tensor_record(&rec)?;
+                                if !names.insert(name.clone()) {
+                                    return Err(StreamError::Protocol(format!(
+                                        "v2 stream: duplicate tensor record '{name}'"
+                                    )));
+                                }
+                                on_tensor(h, name, t)?;
+                            }
+                        }
+                    }
+                    if asm.is_done() {
+                        break;
+                    }
+                    frame = self.driver.recv()?;
                 }
+                let head = head.ok_or_else(|| {
+                    StreamError::Protocol("v2 stream ended without a header record".into())
+                })?;
+                if names.len() != declared {
+                    return Err(StreamError::Protocol(format!(
+                        "v2 stream: header declared {declared} tensors, got {}",
+                        names.len()
+                    )));
+                }
+                Ok(head)
+            }
+            KIND_OBJECT => {
+                // v1 blob: buffer the stream, then drain tensors through
+                // the same callback
+                let mut frame = first;
+                loop {
+                    if frame.stream != stream {
+                        return Err(StreamError::Protocol(format!(
+                            "stream {} interleaves object stream {stream}",
+                            frame.stream
+                        )));
+                    }
+                    let n = frame.payload.len() as u64;
+                    let done = self.reasm.push(frame)?;
+                    self.recv_bytes += n;
+                    if let Some((_, _, payload)) = done {
+                        mem::track_free(payload.len());
+                        let msg = FlMessage::from_bytes(&payload)?;
+                        drop(payload);
+                        let mut head = msg;
+                        let body = std::mem::take(&mut head.body);
+                        for (name, t) in body.into_entries() {
+                            on_tensor(&head, name, t)?;
+                        }
+                        return Ok(head);
+                    }
+                    frame = self.driver.recv()?;
+                }
+            }
+            other => Err(StreamError::Protocol(format!(
+                "expected object stream, got kind {other}"
             ))),
         }
     }
@@ -199,7 +341,7 @@ impl Messenger {
     pub fn recv_file(&mut self, out: &Path) -> Result<u64, StreamError> {
         let mut file = std::fs::File::create(out)?;
         let mut pending: std::collections::BTreeMap<u32, Vec<u8>> = Default::default();
-        let mut latched: Option<(u64, u32)> = None; // (stream id, total)
+        let mut latched: Option<(u64, u16, u32)> = None;
         let mut next_seq = 0u32;
         let mut written = 0u64;
         loop {
@@ -209,36 +351,7 @@ impl Messenger {
                     "interleaved non-file stream during recv_file".into(),
                 ));
             }
-            let (stream, total) = match latched {
-                None => {
-                    if frame.total == 0 {
-                        return Err(StreamError::Protocol(
-                            "file stream with total=0".into(),
-                        ));
-                    }
-                    latched = Some((frame.stream, frame.total));
-                    (frame.stream, frame.total)
-                }
-                Some(l) => l,
-            };
-            if frame.stream != stream {
-                return Err(StreamError::Protocol(format!(
-                    "interleaved file stream {} during recv_file of stream {stream}",
-                    frame.stream
-                )));
-            }
-            if frame.total != total {
-                return Err(StreamError::Protocol(format!(
-                    "file stream {stream}: inconsistent total ({} vs {total})",
-                    frame.total
-                )));
-            }
-            if frame.seq >= total {
-                return Err(StreamError::Protocol(format!(
-                    "file stream {stream}: seq {} >= total {total}",
-                    frame.seq
-                )));
-            }
+            let (_, _, total) = crate::sfm::latch_frame(&mut latched, &frame, "file")?;
             self.recv_bytes += frame.payload.len() as u64;
             pending.insert(frame.seq, frame.payload);
             while let Some(chunk) = pending.remove(&next_seq) {
@@ -257,6 +370,11 @@ impl Messenger {
     pub fn send_bye(&mut self) -> Result<(), StreamError> {
         self.send_msg(&FlMessage::bye())
     }
+}
+
+/// Decode one v2 tensor record, mapping byte errors into stream errors.
+fn tensor_record(rec: &[u8]) -> Result<(String, Tensor), StreamError> {
+    crate::tensor::decode_record(rec).map_err(|e| StreamError::Message(MessageError::Bytes(e)))
 }
 
 #[cfg(test)]
@@ -388,6 +506,110 @@ mod tests {
         raw.send(mk(0, 0)).unwrap();
         assert!(b.recv_file(&dst).is_err());
         let _ = std::fs::remove_file(&dst);
+    }
+
+    #[test]
+    fn v1_and_v2_object_sends_both_decode() {
+        let (mut a, mut b) = pair(128);
+        let mut body = TensorDict::new();
+        body.insert("w", Tensor::f32(vec![300], vec![0.25; 300]));
+        body.insert("ids", Tensor::i32(vec![2], vec![5, -6]));
+        let msg = FlMessage::task("train", 1, body);
+        a.send_msg(&msg).unwrap(); // v2
+        a.send_msg_v1(&msg).unwrap(); // legacy blob
+        assert_eq!(b.recv_msg().unwrap(), msg);
+        assert_eq!(b.recv_msg().unwrap(), msg);
+        assert_eq!(a.sent_bytes, b.recv_bytes);
+    }
+
+    #[test]
+    fn f16_transport_halves_wire_bytes() {
+        let (mut a, mut b) = pair(256);
+        let mut body = TensorDict::new();
+        body.insert("w", Tensor::f32(vec![1000], vec![0.5; 1000]));
+        let msg = FlMessage::task("train", 0, body);
+        a.send_msg_enc(&msg, crate::tensor::RecordEnc::F16).unwrap();
+        let f16_bytes = a.sent_bytes;
+        let got = b.recv_msg().unwrap();
+        assert_eq!(got.body.get("w").unwrap().as_f32().unwrap(), &[0.5; 1000]);
+        a.send_msg(&msg).unwrap();
+        let raw_bytes = a.sent_bytes - f16_bytes;
+        b.recv_msg().unwrap();
+        assert!(
+            (f16_bytes as f64) < 0.6 * raw_bytes as f64,
+            "f16 {f16_bytes} vs raw {raw_bytes}"
+        );
+    }
+
+    #[test]
+    fn recv_msg_stream_yields_tensors_incrementally_with_header_first() {
+        let (mut a, mut b) = pair(64);
+        let mut body = TensorDict::new();
+        body.insert("a", Tensor::f32(vec![50], vec![1.0; 50]));
+        body.insert("b", Tensor::f32(vec![50], vec![2.0; 50]));
+        body.insert("c", Tensor::i32(vec![3], vec![7, 8, 9]));
+        let msg = FlMessage::result("train", 3, "site-9", body.clone())
+            .with_meta("n_samples", crate::util::json::Json::num(40.0));
+        let send = std::thread::spawn(move || {
+            a.send_msg(&msg).unwrap();
+            a
+        });
+        let mut seen = Vec::new();
+        let head = b
+            .recv_msg_stream(|h, name, t| {
+                // header meta is available before any tensor arrives
+                assert_eq!(h.metric("n_samples"), Some(40.0));
+                assert_eq!(h.client, "site-9");
+                assert!(h.body.is_empty());
+                seen.push((name, t));
+                Ok(())
+            })
+            .unwrap();
+        send.join().unwrap();
+        assert_eq!(head.round, 3);
+        // sender iterates in name order; the in-order transport preserves it
+        assert_eq!(
+            seen.iter().map(|(n, _)| n.as_str()).collect::<Vec<_>>(),
+            vec!["a", "b", "c"]
+        );
+        let mut rebuilt = TensorDict::new();
+        for (n, t) in seen {
+            rebuilt.insert(n, t);
+        }
+        assert_eq!(rebuilt, body);
+    }
+
+    #[test]
+    fn recv_msg_stream_handles_v1_blob_streams() {
+        let (mut a, mut b) = pair(64);
+        let mut body = TensorDict::new();
+        body.insert("w", Tensor::f32(vec![20], vec![0.5; 20]));
+        let msg = FlMessage::result("train", 0, "c1", body.clone());
+        a.send_msg_v1(&msg).unwrap();
+        let mut names = Vec::new();
+        let head = b
+            .recv_msg_stream(|_h, name, _t| {
+                names.push(name);
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(head.client, "c1");
+        assert_eq!(names, vec!["w"]);
+    }
+
+    #[test]
+    fn byte_counters_untouched_when_send_fails() {
+        // a closed peer makes every send fail: counters must not move
+        let (a, b) = inproc::pair(4, "cnt");
+        let mut tx = Messenger::new(Box::new(a), 64, 1);
+        drop(b);
+        let err = tx.send_bytes(&[0u8; 4096]).unwrap_err();
+        assert!(matches!(err, StreamError::Sfm(crate::sfm::SfmError::Closed)));
+        assert_eq!(tx.sent_bytes, 0);
+        let mut body = TensorDict::new();
+        body.insert("w", Tensor::f32(vec![64], vec![1.0; 64]));
+        assert!(tx.send_msg(&FlMessage::task("t", 0, body)).is_err());
+        assert_eq!(tx.sent_bytes, 0);
     }
 
     #[test]

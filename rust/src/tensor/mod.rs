@@ -175,6 +175,11 @@ impl TensorDict {
     pub fn names(&self) -> impl Iterator<Item = &str> {
         self.map.keys().map(|s| s.as_str())
     }
+    /// Consume the dict, yielding owned (name, tensor) pairs in name order
+    /// (lets the streaming receive path hand tensors off without cloning).
+    pub fn into_entries(self) -> impl Iterator<Item = (String, Tensor)> {
+        self.map.into_iter()
+    }
     pub fn iter(&self) -> impl Iterator<Item = (&str, &Tensor)> {
         self.map.iter().map(|(k, v)| (k.as_str(), v))
     }
@@ -371,6 +376,151 @@ impl TensorDict {
         r.expect_end()?;
         Ok(out)
     }
+}
+
+// ------------------------------------------------------- wire v2 records
+//
+// Wire format v2 is tensor-granular: instead of one contiguous blob, a
+// message is a sequence of self-delimiting records (each length-prefixed
+// by the framing layer), one per named tensor. A record decodes on its
+// own, so the receiver can reassemble and fold tensors one at a time —
+// peak staging is O(largest tensor), not O(model).
+
+/// Transport encoding of one v2 tensor record's payload bytes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum RecordEnc {
+    /// Raw little-endian element bytes (4 per element).
+    #[default]
+    Raw,
+    /// IEEE half-precision packed payload (2 bytes per element; f32
+    /// tensors only — i32 records fall back to raw). The decoder expands
+    /// back to f32, so the dtype on both ends stays f32 and only the wire
+    /// bytes halve.
+    F16,
+}
+
+impl RecordEnc {
+    fn tag(&self) -> u8 {
+        match self {
+            RecordEnc::Raw => 0,
+            RecordEnc::F16 => 1,
+        }
+    }
+    fn from_tag(t: u8) -> Option<RecordEnc> {
+        match t {
+            0 => Some(RecordEnc::Raw),
+            1 => Some(RecordEnc::F16),
+            _ => None,
+        }
+    }
+}
+
+/// Encoded byte length of one tensor record's payload (without the
+/// framing layer's u32 length prefix) — lets the sender compute the total
+/// frame count without materializing anything.
+pub fn record_payload_len(name: &str, t: &Tensor, enc: RecordEnc) -> usize {
+    let data_len = match (enc, &t.data) {
+        (RecordEnc::F16, Data::F32(v)) => v.len() * 2,
+        _ => t.data.len() * 4,
+    };
+    4 + name.len() + 1 + 1 + 1 + 4 * t.shape.len() + 4 + data_len
+}
+
+/// Serialize one named tensor as a v2 record payload:
+/// `str name | u8 dtype | u8 enc | u8 ndim | u32 dims.. | u32 len | bytes`.
+pub fn encode_record(name: &str, t: &Tensor, enc: RecordEnc) -> Vec<u8> {
+    let mut w = Writer::with_capacity(record_payload_len(name, t, enc));
+    write_record(&mut w, name, t, enc);
+    w.into_vec()
+}
+
+/// Append one record payload to an existing writer (the sender's
+/// zero-extra-copy path: the length prefix and payload share one buffer).
+pub fn write_record(w: &mut Writer, name: &str, t: &Tensor, enc: RecordEnc) {
+    w.str(name);
+    w.u8(t.dtype().tag());
+    match (enc, &t.data) {
+        (RecordEnc::F16, Data::F32(v)) => {
+            w.u8(RecordEnc::F16.tag());
+            w.u8(t.shape.len() as u8);
+            for &d in &t.shape {
+                w.u32(d as u32);
+            }
+            let bytes = f32_to_f16_bytes(v);
+            w.u32(bytes.len() as u32);
+            w.bytes(&bytes);
+        }
+        (_, Data::F32(v)) => {
+            w.u8(RecordEnc::Raw.tag());
+            w.u8(t.shape.len() as u8);
+            for &d in &t.shape {
+                w.u32(d as u32);
+            }
+            w.u32((v.len() * 4) as u32);
+            w.bytes(bytes::f32_slice_as_bytes(v));
+        }
+        (_, Data::I32(v)) => {
+            w.u8(RecordEnc::Raw.tag());
+            w.u8(t.shape.len() as u8);
+            for &d in &t.shape {
+                w.u32(d as u32);
+            }
+            w.u32((v.len() * 4) as u32);
+            w.bytes(bytes::i32_slice_as_bytes(v));
+        }
+    }
+}
+
+/// Decode one v2 record payload back into a named tensor. F16-encoded
+/// payloads are expanded to f32 here — per-record dequantization on the
+/// receive side.
+pub fn decode_record(buf: &[u8]) -> Result<(String, Tensor), ByteError> {
+    let mut r = Reader::new(buf);
+    let name = r.str()?;
+    let dtype = DType::from_tag(r.u8()?).ok_or(ByteError {
+        offset: r.pos(),
+        msg: "bad dtype tag".into(),
+    })?;
+    let enc = RecordEnc::from_tag(r.u8()?).ok_or(ByteError {
+        offset: r.pos(),
+        msg: "bad record encoding tag".into(),
+    })?;
+    let ndim = r.u8()? as usize;
+    let mut shape = Vec::with_capacity(ndim);
+    for _ in 0..ndim {
+        shape.push(r.u32()? as usize);
+    }
+    let len = r.u32()? as usize;
+    let raw = r.take(len)?;
+    r.expect_end()?;
+    let numel: usize = shape.iter().product();
+    let t = match (dtype, enc) {
+        (DType::F32, RecordEnc::Raw) => Tensor {
+            shape,
+            data: Data::F32(bytes::bytes_to_f32_vec(raw)?),
+        },
+        (DType::F32, RecordEnc::F16) => Tensor {
+            shape,
+            data: Data::F32(f16_bytes_to_f32(raw)?),
+        },
+        (DType::I32, RecordEnc::Raw) => Tensor {
+            shape,
+            data: Data::I32(bytes::bytes_to_i32_vec(raw)?),
+        },
+        (DType::I32, RecordEnc::F16) => {
+            return Err(ByteError {
+                offset: 0,
+                msg: format!("record {name}: f16 encoding on i32 tensor"),
+            })
+        }
+    };
+    if t.data.len() != numel {
+        return Err(ByteError {
+            offset: 0,
+            msg: format!("record {name}: shape/len mismatch"),
+        });
+    }
+    Ok((name, t))
 }
 
 /// The aggregation hot loop: `a[i] += alpha * b[i]`. Kept as a free fn so
@@ -589,6 +739,58 @@ mod tests {
             let dec = f16_bytes_to_f32(&f32_to_f16_bytes(&[x])).unwrap()[0];
             // half has ~2^-11 relative precision
             prop::assert_close(dec as f64, x as f64, 2e-3, "f16")
+        });
+    }
+
+    #[test]
+    fn record_roundtrip_raw_and_f16() {
+        let d = sample_dict();
+        for (name, t) in d.iter() {
+            let payload = encode_record(name, t, RecordEnc::Raw);
+            assert_eq!(payload.len(), record_payload_len(name, t, RecordEnc::Raw));
+            let (n2, t2) = decode_record(&payload).unwrap();
+            assert_eq!((n2.as_str(), &t2), (name, t));
+        }
+        // f16 halves the data bytes of f32 tensors; i32 falls back to raw
+        let t = Tensor::f32(vec![4], vec![1.0, -0.5, 2.25, 100.0]);
+        let payload = encode_record("w", &t, RecordEnc::F16);
+        assert_eq!(payload.len(), record_payload_len("w", &t, RecordEnc::F16));
+        let (_, t2) = decode_record(&payload).unwrap();
+        for (a, b) in t.as_f32().unwrap().iter().zip(t2.as_f32().unwrap()) {
+            assert!((a - b).abs() <= a.abs() * 2e-3 + 1e-7, "{a} {b}");
+        }
+        let ids = Tensor::i32(vec![2], vec![3, -9]);
+        let payload = encode_record("ids", &ids, RecordEnc::F16);
+        let (_, back) = decode_record(&payload).unwrap();
+        assert_eq!(back, ids);
+    }
+
+    #[test]
+    fn record_rejects_corruption() {
+        let t = Tensor::f32(vec![3], vec![1., 2., 3.]);
+        let payload = encode_record("w", &t, RecordEnc::Raw);
+        assert!(decode_record(&payload[..payload.len() - 2]).is_err()); // truncated
+        let mut bad = payload.clone();
+        bad[4 + 1] = 9; // dtype tag (after name "w": u32 len + 1 byte)
+        assert!(decode_record(&bad).is_err());
+        let mut bad = payload.clone();
+        bad[4 + 2] = 7; // encoding tag
+        assert!(decode_record(&bad).is_err());
+        // shape/len mismatch: claim a bigger dim
+        let mut bad = payload;
+        bad[4 + 4] = 9; // first dim low byte (after name, dtype, enc, ndim)
+        assert!(decode_record(&bad).is_err());
+    }
+
+    #[test]
+    fn prop_record_roundtrip() {
+        prop::check("tensor record roundtrip", 80, |g| {
+            let data = g.f32s(0, 300);
+            let name = g.ident();
+            let t = Tensor::f32(vec![data.len()], data);
+            let (n2, t2) =
+                decode_record(&encode_record(&name, &t, RecordEnc::Raw)).map_err(|e| e.to_string())?;
+            prop::assert_that(n2 == name && t2 == t, "record mismatch")
         });
     }
 

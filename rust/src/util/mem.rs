@@ -18,6 +18,14 @@ static TRACKED_PEAK: AtomicU64 = AtomicU64::new(0);
 static GATHER: AtomicI64 = AtomicI64::new(0);
 /// High-water mark of `GATHER`.
 static GATHER_PEAK: AtomicU64 = AtomicU64::new(0);
+/// Bytes staged by tensor-granular record assembly: out-of-order chunks
+/// plus the partial record at the contiguous frontier. With wire format
+/// v2 this is the receive-side footprint *between* frames arriving and a
+/// tensor record completing — O(largest tensor + in-flight chunks), where
+/// the v1 blob path staged the whole payload.
+static STAGE: AtomicI64 = AtomicI64::new(0);
+/// High-water mark of `STAGE`.
+static STAGE_PEAK: AtomicU64 = AtomicU64::new(0);
 
 /// Record an allocation of `n` bytes in the streaming layer.
 pub fn track_alloc(n: usize) {
@@ -69,6 +77,33 @@ pub fn gather_peak() -> u64 {
 
 pub fn reset_gather_peak() {
     GATHER_PEAK.store(gather_bytes().max(0) as u64, Ordering::Relaxed);
+}
+
+/// Record `n` bytes entering record-assembly staging.
+pub fn stage_track_alloc(n: usize) {
+    let cur = STAGE.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
+    STAGE_PEAK.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+}
+
+/// Record `n` bytes leaving record-assembly staging (record completed or
+/// assembler dropped).
+pub fn stage_track_free(n: usize) {
+    STAGE.fetch_sub(n as i64, Ordering::Relaxed);
+}
+
+/// Bytes currently staged by record assemblers.
+pub fn stage_bytes() -> i64 {
+    STAGE.load(Ordering::Relaxed)
+}
+
+/// High-water mark of the staging counter since start (or
+/// [`reset_stage_peak`]).
+pub fn stage_peak() -> u64 {
+    STAGE_PEAK.load(Ordering::Relaxed)
+}
+
+pub fn reset_stage_peak() {
+    STAGE_PEAK.store(stage_bytes().max(0) as u64, Ordering::Relaxed);
 }
 
 /// RAII guard counting `n` bytes against the gather counter for its
@@ -154,6 +189,8 @@ pub struct MemSample {
     pub rss: u64,
     /// Server-side gather bytes (in-flight aggregation inputs).
     pub gather: i64,
+    /// Record-assembly staging bytes (tensor-granular receive path).
+    pub stage: i64,
     pub label: String,
 }
 
@@ -176,6 +213,7 @@ impl MemSampler {
                     tracked: tracked_bytes(),
                     rss: rss_bytes(),
                     gather: gather_bytes(),
+                    stage: stage_bytes(),
                     label: label.clone(),
                 });
                 match stop_rx.recv_timeout(period) {
@@ -237,6 +275,17 @@ mod tests {
             assert!(gather_peak() >= big as u64);
         }
         assert!(gather_bytes() < big as i64);
+    }
+
+    #[test]
+    fn stage_counter_balances_and_peaks() {
+        let big = 1usize << 23; // dwarf sibling tests' staging
+        let before = stage_bytes();
+        stage_track_alloc(big);
+        assert!(stage_bytes() >= before + big as i64);
+        assert!(stage_peak() >= big as u64);
+        stage_track_free(big);
+        assert!(stage_bytes() < before + big as i64);
     }
 
     #[test]

@@ -56,10 +56,11 @@ fn run_fedavg(n: usize, keys: usize, key_elems: usize, rounds: usize, delta: f32
 }
 
 #[test]
-fn gather_peak_is_flat_across_client_counts() {
+fn gather_peak_is_flat_across_client_counts_and_tensor_sized() {
     let _lock = JOBS.lock().unwrap_or_else(|p| p.into_inner());
     let (keys, key_elems, rounds) = (4usize, 8192usize, 2usize);
     let result_bytes = (keys * key_elems * 4) as u64; // one client update
+    let tensor_bytes = (key_elems * 4) as u64; // one tensor record
     let chunk = 16u64 << 10;
 
     let mut peaks = Vec::new();
@@ -79,22 +80,79 @@ fn gather_peak_is_flat_across_client_counts() {
         peaks.push(peak);
     }
 
-    // the gather's flow gate caps decoded in-flight results at 2 (one
-    // being folded + one staging), so the peak is client-count
-    // independent: between one and two updates whether 2 or 16 clients
-    // reported, never O(clients)
+    // tensor-granular folding: at most STREAM_INFLIGHT(=2) workers hold
+    // one decoded tensor record each while folding, so the peak is both
+    // client-count independent AND tensor-sized — far below even a single
+    // whole result, let alone O(clients x model)
     let lo = *peaks.iter().min().unwrap();
     let hi = *peaks.iter().max().unwrap();
     assert!(
-        hi - lo <= result_bytes + chunk,
+        hi - lo <= tensor_bytes + chunk,
         "gather peak grew with client count: {peaks:?}"
     );
     for (i, &p) in peaks.iter().enumerate() {
         assert!(
-            p >= result_bytes && p <= 2 * result_bytes + chunk,
-            "peak #{i} = {p} outside [1, 2] results ({result_bytes}/result): {peaks:?}"
+            p >= tensor_bytes && p <= 2 * tensor_bytes + chunk,
+            "peak #{i} = {p} outside [1, 2] tensor records \
+             ({tensor_bytes}/record, {result_bytes}/result): {peaks:?}"
         );
     }
+}
+
+#[test]
+fn server_staging_shrinks_with_tensor_count() {
+    // acceptance: a fixed-size model split into K equal tensors — peak
+    // decoded staging on the server shrinks ~1/K with tensor-granular
+    // folding, while the aggregate stays equal to the batch path and the
+    // f64 oracle
+    let _lock = JOBS.lock().unwrap_or_else(|p| p.into_inner());
+    let total_elems = 262_144usize; // 1 MB of f32 total, fixed
+    let (n, rounds, delta) = (4usize, 1usize, 0.25f32);
+    let mut peaks = Vec::new();
+    for &k in &[1usize, 4, 16] {
+        let key_elems = total_elems / k;
+        let (peak, ctl) = run_fedavg(n, k, key_elems, rounds, delta);
+        // f64 oracle: equal weights, every client adds delta each round
+        let oracle = 1.0f64 + rounds as f64 * delta as f64;
+        for (name, t) in ctl.model.iter() {
+            let v = t.as_f32().expect("f32 model");
+            assert!(
+                v.iter().all(|&x| (x as f64 - oracle).abs() < 1e-5),
+                "K={k}: {name} diverged from oracle {oracle}"
+            );
+        }
+        // batch path over the same updates must agree with the streamed
+        // tensor-granular aggregate
+        let schema = StreamTestExecutor::build_model(k, key_elems, 0.0);
+        let mut batch = fedflare::coordinator::StreamingMean::new(&schema);
+        for c in 0..n {
+            let body = StreamTestExecutor::build_model(k, key_elems, 1.0 + delta);
+            let r = FlMessage::result("stream_test", 0, &format!("site-{}", c + 1), body);
+            batch.fold(&r).unwrap();
+        }
+        let batch = batch.finish().unwrap();
+        assert_eq!(ctl.history.len(), rounds);
+        assert!(
+            batch.max_abs_diff(&ctl.model) < 1e-5,
+            "K={k}: batch path disagrees with streamed fold"
+        );
+        peaks.push(peak);
+    }
+    // peak staging ~ 2 x (model/K): demand at least a 1/2-per-4x shrink
+    // with generous slack for the chunk-sized tail
+    let chunk = (16u64 << 10) + 4096;
+    assert!(
+        peaks[1] + chunk < peaks[0],
+        "K=4 did not shrink staging vs K=1: {peaks:?}"
+    );
+    assert!(
+        peaks[2] + chunk < peaks[1],
+        "K=16 did not shrink staging vs K=4: {peaks:?}"
+    );
+    assert!(
+        peaks[2] * 4 < peaks[0],
+        "K=16 should be far below K=1 ({peaks:?})"
+    );
 }
 
 #[test]

@@ -1,0 +1,145 @@
+//! Golden wire-format tests: fixed, checked-in byte fixtures for the v1
+//! `TensorDict` blob format and the v2 per-tensor records, so any silent
+//! format drift (field reorder, width change, endianness, length
+//! semantics) fails loudly instead of corrupting cross-version jobs.
+//!
+//! The fixtures are hex literals generated once from the format spec
+//! (little-endian throughout):
+//!
+//! ```text
+//! v1 blob:   u32 count | per tensor: str name, u8 dtype, u8 ndim,
+//!            u32 dims.., u32 elem_count, payload
+//! v2 record: str name | u8 dtype | u8 enc | u8 ndim | u32 dims..
+//!            | u32 byte_len | payload
+//! ```
+
+use fedflare::message::FlMessage;
+use fedflare::tensor::{decode_record, encode_record, RecordEnc, Tensor, TensorDict};
+
+/// The fixture dict: one f32 vector, one i32 vector, one f32 matrix —
+/// names chosen so sorted iteration order is (a.bias, ids, w).
+fn fixture_dict() -> TensorDict {
+    let mut d = TensorDict::new();
+    d.insert("a.bias", Tensor::f32(vec![3], vec![-1.0, 0.0, 1.5]));
+    d.insert("ids", Tensor::i32(vec![2], vec![7, -9]));
+    d.insert("w", Tensor::f32(vec![2, 2], vec![0.5, -2.0, 3.25, 100.0]));
+    d
+}
+
+fn unhex(s: &str) -> Vec<u8> {
+    assert!(s.len() % 2 == 0);
+    (0..s.len())
+        .step_by(2)
+        .map(|i| u8::from_str_radix(&s[i..i + 2], 16).unwrap())
+        .collect()
+}
+
+/// v1 blob encoding of [`fixture_dict`] — byte-exact.
+const V1_BLOB: &str = "0300000006000000612e6269617300010300000003000000000080bf000000000000c03f030000006964730101020000000200000007000000f7ffffff010000007700020200000002000000040000000000003f000000c0000050400000c842";
+
+/// v2 raw records of the same tensors, one per tensor, name order.
+const V2_A_BIAS: &str =
+    "06000000612e62696173000001030000000c000000000080bf000000000000c03f";
+const V2_IDS: &str = "03000000696473010001020000000800000007000000f7ffffff";
+const V2_W: &str =
+    "01000000770000020200000002000000100000000000003f000000c0000050400000c842";
+
+/// v2 f16-encoded record of tensor `w` (payload halves to 2 bytes/elem).
+const V2_W_F16: &str = "0100000077000102020000000200000008000000003800c080424056";
+
+#[test]
+fn v1_blob_bytes_are_stable() {
+    let d = fixture_dict();
+    assert_eq!(
+        d.to_bytes(),
+        unhex(V1_BLOB),
+        "v1 TensorDict wire format drifted"
+    );
+    // and the checked-in bytes still decode to the same dict
+    assert_eq!(TensorDict::from_bytes(&unhex(V1_BLOB)).unwrap(), d);
+}
+
+#[test]
+fn v2_record_bytes_are_stable() {
+    let d = fixture_dict();
+    for (name, fix) in [("a.bias", V2_A_BIAS), ("ids", V2_IDS), ("w", V2_W)] {
+        let t = d.get(name).unwrap();
+        assert_eq!(
+            encode_record(name, t, RecordEnc::Raw),
+            unhex(fix),
+            "v2 record format drifted for {name}"
+        );
+        let (n2, t2) = decode_record(&unhex(fix)).unwrap();
+        assert_eq!(n2, name);
+        assert_eq!(&t2, t);
+    }
+}
+
+#[test]
+fn v2_f16_record_bytes_are_stable() {
+    let d = fixture_dict();
+    let t = d.get("w").unwrap();
+    assert_eq!(
+        encode_record("w", t, RecordEnc::F16),
+        unhex(V2_W_F16),
+        "v2 f16 record format drifted"
+    );
+    // the fixture's values are exactly f16-representable, so decoding
+    // recovers them losslessly
+    let (n2, t2) = decode_record(&unhex(V2_W_F16)).unwrap();
+    assert_eq!(n2, "w");
+    assert_eq!(&t2, t);
+}
+
+#[test]
+fn frame_iter_stages_one_record_not_the_payload() {
+    // a message with several large tensors: the lazy v2 frame encoder's
+    // tracked bytes must stay near one record (1 MB here), far below the
+    // full 8 MB encoded payload. This test lives in its own test binary
+    // (own process) so the process-global tracked-bytes counter is not
+    // raced by the lib tests' streaming.
+    use fedflare::message::FrameIter;
+    use fedflare::util::mem;
+
+    let elems = (1 << 20) / 4; // 1 MB per tensor
+    let mut body = TensorDict::new();
+    for i in 0..8 {
+        body.insert(format!("t{i}"), Tensor::f32(vec![elems], vec![0.5; elems]));
+    }
+    let m = FlMessage::task("train", 0, body);
+    let full = m.v2_encoded_len(RecordEnc::Raw);
+    let before = mem::tracked_bytes();
+    let mut peak = 0i64;
+    let mut frames = 0usize;
+    for f in FrameIter::new(&m, 4, 1, 64 << 10, RecordEnc::Raw) {
+        peak = peak.max(mem::tracked_bytes() - before);
+        frames += 1;
+        std::hint::black_box(f.payload.len());
+    }
+    assert_eq!(mem::tracked_bytes(), before, "encoder leaked tracking");
+    assert_eq!(frames as u32, full.div_ceil(64 << 10) as u32);
+    // one record (1 MB + chunk) vs the 8 MB payload: demand < 1/4
+    assert!(
+        peak < (full / 4) as i64,
+        "lazy encoder staged {peak} of {full} bytes"
+    );
+}
+
+#[test]
+fn v1_v2_roundtrip_equivalence_property() {
+    // random messages: decoding the v1 blob and the v2 record stream must
+    // yield identical messages (the compat guarantee that lets old and
+    // new peers interoperate)
+    fedflare::util::prop::check("golden v1<->v2 equivalence", 60, |g| {
+        let mut body = TensorDict::new();
+        for i in 0..g.usize_in(0, 6) {
+            let data = g.f32s(0, 120);
+            body.insert(format!("t{i}"), Tensor::f32(vec![data.len()], data));
+        }
+        let m = FlMessage::result(&g.ident(), g.usize_in(0, 99), &g.ident(), body);
+        let v1 = FlMessage::from_bytes(&m.to_bytes()).map_err(|e| e.to_string())?;
+        let v2 = FlMessage::from_v2_bytes(&m.to_v2_bytes(RecordEnc::Raw))
+            .map_err(|e| e.to_string())?;
+        fedflare::util::prop::assert_that(v1 == m && v2 == m, "wire formats disagree")
+    });
+}
