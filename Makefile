@@ -4,7 +4,9 @@
 #                    rust/artifacts/ (needs Python with jax installed;
 #                    artifact-dependent Rust tests skip when absent)
 #   make test        tier-1 verification: release build + full test suite
-#   make bench       run every Rust benchmark target
+#   make bench       run every Rust benchmark target; bench_topology also
+#                    writes machine-readable BENCH_topology.json (peak
+#                    bytes + wall-clock per topology) at the repo root
 #   make lint        rustfmt + clippy, as CI runs them
 
 .PHONY: artifacts test bench lint
@@ -18,6 +20,7 @@ test:
 bench:
 	cargo bench --bench bench_streaming
 	cargo bench --bench bench_aggregation
+	cargo bench --bench bench_topology
 	cargo bench --bench bench_experiments
 	cargo bench --bench bench_runtime
 

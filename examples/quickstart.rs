@@ -89,8 +89,8 @@ fn main() -> Result<()> {
 
     let num_rounds = 5;
     for round in 0..num_rounds {
-        // 1. sample the available clients
-        let targets = comm.sample_clients(2)?;
+        // 1. sample the available clients (deterministic per round)
+        let targets = comm.sample_clients(2, round)?;
         // 2. send the global model, wait for updates
         let task = FlMessage::task("train", round, model.clone());
         let results = comm.broadcast_and_wait(&task, &targets)?;

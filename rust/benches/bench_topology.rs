@@ -1,0 +1,120 @@
+//! Topology benchmarks: flat star vs hierarchical aggregator tree —
+//! wall-clock per FedAvg round and peak root gather bytes per topology,
+//! emitted both as a table and as machine-readable `BENCH_topology.json`
+//! so the perf trajectory is tracked from PR to PR.
+//!
+//! Run with `cargo bench --bench bench_topology`.
+
+use std::time::Instant;
+
+use fedflare::config::{ClientSpec, JobConfig};
+use fedflare::coordinator::FedAvg;
+use fedflare::executor::{Executor, StreamTestExecutor};
+use fedflare::sim::{self, DriverKind};
+use fedflare::util::bench::emit_json;
+use fedflare::util::json::Json;
+
+struct TopoRun {
+    clients: usize,
+    branching: usize,
+    wall_s: f64,
+    root_peak: u64,
+    global_peak: u64,
+}
+
+fn run_topology(clients: usize, branching: usize, keys: usize, key_elems: usize) -> TopoRun {
+    let mut job = JobConfig::named(&format!("bench_topo_{clients}_{branching}"), "stream_test");
+    job.rounds = 1;
+    job.branching = branching;
+    job.stream.chunk_bytes = 32 << 10;
+    job.clients = (0..clients)
+        .map(|i| ClientSpec {
+            name: format!("site-{i:03}"),
+            bandwidth_bps: 0,
+            partition: i,
+        })
+        .collect();
+    let n_children = if branching > 1 && clients > branching {
+        clients.div_ceil(branching)
+    } else {
+        clients
+    };
+    job.min_clients = n_children;
+    let initial = StreamTestExecutor::build_model(keys, key_elems, 1.0);
+    let mut ctl = FedAvg::new(initial, 1, n_children);
+    ctl.task_name = "stream_test".into();
+    let mut f: Box<sim::ExecutorFactory> = Box::new(|_i, _s| {
+        Ok(Box::new(StreamTestExecutor::new(None, 0.5)) as Box<dyn Executor>)
+    });
+    let dir = std::env::temp_dir().join("fedflare_bench_topology");
+    let _ = std::fs::create_dir_all(&dir);
+    fedflare::util::mem::reset_gather_peak();
+    let t0 = Instant::now();
+    let report = sim::run_job(
+        &job,
+        DriverKind::InProc,
+        &mut ctl,
+        &mut f,
+        &dir.to_string_lossy(),
+    )
+    .expect("bench job");
+    let wall_s = t0.elapsed().as_secs_f64();
+    // sanity: the aggregate must hit the oracle or the numbers are noise
+    let v = ctl.model.get("key_000").unwrap().as_f32().unwrap()[0];
+    assert!((v - 1.5).abs() < 1e-5, "aggregation diverged: {v}");
+    TopoRun {
+        clients,
+        branching,
+        wall_s,
+        root_peak: report.root_gather_peak,
+        global_peak: fedflare::util::mem::gather_peak(),
+    }
+}
+
+fn main() {
+    // 1 MB model (4 x 256 kB tensors), one FedAvg round per topology
+    let (keys, key_elems) = (4usize, 65_536usize);
+    let cases: &[(usize, usize)] = &[
+        (16, 0),   // flat baseline
+        (64, 0),   // flat, 4x fan-in
+        (64, 8),   // tree: 8 mid-tier nodes of 8
+        (128, 16), // tree: 8 mid-tier nodes of 16
+    ];
+    println!("== topology: one FedAvg round, 1 MB model ==");
+    println!(
+        "  {:<26} {:>9} {:>16} {:>16}",
+        "case", "wall", "root peak", "global peak"
+    );
+    let mut rows = Vec::new();
+    for &(clients, branching) in cases {
+        let r = run_topology(clients, branching, keys, key_elems);
+        let label = if branching > 1 && clients > branching {
+            format!("{clients} clients, tree B={branching}")
+        } else {
+            format!("{clients} clients, flat")
+        };
+        println!(
+            "  {label:<26} {:>8.2}s {:>13} kB {:>13} kB",
+            r.wall_s,
+            r.root_peak >> 10,
+            r.global_peak >> 10,
+        );
+        rows.push(Json::obj([
+            ("clients", Json::num(r.clients as f64)),
+            ("branching", Json::num(r.branching as f64)),
+            ("wall_s", Json::num(r.wall_s)),
+            ("root_gather_peak_bytes", Json::num(r.root_peak as f64)),
+            ("global_gather_peak_bytes", Json::num(r.global_peak as f64)),
+        ]));
+    }
+    emit_json(
+        "topology",
+        Json::obj([
+            ("bench", Json::str("topology")),
+            ("model_bytes", Json::num((keys * key_elems * 4) as f64)),
+            ("rows", Json::arr(rows)),
+        ]),
+    )
+    .expect("write BENCH_topology.json");
+    let _ = std::fs::remove_dir_all(std::env::temp_dir().join("fedflare_bench_topology"));
+}

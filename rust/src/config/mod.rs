@@ -86,6 +86,102 @@ impl StreamConfig {
     }
 }
 
+/// Which aggregation strategy the scatter-and-gather workflow plugs in
+/// (built by `coordinator::build_aggregator`). Pure config data — the
+/// math lives in `coordinator::aggregator`.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub enum AggregatorSpec {
+    /// FedAvg's sample-weighted streaming mean.
+    #[default]
+    Mean,
+    /// Proximally damped mean: `x = x_g + (mean − x_g)/(1 + μ)`.
+    FedProx { mu: f64 },
+    /// Server-side SGD with momentum over the round pseudo-gradient.
+    FedOptSgd { lr: f64, momentum: f64 },
+    /// Server-side Adam over the round pseudo-gradient.
+    FedOptAdam { lr: f64, beta1: f64, beta2: f64, eps: f64 },
+}
+
+impl AggregatorSpec {
+    /// Default hyperparameters, shared by the CLI and JSON parsers so
+    /// the two spec forms can never drift apart. FedOpt-Adam values are
+    /// the Reddi et al. 2021 server-Adam defaults.
+    pub const DEFAULT_FEDPROX_MU: f64 = 0.01;
+    pub const DEFAULT_FEDOPT_LR: f64 = 1.0;
+    pub const DEFAULT_FEDOPT_MOMENTUM: f64 = 0.9;
+    pub const DEFAULT_ADAM_LR: f64 = 0.01;
+    pub const DEFAULT_ADAM_BETA1: f64 = 0.9;
+    pub const DEFAULT_ADAM_BETA2: f64 = 0.99;
+    pub const DEFAULT_ADAM_EPS: f64 = 1e-3;
+
+    /// Parse a CLI-style spec: `fedavg` | `mean`, `fedprox[:mu]`,
+    /// `fedopt` | `fedopt-sgd[:lr[,momentum]]`, `fedopt-adam[:lr]`.
+    pub fn from_str(s: &str) -> Result<AggregatorSpec, ConfigError> {
+        let (head, args) = match s.split_once(':') {
+            Some((h, a)) => (h, Some(a)),
+            None => (s, None),
+        };
+        let nums: Vec<f64> = match args {
+            None => Vec::new(),
+            Some(a) => a
+                .split(',')
+                .map(|x| {
+                    x.trim()
+                        .parse::<f64>()
+                        .map_err(|e| ConfigError(format!("aggregator '{s}': {e}")))
+                })
+                .collect::<Result<_, ConfigError>>()?,
+        };
+        let arg = |i: usize, default: f64| nums.get(i).copied().unwrap_or(default);
+        match head {
+            "mean" | "fedavg" => Ok(AggregatorSpec::Mean),
+            "fedprox" => Ok(AggregatorSpec::FedProx {
+                mu: arg(0, Self::DEFAULT_FEDPROX_MU),
+            }),
+            "fedopt" | "fedopt-sgd" => Ok(AggregatorSpec::FedOptSgd {
+                lr: arg(0, Self::DEFAULT_FEDOPT_LR),
+                momentum: arg(1, Self::DEFAULT_FEDOPT_MOMENTUM),
+            }),
+            "fedopt-adam" => Ok(AggregatorSpec::FedOptAdam {
+                lr: arg(0, Self::DEFAULT_ADAM_LR),
+                beta1: arg(1, Self::DEFAULT_ADAM_BETA1),
+                beta2: arg(2, Self::DEFAULT_ADAM_BETA2),
+                eps: arg(3, Self::DEFAULT_ADAM_EPS),
+            }),
+            other => Err(ConfigError(format!("unknown aggregator '{other}'"))),
+        }
+    }
+
+    /// Parse from job JSON: either a spec string (as
+    /// [`AggregatorSpec::from_str`]) or an object
+    /// `{"type": "fedprox", "mu": 0.01}`.
+    pub fn from_json(j: &Json) -> Result<AggregatorSpec, ConfigError> {
+        if let Some(s) = j.as_str() {
+            return Self::from_str(s);
+        }
+        match j.get("type").as_str() {
+            Some("mean") | Some("fedavg") => Ok(AggregatorSpec::Mean),
+            Some("fedprox") => Ok(AggregatorSpec::FedProx {
+                mu: j.get("mu").as_f64().unwrap_or(Self::DEFAULT_FEDPROX_MU),
+            }),
+            Some("fedopt") | Some("fedopt-sgd") => Ok(AggregatorSpec::FedOptSgd {
+                lr: j.get("lr").as_f64().unwrap_or(Self::DEFAULT_FEDOPT_LR),
+                momentum: j
+                    .get("momentum")
+                    .as_f64()
+                    .unwrap_or(Self::DEFAULT_FEDOPT_MOMENTUM),
+            }),
+            Some("fedopt-adam") => Ok(AggregatorSpec::FedOptAdam {
+                lr: j.get("lr").as_f64().unwrap_or(Self::DEFAULT_ADAM_LR),
+                beta1: j.get("beta1").as_f64().unwrap_or(Self::DEFAULT_ADAM_BETA1),
+                beta2: j.get("beta2").as_f64().unwrap_or(Self::DEFAULT_ADAM_BETA2),
+                eps: j.get("eps").as_f64().unwrap_or(Self::DEFAULT_ADAM_EPS),
+            }),
+            other => Err(ConfigError(format!("unknown aggregator type {other:?}"))),
+        }
+    }
+}
+
 /// A data/result filter spec (paper §2.3: DP, HE; plus transport
 /// quantization). Applied in order on the client's outgoing result.
 #[derive(Debug, Clone, PartialEq)]
@@ -175,7 +271,21 @@ pub struct JobConfig {
     pub name: String,
     pub workflow: Workflow,
     pub rounds: usize,
+    /// Quorum: results required to finalize a round.
     pub min_clients: usize,
+    /// Clients sampled per round (0 = exactly `min_clients`). Sampling
+    /// more than the quorum tolerates that many failures/stragglers.
+    pub sample_count: usize,
+    /// Straggler timeout in seconds (None = wait for every sampled
+    /// client): past the deadline a round finalizes once `min_clients`
+    /// results have folded, discarding stragglers.
+    pub round_timeout_s: Option<f64>,
+    /// Aggregation strategy of the scatter-and-gather workflow.
+    pub aggregator: AggregatorSpec,
+    /// Hierarchical topology: max children per aggregator node (0 or 1 =
+    /// flat). With N clients and branching B, the simulator inserts
+    /// ⌈N/B⌉ mid-tier aggregator nodes between server and clients.
+    pub branching: usize,
     pub clients: Vec<ClientSpec>,
     /// Artifact family, e.g. "gpt_small" — the runtime loads
     /// `<artifact>_train` / `<artifact>_eval` / ... from `artifacts_dir`.
@@ -197,6 +307,10 @@ impl JobConfig {
             workflow: Workflow::FedAvg,
             rounds: 3,
             min_clients: 2,
+            sample_count: 0,
+            round_timeout_s: None,
+            aggregator: AggregatorSpec::Mean,
+            branching: 0,
             clients: vec![
                 ClientSpec {
                     name: "site-1".into(),
@@ -239,6 +353,21 @@ impl JobConfig {
         }
         if let Some(n) = j.get("min_clients").as_usize() {
             job.min_clients = n;
+        }
+        if let Some(n) = j.get("sample_count").as_usize() {
+            job.sample_count = n;
+        }
+        if let Some(t) = j.get("round_timeout_s").as_f64() {
+            if t <= 0.0 {
+                return Err(ConfigError("round_timeout_s must be > 0".into()));
+            }
+            job.round_timeout_s = Some(t);
+        }
+        if !j.get("aggregator").is_null() {
+            job.aggregator = AggregatorSpec::from_json(j.get("aggregator"))?;
+        }
+        if let Some(n) = j.get("branching").as_usize() {
+            job.branching = n;
         }
         if let Some(s) = j.get("artifacts_dir").as_str() {
             job.artifacts_dir = s.to_string();
@@ -352,6 +481,66 @@ mod tests {
             job.filters[0],
             FilterSpec::GaussianDp { clip: 2.0, sigma: 0.5 }
         );
+    }
+
+    #[test]
+    fn parse_topology_and_aggregator_fields() {
+        let src = r#"{
+            "name": "tree",
+            "artifact": "stream_test",
+            "rounds": 2,
+            "min_clients": 2,
+            "sample_count": 3,
+            "round_timeout_s": 1.5,
+            "branching": 16,
+            "aggregator": {"type": "fedprox", "mu": 0.05},
+            "clients": [{"name":"a"},{"name":"b"},{"name":"c"}]
+        }"#;
+        let job = JobConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(job.sample_count, 3);
+        assert_eq!(job.round_timeout_s, Some(1.5));
+        assert_eq!(job.branching, 16);
+        assert_eq!(job.aggregator, AggregatorSpec::FedProx { mu: 0.05 });
+        // string form too
+        let src = r#"{"name":"t","artifact":"x","aggregator":"fedopt-sgd:0.5,0.8"}"#;
+        let job = JobConfig::from_json(&Json::parse(src).unwrap()).unwrap();
+        assert_eq!(
+            job.aggregator,
+            AggregatorSpec::FedOptSgd { lr: 0.5, momentum: 0.8 }
+        );
+        // defaults
+        let job = JobConfig::named("d", "x");
+        assert_eq!(job.aggregator, AggregatorSpec::Mean);
+        assert_eq!(job.branching, 0);
+        assert_eq!(job.sample_count, 0);
+        assert_eq!(job.round_timeout_s, None);
+    }
+
+    #[test]
+    fn aggregator_spec_parses_and_rejects() {
+        assert_eq!(AggregatorSpec::from_str("fedavg").unwrap(), AggregatorSpec::Mean);
+        assert_eq!(AggregatorSpec::from_str("mean").unwrap(), AggregatorSpec::Mean);
+        assert_eq!(
+            AggregatorSpec::from_str("fedprox").unwrap(),
+            AggregatorSpec::FedProx { mu: 0.01 }
+        );
+        assert_eq!(
+            AggregatorSpec::from_str("fedprox:0.3").unwrap(),
+            AggregatorSpec::FedProx { mu: 0.3 }
+        );
+        assert_eq!(
+            AggregatorSpec::from_str("fedopt").unwrap(),
+            AggregatorSpec::FedOptSgd { lr: 1.0, momentum: 0.9 }
+        );
+        assert_eq!(
+            AggregatorSpec::from_str("fedopt-adam:0.1").unwrap(),
+            AggregatorSpec::FedOptAdam { lr: 0.1, beta1: 0.9, beta2: 0.99, eps: 1e-3 }
+        );
+        assert!(AggregatorSpec::from_str("nope").is_err());
+        assert!(AggregatorSpec::from_str("fedprox:x").is_err());
+        let zero_timeout =
+            Json::parse(r#"{"name":"a","artifact":"x","round_timeout_s":0}"#).unwrap();
+        assert!(JobConfig::from_json(&zero_timeout).is_err());
     }
 
     #[test]

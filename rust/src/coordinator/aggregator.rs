@@ -1,0 +1,952 @@
+//! The Aggregator layer: server-side aggregation strategies, split out of
+//! the workflow (paper §2.1's Controller / Aggregator separation — FLARE's
+//! `ScatterAndGather` controller delegates the math to a pluggable
+//! `Aggregator` component, which is what lets FedOpt/FedProx-style
+//! variants ship without touching workflow control).
+//!
+//! An [`Aggregator`] is long-lived (it survives across rounds — FedOpt
+//! keeps its server-optimizer moments here) and folds **one tensor record
+//! at a time**, preserving the streaming-memory property: client updates
+//! interleave at tensor granularity, each record is folded and dropped,
+//! and the result is order-invariant.
+//!
+//! Implementations:
+//! * [`StreamingMean`] — FedAvg's sample-weighted running mean.
+//! * [`FedProx`] — proximally damped server update: the round's model
+//!   solves `min_x Σ (w_i/W)‖x − x_i‖² + μ‖x − x_g‖²`, i.e.
+//!   `x = (mean + μ·x_g) / (1 + μ)` — the mean pulled back toward the
+//!   previous global model.
+//! * [`FedOpt`] — server-side optimizer (Reddi et al. 2021): the round's
+//!   weighted mean defines a pseudo-gradient `Δ = mean − x_g`, stepped
+//!   through SGD-with-momentum or Adam whose state persists across rounds.
+//!
+//! Hierarchical aggregation builds on [`Aggregator::partial`]: a mid-tier
+//! node folds its client shard with a [`StreamingMean`] and forwards one
+//! serialized partial — the shard's weighted mean plus its cumulative
+//! weight — which merges order-invariantly at the next level up, because
+//! folding `(mean_s, W_s)` as a single weighted record reproduces exactly
+//! the fold of the shard's underlying clients.
+
+use std::collections::BTreeMap;
+
+use anyhow::{anyhow, bail, Result};
+
+use crate::config::AggregatorSpec;
+use crate::message::FlMessage;
+use crate::tensor::{lerp_slice, Tensor, TensorDict};
+
+/// Aggregation weight of one result/partial (read off the header meta,
+/// which the v2 wire format delivers before any tensor record).
+pub fn weight_of(r: &FlMessage) -> f64 {
+    r.metric("n_samples").unwrap_or(1.0).max(0.0)
+}
+
+/// A server-side aggregation strategy. Lives across rounds; per-round
+/// fold state is (re)seeded by [`Aggregator::begin_round`] and consumed
+/// by [`Aggregator::finalize`] (or [`Aggregator::partial`]).
+///
+/// The fold contract is identical to the tensor-granular gather's:
+/// [`Aggregator::fold_tensor`] at most once per tensor per stream, one
+/// [`Aggregator::client_done`] per finished stream, folds from different
+/// streams interleaving freely — every implementation must be
+/// order-invariant over complete streams.
+pub trait Aggregator: Send {
+    /// Strategy name ("fedavg", "fedprox", "fedopt-sgd", "fedopt-adam").
+    fn name(&self) -> &'static str;
+
+    /// Reset the round's fold state, anchored at the current global model
+    /// (schema source; FedProx/FedOpt also keep it as the proximal/
+    /// pseudo-gradient anchor).
+    fn begin_round(&mut self, global: &TensorDict, round: usize);
+
+    /// Fold one tensor record of one client (or partial) stream with that
+    /// stream's weight.
+    fn fold_tensor(&mut self, name: &str, t: &Tensor, w: f64) -> Result<()>;
+
+    /// Account one finished stream: `seen` records folded with weight `w`.
+    fn client_done(&mut self, w: f64, seen: usize) -> Result<()>;
+
+    /// Streams accounted so far this round (including zero-weight ones).
+    fn folded(&self) -> usize;
+
+    /// Cumulative weight accounted so far this round.
+    fn total_weight(&self) -> f64;
+
+    /// Finalize the round into the next global model, consuming the
+    /// round's fold state.
+    fn finalize(&mut self) -> Result<TensorDict>;
+
+    /// Serialize the round's **partial** state for hierarchical
+    /// forwarding: the weighted mean folded so far plus its cumulative
+    /// weight, consuming the round's fold state. Folding the returned
+    /// `(mean, weight)` as one record stream upstream is equivalent to
+    /// folding every underlying client there. Only strategies whose fold
+    /// is a plain weighted mean support this (the default errors —
+    /// FedProx/FedOpt transforms must run exactly once, at the root).
+    fn partial(&mut self) -> Result<(TensorDict, f64)> {
+        bail!(
+            "aggregator '{}' cannot serialize a partial; use the plain \
+             weighted mean on mid-tier nodes",
+            self.name()
+        )
+    }
+}
+
+/// Build an aggregation strategy from its config spec.
+pub fn build_aggregator(spec: &AggregatorSpec) -> Box<dyn Aggregator> {
+    match *spec {
+        AggregatorSpec::Mean => Box::new(StreamingMean::new(&TensorDict::new())),
+        AggregatorSpec::FedProx { mu } => Box::new(FedProx::new(mu)),
+        AggregatorSpec::FedOptSgd { lr, momentum } => Box::new(FedOpt::sgd(lr, momentum)),
+        AggregatorSpec::FedOptAdam { lr, beta1, beta2, eps } => {
+            Box::new(FedOpt::adam(lr, beta1, beta2, eps))
+        }
+    }
+}
+
+// ------------------------------------------------------------------ mean
+
+/// Streaming weighted mean over client updates — FedAvg's aggregator and
+/// the building block of every other strategy here. The unit of folding
+/// is **one tensor**: each tensor carries its own cumulative weight and
+/// advances by the running-mean update
+///
+/// ```text
+/// W_t += w_i
+/// agg_t += (w_i / W_t) * (x_t - agg_t)
+/// ```
+///
+/// which after all folds equals `sum_i (w_i / W) * x_i` per tensor — so
+/// client updates may interleave at tensor granularity (client A's
+/// records folding while client B's are still arriving) and the result is
+/// order-invariant, never needing the total weight up front or a whole
+/// client result in memory. [`StreamingMean::fold`] keeps the
+/// result-at-a-time API as a loop over [`StreamingMean::fold_tensor`].
+/// Weights come from the `n_samples` metric (default 1, floored at 0 — a
+/// zero-weight result is schema-checked but contributes nothing).
+pub struct StreamingMean {
+    agg: TensorDict,
+    /// Cumulative weight folded into each f32 tensor (i32 tensors pass
+    /// through unaggregated, mirroring [`TensorDict::lerp`]).
+    tensor_weight: BTreeMap<String, f64>,
+    weight: f64,
+    folded: usize,
+}
+
+impl StreamingMean {
+    /// Fresh accumulator with `schema`'s names/shapes, starting at zero.
+    pub fn new(schema: &TensorDict) -> StreamingMean {
+        StreamingMean {
+            agg: schema.zeros_like(),
+            tensor_weight: BTreeMap::new(),
+            weight: 0.0,
+            folded: 0,
+        }
+    }
+
+    /// Re-zero the accumulator for a new round over `schema`.
+    pub fn reset(&mut self, schema: &TensorDict) {
+        self.agg = schema.zeros_like();
+        self.tensor_weight.clear();
+        self.weight = 0.0;
+        self.folded = 0;
+    }
+
+    /// Aggregation weight of one result (see [`weight_of`]).
+    pub fn weight_of(r: &FlMessage) -> f64 {
+        weight_of(r)
+    }
+
+    /// Fold **one tensor record** of a client update with that client's
+    /// weight — the fold-as-frames-arrive entry point. Errors on names
+    /// outside the schema or shape/dtype drift; zero-weight records are
+    /// validated but contribute nothing.
+    ///
+    /// Contract: call at most once per tensor per client stream. The
+    /// accumulator itself cannot tell clients apart, so it enforces this
+    /// only in aggregate (record counts in [`StreamingMean::client_done`]
+    /// plus the per-tensor total-weight check in
+    /// [`StreamingMean::take_mean`]); name-level duplicate rejection
+    /// within one stream is done by the transport
+    /// (`Messenger::recv_msg_stream`).
+    pub fn fold_tensor(&mut self, name: &str, t: &Tensor, w: f64) -> Result<()> {
+        let cur = self
+            .agg
+            .get_mut(name)
+            .ok_or_else(|| anyhow!("aggregate: tensor {name} not in schema"))?;
+        if cur.shape != t.shape || cur.dtype() != t.dtype() {
+            bail!(
+                "aggregate: tensor {name} mismatches schema ({:?} {} vs {:?} {})",
+                t.shape,
+                t.dtype().as_str(),
+                cur.shape,
+                cur.dtype().as_str()
+            );
+        }
+        if w <= 0.0 {
+            return Ok(());
+        }
+        let (Some(a), Some(b)) = (cur.as_f32_mut(), t.as_f32()) else {
+            return Ok(()); // non-f32: not aggregatable
+        };
+        // avoid entry(): it would allocate the key String on every fold,
+        // and this runs under the shared agg lock in the hot path
+        let c = match self.tensor_weight.get_mut(name) {
+            Some(wt) => {
+                *wt += w;
+                (w / *wt) as f32
+            }
+            None => {
+                self.tensor_weight.insert(name.to_string(), w);
+                1.0
+            }
+        };
+        lerp_slice(a, c, b);
+        Ok(())
+    }
+
+    /// Account one finished client stream: `seen` tensor records folded
+    /// with weight `w`. Errors unless the record count matches the schema
+    /// size — combined with the transport layer's duplicate-name
+    /// rejection and [`StreamingMean::take_mean`]'s per-tensor weight
+    /// check, this is the per-record path's equivalent of the old
+    /// whole-dict `same_schema` check.
+    pub fn client_done(&mut self, w: f64, seen: usize) -> Result<()> {
+        if seen != self.agg.len() {
+            bail!(
+                "aggregate: client streamed {seen} tensors, schema has {}",
+                self.agg.len()
+            );
+        }
+        self.folded += 1;
+        self.weight += w.max(0.0);
+        Ok(())
+    }
+
+    /// Fold one whole client result into the accumulator (batch
+    /// compatibility path over [`StreamingMean::fold_tensor`]). The caller
+    /// drops the result right after — nothing of it is retained here.
+    pub fn fold(&mut self, r: &FlMessage) -> Result<()> {
+        if !self.agg.same_schema(&r.body) {
+            bail!(
+                "aggregate: client {} returned mismatched schema ({} tensors vs {})",
+                r.client,
+                r.body.len(),
+                self.agg.len()
+            );
+        }
+        let w = weight_of(r);
+        for (name, t) in r.body.iter() {
+            self.fold_tensor(name, t, w)?;
+        }
+        self.client_done(w, r.body.len())
+    }
+
+    /// Results folded so far (including zero-weight ones).
+    pub fn folded(&self) -> usize {
+        self.folded
+    }
+
+    /// Cumulative weight so far.
+    pub fn total_weight(&self) -> f64 {
+        self.weight
+    }
+
+    /// Take the weighted mean of everything folded (plus its cumulative
+    /// weight), resetting the fold state. Errors if no weight arrived, or
+    /// if any f32 tensor's folded weight disagrees with the total (a
+    /// client stream that went missing partway).
+    pub fn take_mean(&mut self) -> Result<(TensorDict, f64)> {
+        if self.weight <= 0.0 {
+            bail!("aggregate: no samples reported");
+        }
+        for (name, t) in self.agg.iter() {
+            if t.as_f32().is_none() {
+                continue;
+            }
+            let wt = self.tensor_weight.get(name).copied().unwrap_or(0.0);
+            if (wt - self.weight).abs() > self.weight * 1e-9 {
+                bail!(
+                    "aggregate: tensor {name} folded weight {wt} != total {}",
+                    self.weight
+                );
+            }
+        }
+        let w = self.weight;
+        self.tensor_weight.clear();
+        self.weight = 0.0;
+        self.folded = 0;
+        Ok((std::mem::take(&mut self.agg), w))
+    }
+
+    /// Finish: the weighted mean of everything folded (consuming-`self`
+    /// convenience over [`StreamingMean::take_mean`]).
+    pub fn finish(mut self) -> Result<TensorDict> {
+        self.take_mean().map(|(m, _)| m)
+    }
+}
+
+impl Aggregator for StreamingMean {
+    fn name(&self) -> &'static str {
+        "fedavg"
+    }
+    fn begin_round(&mut self, global: &TensorDict, _round: usize) {
+        self.reset(global);
+    }
+    fn fold_tensor(&mut self, name: &str, t: &Tensor, w: f64) -> Result<()> {
+        StreamingMean::fold_tensor(self, name, t, w)
+    }
+    fn client_done(&mut self, w: f64, seen: usize) -> Result<()> {
+        StreamingMean::client_done(self, w, seen)
+    }
+    fn folded(&self) -> usize {
+        StreamingMean::folded(self)
+    }
+    fn total_weight(&self) -> f64 {
+        StreamingMean::total_weight(self)
+    }
+    fn finalize(&mut self) -> Result<TensorDict> {
+        self.take_mean().map(|(m, _)| m)
+    }
+    fn partial(&mut self) -> Result<(TensorDict, f64)> {
+        self.take_mean()
+    }
+}
+
+// --------------------------------------------------------------- fedprox
+
+/// Proximally damped aggregation: the round's model is the minimizer of
+/// `Σ (w_i/W)‖x − x_i‖² + μ‖x − x_g‖²`, i.e.
+///
+/// ```text
+/// x_next = x_g + (mean − x_g) / (1 + μ)
+/// ```
+///
+/// — the FedAvg mean pulled back toward the previous global model, the
+/// server-side mirror of FedProx's client proximal term. `μ = 0` is
+/// exactly FedAvg. Order-invariant because the inner fold is a
+/// [`StreamingMean`] and the damping runs once at finalize.
+pub struct FedProx {
+    pub mu: f64,
+    anchor: TensorDict,
+    inner: StreamingMean,
+}
+
+impl FedProx {
+    pub fn new(mu: f64) -> FedProx {
+        FedProx {
+            mu: mu.max(0.0),
+            anchor: TensorDict::new(),
+            inner: StreamingMean::new(&TensorDict::new()),
+        }
+    }
+}
+
+impl Aggregator for FedProx {
+    fn name(&self) -> &'static str {
+        "fedprox"
+    }
+    fn begin_round(&mut self, global: &TensorDict, _round: usize) {
+        self.anchor = global.clone();
+        self.inner.reset(global);
+    }
+    fn fold_tensor(&mut self, name: &str, t: &Tensor, w: f64) -> Result<()> {
+        self.inner.fold_tensor(name, t, w)
+    }
+    fn client_done(&mut self, w: f64, seen: usize) -> Result<()> {
+        self.inner.client_done(w, seen)
+    }
+    fn folded(&self) -> usize {
+        self.inner.folded()
+    }
+    fn total_weight(&self) -> f64 {
+        self.inner.total_weight()
+    }
+    fn finalize(&mut self) -> Result<TensorDict> {
+        let (mean, _w) = self.inner.take_mean()?;
+        let mut out = std::mem::take(&mut self.anchor);
+        if !out.same_schema(&mean) {
+            bail!("fedprox: round anchor and mean schema diverged");
+        }
+        // out += (mean - out) / (1 + mu); i32 tensors keep the anchor
+        out.lerp((1.0 / (1.0 + self.mu)) as f32, &mean);
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------- fedopt
+
+/// Which server optimizer steps the pseudo-gradient.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ServerOpt {
+    /// Classic momentum: `m = β·m + Δ`, `x += lr·m`.
+    Sgd { momentum: f64 },
+    /// Adam with bias correction:
+    /// `m = β1·m + (1−β1)·Δ`, `v = β2·v + (1−β2)·Δ²`,
+    /// `x += lr·m̂ / (√v̂ + ε)`.
+    Adam { beta1: f64, beta2: f64, eps: f64 },
+}
+
+/// FedOpt (Reddi et al. 2021): the round's weighted mean defines a
+/// pseudo-gradient `Δ = mean − x_g`, stepped through a server-side
+/// optimizer whose state (`m`, `v`, step count) persists across rounds —
+/// which is exactly why the [`Aggregator`] seam is long-lived rather than
+/// per-round. The inner fold is a [`StreamingMean`], so folding stays
+/// order-invariant; the optimizer runs once at finalize.
+pub struct FedOpt {
+    pub lr: f64,
+    pub opt: ServerOpt,
+    inner: StreamingMean,
+    anchor: TensorDict,
+    m: TensorDict,
+    v: TensorDict,
+    step: i32,
+}
+
+impl FedOpt {
+    pub fn sgd(lr: f64, momentum: f64) -> FedOpt {
+        FedOpt::with_opt(lr, ServerOpt::Sgd { momentum })
+    }
+
+    pub fn adam(lr: f64, beta1: f64, beta2: f64, eps: f64) -> FedOpt {
+        FedOpt::with_opt(lr, ServerOpt::Adam { beta1, beta2, eps })
+    }
+
+    pub fn with_opt(lr: f64, opt: ServerOpt) -> FedOpt {
+        FedOpt {
+            lr,
+            opt,
+            inner: StreamingMean::new(&TensorDict::new()),
+            anchor: TensorDict::new(),
+            m: TensorDict::new(),
+            v: TensorDict::new(),
+            step: 0,
+        }
+    }
+
+    /// Server-optimizer steps taken so far.
+    pub fn steps(&self) -> i32 {
+        self.step
+    }
+}
+
+impl Aggregator for FedOpt {
+    fn name(&self) -> &'static str {
+        match self.opt {
+            ServerOpt::Sgd { .. } => "fedopt-sgd",
+            ServerOpt::Adam { .. } => "fedopt-adam",
+        }
+    }
+    fn begin_round(&mut self, global: &TensorDict, _round: usize) {
+        self.anchor = global.clone();
+        self.inner.reset(global);
+    }
+    fn fold_tensor(&mut self, name: &str, t: &Tensor, w: f64) -> Result<()> {
+        self.inner.fold_tensor(name, t, w)
+    }
+    fn client_done(&mut self, w: f64, seen: usize) -> Result<()> {
+        self.inner.client_done(w, seen)
+    }
+    fn folded(&self) -> usize {
+        self.inner.folded()
+    }
+    fn total_weight(&self) -> f64 {
+        self.inner.total_weight()
+    }
+    fn finalize(&mut self) -> Result<TensorDict> {
+        let (mean, _w) = self.inner.take_mean()?;
+        let mut out = std::mem::take(&mut self.anchor);
+        if !out.same_schema(&mean) {
+            bail!("fedopt: round anchor and mean schema diverged");
+        }
+        // (re)create optimizer state on first use or schema change
+        if !self.m.same_schema(&out) {
+            self.m = out.zeros_like();
+            self.v = out.zeros_like();
+            self.step = 0;
+        }
+        self.step += 1;
+        for (name, t) in out.iter_mut() {
+            let Some(x) = t.as_f32_mut() else {
+                continue; // i32 tensors keep the anchor
+            };
+            let g = mean
+                .get(name)
+                .and_then(|u| u.as_f32())
+                .ok_or_else(|| anyhow!("fedopt: mean missing tensor {name}"))?;
+            let m = self
+                .m
+                .get_mut(name)
+                .and_then(|u| u.as_f32_mut())
+                .ok_or_else(|| anyhow!("fedopt: state missing tensor {name}"))?;
+            match self.opt {
+                ServerOpt::Sgd { momentum } => {
+                    let (beta, lr) = (momentum as f32, self.lr as f32);
+                    for j in 0..x.len() {
+                        let d = g[j] - x[j]; // pseudo-gradient (descent dir)
+                        m[j] = beta * m[j] + d;
+                        x[j] += lr * m[j];
+                    }
+                }
+                ServerOpt::Adam { beta1, beta2, eps } => {
+                    let v = self
+                        .v
+                        .get_mut(name)
+                        .and_then(|u| u.as_f32_mut())
+                        .ok_or_else(|| anyhow!("fedopt: state missing tensor {name}"))?;
+                    let (b1, b2) = (beta1 as f32, beta2 as f32);
+                    let bc1 = 1.0 - b1.powi(self.step);
+                    let bc2 = 1.0 - b2.powi(self.step);
+                    let (lr, eps) = (self.lr as f32, eps as f32);
+                    for j in 0..x.len() {
+                        let d = g[j] - x[j];
+                        m[j] = b1 * m[j] + (1.0 - b1) * d;
+                        v[j] = b2 * v[j] + (1.0 - b2) * d * d;
+                        x[j] += lr * (m[j] / bc1) / ((v[j] / bc2).sqrt() + eps);
+                    }
+                }
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::AggregatorSpec;
+    use crate::tensor::Tensor;
+    use crate::util::json::Json;
+
+    fn model(vals: &[f32]) -> TensorDict {
+        let mut d = TensorDict::new();
+        d.insert("w", Tensor::f32(vec![vals.len()], vals.to_vec()));
+        d
+    }
+
+    fn result(client: &str, vals: &[f32], n: f64) -> FlMessage {
+        FlMessage::result("train", 0, client, model(vals))
+            .with_meta("n_samples", Json::num(n))
+    }
+
+    /// Fold `results` in slice order through a fresh StreamingMean.
+    fn aggregate(schema: &TensorDict, results: &[FlMessage]) -> Result<TensorDict> {
+        let mut agg = StreamingMean::new(schema);
+        for r in results {
+            agg.fold(r)?;
+        }
+        agg.finish()
+    }
+
+    #[test]
+    fn aggregate_is_weighted_mean() {
+        let schema = model(&[0.0, 0.0]);
+        let results = vec![
+            result("a", &[1.0, 2.0], 100.0),
+            result("b", &[3.0, 6.0], 300.0),
+        ];
+        let agg = aggregate(&schema, &results).unwrap();
+        let v = agg.get("w").unwrap().as_f32().unwrap();
+        // weights 0.25 / 0.75
+        assert!((v[0] - 2.5).abs() < 1e-6);
+        assert!((v[1] - 5.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aggregate_defaults_to_uniform_weights() {
+        let schema = model(&[0.0]);
+        let results = vec![
+            FlMessage::result("train", 0, "a", model(&[2.0])),
+            FlMessage::result("train", 0, "b", model(&[4.0])),
+        ];
+        let agg = aggregate(&schema, &results).unwrap();
+        assert!((agg.get("w").unwrap().as_f32().unwrap()[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn aggregate_rejects_schema_mismatch() {
+        let schema = model(&[0.0, 0.0]);
+        let bad = vec![result("a", &[1.0], 1.0)]; // wrong shape
+        assert!(aggregate(&schema, &bad).is_err());
+    }
+
+    #[test]
+    fn aggregate_requires_positive_weight() {
+        let schema = model(&[0.0]);
+        assert!(aggregate(&schema, &[]).is_err());
+        let zeroed = vec![result("a", &[1.0], 0.0)];
+        assert!(aggregate(&schema, &zeroed).is_err());
+    }
+
+    #[test]
+    fn zero_weight_results_contribute_nothing() {
+        let schema = model(&[0.0]);
+        let results = vec![
+            result("a", &[2.0], 50.0),
+            result("b", &[100.0], 0.0), // ignored
+            result("c", &[4.0], 50.0),
+        ];
+        let agg = aggregate(&schema, &results).unwrap();
+        assert!((agg.get("w").unwrap().as_f32().unwrap()[0] - 3.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fold_tensor_rejects_unknown_and_mismatched_records() {
+        let mut agg = StreamingMean::new(&model(&[0.0, 0.0]));
+        let t = Tensor::f32(vec![2], vec![1.0, 2.0]);
+        assert!(agg.fold_tensor("nope", &t, 1.0).is_err());
+        let wrong = Tensor::f32(vec![3], vec![0.0; 3]);
+        assert!(agg.fold_tensor("w", &wrong, 1.0).is_err());
+        assert!(agg.fold_tensor("w", &t, 1.0).is_ok());
+        // a client that covered only part of the schema is rejected
+        assert!(agg.client_done(1.0, 0).is_err());
+        assert!(agg.client_done(1.0, 1).is_ok());
+    }
+
+    #[test]
+    fn finish_detects_partially_folded_tensors() {
+        // two tensors, but the "client" only streamed one before its
+        // bookkeeping was forced through — finish must notice the
+        // imbalance rather than return a skewed mean
+        let mut d = TensorDict::new();
+        d.insert("a", Tensor::f32(vec![1], vec![0.0]));
+        d.insert("b", Tensor::f32(vec![1], vec![0.0]));
+        let mut agg = StreamingMean::new(&d);
+        let t = Tensor::f32(vec![1], vec![2.0]);
+        agg.fold_tensor("a", &t, 5.0).unwrap();
+        agg.client_done(5.0, 2).unwrap(); // lies about coverage
+        assert!(agg.finish().is_err());
+    }
+
+    #[test]
+    fn prop_interleaved_tensor_folds_match_batch_path() {
+        // the tensor-granular fold: clients' records interleave at tensor
+        // granularity in arbitrary order; the result must equal the batch
+        // (whole-result) path and the f64 oracle
+        crate::util::prop::check("interleaved tensor folds", 30, |g| {
+            let n_tensors = g.usize_in(1, 4);
+            let len = g.usize_in(1, 30);
+            let k = g.usize_in(2, 5);
+            let mut schema = TensorDict::new();
+            for t in 0..n_tensors {
+                schema.insert(
+                    format!("t{t}"),
+                    Tensor::f32(vec![len], vec![0.0; len]),
+                );
+            }
+            let mut results = Vec::new();
+            for i in 0..k {
+                let mut body = TensorDict::new();
+                for t in 0..n_tensors {
+                    let vals: Vec<f32> = (0..len).map(|_| g.f32_in(-5.0, 5.0)).collect();
+                    body.insert(format!("t{t}"), Tensor::f32(vec![len], vals));
+                }
+                let n = g.usize_in(1, 1000) as f64;
+                results.push(
+                    FlMessage::result("train", 0, &format!("c{i}"), body)
+                        .with_meta("n_samples", Json::num(n)),
+                );
+            }
+            // batch path: whole results in order
+            let mut batch = StreamingMean::new(&schema);
+            for r in &results {
+                batch.fold(r).map_err(|e| e.to_string())?;
+            }
+            let batch = batch.finish().map_err(|e| e.to_string())?;
+            // interleaved path: all (client, tensor) records shuffled
+            let mut records: Vec<(usize, String)> = (0..k)
+                .flat_map(|i| (0..n_tensors).map(move |t| (i, format!("t{t}"))))
+                .collect();
+            g.rng().shuffle(&mut records);
+            let mut inter = StreamingMean::new(&schema);
+            for (i, name) in &records {
+                let r = &results[*i];
+                inter
+                    .fold_tensor(name, r.body.get(name).unwrap(), weight_of(r))
+                    .map_err(|e| e.to_string())?;
+            }
+            for r in &results {
+                inter
+                    .client_done(weight_of(r), n_tensors)
+                    .map_err(|e| e.to_string())?;
+            }
+            let inter = inter.finish().map_err(|e| e.to_string())?;
+            crate::util::prop::assert_that(
+                inter.max_abs_diff(&batch) < 1e-5,
+                "interleaved fold diverged from batch path",
+            )
+        });
+    }
+
+    #[test]
+    fn aggregate_matches_f64_oracle_property() {
+        crate::util::prop::check("streaming mean oracle", 40, |g| {
+            let len = g.usize_in(1, 50);
+            let k = g.usize_in(1, 5);
+            let mut results = Vec::new();
+            let mut weights = Vec::new();
+            for i in 0..k {
+                let vals: Vec<f32> = (0..len).map(|_| g.f32_in(-5.0, 5.0)).collect();
+                let n = g.usize_in(1, 1000) as f64;
+                results.push(result(&format!("c{i}"), &vals, n));
+                weights.push(n);
+            }
+            let agg = aggregate(&model(&vec![0.0; len]), &results)
+                .map_err(|e| e.to_string())?;
+            let got = agg.get("w").unwrap().as_f32().unwrap();
+            let total: f64 = weights.iter().sum();
+            for j in 0..len {
+                let oracle: f64 = results
+                    .iter()
+                    .zip(&weights)
+                    .map(|(r, w)| {
+                        r.body.get("w").unwrap().as_f32().unwrap()[j] as f64 * w / total
+                    })
+                    .sum();
+                crate::util::prop::assert_close(got[j] as f64, oracle, 1e-5, "agg elem")?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn completion_order_does_not_change_the_aggregate() {
+        // the streaming fold must match the old all-at-once weighted sum
+        // (and the f64 oracle) regardless of arrival order
+        crate::util::prop::check("fold order invariance", 30, |g| {
+            let len = g.usize_in(1, 40);
+            let k = g.usize_in(2, 6);
+            let mut results = Vec::new();
+            for i in 0..k {
+                let vals: Vec<f32> = (0..len).map(|_| g.f32_in(-5.0, 5.0)).collect();
+                let n = g.usize_in(1, 1000) as f64;
+                results.push(result(&format!("c{i}"), &vals, n));
+            }
+            let schema = model(&vec![0.0; len]);
+            // completion order: a random shuffle of dispatch order
+            let mut shuffled = results.clone();
+            g.rng().shuffle(&mut shuffled);
+            let streamed = aggregate(&schema, &shuffled).map_err(|e| e.to_string())?;
+            // old all-at-once path: axpy with the precomputed total
+            let total: f64 = results.iter().map(weight_of).sum();
+            let mut batch = schema.zeros_like();
+            for r in &results {
+                batch.axpy((weight_of(r) / total) as f32, &r.body);
+            }
+            let a = streamed.get("w").unwrap().as_f32().unwrap();
+            let b = batch.get("w").unwrap().as_f32().unwrap();
+            for j in 0..len {
+                crate::util::prop::assert_close(
+                    a[j] as f64,
+                    b[j] as f64,
+                    1e-5,
+                    "streamed vs batch elem",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    // ------------------------------------------- strategy-level oracles
+
+    /// Run `rounds` rounds of `results_per_round` through an aggregator,
+    /// folding each round's results in the given per-round orders.
+    fn run_rounds(
+        agg: &mut dyn Aggregator,
+        global0: &TensorDict,
+        rounds: &[Vec<FlMessage>],
+        order: impl Fn(usize, usize) -> usize,
+    ) -> Result<TensorDict> {
+        let mut global = global0.clone();
+        for (round, results) in rounds.iter().enumerate() {
+            agg.begin_round(&global, round);
+            for k in 0..results.len() {
+                let r = &results[order(round, k)];
+                let w = weight_of(r);
+                for (name, t) in r.body.iter() {
+                    agg.fold_tensor(name, t, w)?;
+                }
+                agg.client_done(w, r.body.len())?;
+            }
+            global = agg.finalize()?;
+        }
+        Ok(global)
+    }
+
+    fn specs_under_test() -> Vec<AggregatorSpec> {
+        vec![
+            AggregatorSpec::Mean,
+            AggregatorSpec::FedProx { mu: 0.3 },
+            AggregatorSpec::FedOptSgd { lr: 0.7, momentum: 0.9 },
+            AggregatorSpec::FedOptAdam {
+                lr: 0.1,
+                beta1: 0.9,
+                beta2: 0.99,
+                eps: 1e-3,
+            },
+        ]
+    }
+
+    #[test]
+    fn prop_every_aggregator_is_fold_order_invariant() {
+        // the acceptance oracle: for each strategy, folding a round's
+        // results in any completion order yields the same next model —
+        // including across rounds (FedOpt state must not leak order)
+        crate::util::prop::check("aggregator order invariance", 20, |g| {
+            let len = g.usize_in(1, 24);
+            let k = g.usize_in(2, 5);
+            let n_rounds = g.usize_in(1, 3);
+            let global = model(&vec![0.0; len]);
+            let mut rounds = Vec::new();
+            for _ in 0..n_rounds {
+                let mut results = Vec::new();
+                for i in 0..k {
+                    let vals: Vec<f32> = (0..len).map(|_| g.f32_in(-2.0, 2.0)).collect();
+                    results.push(result(&format!("c{i}"), &vals, g.usize_in(1, 500) as f64));
+                }
+                rounds.push(results);
+            }
+            let mut perms: Vec<Vec<usize>> = Vec::new();
+            for _ in 0..n_rounds {
+                let mut p: Vec<usize> = (0..k).collect();
+                g.rng().shuffle(&mut p);
+                perms.push(p);
+            }
+            for spec in specs_under_test() {
+                let mut a = build_aggregator(&spec);
+                let fwd = run_rounds(a.as_mut(), &global, &rounds, |_r, i| i)
+                    .map_err(|e| e.to_string())?;
+                let mut b = build_aggregator(&spec);
+                let shuf = run_rounds(b.as_mut(), &global, &rounds, |r, i| perms[r][i])
+                    .map_err(|e| e.to_string())?;
+                crate::util::prop::assert_that(
+                    fwd.max_abs_diff(&shuf) < 1e-4,
+                    "aggregator diverged under fold-order shuffle",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn fedprox_damps_toward_anchor() {
+        // one round, uniform clients at 2.0, anchor at 0.0, mu=1 -> 1.0
+        let global = model(&[0.0, 0.0]);
+        let rounds = vec![vec![
+            result("a", &[2.0, 2.0], 10.0),
+            result("b", &[2.0, 2.0], 10.0),
+        ]];
+        let mut agg = FedProx::new(1.0);
+        let out = run_rounds(&mut agg, &global, &rounds, |_r, i| i).unwrap();
+        let v = out.get("w").unwrap().as_f32().unwrap();
+        assert!((v[0] - 1.0).abs() < 1e-6, "{}", v[0]);
+        // mu = 0 is exactly the mean
+        let mut agg = FedProx::new(0.0);
+        let out = run_rounds(&mut agg, &global, &rounds, |_r, i| i).unwrap();
+        assert!((out.get("w").unwrap().as_f32().unwrap()[0] - 2.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn fedopt_sgd_accumulates_momentum_across_rounds() {
+        // clients always report anchor + 1.0, so the pseudo-gradient is
+        // 1.0 every round; with lr=1, beta=0.5 the per-round steps are
+        // m_1=1, m_2=1.5, m_3=1.75 -> model 1, 2.5, 4.25
+        let global = model(&[0.0]);
+        let mk = |base: f32| vec![result("a", &[base + 1.0], 1.0)];
+        let mut agg = FedOpt::sgd(1.0, 0.5);
+        let mut g = global.clone();
+        let mut seen = Vec::new();
+        for round in 0..3 {
+            let rounds = vec![mk(g.get("w").unwrap().as_f32().unwrap()[0])];
+            g = run_rounds(&mut agg, &g, &rounds, |_r, i| i).unwrap();
+            seen.push(g.get("w").unwrap().as_f32().unwrap()[0]);
+            assert_eq!(agg.steps(), round as i32 + 1);
+        }
+        let expect = [1.0f32, 2.5, 4.25];
+        for (s, e) in seen.iter().zip(expect) {
+            assert!((s - e).abs() < 1e-5, "{seen:?}");
+        }
+    }
+
+    #[test]
+    fn fedopt_adam_steps_are_bias_corrected_and_bounded() {
+        // constant pseudo-gradient d: bias-corrected m̂=d, v̂=d², so every
+        // step is lr·d/(|d|+eps) ≈ lr·sign(d)
+        let global = model(&[0.0, 0.0]);
+        let mut agg = FedOpt::adam(0.1, 0.9, 0.99, 1e-8);
+        let mut g = global.clone();
+        for _ in 0..4 {
+            let base: Vec<f32> = g.get("w").unwrap().as_f32().unwrap().to_vec();
+            let rounds =
+                vec![vec![result("a", &[base[0] + 2.0, base[1] - 2.0], 1.0)]];
+            g = run_rounds(&mut agg, &g, &rounds, |_r, i| i).unwrap();
+        }
+        let v = g.get("w").unwrap().as_f32().unwrap();
+        assert!((v[0] - 0.4).abs() < 1e-3, "{v:?}"); // 4 steps of +0.1
+        assert!((v[1] + 0.4).abs() < 1e-3, "{v:?}");
+    }
+
+    #[test]
+    fn partial_roundtrips_through_a_second_level() {
+        // hierarchical identity: folding two shards' partials at the root
+        // equals folding all four clients flat
+        let schema = model(&[0.0, 0.0]);
+        let clients = [
+            result("a", &[1.0, 0.0], 100.0),
+            result("b", &[3.0, 2.0], 300.0),
+            result("c", &[5.0, -2.0], 50.0),
+            result("d", &[7.0, 4.0], 150.0),
+        ];
+        let flat = aggregate(&schema, &clients).unwrap();
+        let mut root = StreamingMean::new(&schema);
+        for shard in clients.chunks(2) {
+            let mut mid = StreamingMean::new(&schema);
+            for r in shard {
+                mid.fold(r).unwrap();
+            }
+            let (mean, w) = Aggregator::partial(&mut mid).unwrap();
+            for (name, t) in mean.iter() {
+                root.fold_tensor(name, t, w).unwrap();
+            }
+            root.client_done(w, mean.len()).unwrap();
+        }
+        let tree = root.finish().unwrap();
+        assert!(flat.max_abs_diff(&tree) < 1e-5);
+    }
+
+    #[test]
+    fn non_mean_aggregators_refuse_partials() {
+        let mut fp = FedProx::new(0.1);
+        fp.begin_round(&model(&[0.0]), 0);
+        fp.fold_tensor("w", &Tensor::f32(vec![1], vec![1.0]), 1.0)
+            .unwrap();
+        fp.client_done(1.0, 1).unwrap();
+        assert!(Aggregator::partial(&mut fp).is_err());
+        let mut fo = FedOpt::sgd(1.0, 0.9);
+        fo.begin_round(&model(&[0.0]), 0);
+        assert!(Aggregator::partial(&mut fo).is_err());
+    }
+
+    #[test]
+    fn build_aggregator_matches_specs() {
+        assert_eq!(build_aggregator(&AggregatorSpec::Mean).name(), "fedavg");
+        assert_eq!(
+            build_aggregator(&AggregatorSpec::FedProx { mu: 0.1 }).name(),
+            "fedprox"
+        );
+        assert_eq!(
+            build_aggregator(&AggregatorSpec::FedOptSgd { lr: 1.0, momentum: 0.9 }).name(),
+            "fedopt-sgd"
+        );
+        assert_eq!(
+            build_aggregator(&AggregatorSpec::FedOptAdam {
+                lr: 0.01,
+                beta1: 0.9,
+                beta2: 0.99,
+                eps: 1e-3
+            })
+            .name(),
+            "fedopt-adam"
+        );
+    }
+}

@@ -1,0 +1,226 @@
+//! Hierarchical aggregation: a tree of aggregator nodes between the FL
+//! server and the clients, the scaling direction the paper argues for —
+//! root fan-in drops from N client streams to ⌈N/B⌉ partials at
+//! `--branching B`, while every link still carries the v2 tensor-record
+//! wire format and every fold keeps the streaming-memory property.
+//!
+//! ```text
+//!                 root (ScatterAndGather + any Aggregator)
+//!               /  |  \
+//!        agg-000 agg-001 ...          mid-tier nodes (StreamingMean)
+//!        / | \    / | \
+//!      c0 c1 c2  cB ...               leaf clients (Executors)
+//! ```
+//!
+//! A [`MidTier`] node is a client to its upstream (it registers and
+//! receives tasks like any site) and a server to its shard (it owns a
+//! [`Communicator`] over its leaf connections). Per task it re-broadcasts
+//! the global model down, folds the shard's updates tensor record by
+//! tensor record into a [`StreamingMean`], and forwards **one serialized
+//! partial** upstream: a [`Kind::Partial`] message whose body is the
+//! shard's weighted mean and whose `n_samples` meta is the shard's
+//! cumulative weight. Folding that partial upstream as a single weighted
+//! record stream is exactly equivalent to folding the shard's clients
+//! there (see [`Aggregator::partial`]) — so the root merges partials
+//! order-invariantly, and FedProx/FedOpt transforms still run exactly
+//! once, at the root.
+
+use anyhow::{anyhow, Result};
+
+use super::{Aggregator, Communicator, GatherPolicy, StreamingMean};
+use crate::config::FilterSpec;
+use crate::message::{FlMessage, Kind};
+use crate::streaming::Messenger;
+use crate::tensor::TensorDict;
+use crate::util::json::Json;
+
+/// Split `n` leaves into contiguous shards of at most `branching` each —
+/// the 2-level tree plan: one mid-tier node per shard, ⌈n/branching⌉
+/// shards total.
+pub fn shard_plan(n: usize, branching: usize) -> Vec<std::ops::Range<usize>> {
+    assert!(branching > 0, "branching must be > 0");
+    let mut shards = Vec::with_capacity(n.div_ceil(branching));
+    let mut start = 0;
+    while start < n {
+        let end = (start + branching).min(n);
+        shards.push(start..end);
+        start = end;
+    }
+    shards
+}
+
+/// Weighted-mean accumulator for one scalar shard metric (present-only:
+/// clients that did not report the metric contribute nothing).
+#[derive(Default)]
+struct MetricMean {
+    sum: f64,
+    n: f64,
+}
+
+impl MetricMean {
+    fn add(&mut self, v: Option<f64>) {
+        if let Some(v) = v {
+            if v.is_finite() {
+                self.sum += v;
+                self.n += 1.0;
+            }
+        }
+    }
+    fn mean(&self) -> Option<f64> {
+        (self.n > 0.0).then(|| self.sum / self.n)
+    }
+}
+
+/// One mid-tier aggregator node (see module docs).
+pub struct MidTier {
+    pub name: String,
+    upstream: Messenger,
+    comm: Communicator,
+    /// Receive-filter mirror for the shard's result streams (the same
+    /// trailing-codec chain the root would apply in a flat topology —
+    /// partials forwarded upstream are plain f32 and need no mirror).
+    recv_filters: Vec<FilterSpec>,
+    /// Gather policy for the shard. Strict by default; the simulator
+    /// threads the job's straggler timeout down with a quorum of 1, so a
+    /// stalled leaf costs only its own contribution (the shard forwards a
+    /// reduced-weight partial) instead of wedging the whole subtree.
+    pub policy: GatherPolicy,
+}
+
+impl MidTier {
+    pub fn new(
+        name: &str,
+        upstream: Messenger,
+        comm: Communicator,
+        recv_filters: Vec<FilterSpec>,
+        policy: GatherPolicy,
+    ) -> MidTier {
+        MidTier {
+            name: name.to_string(),
+            upstream,
+            comm,
+            recv_filters,
+            policy,
+        }
+    }
+
+    /// Register upstream, then serve tasks until the upstream says bye:
+    /// re-broadcast each task to the shard, fold the shard's updates, and
+    /// forward the serialized partial. Returns the number of rounds
+    /// served.
+    ///
+    /// A round that fails locally (e.g. the whole shard timed out or
+    /// died) does **not** go silent — the node forwards an empty-bodied
+    /// error marker instead, which the upstream gather rejects as a
+    /// malformed stream and attributes as this node's failure. The
+    /// upstream must always receive exactly one reply per task, or its
+    /// worker would block forever on a partial that never comes.
+    pub fn run(mut self) -> Result<usize> {
+        self.upstream
+            .send_msg(&FlMessage::register(&self.name))
+            .map_err(|e| anyhow!("{}: register upstream: {e}", self.name))?;
+        let mut rounds = 0usize;
+        loop {
+            let task = self
+                .upstream
+                .recv_msg()
+                .map_err(|e| anyhow!("{}: recv task: {e}", self.name))?;
+            if task.kind == Kind::Bye {
+                self.comm.shutdown();
+                return Ok(rounds);
+            }
+            let up = match self.serve_round(&task) {
+                Ok(up) => up,
+                Err(e) => {
+                    log::warn!("{}: round {} failed: {e}", self.name, task.round);
+                    FlMessage::result(&task.task, task.round, &self.name, TensorDict::new())
+                        .with_meta("error", Json::str(e.to_string()))
+                }
+            };
+            self.upstream
+                .send_msg(&up)
+                .map_err(|e| anyhow!("{}: send partial: {e}", self.name))?;
+            rounds += 1;
+        }
+    }
+
+    /// One round: broadcast `task` to every shard client, fold the
+    /// updates into a fresh [`StreamingMean`], and return the partial
+    /// message to forward upstream.
+    fn serve_round(&mut self, task: &FlMessage) -> Result<FlMessage> {
+        let targets: Vec<usize> = (0..self.comm.n_clients()).collect();
+        let agg: Box<dyn Aggregator> = Box::new(StreamingMean::new(&task.body));
+        let (mut val_loss, mut val_acc, mut train_loss) = (
+            MetricMean::default(),
+            MetricMean::default(),
+            MetricMean::default(),
+        );
+        let mut agg = self.comm.broadcast_and_fold(
+            task,
+            &targets,
+            agg,
+            &self.recv_filters,
+            &self.policy,
+            |r| {
+                val_loss.add(r.metric("val_loss"));
+                val_acc.add(r.metric("val_acc"));
+                train_loss.add(r.metric("train_loss"));
+                Ok(())
+            },
+        )?;
+        let n_children = agg.folded();
+        let (mean, weight) = agg.partial()?;
+        let mut up = FlMessage {
+            kind: Kind::Partial,
+            task: task.task.clone(),
+            round: task.round,
+            client: self.name.clone(),
+            meta: Json::obj([]),
+            body: mean,
+        }
+        .with_meta("n_samples", Json::num(weight))
+        .with_meta("n_children", Json::num(n_children as f64));
+        if let Some(v) = val_loss.mean() {
+            up = up.with_meta("val_loss", Json::num(v));
+        }
+        if let Some(v) = val_acc.mean() {
+            up = up.with_meta("val_acc", Json::num(v));
+        }
+        if let Some(v) = train_loss.mean() {
+            up = up.with_meta("train_loss", Json::num(v));
+        }
+        Ok(up)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shard_plan_covers_all_leaves_at_most_branching_each() {
+        for (n, b) in [(512usize, 16usize), (7, 3), (16, 16), (5, 8), (1, 1)] {
+            let shards = shard_plan(n, b);
+            assert_eq!(shards.len(), n.div_ceil(b), "n={n} b={b}");
+            let mut covered = 0;
+            for s in &shards {
+                assert!(s.end - s.start <= b);
+                assert!(s.end - s.start > 0);
+                assert_eq!(s.start, covered, "contiguous");
+                covered = s.end;
+            }
+            assert_eq!(covered, n);
+        }
+    }
+
+    #[test]
+    fn metric_mean_ignores_missing_and_nan() {
+        let mut m = MetricMean::default();
+        assert_eq!(m.mean(), None);
+        m.add(Some(2.0));
+        m.add(None);
+        m.add(Some(f64::NAN));
+        m.add(Some(4.0));
+        assert_eq!(m.mean(), Some(3.0));
+    }
+}

@@ -1,8 +1,17 @@
-//! Server-side coordination (paper §2.1/§2.3): the Controller programming
-//! model, the Communicator, and the built-in workflows.
+//! Server-side coordination (paper §2.1/§2.3), layered as
+//! Controller / Workflow / Aggregator:
 //!
-//! A [`Controller`] runs on the FL server and drives [`Executor`]s on the
-//! clients through tasks — mirroring the paper's Listing 3:
+//! * [`Controller`] — the run-a-job trait (paper's Controller base class).
+//! * [`ScatterAndGather`] — the generic workflow: sampling, quorum,
+//!   straggler timeout, model bookkeeping (FedAvg is this workflow with a
+//!   [`StreamingMean`] aggregator; see [`sag`]).
+//! * [`Aggregator`] — the pluggable aggregation strategy
+//!   ([`StreamingMean`], [`FedProx`], [`FedOpt`]; see [`aggregator`]).
+//! * [`hierarchy`] — mid-tier aggregator nodes for tree topologies: each
+//!   folds its client shard and forwards one serialized partial upstream.
+//!
+//! The [`Communicator`] drives [`Executor`](crate::executor::Executor)s on
+//! the clients through tasks — mirroring the paper's Listing 3:
 //!
 //! ```text
 //! for round in 0..num_rounds {
@@ -30,24 +39,34 @@
 //!
 //! Aggregation itself is **tensor-granular**:
 //! [`Communicator::broadcast_and_fold`] streams every client's result
-//! record by record (wire format v2) straight into one [`StreamingMean`]
-//! — each tensor is decoded, filtered
+//! record by record (wire format v2) straight into one [`Aggregator`] —
+//! each tensor is decoded, filtered
 //! ([`crate::filters::Filter::on_receive_tensor`]), folded, and dropped
 //! the moment its frames arrive, so no decoded client result is ever
-//! staged whole and server peak memory is O(model + largest tensor +
-//! in-flight chunks).
+//! staged whole and server peak memory is O(model + in-flight tensor +
+//! chunks). A [`GatherPolicy`] adds quorum and straggler-timeout
+//! semantics on top: a round may finalize from the clients already folded
+//! while a stalled client's late result is drained and discarded.
 
-mod fedavg;
+mod aggregator;
+mod hierarchy;
+mod sag;
 mod workflows;
 
-pub use fedavg::{FedAvg, RoundMetrics, StreamingMean};
+pub use aggregator::{
+    build_aggregator, weight_of, Aggregator, FedOpt, FedProx, ServerOpt, StreamingMean,
+};
+pub use hierarchy::{shard_plan, MidTier};
+pub use sag::{FedAvg, RoundMetrics, SamplePolicy, ScatterAndGather};
 pub use workflows::{CyclicWeightTransfer, FederatedEval, FederatedInference};
 
-use std::sync::mpsc::{Receiver, Sender};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Result};
 
+use crate::config::FilterSpec;
 use crate::filters::Filter;
 use crate::message::{FlMessage, Kind};
 use crate::metrics::MetricsSink;
@@ -102,27 +121,105 @@ impl Drop for FlowPermit {
 
 /// Shared fold target of a **tensor-granular** gather: every client
 /// worker folds each received tensor record straight into the single
-/// accumulator, holding the agg lock only for that tensor's lerp. No
-/// decoded client result is ever staged whole — server peak memory is the
+/// aggregator, holding the lock only for that tensor's fold. No decoded
+/// client result is ever staged whole — server peak memory is the
 /// accumulator plus O(in-flight tensor records).
-pub struct TensorFold {
-    agg: Mutex<StreamingMean>,
+///
+/// The aggregator sits in an `Option` so the gather consumer can
+/// **detach** it (reclaiming it by value once no stream is mid-fold);
+/// a straggler worker that still streams after the round closed finds
+/// `None` and drains its records into the void — the "discard, don't
+/// fold into the next round" half of the straggler-timeout semantics.
+struct FoldState {
+    agg: Option<Box<dyn Aggregator>>,
+    /// Streams that folded ≥ 1 record and are not yet accounted: the
+    /// consumer only detaches the aggregator when this is zero, so a
+    /// partially-folded stream is always either completed or poisoning.
+    active: usize,
+    /// A started stream died without completing — the aggregator holds
+    /// un-unfoldable partial contributions and the round must fail.
+    poisoned: bool,
 }
 
-/// A worker's share of one tensor-granular gather: the shared accumulator
+pub struct TensorFold {
+    state: Mutex<FoldState>,
+}
+
+/// A worker's share of one tensor-granular gather: the shared fold target
 /// plus its **own** receive filter chain
 /// ([`Filter::on_receive_tensor`], e.g. per-record dequantization) — per
-/// worker, so filter work off the agg lock runs concurrently across
+/// worker, so filter work off the fold lock runs concurrently across
 /// clients and no filter state is accidentally shared between them.
 struct FoldTask {
     shared: Arc<TensorFold>,
     filters: Vec<Box<dyn Filter>>,
+    counter: Arc<mem::Counter>,
+    /// This worker's current stream folded ≥ 1 record and has not been
+    /// accounted yet (mirrors `FoldState::active`).
+    started: bool,
+}
+
+impl FoldTask {
+    /// Fold one received tensor record into the shared aggregator (or
+    /// drain it silently if the round already closed).
+    fn fold_record(
+        &mut self,
+        head: &FlMessage,
+        name: String,
+        tensor: crate::tensor::Tensor,
+    ) -> Result<(), StreamError> {
+        let _in_flight = mem::GatherGuard::scoped(&self.counter, tensor.byte_size());
+        let w = aggregator::weight_of(head);
+        let t = self
+            .filters
+            .iter_mut()
+            .fold(tensor, |t, flt| flt.on_receive_tensor(&name, t, head.round));
+        let mut st = self.shared.state.lock().unwrap();
+        let Some(agg) = st.agg.as_mut() else {
+            return Ok(()); // round closed: discard the straggler's record
+        };
+        if !self.started {
+            self.started = true;
+            st.active += 1;
+        }
+        agg.fold_tensor(&name, &t, w)
+            .map_err(|e| StreamError::Protocol(e.to_string()))
+    }
+
+    /// Account this worker's finished stream.
+    fn finish_stream(&mut self, head: &FlMessage, seen: usize) -> Result<(), StreamError> {
+        let mut st = self.shared.state.lock().unwrap();
+        if self.started {
+            self.started = false;
+            st.active -= 1;
+        }
+        let Some(agg) = st.agg.as_mut() else {
+            return Ok(()); // round closed: result discarded
+        };
+        agg.client_done(aggregator::weight_of(head), seen)
+            .map_err(|e| StreamError::Protocol(e.to_string()))
+    }
+}
+
+impl Drop for FoldTask {
+    fn drop(&mut self) {
+        if self.started {
+            // the stream died (or errored) mid-fold: its records cannot be
+            // unfolded, so if the round is still open its aggregate is lost
+            let mut st = self.shared.state.lock().unwrap();
+            st.active -= 1;
+            if st.agg.is_some() {
+                st.poisoned = true;
+            }
+        }
+    }
 }
 
 /// Accounting and flow-control baggage riding with each gathered result:
-/// counts the decoded bytes against [`mem::gather_bytes`] and (for
-/// bounded gathers) occupies one in-flight slot — both released when the
-/// consumer drops it after folding.
+/// counts the decoded bytes against [`mem::gather_bytes`] (and the
+/// gather's own [`mem::Counter`]) and (for bounded gathers) occupies one
+/// in-flight slot — both released when the consumer drops it after
+/// folding.
 pub struct HeldResult {
     _bytes: mem::GatherGuard,
     _permit: Option<FlowPermit>,
@@ -144,6 +241,9 @@ struct WorkerTask {
     reply: Sender<Reply>,
     gate: Option<Arc<FlowGate>>,
     fold: Option<FoldTask>,
+    /// The dispatching communicator's gather counter (None for control
+    /// dispatches like byes).
+    counter: Option<Arc<mem::Counter>>,
 }
 
 /// Server-side handle to one connected client: a worker thread owns the
@@ -164,7 +264,9 @@ impl ClientHandle {
         let worker = std::thread::Builder::new()
             .name(format!("client-io-{wname}"))
             .spawn(move || {
-                while let Ok(WorkerTask { msg, tag, reply, gate, mut fold }) = task_rx.recv() {
+                while let Ok(WorkerTask { msg, tag, reply, gate, mut fold, counter }) =
+                    task_rx.recv()
+                {
                     let is_bye = msg.kind == Kind::Bye;
                     let outcome = (|| -> Result<(FlMessage, Option<FlowPermit>), StreamError> {
                         messenger.send_msg(&msg)?;
@@ -183,43 +285,31 @@ impl ClientHandle {
                             Some(ft) => {
                                 // tensor-granular: run each record through
                                 // this worker's own filter chain (no lock),
-                                // fold it into the shared accumulator the
+                                // fold it into the shared aggregator the
                                 // moment its frames arrive, then drop it
                                 let mut seen = 0usize;
                                 let head = messenger.recv_msg_stream(|head, name, tensor| {
-                                    let _in_flight =
-                                        mem::GatherGuard::new(tensor.byte_size());
-                                    let w = StreamingMean::weight_of(head);
-                                    let t = ft.filters.iter_mut().fold(tensor, |t, flt| {
-                                        flt.on_receive_tensor(&name, t, head.round)
-                                    });
-                                    ft.shared
-                                        .agg
-                                        .lock()
-                                        .unwrap()
-                                        .fold_tensor(&name, &t, w)
-                                        .map_err(|e| StreamError::Protocol(e.to_string()))?;
+                                    ft.fold_record(head, name, tensor)?;
                                     seen += 1;
                                     Ok(())
                                 })?;
-                                ft.shared
-                                    .agg
-                                    .lock()
-                                    .unwrap()
-                                    .client_done(StreamingMean::weight_of(&head), seen)
-                                    .map_err(|e| StreamError::Protocol(e.to_string()))?;
+                                ft.finish_stream(&head, seen)?;
                                 Ok((head, permit))
                             }
                         }
                     })();
                     // release the fold share *before* replying, so the
-                    // gather that sees the last reply can reclaim the
-                    // accumulator without racing this worker
+                    // gather that sees the last reply observes a settled
+                    // fold state
                     drop(fold);
                     let outcome = outcome
                         .map(|(m, permit)| {
+                            let bytes = match &counter {
+                                Some(c) => mem::GatherGuard::scoped(c, m.body.byte_size()),
+                                None => mem::GatherGuard::new(m.body.byte_size()),
+                            };
                             let held = HeldResult {
-                                _bytes: mem::GatherGuard::new(m.body.byte_size()),
+                                _bytes: bytes,
                                 _permit: permit,
                             };
                             (m, held)
@@ -248,6 +338,7 @@ impl ClientHandle {
         reply: Sender<Reply>,
         gate: Option<Arc<FlowGate>>,
         fold: Option<FoldTask>,
+        counter: Option<Arc<mem::Counter>>,
     ) -> Result<()> {
         self.task_tx
             .send(WorkerTask {
@@ -256,6 +347,7 @@ impl ClientHandle {
                 reply,
                 gate,
                 fold,
+                counter,
             })
             .map_err(|_| anyhow!("client {} worker gone", self.name))
     }
@@ -265,7 +357,7 @@ impl Drop for ClientHandle {
     fn drop(&mut self) {
         // best-effort bye so the peer's loop can exit
         let (reply, _ack) = std::sync::mpsc::channel();
-        let _ = self.dispatch(FlMessage::bye(), 0, reply, None, None);
+        let _ = self.dispatch(FlMessage::bye(), 0, reply, None, None, None);
         if let Some(w) = self.worker.take() {
             let _ = w.join();
         }
@@ -293,10 +385,56 @@ pub struct GatheredResult {
     pub held: HeldResult,
 }
 
+/// One observation of a gather in progress.
+pub enum GatherEvent {
+    /// A client completed; its result (header, for fold gathers).
+    Result(GatheredResult),
+    /// A client's task failed (attributed error text). The gather keeps
+    /// yielding the remaining clients.
+    Failure(String),
+    /// The deadline passed before the next reply.
+    TimedOut,
+    /// Every worker dropped its reply sender without reporting.
+    Disconnected,
+}
+
 impl Gather {
     /// Results not yet yielded.
     pub fn remaining(&self) -> usize {
         self.remaining
+    }
+
+    /// Block for the next event, optionally up to `deadline`.
+    pub fn next_event(&mut self, deadline: Option<Instant>) -> GatherEvent {
+        if self.remaining == 0 {
+            return GatherEvent::Disconnected;
+        }
+        let reply = match deadline {
+            None => self.rx.recv().map_err(|_| RecvTimeoutError::Disconnected),
+            Some(d) => {
+                let now = Instant::now();
+                if now >= d {
+                    return GatherEvent::TimedOut;
+                }
+                self.rx.recv_timeout(d - now)
+            }
+        };
+        match reply {
+            Ok((pos, Ok((msg, held)))) => {
+                self.remaining -= 1;
+                GatherEvent::Result(GatheredResult { pos, msg, held })
+            }
+            Ok((pos, Err(e))) => {
+                self.remaining -= 1;
+                let name = self.names.get(pos).map(String::as_str).unwrap_or("?");
+                GatherEvent::Failure(format!("client {name}: {e}"))
+            }
+            Err(RecvTimeoutError::Timeout) => GatherEvent::TimedOut,
+            Err(RecvTimeoutError::Disconnected) => {
+                self.remaining = 0;
+                GatherEvent::Disconnected
+            }
+        }
     }
 
     /// Block for the next arriving result, in completion order. Returns
@@ -305,37 +443,66 @@ impl Gather {
         if self.remaining == 0 {
             return None;
         }
-        match self.rx.recv() {
-            Ok((pos, Ok((msg, held)))) => {
-                self.remaining -= 1;
-                Some(Ok(GatheredResult { pos, msg, held }))
-            }
-            Ok((pos, Err(e))) => {
-                self.remaining -= 1;
-                let name = self.names.get(pos).map(String::as_str).unwrap_or("?");
-                Some(Err(anyhow!("client {name}: {e}")))
-            }
-            Err(_) => {
-                // every worker dropped its reply sender without reporting
-                self.remaining = 0;
+        match self.next_event(None) {
+            GatherEvent::Result(r) => Some(Ok(r)),
+            GatherEvent::Failure(e) => Some(Err(anyhow!(e))),
+            GatherEvent::Disconnected | GatherEvent::TimedOut => {
                 Some(Err(anyhow!("client workers disconnected mid-gather")))
             }
         }
     }
 }
 
+/// Quorum/timeout policy of one tensor-granular gather (see
+/// [`Communicator::broadcast_and_fold`]).
+#[derive(Debug, Clone, Default)]
+pub struct GatherPolicy {
+    /// Results required for the gather to succeed (0 = every target).
+    /// Client failures are tolerated while the quorum stays reachable.
+    pub quorum: usize,
+    /// Deadline for the gather. When it passes with the quorum met, the
+    /// round finalizes from the clients already folded; stragglers are
+    /// abandoned (their late results are drained and discarded). When it
+    /// passes below quorum, the gather fails.
+    pub timeout: Option<Duration>,
+}
+
+impl GatherPolicy {
+    /// Require every target, wait forever — the classic strict gather.
+    pub fn all() -> GatherPolicy {
+        GatherPolicy::default()
+    }
+}
+
+/// Deterministic per-(seed, round) sample of `n` distinct indices from
+/// `[0, pool)` — a pure function of its arguments, so resumed and
+/// hierarchical runs sample identically no matter how many times or in
+/// what order rounds ask for their participants.
+pub fn sample_indices(seed: u64, round: usize, pool: usize, n: usize) -> Vec<usize> {
+    let mut rng = Rng::new(
+        (seed ^ 0xC0_0515).wrapping_add((round as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15)),
+    );
+    rng.choose(pool, n)
+}
+
 /// The communicator native to each Controller (paper Listing 3's
 /// `self.communicator`).
 pub struct Communicator {
     clients: Vec<ClientHandle>,
-    rng: Rng,
+    seed: u64,
+    /// This communicator's own gather accounting (alongside the global
+    /// [`mem::gather_bytes`]): in a hierarchical simulation every node's
+    /// folds share the process-global counter, so per-node peaks — e.g.
+    /// "root fan-in memory stays flat" — are read from here.
+    counter: Arc<mem::Counter>,
 }
 
 impl Communicator {
     pub fn new(clients: Vec<ClientHandle>, seed: u64) -> Communicator {
         Communicator {
             clients,
-            rng: Rng::new(seed ^ 0xC0_0515),
+            seed,
+            counter: Arc::new(mem::Counter::new()),
         }
     }
 
@@ -347,17 +514,24 @@ impl Communicator {
         self.clients.iter().map(|c| c.name.clone()).collect()
     }
 
-    /// Random subset of `min_clients` distinct client indices (the paper's
-    /// `sample_clients`, with the "optional random sampling strategy").
-    pub fn sample_clients(&mut self, min_clients: usize) -> Result<Vec<usize>> {
-        if min_clients > self.clients.len() {
+    /// This node's gather counter (current + peak decoded in-flight
+    /// bytes of gathers dispatched by this communicator).
+    pub fn gather_counter(&self) -> Arc<mem::Counter> {
+        self.counter.clone()
+    }
+
+    /// Random subset of `n` distinct client indices (the paper's
+    /// `sample_clients` with the "optional random sampling strategy") —
+    /// deterministic per (communicator seed, round).
+    pub fn sample_clients(&self, n: usize, round: usize) -> Result<Vec<usize>> {
+        if n > self.clients.len() {
             bail!(
-                "min_clients {} > connected clients {}",
-                min_clients,
+                "sample_clients: {} > connected clients {}",
+                n,
                 self.clients.len()
             );
         }
-        Ok(self.rng.choose(self.clients.len(), min_clients))
+        Ok(sample_indices(self.seed, round, self.clients.len(), n))
     }
 
     /// Start a broadcast: send `task` to every target concurrently (each
@@ -400,7 +574,14 @@ impl Communicator {
                 .ok_or_else(|| anyhow!("broadcast: no client at index {t}"))?;
             let mut msg = task.clone();
             msg.client = client.name.clone();
-            client.dispatch(msg, pos, reply_tx.clone(), gate.clone(), fold(pos))?;
+            client.dispatch(
+                msg,
+                pos,
+                reply_tx.clone(),
+                gate.clone(),
+                fold(pos),
+                Some(self.counter.clone()),
+            )?;
             names.push(client.name.clone());
         }
         Ok(Gather {
@@ -419,43 +600,138 @@ impl Communicator {
     /// Concurrent receivers are capped at [`STREAM_INFLIGHT`], bounding
     /// staging to O(largest tensor + in-flight chunks) per slot.
     ///
-    /// `on_header` runs once per client (completion order) with the
-    /// body-less result header, for metric collection. Any client failing
-    /// mid-stream fails the whole gather — the partially-folded
-    /// accumulator is discarded with the error.
+    /// `on_header` runs once per folded client (completion order) with
+    /// the body-less result header, for metric collection.
+    ///
+    /// `policy` sets quorum/timeout semantics. With the default
+    /// ([`GatherPolicy::all`]) any client failing fails the whole gather.
+    /// With a quorum, failures are tolerated while the quorum stays
+    /// reachable, and at the deadline a met quorum finalizes the round:
+    /// stragglers that never started streaming are abandoned outright
+    /// (their late results fold into nothing and are discarded), while a
+    /// stream already mid-fold is drained to completion first so the
+    /// aggregate stays consistent. A stream that *dies* mid-fold poisons
+    /// the round (its records cannot be unfolded) and the gather errors.
     pub fn broadcast_and_fold(
         &mut self,
         task: &FlMessage,
         targets: &[usize],
-        agg: StreamingMean,
-        recv_filters: &[crate::config::FilterSpec],
+        agg: Box<dyn Aggregator>,
+        recv_filters: &[FilterSpec],
+        policy: &GatherPolicy,
         mut on_header: impl FnMut(&FlMessage) -> Result<()>,
-    ) -> Result<StreamingMean> {
+    ) -> Result<Box<dyn Aggregator>> {
+        let quorum = if policy.quorum == 0 {
+            targets.len()
+        } else {
+            policy.quorum.min(targets.len())
+        };
         let gate = if STREAM_INFLIGHT >= targets.len() {
             None
         } else {
             Some(FlowGate::new(STREAM_INFLIGHT))
         };
         let fold = Arc::new(TensorFold {
-            agg: Mutex::new(agg),
+            state: Mutex::new(FoldState {
+                agg: Some(agg),
+                active: 0,
+                poisoned: false,
+            }),
         });
         let n = targets.len().max(1);
+        let counter = self.counter.clone();
         let mut gather = self.start_gather(task, targets, gate, |pos| {
             Some(FoldTask {
                 shared: fold.clone(),
                 filters: crate::filters::build_chain(recv_filters, pos, n),
+                counter: counter.clone(),
+                started: false,
             })
         })?;
-        while let Some(next) = gather.next_result() {
-            let r = next?;
-            on_header(&r.msg)?;
-            drop(r.held);
+        let deadline = policy.timeout.map(|t| Instant::now() + t);
+        let mut completed = 0usize;
+        let mut failures: Vec<String> = Vec::new();
+        let mut timed_out = false;
+        while gather.remaining() > 0 {
+            match gather.next_event(deadline) {
+                GatherEvent::Result(r) => {
+                    on_header(&r.msg)?;
+                    completed += 1;
+                    drop(r.held);
+                }
+                GatherEvent::Failure(e) => {
+                    log::warn!("gather: {e}");
+                    failures.push(e);
+                    if targets.len() - failures.len() < quorum {
+                        bail!(
+                            "gather: {}/{} clients failed, quorum {quorum} unreachable: {}",
+                            failures.len(),
+                            targets.len(),
+                            failures.join("; ")
+                        );
+                    }
+                }
+                GatherEvent::Disconnected => {
+                    bail!("client workers disconnected mid-gather")
+                }
+                GatherEvent::TimedOut => {
+                    timed_out = true;
+                    break;
+                }
+            }
         }
-        // every worker dropped its share before its final reply, so the
-        // accumulator is exclusively ours again
-        let fold = Arc::try_unwrap(fold)
-            .map_err(|_| anyhow!("tensor fold still shared after gather drained"))?;
-        Ok(fold.agg.into_inner().unwrap())
+        if timed_out {
+            if completed < quorum {
+                bail!(
+                    "gather timed out with {completed} of the {quorum} required results \
+                     ({} stragglers)",
+                    gather.remaining()
+                );
+            }
+            log::warn!(
+                "gather timed out; finalizing with {completed}/{} results, abandoning {} \
+                 straggler(s)",
+                targets.len(),
+                gather.remaining()
+            );
+        }
+        // Reclaim the aggregator once no stream is mid-fold. Streams still
+        // actively folding (rare at a timeout: at most the flow gate's
+        // in-flight receivers) are drained to completion so their partial
+        // contributions never skew the aggregate.
+        loop {
+            {
+                let mut st = fold.state.lock().unwrap();
+                if st.poisoned {
+                    bail!(
+                        "a client stream failed after partially folding; the round's \
+                         aggregate is unrecoverable"
+                    );
+                }
+                if st.active == 0 {
+                    let agg = st.agg.take().expect("aggregator detached once");
+                    return Ok(agg);
+                }
+            }
+            if gather.remaining() > 0 {
+                match gather.next_event(Some(Instant::now() + Duration::from_millis(20))) {
+                    GatherEvent::Result(r) => {
+                        on_header(&r.msg)?;
+                        completed += 1;
+                        drop(r.held);
+                    }
+                    GatherEvent::Failure(e) => {
+                        log::warn!("gather (draining): {e}");
+                        failures.push(e);
+                    }
+                    GatherEvent::TimedOut | GatherEvent::Disconnected => {}
+                }
+            } else {
+                // replies all consumed; a mid-fold stream is about to
+                // settle its accounting
+                std::thread::sleep(Duration::from_millis(1));
+            }
+        }
     }
 
     /// `broadcast_and_reduce`: stream the gather through a fold, consuming
@@ -521,7 +797,7 @@ impl Communicator {
         let mut sent = 0usize;
         for c in &self.clients {
             if c
-                .dispatch(FlMessage::bye(), 0, reply_tx.clone(), None, None)
+                .dispatch(FlMessage::bye(), 0, reply_tx.clone(), None, None, None)
                 .is_ok()
             {
                 sent += 1;
@@ -570,4 +846,46 @@ pub fn accept_registration(messenger: &mut Messenger) -> Result<String> {
         bail!("expected register, got {:?}", msg.kind);
     }
     Ok(msg.client)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sample_indices_deterministic_per_seed_and_round() {
+        // the regression: sampling used to mutate shared RNG state, so
+        // the round's participants depended on call order; now it is a
+        // pure function of (seed, round)
+        let a = sample_indices(17, 3, 20, 5);
+        let b = sample_indices(17, 3, 20, 5);
+        assert_eq!(a, b);
+        // repeated/interleaved calls for other rounds change nothing
+        let _ = sample_indices(17, 0, 20, 5);
+        let _ = sample_indices(17, 7, 20, 5);
+        assert_eq!(sample_indices(17, 3, 20, 5), a);
+        // rounds and seeds decorrelate
+        assert_ne!(sample_indices(17, 4, 20, 5), a);
+        assert_ne!(sample_indices(18, 3, 20, 5), a);
+    }
+
+    #[test]
+    fn sample_indices_distinct_and_in_range() {
+        for round in 0..10 {
+            let picked = sample_indices(9, round, 12, 6);
+            assert_eq!(picked.len(), 6);
+            let mut s = picked.clone();
+            s.sort();
+            s.dedup();
+            assert_eq!(s.len(), 6, "duplicates in round {round}");
+            assert!(picked.iter().all(|&i| i < 12));
+        }
+    }
+
+    #[test]
+    fn sample_indices_full_pool_is_permutation() {
+        let mut p = sample_indices(1, 0, 8, 8);
+        p.sort();
+        assert_eq!(p, (0..8).collect::<Vec<_>>());
+    }
 }

@@ -1,0 +1,278 @@
+//! The generic scatter-and-gather workflow (paper Listing 3), split from
+//! the aggregation math: `ScatterAndGather` owns workflow control —
+//! per-round client sampling, quorum, straggler timeout, model
+//! bookkeeping — and delegates the math to a pluggable
+//! [`Aggregator`](super::Aggregator). `FedAvg` is this workflow with a
+//! [`StreamingMean`](super::StreamingMean) aggregator; FedProx/FedOpt are
+//! the same workflow with a different aggregator, exactly the layering
+//! the paper describes for FLARE's Controller stack.
+//!
+//! Aggregation stays **tensor-granular streaming**: every tensor record
+//! of a client result is folded into the single accumulator the moment
+//! its frames arrive (completion order, records from different clients
+//! interleaving freely) and dropped, and the gather's flow gate caps
+//! concurrent streaming receivers at two — so server memory stays at one
+//! accumulator plus O(largest tensor) regardless of client count and
+//! model size.
+
+use std::time::Duration;
+
+use anyhow::{anyhow, Result};
+
+use super::{Aggregator, Communicator, Controller, GatherPolicy, ServerCtx, StreamingMean};
+use crate::config::FilterSpec;
+use crate::message::FlMessage;
+use crate::tensor::TensorDict;
+use crate::util::json::Json;
+
+/// Per-round aggregate metrics (one entry per completed round).
+#[derive(Debug, Clone)]
+pub struct RoundMetrics {
+    pub round: usize,
+    /// Mean of clients' validation of the *incoming global* model.
+    pub val_loss: f64,
+    pub val_acc: f64,
+    /// Mean of clients' local training loss (last step).
+    pub train_loss: f64,
+    /// Per-client (name, val_loss, val_acc, n_samples), sorted by name
+    /// (gather completion order is nondeterministic). In a hierarchical
+    /// run these are the direct children — mid-tier aggregator nodes.
+    pub per_client: Vec<(String, f64, f64, f64)>,
+}
+
+/// The workflow's sampling/quorum policy (the paper's `sample_clients`
+/// plus FLARE's `min_clients` / timeout knobs).
+#[derive(Debug, Clone)]
+pub struct SamplePolicy {
+    /// Results required to finalize a round (the quorum).
+    pub min_clients: usize,
+    /// Clients sampled per round (0 = exactly `min_clients`). Sampling
+    /// more than the quorum makes the round tolerant of
+    /// `sample_count - min_clients` failures or stragglers.
+    pub sample_count: usize,
+    /// Straggler timeout: once `min_clients` results have folded and the
+    /// deadline passes, the round finalizes from the clients already
+    /// folded; a straggler's late result is drained and discarded, never
+    /// folded into a later round.
+    pub round_timeout: Option<Duration>,
+}
+
+impl SamplePolicy {
+    /// Sample exactly `min_clients` and require all of them (the classic
+    /// FedAvg round).
+    pub fn strict(min_clients: usize) -> SamplePolicy {
+        SamplePolicy {
+            min_clients,
+            sample_count: 0,
+            round_timeout: None,
+        }
+    }
+
+    fn targets_per_round(&self) -> usize {
+        if self.sample_count == 0 {
+            self.min_clients
+        } else {
+            self.sample_count.max(self.min_clients)
+        }
+    }
+}
+
+/// Metric rows collected while streaming a round's gather (bodies are
+/// folded and dropped; only these scalars survive the round).
+#[derive(Default)]
+struct RoundAcc {
+    per_client: Vec<(String, f64, f64, f64)>,
+    val_loss: Vec<f64>,
+    val_acc: Vec<f64>,
+    train_loss: Vec<f64>,
+}
+
+fn mean(vals: &[f64]) -> f64 {
+    if vals.is_empty() {
+        f64::NAN
+    } else {
+        vals.iter().sum::<f64>() / vals.len() as f64
+    }
+}
+
+/// Generic scatter-and-gather controller: broadcast the global model,
+/// stream every update into the aggregator, finalize, repeat.
+///
+/// [`FedAvg`] is a type alias of this workflow; [`ScatterAndGather::new`]
+/// builds the FedAvg configuration (StreamingMean aggregator, strict
+/// quorum), [`ScatterAndGather::with_aggregator`] the general one.
+pub struct ScatterAndGather {
+    pub rounds: usize,
+    pub policy: SamplePolicy,
+    /// Task name sent to executors ("train" by default).
+    pub task_name: String,
+    /// The global model (communicated subset).
+    pub model: TensorDict,
+    /// Server-side receive filter specs, applied per tensor record as it
+    /// arrives ([`crate::filters::Filter::on_receive_tensor`] — e.g.
+    /// `QuantizeF16` dequantizes each record; DP/secure-agg pass
+    /// through). Derive this from the client chain with
+    /// [`FilterSpec::receive_chain`], which mirrors only the trailing
+    /// transport codec — re-rounding payloads masked or noised after
+    /// quantization would corrupt them. In a hierarchical topology leave
+    /// this empty: the mid-tier nodes mirror the codec instead, and the
+    /// partials they forward are plain f32.
+    pub recv_filters: Vec<FilterSpec>,
+    /// Completed-round metrics.
+    pub history: Vec<RoundMetrics>,
+    /// Best (lowest) mean val loss and its round.
+    pub best: Option<(usize, f64)>,
+    /// Snapshot of the best global model (by val loss).
+    pub best_model: Option<TensorDict>,
+    /// The aggregation strategy (taken while a gather is in flight).
+    aggregator: Option<Box<dyn Aggregator>>,
+    name: &'static str,
+}
+
+/// FedAvg [McMahan et al. 2017] — [`ScatterAndGather`] with the
+/// [`StreamingMean`] aggregator (see [`ScatterAndGather::new`]).
+pub type FedAvg = ScatterAndGather;
+
+impl ScatterAndGather {
+    /// The FedAvg configuration: sample-weighted mean aggregation,
+    /// exactly `min_clients` sampled and all of them required.
+    pub fn new(model: TensorDict, rounds: usize, min_clients: usize) -> ScatterAndGather {
+        let agg = Box::new(StreamingMean::new(&model));
+        Self::with_aggregator(model, rounds, SamplePolicy::strict(min_clients), agg)
+    }
+
+    /// The general configuration: any aggregation strategy plus a
+    /// sampling/quorum policy.
+    pub fn with_aggregator(
+        model: TensorDict,
+        rounds: usize,
+        policy: SamplePolicy,
+        aggregator: Box<dyn Aggregator>,
+    ) -> ScatterAndGather {
+        ScatterAndGather {
+            rounds,
+            policy,
+            task_name: "train".to_string(),
+            model,
+            recv_filters: Vec::new(),
+            history: Vec::new(),
+            best: None,
+            best_model: None,
+            name: aggregator.name(),
+            aggregator: Some(aggregator),
+        }
+    }
+
+    /// The aggregation strategy's name ("fedavg", "fedprox", ...).
+    pub fn aggregator_name(&self) -> &'static str {
+        self.name
+    }
+}
+
+impl Controller for ScatterAndGather {
+    fn name(&self) -> &'static str {
+        self.name
+    }
+
+    fn run(&mut self, comm: &mut Communicator, ctx: &mut ServerCtx) -> Result<()> {
+        log::info!(
+            "Start {} ({} rounds, quorum {})",
+            self.name,
+            self.rounds,
+            self.policy.min_clients
+        );
+        for round in 0..self.rounds {
+            // 1. sample this round's participants (deterministic per
+            //    (job seed, round) — resumed and hierarchical runs sample
+            //    identically regardless of call order)
+            let clients = comm.sample_clients(self.policy.targets_per_round(), round)?;
+            // 2. send the current global model; 3. fold each update into
+            // the single accumulator tensor record by tensor record as
+            // frames arrive (completion order — a fast site aggregates
+            // while a slow site still streams, and no decoded result is
+            // ever staged whole)
+            let task = FlMessage::task(&self.task_name, round, self.model.clone())
+                .with_meta("rounds_total", Json::num(self.rounds as f64));
+            let mut agg = self
+                .aggregator
+                .take()
+                .ok_or_else(|| anyhow!("aggregator lost by a failed round"))?;
+            agg.begin_round(&self.model, round);
+            let gather_policy = GatherPolicy {
+                quorum: self.policy.min_clients,
+                timeout: self.policy.round_timeout,
+            };
+            let mut stats = RoundAcc::default();
+            let mut agg = comm.broadcast_and_fold(
+                &task,
+                &clients,
+                agg,
+                &self.recv_filters,
+                &gather_policy,
+                |r| {
+                    stats.per_client.push((
+                        r.client.clone(),
+                        r.metric("val_loss").unwrap_or(f64::NAN),
+                        r.metric("val_acc").unwrap_or(f64::NAN),
+                        r.metric("n_samples").unwrap_or(0.0),
+                    ));
+                    if let Some(v) = r.metric("val_loss") {
+                        stats.val_loss.push(v);
+                    }
+                    if let Some(v) = r.metric("val_acc") {
+                        stats.val_acc.push(v);
+                    }
+                    if let Some(v) = r.metric("train_loss") {
+                        stats.train_loss.push(v);
+                    }
+                    Ok(())
+                },
+            )?;
+            // 4. update the global model
+            let folded = agg.folded();
+            self.model = agg.finalize()?;
+            self.aggregator = Some(agg);
+            // bookkeeping: global-model validation scores from clients
+            stats.per_client.sort_by(|a, b| a.0.cmp(&b.0));
+            let rm = RoundMetrics {
+                round,
+                val_loss: mean(&stats.val_loss),
+                val_acc: mean(&stats.val_acc),
+                train_loss: mean(&stats.train_loss),
+                per_client: stats.per_client,
+            };
+            ctx.sink.event(
+                "fedavg_round",
+                &[
+                    ("round", Json::num(round as f64)),
+                    ("val_loss", Json::num(rm.val_loss)),
+                    ("val_acc", Json::num(rm.val_acc)),
+                    ("train_loss", Json::num(rm.train_loss)),
+                    ("n_folded", Json::num(folded as f64)),
+                ],
+            );
+            // 5. model selection + save
+            if rm.val_loss.is_finite()
+                && self.best.map(|(_, b)| rm.val_loss < b).unwrap_or(true)
+            {
+                self.best = Some((round, rm.val_loss));
+                self.best_model = Some(self.model.clone());
+            }
+            if let Some(dir) = &ctx.ckpt_dir {
+                std::fs::create_dir_all(dir)?;
+                let path = dir.join(format!("{}_global.bin", ctx.job_name));
+                std::fs::write(path, self.model.to_bytes())?;
+            }
+            log::info!(
+                "round {round}: val_loss={:.4} val_acc={:.4} train_loss={:.4} folded={folded}",
+                rm.val_loss,
+                rm.val_acc,
+                rm.train_loss
+            );
+            self.history.push(rm);
+        }
+        comm.shutdown();
+        log::info!("Finished {}.", self.name);
+        Ok(())
+    }
+}

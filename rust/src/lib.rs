@@ -16,9 +16,13 @@
 //! * **L1 (python/compile/kernels/)** — Pallas TPU kernels (flash
 //!   attention, fused LoRA matmul, fused AdamW) called from L2.
 //!
-//! The FL system itself — [`coordinator::FedAvg`], cyclic weight
-//! transfer, federated evaluation, federated inference, the full
-//! streaming stack — is pure Rust and needs no artifacts at all. Model
+//! The FL system itself — the [`coordinator::ScatterAndGather`] workflow
+//! over pluggable [`coordinator::Aggregator`] strategies (FedAvg's
+//! [`coordinator::StreamingMean`], [`coordinator::FedProx`],
+//! [`coordinator::FedOpt`]), hierarchical aggregator trees
+//! ([`coordinator::MidTier`]), cyclic weight transfer, federated
+//! evaluation, federated inference, the full streaming stack — is pure
+//! Rust and needs no artifacts at all. Model
 //! execution additionally needs the AOT artifacts from `make artifacts`
 //! (run at the repo root; writes `rust/artifacts/`) and a build with
 //! `--features pjrt` so the [`runtime`] can load HLO text via PJRT (the

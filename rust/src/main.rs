@@ -14,9 +14,10 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use fedflare::config::JobConfig;
+use fedflare::config::{AggregatorSpec, JobConfig};
 use fedflare::coordinator::{
-    accept_registration, ClientHandle, Communicator, Controller, FedAvg, ServerCtx,
+    accept_registration, build_aggregator, ClientHandle, Communicator, Controller, SamplePolicy,
+    ScatterAndGather, ServerCtx,
 };
 use fedflare::executor::ClientRuntime;
 use fedflare::metrics::MetricsSink;
@@ -238,11 +239,28 @@ fn cmd_run(args: &[String]) -> Result<()> {
             None,
             "override the job's streaming chunk size (default 1 MB)",
         )
+        .opt(
+            "branching",
+            None,
+            "hierarchical topology: max children per aggregator node (0 = flat)",
+        )
+        .opt("min-clients", None, "override the job's per-round quorum")
+        .opt(
+            "round-timeout",
+            None,
+            "straggler timeout in seconds: past it, a round finalizes once the quorum folded",
+        )
+        .opt(
+            "aggregator",
+            None,
+            "aggregation strategy: fedavg | fedprox[:mu] | fedopt-sgd[:lr,momentum] | fedopt-adam[:lr]",
+        )
         .parse(args)
         .map_err(|e| anyhow!(e))?;
     let mut job =
         JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
     override_chunk(&mut job, &p)?;
+    override_workflow_opts(&mut job, &p)?;
     let kind = match p.get("driver").unwrap() {
         "inproc" => sim::DriverKind::InProc,
         "tcp" => sim::DriverKind::Tcp,
@@ -254,23 +272,26 @@ fn cmd_run(args: &[String]) -> Result<()> {
         Some(RuntimeClient::start(&job.artifacts_dir)?)
     };
     let initial = repro::common::initial_model(&job, rc.as_ref())?;
+    let tree = job.branching > 1 && job.clients.len() > job.branching;
     println!(
-        "job '{}': workflow={} rounds={} clients={} payload={:.1} MB",
+        "job '{}': workflow={} rounds={} clients={} topology={} payload={:.1} MB",
         job.name,
         job.workflow.as_str(),
         job.rounds,
         job.clients.len(),
+        if tree {
+            format!(
+                "tree(branching={}, {} mid-tier nodes)",
+                job.branching,
+                job.clients.len().div_ceil(job.branching)
+            )
+        } else {
+            "flat".to_string()
+        },
         initial.byte_size() as f64 / (1 << 20) as f64
     );
     let mut ctl: Box<dyn Controller> = match job.workflow {
-        fedflare::config::Workflow::FedAvg => {
-            let mut c = FedAvg::new(initial, job.rounds, job.min_clients);
-            if job.artifact == "stream_test" {
-                c.task_name = "stream_test".into();
-            }
-            c.recv_filters = fedflare::config::FilterSpec::receive_chain(&job.filters);
-            Box::new(c)
-        }
+        fedflare::config::Workflow::FedAvg => Box::new(build_sag(&job, initial)),
         fedflare::config::Workflow::Cyclic => Box::new(
             fedflare::coordinator::CyclicWeightTransfer::new(initial, job.rounds),
         ),
@@ -286,11 +307,79 @@ fn cmd_run(args: &[String]) -> Result<()> {
     let mut factory: Box<sim::ExecutorFactory> =
         Box::new(move |i, _spec| repro::common::build_executor(&job2, i, rc2.as_ref()));
     let out_dir = p.get("out-dir").unwrap().to_string();
-    sim::run_job(&job, kind, ctl.as_mut(), &mut factory, &out_dir)?;
+    let report = sim::run_job(&job, kind, ctl.as_mut(), &mut factory, &out_dir)?;
     println!(
-        "job '{}' finished; events in {}/{}.events.jsonl",
-        job.name, out_dir, job.name
+        "job '{}' finished (root peak gather {:.1} kB); events in {}/{}.events.jsonl",
+        job.name,
+        report.root_gather_peak as f64 / 1024.0,
+        out_dir,
+        job.name
     );
+    Ok(())
+}
+
+/// Build the scatter-and-gather controller for a job: aggregator from the
+/// job spec, sampling/quorum policy adapted to the topology. In a tree,
+/// the root's children are the ⌈N/B⌉ mid-tier nodes, so the quorum is
+/// re-expressed in subtrees conservatively: losing one subtree loses at
+/// most B leaves, so tolerating ⌊(N − min_clients)/B⌋ lost subtrees
+/// keeps ≥ `min_clients` leaves covered even when the tail shard is
+/// short.
+fn build_sag(job: &JobConfig, initial: fedflare::tensor::TensorDict) -> ScatterAndGather {
+    let tree = job.branching > 1 && job.clients.len() > job.branching;
+    let policy = if tree {
+        let n = job.clients.len();
+        let n_mid = n.div_ceil(job.branching);
+        let tolerable_subtrees = (n - job.min_clients.min(n)) / job.branching;
+        SamplePolicy {
+            min_clients: n_mid.saturating_sub(tolerable_subtrees).max(1),
+            sample_count: n_mid,
+            round_timeout: job.round_timeout_s.map(std::time::Duration::from_secs_f64),
+        }
+    } else {
+        SamplePolicy {
+            min_clients: job.min_clients,
+            sample_count: job.sample_count,
+            round_timeout: job.round_timeout_s.map(std::time::Duration::from_secs_f64),
+        }
+    };
+    let mut c =
+        ScatterAndGather::with_aggregator(initial, job.rounds, policy, build_aggregator(&job.aggregator));
+    if job.artifact == "stream_test" {
+        c.task_name = "stream_test".into();
+    }
+    // in a tree the trailing-codec mirror runs on the mid-tier nodes;
+    // the partials reaching the root are plain f32
+    c.recv_filters = if tree {
+        Vec::new()
+    } else {
+        fedflare::config::FilterSpec::receive_chain(&job.filters)
+    };
+    c
+}
+
+/// Apply the shared workflow-policy CLI overrides to the job.
+fn override_workflow_opts(job: &mut JobConfig, p: &fedflare::util::cli::Parsed) -> Result<()> {
+    if p.get("branching").is_some() {
+        job.branching = p.get_usize("branching").map_err(|e| anyhow!(e))?;
+    }
+    if p.get("min-clients").is_some() {
+        let n = p.get_usize("min-clients").map_err(|e| anyhow!(e))?;
+        if n == 0 || n > job.clients.len() {
+            bail!("--min-clients must be in 1..={}", job.clients.len());
+        }
+        job.min_clients = n;
+    }
+    if p.get("round-timeout").is_some() {
+        let t = p.get_f64("round-timeout").map_err(|e| anyhow!(e))?;
+        if t <= 0.0 {
+            bail!("--round-timeout must be > 0 seconds");
+        }
+        job.round_timeout_s = Some(t);
+    }
+    if let Some(spec) = p.get("aggregator") {
+        job.aggregator = AggregatorSpec::from_str(spec)?;
+    }
     Ok(())
 }
 
@@ -319,11 +408,31 @@ fn cmd_server(args: &[String]) -> Result<()> {
             None,
             "override the job's streaming chunk size (default 1 MB)",
         )
+        .opt("min-clients", None, "override the job's per-round quorum")
+        .opt(
+            "round-timeout",
+            None,
+            "straggler timeout in seconds: past it, a round finalizes once the quorum folded",
+        )
+        .opt(
+            "aggregator",
+            None,
+            "aggregation strategy: fedavg | fedprox[:mu] | fedopt-sgd[:lr,momentum] | fedopt-adam[:lr]",
+        )
         .parse(args)
         .map_err(|e| anyhow!(e))?;
     let mut job =
         JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
     override_chunk(&mut job, &p)?;
+    override_workflow_opts(&mut job, &p)?;
+    if job.branching > 1 {
+        println!(
+            "server: note — hierarchical topology (branching {}) is simulator-only for now; \
+             running flat",
+            job.branching
+        );
+        job.branching = 0;
+    }
     let port: u16 = p.get("port").unwrap().parse()?;
     let rc = RuntimeClient::start(&job.artifacts_dir).ok();
     let initial = repro::common::initial_model(&job, rc.as_ref())?;
@@ -345,13 +454,13 @@ fn cmd_server(args: &[String]) -> Result<()> {
     let mut comm = Communicator::new(handles, job.seed);
     let sink = MetricsSink::create(p.get("out-dir").unwrap(), &job.name)?;
     let mut ctx = ServerCtx::new(sink, &job.name);
-    let mut ctl = FedAvg::new(initial, job.rounds, job.min_clients);
-    if job.artifact == "stream_test" {
-        ctl.task_name = "stream_test".into();
-    }
-    ctl.recv_filters = fedflare::config::FilterSpec::receive_chain(&job.filters);
+    let mut ctl = build_sag(&job, initial);
     ctl.run(&mut comm, &mut ctx)?;
-    println!("server: job complete ({} rounds)", ctl.history.len());
+    println!(
+        "server: job complete ({} rounds, {})",
+        ctl.history.len(),
+        ctl.aggregator_name()
+    );
     Ok(())
 }
 

@@ -42,6 +42,10 @@ pub enum Kind {
     Task,
     /// Client -> server: task result.
     Result,
+    /// Mid-tier aggregator -> upstream: a serialized partial aggregate
+    /// (body = the shard's weighted mean, `n_samples` meta = its
+    /// cumulative weight). Folded upstream exactly like a result.
+    Partial,
     /// Either direction: end of job.
     Bye,
 }
@@ -52,6 +56,7 @@ impl Kind {
             Kind::Register => "register",
             Kind::Task => "task",
             Kind::Result => "result",
+            Kind::Partial => "partial",
             Kind::Bye => "bye",
         }
     }
@@ -60,6 +65,7 @@ impl Kind {
             "register" => Some(Kind::Register),
             "task" => Some(Kind::Task),
             "result" => Some(Kind::Result),
+            "partial" => Some(Kind::Partial),
             "bye" => Some(Kind::Bye),
             _ => None,
         }
@@ -437,7 +443,13 @@ mod tests {
 
     #[test]
     fn kinds_roundtrip() {
-        for k in [Kind::Register, Kind::Task, Kind::Result, Kind::Bye] {
+        for k in [
+            Kind::Register,
+            Kind::Task,
+            Kind::Result,
+            Kind::Partial,
+            Kind::Bye,
+        ] {
             assert_eq!(Kind::from_str(k.as_str()), Some(k));
         }
         assert_eq!(Kind::from_str("wat"), None);

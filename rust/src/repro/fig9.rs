@@ -319,5 +319,5 @@ fn sim_run_controller(
     factory: &mut sim::ExecutorFactory,
     out_dir: &str,
 ) -> Result<()> {
-    sim::run_job(job, DriverKind::InProc, ctl, factory, out_dir)
+    sim::run_job(job, DriverKind::InProc, ctl, factory, out_dir).map(|_| ())
 }

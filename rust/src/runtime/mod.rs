@@ -8,10 +8,14 @@
 //! 64-bit instruction ids which xla_extension 0.5.1 rejects; the text
 //! parser reassigns ids (see /opt/xla-example/README.md).
 //!
-//! The XLA dependency is gated behind the `pjrt` cargo feature so the FL
-//! system builds (and its full test suite runs) without the vendored `xla`
-//! crate. Without the feature, [`Runtime::cpu`] fails at startup with a
-//! clear message and every artifact-dependent code path skips.
+//! The XLA dependency is gated behind the `pjrt` cargo feature. There is
+//! exactly **one** [`Runtime`]/[`Executable`] surface — manifest loading,
+//! the compile cache, artifact listing — and only the backend-specific
+//! pieces (client creation, HLO compilation, literal marshaling) live in
+//! the cfg-gated [`backend`] module, so the stub cannot drift from the
+//! real API. Without the feature, backend creation fails at startup with
+//! a clear message, `RuntimeClient::start(...)` returns `Err`, and every
+//! artifact-dependent code path takes its skip/fallback path.
 
 mod manifest;
 mod service;
@@ -21,85 +25,188 @@ pub use manifest::{IoSpec, Manifest, ParamSpec};
 pub use service::RuntimeClient;
 pub use trainer::{scalar, StepMetrics, Trainer};
 
-pub use backend::{Executable, Runtime};
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::tensor::TensorDict;
+
+/// A compiled artifact: backend executable + its manifest.
+pub struct Executable {
+    pub manifest: Manifest,
+    exe: backend::Exe,
+}
+
+impl Executable {
+    /// Execute with named inputs. `inputs` must contain a tensor for every
+    /// name in `manifest.inputs` (params, `m.*`/`v.*` opt state, `bc`,
+    /// and data inputs alike); outputs are returned keyed by
+    /// `manifest.outputs` names.
+    pub fn execute(&self, inputs: &TensorDict) -> Result<TensorDict> {
+        self.exe.execute(&self.manifest, inputs)
+    }
+}
+
+/// The runtime: one backend client + a compile cache keyed by artifact
+/// name. Compilation of a 100 M-param module takes seconds; every FL
+/// client in a simulation shares the cache through an [`Arc<Runtime>`].
+pub struct Runtime {
+    backend: backend::Backend,
+    dir: PathBuf,
+    cache: Mutex<HashMap<String, Arc<Executable>>>,
+}
+
+impl Runtime {
+    /// Create a CPU-PJRT runtime rooted at the artifacts directory.
+    /// Without the `pjrt` feature this fails with an explanatory error.
+    pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+        Ok(Runtime {
+            backend: backend::Backend::cpu()?,
+            dir: artifacts_dir.as_ref().to_path_buf(),
+            cache: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn platform(&self) -> String {
+        self.backend.platform_name()
+    }
+
+    pub fn artifacts_dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// List artifacts available in the manifest index.
+    pub fn available(&self) -> Result<Vec<String>> {
+        let index = std::fs::read_to_string(self.dir.join("manifest.json"))
+            .context("read artifacts/manifest.json (run `make artifacts`)")?;
+        let j = crate::util::json::Json::parse(&index).map_err(|e| anyhow!("{e}"))?;
+        Ok(j.get("artifacts")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter_map(|a| a.as_str().map(String::from))
+            .collect())
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
+        if let Some(e) = self.cache.lock().unwrap().get(name) {
+            return Ok(e.clone());
+        }
+        let manifest = Manifest::load(&self.dir, name)?;
+        let hlo_path = self.dir.join(&manifest.hlo);
+        let exe = self.backend.compile(&hlo_path, name)?;
+        let executable = Arc::new(Executable { manifest, exe });
+        self.cache
+            .lock()
+            .unwrap()
+            .insert(name.to_string(), executable.clone());
+        Ok(executable)
+    }
+}
 
 #[cfg(feature = "pjrt")]
 mod backend {
-    use std::collections::HashMap;
-    use std::path::{Path, PathBuf};
-    use std::sync::{Arc, Mutex};
+    //! The real PJRT backend: XLA client, HLO-text compilation, and
+    //! literal marshaling.
 
-    use anyhow::{anyhow, bail, Context, Result};
+    use std::path::Path;
+
+    use anyhow::{anyhow, bail, Result};
 
     use super::{IoSpec, Manifest};
     use crate::tensor::{DType, Tensor, TensorDict};
     use crate::util::bytes;
 
-    /// A compiled artifact: PJRT executable + its manifest.
-    pub struct Executable {
-        pub manifest: Manifest,
+    /// One PJRT client.
+    pub struct Backend {
+        client: xla::PjRtClient,
+    }
+
+    /// One loaded PJRT executable.
+    pub struct Exe {
         exe: xla::PjRtLoadedExecutable,
     }
 
-    impl Executable {
-        /// Execute with named inputs. `inputs` must contain a tensor for every
-        /// name in `manifest.inputs` (params, `m.*`/`v.*` opt state, `bc`,
-        /// and data inputs alike); outputs are returned keyed by
-        /// `manifest.outputs` names.
-        pub fn execute(&self, inputs: &TensorDict) -> Result<TensorDict> {
-            let literals = self.marshal_inputs(inputs)?;
+    impl Backend {
+        pub fn cpu() -> Result<Backend> {
+            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
+            Ok(Backend { client })
+        }
+
+        pub fn platform_name(&self) -> String {
+            self.client.platform_name()
+        }
+
+        pub fn compile(&self, hlo_path: &Path, name: &str) -> Result<Exe> {
+            let proto = xla::HloModuleProto::from_text_file(hlo_path)
+                .map_err(|e| anyhow!("parse {}: {e}", hlo_path.display()))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .map_err(|e| anyhow!("compile {name}: {e}"))?;
+            Ok(Exe { exe })
+        }
+    }
+
+    impl Exe {
+        pub fn execute(&self, manifest: &Manifest, inputs: &TensorDict) -> Result<TensorDict> {
+            let literals = marshal_inputs(manifest, inputs)?;
             let result = self
                 .exe
                 .execute::<xla::Literal>(&literals)
-                .map_err(|e| anyhow!("execute {}: {e}", self.manifest.artifact))?;
+                .map_err(|e| anyhow!("execute {}: {e}", manifest.artifact))?;
             let tuple = result[0][0]
                 .to_literal_sync()
                 .map_err(|e| anyhow!("fetch result literal: {e}"))?;
-            self.unmarshal_outputs(tuple)
+            unmarshal_outputs(manifest, tuple)
         }
+    }
 
-        fn marshal_inputs(&self, inputs: &TensorDict) -> Result<Vec<xla::Literal>> {
-            let mut literals = Vec::with_capacity(self.manifest.inputs.len());
-            for spec in &self.manifest.inputs {
-                let t = inputs.get(&spec.name).ok_or_else(|| {
-                    anyhow!(
-                        "{}: missing input tensor '{}'",
-                        self.manifest.artifact,
-                        spec.name
-                    )
-                })?;
-                if t.shape != spec.shape {
-                    bail!(
-                        "{}: input '{}' shape {:?} != manifest {:?}",
-                        self.manifest.artifact,
-                        spec.name,
-                        t.shape,
-                        spec.shape
-                    );
-                }
-                literals.push(tensor_to_literal(t)?);
-            }
-            Ok(literals)
-        }
-
-        fn unmarshal_outputs(&self, tuple: xla::Literal) -> Result<TensorDict> {
-            let parts = tuple
-                .to_tuple()
-                .map_err(|e| anyhow!("decompose output tuple: {e}"))?;
-            if parts.len() != self.manifest.outputs.len() {
+    fn marshal_inputs(manifest: &Manifest, inputs: &TensorDict) -> Result<Vec<xla::Literal>> {
+        let mut literals = Vec::with_capacity(manifest.inputs.len());
+        for spec in &manifest.inputs {
+            let t = inputs.get(&spec.name).ok_or_else(|| {
+                anyhow!(
+                    "{}: missing input tensor '{}'",
+                    manifest.artifact,
+                    spec.name
+                )
+            })?;
+            if t.shape != spec.shape {
                 bail!(
-                    "{}: {} outputs, manifest says {}",
-                    self.manifest.artifact,
-                    parts.len(),
-                    self.manifest.outputs.len()
+                    "{}: input '{}' shape {:?} != manifest {:?}",
+                    manifest.artifact,
+                    spec.name,
+                    t.shape,
+                    spec.shape
                 );
             }
-            let mut out = TensorDict::new();
-            for (spec, lit) in self.manifest.outputs.iter().zip(parts) {
-                out.insert(spec.name.clone(), literal_to_tensor(&lit, spec)?);
-            }
-            Ok(out)
+            literals.push(tensor_to_literal(t)?);
         }
+        Ok(literals)
+    }
+
+    fn unmarshal_outputs(manifest: &Manifest, tuple: xla::Literal) -> Result<TensorDict> {
+        let parts = tuple
+            .to_tuple()
+            .map_err(|e| anyhow!("decompose output tuple: {e}"))?;
+        if parts.len() != manifest.outputs.len() {
+            bail!(
+                "{}: {} outputs, manifest says {}",
+                manifest.artifact,
+                parts.len(),
+                manifest.outputs.len()
+            );
+        }
+        let mut out = TensorDict::new();
+        for (spec, lit) in manifest.outputs.iter().zip(parts) {
+            out.insert(spec.name.clone(), literal_to_tensor(&lit, spec)?);
+        }
+        Ok(out)
     }
 
     fn tensor_to_literal(t: &Tensor) -> Result<xla::Literal> {
@@ -123,103 +230,32 @@ mod backend {
             ),
         })
     }
-
-    /// The runtime: one PJRT client + a compile cache keyed by artifact name.
-    /// Compilation of a 100 M-param module takes seconds; every FL client in a
-    /// simulation shares the cache through an [`Arc<Runtime>`].
-    pub struct Runtime {
-        client: xla::PjRtClient,
-        dir: PathBuf,
-        cache: Mutex<HashMap<String, Arc<Executable>>>,
-    }
-
-    impl Runtime {
-        /// Create a CPU-PJRT runtime rooted at the artifacts directory.
-        pub fn cpu(artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
-            let client = xla::PjRtClient::cpu().map_err(|e| anyhow!("pjrt cpu client: {e}"))?;
-            Ok(Runtime {
-                client,
-                dir: artifacts_dir.as_ref().to_path_buf(),
-                cache: Mutex::new(HashMap::new()),
-            })
-        }
-
-        pub fn platform(&self) -> String {
-            self.client.platform_name()
-        }
-
-        pub fn artifacts_dir(&self) -> &Path {
-            &self.dir
-        }
-
-        /// List artifacts available in the manifest index.
-        pub fn available(&self) -> Result<Vec<String>> {
-            let index = std::fs::read_to_string(self.dir.join("manifest.json"))
-                .context("read artifacts/manifest.json (run `make artifacts`)")?;
-            let j = crate::util::json::Json::parse(&index).map_err(|e| anyhow!("{e}"))?;
-            Ok(j.get("artifacts")
-                .as_arr()
-                .unwrap_or(&[])
-                .iter()
-                .filter_map(|a| a.as_str().map(String::from))
-                .collect())
-        }
-
-        /// Load + compile an artifact (cached).
-        pub fn load(&self, name: &str) -> Result<Arc<Executable>> {
-            if let Some(e) = self.cache.lock().unwrap().get(name) {
-                return Ok(e.clone());
-            }
-            let manifest = Manifest::load(&self.dir, name)?;
-            let hlo_path = self.dir.join(&manifest.hlo);
-            let proto = xla::HloModuleProto::from_text_file(&hlo_path)
-                .map_err(|e| anyhow!("parse {}: {e}", hlo_path.display()))?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = self
-                .client
-                .compile(&comp)
-                .map_err(|e| anyhow!("compile {name}: {e}"))?;
-            let executable = Arc::new(Executable { manifest, exe });
-            self.cache
-                .lock()
-                .unwrap()
-                .insert(name.to_string(), executable.clone());
-            Ok(executable)
-        }
-    }
 }
 
 #[cfg(not(feature = "pjrt"))]
 mod backend {
-    //! Stub backend used when the `pjrt` feature is off: the runtime API
-    //! type-checks identically, but startup fails with an explanatory
-    //! error, so `RuntimeClient::start(...)` returns `Err` and every
-    //! artifact-dependent caller takes its skip/fallback path.
+    //! Stub backend used when the `pjrt` feature is off: creation fails
+    //! with an explanatory error, so a [`super::Runtime`] can never be
+    //! constructed and every artifact-dependent caller takes its
+    //! skip/fallback path. Everything above this module — the cache,
+    //! manifest loading, artifact listing — is the same code as the real
+    //! build.
 
     use std::path::Path;
-    use std::sync::Arc;
 
     use anyhow::{bail, Result};
 
     use super::Manifest;
     use crate::tensor::TensorDict;
 
-    /// A compiled artifact (stub — cannot be constructed without `pjrt`).
-    pub struct Executable {
-        pub manifest: Manifest,
-    }
+    /// Stub client (cannot be constructed).
+    pub struct Backend {}
 
-    impl Executable {
-        pub fn execute(&self, _inputs: &TensorDict) -> Result<TensorDict> {
-            bail!("fedflare was built without the `pjrt` feature")
-        }
-    }
+    /// Stub executable (cannot be constructed).
+    pub struct Exe {}
 
-    /// Stub runtime: creation always fails.
-    pub struct Runtime {}
-
-    impl Runtime {
-        pub fn cpu(_artifacts_dir: impl AsRef<Path>) -> Result<Runtime> {
+    impl Backend {
+        pub fn cpu() -> Result<Backend> {
             bail!(
                 "PJRT runtime unavailable: fedflare was built without the `pjrt` \
                  feature (which needs the vendored `xla` crate). Rebuild with \
@@ -227,19 +263,17 @@ mod backend {
             )
         }
 
-        pub fn platform(&self) -> String {
+        pub fn platform_name(&self) -> String {
             "unavailable (built without the pjrt feature)".to_string()
         }
 
-        pub fn artifacts_dir(&self) -> &Path {
-            Path::new("")
-        }
-
-        pub fn available(&self) -> Result<Vec<String>> {
+        pub fn compile(&self, _hlo_path: &Path, _name: &str) -> Result<Exe> {
             bail!("fedflare was built without the `pjrt` feature")
         }
+    }
 
-        pub fn load(&self, _name: &str) -> Result<Arc<Executable>> {
+    impl Exe {
+        pub fn execute(&self, _manifest: &Manifest, _inputs: &TensorDict) -> Result<TensorDict> {
             bail!("fedflare was built without the `pjrt` feature")
         }
     }

@@ -3,15 +3,27 @@
 //! channel driver or real TCP loopback connections, with optional
 //! per-client bandwidth throttling (the paper's fast/slow-site asymmetry).
 //!
+//! With `job.branching = B > 1` (and more than B clients) the harness
+//! builds a **2-level aggregator tree** instead of the flat star: ⌈N/B⌉
+//! mid-tier [`MidTier`] nodes each serve a contiguous shard of ≤ B
+//! clients and forward one serialized partial per round, so the root's
+//! fan-in is ⌈N/B⌉ partial streams rather than N client streams — same
+//! wire format, same streaming folds, every link over the same driver.
+//!
 //! This is the engine behind `fedflare repro *`, the examples, and the
 //! integration tests. Multi-process deployment (`fedflare server` /
 //! `fedflare client`) shares all the same code paths; only connection
 //! setup differs (see `main.rs`).
 
+use std::sync::Arc;
+
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::{ClientSpec, JobConfig};
-use crate::coordinator::{accept_registration, ClientHandle, Communicator, Controller, ServerCtx};
+use crate::config::{ClientSpec, FilterSpec, JobConfig};
+use crate::coordinator::{
+    accept_registration, shard_plan, ClientHandle, Communicator, Controller, GatherPolicy,
+    MidTier, ServerCtx,
+};
 use crate::executor::{ClientRuntime, Executor};
 use crate::filters::build_chain;
 use crate::metrics::MetricsSink;
@@ -30,6 +42,15 @@ pub enum DriverKind {
 /// Build the per-client executor (index, spec) -> Executor.
 pub type ExecutorFactory<'a> = dyn FnMut(usize, &ClientSpec) -> Result<Box<dyn Executor>> + 'a;
 
+/// What a finished job reports back beyond the controller's own fields.
+#[derive(Debug, Clone, Default)]
+pub struct RunReport {
+    /// Peak decoded in-flight gather bytes at the **root** communicator
+    /// (per-node counter — mid-tier folds are excluded, unlike the
+    /// process-global [`crate::util::mem::gather_peak`]).
+    pub root_gather_peak: u64,
+}
+
 /// Run a job to completion inside this process. The controller's own
 /// fields (history, best model, ...) carry the results.
 pub fn run_job(
@@ -38,7 +59,21 @@ pub fn run_job(
     controller: &mut dyn Controller,
     make_executor: &mut ExecutorFactory,
     results_dir: &str,
-) -> Result<()> {
+) -> Result<RunReport> {
+    if job.branching > 1 && job.clients.len() > job.branching {
+        run_job_tree(job, kind, controller, make_executor, results_dir)
+    } else {
+        run_job_flat(job, kind, controller, make_executor, results_dir)
+    }
+}
+
+fn run_job_flat(
+    job: &JobConfig,
+    kind: DriverKind,
+    controller: &mut dyn Controller,
+    make_executor: &mut ExecutorFactory,
+    results_dir: &str,
+) -> Result<RunReport> {
     let sink = MetricsSink::create(results_dir, &job.name)?;
     let mut ctx = ServerCtx::new(sink, &job.name);
     let chunk = job.stream.chunk_bytes;
@@ -92,6 +127,7 @@ pub fn run_job(
             .unwrap_or(usize::MAX)
     });
     let mut comm = Communicator::new(handles, job.seed);
+    let counter = comm.gather_counter();
 
     // --- run the workflow
     let run_result = controller.run(&mut comm, &mut ctx);
@@ -117,7 +153,163 @@ pub fn run_job(
     if !client_errs.is_empty() {
         return Err(anyhow!("client failures: {}", client_errs.join("; ")));
     }
-    Ok(())
+    Ok(RunReport {
+        root_gather_peak: counter.peak(),
+    })
+}
+
+/// The 2-level aggregator tree (see module docs): spawn every leaf
+/// client, one mid-tier node per shard, and run the controller against
+/// the mid-tier nodes only.
+fn run_job_tree(
+    job: &JobConfig,
+    kind: DriverKind,
+    controller: &mut dyn Controller,
+    make_executor: &mut ExecutorFactory,
+    results_dir: &str,
+) -> Result<RunReport> {
+    let sink = MetricsSink::create(results_dir, &job.name)?;
+    let mut ctx = ServerCtx::new(sink, &job.name);
+    let chunk = job.stream.chunk_bytes;
+    let window = job.stream.window;
+    let verify = job.stream.verify_crc;
+    let shards = shard_plan(job.clients.len(), job.branching);
+    // the trailing-codec receive mirror runs where client streams land:
+    // on the mid-tier nodes (partials forwarded upstream are plain f32)
+    let mid_recv_filters = FilterSpec::receive_chain(&job.filters);
+    // thread the straggler timeout down to the shard gathers: a stalled
+    // leaf costs only its own contribution (quorum 1 — the shard forwards
+    // a reduced-weight partial) instead of wedging its whole subtree
+    let mid_policy = match job.round_timeout_s {
+        None => GatherPolicy::all(),
+        Some(t) => GatherPolicy {
+            quorum: 1,
+            timeout: Some(std::time::Duration::from_secs_f64(t)),
+        },
+    };
+
+    let mut client_threads = Vec::new();
+    let mut mid_threads = Vec::new();
+    let mut root_messengers: Vec<Messenger> = Vec::new();
+
+    match kind {
+        DriverKind::InProc => {
+            for (m, shard) in shards.iter().enumerate() {
+                let mid_name = format!("agg-{m:03}");
+                let (ra, ma) = inproc::pair(window, &mid_name);
+                root_messengers.push(Messenger::new(Box::new(ra), chunk, 0));
+                let upstream =
+                    Messenger::new(Box::new(ma), chunk, (job.clients.len() + m + 1) as u32);
+                let mut shard_msgrs = Vec::new();
+                let mut shard_names = Vec::new();
+                for i in shard.clone() {
+                    let spec = &job.clients[i];
+                    let (sa, ca) = inproc::pair(window, &spec.name);
+                    shard_msgrs.push(Messenger::new(wrap_throttle(Box::new(sa), spec), chunk, 0));
+                    let cm =
+                        Messenger::new(wrap_throttle(Box::new(ca), spec), chunk, (i + 1) as u32);
+                    client_threads.push(spawn_client(job, i, spec, cm, make_executor)?);
+                    shard_names.push(spec.name.clone());
+                }
+                mid_threads.push(spawn_midtier(
+                    mid_name,
+                    upstream,
+                    shard_msgrs,
+                    shard_names,
+                    mid_recv_filters.clone(),
+                    mid_policy.clone(),
+                    job.seed ^ (m as u64 + 1),
+                )?);
+            }
+        }
+        DriverKind::Tcp => {
+            let root_listener = tcp::bind("127.0.0.1:0")?;
+            let root_addr = root_listener.local_addr().context("root addr")?;
+            for (m, shard) in shards.iter().enumerate() {
+                let mid_name = format!("agg-{m:03}");
+                let up_drv = tcp::TcpDriver::connect(root_addr, verify)?;
+                let (conn, _) = root_listener.accept().context("accept midtier")?;
+                root_messengers.push(Messenger::new(
+                    Box::new(tcp::TcpDriver::from_stream(conn, verify)?),
+                    chunk,
+                    0,
+                ));
+                let upstream = Messenger::new(
+                    Box::new(up_drv),
+                    chunk,
+                    (job.clients.len() + m + 1) as u32,
+                );
+                let mid_listener = tcp::bind("127.0.0.1:0")?;
+                let mid_addr = mid_listener.local_addr().context("midtier addr")?;
+                let mut shard_msgrs = Vec::new();
+                let mut shard_names = Vec::new();
+                for i in shard.clone() {
+                    let spec = &job.clients[i];
+                    let drv = tcp::TcpDriver::connect(mid_addr, verify)?;
+                    let cm =
+                        Messenger::new(wrap_throttle(Box::new(drv), spec), chunk, (i + 1) as u32);
+                    client_threads.push(spawn_client(job, i, spec, cm, make_executor)?);
+                    let (conn, _) = mid_listener.accept().context("accept leaf")?;
+                    shard_msgrs.push(Messenger::new(
+                        wrap_throttle(Box::new(tcp::TcpDriver::from_stream(conn, verify)?), spec),
+                        chunk,
+                        0,
+                    ));
+                    shard_names.push(spec.name.clone());
+                }
+                mid_threads.push(spawn_midtier(
+                    mid_name,
+                    upstream,
+                    shard_msgrs,
+                    shard_names,
+                    mid_recv_filters.clone(),
+                    mid_policy.clone(),
+                    job.seed ^ (m as u64 + 1),
+                )?);
+            }
+        }
+    }
+
+    // --- root registration: mid-tier nodes register over their upstream
+    let mut handles = Vec::new();
+    for mut m in root_messengers {
+        let name = accept_registration(&mut m)?;
+        handles.push(ClientHandle::spawn(name, m));
+    }
+    // zero-padded names sort to shard order
+    handles.sort_by(|a, b| a.name.cmp(&b.name));
+    let mut comm = Communicator::new(handles, job.seed);
+    let counter = comm.gather_counter();
+
+    let run_result = controller.run(&mut comm, &mut ctx);
+    if run_result.is_err() {
+        comm.shutdown();
+    }
+    drop(comm);
+
+    // --- join mid-tier nodes, then clients
+    let mut errs = Vec::new();
+    for (name, t) in mid_threads {
+        match t.join() {
+            Ok(Ok(_rounds)) => {}
+            Ok(Err(e)) => errs.push(format!("{name}: {e}")),
+            Err(_) => errs.push(format!("{name}: panicked")),
+        }
+    }
+    for (name, t) in client_threads {
+        match t.join() {
+            Ok(Ok(_tasks)) => {}
+            Ok(Err(e)) => errs.push(format!("{name}: {e}")),
+            Err(_) => errs.push(format!("{name}: panicked")),
+        }
+    }
+    run_result?;
+    if !errs.is_empty() {
+        return Err(anyhow!("node failures: {}", errs.join("; ")));
+    }
+    Ok(RunReport {
+        root_gather_peak: counter.peak(),
+    })
 }
 
 fn wrap_throttle(driver: Box<dyn Driver>, spec: &ClientSpec) -> Box<dyn Driver> {
@@ -168,6 +360,41 @@ fn spawn_client(
             rt.run_loop()
         })
         .context("spawn client thread")?;
+    Ok((name, handle))
+}
+
+/// Spawn one mid-tier aggregator node: accept its shard's registrations,
+/// build its communicator, and serve rounds until the upstream bye.
+fn spawn_midtier(
+    name: String,
+    upstream: Messenger,
+    shard_messengers: Vec<Messenger>,
+    shard_names: Vec<String>,
+    recv_filters: Vec<FilterSpec>,
+    policy: GatherPolicy,
+    seed: u64,
+) -> Result<(String, std::thread::JoinHandle<Result<usize>>)> {
+    let tname = name.clone();
+    let shard_names = Arc::new(shard_names);
+    let handle = std::thread::Builder::new()
+        .name(format!("midtier-{name}"))
+        .spawn(move || -> Result<usize> {
+            let mut handles = Vec::new();
+            for mut m in shard_messengers {
+                let n = accept_registration(&mut m)?;
+                handles.push(ClientHandle::spawn(n, m));
+            }
+            // order handles to the shard's job order (TCP accepts may race)
+            handles.sort_by_key(|h| {
+                shard_names
+                    .iter()
+                    .position(|c| *c == h.name)
+                    .unwrap_or(usize::MAX)
+            });
+            let comm = Communicator::new(handles, seed);
+            MidTier::new(&tname, upstream, comm, recv_filters, policy).run()
+        })
+        .context("spawn midtier thread")?;
     Ok((name, handle))
 }
 
@@ -237,6 +464,132 @@ mod tests {
         let a = run(DriverKind::InProc);
         let b = run(DriverKind::Tcp);
         assert_eq!(a, b);
+    }
+
+    /// A hierarchical job over `kind`: n clients, branching b, every
+    /// client adding delta — the tree must converge to the flat oracle.
+    fn add_delta_tree(kind: DriverKind, n: usize, b: usize) {
+        let mut job = crate::config::JobConfig::named(&format!("sim_tree_{n}_{b}"), "none");
+        job.rounds = 2;
+        job.branching = b;
+        job.clients = (0..n)
+            .map(|i| ClientSpec {
+                name: format!("site-{:02}", i + 1),
+                bandwidth_bps: 0,
+                partition: i,
+            })
+            .collect();
+        let n_mid = n.div_ceil(b);
+        job.min_clients = n_mid;
+        let initial = StreamTestExecutor::build_model(3, 500, 1.0);
+        let mut ctl = FedAvg::new(initial, job.rounds, n_mid);
+        ctl.task_name = "stream_test".into();
+        let mut f: Box<ExecutorFactory> = Box::new(|_i, _s| {
+            Ok(Box::new(StreamTestExecutor::new(None, 0.5)) as Box<dyn Executor>)
+        });
+        run_job(&job, kind, &mut ctl, &mut f, &results_dir()).unwrap();
+        let v = ctl.model.get("key_000").unwrap().as_f32().unwrap();
+        assert!(
+            v.iter().all(|&x| (x - 2.0).abs() < 1e-5),
+            "expected 1.0 + 2*0.5, got {}",
+            v[0]
+        );
+        assert_eq!(ctl.history.len(), 2);
+        // the root gathered partials from every mid-tier node
+        assert_eq!(ctl.history[0].per_client.len(), n_mid);
+        assert!(ctl.history[0].per_client[0].0.starts_with("agg-"));
+    }
+
+    #[test]
+    fn hierarchical_tree_matches_flat_oracle_inproc() {
+        add_delta_tree(DriverKind::InProc, 9, 3);
+    }
+
+    #[test]
+    fn hierarchical_tree_matches_flat_oracle_tcp() {
+        add_delta_tree(DriverKind::Tcp, 8, 3);
+    }
+
+    #[test]
+    fn tree_with_uneven_shards_weights_partials_correctly() {
+        // 5 clients, branching 2 -> shards of 2/2/1. Client i adds
+        // delta_i = 0.1*(i+1) with weight 1 each; the global mean is the
+        // plain average of deltas — partial weighting must reproduce it.
+        let n = 5;
+        let mut job = crate::config::JobConfig::named("sim_tree_uneven", "none");
+        job.rounds = 1;
+        job.branching = 2;
+        job.clients = (0..n)
+            .map(|i| ClientSpec {
+                name: format!("site-{:02}", i + 1),
+                bandwidth_bps: 0,
+                partition: i,
+            })
+            .collect();
+        job.min_clients = 3;
+        let initial = StreamTestExecutor::build_model(2, 200, 1.0);
+        let mut ctl = FedAvg::new(initial, 1, 3);
+        ctl.task_name = "stream_test".into();
+        let mut f: Box<ExecutorFactory> = Box::new(|i, _s| {
+            Ok(Box::new(StreamTestExecutor::new(None, 0.1 * (i + 1) as f32))
+                as Box<dyn Executor>)
+        });
+        run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+        let v = ctl.model.get("key_000").unwrap().as_f32().unwrap();
+        let oracle = 1.0 + (0.1 + 0.2 + 0.3 + 0.4 + 0.5) / 5.0;
+        assert!(
+            v.iter().all(|&x| (x - oracle).abs() < 1e-5),
+            "expected {oracle}, got {}",
+            v[0]
+        );
+    }
+
+    #[test]
+    fn tree_shard_straggler_is_dropped_at_the_mid_tier() {
+        // 9 clients, branching 3; the last leaf stalls ~800 ms per task
+        // (and would shift the mean by +100 if folded) while the job's
+        // straggler timeout is 250 ms. The timeout is threaded down to
+        // the shard gathers, so only the stalled leaf's contribution is
+        // lost: its shard forwards a reduced-weight partial, every
+        // subtree reports, and the aggregate stays on the fast-leaf
+        // oracle.
+        let n = 9;
+        let mut job = crate::config::JobConfig::named("sim_tree_straggler", "none");
+        job.rounds = 1;
+        job.branching = 3;
+        job.round_timeout_s = Some(0.25);
+        job.clients = (0..n)
+            .map(|i| ClientSpec {
+                name: format!("site-{:02}", i + 1),
+                bandwidth_bps: 0,
+                partition: i,
+            })
+            .collect();
+        job.min_clients = 3;
+        let initial = StreamTestExecutor::build_model(2, 200, 1.0);
+        let mut ctl = FedAvg::new(initial, 1, 3);
+        ctl.task_name = "stream_test".into();
+        let mut f: Box<ExecutorFactory> = Box::new(|i, _s| {
+            Ok(if i == n - 1 {
+                let mut e = StreamTestExecutor::new(None, 100.0);
+                e.work_ms = 400;
+                Box::new(e) as Box<dyn Executor>
+            } else {
+                Box::new(StreamTestExecutor::new(None, 0.5)) as Box<dyn Executor>
+            })
+        });
+        run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+        // all 3 subtrees reported a partial
+        assert_eq!(ctl.history[0].per_client.len(), 3);
+        // weights: shards fold 3 + 3 + 2 fast leaves, all at value 1.5
+        let v = ctl.model.get("key_000").unwrap().as_f32().unwrap();
+        assert!(
+            v.iter().all(|&x| (x - 1.5).abs() < 1e-5),
+            "stalled leaf leaked into the aggregate: {}",
+            v[0]
+        );
+        let folded: f64 = ctl.history[0].per_client.iter().map(|(.., w)| w).sum();
+        assert!((folded - 8.0).abs() < 1e-9, "expected 8 leaves folded: {folded}");
     }
 
     #[test]

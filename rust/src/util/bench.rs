@@ -90,6 +90,30 @@ pub fn report(s: &BenchStats, throughput: Option<String>) {
     );
 }
 
+/// Write a machine-readable benchmark report to `BENCH_<name>.json` in
+/// the current directory (`make bench` runs from the repo root, so the
+/// perf trajectory of every bench is trackable across PRs). Returns the
+/// path written.
+pub fn emit_json(name: &str, payload: crate::util::json::Json) -> std::io::Result<String> {
+    let path = format!("BENCH_{name}.json");
+    std::fs::write(&path, payload.to_string())?;
+    println!("\nwrote {path}");
+    Ok(path)
+}
+
+/// A stats row as JSON (for [`emit_json`] payloads).
+pub fn stats_json(s: &BenchStats) -> crate::util::json::Json {
+    use crate::util::json::Json;
+    Json::obj([
+        ("name", Json::str(s.name.clone())),
+        ("iters", Json::num(s.iters as f64)),
+        ("mean_ns", Json::num(s.mean_ns)),
+        ("p50_ns", Json::num(s.p50_ns)),
+        ("p95_ns", Json::num(s.p95_ns)),
+        ("min_ns", Json::num(s.min_ns)),
+    ])
+}
+
 /// Section header matching [`report`] columns.
 pub fn header(title: &str) {
     println!("\n== {title} ==");

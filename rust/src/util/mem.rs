@@ -4,7 +4,7 @@
 //! writes a time series.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::mpsc;
+use std::sync::{mpsc, Arc};
 use std::time::{Duration, Instant};
 
 /// Bytes currently held by tracked streaming buffers (global).
@@ -106,25 +106,81 @@ pub fn reset_stage_peak() {
     STAGE_PEAK.store(stage_bytes().max(0) as u64, Ordering::Relaxed);
 }
 
+/// A scoped byte counter (current + high-water mark). The process-global
+/// gather/stage counters above aggregate *every* node in a single-process
+/// simulation; a `Counter` gives one node — e.g. the root of a
+/// hierarchical topology — its own accounting, so per-node peaks are
+/// observable (each `Communicator` owns one).
+#[derive(Debug, Default)]
+pub struct Counter {
+    cur: AtomicI64,
+    peak: AtomicU64,
+}
+
+impl Counter {
+    pub fn new() -> Counter {
+        Counter::default()
+    }
+
+    pub fn alloc(&self, n: usize) {
+        let cur = self.cur.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
+        self.peak.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn free(&self, n: usize) {
+        self.cur.fetch_sub(n as i64, Ordering::Relaxed);
+    }
+
+    /// Bytes currently counted.
+    pub fn bytes(&self) -> i64 {
+        self.cur.load(Ordering::Relaxed)
+    }
+
+    /// High-water mark since creation (or [`Counter::reset_peak`]).
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_peak(&self) {
+        self.peak
+            .store(self.bytes().max(0) as u64, Ordering::Relaxed);
+    }
+}
+
 /// RAII guard counting `n` bytes against the gather counter for its
 /// lifetime: the Communicator creates one per result it hands to the
 /// aggregation fold, so `gather_peak()` measures how many client updates
-/// the server actually held at once.
+/// the server actually held at once. [`GatherGuard::scoped`] additionally
+/// counts against one node's own [`Counter`].
 #[derive(Debug)]
 pub struct GatherGuard {
     n: usize,
+    local: Option<Arc<Counter>>,
 }
 
 impl GatherGuard {
     pub fn new(n: usize) -> GatherGuard {
         gather_track_alloc(n);
-        GatherGuard { n }
+        GatherGuard { n, local: None }
+    }
+
+    /// Count against the global gather counter *and* `counter`.
+    pub fn scoped(counter: &Arc<Counter>, n: usize) -> GatherGuard {
+        gather_track_alloc(n);
+        counter.alloc(n);
+        GatherGuard {
+            n,
+            local: Some(counter.clone()),
+        }
     }
 }
 
 impl Drop for GatherGuard {
     fn drop(&mut self) {
         gather_track_free(self.n);
+        if let Some(c) = &self.local {
+            c.free(self.n);
+        }
     }
 }
 
@@ -286,6 +342,21 @@ mod tests {
         assert!(stage_peak() >= big as u64);
         stage_track_free(big);
         assert!(stage_bytes() < before + big as i64);
+    }
+
+    #[test]
+    fn scoped_counter_tracks_local_and_global() {
+        let c = Arc::new(Counter::new());
+        {
+            let _g = GatherGuard::scoped(&c, 4096);
+            assert_eq!(c.bytes(), 4096);
+            assert!(c.peak() >= 4096);
+            assert!(gather_bytes() >= 4096);
+        }
+        assert_eq!(c.bytes(), 0);
+        assert!(c.peak() >= 4096, "peak survives the guard");
+        c.reset_peak();
+        assert_eq!(c.peak(), 0);
     }
 
     #[test]

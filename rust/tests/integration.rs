@@ -2,8 +2,13 @@
 //! coordinator + executor composed, with the real AOT artifacts when
 //! available (tests gracefully skip if `make artifacts` has not run).
 
-use fedflare::config::{ClientSpec, FilterSpec, JobConfig};
-use fedflare::coordinator::{CyclicWeightTransfer, FedAvg, FederatedEval};
+use std::time::Duration;
+
+use fedflare::config::{AggregatorSpec, ClientSpec, FilterSpec, JobConfig};
+use fedflare::coordinator::{
+    build_aggregator, Aggregator, CyclicWeightTransfer, FedAvg, FederatedEval, SamplePolicy,
+    ScatterAndGather,
+};
 use fedflare::executor::{Executor, StreamTestExecutor};
 use fedflare::message::FlMessage;
 use fedflare::runtime::RuntimeClient;
@@ -103,6 +108,191 @@ fn federated_eval_aggregates_weighted_metrics() {
     assert_eq!(ctl.results.len(), 3);
     assert!((ctl.mean_loss - 0.2).abs() < 1e-9); // equal weights
     assert!((ctl.mean_acc - 0.8).abs() < 1e-9);
+}
+
+// ------------------------------------------------- quorum / stragglers
+
+/// A stream_test executor stalling `work_ms` per tensor.
+fn stalling_executor(delta: f32, work_ms: u64) -> Box<dyn Executor> {
+    let mut e = StreamTestExecutor::new(None, delta);
+    e.work_ms = work_ms;
+    Box::new(e)
+}
+
+#[test]
+fn round_finalizes_at_quorum_and_discards_the_straggler() {
+    // 3 sampled, quorum 2, 250 ms straggler timeout; site-3 stalls for
+    // ~800 ms per task and would shift the mean by +100 if its result
+    // were ever folded. Both rounds must finalize with exactly the two
+    // fast clients, and site-3's stale round-0 result (arriving during
+    // round 1) must be drained and discarded, not folded.
+    let mut job = JobConfig::named("it_straggler", "stream_test");
+    job.rounds = 2;
+    job.clients = three_clients();
+    job.min_clients = 2;
+    let initial = StreamTestExecutor::build_model(2, 512, 1.0);
+    let policy = SamplePolicy {
+        min_clients: 2,
+        sample_count: 3,
+        round_timeout: Some(Duration::from_millis(250)),
+    };
+    let mut ctl = ScatterAndGather::with_aggregator(
+        initial,
+        2,
+        policy,
+        build_aggregator(&AggregatorSpec::Mean),
+    );
+    ctl.task_name = "stream_test".into();
+    let mut f: Box<sim::ExecutorFactory> = Box::new(|i, _s| {
+        Ok(if i == 2 {
+            stalling_executor(100.0, 400)
+        } else {
+            Box::new(StreamTestExecutor::new(None, 0.5)) as Box<dyn Executor>
+        })
+    });
+    sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+    assert_eq!(ctl.history.len(), 2);
+    for rm in &ctl.history {
+        assert_eq!(
+            rm.per_client.len(),
+            2,
+            "round {} should fold exactly the quorum: {:?}",
+            rm.round,
+            rm.per_client
+        );
+        assert!(
+            rm.per_client.iter().all(|(n, ..)| n != "site-3"),
+            "straggler folded in round {}",
+            rm.round
+        );
+    }
+    // 2 rounds x 0.5 from the fast clients only
+    let v = ctl.model.get("key_000").unwrap().as_f32().unwrap();
+    assert!(
+        v.iter().all(|&x| (x - 2.0).abs() < 1e-5),
+        "stale straggler result leaked into a round: {}",
+        v[0]
+    );
+}
+
+#[test]
+fn quorum_gather_tolerates_a_dead_client() {
+    use fedflare::coordinator::{
+        accept_registration, ClientHandle, Communicator, GatherPolicy, StreamingMean,
+    };
+    use fedflare::executor::ClientRuntime;
+    use fedflare::sfm::inproc;
+    use fedflare::streaming::Messenger;
+
+    /// Executor erroring immediately — its client loop dies mid-job.
+    struct FailNow;
+    impl Executor for FailNow {
+        fn execute(&mut self, _t: &FlMessage) -> anyhow::Result<FlMessage> {
+            Err(anyhow::anyhow!("injected failure"))
+        }
+    }
+
+    let mut handles = Vec::new();
+    let mut joins = Vec::new();
+    for i in 0..3usize {
+        let (sa, ca) = inproc::pair(32, &format!("quorum{i}"));
+        let mut server_m = Messenger::new(Box::new(sa), 8192, 0);
+        let client_m = Messenger::new(Box::new(ca), 8192, (i + 1) as u32);
+        let name = format!("site-{}", i + 1);
+        joins.push(std::thread::spawn(move || {
+            let exec: Box<dyn Executor> = if name == "site-3" {
+                Box::new(FailNow)
+            } else {
+                Box::new(StreamTestExecutor::new(None, 0.5))
+            };
+            let mut rt = ClientRuntime::new(&name, client_m, exec, vec![]);
+            let _ = rt.run_loop(); // site-3 errors out — that's the point
+        }));
+        let registered = accept_registration(&mut server_m).unwrap();
+        handles.push(ClientHandle::spawn(registered, server_m));
+    }
+    let mut comm = Communicator::new(handles, 7);
+    let model = StreamTestExecutor::build_model(2, 256, 1.0);
+    let agg: Box<dyn Aggregator> = Box::new(StreamingMean::new(&model));
+    let task = FlMessage::task("stream_test", 0, model);
+    let mut agg = comm
+        .broadcast_and_fold(
+            &task,
+            &[0, 1, 2],
+            agg,
+            &[],
+            &GatherPolicy { quorum: 2, timeout: None },
+            |_r| Ok(()),
+        )
+        .unwrap();
+    assert_eq!(agg.folded(), 2, "exactly the two live clients fold");
+    let out = agg.finalize().unwrap();
+    assert!((out.get("key_000").unwrap().as_f32().unwrap()[0] - 1.5).abs() < 1e-6);
+    // with quorum 3 (all) the same dead client fails the gather
+    let model = StreamTestExecutor::build_model(2, 256, 1.0);
+    let agg: Box<dyn Aggregator> = Box::new(StreamingMean::new(&model));
+    let task = FlMessage::task("stream_test", 1, model);
+    let err = comm.broadcast_and_fold(
+        &task,
+        &[0, 1, 2],
+        agg,
+        &[],
+        &GatherPolicy::all(),
+        |_r| Ok(()),
+    );
+    assert!(err.is_err(), "strict gather must fail on a dead client");
+    comm.shutdown();
+    drop(comm);
+    for j in joins {
+        let _ = j.join();
+    }
+}
+
+// ---------------------------------------------- aggregator strategies
+
+#[test]
+fn fedprox_and_fedopt_run_through_the_generic_workflow() {
+    // every strategy drives the SAME ScatterAndGather workflow; each has
+    // an exact closed-form oracle under the add-delta workload
+    let run = |spec: AggregatorSpec| {
+        let mut job = JobConfig::named("it_aggs", "stream_test");
+        job.rounds = 2;
+        job.min_clients = 2;
+        let initial = StreamTestExecutor::build_model(2, 128, 1.0);
+        let mut ctl = ScatterAndGather::with_aggregator(
+            initial,
+            2,
+            SamplePolicy::strict(2),
+            build_aggregator(&spec),
+        );
+        ctl.task_name = "stream_test".into();
+        let mut f: Box<sim::ExecutorFactory> = Box::new(|_i, _s| {
+            Ok(Box::new(StreamTestExecutor::new(None, 0.5)) as Box<dyn Executor>)
+        });
+        sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+        assert_eq!(ctl.history.len(), 2);
+        ctl.model.get("key_000").unwrap().as_f32().unwrap()[0] as f64
+    };
+    // FedAvg: 1 + 2*0.5
+    assert!((run(AggregatorSpec::Mean) - 2.0).abs() < 1e-5);
+    // FedProx: each round moves d/(1+mu)
+    let mu = 1.0;
+    let fedprox = run(AggregatorSpec::FedProx { mu });
+    assert!((fedprox - (1.0 + 2.0 * 0.5 / (1.0 + mu))).abs() < 1e-5, "{fedprox}");
+    // FedOpt-SGD with zero momentum and lr=1 is exactly FedAvg
+    let sgd = run(AggregatorSpec::FedOptSgd { lr: 1.0, momentum: 0.0 });
+    assert!((sgd - 2.0).abs() < 1e-5, "{sgd}");
+    // FedOpt-SGD momentum accumulates: steps 0.5, 0.5+0.25 => 2.25
+    let sgdm = run(AggregatorSpec::FedOptSgd { lr: 1.0, momentum: 0.5 });
+    assert!((sgdm - 2.25).abs() < 1e-4, "{sgdm}");
+    // FedOpt-Adam with a constant pseudo-gradient steps ~lr per round
+    let adam = run(AggregatorSpec::FedOptAdam {
+        lr: 0.05,
+        beta1: 0.9,
+        beta2: 0.99,
+        eps: 1e-8,
+    });
+    assert!((adam - 1.1).abs() < 1e-3, "{adam}");
 }
 
 #[test]

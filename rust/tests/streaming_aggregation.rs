@@ -39,20 +39,42 @@ fn client_specs(n: usize) -> Vec<ClientSpec> {
 /// Run a stream_test FedAvg job with `n` clients and return the peak
 /// gather bytes observed plus the final model for oracle checking.
 fn run_fedavg(n: usize, keys: usize, key_elems: usize, rounds: usize, delta: f32) -> (u64, FedAvg) {
-    let mut job = JobConfig::named(&format!("sa_peak_{n}"), "stream_test");
+    let (peak, _report, ctl) = run_fedavg_topology(n, 0, keys, key_elems, rounds, delta);
+    (peak, ctl)
+}
+
+/// Like [`run_fedavg`] but with a branching factor (0 = flat), also
+/// returning the run report (per-node root gather peak).
+fn run_fedavg_topology(
+    n: usize,
+    branching: usize,
+    keys: usize,
+    key_elems: usize,
+    rounds: usize,
+    delta: f32,
+) -> (u64, sim::RunReport, FedAvg) {
+    let mut job = JobConfig::named(&format!("sa_peak_{n}_{branching}"), "stream_test");
     job.rounds = rounds;
-    job.min_clients = n;
+    job.branching = branching;
     job.clients = client_specs(n);
+    // the root's children: mid-tier nodes in a tree, clients when flat
+    let n_children = if branching > 1 && n > branching {
+        n.div_ceil(branching)
+    } else {
+        n
+    };
+    job.min_clients = n_children;
     job.stream.chunk_bytes = 16 << 10;
     let initial = StreamTestExecutor::build_model(keys, key_elems, 1.0);
-    let mut ctl = FedAvg::new(initial, rounds, n);
+    let mut ctl = FedAvg::new(initial, rounds, n_children);
     ctl.task_name = "stream_test".into();
     let mut f: Box<sim::ExecutorFactory> = Box::new(move |_i, _s| {
         Ok(Box::new(StreamTestExecutor::new(None, delta)) as Box<dyn Executor>)
     });
     mem::reset_gather_peak();
-    sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
-    (mem::gather_peak(), ctl)
+    let report =
+        sim::run_job(&job, DriverKind::InProc, &mut ctl, &mut f, &results_dir()).unwrap();
+    (mem::gather_peak(), report, ctl)
 }
 
 #[test]
@@ -95,6 +117,57 @@ fn gather_peak_is_flat_across_client_counts_and_tensor_sized() {
             p >= tensor_bytes && p <= 2 * tensor_bytes + chunk,
             "peak #{i} = {p} outside [1, 2] tensor records \
              ({tensor_bytes}/record, {result_bytes}/result): {peaks:?}"
+        );
+    }
+}
+
+#[test]
+fn hierarchical_512_clients_keep_root_gather_memory_flat() {
+    // the scale-out acceptance: 512 clients aggregating through a 2-level
+    // tree (--branching 16 => 32 mid-tier nodes) must complete FedAvg
+    // with ROOT peak gather memory within 2x of a 16-client flat run.
+    // Root fan-in is 32 partial streams instead of 512 client streams,
+    // and the tensor-granular fold caps in-flight decoded records at
+    // STREAM_INFLIGHT(=2) regardless of fan-in — so both peaks are a
+    // couple of tensor records, not O(children x model).
+    let _lock = JOBS.lock().unwrap_or_else(|p| p.into_inner());
+    let (keys, key_elems, rounds, delta) = (2usize, 2048usize, 1usize, 0.5f32);
+    let tensor_bytes = (key_elems * 4) as u64;
+
+    let (_global_flat, flat_report, flat_ctl) =
+        run_fedavg_topology(16, 0, keys, key_elems, rounds, delta);
+    let (_global_tree, tree_report, tree_ctl) =
+        run_fedavg_topology(512, 16, keys, key_elems, rounds, delta);
+
+    // correctness first: every client adds delta with equal weight, so
+    // both topologies land exactly on the oracle
+    let oracle = 1.0f64 + rounds as f64 * delta as f64;
+    for (ctl, label) in [(&flat_ctl, "flat-16"), (&tree_ctl, "tree-512/16")] {
+        for (name, t) in ctl.model.iter() {
+            let v = t.as_f32().expect("f32 model");
+            assert!(
+                v.iter().all(|&x| (x as f64 - oracle).abs() < 1e-5),
+                "{label}: {name} diverged from oracle {oracle}: {}",
+                v[0]
+            );
+        }
+    }
+    // the root of the tree gathered 32 partials, not 512 results
+    assert_eq!(tree_ctl.history[0].per_client.len(), 32);
+    assert!(tree_ctl.history[0].per_client.iter().all(|(n, ..)| n.starts_with("agg-")));
+
+    // the acceptance bound: root peak within 2x of the 16-client flat run
+    let (flat_peak, tree_peak) = (flat_report.root_gather_peak, tree_report.root_gather_peak);
+    assert!(flat_peak > 0 && tree_peak > 0, "{flat_peak} {tree_peak}");
+    assert!(
+        tree_peak <= 2 * flat_peak,
+        "512-client tree root peak {tree_peak} exceeds 2x the 16-client flat peak {flat_peak}"
+    );
+    // and in absolute terms both stay within the 2-in-flight-record cap
+    for (peak, label) in [(flat_peak, "flat-16"), (tree_peak, "tree-512/16")] {
+        assert!(
+            peak <= 2 * tensor_bytes,
+            "{label}: root peak {peak} above two tensor records ({tensor_bytes}/record)"
         );
     }
 }
