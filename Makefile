@@ -4,9 +4,11 @@
 #                    rust/artifacts/ (needs Python with jax installed;
 #                    artifact-dependent Rust tests skip when absent)
 #   make test        tier-1 verification: release build + full test suite
-#   make bench       run every Rust benchmark target; bench_topology also
-#                    writes machine-readable BENCH_topology.json (peak
-#                    bytes + wall-clock per topology) at the repo root
+#   make bench       run every Rust benchmark target; bench_topology and
+#                    bench_jobs also write machine-readable
+#                    BENCH_topology.json / BENCH_jobs.json (peak bytes +
+#                    wall-clock per topology / per concurrent-job count)
+#                    at the repo root
 #   make lint        rustfmt + clippy, as CI runs them
 
 .PHONY: artifacts test bench lint
@@ -21,6 +23,7 @@ bench:
 	cargo bench --bench bench_streaming
 	cargo bench --bench bench_aggregation
 	cargo bench --bench bench_topology
+	cargo bench --bench bench_jobs
 	cargo bench --bench bench_experiments
 	cargo bench --bench bench_runtime
 

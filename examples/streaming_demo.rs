@@ -122,6 +122,7 @@ fn main() -> Result<()> {
     let frame = Frame {
         flags: 0,
         kind: 0,
+        job: 0,
         stream: 1,
         seq: 0,
         total: 1,

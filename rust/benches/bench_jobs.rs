@@ -1,0 +1,134 @@
+//! Multi-job scheduling benchmark: K concurrent FL jobs multiplexed over
+//! one shared client fleet vs the same K jobs run sequentially —
+//! wall-clock plus peak gather/staging bytes per mode, emitted as a
+//! table and as machine-readable `BENCH_jobs.json` so the serving-layer
+//! perf trajectory is tracked from PR to PR.
+//!
+//! Run with `cargo bench --bench bench_jobs`.
+
+use std::time::Instant;
+
+use fedflare::config::{ClientSpec, JobConfig};
+use fedflare::coordinator::{FedAvg, JobRequest, JobScheduler, JobStatus};
+use fedflare::executor::{Executor, StreamTestExecutor};
+use fedflare::sim::{DriverKind, Fleet};
+use fedflare::util::bench::emit_json;
+use fedflare::util::json::Json;
+
+const CLIENTS: usize = 3;
+const ROUNDS: usize = 2;
+const KEYS: usize = 4;
+const KEY_ELEMS: usize = 32_768; // 128 kB per key -> 512 kB model
+const WORK_MS: u64 = 8; // simulated local compute per key
+
+fn clients() -> Vec<ClientSpec> {
+    (0..CLIENTS)
+        .map(|i| ClientSpec {
+            name: format!("site-{:02}", i + 1),
+            bandwidth_bps: 0,
+            partition: i,
+        })
+        .collect()
+}
+
+struct ModeRun {
+    wall_s: f64,
+    gather_peak: u64,
+    stage_peak: u64,
+}
+
+/// Run `k` identical add-delta jobs over one fleet at `max_concurrent`.
+fn run_mode(k: usize, max_concurrent: usize, tag: &str) -> ModeRun {
+    let dir = std::env::temp_dir().join("fedflare_bench_jobs");
+    let _ = std::fs::create_dir_all(&dir);
+    let fleet = Fleet::connect(&clients(), DriverKind::InProc, &Default::default()).unwrap();
+    let sched = JobScheduler::new(fleet.clone(), max_concurrent, &dir.to_string_lossy());
+    fedflare::util::mem::reset_gather_peak();
+    fedflare::util::mem::reset_stage_peak();
+    let t0 = Instant::now();
+    let mut ids = Vec::new();
+    for j in 0..k {
+        let mut job = JobConfig::named(&format!("bench_jobs_{tag}_{k}_{j}"), "stream_test");
+        job.rounds = ROUNDS;
+        job.clients = clients();
+        job.min_clients = CLIENTS;
+        job.stream.chunk_bytes = 32 << 10;
+        let mut ctl = FedAvg::new(
+            StreamTestExecutor::build_model(KEYS, KEY_ELEMS, 1.0),
+            ROUNDS,
+            CLIENTS,
+        );
+        ctl.task_name = "stream_test".into();
+        let factory: fedflare::coordinator::OwnedExecutorFactory = Box::new(move |_i, _s| {
+            let mut e = StreamTestExecutor::new(None, 0.5);
+            e.work_ms = WORK_MS;
+            Ok(Box::new(e) as Box<dyn Executor>)
+        });
+        ids.push(sched.submit(JobRequest {
+            job,
+            controller: Box::new(ctl),
+            factory,
+        }));
+    }
+    for id in ids {
+        let outcome = sched.wait(id);
+        assert_eq!(
+            outcome.status,
+            JobStatus::Completed,
+            "bench job failed: {:?}",
+            outcome.error
+        );
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    sched.drain();
+    fleet.shutdown();
+    ModeRun {
+        wall_s,
+        gather_peak: fedflare::util::mem::gather_peak(),
+        stage_peak: fedflare::util::mem::stage_peak(),
+    }
+}
+
+fn main() {
+    println!("== multi-job scheduling: K jobs over one {CLIENTS}-client fleet ==");
+    println!(
+        "  {:<10} {:>12} {:>12} {:>9} {:>14} {:>14}",
+        "k", "seq wall", "conc wall", "speedup", "gather peak", "stage peak"
+    );
+    let mut rows = Vec::new();
+    for &k in &[1usize, 2, 4, 8] {
+        let seq = run_mode(k, 1, "seq");
+        let conc = run_mode(k, k, "conc");
+        let speedup = seq.wall_s / conc.wall_s.max(1e-9);
+        println!(
+            "  {k:<10} {:>11.2}s {:>11.2}s {speedup:>8.2}x {:>11} kB {:>11} kB",
+            seq.wall_s,
+            conc.wall_s,
+            conc.gather_peak >> 10,
+            conc.stage_peak >> 10,
+        );
+        rows.push(Json::obj([
+            ("k", Json::num(k as f64)),
+            ("wall_s_sequential", Json::num(seq.wall_s)),
+            ("wall_s_concurrent", Json::num(conc.wall_s)),
+            ("speedup", Json::num(speedup)),
+            ("gather_peak_bytes_sequential", Json::num(seq.gather_peak as f64)),
+            ("gather_peak_bytes_concurrent", Json::num(conc.gather_peak as f64)),
+            ("stage_peak_bytes_sequential", Json::num(seq.stage_peak as f64)),
+            ("stage_peak_bytes_concurrent", Json::num(conc.stage_peak as f64)),
+        ]));
+    }
+    emit_json(
+        "jobs",
+        Json::obj([
+            ("bench", Json::str("jobs")),
+            ("clients", Json::num(CLIENTS as f64)),
+            ("rounds", Json::num(ROUNDS as f64)),
+            ("model_bytes", Json::num((KEYS * KEY_ELEMS * 4) as f64)),
+            ("work_ms_per_key", Json::num(WORK_MS as f64)),
+            ("rows", Json::arr(rows)),
+        ]),
+    )
+    .expect("write BENCH_jobs.json");
+    let _ = std::fs::remove_dir_all(std::env::temp_dir().join("fedflare_bench_jobs"));
+}

@@ -50,6 +50,7 @@ fn main() {
 
     header("frame encode/decode + CRC (1 MB frame)");
     let frame = Frame {
+        job: 0,
         flags: 3,
         kind: 2,
         stream: 9,

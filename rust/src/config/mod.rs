@@ -52,6 +52,11 @@ pub struct StreamConfig {
     pub window: usize,
     /// Verify per-frame CRC32 on receive.
     pub verify_crc: bool,
+    /// Evict a partial reassembly stream that made no progress for this
+    /// many seconds (None = never) — bounds receive-side memory stranded
+    /// by vanished peers or aborted jobs; evicted bytes are counted in
+    /// `util::mem::evicted_bytes`.
+    pub stale_stream_age_s: Option<f64>,
 }
 
 impl Default for StreamConfig {
@@ -60,6 +65,7 @@ impl Default for StreamConfig {
             chunk_bytes: crate::DEFAULT_CHUNK_BYTES,
             window: 16,
             verify_crc: true,
+            stale_stream_age_s: None,
         }
     }
 }
@@ -81,6 +87,12 @@ impl StreamConfig {
         }
         if let Some(b) = j.get("verify_crc").as_bool() {
             c.verify_crc = b;
+        }
+        if let Some(t) = j.get("stale_stream_age_s").as_f64() {
+            if t <= 0.0 {
+                return Err(ConfigError("stale_stream_age_s must be > 0".into()));
+            }
+            c.stale_stream_age_s = Some(t);
         }
         Ok(c)
     }
@@ -373,21 +385,7 @@ impl JobConfig {
             job.artifacts_dir = s.to_string();
         }
         if let Some(arr) = j.get("clients").as_arr() {
-            job.clients = arr
-                .iter()
-                .enumerate()
-                .map(|(i, c)| {
-                    Ok(ClientSpec {
-                        name: c
-                            .get("name")
-                            .as_str()
-                            .map(|s| s.to_string())
-                            .unwrap_or_else(|| format!("site-{}", i + 1)),
-                        bandwidth_bps: c.get("bandwidth_bps").as_f64().unwrap_or(0.0) as u64,
-                        partition: c.get("partition").as_usize().unwrap_or(i),
-                    })
-                })
-                .collect::<Result<_, ConfigError>>()?;
+            job.clients = clients_from_json(arr)?;
         }
         if !j.get("stream").is_null() {
             job.stream = StreamConfig::from_json(j.get("stream"))?;
@@ -426,6 +424,151 @@ impl JobConfig {
             .map_err(|e| ConfigError(format!("read {}: {e}", path.display())))?;
         let j = Json::parse(&text).map_err(|e| ConfigError(e.to_string()))?;
         JobConfig::from_json(&j)
+    }
+}
+
+/// Parse a `clients` JSON array into specs (shared by job and schedule
+/// files).
+fn clients_from_json(arr: &[Json]) -> Result<Vec<ClientSpec>, ConfigError> {
+    arr.iter()
+        .enumerate()
+        .map(|(i, c)| {
+            Ok(ClientSpec {
+                name: c
+                    .get("name")
+                    .as_str()
+                    .map(|s| s.to_string())
+                    .unwrap_or_else(|| format!("site-{}", i + 1)),
+                bandwidth_bps: c.get("bandwidth_bps").as_f64().unwrap_or(0.0) as u64,
+                partition: c.get("partition").as_usize().unwrap_or(i),
+            })
+        })
+        .collect()
+}
+
+/// One entry of a [`ScheduleSpec`]: the job plus its scheduling knobs.
+#[derive(Debug, Clone)]
+pub struct ScheduleEntry {
+    pub job: JobConfig,
+    /// Abort the job this many seconds after submission — a chaos/demo
+    /// knob for exercising `abort` in a live schedule.
+    pub abort_after_s: Option<f64>,
+}
+
+/// A job list for the long-lived `fedflare serve` / `submit` modes: the
+/// shared client fleet plus the jobs the scheduler runs over it.
+///
+/// ```json
+/// {
+///   "max_concurrent": 2,
+///   "clients": [{"name": "site-1"}, {"name": "site-2"}],
+///   "jobs": [
+///     {"path": "job_a.json"},
+///     {"path": "job_b.json", "abort_after_s": 3.0},
+///     {"name": "inline_job", "artifact": "stream_test", "rounds": 2}
+///   ]
+/// }
+/// ```
+///
+/// An entry with a `"path"` loads a job file (relative to the schedule
+/// file); any other object is an inline [`JobConfig`]. `clients` may be
+/// omitted: the fleet defaults to the by-name union of every job's
+/// clients. Every job's clients must exist in the fleet, and job names
+/// must be distinct (metrics and histories key on them).
+#[derive(Debug, Clone)]
+pub struct ScheduleSpec {
+    /// Jobs running at once (the scheduler's resource policy).
+    pub max_concurrent: usize,
+    /// The fleet's client set.
+    pub clients: Vec<ClientSpec>,
+    pub entries: Vec<ScheduleEntry>,
+}
+
+impl ScheduleSpec {
+    /// Validate + assemble a schedule: distinct job names, fleet clients
+    /// defaulting to the union, every job's clients covered by the fleet.
+    pub fn assemble(
+        max_concurrent: usize,
+        explicit_clients: Vec<ClientSpec>,
+        entries: Vec<ScheduleEntry>,
+    ) -> Result<ScheduleSpec, ConfigError> {
+        if entries.is_empty() {
+            return Err(ConfigError("schedule has no jobs".into()));
+        }
+        let mut names: Vec<&str> = entries.iter().map(|e| e.job.name.as_str()).collect();
+        names.sort_unstable();
+        for w in names.windows(2) {
+            if w[0] == w[1] {
+                return Err(ConfigError(format!(
+                    "duplicate job name '{}' in schedule",
+                    w[0]
+                )));
+            }
+        }
+        let mut clients = explicit_clients;
+        if clients.is_empty() {
+            for e in &entries {
+                for c in &e.job.clients {
+                    if !clients.iter().any(|x| x.name == c.name) {
+                        clients.push(c.clone());
+                    }
+                }
+            }
+        }
+        for e in &entries {
+            for c in &e.job.clients {
+                if !clients.iter().any(|x| x.name == c.name) {
+                    return Err(ConfigError(format!(
+                        "job '{}' references client '{}' not in the fleet",
+                        e.job.name, c.name
+                    )));
+                }
+            }
+        }
+        Ok(ScheduleSpec {
+            max_concurrent: max_concurrent.max(1),
+            clients,
+            entries,
+        })
+    }
+
+    /// Parse schedule JSON; `base_dir` anchors relative `"path"` entries.
+    pub fn from_json(j: &Json, base_dir: &Path) -> Result<ScheduleSpec, ConfigError> {
+        let arr = j
+            .get("jobs")
+            .as_arr()
+            .ok_or_else(|| ConfigError("schedule needs a 'jobs' array".into()))?;
+        let mut entries = Vec::with_capacity(arr.len());
+        for e in arr {
+            let job = match e.get("path").as_str() {
+                Some(p) => JobConfig::from_file(&base_dir.join(p))?,
+                None => JobConfig::from_json(e)?,
+            };
+            let abort_after_s = match e.get("abort_after_s").as_f64() {
+                Some(t) if t <= 0.0 => {
+                    return Err(ConfigError("abort_after_s must be > 0".into()))
+                }
+                other => other,
+            };
+            entries.push(ScheduleEntry { job, abort_after_s });
+        }
+        let clients = match j.get("clients").as_arr() {
+            Some(arr) => clients_from_json(arr)?,
+            None => Vec::new(),
+        };
+        Self::assemble(
+            j.get("max_concurrent").as_usize().unwrap_or(2),
+            clients,
+            entries,
+        )
+    }
+
+    pub fn from_file(path: &Path) -> Result<ScheduleSpec, ConfigError> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| ConfigError(format!("read {}: {e}", path.display())))?;
+        let j = Json::parse(&text).map_err(|e| ConfigError(e.to_string()))?;
+        let base = path.parent().unwrap_or_else(|| Path::new("."));
+        ScheduleSpec::from_json(&j, base)
     }
 }
 
@@ -558,6 +701,63 @@ mod tests {
             Vec::new()
         );
         assert_eq!(FilterSpec::receive_chain(&[dp]), Vec::new());
+    }
+
+    #[test]
+    fn parse_schedule_with_inline_jobs_and_union_fleet() {
+        let src = r#"{
+            "max_concurrent": 3,
+            "jobs": [
+                {"name": "a", "artifact": "stream_test", "rounds": 2,
+                 "clients": [{"name": "s1"}, {"name": "s2"}]},
+                {"name": "b", "artifact": "stream_test", "rounds": 1,
+                 "clients": [{"name": "s2"}, {"name": "s3"}],
+                 "abort_after_s": 1.5}
+            ]
+        }"#;
+        let s =
+            ScheduleSpec::from_json(&Json::parse(src).unwrap(), Path::new(".")).unwrap();
+        assert_eq!(s.max_concurrent, 3);
+        assert_eq!(s.entries.len(), 2);
+        assert_eq!(s.entries[0].abort_after_s, None);
+        assert_eq!(s.entries[1].abort_after_s, Some(1.5));
+        // union fleet in first-seen order
+        let names: Vec<&str> = s.clients.iter().map(|c| c.name.as_str()).collect();
+        assert_eq!(names, vec!["s1", "s2", "s3"]);
+    }
+
+    #[test]
+    fn schedule_rejects_bad_shapes() {
+        let base = Path::new(".");
+        // no jobs
+        assert!(ScheduleSpec::from_json(&Json::parse(r#"{"jobs": []}"#).unwrap(), base).is_err());
+        // duplicate names
+        let dup = r#"{"jobs": [
+            {"name": "x", "artifact": "a"},
+            {"name": "x", "artifact": "b"}
+        ]}"#;
+        assert!(ScheduleSpec::from_json(&Json::parse(dup).unwrap(), base).is_err());
+        // explicit fleet missing a job's client
+        let missing = r#"{
+            "clients": [{"name": "only"}],
+            "jobs": [{"name": "x", "artifact": "a",
+                      "clients": [{"name": "other"}]}]
+        }"#;
+        assert!(ScheduleSpec::from_json(&Json::parse(missing).unwrap(), base).is_err());
+        // nonpositive abort
+        let bad_abort = r#"{"jobs": [
+            {"name": "x", "artifact": "a", "abort_after_s": 0}
+        ]}"#;
+        assert!(ScheduleSpec::from_json(&Json::parse(bad_abort).unwrap(), base).is_err());
+    }
+
+    #[test]
+    fn stream_config_parses_stale_age() {
+        let j = Json::parse(r#"{"stale_stream_age_s": 2.5}"#).unwrap();
+        assert_eq!(StreamConfig::from_json(&j).unwrap().stale_stream_age_s, Some(2.5));
+        assert_eq!(StreamConfig::default().stale_stream_age_s, None);
+        let bad = Json::parse(r#"{"stale_stream_age_s": 0}"#).unwrap();
+        assert!(StreamConfig::from_json(&bad).is_err());
     }
 
     #[test]

@@ -111,10 +111,10 @@ impl MidTier {
     ///
     /// A round that fails locally (e.g. the whole shard timed out or
     /// died) does **not** go silent — the node forwards an empty-bodied
-    /// error marker instead, which the upstream gather rejects as a
-    /// malformed stream and attributes as this node's failure. The
-    /// upstream must always receive exactly one reply per task, or its
-    /// worker would block forever on a partial that never comes.
+    /// error marker (`error` meta) instead, which the upstream worker
+    /// rejects and attributes as this node's failure. The upstream must
+    /// always receive exactly one reply per task, or its worker would
+    /// block forever on a partial that never comes.
     pub fn run(mut self) -> Result<usize> {
         self.upstream
             .send_msg(&FlMessage::register(&self.name))

@@ -9,6 +9,11 @@
 //!   ([`StreamingMean`], [`FedProx`], [`FedOpt`]; see [`aggregator`]).
 //! * [`hierarchy`] — mid-tier aggregator nodes for tree topologies: each
 //!   folds its client shard and forwards one serialized partial upstream.
+//! * [`scheduler`](JobScheduler) — the session layer's server half: a job
+//!   queue (`submit` / `status` / `abort`, `max_concurrent`) running many
+//!   jobs concurrently over one shared client fleet, each job on its own
+//!   multiplexed channel ([`crate::sfm::mux`]) with its own per-job
+//!   [`ServerCtx`] and controller thread.
 //!
 //! The [`Communicator`] drives [`Executor`](crate::executor::Executor)s on
 //! the clients through tasks — mirroring the paper's Listing 3:
@@ -51,6 +56,7 @@
 mod aggregator;
 mod hierarchy;
 mod sag;
+mod scheduler;
 mod workflows;
 
 pub use aggregator::{
@@ -58,6 +64,9 @@ pub use aggregator::{
 };
 pub use hierarchy::{shard_plan, MidTier};
 pub use sag::{FedAvg, RoundMetrics, SamplePolicy, ScatterAndGather};
+pub use scheduler::{
+    run_one_job, JobOutcome, JobRequest, JobScheduler, JobStatus, OwnedExecutorFactory,
+};
 pub use workflows::{CyclicWeightTransfer, FederatedEval, FederatedInference};
 
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
@@ -280,6 +289,7 @@ impl ClientHandle {
                         match fold.as_mut() {
                             None => {
                                 let m = messenger.recv_msg()?;
+                                reject_error_marker(&m)?;
                                 Ok((m, permit))
                             }
                             Some(ft) => {
@@ -293,6 +303,7 @@ impl ClientHandle {
                                     seen += 1;
                                     Ok(())
                                 })?;
+                                reject_error_marker(&head)?;
                                 ft.finish_stream(&head, seen)?;
                                 Ok((head, permit))
                             }
@@ -836,6 +847,20 @@ pub trait Controller {
     fn name(&self) -> &'static str;
 }
 
+/// A peer that died mid-job announces it with an empty-bodied result
+/// carrying an `error` meta (client task loops via
+/// `ClientRuntime::send_error_marker`, mid-tier nodes on a failed round).
+/// Convert the marker into a worker failure here, so **every** gather
+/// path — tensor-granular fold and whole-message alike — attributes the
+/// death to the peer instead of consuming an empty payload as data
+/// (cyclic weight transfer would otherwise adopt an empty model).
+fn reject_error_marker(msg: &FlMessage) -> Result<(), StreamError> {
+    if let Some(e) = msg.meta.get("error").as_str() {
+        return Err(StreamError::Protocol(format!("peer reported failure: {e}")));
+    }
+    Ok(())
+}
+
 /// Accept-side handshake: wait for a `register` message on a fresh
 /// connection and return the client's name.
 pub fn accept_registration(messenger: &mut Messenger) -> Result<String> {
@@ -867,6 +892,20 @@ mod tests {
         // rounds and seeds decorrelate
         assert_ne!(sample_indices(17, 4, 20, 5), a);
         assert_ne!(sample_indices(18, 3, 20, 5), a);
+    }
+
+    #[test]
+    fn error_markers_are_rejected_not_consumed() {
+        // a dead peer's marker (empty body + `error` meta) must surface
+        // as a worker failure on every gather path — never be handed to
+        // a workflow as data (cyclic weight transfer would adopt an
+        // empty model)
+        let marker = FlMessage::result("train", 0, "c1", crate::tensor::TensorDict::new())
+            .with_meta("error", crate::util::json::Json::str("boom"));
+        let err = reject_error_marker(&marker).unwrap_err();
+        assert!(err.to_string().contains("boom"), "{err}");
+        let ok = FlMessage::result("train", 0, "c1", crate::tensor::TensorDict::new());
+        assert!(reject_error_marker(&ok).is_ok());
     }
 
     #[test]

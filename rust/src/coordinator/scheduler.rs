@@ -1,0 +1,537 @@
+//! The job scheduler: many FL jobs multiplexed over one persistent
+//! client fleet — the piece that turns the one-shot simulator into a
+//! serving system (the paper's platform runs as a long-lived runtime
+//! environment whose server schedules and runs many jobs concurrently
+//! over one connected fleet).
+//!
+//! Layering:
+//!
+//! * [`run_one_job`] — the per-job server side: deploy executors through
+//!   the fleet's [`JobDirectory`](crate::executor::JobDirectory), open
+//!   the job on every participating client, do the per-job registration
+//!   handshake over the job's multiplexed channels, build the per-job
+//!   [`Communicator`] (+ mid-tier aggregator nodes for tree jobs), run
+//!   the [`Controller`], tear down, and collect client-loop outcomes.
+//!   `sim::run_job` is now a thin wrapper: connect a fleet, run one job
+//!   inline, shut the fleet down.
+//! * [`JobScheduler`] — the queue: `submit` / `status` / `abort` /
+//!   `wait`, a `max_concurrent` resource policy, one controller thread
+//!   per running job, each with its own
+//!   [`ServerCtx`](super::ServerCtx). Jobs share the fleet's
+//!   connections; their frames interleave under the session mux.
+//!
+//! Abort semantics: a queued job is simply dequeued; a running job has
+//! its channels severed on both sides (control `job_abort` to every
+//! client + server-side queue closure), so its controller unwinds with a
+//! transport error, its in-flight streams drain into the eviction
+//! counters, and — the part the tests pin down — **concurrent jobs are
+//! untouched** and finish with byte-identical results.
+
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::time::Duration;
+
+use anyhow::{anyhow, bail, Result};
+
+use super::{
+    accept_registration, shard_plan, ClientHandle, Communicator, Controller, GatherPolicy,
+    MidTier, ServerCtx,
+};
+use crate::config::{ClientSpec, FilterSpec, JobConfig};
+use crate::executor::{Executor, JobStart};
+use crate::metrics::MetricsSink;
+use crate::sim::{ExecutorFactory, Fleet, RunReport};
+use crate::streaming::Messenger;
+
+// ------------------------------------------------------------ run one job
+
+/// Run one job's server side over an already-connected [`Fleet`], on the
+/// calling thread. `job_id` must be unique among the fleet's in-flight
+/// jobs (the scheduler allocates monotonically; the single-job wrapper
+/// uses 1). Every client named by `job.clients` must be connected in the
+/// fleet; the job's view of each connection is its own multiplexed
+/// channel, so concurrent callers with distinct ids do not interfere.
+pub fn run_one_job<C: Controller + ?Sized>(
+    fleet: &Fleet,
+    job_id: u32,
+    job: &JobConfig,
+    controller: &mut C,
+    make_executor: &mut ExecutorFactory,
+    results_dir: &str,
+) -> Result<RunReport> {
+    let n = job.clients.len();
+    if n == 0 {
+        bail!("job '{}' has no clients", job.name);
+    }
+    let mut fleet_idx = Vec::with_capacity(n);
+    for c in &job.clients {
+        fleet_idx.push(fleet.index_of(&c.name).ok_or_else(|| {
+            anyhow!("job '{}': client '{}' not in the fleet", job.name, c.name)
+        })?);
+    }
+    let sink = MetricsSink::create(results_dir, &job.name)?;
+    let mut ctx = ServerCtx::new(sink, &job.name);
+
+    // clients the job was actually announced to (their loops will report)
+    let mut opened = 0usize;
+    let result = (|| -> Result<RunReport> {
+        // deploy: one executor + filter chain per participating client,
+        // registered in the shared directory, then announce the job on
+        // every client's control channel (the clients spawn their job
+        // loops and register back over the job's own channel)
+        for (i, spec) in job.clients.iter().enumerate() {
+            let executor = make_executor(i, spec)?;
+            let filters = crate::filters::build_chain(&job.filters, i, n);
+            fleet.directory().offer(
+                job_id,
+                fleet_idx[i],
+                JobStart {
+                    job_name: job.name.clone(),
+                    chunk_bytes: job.stream.chunk_bytes,
+                    stale_stream_age_s: job.stream.stale_stream_age_s,
+                    executor,
+                    filters,
+                },
+            );
+        }
+        for &fi in &fleet_idx {
+            fleet.open_job(fi, job_id, &job.name)?;
+            opened += 1;
+        }
+        let tree = job.branching > 1 && n > job.branching;
+        if tree {
+            run_tree(fleet, job_id, job, &fleet_idx, controller, &mut ctx)
+        } else {
+            run_flat(fleet, job_id, job, &fleet_idx, controller, &mut ctx)
+        }
+    })();
+
+    if result.is_err() {
+        // a job that failed server-side — whether mid-deploy, during the
+        // registration handshake, or mid-round — must not strand offered
+        // deployments or leave client loops parked on a dead channel: a
+        // long-lived fleet outlives the job. Severing is idempotent with
+        // the byes of a clean controller-error teardown.
+        fleet.abort_job(job_id);
+    }
+
+    // collect client-loop outcomes: loops exit on the byes sent during
+    // teardown, or with errors once an abort severed their channels
+    let finishes = fleet
+        .directory()
+        .wait_finished(job_id, opened, Duration::from_secs(30));
+    let mut client_errs: Vec<String> = finishes
+        .iter()
+        .filter_map(|(name, r)| r.as_ref().err().map(|e| format!("{name}: {e}")))
+        .collect();
+    if finishes.len() < opened {
+        client_errs.push(format!(
+            "{} of {opened} opened client loops never reported",
+            opened - finishes.len()
+        ));
+    }
+    let report = result?;
+    if !client_errs.is_empty() {
+        return Err(anyhow!("client failures: {}", client_errs.join("; ")));
+    }
+    Ok(report)
+}
+
+/// Flat star: per-job messengers over the fleet's shared connections.
+fn run_flat<C: Controller + ?Sized>(
+    fleet: &Fleet,
+    job_id: u32,
+    job: &JobConfig,
+    fleet_idx: &[usize],
+    controller: &mut C,
+    ctx: &mut ServerCtx,
+) -> Result<RunReport> {
+    let mut handles = Vec::new();
+    for &fi in fleet_idx {
+        let mut m = fleet.job_messenger(fi, job_id, &job.stream);
+        let name = accept_registration(&mut m)?;
+        handles.push(ClientHandle::spawn(name, m));
+    }
+    // order handles to match job.clients order (registrations may race)
+    handles.sort_by_key(|h| {
+        job.clients
+            .iter()
+            .position(|c| c.name == h.name)
+            .unwrap_or(usize::MAX)
+    });
+    run_controller(handles, job, controller, ctx)
+}
+
+/// 2-level aggregator tree: one mid-tier node per shard folds its leaves
+/// (over the fleet's shared connections) and forwards a job-tagged
+/// partial on a dedicated link; the controller runs against the mid-tier
+/// nodes only.
+fn run_tree<C: Controller + ?Sized>(
+    fleet: &Fleet,
+    job_id: u32,
+    job: &JobConfig,
+    fleet_idx: &[usize],
+    controller: &mut C,
+    ctx: &mut ServerCtx,
+) -> Result<RunReport> {
+    let shards = shard_plan(job.clients.len(), job.branching);
+    // the trailing-codec receive mirror runs where client streams land:
+    // on the mid-tier nodes (partials forwarded upstream are plain f32)
+    let mid_recv_filters = FilterSpec::receive_chain(&job.filters);
+    // straggler timeout threads down to the shard gathers: a stalled
+    // leaf costs only its own contribution (quorum 1 — the shard forwards
+    // a reduced-weight partial) instead of wedging its whole subtree
+    let mid_policy = match job.round_timeout_s {
+        None => GatherPolicy::all(),
+        Some(t) => GatherPolicy {
+            quorum: 1,
+            timeout: Some(Duration::from_secs_f64(t)),
+        },
+    };
+    let mut mid_threads = Vec::new();
+    let mut root_messengers = Vec::new();
+    for (m, shard) in shards.iter().enumerate() {
+        let mid_name = format!("agg-{m:03}");
+        let (root_m, up_m) =
+            fleet.midtier_link(job_id, &job.stream, (job.clients.len() + m + 1) as u32)?;
+        root_messengers.push(root_m);
+        let mut shard_msgrs = Vec::new();
+        let mut shard_names = Vec::new();
+        for i in shard.clone() {
+            shard_msgrs.push(fleet.job_messenger(fleet_idx[i], job_id, &job.stream));
+            shard_names.push(job.clients[i].name.clone());
+        }
+        mid_threads.push(spawn_midtier(
+            mid_name,
+            up_m,
+            shard_msgrs,
+            shard_names,
+            mid_recv_filters.clone(),
+            mid_policy.clone(),
+            job.seed ^ (m as u64 + 1),
+        )?);
+    }
+    let mut handles = Vec::new();
+    for mut m in root_messengers {
+        let name = accept_registration(&mut m)?;
+        handles.push(ClientHandle::spawn(name, m));
+    }
+    // zero-padded names sort to shard order
+    handles.sort_by(|a, b| a.name.cmp(&b.name));
+    let run_result = run_controller(handles, job, controller, ctx);
+
+    let mut errs = Vec::new();
+    for (name, t) in mid_threads {
+        match t.join() {
+            Ok(Ok(_rounds)) => {}
+            Ok(Err(e)) => errs.push(format!("{name}: {e}")),
+            Err(_) => errs.push(format!("{name}: panicked")),
+        }
+    }
+    let report = run_result?;
+    if !errs.is_empty() {
+        return Err(anyhow!("node failures: {}", errs.join("; ")));
+    }
+    Ok(report)
+}
+
+/// Build the per-job communicator, run the controller, tear down (byes
+/// flow on failure too, so idle peers unblock before they are joined).
+fn run_controller<C: Controller + ?Sized>(
+    handles: Vec<ClientHandle>,
+    job: &JobConfig,
+    controller: &mut C,
+    ctx: &mut ServerCtx,
+) -> Result<RunReport> {
+    let mut comm = Communicator::new(handles, job.seed);
+    let counter = comm.gather_counter();
+    let run_result = controller.run(&mut comm, ctx);
+    if run_result.is_err() {
+        comm.shutdown();
+    }
+    drop(comm);
+    run_result?;
+    Ok(RunReport {
+        root_gather_peak: counter.peak(),
+    })
+}
+
+/// Spawn one mid-tier aggregator node: accept its shard's registrations,
+/// build its communicator, and serve rounds until the upstream bye.
+fn spawn_midtier(
+    name: String,
+    upstream: Messenger,
+    shard_messengers: Vec<Messenger>,
+    shard_names: Vec<String>,
+    recv_filters: Vec<FilterSpec>,
+    policy: GatherPolicy,
+    seed: u64,
+) -> Result<(String, std::thread::JoinHandle<Result<usize>>)> {
+    let tname = name.clone();
+    let shard_names = Arc::new(shard_names);
+    let handle = std::thread::Builder::new()
+        .name(format!("midtier-{name}"))
+        .spawn(move || -> Result<usize> {
+            let mut handles = Vec::new();
+            for mut m in shard_messengers {
+                let n = accept_registration(&mut m)?;
+                handles.push(ClientHandle::spawn(n, m));
+            }
+            // order handles to the shard's job order (races possible)
+            handles.sort_by_key(|h| {
+                shard_names
+                    .iter()
+                    .position(|c| *c == h.name)
+                    .unwrap_or(usize::MAX)
+            });
+            let comm = Communicator::new(handles, seed);
+            MidTier::new(&tname, upstream, comm, recv_filters, policy).run()
+        })
+        .map_err(|e| anyhow!("spawn midtier thread: {e}"))?;
+    Ok((name, handle))
+}
+
+// -------------------------------------------------------------- scheduler
+
+/// Owned per-client executor factory of a submitted job.
+pub type OwnedExecutorFactory =
+    Box<dyn FnMut(usize, &ClientSpec) -> Result<Box<dyn Executor>> + Send>;
+
+/// One job handed to the scheduler: config + workflow + executor factory.
+pub struct JobRequest {
+    pub job: JobConfig,
+    pub controller: Box<dyn Controller + Send>,
+    pub factory: OwnedExecutorFactory,
+}
+
+/// Lifecycle of a scheduled job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum JobStatus {
+    Queued,
+    Running,
+    Completed,
+    Failed,
+    Aborted,
+}
+
+/// Terminal outcome of one job. The controller is handed back so callers
+/// can read its history / final model.
+pub struct JobOutcome {
+    pub status: JobStatus,
+    pub report: Option<RunReport>,
+    pub error: Option<String>,
+    pub controller: Option<Box<dyn Controller + Send>>,
+}
+
+struct SchedInner {
+    queue: VecDeque<(u32, JobRequest)>,
+    statuses: HashMap<u32, JobStatus>,
+    outcomes: HashMap<u32, JobOutcome>,
+    abort_requested: HashSet<u32>,
+    running: usize,
+    next_id: u32,
+    threads: Vec<std::thread::JoinHandle<()>>,
+}
+
+struct SchedCore {
+    fleet: Arc<Fleet>,
+    results_dir: String,
+    max_concurrent: usize,
+    inner: Mutex<SchedInner>,
+    cv: Condvar,
+}
+
+/// The multi-job scheduler (see module docs). Cheap to clone — clones
+/// share the queue.
+#[derive(Clone)]
+pub struct JobScheduler {
+    core: Arc<SchedCore>,
+}
+
+impl JobScheduler {
+    /// A scheduler over a connected fleet. `max_concurrent` is the
+    /// resource policy: jobs beyond it queue in submission order.
+    pub fn new(fleet: Arc<Fleet>, max_concurrent: usize, results_dir: &str) -> JobScheduler {
+        JobScheduler {
+            core: Arc::new(SchedCore {
+                fleet,
+                results_dir: results_dir.to_string(),
+                max_concurrent: max_concurrent.max(1),
+                inner: Mutex::new(SchedInner {
+                    queue: VecDeque::new(),
+                    statuses: HashMap::new(),
+                    outcomes: HashMap::new(),
+                    abort_requested: HashSet::new(),
+                    running: 0,
+                    next_id: 1, // 0 is the fleet control channel
+                    threads: Vec::new(),
+                }),
+                cv: Condvar::new(),
+            }),
+        }
+    }
+
+    /// Enqueue a job; it starts as soon as a concurrency slot frees.
+    /// Returns the job id (also the wire-level `job` of all its frames).
+    pub fn submit(&self, req: JobRequest) -> u32 {
+        let mut inner = self.core.inner.lock().unwrap();
+        let id = inner.next_id;
+        inner.next_id += 1;
+        inner.statuses.insert(id, JobStatus::Queued);
+        inner.queue.push_back((id, req));
+        Self::dispatch(&self.core, inner);
+        id
+    }
+
+    /// Current lifecycle state (None = unknown id).
+    pub fn status(&self, id: u32) -> Option<JobStatus> {
+        self.core.inner.lock().unwrap().statuses.get(&id).copied()
+    }
+
+    /// Jobs not yet terminal (queued + running).
+    pub fn active(&self) -> usize {
+        let inner = self.core.inner.lock().unwrap();
+        inner.running + inner.queue.len()
+    }
+
+    /// Abort a job. Queued: dequeued untouched. Running: its channels are
+    /// severed everywhere — the controller unwinds, in-flight streams
+    /// drain into eviction counters, concurrent jobs are unaffected.
+    /// Terminal/unknown: no-op.
+    pub fn abort(&self, id: u32) {
+        let mut inner = self.core.inner.lock().unwrap();
+        match inner.statuses.get(&id).copied() {
+            Some(JobStatus::Queued) => {
+                if let Some(pos) = inner.queue.iter().position(|(j, _)| *j == id) {
+                    let (_, req) = inner.queue.remove(pos).expect("position just found");
+                    inner.statuses.insert(id, JobStatus::Aborted);
+                    inner.outcomes.insert(
+                        id,
+                        JobOutcome {
+                            status: JobStatus::Aborted,
+                            report: None,
+                            error: None,
+                            controller: Some(req.controller),
+                        },
+                    );
+                    self.core.cv.notify_all();
+                }
+            }
+            Some(JobStatus::Running) => {
+                inner.abort_requested.insert(id);
+                drop(inner);
+                self.core.fleet.abort_job(id);
+            }
+            _ => {}
+        }
+    }
+
+    /// Block until `id` reaches a terminal state; consumes its outcome
+    /// (a second wait on the same id reports the terminal status with
+    /// the outcome already claimed).
+    pub fn wait(&self, id: u32) -> JobOutcome {
+        let mut inner = self.core.inner.lock().unwrap();
+        loop {
+            if let Some(out) = inner.outcomes.remove(&id) {
+                return out;
+            }
+            match inner.statuses.get(&id).copied() {
+                None => {
+                    return JobOutcome {
+                        status: JobStatus::Failed,
+                        report: None,
+                        error: Some(format!("job {id} was never submitted")),
+                        controller: None,
+                    }
+                }
+                Some(status @ (JobStatus::Completed | JobStatus::Failed | JobStatus::Aborted)) => {
+                    return JobOutcome {
+                        status,
+                        report: None,
+                        error: Some(format!("job {id}: outcome already claimed")),
+                        controller: None,
+                    }
+                }
+                Some(JobStatus::Queued | JobStatus::Running) => {}
+            }
+            inner = self.core.cv.wait(inner).unwrap();
+        }
+    }
+
+    /// Wait until every submitted job is terminal, then join the job
+    /// threads (outcomes stay claimable via [`JobScheduler::wait`]).
+    pub fn drain(&self) {
+        let mut inner = self.core.inner.lock().unwrap();
+        while inner.running > 0 || !inner.queue.is_empty() {
+            inner = self.core.cv.wait(inner).unwrap();
+        }
+        let threads: Vec<_> = inner.threads.drain(..).collect();
+        drop(inner);
+        for t in threads {
+            let _ = t.join();
+        }
+    }
+
+    /// Pop queued jobs into controller threads while capacity allows.
+    fn dispatch(core: &Arc<SchedCore>, mut inner: MutexGuard<'_, SchedInner>) {
+        // reap finished controller threads so a long-lived scheduler's
+        // bookkeeping stays proportional to running jobs, not total ever
+        inner.threads.retain(|h| !h.is_finished());
+        while inner.running < core.max_concurrent {
+            let Some((id, req)) = inner.queue.pop_front() else {
+                break;
+            };
+            inner.running += 1;
+            inner.statuses.insert(id, JobStatus::Running);
+            let core2 = core.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("job-{id}"))
+                .spawn(move || Self::run_job_thread(core2, id, req))
+                .expect("spawn job controller thread");
+            inner.threads.push(handle);
+        }
+    }
+
+    fn run_job_thread(core: Arc<SchedCore>, id: u32, req: JobRequest) {
+        let JobRequest {
+            job,
+            mut controller,
+            mut factory,
+        } = req;
+        let mut shim = |i: usize, s: &ClientSpec| factory(i, s);
+        let result = run_one_job(
+            &core.fleet,
+            id,
+            &job,
+            controller.as_mut(),
+            &mut shim,
+            &core.results_dir,
+        );
+        let mut inner = core.inner.lock().unwrap();
+        let aborted = inner.abort_requested.remove(&id);
+        let outcome = match result {
+            Ok(report) => JobOutcome {
+                // an abort that raced a clean finish is still a finish
+                status: JobStatus::Completed,
+                report: Some(report),
+                error: None,
+                controller: Some(controller),
+            },
+            Err(e) => JobOutcome {
+                status: if aborted {
+                    JobStatus::Aborted
+                } else {
+                    JobStatus::Failed
+                },
+                report: None,
+                error: Some(e.to_string()),
+                controller: Some(controller),
+            },
+        };
+        inner.statuses.insert(id, outcome.status);
+        inner.outcomes.insert(id, outcome);
+        inner.running -= 1;
+        core.cv.notify_all();
+        Self::dispatch(&core, inner);
+    }
+}

@@ -1,6 +1,10 @@
 //! Client-side execution (paper §2.2/§2.3): the [`Executor`] trait, the
-//! task loop, and the [`ClientApi`] facade mirroring the paper's
-//! Listing 1 (`init` / `receive` / `send` / `is_running`).
+//! task loop, the [`ClientApi`] facade mirroring the paper's Listing 1
+//! (`init` / `receive` / `send` / `is_running`) — and the
+//! [`MultiJobRuntime`], the multi-tenant client: one persistent
+//! connection servicing many concurrent FL jobs, one [`Executor`]
+//! instance per active job, task streams interleaving over the session
+//! mux ([`crate::sfm::mux`]).
 //!
 //! Results leave through `Messenger::send_msg`, which streams wire
 //! format v2 — one lazily-encoded tensor record at a time — so a client
@@ -14,11 +18,18 @@ pub use executors::{
     BatchSource, EmbedExecutor, StreamTestExecutor, TokenSource, TrainExecutor, VecBatchSource,
 };
 
+use std::collections::HashMap;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
 use anyhow::{anyhow, Result};
 
 use crate::filters::Filter;
 use crate::message::{FlMessage, Kind};
+use crate::sfm::mux::MuxConn;
 use crate::streaming::Messenger;
+use crate::tensor::TensorDict;
+use crate::util::json::Json;
 
 /// A client-side task handler (the paper's Executor running inside each
 /// FL client).
@@ -38,6 +49,8 @@ pub struct ClientRuntime {
     /// idle time waiting for the server's next task (the paper's Fig-5
     /// "nearly idle state" of the fast client shows up here).
     pub timings: Vec<(f64, f64, f64)>,
+    /// (task name, round) of the task last received (error attribution).
+    last_task: Option<(String, usize)>,
 }
 
 impl ClientRuntime {
@@ -53,6 +66,7 @@ impl ClientRuntime {
             executor,
             filters,
             timings: Vec::new(),
+            last_task: None,
         }
     }
 
@@ -63,7 +77,7 @@ impl ClientRuntime {
             .map_err(|e| anyhow!("register: {e}"))?;
         let mut done = 0usize;
         loop {
-            let t0 = std::time::Instant::now();
+            let t0 = Instant::now();
             let task = self
                 .messenger
                 .recv_msg()
@@ -72,19 +86,43 @@ impl ClientRuntime {
             if task.kind == Kind::Bye {
                 return Ok(done);
             }
-            let t1 = std::time::Instant::now();
+            self.last_task = Some((task.task.clone(), task.round));
+            let t1 = Instant::now();
             let mut result = self.executor.execute(&task)?;
             result.client = self.name.clone();
             result.round = task.round;
             result.body =
                 crate::filters::apply_result_chain(&mut self.filters, result.body, task.round);
             let exec_s = t1.elapsed().as_secs_f64();
-            let t2 = std::time::Instant::now();
+            let t2 = Instant::now();
             self.messenger
                 .send_msg(&result)
                 .map_err(|e| anyhow!("{}: send result: {e}", self.name))?;
+            // the task is fully answered: a later failure (e.g. a severed
+            // channel while idle) must NOT emit a marker for this round —
+            // it would corrupt the next gather as a stray message
+            self.last_task = None;
             self.timings.push((recv_s, exec_s, t2.elapsed().as_secs_f64()));
             done += 1;
+        }
+    }
+
+    /// Best-effort error marker after a failed task loop: an empty-bodied
+    /// result for the round in flight, so a server gather waiting on this
+    /// client attributes the failure to it instead of blocking on frames
+    /// that will never come (the server's per-record aggregation rejects
+    /// the tensor-less stream; same mechanism mid-tier nodes use). On a
+    /// dedicated connection the peer notices the disconnect anyway; on a
+    /// **shared multiplexed** connection the transport outlives this job,
+    /// so the marker is the only death notice.
+    pub fn send_error_marker(&mut self, err: &str) {
+        let Some((task, round)) = self.last_task.clone() else {
+            return;
+        };
+        let msg = FlMessage::result(&task, round, &self.name, TensorDict::new())
+            .with_meta("error", Json::str(err));
+        if let Err(e) = self.messenger.send_msg(&msg) {
+            log::debug!("{}: error marker not delivered: {e}", self.name);
         }
     }
 }
@@ -162,6 +200,199 @@ impl ClientApi {
         self.messenger
             .send_msg(&result)
             .map_err(|e| anyhow!("send: {e}"))
+    }
+}
+
+// ------------------------------------------------- multi-job client side
+
+/// Everything one fleet client needs to service one job: built by the
+/// scheduler at submit time (the in-process stand-in for FLARE's job
+/// deployment step) and claimed by the client's [`MultiJobRuntime`] when
+/// the server's `job_open` control message arrives.
+pub struct JobStart {
+    pub job_name: String,
+    /// Streaming chunk size of this job's channel.
+    pub chunk_bytes: usize,
+    /// Stale-stream eviction age for this job's reassembly (seconds).
+    pub stale_stream_age_s: Option<f64>,
+    pub executor: Box<dyn Executor>,
+    pub filters: Vec<Box<dyn Filter>>,
+}
+
+/// One client task-loop outcome: (client name, tasks-done or error).
+pub type ClientReport = (String, Result<usize, String>);
+
+/// In-process job registry shared by the scheduler (server side) and the
+/// fleet's client runtimes: per-(job, client) start specs go in at
+/// submit, per-job client task-loop outcomes come out at teardown.
+#[derive(Default)]
+pub struct JobDirectory {
+    inner: Mutex<DirInner>,
+    cv: Condvar,
+}
+
+#[derive(Default)]
+struct DirInner {
+    starts: HashMap<(u32, usize), JobStart>,
+    finished: HashMap<u32, Vec<ClientReport>>,
+}
+
+impl JobDirectory {
+    pub fn new() -> Arc<JobDirectory> {
+        Arc::new(JobDirectory::default())
+    }
+
+    /// Register client `client`'s start spec for `job`.
+    pub fn offer(&self, job: u32, client: usize, start: JobStart) {
+        self.inner.lock().unwrap().starts.insert((job, client), start);
+    }
+
+    /// Claim (and consume) a start spec.
+    fn claim(&self, job: u32, client: usize) -> Option<JobStart> {
+        self.inner.lock().unwrap().starts.remove(&(job, client))
+    }
+
+    /// Drop any unclaimed start specs for `job` (abort before open).
+    pub fn revoke(&self, job: u32) {
+        self.inner
+            .lock()
+            .unwrap()
+            .starts
+            .retain(|(j, _), _| *j != job);
+    }
+
+    /// Record one client's task-loop outcome for `job`.
+    pub fn finish(&self, job: u32, client: &str, result: Result<usize, String>) {
+        self.inner
+            .lock()
+            .unwrap()
+            .finished
+            .entry(job)
+            .or_default()
+            .push((client.to_string(), result));
+        self.cv.notify_all();
+    }
+
+    /// Block until `n` clients have reported for `job` (or `timeout`
+    /// passes), returning whatever reports arrived.
+    pub fn wait_finished(&self, job: u32, n: usize, timeout: Duration) -> Vec<ClientReport> {
+        let deadline = Instant::now() + timeout;
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            let have = inner.finished.get(&job).map(Vec::len).unwrap_or(0);
+            let now = Instant::now();
+            if have >= n || now >= deadline {
+                return inner.finished.remove(&job).unwrap_or_default();
+            }
+            let (guard, _) = self.cv.wait_timeout(inner, deadline - now).unwrap();
+            inner = guard;
+        }
+    }
+}
+
+/// The multi-job client runtime (tentpole of the session layer's client
+/// half): one per fleet connection. It services the connection's control
+/// channel (job 0) — `job_open` spawns one [`ClientRuntime`] task loop
+/// over the job's multiplexed channel with its own [`Executor`] instance,
+/// `job_abort` severs a job's channel so its loop unwinds — and joins
+/// every job loop at the fleet-level bye. One connection, many jobs, one
+/// executor per active job, interleaved task streams.
+pub struct MultiJobRuntime {
+    name: String,
+    index: usize,
+    mux: MuxConn,
+    directory: Arc<JobDirectory>,
+}
+
+impl MultiJobRuntime {
+    pub fn new(
+        name: &str,
+        index: usize,
+        mux: MuxConn,
+        directory: Arc<JobDirectory>,
+    ) -> MultiJobRuntime {
+        MultiJobRuntime {
+            name: name.to_string(),
+            index,
+            mux,
+            directory,
+        }
+    }
+
+    /// Service control messages until the fleet-level bye (or transport
+    /// close), then join every job loop. Per-job failures are reported
+    /// through the [`JobDirectory`], never up from here — a failed job
+    /// must not take the connection's other jobs down.
+    pub fn run(self) -> Result<()> {
+        let mut control =
+            Messenger::new(Box::new(self.mux.handle(0)), 4096, (self.index + 1) as u32);
+        let mut loops: Vec<(u32, std::thread::JoinHandle<()>)> = Vec::new();
+        loop {
+            let msg = match control.recv_msg() {
+                Ok(m) => m,
+                Err(_) => break, // transport gone: fleet shutdown
+            };
+            if msg.kind == Kind::Bye {
+                break;
+            }
+            let job = msg.metric("job").unwrap_or(0.0) as u32;
+            match msg.task.as_str() {
+                "job_open" => {
+                    // reap loops of completed jobs so a long-lived fleet
+                    // connection doesn't accumulate one handle per job
+                    // ever served (finished threads just detach)
+                    loops.retain(|(_, h)| !h.is_finished());
+                    let Some(start) = self.directory.claim(job, self.index) else {
+                        self.directory.finish(
+                            job,
+                            &self.name,
+                            Err(format!("no start spec for job {job}")),
+                        );
+                        continue;
+                    };
+                    let mut messenger = Messenger::new(
+                        Box::new(self.mux.handle(job)),
+                        start.chunk_bytes,
+                        (self.index + 1) as u32,
+                    );
+                    if let Some(policy) =
+                        crate::sfm::EvictionPolicy::stale_after_s(start.stale_stream_age_s)
+                    {
+                        messenger.set_reassembly_policy(policy);
+                    }
+                    let name = self.name.clone();
+                    let dir = self.directory.clone();
+                    let handle = std::thread::Builder::new()
+                        .name(format!("client-{}-job{job}", self.name))
+                        .spawn(move || {
+                            let mut rt =
+                                ClientRuntime::new(&name, messenger, start.executor, start.filters);
+                            let res = rt.run_loop().map_err(|e| e.to_string());
+                            if let Err(e) = &res {
+                                rt.send_error_marker(e);
+                            }
+                            dir.finish(job, &name, res);
+                        })
+                        .map_err(|e| anyhow!("{}: spawn job {job} loop: {e}", self.name))?;
+                    loops.push((job, handle));
+                }
+                "job_abort" => {
+                    // sever the job's inbound queue: its loop observes
+                    // Closed on the next task receive and unwinds, while
+                    // in-flight frames drain into the eviction counters
+                    self.mux.close_job(job);
+                }
+                other => log::warn!("{}: unknown control message '{other}'", self.name),
+            }
+        }
+        // fleet shutdown: sever every job channel before joining, so a
+        // loop still parked on its next task (a job torn down mid-flight)
+        // observes Closed instead of deadlocking the join
+        for (job, h) in loops {
+            self.mux.close_job(job);
+            let _ = h.join();
+        }
+        Ok(())
     }
 }
 

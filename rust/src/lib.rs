@@ -22,7 +22,15 @@
 //! [`coordinator::FedOpt`]), hierarchical aggregator trees
 //! ([`coordinator::MidTier`]), cyclic weight transfer, federated
 //! evaluation, federated inference, the full streaming stack — is pure
-//! Rust and needs no artifacts at all. Model
+//! Rust and needs no artifacts at all. Since the session-layer refactor
+//! it is also a *serving system*: one persistent client fleet
+//! ([`sim::Fleet`]) carries many concurrent FL jobs, each multiplexed
+//! over its own channel of the shared connections ([`sfm::mux`], wire
+//! format v3's `job` header field) and scheduled by
+//! [`coordinator::JobScheduler`] (`submit`/`status`/`abort`,
+//! `max_concurrent`) — `fedflare serve`. Single-job entry points
+//! ([`sim::run_job`], `fedflare run`) are thin wrappers over the same
+//! path. Model
 //! execution additionally needs the AOT artifacts from `make artifacts`
 //! (run at the repo root; writes `rust/artifacts/`) and a build with
 //! `--features pjrt` so the [`runtime`] can load HLO text via PJRT (the

@@ -5,6 +5,10 @@
 //!     regenerate a paper figure/table into results/
 //! fedflare run --job <job.json> [--driver inproc|tcp]
 //!     run an FL job described by a JSON job file (in-process simulation)
+//! fedflare serve --schedule <sched.json> [--driver inproc|tcp]
+//!     long-lived serving: many jobs multiplexed over one client fleet
+//! fedflare submit --jobs a.json,b.json [--max-concurrent N]
+//!     dispatch a list of job files over one shared fleet
 //! fedflare server --port <p> --job <job.json>
 //! fedflare client --connect <host:port> --name <site> --job <job.json>
 //!     multi-process deployment (server + one process per client)
@@ -14,10 +18,10 @@
 
 use anyhow::{anyhow, bail, Result};
 
-use fedflare::config::{AggregatorSpec, JobConfig};
+use fedflare::config::{AggregatorSpec, JobConfig, ScheduleEntry, ScheduleSpec};
 use fedflare::coordinator::{
-    accept_registration, build_aggregator, ClientHandle, Communicator, Controller, SamplePolicy,
-    ScatterAndGather, ServerCtx,
+    accept_registration, build_aggregator, ClientHandle, Communicator, Controller, JobRequest,
+    JobScheduler, JobStatus, SamplePolicy, ScatterAndGather, ServerCtx,
 };
 use fedflare::executor::ClientRuntime;
 use fedflare::metrics::MetricsSink;
@@ -49,6 +53,8 @@ fn dispatch(args: &[String]) -> Result<()> {
     match cmd.as_str() {
         "repro" => cmd_repro(rest),
         "run" => cmd_run(rest),
+        "serve" => cmd_serve(rest),
+        "submit" => cmd_submit(rest),
         "server" => cmd_server(rest),
         "client" => cmd_client(rest),
         "list-artifacts" => cmd_list(rest),
@@ -67,6 +73,8 @@ fn print_usage() {
          commands:\n\
          \x20 repro <fig5|fig6|fig7|fig8|table1|fig9|all>   regenerate paper experiments\n\
          \x20 run --job <file>                              run an FL job (in-process)\n\
+         \x20 serve --schedule <file>                       multi-job serving over one fleet\n\
+         \x20 submit --jobs a.json,b.json                   dispatch job files over one fleet\n\
          \x20 server / client                               multi-process deployment\n\
          \x20 list-artifacts                                show compiled model artifacts\n\n\
          run `fedflare repro fig5 --help` etc. for per-command options",
@@ -290,18 +298,7 @@ fn cmd_run(args: &[String]) -> Result<()> {
         },
         initial.byte_size() as f64 / (1 << 20) as f64
     );
-    let mut ctl: Box<dyn Controller> = match job.workflow {
-        fedflare::config::Workflow::FedAvg => Box::new(build_sag(&job, initial)),
-        fedflare::config::Workflow::Cyclic => Box::new(
-            fedflare::coordinator::CyclicWeightTransfer::new(initial, job.rounds),
-        ),
-        fedflare::config::Workflow::FedEval => {
-            Box::new(fedflare::coordinator::FederatedEval::new(initial))
-        }
-        fedflare::config::Workflow::FedInference => {
-            Box::new(fedflare::coordinator::FederatedInference::new(initial))
-        }
-    };
+    let mut ctl = controller_for(&job, initial);
     let job2 = job.clone();
     let rc2 = rc.clone();
     let mut factory: Box<sim::ExecutorFactory> =
@@ -356,6 +353,168 @@ fn build_sag(job: &JobConfig, initial: fedflare::tensor::TensorDict) -> ScatterA
         fedflare::config::FilterSpec::receive_chain(&job.filters)
     };
     c
+}
+
+/// Build the job's workflow controller (owned, schedulable).
+fn controller_for(
+    job: &JobConfig,
+    initial: fedflare::tensor::TensorDict,
+) -> Box<dyn Controller + Send> {
+    match job.workflow {
+        fedflare::config::Workflow::FedAvg => Box::new(build_sag(job, initial)),
+        fedflare::config::Workflow::Cyclic => Box::new(
+            fedflare::coordinator::CyclicWeightTransfer::new(initial, job.rounds),
+        ),
+        fedflare::config::Workflow::FedEval => {
+            Box::new(fedflare::coordinator::FederatedEval::new(initial))
+        }
+        fedflare::config::Workflow::FedInference => {
+            Box::new(fedflare::coordinator::FederatedInference::new(initial))
+        }
+    }
+}
+
+// ----------------------------------------------------------- serve/submit
+
+fn cmd_serve(args: &[String]) -> Result<()> {
+    let p = Args::new(
+        "serve",
+        "long-lived multi-job serving: one client fleet, many concurrent FL jobs",
+    )
+    .opt("schedule", None, "path to schedule JSON (required; see README)")
+    .opt("driver", Some("inproc"), "transport: inproc | tcp")
+    .opt(
+        "max-concurrent",
+        None,
+        "override the schedule's concurrent-job cap",
+    )
+    .opt("out-dir", Some("results"), "metrics/results directory")
+    .parse(args)
+    .map_err(|e| anyhow!(e))?;
+    let spec = ScheduleSpec::from_file(std::path::Path::new(
+        p.req("schedule").map_err(|e| anyhow!(e))?,
+    ))?;
+    run_schedule(spec, &p)
+}
+
+fn cmd_submit(args: &[String]) -> Result<()> {
+    let p = Args::new("submit", "dispatch a list of job files over one shared fleet")
+        .opt(
+            "jobs",
+            None,
+            "comma-separated job JSON paths (required)",
+        )
+        .opt("driver", Some("inproc"), "transport: inproc | tcp")
+        .opt("max-concurrent", Some("2"), "jobs running at once")
+        .opt("out-dir", Some("results"), "metrics/results directory")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let mut entries = Vec::new();
+    for path in p.req("jobs").map_err(|e| anyhow!(e))?.split(',') {
+        entries.push(ScheduleEntry {
+            job: JobConfig::from_file(std::path::Path::new(path.trim()))?,
+            abort_after_s: None,
+        });
+    }
+    let spec = ScheduleSpec::assemble(
+        p.get_usize("max-concurrent").map_err(|e| anyhow!(e))?,
+        Vec::new(),
+        entries,
+    )?;
+    run_schedule(spec, &p)
+}
+
+/// Connect the fleet, submit every scheduled job, report outcomes.
+fn run_schedule(mut spec: ScheduleSpec, p: &fedflare::util::cli::Parsed) -> Result<()> {
+    if p.get("max-concurrent").is_some() {
+        spec.max_concurrent = p
+            .get_usize("max-concurrent")
+            .map_err(|e| anyhow!(e))?
+            .max(1);
+    }
+    let kind = match p.get("driver").unwrap() {
+        "inproc" => sim::DriverKind::InProc,
+        "tcp" => sim::DriverKind::Tcp,
+        other => bail!("unknown driver {other}"),
+    };
+    let out_dir = p.get("out-dir").unwrap().to_string();
+    // fleet-level link config comes from the first job (window/CRC);
+    // each job keeps its own chunking on its multiplexed channel
+    let stream = spec.entries[0].job.stream.clone();
+    let fleet = sim::Fleet::connect(&spec.clients, kind, &stream)?;
+    let sched = JobScheduler::new(fleet.clone(), spec.max_concurrent, &out_dir);
+    println!(
+        "serve: fleet of {} clients over {}, {} jobs, max {} concurrent",
+        spec.clients.len(),
+        match kind {
+            sim::DriverKind::InProc => "inproc",
+            sim::DriverKind::Tcp => "tcp",
+        },
+        spec.entries.len(),
+        spec.max_concurrent
+    );
+    let mut ids: Vec<(u32, String)> = Vec::new();
+    let mut timers = Vec::new();
+    for entry in spec.entries {
+        let job = entry.job;
+        let rc = if job.artifact == "stream_test" {
+            RuntimeClient::start(&job.artifacts_dir).ok()
+        } else {
+            Some(RuntimeClient::start(&job.artifacts_dir)?)
+        };
+        let initial = repro::common::initial_model(&job, rc.as_ref())?;
+        let controller = controller_for(&job, initial);
+        let name = job.name.clone();
+        let job2 = job.clone();
+        let factory: fedflare::coordinator::OwnedExecutorFactory =
+            Box::new(move |i, _spec| repro::common::build_executor(&job2, i, rc.as_ref()));
+        let id = sched.submit(JobRequest {
+            job,
+            controller,
+            factory,
+        });
+        println!("serve: submitted '{name}' as job {id}");
+        if let Some(t) = entry.abort_after_s {
+            let sched2 = sched.clone();
+            timers.push(std::thread::spawn(move || {
+                std::thread::sleep(std::time::Duration::from_secs_f64(t));
+                sched2.abort(id);
+            }));
+        }
+        ids.push((id, name));
+    }
+    let mut failed = Vec::new();
+    for (id, name) in &ids {
+        let outcome = sched.wait(*id);
+        match outcome.status {
+            JobStatus::Completed => {
+                let peak = outcome.report.map(|r| r.root_gather_peak).unwrap_or(0);
+                println!(
+                    "serve: job {id} '{name}' completed (root peak gather {:.1} kB)",
+                    peak as f64 / 1024.0
+                );
+            }
+            JobStatus::Aborted => {
+                println!("serve: job {id} '{name}' aborted");
+            }
+            status => {
+                println!(
+                    "serve: job {id} '{name}' {status:?}: {}",
+                    outcome.error.as_deref().unwrap_or("unknown error")
+                );
+                failed.push(name.clone());
+            }
+        }
+    }
+    sched.drain();
+    for t in timers {
+        let _ = t.join();
+    }
+    fleet.shutdown();
+    if !failed.is_empty() {
+        bail!("{} job(s) failed: {}", failed.len(), failed.join(", "));
+    }
+    Ok(())
 }
 
 /// Apply the shared workflow-policy CLI overrides to the job.

@@ -392,6 +392,7 @@ impl Iterator for FrameIter<'_> {
         let frame = Frame {
             flags,
             kind: self.kind,
+            job: 0,
             stream: self.stream,
             seq: self.seq,
             total: self.total,

@@ -38,21 +38,26 @@ pub fn pair(window: usize, label: &str) -> (InProcDriver, InProcDriver) {
     )
 }
 
+/// Blocking receive off a shared inbound channel (polled so shutdown is
+/// observable even without senders).
+fn recv_from(rx: &Mutex<Receiver<Frame>>) -> Result<Frame, SfmError> {
+    let rx = rx.lock().expect("inproc rx poisoned");
+    loop {
+        match rx.recv_timeout(Duration::from_millis(200)) {
+            Ok(f) => return Ok(f),
+            Err(RecvTimeoutError::Timeout) => continue,
+            Err(RecvTimeoutError::Disconnected) => return Err(SfmError::Closed),
+        }
+    }
+}
+
 impl Driver for InProcDriver {
     fn send(&mut self, frame: Frame) -> Result<(), SfmError> {
         self.tx.send(frame).map_err(|_| SfmError::Closed)
     }
 
     fn recv(&mut self) -> Result<Frame, SfmError> {
-        let rx = self.rx.lock().expect("inproc rx poisoned");
-        // poll with timeout so shutdown is observable even without senders
-        loop {
-            match rx.recv_timeout(Duration::from_millis(200)) {
-                Ok(f) => return Ok(f),
-                Err(RecvTimeoutError::Timeout) => continue,
-                Err(RecvTimeoutError::Disconnected) => return Err(SfmError::Closed),
-            }
-        }
+        recv_from(&self.rx)
     }
 
     fn name(&self) -> String {
@@ -68,6 +73,40 @@ impl InProcDriver {
             Err(TrySendError::Full(_)) => Err(SfmError::Decode("window full".into())),
             Err(TrySendError::Disconnected(_)) => Err(SfmError::Closed),
         }
+    }
+
+    /// Receive-only view of this endpoint, sharing the same inbound
+    /// channel but holding **no sender** — the mux split: the pump thread
+    /// owns the receive half while senders keep the original, so dropping
+    /// the original is what actually disconnects the peer (a receive half
+    /// keeping a sender clone alive would deadlock two pumps against each
+    /// other at shutdown).
+    pub fn recv_half(&self) -> InProcRecvHalf {
+        InProcRecvHalf {
+            rx: self.rx.clone(),
+            label: format!("{}:rx", self.label),
+        }
+    }
+}
+
+/// Receive-only half of an [`InProcDriver`] (see
+/// [`InProcDriver::recv_half`]); `send` always fails.
+pub struct InProcRecvHalf {
+    rx: Arc<Mutex<Receiver<Frame>>>,
+    label: String,
+}
+
+impl Driver for InProcRecvHalf {
+    fn send(&mut self, _frame: Frame) -> Result<(), SfmError> {
+        Err(SfmError::Closed)
+    }
+
+    fn recv(&mut self) -> Result<Frame, SfmError> {
+        recv_from(&self.rx)
+    }
+
+    fn name(&self) -> String {
+        self.label.clone()
     }
 }
 
@@ -98,11 +137,26 @@ mod tests {
     }
 
     #[test]
+    fn recv_half_receives_while_original_sends() {
+        let (mut a, mut b) = pair(4, "h");
+        let mut half = b.recv_half();
+        a.send(chunk_frames(0, 1, b"ping", 64).remove(0)).unwrap();
+        assert_eq!(half.recv().unwrap().payload, b"ping");
+        // the half cannot send, and dropping the *original* endpoint (the
+        // only sender) disconnects the peer's receive
+        assert!(matches!(half.send(chunk_frames(0, 2, b"x", 8).remove(0)), Err(SfmError::Closed)));
+        drop(b);
+        drop(half);
+        assert!(matches!(a.recv(), Err(SfmError::Closed)));
+    }
+
+    #[test]
     fn window_blocks_via_try_send() {
         let (mut a, _b) = pair(2, "w");
         let f = Frame {
             flags: 0,
             kind: 0,
+            job: 0,
             stream: 1,
             seq: 0,
             total: 10,
@@ -121,6 +175,7 @@ mod tests {
         let f = Frame {
             flags: 0,
             kind: 0,
+            job: 0,
             stream: 1,
             seq: 0,
             total: 1,

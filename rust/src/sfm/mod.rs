@@ -13,27 +13,40 @@
 //!
 //! ```text
 //! magic  u32  = 0x4653_464D ("FSFM")
-//! ver    u8   = 1
+//! ver    u8   = 1 (v2 framing) | 3 (multiplexed framing)
 //! flags  u8   (bit0 FIRST, bit1 LAST)
 //! kind   u16  (application tag, e.g. control vs data)
+//! job    u32  (wire v3 only: session/job id, 0 = default job)
 //! stream u64  (unique per message)
 //! seq    u32  (chunk index)
 //! total  u32  (chunk count for the stream)
 //! crc    u32  (CRC32 of payload)
 //! len    u32  | payload bytes
 //! ```
+//!
+//! **Wire format v3** adds the `job` field so one connection carries
+//! interleaved frames from many concurrent FL jobs (see [`mux`]). A frame
+//! whose `job` is 0 encodes in the v2 framing (`ver = 1`, no job field) —
+//! byte-identical to what pre-multiplexing peers emit — and every
+//! receiver accepts both, so v2 peers interoperate as "everything is the
+//! default job".
 
 pub mod inproc;
+pub mod mux;
 pub mod tcp;
 pub mod throttle;
 
 use std::collections::BTreeMap;
+use std::time::{Duration, Instant};
 
 use crate::util::bytes::{crc32, Reader, Writer};
 use crate::util::mem;
 
 pub const MAGIC: u32 = 0x4653_464D;
+/// Frame header version of the v2 wire format (no job field).
 pub const VERSION: u8 = 1;
+/// Frame header version of the multiplexed v3 wire format (adds `job`).
+pub const VERSION_V3: u8 = 3;
 
 pub const FLAG_FIRST: u8 = 1 << 0;
 pub const FLAG_LAST: u8 = 1 << 1;
@@ -44,6 +57,10 @@ pub struct Frame {
     pub flags: u8,
     /// Application tag (unused by SFM itself, available to upper layers).
     pub kind: u16,
+    /// Session/job id (wire v3). 0 is the default job: layers above the
+    /// [`mux`] always build frames with 0 and the mux stamps the real id,
+    /// so single-job paths stay byte-compatible with v2 peers.
+    pub job: u32,
     pub stream: u64,
     pub seq: u32,
     pub total: u32,
@@ -58,13 +75,22 @@ impl Frame {
         self.flags & FLAG_LAST != 0
     }
 
-    /// Encode including the length prefix and CRC.
+    /// Encode including the length prefix and CRC. Frames of the default
+    /// job (0) encode in the v2 framing — byte-identical to pre-v3 peers;
+    /// a nonzero `job` selects the v3 header.
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::with_capacity(32 + self.payload.len());
+        let mut w = Writer::with_capacity(36 + self.payload.len());
         w.u32(MAGIC);
-        w.u8(VERSION);
+        if self.job == 0 {
+            w.u8(VERSION);
+        } else {
+            w.u8(VERSION_V3);
+        }
         w.u8(self.flags);
         w.u16(self.kind);
+        if self.job != 0 {
+            w.u32(self.job);
+        }
         w.u64(self.stream);
         w.u32(self.seq);
         w.u32(self.total);
@@ -74,6 +100,8 @@ impl Frame {
     }
 
     /// Decode one frame from a buffer (must contain exactly one frame).
+    /// Accepts both the v2 framing (`ver = 1`, `job = 0`) and the v3
+    /// framing (`ver = 3`, explicit job id).
     pub fn decode(buf: &[u8], verify_crc: bool) -> Result<Frame, SfmError> {
         let mut r = Reader::new(buf);
         let magic = r.u32().map_err(|e| SfmError::Decode(e.to_string()))?;
@@ -81,11 +109,16 @@ impl Frame {
             return Err(SfmError::Decode(format!("bad magic {magic:#x}")));
         }
         let ver = r.u8().map_err(|e| SfmError::Decode(e.to_string()))?;
-        if ver != VERSION {
+        if ver != VERSION && ver != VERSION_V3 {
             return Err(SfmError::Decode(format!("unsupported version {ver}")));
         }
         let flags = r.u8().map_err(|e| SfmError::Decode(e.to_string()))?;
         let kind = r.u16().map_err(|e| SfmError::Decode(e.to_string()))?;
+        let job = if ver == VERSION_V3 {
+            r.u32().map_err(|e| SfmError::Decode(e.to_string()))?
+        } else {
+            0
+        };
         let stream = r.u64().map_err(|e| SfmError::Decode(e.to_string()))?;
         let seq = r.u32().map_err(|e| SfmError::Decode(e.to_string()))?;
         let total = r.u32().map_err(|e| SfmError::Decode(e.to_string()))?;
@@ -102,6 +135,7 @@ impl Frame {
         Ok(Frame {
             flags,
             kind,
+            job,
             stream,
             seq,
             total,
@@ -120,6 +154,11 @@ pub trait Driver: Send {
     fn recv(&mut self) -> Result<Frame, SfmError>;
     /// Human-readable driver name (for logs/metrics).
     fn name(&self) -> String;
+    /// Best-effort: tear the underlying transport down so a concurrent
+    /// `recv` on a cloned handle of the same connection (see
+    /// [`tcp::TcpDriver::try_clone`]) unblocks with `Closed`. Default:
+    /// no-op — channel transports disconnect when their peers drop.
+    fn shutdown(&mut self) {}
 }
 
 /// Split a payload into SFM frames of `chunk_bytes` (the paper's 1 MB).
@@ -141,6 +180,7 @@ pub fn chunk_frames(kind: u16, stream: u64, payload: &[u8], chunk_bytes: usize) 
         frames.push(Frame {
             flags,
             kind,
+            job: 0,
             stream,
             seq,
             total,
@@ -158,19 +198,64 @@ struct Partial {
     chunks: Vec<Option<Vec<u8>>>,
     received: usize,
     bytes: usize,
+    /// When the stream last made progress (eviction clock).
+    last: Instant,
+}
+
+/// Bounds on reassembly memory held for dead or aborted peers: a stream
+/// that stops making progress (its sender died, its job was aborted)
+/// would otherwise strand its staged chunks forever. Evicted bytes are
+/// counted in [`mem::evicted_bytes`]. The default is unbounded —
+/// single-job paths keep today's semantics unless a limit is configured
+/// (e.g. from `StreamConfig::stale_stream_age_s`).
+#[derive(Debug, Clone, Copy, Default)]
+pub struct EvictionPolicy {
+    /// Evict a partial stream that made no progress for this long.
+    pub max_age: Option<Duration>,
+    /// Cap on total buffered bytes: exceeding it evicts least-recently
+    /// progressed *other* streams until under the cap (0 = unbounded).
+    pub max_bytes: usize,
+}
+
+impl EvictionPolicy {
+    /// Age-only policy from a config-level seconds knob
+    /// (`StreamConfig::stale_stream_age_s`) — the one constructor both
+    /// ends of a job channel share, so server and client reassembly
+    /// limits cannot drift apart.
+    pub fn stale_after_s(age_s: Option<f64>) -> Option<EvictionPolicy> {
+        age_s.map(|s| EvictionPolicy {
+            max_age: Some(Duration::from_secs_f64(s)),
+            max_bytes: 0,
+        })
+    }
 }
 
 /// Reassembles interleaved streams of frames back into payloads. Tracks
 /// buffer memory via [`crate::util::mem`] so the Fig-5 experiment can
-/// observe the receive-side footprint.
+/// observe the receive-side footprint; an [`EvictionPolicy`] bounds what
+/// dead peers can strand.
 #[derive(Default)]
 pub struct Reassembler {
     partials: BTreeMap<u64, Partial>,
+    policy: EvictionPolicy,
 }
 
 impl Reassembler {
     pub fn new() -> Reassembler {
         Reassembler::default()
+    }
+
+    /// A reassembler with stale-stream eviction limits.
+    pub fn with_policy(policy: EvictionPolicy) -> Reassembler {
+        Reassembler {
+            partials: BTreeMap::new(),
+            policy,
+        }
+    }
+
+    /// Replace the eviction limits.
+    pub fn set_policy(&mut self, policy: EvictionPolicy) {
+        self.policy = policy;
     }
 
     /// Feed one frame; returns the completed (stream, kind, payload) when
@@ -191,6 +276,7 @@ impl Reassembler {
             },
             received: 0,
             bytes: 0,
+            last: Instant::now(),
         });
         if entry.chunks.len() != total {
             return Err(SfmError::Decode(format!(
@@ -218,6 +304,7 @@ impl Reassembler {
         entry.bytes += frame.payload.len();
         entry.chunks[seq] = Some(frame.payload);
         entry.received += 1;
+        entry.last = Instant::now();
         if entry.received == total {
             let p = self.partials.remove(&stream).unwrap();
             let mut out = Vec::with_capacity(p.bytes);
@@ -230,7 +317,58 @@ impl Reassembler {
             mem::track_alloc(out.len());
             return Ok(Some((stream, p.kind, out)));
         }
+        self.enforce(Some(stream));
         Ok(None)
+    }
+
+    /// Evict partial streams violating the policy right now (also runs on
+    /// every `push`, sparing the stream being pushed from the byte cap).
+    /// Returns bytes evicted.
+    pub fn sweep(&mut self) -> usize {
+        self.enforce(None)
+    }
+
+    fn enforce(&mut self, current: Option<u64>) -> usize {
+        let mut evicted = 0usize;
+        if let Some(age) = self.policy.max_age {
+            let now = Instant::now();
+            let stale: Vec<u64> = self
+                .partials
+                .iter()
+                .filter(|(id, p)| now.duration_since(p.last) >= age && Some(**id) != current)
+                .map(|(id, _)| *id)
+                .collect();
+            for id in stale {
+                evicted += self.evict(id);
+            }
+        }
+        if self.policy.max_bytes > 0 {
+            while self.buffered_bytes() > self.policy.max_bytes {
+                // least-recently progressed stream other than the pusher
+                let victim = self
+                    .partials
+                    .iter()
+                    .filter(|(id, _)| Some(**id) != current)
+                    .min_by_key(|(_, p)| p.last)
+                    .map(|(id, _)| *id);
+                match victim {
+                    Some(id) => evicted += self.evict(id),
+                    None => break,
+                }
+            }
+        }
+        evicted
+    }
+
+    /// Drop one partial stream, releasing its tracked bytes into the
+    /// eviction counter.
+    fn evict(&mut self, stream: u64) -> usize {
+        let Some(p) = self.partials.remove(&stream) else {
+            return 0;
+        };
+        mem::track_free(p.bytes);
+        mem::track_evicted(p.bytes);
+        p.bytes
     }
 
     /// Streams currently mid-reassembly (for diagnostics).
@@ -386,6 +524,24 @@ impl RecordAssembler {
         self.staged
     }
 
+    /// Abandon the in-progress stream (aborted job, vanished peer):
+    /// staged bytes are released and counted in [`mem::evicted_bytes`],
+    /// and the assembler reports done. Returns the bytes evicted.
+    pub fn abandon(&mut self) -> usize {
+        let n = self.staged;
+        if n > 0 {
+            mem::stage_track_free(n);
+            mem::track_evicted(n);
+        }
+        self.staged = 0;
+        self.buf.clear();
+        self.pending.clear();
+        if let Some((_, _, total)) = self.latched {
+            self.next_seq = total;
+        }
+        n
+    }
+
     /// Reconcile the staging counter with current buffer contents.
     fn retrack(&mut self) {
         let now = self.buf.len() + self.pending.values().map(Vec::len).sum::<usize>();
@@ -427,15 +583,65 @@ mod tests {
         let f = Frame {
             flags: FLAG_FIRST | FLAG_LAST,
             kind: 7,
+            job: 0,
             stream: 0xDEADBEEF,
             seq: 0,
             total: 1,
             payload: vec![1, 2, 3, 4, 5],
         };
         let enc = f.encode();
+        // default job: v2 framing on the wire
+        assert_eq!(enc[4], VERSION);
         let f2 = Frame::decode(&enc, true).unwrap();
         assert_eq!(f, f2);
         assert!(f2.is_first() && f2.is_last());
+    }
+
+    #[test]
+    fn v3_frame_roundtrips_and_carries_the_job_id() {
+        let f = Frame {
+            flags: FLAG_FIRST,
+            kind: 4,
+            job: 0x0BADF00D,
+            stream: 99,
+            seq: 0,
+            total: 2,
+            payload: vec![8; 33],
+        };
+        let enc = f.encode();
+        assert_eq!(enc[4], VERSION_V3);
+        // the v3 header costs exactly the 4-byte job field over v2
+        let mut v2 = f.clone();
+        v2.job = 0;
+        assert_eq!(enc.len(), v2.encode().len() + 4);
+        let f2 = Frame::decode(&enc, true).unwrap();
+        assert_eq!(f2, f);
+        // CRC still verified under v3
+        let mut bad = enc.clone();
+        let n = bad.len();
+        bad[n - 1] ^= 0x01;
+        assert!(matches!(
+            Frame::decode(&bad, true),
+            Err(SfmError::Crc { .. })
+        ));
+    }
+
+    #[test]
+    fn v2_frames_decode_as_the_default_job() {
+        // a pre-v3 peer's frame (ver=1, no job field) is accepted with
+        // job 0 — the compatibility contract of the v3 header
+        let f = Frame {
+            flags: FLAG_LAST,
+            kind: 2,
+            job: 0,
+            stream: 5,
+            seq: 1,
+            total: 2,
+            payload: vec![1, 2, 3],
+        };
+        let decoded = Frame::decode(&f.encode(), true).unwrap();
+        assert_eq!(decoded.job, 0);
+        assert_eq!(decoded, f);
     }
 
     #[test]
@@ -443,6 +649,7 @@ mod tests {
         let f = Frame {
             flags: 0,
             kind: 0,
+            job: 0,
             stream: 1,
             seq: 0,
             total: 1,
@@ -554,6 +761,7 @@ mod tests {
         let mk = |seq, total| Frame {
             flags: 0,
             kind: 0,
+            job: 0,
             stream: 5,
             seq,
             total,
@@ -571,6 +779,7 @@ mod tests {
         let mk = |kind, seq| Frame {
             flags: 0,
             kind,
+            job: 0,
             stream: 6,
             seq,
             total: 2,
@@ -658,6 +867,7 @@ mod tests {
         let mk = |stream: u64, kind: u16, seq: u32, total: u32| Frame {
             flags: 0,
             kind,
+            job: 0,
             stream,
             seq,
             total,
@@ -727,6 +937,78 @@ mod tests {
             // is preserved
             prop::assert_that(got == recs, "record mismatch")
         });
+    }
+
+    #[test]
+    fn stale_streams_are_evicted_by_age() {
+        let mut re = Reassembler::with_policy(EvictionPolicy {
+            max_age: Some(std::time::Duration::from_millis(30)),
+            max_bytes: 0,
+        });
+        let before_evicted = mem::evicted_bytes();
+        // a stream that never completes (its peer "died")
+        let payload = vec![7u8; 4000];
+        let dead = chunk_frames(0, 1, &payload, 1000);
+        re.push(dead[0].clone()).unwrap();
+        re.push(dead[1].clone()).unwrap();
+        assert_eq!(re.in_flight(), 1);
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let evicted = re.sweep();
+        assert_eq!(evicted, 2000, "both buffered chunks evicted");
+        assert_eq!(re.in_flight(), 0);
+        assert_eq!(re.buffered_bytes(), 0);
+        assert!(mem::evicted_bytes() >= before_evicted + 2000);
+
+        // eviction also runs inside push: a fresh stream's frame sweeps
+        // the stale one out without an explicit sweep() call
+        re.push(dead[0].clone()).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        let live_payload = vec![1u8; 2000];
+        let live = chunk_frames(0, 2, &live_payload, 1000);
+        re.push(live[0].clone()).unwrap();
+        assert_eq!(re.in_flight(), 1, "stale stream gone, live one kept");
+        assert_eq!(re.buffered_bytes(), 1000);
+    }
+
+    #[test]
+    fn byte_cap_evicts_oldest_other_stream_not_the_pusher() {
+        let mut re = Reassembler::with_policy(EvictionPolicy {
+            max_age: None,
+            max_bytes: 2500,
+        });
+        let (pa, pb) = (vec![1u8; 4000], vec![2u8; 4000]);
+        let a = chunk_frames(0, 1, &pa, 1000);
+        let b = chunk_frames(0, 2, &pb, 1000);
+        re.push(a[0].clone()).unwrap();
+        re.push(a[1].clone()).unwrap(); // stream 1: 2000 bytes
+        re.push(b[0].clone()).unwrap(); // total 3000 > 2500: evict stream 1
+        assert_eq!(re.in_flight(), 1);
+        assert_eq!(re.buffered_bytes(), 1000);
+        // the surviving stream still completes correctly
+        let mut done = None;
+        for f in b.iter().skip(1).cloned() {
+            done = re.push(f).unwrap().or(done);
+        }
+        let (stream, _, payload) = done.unwrap();
+        assert_eq!(stream, 2);
+        assert_eq!(payload, vec![2u8; 4000]);
+        mem::track_free(payload.len());
+    }
+
+    #[test]
+    fn record_assembler_abandon_releases_staging_as_evicted() {
+        let recs: Vec<Vec<u8>> = vec![vec![5u8; 900]];
+        let stream = record_stream(&recs.iter().map(Vec::as_slice).collect::<Vec<_>>());
+        let frames = chunk_frames(4, 21, &stream, 256);
+        let mut asm = RecordAssembler::new();
+        asm.push(frames[0].clone()).unwrap();
+        assert!(asm.staged_bytes() > 0);
+        let before = mem::evicted_bytes();
+        let n = asm.abandon();
+        assert!(n > 0);
+        assert_eq!(asm.staged_bytes(), 0);
+        assert!(asm.is_done());
+        assert!(mem::evicted_bytes() >= before + n as u64);
     }
 
     #[test]

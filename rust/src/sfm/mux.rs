@@ -1,0 +1,523 @@
+//! Session-layer multiplexing: one [`Driver`] connection carrying the
+//! interleaved frames of many concurrent FL jobs (wire format v3 — the
+//! `job` field in the frame header).
+//!
+//! [`MuxConn`] wraps the two directions of a connection (send half +
+//! receive half; see [`crate::sfm::inproc::InProcDriver::recv_half`] and
+//! [`crate::sfm::tcp::TcpDriver::try_clone`]) and runs a **receive pump**
+//! thread that routes every inbound frame to a per-job queue.
+//! [`MuxConn::handle`] returns a [`MuxHandle`] — a per-job [`Driver`]
+//! view: `send` stamps the job id onto the frame (selecting the v3
+//! framing), `recv` pops the job's queue. A
+//! [`Messenger`](crate::streaming::Messenger) built over a handle is
+//! therefore a per-job view over the shared demultiplexer, with zero
+//! changes above the driver seam.
+//!
+//! **The pump never blocks on a slow job** — per-job queues are
+//! unbounded, deliberately: a bounded queue would let one job's parked
+//! consumer (e.g. a flow-gated gather worker) stall the pump and with it
+//! every other job on the connection — head-of-line blocking that can
+//! deadlock two jobs gated across two connections. Memory stays bounded
+//! anyway because the FL protocol is strictly request/response per job
+//! channel: a client sends one result per task and is not tasked again
+//! until the server consumed it, so a queue holds at most ~one encoded
+//! result (plus control frames) at any time, and the server-side
+//! *decoded* bound is still enforced by the gather's flow gate.
+//!
+//! **Throttling is per connection, not per job**: a bandwidth cap is one
+//! shared token bucket applied to the link as a whole, taken *outside*
+//! the send lock so a job waiting for budget never holds the connection
+//! hostage — one throttled job cannot starve another's frames, it can
+//! only compete for the shared budget.
+//!
+//! **Aborts drain, they don't strand**: [`MuxConn::close_job`] severs a
+//! job's queue; frames already buffered and frames still arriving for a
+//! closed job are dropped and counted in
+//! [`mem::evicted_bytes`](crate::util::mem::evicted_bytes), so an aborted
+//! job's in-flight streams are drained instead of wedging the pump or
+//! leaking staged bytes. A dropping [`MuxHandle`] half-closes its job
+//! ([`KIND_MUX_FIN`]) so the peer's side of the channel reads `Closed`
+//! instead of stalling on a vanished endpoint.
+
+use std::collections::{HashMap, HashSet};
+use std::sync::mpsc::{Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::throttle::TokenBucket;
+use super::{Driver, Frame, SfmError, FLAG_FIRST, FLAG_LAST};
+use crate::util::mem;
+
+/// Frame kind of the mux-level per-job FIN (half-close): a dropping
+/// [`MuxHandle`] sends one so the peer severs the job's queue — a
+/// vanished endpoint becomes an observable `Closed` on the other side
+/// instead of a silent stall (the per-job analogue of a dedicated
+/// connection dying). Never surfaces above the mux.
+pub const KIND_MUX_FIN: u16 = u16::MAX;
+
+/// Shared send side + routing table of one multiplexed connection.
+/// Cheap to clone — clones share the connection; per-job views come from
+/// [`MuxConn::handle`].
+#[derive(Clone)]
+pub struct MuxConn {
+    inner: Arc<MuxInner>,
+}
+
+struct MuxInner {
+    send_half: Mutex<Box<dyn Driver>>,
+    bucket: Option<Arc<Mutex<TokenBucket>>>,
+    state: Arc<MuxState>,
+    label: String,
+}
+
+struct MuxState {
+    table: Mutex<RouteTable>,
+}
+
+#[derive(Default)]
+struct RouteTable {
+    /// Inbound queue sender per job.
+    queues: HashMap<u32, Sender<Frame>>,
+    /// Queues created by the pump before a handle attached.
+    pending: HashMap<u32, Receiver<Frame>>,
+    /// Jobs whose frames are dropped (aborted / handle gone).
+    closed: HashSet<u32>,
+    /// The underlying transport died; every handle reads `Closed`.
+    dead: bool,
+}
+
+impl MuxConn {
+    /// Wrap one connection's two directions and start its receive pump.
+    /// `rate_bps > 0` applies a shared whole-connection token bucket to
+    /// both directions, with `burst_bytes` of burst capacity (the fleet
+    /// uses one default chunk, matching the old per-link decorator).
+    pub fn spawn(
+        send_half: Box<dyn Driver>,
+        recv_half: Box<dyn Driver>,
+        rate_bps: u64,
+        burst_bytes: u64,
+    ) -> MuxConn {
+        let label = format!("mux({})", send_half.name());
+        let bucket = if rate_bps > 0 {
+            Some(Arc::new(Mutex::new(TokenBucket::new(
+                rate_bps,
+                burst_bytes.max(1),
+            ))))
+        } else {
+            None
+        };
+        let state = Arc::new(MuxState {
+            table: Mutex::new(RouteTable::default()),
+        });
+        let pump_state = state.clone();
+        let pump_bucket = bucket.clone();
+        std::thread::Builder::new()
+            .name(format!("mux-pump-{label}"))
+            .spawn(move || pump(recv_half, pump_state, pump_bucket))
+            .expect("spawn mux pump");
+        MuxConn {
+            inner: Arc::new(MuxInner {
+                send_half: Mutex::new(send_half),
+                bucket,
+                state,
+                label,
+            }),
+        }
+    }
+
+    pub fn name(&self) -> String {
+        self.inner.label.clone()
+    }
+
+    /// The per-job [`Driver`] view over this connection. One live handle
+    /// per job id; a previously closed id is reopened.
+    pub fn handle(&self, job: u32) -> MuxHandle {
+        let rx = {
+            let mut t = self.inner.state.table.lock().unwrap();
+            t.closed.remove(&job);
+            match t.pending.remove(&job) {
+                Some(rx) => rx,
+                None => {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    t.queues.insert(job, tx);
+                    rx
+                }
+            }
+        };
+        MuxHandle {
+            conn: self.clone(),
+            job,
+            rx,
+        }
+    }
+
+    /// Sever one job's routing: its queue disconnects (a blocked `recv`
+    /// observes `Closed`) and inbound frames for it — buffered or future —
+    /// are dropped and counted as evicted. Idempotent.
+    pub fn close_job(&self, job: u32) {
+        let mut t = self.inner.state.table.lock().unwrap();
+        close_entry(&mut t, job);
+    }
+
+    /// True once the underlying transport has closed.
+    pub fn is_dead(&self) -> bool {
+        self.inner.state.table.lock().unwrap().dead
+    }
+
+    fn send_tagged(&self, mut frame: Frame, job: u32) -> Result<(), SfmError> {
+        frame.job = job;
+        // link budget first, outside the driver lock: a throttled job
+        // waits for bandwidth without blocking other jobs' sends
+        if let Some(b) = &self.inner.bucket {
+            take_shared(b, frame.payload.len().max(1));
+        }
+        self.inner.send_half.lock().unwrap().send(frame)
+    }
+}
+
+impl Drop for MuxInner {
+    fn drop(&mut self) {
+        // unblock the pump if it is parked in recv on a cloned transport
+        // handle of the same connection (TCP); channel transports
+        // disconnect on their own once this send half drops
+        self.send_half.lock().unwrap().shutdown();
+    }
+}
+
+/// Mark a job closed in the routing table, dropping its queue and
+/// draining (and counting) anything buffered unclaimed.
+fn close_entry(t: &mut RouteTable, job: u32) {
+    t.closed.insert(job);
+    t.queues.remove(&job);
+    if let Some(rx) = t.pending.remove(&job) {
+        while let Ok(f) = rx.try_recv() {
+            mem::track_evicted(f.payload.len());
+        }
+    }
+}
+
+/// Take `n` bytes of budget from a shared bucket, sleeping in short
+/// slices *between* lock acquisitions so concurrent takers interleave
+/// instead of queueing behind one long in-lock sleep. A frame larger
+/// than the burst capacity is charged in capacity-sized installments —
+/// the full `n` always counts against the link rate (a single take
+/// larger than the burst could never succeed, but under-charging it
+/// would silently run the link over budget).
+fn take_shared(bucket: &Arc<Mutex<TokenBucket>>, n: usize) {
+    let mut left = n;
+    while left > 0 {
+        let mut b = bucket.lock().unwrap();
+        let want = (left as u64).min(b.capacity()) as usize;
+        if b.try_take(want) {
+            left -= want;
+            continue;
+        }
+        drop(b);
+        std::thread::sleep(Duration::from_millis(1));
+    }
+}
+
+/// The receive pump: routes inbound frames by job id until the transport
+/// closes, then severs every queue.
+fn pump(
+    mut recv_half: Box<dyn Driver>,
+    state: Arc<MuxState>,
+    bucket: Option<Arc<Mutex<TokenBucket>>>,
+) {
+    loop {
+        let frame = match recv_half.recv() {
+            Ok(f) => f,
+            Err(_) => break,
+        };
+        if let Some(b) = &bucket {
+            take_shared(b, frame.payload.len().max(1));
+        }
+        let job = frame.job;
+        if frame.kind == KIND_MUX_FIN {
+            // peer half-closed this job: sever its queue so a blocked
+            // consumer observes Closed instead of waiting forever
+            let mut t = state.table.lock().unwrap();
+            close_entry(&mut t, job);
+            continue;
+        }
+        // route; the send is non-blocking (unbounded queue — see module
+        // docs for why the pump must never stall on one job)
+        let mut t = state.table.lock().unwrap();
+        if t.closed.contains(&job) {
+            mem::track_evicted(frame.payload.len());
+            continue;
+        }
+        let tx = match t.queues.get(&job) {
+            Some(tx) => tx.clone(),
+            None => {
+                let (tx, rx) = std::sync::mpsc::channel();
+                t.queues.insert(job, tx.clone());
+                t.pending.insert(job, rx);
+                tx
+            }
+        };
+        let n = frame.payload.len();
+        if tx.send(frame).is_err() {
+            // handle dropped mid-stream: the job is gone; drain it
+            t.queues.remove(&job);
+            t.closed.insert(job);
+            mem::track_evicted(n);
+        }
+    }
+    let mut t = state.table.lock().unwrap();
+    t.dead = true;
+    t.queues.clear();
+    let pending: Vec<Receiver<Frame>> = t.pending.drain().map(|(_, rx)| rx).collect();
+    drop(t);
+    for rx in pending {
+        while let Ok(f) = rx.try_recv() {
+            mem::track_evicted(f.payload.len());
+        }
+    }
+}
+
+/// Per-job [`Driver`] view over a [`MuxConn`] (see module docs).
+pub struct MuxHandle {
+    conn: MuxConn,
+    job: u32,
+    rx: Receiver<Frame>,
+}
+
+impl MuxHandle {
+    /// The job this handle speaks for.
+    pub fn job(&self) -> u32 {
+        self.job
+    }
+}
+
+impl Driver for MuxHandle {
+    fn send(&mut self, frame: Frame) -> Result<(), SfmError> {
+        self.conn.send_tagged(frame, self.job)
+    }
+
+    fn recv(&mut self) -> Result<Frame, SfmError> {
+        self.rx.recv().map_err(|_| SfmError::Closed)
+    }
+
+    fn name(&self) -> String {
+        format!("{}#job{}", self.conn.inner.label, self.job)
+    }
+}
+
+impl Drop for MuxHandle {
+    fn drop(&mut self) {
+        // half-close: tell the peer this job's view is gone (so a worker
+        // parked on the job's next message over there reads Closed), then
+        // stop routing to it locally and drain leftovers
+        let fin = Frame {
+            flags: FLAG_FIRST | FLAG_LAST,
+            kind: KIND_MUX_FIN,
+            job: 0, // stamped by send_tagged
+            stream: 0,
+            seq: 0,
+            total: 1,
+            payload: Vec::new(),
+        };
+        let _ = self.conn.send_tagged(fin, self.job);
+        self.conn.close_job(self.job);
+        while let Ok(f) = self.rx.try_recv() {
+            mem::track_evicted(f.payload.len());
+        }
+    }
+}
+
+/// Stamps a fixed job id on every outgoing frame of a **dedicated**
+/// (non-shared) link — used for hierarchy links so a mid-tier node's
+/// forwarded partials carry its job id like every other frame of the
+/// job, without needing a demux pump on a single-job connection.
+pub struct JobTagged {
+    inner: Box<dyn Driver>,
+    job: u32,
+}
+
+impl JobTagged {
+    pub fn new(inner: Box<dyn Driver>, job: u32) -> JobTagged {
+        JobTagged { inner, job }
+    }
+}
+
+impl Driver for JobTagged {
+    fn send(&mut self, mut frame: Frame) -> Result<(), SfmError> {
+        frame.job = self.job;
+        self.inner.send(frame)
+    }
+
+    fn recv(&mut self) -> Result<Frame, SfmError> {
+        self.inner.recv()
+    }
+
+    fn name(&self) -> String {
+        format!("{}#job{}", self.inner.name(), self.job)
+    }
+
+    fn shutdown(&mut self) {
+        self.inner.shutdown()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sfm::{chunk_frames, inproc};
+    use std::time::Instant;
+
+    /// A connected (server mux, client mux) pair over inproc channels;
+    /// the server side optionally throttled with a small (2 kB) burst.
+    fn mux_pair(window: usize, rate_bps: u64) -> (MuxConn, MuxConn) {
+        let (s, c) = inproc::pair(window, "muxt");
+        let (sr, cr) = (s.recv_half(), c.recv_half());
+        (
+            MuxConn::spawn(Box::new(s), Box::new(sr), rate_bps, 2048),
+            MuxConn::spawn(Box::new(c), Box::new(cr), 0, 2048),
+        )
+    }
+
+    #[test]
+    fn two_jobs_interleave_over_one_connection() {
+        let (server, client) = mux_pair(16, 0);
+        let mut s1 = server.handle(1);
+        let mut s2 = server.handle(2);
+        let mut c1 = client.handle(1);
+        let mut c2 = client.handle(2);
+        // interleave sends from two jobs
+        let (p1, p2) = (vec![1u8; 3000], vec![2u8; 3000]);
+        let f1 = chunk_frames(0, 10, &p1, 512);
+        let f2 = chunk_frames(0, 20, &p2, 512);
+        for (a, b) in f1.iter().zip(f2.iter()) {
+            s1.send(a.clone()).unwrap();
+            s2.send(b.clone()).unwrap();
+        }
+        // each job's handle sees exactly its own frames, in order,
+        // stamped with its job id
+        for want in &f1 {
+            let got = c1.recv().unwrap();
+            assert_eq!(got.job, 1);
+            assert_eq!(got.payload, want.payload);
+            assert_eq!(got.seq, want.seq);
+        }
+        for want in &f2 {
+            let got = c2.recv().unwrap();
+            assert_eq!(got.job, 2);
+            assert_eq!(got.payload, want.payload);
+        }
+    }
+
+    #[test]
+    fn frames_arriving_before_the_handle_are_buffered() {
+        let (server, client) = mux_pair(8, 0);
+        let mut s7 = server.handle(7);
+        s7.send(chunk_frames(0, 1, b"early", 64).remove(0)).unwrap();
+        // give the pump time to route into a pending queue
+        std::thread::sleep(Duration::from_millis(50));
+        let mut c7 = client.handle(7);
+        assert_eq!(c7.recv().unwrap().payload, b"early");
+    }
+
+    #[test]
+    fn close_job_drains_and_counts_evicted_bytes() {
+        let (server, client) = mux_pair(16, 0);
+        let mut s9 = server.handle(9);
+        let before = mem::evicted_bytes();
+        // 4 frames of 256 B for a job nobody ever opens client-side
+        let dead = vec![9u8; 1024];
+        for f in chunk_frames(0, 1, &dead, 256) {
+            s9.send(f).unwrap();
+        }
+        std::thread::sleep(Duration::from_millis(80));
+        client.close_job(9);
+        // frames buffered in the pending queue were drained + counted
+        assert!(
+            mem::evicted_bytes() >= before + 1024,
+            "evicted {} < {} + 1024",
+            mem::evicted_bytes(),
+            before
+        );
+        // later frames for the closed job are dropped on arrival
+        let late = vec![8u8; 512];
+        s9.send(chunk_frames(0, 2, &late, 512).remove(0)).unwrap();
+        std::thread::sleep(Duration::from_millis(80));
+        assert!(mem::evicted_bytes() >= before + 1024 + 512);
+        // other jobs keep flowing
+        let mut s1 = server.handle(1);
+        let mut c1 = client.handle(1);
+        s1.send(chunk_frames(0, 3, b"alive", 64).remove(0)).unwrap();
+        assert_eq!(c1.recv().unwrap().payload, b"alive");
+    }
+
+    #[test]
+    fn dropped_handle_reads_closed_after_transport_dies() {
+        let (server, client) = mux_pair(4, 0);
+        let mut c1 = client.handle(1);
+        drop(server); // send half drops; client pump sees disconnect
+        let t0 = Instant::now();
+        assert!(matches!(c1.recv(), Err(SfmError::Closed)));
+        assert!(t0.elapsed() < Duration::from_secs(2));
+        assert!(client.is_dead());
+    }
+
+    /// The throttling-fairness regression (satellite): bandwidth applies
+    /// to the shared connection, and a job streaming a large payload
+    /// through the shared bucket cannot starve another job's frames.
+    #[test]
+    fn throttle_is_shared_and_fair_across_jobs() {
+        // 200 kB/s link, 1 kB frames. Job 1 streams 60 kB continuously;
+        // job 2 sends 5 small frames mid-stream. Both make progress.
+        let (server, client) = mux_pair(8, 200_000);
+        let mut c1 = client.handle(1);
+        let mut c2 = client.handle(2);
+        let hog = {
+            let mut s1 = server.handle(1);
+            std::thread::spawn(move || {
+                let bulk = vec![1u8; 60_000];
+                for f in chunk_frames(0, 1, &bulk, 1024) {
+                    s1.send(f).unwrap();
+                }
+            })
+        };
+        // let job 1 be mid-stream, then interject job 2
+        std::thread::sleep(Duration::from_millis(30));
+        let mut s2 = server.handle(2);
+        let t0 = Instant::now();
+        let small = vec![2u8; 2_000];
+        for f in chunk_frames(0, 2, &small, 400) {
+            s2.send(f).unwrap();
+        }
+        // job 2's frames all arrive while job 1 still streams (fairness):
+        // 5 x 400 B through the shared 200 kB/s bucket takes ~10 ms of
+        // budget; job 1's remaining ~50 kB would take ~250 ms alone
+        let mut got = 0;
+        while got < 5 {
+            let f = c2.recv().unwrap();
+            assert_eq!(f.job, 2);
+            got += 1;
+        }
+        let interject = t0.elapsed();
+        assert!(
+            interject < Duration::from_millis(200),
+            "job 2 starved behind job 1: {interject:?}"
+        );
+        // job 1 still completes through the shared budget
+        let mut bytes = 0usize;
+        while bytes < 60_000 {
+            bytes += c1.recv().unwrap().payload.len();
+        }
+        hog.join().unwrap();
+    }
+
+    #[test]
+    fn job_tagged_stamps_dedicated_links() {
+        let (a, mut b) = inproc::pair(8, "tag");
+        let mut tagged = JobTagged::new(Box::new(a), 42);
+        tagged
+            .send(chunk_frames(0, 1, b"partial", 64).remove(0))
+            .unwrap();
+        let got = b.recv().unwrap();
+        assert_eq!(got.job, 42);
+        assert_eq!(got.payload, b"partial");
+    }
+}

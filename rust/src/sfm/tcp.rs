@@ -53,6 +53,17 @@ impl TcpDriver {
         Ok(())
     }
 
+    /// Clone the socket into an independent handle, so one thread can
+    /// send while another receives (the mux split). `shutdown` on either
+    /// handle closes both.
+    pub fn try_clone(&self) -> Result<TcpDriver, SfmError> {
+        Ok(TcpDriver {
+            stream: self.stream.try_clone()?,
+            verify_crc: self.verify_crc,
+            label: self.label.clone(),
+        })
+    }
+
     pub fn peer(&self) -> String {
         self.label.clone()
     }
@@ -82,6 +93,10 @@ impl Driver for TcpDriver {
 
     fn name(&self) -> String {
         self.label.clone()
+    }
+
+    fn shutdown(&mut self) {
+        let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
 }
 
@@ -145,6 +160,7 @@ mod tests {
                     drv.send(Frame {
                         flags: crate::sfm::FLAG_FIRST | crate::sfm::FLAG_LAST,
                         kind,
+                        job: 0,
                         stream,
                         seq: 0,
                         total: 1,

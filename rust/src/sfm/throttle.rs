@@ -62,6 +62,12 @@ impl TokenBucket {
             false
         }
     }
+
+    /// Burst capacity in bytes (a single take larger than this can never
+    /// succeed — callers sharing a bucket clamp to it).
+    pub fn capacity(&self) -> u64 {
+        self.capacity as u64
+    }
 }
 
 /// Driver decorator applying a send-side bandwidth cap.
@@ -151,6 +157,7 @@ mod tests {
                     .send(Frame {
                         flags: 0,
                         kind: 0,
+                        job: 0,
                         stream: 1,
                         seq: i,
                         total: frames,

@@ -1,34 +1,47 @@
-//! Multi-client simulation harness: runs a full FL job — server controller
-//! plus N client task loops — in one process, over either the in-process
-//! channel driver or real TCP loopback connections, with optional
-//! per-client bandwidth throttling (the paper's fast/slow-site asymmetry).
+//! The in-process federation harness: a persistent multiplexed client
+//! [`Fleet`] plus the single-job convenience wrapper [`run_job`].
 //!
-//! With `job.branching = B > 1` (and more than B clients) the harness
-//! builds a **2-level aggregator tree** instead of the flat star: ⌈N/B⌉
-//! mid-tier [`MidTier`] nodes each serve a contiguous shard of ≤ B
-//! clients and forward one serialized partial per round, so the root's
-//! fan-in is ⌈N/B⌉ partial streams rather than N client streams — same
-//! wire format, same streaming folds, every link over the same driver.
+//! Since the session-layer refactor, the fleet — not the job — owns the
+//! transports: each client holds **one** connection (in-process channels
+//! or real TCP loopback), wrapped in the session mux
+//! ([`crate::sfm::mux`]), and every FL job runs over its own multiplexed
+//! channel of those shared connections. Per-client bandwidth throttling
+//! applies to the connection as a whole (one token bucket per link), so
+//! concurrent jobs share a slow site's budget instead of each minting
+//! their own. Client processes are modeled by
+//! [`MultiJobRuntime`](crate::executor::MultiJobRuntime) threads: one per
+//! connection, servicing `job_open`/`job_abort` control messages and
+//! running one task loop (with its own executor) per active job.
+//!
+//! [`run_job`] is now a thin wrapper: connect a fleet of the job's
+//! clients, run the job over it
+//! ([`run_one_job`](crate::coordinator::run_one_job)), shut the fleet
+//! down. Multi-job serving — `submit`/`status`/`abort`, `max_concurrent`
+//! — lives in [`crate::coordinator::JobScheduler`] (see `fedflare serve`).
+//!
+//! With `job.branching = B > 1` (and more than B clients) a job builds a
+//! **2-level aggregator tree**: ⌈N/B⌉ mid-tier nodes each fold a shard of
+//! leaves over the shared fleet connections and forward one job-tagged
+//! partial per round on a dedicated link — same wire format, same
+//! streaming folds.
 //!
 //! This is the engine behind `fedflare repro *`, the examples, and the
 //! integration tests. Multi-process deployment (`fedflare server` /
-//! `fedflare client`) shares all the same code paths; only connection
-//! setup differs (see `main.rs`).
+//! `fedflare client`) shares the same per-job code paths over dedicated
+//! (unmuxed) connections.
 
-use std::sync::Arc;
+use std::sync::{Arc, Mutex};
 
 use anyhow::{anyhow, Context, Result};
 
-use crate::config::{ClientSpec, FilterSpec, JobConfig};
-use crate::coordinator::{
-    accept_registration, shard_plan, ClientHandle, Communicator, Controller, GatherPolicy,
-    MidTier, ServerCtx,
-};
-use crate::executor::{ClientRuntime, Executor};
-use crate::filters::build_chain;
-use crate::metrics::MetricsSink;
-use crate::sfm::{inproc, tcp, throttle::Throttled, Driver};
+use crate::config::{ClientSpec, JobConfig, StreamConfig};
+use crate::executor::{JobDirectory, MultiJobRuntime};
+use crate::message::FlMessage;
+use crate::sfm::mux::{JobTagged, MuxConn};
+use crate::sfm::{inproc, tcp, Driver, EvictionPolicy};
 use crate::streaming::Messenger;
+use crate::tensor::TensorDict;
+use crate::util::json::Json;
 
 /// Which transport the simulation uses.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -40,7 +53,8 @@ pub enum DriverKind {
 }
 
 /// Build the per-client executor (index, spec) -> Executor.
-pub type ExecutorFactory<'a> = dyn FnMut(usize, &ClientSpec) -> Result<Box<dyn Executor>> + 'a;
+pub type ExecutorFactory<'a> =
+    dyn FnMut(usize, &ClientSpec) -> Result<Box<dyn crate::executor::Executor>> + 'a;
 
 /// What a finished job reports back beyond the controller's own fields.
 #[derive(Debug, Clone, Default)]
@@ -51,360 +65,251 @@ pub struct RunReport {
     pub root_gather_peak: u64,
 }
 
-/// Run a job to completion inside this process. The controller's own
-/// fields (history, best model, ...) carry the results.
-pub fn run_job(
-    job: &JobConfig,
-    kind: DriverKind,
-    controller: &mut dyn Controller,
-    make_executor: &mut ExecutorFactory,
-    results_dir: &str,
-) -> Result<RunReport> {
-    if job.branching > 1 && job.clients.len() > job.branching {
-        run_job_tree(job, kind, controller, make_executor, results_dir)
-    } else {
-        run_job_flat(job, kind, controller, make_executor, results_dir)
-    }
+/// One server-side fleet connection: the shared mux plus the control
+/// channel (job 0) the scheduler announces jobs on.
+struct FleetConn {
+    name: String,
+    mux: MuxConn,
+    control: Mutex<Messenger>,
 }
 
-fn run_job_flat(
-    job: &JobConfig,
+/// A fleet client-runtime thread, by client name.
+type FleetClientThread = (String, std::thread::JoinHandle<Result<()>>);
+
+/// A connected, persistent client fleet (see module docs): the shared
+/// transports jobs multiplex over, the in-process [`JobDirectory`], and
+/// the client-runtime threads standing in for client processes.
+pub struct Fleet {
+    conns: Vec<FleetConn>,
     kind: DriverKind,
-    controller: &mut dyn Controller,
-    make_executor: &mut ExecutorFactory,
-    results_dir: &str,
-) -> Result<RunReport> {
-    let sink = MetricsSink::create(results_dir, &job.name)?;
-    let mut ctx = ServerCtx::new(sink, &job.name);
-    let chunk = job.stream.chunk_bytes;
-    let window = job.stream.window;
-    let verify = job.stream.verify_crc;
-
-    // --- build transport pairs + client runtimes
-    let mut client_threads = Vec::new();
-    let mut server_messengers: Vec<Messenger> = Vec::new();
-
-    match kind {
-        DriverKind::InProc => {
-            for (i, spec) in job.clients.iter().enumerate() {
-                let (sa, ca) = inproc::pair(window, &spec.name);
-                let client_driver: Box<dyn Driver> = wrap_throttle(Box::new(ca), spec);
-                let server_driver: Box<dyn Driver> = wrap_throttle(Box::new(sa), spec);
-                server_messengers.push(Messenger::new(server_driver, chunk, 0));
-                let messenger = Messenger::new(client_driver, chunk, (i + 1) as u32);
-                client_threads.push(spawn_client(job, i, spec, messenger, make_executor)?);
-            }
-        }
-        DriverKind::Tcp => {
-            let listener = tcp::bind("127.0.0.1:0")?;
-            let addr = listener.local_addr().context("local addr")?;
-            for (i, spec) in job.clients.iter().enumerate() {
-                let drv = tcp::TcpDriver::connect(addr, verify)?;
-                let client_driver: Box<dyn Driver> = wrap_throttle(Box::new(drv), spec);
-                let messenger = Messenger::new(client_driver, chunk, (i + 1) as u32);
-                client_threads.push(spawn_client(job, i, spec, messenger, make_executor)?);
-                let (conn, _) = listener.accept().context("accept")?;
-                let sdrv = tcp::TcpDriver::from_stream(conn, verify)?;
-                // server->client direction throttled too (a slow link is
-                // slow both ways)
-                let server_driver: Box<dyn Driver> = wrap_throttle(Box::new(sdrv), spec);
-                server_messengers.push(Messenger::new(server_driver, chunk, 0));
-            }
-        }
-    }
-
-    // --- registration handshake, then per-client IO workers
-    let mut handles = Vec::new();
-    for mut m in server_messengers {
-        let name = accept_registration(&mut m)?;
-        handles.push(ClientHandle::spawn(name, m));
-    }
-    // order handles to match job.clients order (TCP accepts may race)
-    handles.sort_by_key(|h| {
-        job.clients
-            .iter()
-            .position(|c| c.name == h.name)
-            .unwrap_or(usize::MAX)
-    });
-    let mut comm = Communicator::new(handles, job.seed);
-    let counter = comm.gather_counter();
-
-    // --- run the workflow
-    let run_result = controller.run(&mut comm, &mut ctx);
-
-    // tear the transport down even when the controller failed mid-round,
-    // so idle clients observe a bye (or a closed channel) instead of
-    // blocking on their next task while we join them below
-    if run_result.is_err() {
-        comm.shutdown();
-    }
-    drop(comm);
-
-    // --- join clients
-    let mut client_errs = Vec::new();
-    for (name, t) in client_threads {
-        match t.join() {
-            Ok(Ok(_tasks)) => {}
-            Ok(Err(e)) => client_errs.push(format!("{name}: {e}")),
-            Err(_) => client_errs.push(format!("{name}: panicked")),
-        }
-    }
-    run_result?;
-    if !client_errs.is_empty() {
-        return Err(anyhow!("client failures: {}", client_errs.join("; ")));
-    }
-    Ok(RunReport {
-        root_gather_peak: counter.peak(),
-    })
+    window: usize,
+    verify: bool,
+    directory: Arc<JobDirectory>,
+    client_threads: Mutex<Vec<FleetClientThread>>,
 }
 
-/// The 2-level aggregator tree (see module docs): spawn every leaf
-/// client, one mid-tier node per shard, and run the controller against
-/// the mid-tier nodes only.
-fn run_job_tree(
-    job: &JobConfig,
-    kind: DriverKind,
-    controller: &mut dyn Controller,
-    make_executor: &mut ExecutorFactory,
-    results_dir: &str,
-) -> Result<RunReport> {
-    let sink = MetricsSink::create(results_dir, &job.name)?;
-    let mut ctx = ServerCtx::new(sink, &job.name);
-    let chunk = job.stream.chunk_bytes;
-    let window = job.stream.window;
-    let verify = job.stream.verify_crc;
-    let shards = shard_plan(job.clients.len(), job.branching);
-    // the trailing-codec receive mirror runs where client streams land:
-    // on the mid-tier nodes (partials forwarded upstream are plain f32)
-    let mid_recv_filters = FilterSpec::receive_chain(&job.filters);
-    // thread the straggler timeout down to the shard gathers: a stalled
-    // leaf costs only its own contribution (quorum 1 — the shard forwards
-    // a reduced-weight partial) instead of wedging its whole subtree
-    let mid_policy = match job.round_timeout_s {
-        None => GatherPolicy::all(),
-        Some(t) => GatherPolicy {
-            quorum: 1,
-            timeout: Some(std::time::Duration::from_secs_f64(t)),
-        },
-    };
-
-    let mut client_threads = Vec::new();
-    let mut mid_threads = Vec::new();
-    let mut root_messengers: Vec<Messenger> = Vec::new();
-
-    match kind {
-        DriverKind::InProc => {
-            for (m, shard) in shards.iter().enumerate() {
-                let mid_name = format!("agg-{m:03}");
-                let (ra, ma) = inproc::pair(window, &mid_name);
-                root_messengers.push(Messenger::new(Box::new(ra), chunk, 0));
-                let upstream =
-                    Messenger::new(Box::new(ma), chunk, (job.clients.len() + m + 1) as u32);
-                let mut shard_msgrs = Vec::new();
-                let mut shard_names = Vec::new();
-                for i in shard.clone() {
-                    let spec = &job.clients[i];
-                    let (sa, ca) = inproc::pair(window, &spec.name);
-                    shard_msgrs.push(Messenger::new(wrap_throttle(Box::new(sa), spec), chunk, 0));
-                    let cm =
-                        Messenger::new(wrap_throttle(Box::new(ca), spec), chunk, (i + 1) as u32);
-                    client_threads.push(spawn_client(job, i, spec, cm, make_executor)?);
-                    shard_names.push(spec.name.clone());
+impl Fleet {
+    /// Connect one multiplexed connection + client runtime per spec.
+    /// `stream` configures the fleet-level links (window, CRC); each job
+    /// keeps its own chunking on top.
+    pub fn connect(
+        specs: &[ClientSpec],
+        kind: DriverKind,
+        stream: &StreamConfig,
+    ) -> Result<Arc<Fleet>> {
+        let directory = JobDirectory::new();
+        let window = stream.window;
+        let verify = stream.verify_crc;
+        let burst = crate::DEFAULT_CHUNK_BYTES as u64;
+        let mut conns = Vec::with_capacity(specs.len());
+        let mut threads = Vec::with_capacity(specs.len());
+        match kind {
+            DriverKind::InProc => {
+                for (i, spec) in specs.iter().enumerate() {
+                    let (s, c) = inproc::pair(window, &spec.name);
+                    let (sr, cr) = (s.recv_half(), c.recv_half());
+                    let server_mux =
+                        MuxConn::spawn(Box::new(s), Box::new(sr), spec.bandwidth_bps, burst);
+                    let client_mux =
+                        MuxConn::spawn(Box::new(c), Box::new(cr), spec.bandwidth_bps, burst);
+                    threads.push(spawn_fleet_client(spec, i, client_mux, directory.clone())?);
+                    conns.push(FleetConn::new(spec, server_mux));
                 }
-                mid_threads.push(spawn_midtier(
-                    mid_name,
-                    upstream,
-                    shard_msgrs,
-                    shard_names,
-                    mid_recv_filters.clone(),
-                    mid_policy.clone(),
-                    job.seed ^ (m as u64 + 1),
-                )?);
             }
-        }
-        DriverKind::Tcp => {
-            let root_listener = tcp::bind("127.0.0.1:0")?;
-            let root_addr = root_listener.local_addr().context("root addr")?;
-            for (m, shard) in shards.iter().enumerate() {
-                let mid_name = format!("agg-{m:03}");
-                let up_drv = tcp::TcpDriver::connect(root_addr, verify)?;
-                let (conn, _) = root_listener.accept().context("accept midtier")?;
-                root_messengers.push(Messenger::new(
-                    Box::new(tcp::TcpDriver::from_stream(conn, verify)?),
-                    chunk,
-                    0,
-                ));
-                let upstream = Messenger::new(
-                    Box::new(up_drv),
-                    chunk,
-                    (job.clients.len() + m + 1) as u32,
-                );
-                let mid_listener = tcp::bind("127.0.0.1:0")?;
-                let mid_addr = mid_listener.local_addr().context("midtier addr")?;
-                let mut shard_msgrs = Vec::new();
-                let mut shard_names = Vec::new();
-                for i in shard.clone() {
-                    let spec = &job.clients[i];
-                    let drv = tcp::TcpDriver::connect(mid_addr, verify)?;
-                    let cm =
-                        Messenger::new(wrap_throttle(Box::new(drv), spec), chunk, (i + 1) as u32);
-                    client_threads.push(spawn_client(job, i, spec, cm, make_executor)?);
-                    let (conn, _) = mid_listener.accept().context("accept leaf")?;
-                    shard_msgrs.push(Messenger::new(
-                        wrap_throttle(Box::new(tcp::TcpDriver::from_stream(conn, verify)?), spec),
-                        chunk,
-                        0,
-                    ));
-                    shard_names.push(spec.name.clone());
+            DriverKind::Tcp => {
+                let listener = tcp::bind("127.0.0.1:0")?;
+                let addr = listener.local_addr().context("local addr")?;
+                for (i, spec) in specs.iter().enumerate() {
+                    let cd = tcp::TcpDriver::connect(addr, verify)?;
+                    let cdr = cd.try_clone()?;
+                    let client_mux =
+                        MuxConn::spawn(Box::new(cd), Box::new(cdr), spec.bandwidth_bps, burst);
+                    threads.push(spawn_fleet_client(spec, i, client_mux, directory.clone())?);
+                    let (conn, _) = listener.accept().context("accept")?;
+                    let sd = tcp::TcpDriver::from_stream(conn, verify)?;
+                    let sdr = sd.try_clone()?;
+                    let server_mux =
+                        MuxConn::spawn(Box::new(sd), Box::new(sdr), spec.bandwidth_bps, burst);
+                    conns.push(FleetConn::new(spec, server_mux));
                 }
-                mid_threads.push(spawn_midtier(
-                    mid_name,
-                    upstream,
-                    shard_msgrs,
-                    shard_names,
-                    mid_recv_filters.clone(),
-                    mid_policy.clone(),
-                    job.seed ^ (m as u64 + 1),
-                )?);
             }
         }
+        Ok(Arc::new(Fleet {
+            conns,
+            kind,
+            window,
+            verify,
+            directory,
+            client_threads: Mutex::new(threads),
+        }))
     }
 
-    // --- root registration: mid-tier nodes register over their upstream
-    let mut handles = Vec::new();
-    for mut m in root_messengers {
-        let name = accept_registration(&mut m)?;
-        handles.push(ClientHandle::spawn(name, m));
+    pub fn n_clients(&self) -> usize {
+        self.conns.len()
     }
-    // zero-padded names sort to shard order
-    handles.sort_by(|a, b| a.name.cmp(&b.name));
-    let mut comm = Communicator::new(handles, job.seed);
-    let counter = comm.gather_counter();
 
-    let run_result = controller.run(&mut comm, &mut ctx);
-    if run_result.is_err() {
-        comm.shutdown();
+    pub fn kind(&self) -> DriverKind {
+        self.kind
     }
-    drop(comm);
 
-    // --- join mid-tier nodes, then clients
-    let mut errs = Vec::new();
-    for (name, t) in mid_threads {
-        match t.join() {
-            Ok(Ok(_rounds)) => {}
-            Ok(Err(e)) => errs.push(format!("{name}: {e}")),
-            Err(_) => errs.push(format!("{name}: panicked")),
+    /// The in-process job registry shared with the client runtimes.
+    pub fn directory(&self) -> &Arc<JobDirectory> {
+        &self.directory
+    }
+
+    /// Fleet connection index of a client, by name.
+    pub fn index_of(&self, name: &str) -> Option<usize> {
+        self.conns.iter().position(|c| c.name == name)
+    }
+
+    /// A server-side messenger over client `idx`'s connection, scoped to
+    /// `job` (chunking and stale-stream eviction from `stream`).
+    pub fn job_messenger(&self, idx: usize, job: u32, stream: &StreamConfig) -> Messenger {
+        let mut m = Messenger::new(
+            Box::new(self.conns[idx].mux.handle(job)),
+            stream.chunk_bytes,
+            0,
+        );
+        if let Some(policy) = EvictionPolicy::stale_after_s(stream.stale_stream_age_s) {
+            m.set_reassembly_policy(policy);
+        }
+        m
+    }
+
+    /// Announce `job` on client `idx`'s control channel; the client's
+    /// runtime claims its start spec from the directory and spawns the
+    /// job's task loop.
+    pub fn open_job(&self, idx: usize, job: u32, name: &str) -> Result<()> {
+        let msg = FlMessage::task("job_open", 0, TensorDict::new())
+            .with_meta("job", Json::num(job as f64))
+            .with_meta("job_name", Json::str(name));
+        self.conns[idx]
+            .control
+            .lock()
+            .unwrap()
+            .send_msg(&msg)
+            .map_err(|e| anyhow!("open job {job} on {}: {e}", self.conns[idx].name))
+    }
+
+    /// Abort `job` fleet-wide: revoke unclaimed deployments, tell every
+    /// client to sever the job's channel, and sever the server-side
+    /// queues — in-flight streams drain into the eviction counters
+    /// ([`crate::util::mem::evicted_bytes`]) instead of stranding buffers.
+    pub fn abort_job(&self, job: u32) {
+        self.directory.revoke(job);
+        for conn in &self.conns {
+            let msg = FlMessage::task("job_abort", 0, TensorDict::new())
+                .with_meta("job", Json::num(job as f64));
+            let _ = conn.control.lock().unwrap().send_msg(&msg);
+            conn.mux.close_job(job);
         }
     }
-    for (name, t) in client_threads {
-        match t.join() {
-            Ok(Ok(_tasks)) => {}
-            Ok(Err(e)) => errs.push(format!("{name}: {e}")),
-            Err(_) => errs.push(format!("{name}: panicked")),
-        }
-    }
-    run_result?;
-    if !errs.is_empty() {
-        return Err(anyhow!("node failures: {}", errs.join("; ")));
-    }
-    Ok(RunReport {
-        root_gather_peak: counter.peak(),
-    })
-}
 
-fn wrap_throttle(driver: Box<dyn Driver>, spec: &ClientSpec) -> Box<dyn Driver> {
-    if spec.bandwidth_bps > 0 {
-        Box::new(Throttled::new(
-            BoxedDriver(driver),
-            spec.bandwidth_bps,
-            crate::DEFAULT_CHUNK_BYTES as u64,
+    /// A dedicated mid-tier link for a hierarchical job: a fresh duplex
+    /// pair of the fleet's driver kind, both ends stamping `job` on their
+    /// frames. Returns (root side, mid-tier side); the mid-tier side's
+    /// stream tag is `tag`.
+    pub fn midtier_link(
+        &self,
+        job: u32,
+        stream: &StreamConfig,
+        tag: u32,
+    ) -> Result<(Messenger, Messenger)> {
+        let (down, up): (Box<dyn Driver>, Box<dyn Driver>) = match self.kind {
+            DriverKind::InProc => {
+                let (a, b) = inproc::pair(self.window, &format!("mid-{job}-{tag}"));
+                (Box::new(a), Box::new(b))
+            }
+            DriverKind::Tcp => {
+                let listener = tcp::bind("127.0.0.1:0")?;
+                let addr = listener.local_addr().context("midtier addr")?;
+                let up = tcp::TcpDriver::connect(addr, self.verify)?;
+                let (conn, _) = listener.accept().context("accept midtier")?;
+                let down = tcp::TcpDriver::from_stream(conn, self.verify)?;
+                (Box::new(down), Box::new(up))
+            }
+        };
+        Ok((
+            Messenger::new(
+                Box::new(JobTagged::new(down, job)),
+                stream.chunk_bytes,
+                0,
+            ),
+            Messenger::new(Box::new(JobTagged::new(up, job)), stream.chunk_bytes, tag),
         ))
-    } else {
-        driver
+    }
+
+    /// End the fleet: bye every control channel, then join the client
+    /// runtimes (each joins its job loops first). Idempotent.
+    pub fn shutdown(&self) {
+        for conn in &self.conns {
+            let _ = conn.control.lock().unwrap().send_msg(&FlMessage::bye());
+        }
+        let mut threads = self.client_threads.lock().unwrap();
+        for (name, t) in threads.drain(..) {
+            match t.join() {
+                Ok(Ok(())) => {}
+                Ok(Err(e)) => log::warn!("fleet client {name}: {e}"),
+                Err(_) => log::warn!("fleet client {name}: panicked"),
+            }
+        }
     }
 }
 
-/// Adapter: `Box<dyn Driver>` itself as a Driver (for the Throttled
-/// decorator, which is generic).
-struct BoxedDriver(Box<dyn Driver>);
-
-impl Driver for BoxedDriver {
-    fn send(&mut self, frame: crate::sfm::Frame) -> Result<(), crate::sfm::SfmError> {
-        self.0.send(frame)
-    }
-    fn recv(&mut self) -> Result<crate::sfm::Frame, crate::sfm::SfmError> {
-        self.0.recv()
-    }
-    fn name(&self) -> String {
-        self.0.name()
+impl FleetConn {
+    fn new(spec: &ClientSpec, mux: MuxConn) -> FleetConn {
+        let control = Messenger::new(Box::new(mux.handle(0)), 4096, 0);
+        FleetConn {
+            name: spec.name.clone(),
+            mux,
+            control: Mutex::new(control),
+        }
     }
 }
 
-type ClientThread = (String, std::thread::JoinHandle<Result<usize>>);
-
-fn spawn_client(
-    job: &JobConfig,
-    idx: usize,
+fn spawn_fleet_client(
     spec: &ClientSpec,
-    messenger: Messenger,
-    make_executor: &mut ExecutorFactory,
-) -> Result<ClientThread> {
-    let executor = make_executor(idx, spec)?;
-    let filters = build_chain(&job.filters, idx, job.clients.len());
+    index: usize,
+    mux: MuxConn,
+    directory: Arc<JobDirectory>,
+) -> Result<FleetClientThread> {
     let name = spec.name.clone();
     let tname = name.clone();
     let handle = std::thread::Builder::new()
-        .name(format!("client-{name}"))
-        .spawn(move || {
-            let mut rt = ClientRuntime::new(&tname, messenger, executor, filters);
-            rt.run_loop()
-        })
-        .context("spawn client thread")?;
+        .name(format!("fleet-{name}"))
+        .spawn(move || MultiJobRuntime::new(&tname, index, mux, directory).run())
+        .context("spawn fleet client")?;
     Ok((name, handle))
 }
 
-/// Spawn one mid-tier aggregator node: accept its shard's registrations,
-/// build its communicator, and serve rounds until the upstream bye.
-fn spawn_midtier(
-    name: String,
-    upstream: Messenger,
-    shard_messengers: Vec<Messenger>,
-    shard_names: Vec<String>,
-    recv_filters: Vec<FilterSpec>,
-    policy: GatherPolicy,
-    seed: u64,
-) -> Result<(String, std::thread::JoinHandle<Result<usize>>)> {
-    let tname = name.clone();
-    let shard_names = Arc::new(shard_names);
-    let handle = std::thread::Builder::new()
-        .name(format!("midtier-{name}"))
-        .spawn(move || -> Result<usize> {
-            let mut handles = Vec::new();
-            for mut m in shard_messengers {
-                let n = accept_registration(&mut m)?;
-                handles.push(ClientHandle::spawn(n, m));
-            }
-            // order handles to the shard's job order (TCP accepts may race)
-            handles.sort_by_key(|h| {
-                shard_names
-                    .iter()
-                    .position(|c| *c == h.name)
-                    .unwrap_or(usize::MAX)
-            });
-            let comm = Communicator::new(handles, seed);
-            MidTier::new(&tname, upstream, comm, recv_filters, policy).run()
-        })
-        .context("spawn midtier thread")?;
-    Ok((name, handle))
+/// Run a job to completion inside this process. The controller's own
+/// fields (history, best model, ...) carry the results.
+///
+/// Thin wrapper since the session-layer refactor: connects a one-job
+/// fleet of the job's clients, submits the job over it (as job id 1,
+/// frames v3-tagged like any scheduled job), and tears the fleet down —
+/// so the single-job entry point exercises exactly the multiplexed
+/// serving path.
+pub fn run_job<C: crate::coordinator::Controller + ?Sized>(
+    job: &JobConfig,
+    kind: DriverKind,
+    controller: &mut C,
+    make_executor: &mut ExecutorFactory,
+    results_dir: &str,
+) -> Result<RunReport> {
+    let fleet = Fleet::connect(&job.clients, kind, &job.stream)?;
+    let result =
+        crate::coordinator::run_one_job(&fleet, 1, job, controller, make_executor, results_dir);
+    fleet.shutdown();
+    result
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::coordinator::FedAvg;
-    use crate::executor::StreamTestExecutor;
-    use crate::message::FlMessage;
-    use crate::util::json::Json;
+    use crate::executor::{Executor, StreamTestExecutor};
+    use anyhow::anyhow;
 
     fn results_dir() -> String {
         let d = std::env::temp_dir().join("fedflare_sim_tests");
@@ -648,11 +553,11 @@ mod tests {
 
     #[test]
     fn fast_client_is_folded_before_slow_client_arrives() {
-        // site-2 is throttled to 8 MB/s on a 4 MB model (both directions;
-        // the token bucket's 1 MB burst covers only the first chunk-span),
-        // so its round trip takes ~0.75 s while site-1 finishes in
-        // milliseconds; the streaming gather must hand site-1's result to
-        // the fold while site-2 is still mid-transfer.
+        // site-2's whole connection is throttled to 8 MB/s on a 4 MB
+        // model (shared-link token bucket, 1 MB burst), so its round trip
+        // takes ~0.75 s while site-1 finishes in milliseconds; the
+        // streaming gather must hand site-1's result to the fold while
+        // site-2 is still mid-transfer.
         let mut job = crate::config::JobConfig::named("sim_order", "none");
         job.rounds = 1;
         job.stream.chunk_bytes = 64 << 10;

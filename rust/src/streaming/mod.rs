@@ -87,6 +87,13 @@ impl Messenger {
         self.driver.name()
     }
 
+    /// Bound reassembly memory held for vanished peers: stale partial
+    /// streams are evicted per `policy` and counted in
+    /// [`mem::evicted_bytes`](crate::util::mem::evicted_bytes).
+    pub fn set_reassembly_policy(&mut self, policy: crate::sfm::EvictionPolicy) {
+        self.reasm.set_policy(policy);
+    }
+
     fn alloc_stream(&mut self) -> u64 {
         self.next_stream += 1;
         self.next_stream
@@ -179,6 +186,7 @@ impl Messenger {
             self.driver.send(Frame {
                 flags,
                 kind: KIND_FILE,
+                job: 0,
                 stream,
                 seq,
                 total,
@@ -460,6 +468,7 @@ mod tests {
         let mk = |stream: u64, seq: u32, total: u32| Frame {
             flags: 0,
             kind: KIND_FILE,
+            job: 0,
             stream,
             seq,
             total,
@@ -484,6 +493,7 @@ mod tests {
         let mk = |seq: u32, total: u32| Frame {
             flags: 0,
             kind: KIND_FILE,
+            job: 0,
             stream: 9,
             seq,
             total,

@@ -26,6 +26,11 @@ static GATHER_PEAK: AtomicU64 = AtomicU64::new(0);
 static STAGE: AtomicI64 = AtomicI64::new(0);
 /// High-water mark of `STAGE`.
 static STAGE_PEAK: AtomicU64 = AtomicU64::new(0);
+/// Cumulative bytes *discarded* by eviction: stale reassembly partials of
+/// vanished peers, frames of closed/aborted jobs dropped by the session
+/// mux. Monotonic — a serving system's "memory reclaimed from dead
+/// streams" gauge, so an aborted job's drained buffers are observable.
+static EVICTED: AtomicU64 = AtomicU64::new(0);
 
 /// Record an allocation of `n` bytes in the streaming layer.
 pub fn track_alloc(n: usize) {
@@ -104,6 +109,17 @@ pub fn stage_peak() -> u64 {
 
 pub fn reset_stage_peak() {
     STAGE_PEAK.store(stage_bytes().max(0) as u64, Ordering::Relaxed);
+}
+
+/// Record `n` bytes discarded by eviction (stale partial streams, frames
+/// of closed jobs). Cumulative; never decremented.
+pub fn track_evicted(n: usize) {
+    EVICTED.fetch_add(n as u64, Ordering::Relaxed);
+}
+
+/// Total bytes discarded by eviction since process start.
+pub fn evicted_bytes() -> u64 {
+    EVICTED.load(Ordering::Relaxed)
 }
 
 /// A scoped byte counter (current + high-water mark). The process-global
@@ -357,6 +373,14 @@ mod tests {
         assert!(c.peak() >= 4096, "peak survives the guard");
         c.reset_peak();
         assert_eq!(c.peak(), 0);
+    }
+
+    #[test]
+    fn evicted_counter_is_cumulative() {
+        let before = evicted_bytes();
+        track_evicted(1000);
+        track_evicted(24);
+        assert!(evicted_bytes() >= before + 1024);
     }
 
     #[test]

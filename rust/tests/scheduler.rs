@@ -1,0 +1,350 @@
+//! Session-layer / scheduler integration tests: many FL jobs multiplexed
+//! concurrently over ONE shared client fleet must behave exactly like
+//! the same jobs run sequentially — per-job results byte-identical, an
+//! aborted job's streams drained while survivors finish clean, and
+//! genuine wall-clock overlap from the concurrency.
+
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use fedflare::config::{ClientSpec, JobConfig};
+use fedflare::coordinator::{
+    Communicator, Controller, FedAvg, JobRequest, JobScheduler, JobStatus, ServerCtx,
+};
+use fedflare::executor::{Executor, StreamTestExecutor};
+use fedflare::sim::{DriverKind, Fleet};
+
+fn results_dir() -> String {
+    let d = std::env::temp_dir().join("fedflare_scheduler_tests");
+    let _ = std::fs::create_dir_all(&d);
+    d.to_string_lossy().to_string()
+}
+
+fn fleet_clients(n: usize) -> Vec<ClientSpec> {
+    (0..n)
+        .map(|i| ClientSpec {
+            name: format!("site-{:02}", i + 1),
+            bandwidth_bps: 0,
+            partition: i,
+        })
+        .collect()
+}
+
+/// The add-delta job: `n_clients` of the fleet, `rounds` rounds, every
+/// client adding `delta` (all-equal deltas make the streaming mean
+/// bit-exact regardless of fold order — the oracle-equality hook).
+fn add_delta_job(name: &str, n_clients: usize, rounds: usize) -> JobConfig {
+    let mut job = JobConfig::named(name, "stream_test");
+    job.rounds = rounds;
+    job.clients = fleet_clients(n_clients);
+    job.min_clients = n_clients;
+    job.stream.chunk_bytes = 4096;
+    job
+}
+
+/// What one finished job reports for comparison: the final model bytes
+/// plus a per-round (round, per-client name/weight) summary.
+type JobSummary = (Vec<u8>, Vec<(usize, Vec<(String, f64)>)>);
+type SharedSummary = Arc<Mutex<Option<JobSummary>>>;
+
+/// Controller wrapper capturing the inner workflow's outcome into a
+/// shared cell (scheduled controllers are moved into job threads, so
+/// results must come out through a side channel).
+struct Reporting {
+    inner: FedAvg,
+    out: SharedSummary,
+}
+
+impl Controller for Reporting {
+    fn name(&self) -> &'static str {
+        "reporting"
+    }
+    fn run(&mut self, comm: &mut Communicator, ctx: &mut ServerCtx) -> anyhow::Result<()> {
+        let result = self.inner.run(comm, ctx);
+        let hist = self
+            .inner
+            .history
+            .iter()
+            .map(|h| {
+                (
+                    h.round,
+                    h.per_client
+                        .iter()
+                        .map(|(n, _, _, w)| (n.clone(), *w))
+                        .collect::<Vec<_>>(),
+                )
+            })
+            .collect();
+        *self.out.lock().unwrap() = Some((self.inner.model.to_bytes(), hist));
+        result
+    }
+}
+
+/// Submit one add-delta job (keys x elems model, per-client `delta`,
+/// `work_ms` of simulated compute per tensor) and hand back the id and
+/// the shared summary cell.
+fn submit_job(
+    sched: &JobScheduler,
+    job: JobConfig,
+    keys: usize,
+    elems: usize,
+    delta: f32,
+    work_ms: u64,
+) -> (u32, SharedSummary) {
+    let initial = StreamTestExecutor::build_model(keys, elems, 1.0);
+    let mut ctl = FedAvg::new(initial, job.rounds, job.min_clients);
+    ctl.task_name = "stream_test".into();
+    let out: SharedSummary = Arc::new(Mutex::new(None));
+    let reporting = Reporting {
+        inner: ctl,
+        out: out.clone(),
+    };
+    let factory: fedflare::coordinator::OwnedExecutorFactory = Box::new(move |_i, _s| {
+        let mut e = StreamTestExecutor::new(None, delta);
+        e.work_ms = work_ms;
+        Ok(Box::new(e) as Box<dyn Executor>)
+    });
+    let id = sched.submit(JobRequest {
+        job,
+        controller: Box::new(reporting),
+        factory,
+    });
+    (id, out)
+}
+
+/// Run the same 4 jobs over one shared fleet at `max_concurrent`,
+/// returning each job's summary by job name.
+fn run_batch(kind: DriverKind, max_concurrent: usize, tag: &str) -> Vec<(String, JobSummary)> {
+    let fleet = Fleet::connect(&fleet_clients(3), kind, &Default::default()).unwrap();
+    let sched = JobScheduler::new(fleet.clone(), max_concurrent, &results_dir());
+    let deltas = [0.25f32, 0.5, 1.0, 2.0];
+    let mut submitted = Vec::new();
+    for (j, delta) in deltas.iter().enumerate() {
+        let name = format!("sched_{tag}_{j}");
+        let job = add_delta_job(&name, 3, 3);
+        let (id, out) = submit_job(&sched, job, 3, 600, *delta, 0);
+        submitted.push((name, id, out, *delta));
+    }
+    let mut results = Vec::new();
+    for (name, id, out, delta) in submitted {
+        let outcome = sched.wait(id);
+        assert_eq!(
+            outcome.status,
+            JobStatus::Completed,
+            "job '{name}': {:?}",
+            outcome.error
+        );
+        let summary = out.lock().unwrap().take().expect("summary reported");
+        // sanity: the job's own oracle (initial 1.0 + rounds * delta)
+        let model = fedflare::tensor::TensorDict::from_bytes(&summary.0).unwrap();
+        let v = model.get("key_000").unwrap().as_f32().unwrap();
+        let oracle = 1.0 + 3.0 * delta;
+        assert!(
+            v.iter().all(|&x| (x - oracle).abs() < 1e-5),
+            "job '{name}': expected {oracle}, got {}",
+            v[0]
+        );
+        results.push((name, summary));
+    }
+    sched.drain();
+    fleet.shutdown();
+    results
+}
+
+/// The acceptance oracle: N=4 concurrent jobs over one shared fleet
+/// produce per-job histories and models **byte-identical** to the same
+/// jobs run sequentially over the same kind of fleet.
+fn concurrent_matches_sequential(kind: DriverKind, tag: &str) {
+    let concurrent = run_batch(kind, 4, &format!("{tag}_con"));
+    let sequential = run_batch(kind, 1, &format!("{tag}_seq"));
+    assert_eq!(concurrent.len(), sequential.len());
+    for ((cn, cs), (sn, ss)) in concurrent.iter().zip(sequential.iter()) {
+        // names differ only by the batch tag; order is submission order
+        assert_eq!(cn.replace("_con_", "_"), sn.replace("_seq_", "_"));
+        assert_eq!(cs.0, ss.0, "job {cn}: model bytes diverged");
+        assert_eq!(cs.1, ss.1, "job {cn}: history diverged");
+    }
+}
+
+#[test]
+fn four_concurrent_jobs_match_sequential_oracle_inproc() {
+    concurrent_matches_sequential(DriverKind::InProc, "ip");
+}
+
+#[test]
+fn four_concurrent_jobs_match_sequential_oracle_tcp() {
+    concurrent_matches_sequential(DriverKind::Tcp, "tcp");
+}
+
+#[test]
+fn concurrent_jobs_overlap_in_wall_clock() {
+    // 4 jobs x 2 rounds x (2 keys x 30 ms) of simulated compute: run
+    // sequentially that is ~8 x 120 ms of compute; run concurrently the
+    // jobs overlap on the shared fleet. Demand a conservative 25% win so
+    // loaded CI machines don't flake, and print the ratio for the bench.
+    let run = |max_concurrent: usize, tag: &str| {
+        let fleet =
+            Fleet::connect(&fleet_clients(2), DriverKind::InProc, &Default::default()).unwrap();
+        let sched = JobScheduler::new(fleet.clone(), max_concurrent, &results_dir());
+        let t0 = Instant::now();
+        let mut ids = Vec::new();
+        for j in 0..4 {
+            let name = format!("sched_overlap_{tag}_{j}");
+            let job = add_delta_job(&name, 2, 2);
+            let (id, _out) = submit_job(&sched, job, 2, 64, 0.5, 30);
+            ids.push(id);
+        }
+        for id in ids {
+            assert_eq!(sched.wait(id).status, JobStatus::Completed);
+        }
+        sched.drain();
+        fleet.shutdown();
+        t0.elapsed()
+    };
+    let sequential = run(1, "seq");
+    let concurrent = run(4, "con");
+    println!("sequential {sequential:?} vs concurrent {concurrent:?}");
+    assert!(
+        concurrent < sequential.mul_f64(0.75),
+        "no concurrency win: sequential {sequential:?} vs concurrent {concurrent:?}"
+    );
+}
+
+#[test]
+fn abort_mid_round_drains_and_survivors_finish_clean() {
+    let fleet =
+        Fleet::connect(&fleet_clients(3), DriverKind::InProc, &Default::default()).unwrap();
+    let sched = JobScheduler::new(fleet.clone(), 3, &results_dir());
+    // the victim: long job (5 rounds x 2 keys x 100 ms per client)
+    let (victim, _vout) = submit_job(
+        &sched,
+        add_delta_job("sched_abort_victim", 3, 5),
+        2,
+        256,
+        100.0,
+        100,
+    );
+    // two survivors overlapping the abort window
+    let (s1, out1) = submit_job(&sched, add_delta_job("sched_abort_s1", 3, 5), 2, 256, 0.5, 40);
+    let (s2, out2) = submit_job(&sched, add_delta_job("sched_abort_s2", 3, 5), 2, 256, 1.0, 40);
+    std::thread::sleep(Duration::from_millis(300));
+    assert_eq!(sched.status(victim), Some(JobStatus::Running));
+    sched.abort(victim);
+    let aborted = sched.wait(victim);
+    assert_eq!(aborted.status, JobStatus::Aborted, "{:?}", aborted.error);
+    // survivors complete with their exact oracles, untouched by the abort
+    for (id, out, delta) in [(s1, out1, 0.5f32), (s2, out2, 1.0f32)] {
+        let outcome = sched.wait(id);
+        assert_eq!(outcome.status, JobStatus::Completed, "{:?}", outcome.error);
+        let (model_bytes, hist) = out.lock().unwrap().take().unwrap();
+        let model = fedflare::tensor::TensorDict::from_bytes(&model_bytes).unwrap();
+        let v = model.get("key_000").unwrap().as_f32().unwrap();
+        let oracle = 1.0 + 5.0 * delta;
+        assert!(
+            v.iter().all(|&x| (x - oracle).abs() < 1e-5),
+            "survivor diverged: expected {oracle}, got {}",
+            v[0]
+        );
+        assert_eq!(hist.len(), 5);
+    }
+    // the fleet is healthy after the abort: a fresh job over the same
+    // connections completes — the aborted job's channels were drained,
+    // not wedged
+    let fresh_job = add_delta_job("sched_abort_fresh", 3, 2);
+    let (fresh, fout) = submit_job(&sched, fresh_job, 2, 64, 0.25, 0);
+    let outcome = sched.wait(fresh);
+    assert_eq!(outcome.status, JobStatus::Completed, "{:?}", outcome.error);
+    assert!(fout.lock().unwrap().is_some());
+    sched.drain();
+    fleet.shutdown();
+}
+
+#[test]
+fn abort_of_a_queued_job_never_runs_it() {
+    let fleet =
+        Fleet::connect(&fleet_clients(2), DriverKind::InProc, &Default::default()).unwrap();
+    let sched = JobScheduler::new(fleet.clone(), 1, &results_dir());
+    // slow job occupies the single slot
+    let (running, _r) = submit_job(&sched, add_delta_job("sched_q_run", 2, 3), 2, 64, 0.5, 60);
+    let (queued, qout) = submit_job(&sched, add_delta_job("sched_q_wait", 2, 3), 2, 64, 0.5, 0);
+    assert_eq!(sched.status(queued), Some(JobStatus::Queued));
+    sched.abort(queued);
+    let out = sched.wait(queued);
+    assert_eq!(out.status, JobStatus::Aborted);
+    assert!(out.controller.is_some(), "queued controller handed back");
+    assert!(qout.lock().unwrap().is_none(), "aborted-in-queue job never ran");
+    assert_eq!(sched.wait(running).status, JobStatus::Completed);
+    sched.drain();
+    fleet.shutdown();
+}
+
+#[test]
+fn tree_job_composes_with_flat_jobs_on_one_fleet() {
+    // 9-client fleet: a hierarchical job (branching 3 -> 3 mid-tier
+    // nodes) runs concurrently with a flat job over a 3-client subset;
+    // both hit their oracles — mid-tier partials ride their job's
+    // channels without disturbing the flat job's streams.
+    let fleet =
+        Fleet::connect(&fleet_clients(9), DriverKind::InProc, &Default::default()).unwrap();
+    let sched = JobScheduler::new(fleet.clone(), 2, &results_dir());
+
+    let mut tree = add_delta_job("sched_tree", 9, 2);
+    tree.branching = 3;
+    tree.min_clients = 3; // quorum in mid-tier nodes
+    let (tid, tout) = submit_job(&sched, tree, 2, 400, 0.5, 10);
+
+    let flat = add_delta_job("sched_tree_flat", 3, 2);
+    let (fid, fout) = submit_job(&sched, flat, 2, 400, 2.0, 10);
+
+    for (id, out, oracle) in [(tid, tout, 2.0f32), (fid, fout, 5.0f32)] {
+        let outcome = sched.wait(id);
+        assert_eq!(outcome.status, JobStatus::Completed, "{:?}", outcome.error);
+        let (model_bytes, _hist) = out.lock().unwrap().take().unwrap();
+        let model = fedflare::tensor::TensorDict::from_bytes(&model_bytes).unwrap();
+        let v = model.get("key_000").unwrap().as_f32().unwrap();
+        assert!(
+            v.iter().all(|&x| (x - oracle).abs() < 1e-5),
+            "expected {oracle}, got {}",
+            v[0]
+        );
+    }
+    sched.drain();
+    fleet.shutdown();
+}
+
+#[test]
+fn throttled_connection_is_shared_fairly_between_jobs() {
+    // regression for the throttling-fairness satellite at the job level:
+    // one client's whole connection at 8 MB/s; a job pushing a ~2 MB
+    // model and a tiny job run concurrently. The tiny job must not wait
+    // for the big job's full transfer (it only competes for budget), and
+    // both finish correctly.
+    let mut clients = fleet_clients(2);
+    clients[1].bandwidth_bps = 8_000_000;
+    let fleet = Fleet::connect(&clients, DriverKind::InProc, &Default::default()).unwrap();
+    let sched = JobScheduler::new(fleet.clone(), 2, &results_dir());
+    let mut big = add_delta_job("sched_thr_big", 2, 1);
+    big.stream.chunk_bytes = 64 << 10;
+    let (big_id, big_out) = submit_job(&sched, big, 2, 262_144, 0.5, 0);
+    std::thread::sleep(Duration::from_millis(50)); // big job mid-transfer
+    let t0 = Instant::now();
+    let small_job = add_delta_job("sched_thr_small", 2, 1);
+    let (small_id, small_out) = submit_job(&sched, small_job, 1, 64, 1.0, 0);
+    let small = sched.wait(small_id);
+    let small_wall = t0.elapsed();
+    assert_eq!(small.status, JobStatus::Completed, "{:?}", small.error);
+    let big_outcome = sched.wait(big_id);
+    assert_eq!(big_outcome.status, JobStatus::Completed, "{:?}", big_outcome.error);
+    // the big job's ~2 MB x 2 directions over a shared 8 MB/s link takes
+    // ~500 ms; the small job (few kB) must finish well inside that
+    assert!(
+        small_wall < Duration::from_millis(450),
+        "small job starved behind the big transfer: {small_wall:?}"
+    );
+    for out in [big_out, small_out] {
+        assert!(out.lock().unwrap().is_some());
+    }
+    sched.drain();
+    fleet.shutdown();
+    let _ = std::fs::remove_dir_all(std::env::temp_dir().join("fedflare_scheduler_tests"));
+}
