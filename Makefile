@@ -8,7 +8,9 @@
 #                    bench_jobs also write machine-readable
 #                    BENCH_topology.json / BENCH_jobs.json (peak bytes +
 #                    wall-clock per topology / per concurrent-job count)
-#                    at the repo root
+#                    at the repo root. FEDFLARE_BENCH_QUICK=1 shrinks
+#                    bench_jobs/bench_topology to the CI quick mode
+#                    (same JSON shape, fraction of the cost)
 #   make lint        rustfmt + clippy, as CI runs them
 
 .PHONY: artifacts test bench lint

@@ -1,0 +1,164 @@
+//! Durable serve: kill the server mid-schedule, restart it, and watch
+//! both jobs finish — one resuming mid-job from its round checkpoint.
+//!
+//! ```text
+//! cargo run --example serve_resume
+//! ```
+//!
+//! The demo plays both lives of the server inside one process:
+//!
+//! 1. **First life** — connect a fleet, open a `--state-dir` style
+//!    [`JobStore`], submit two multi-round jobs, and let them run until
+//!    at least one round checkpoint has been written. Then "kill" the
+//!    server: abort everything mid-flight and tear the fleet down —
+//!    whatever was in memory is gone, only the state directory survives
+//!    (exactly what `kill -9` of `fedflare serve --state-dir` leaves
+//!    behind).
+//! 2. **Second life** — a fresh fleet, a fresh scheduler, the same
+//!    store. Re-submitting the same schedule resumes each job from its
+//!    last completed round (the scatter-and-gather workflow loads the
+//!    checkpoint before round 0) and runs it to completion. The queue
+//!    manifest records the completions, so a third life would skip both.
+
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fedflare::config::{ClientSpec, FleetConfig, JobConfig};
+use fedflare::coordinator::{FedAvg, JobRequest, JobScheduler, JobStatus};
+use fedflare::executor::{Executor, StreamTestExecutor};
+use fedflare::persist::JobStore;
+use fedflare::sim::{DriverKind, Fleet};
+
+const ROUNDS: usize = 5;
+
+fn clients() -> Vec<ClientSpec> {
+    (0..2)
+        .map(|i| ClientSpec {
+            name: format!("site-{}", i + 1),
+            bandwidth_bps: 0,
+            partition: i,
+        })
+        .collect()
+}
+
+fn job(name: &str) -> JobConfig {
+    let mut job = JobConfig::named(name, "stream_test");
+    job.rounds = ROUNDS;
+    job.clients = clients();
+    job.min_clients = 2;
+    job.stream.chunk_bytes = 16 << 10;
+    job
+}
+
+/// Submit one add-delta job (~60 ms of simulated compute per round).
+fn submit(sched: &JobScheduler, name: &str, delta: f32) -> u32 {
+    let mut ctl = FedAvg::new(StreamTestExecutor::build_model(2, 4096, 1.0), ROUNDS, 2);
+    ctl.task_name = "stream_test".into();
+    let factory: fedflare::coordinator::OwnedExecutorFactory = Box::new(move |_i, _s| {
+        let mut e = StreamTestExecutor::new(None, delta);
+        e.work_ms = 30;
+        Ok(Box::new(e) as Box<dyn Executor>)
+    });
+    sched.submit(JobRequest {
+        job: job(name),
+        controller: Box::new(ctl),
+        factory,
+    })
+}
+
+fn main() -> anyhow::Result<()> {
+    let out_dir = std::env::temp_dir().join("fedflare_serve_resume_results");
+    let state_dir = std::env::temp_dir().join("fedflare_serve_resume_state");
+    let _ = std::fs::remove_dir_all(&state_dir);
+    std::fs::create_dir_all(&out_dir)?;
+    let out_dir = out_dir.to_string_lossy().to_string();
+    let store = Arc::new(JobStore::open(&state_dir)?);
+    let names = ["resume_demo_a", "resume_demo_b"];
+
+    // ---- first life -------------------------------------------------
+    println!("[life 1] serve --state-dir {}", state_dir.display());
+    {
+        let fleet = Fleet::connect_with(
+            &clients(),
+            DriverKind::InProc,
+            &Default::default(),
+            FleetConfig::default(),
+        )?;
+        let sched = JobScheduler::with_store(fleet.clone(), 2, &out_dir, Some(store.clone()));
+        let mut ids = Vec::new();
+        for name in &names {
+            let id = submit(&sched, name, 0.5);
+            println!("[life 1] submitted '{name}' as job {id}");
+            ids.push(id);
+        }
+        // let the jobs make durable progress, then pull the plug
+        let t0 = Instant::now();
+        while t0.elapsed() < Duration::from_secs(20) {
+            if names
+                .iter()
+                .all(|n| store.load_round(n).map(|c| c.is_some()).unwrap_or(false))
+            {
+                break;
+            }
+            std::thread::sleep(Duration::from_millis(20));
+        }
+        for n in &names {
+            if let Some(ck) = store.load_round(n)? {
+                println!("[life 1] '{n}' checkpointed through round {}", ck.round);
+            }
+        }
+        println!("[life 1] killing the server mid-schedule (abort + teardown)");
+        for id in ids {
+            sched.abort(id);
+            let _ = sched.wait(id);
+        }
+        sched.drain();
+        fleet.shutdown();
+    }
+
+    // ---- second life ------------------------------------------------
+    println!("[life 2] restarting over the same state dir");
+    {
+        let fleet = Fleet::connect_with(
+            &clients(),
+            DriverKind::InProc,
+            &Default::default(),
+            FleetConfig::default(),
+        )?;
+        let sched = JobScheduler::with_store(fleet.clone(), 2, &out_dir, Some(store.clone()));
+        for name in &names {
+            match store.status(name).as_deref() {
+                Some("completed") => {
+                    println!("[life 2] '{name}' already completed — skipping");
+                    continue;
+                }
+                s => println!(
+                    "[life 2] '{name}' was '{}' at the crash — resubmitting",
+                    s.unwrap_or("unknown")
+                ),
+            }
+            let before = store.load_round(name)?.map(|c| c.round);
+            let id = submit(&sched, name, 0.5);
+            let outcome = sched.wait(id);
+            anyhow::ensure!(
+                outcome.status == JobStatus::Completed,
+                "'{name}' did not complete: {:?}",
+                outcome.error
+            );
+            match before {
+                Some(r) => println!(
+                    "[life 2] '{name}' resumed after round {r} and completed all {ROUNDS} rounds"
+                ),
+                None => println!("[life 2] '{name}' restarted from round 0 and completed"),
+            }
+        }
+        sched.drain();
+        fleet.shutdown();
+    }
+    println!(
+        "done: both jobs completed across a server kill; durable state in {}",
+        state_dir.display()
+    );
+    let _ = std::fs::remove_dir_all(&state_dir);
+    Ok(())
+}

@@ -4,7 +4,10 @@
 //! table and as machine-readable `BENCH_jobs.json` so the serving-layer
 //! perf trajectory is tracked from PR to PR.
 //!
-//! Run with `cargo bench --bench bench_jobs`.
+//! Run with `cargo bench --bench bench_jobs`. Set
+//! `FEDFLARE_BENCH_QUICK=1` for the CI-friendly quick mode: fewer
+//! concurrency points and a smaller model, same JSON shape — so the
+//! perf trajectory is recorded on every CI run without the full cost.
 
 use std::time::Instant;
 
@@ -18,8 +21,21 @@ use fedflare::util::json::Json;
 const CLIENTS: usize = 3;
 const ROUNDS: usize = 2;
 const KEYS: usize = 4;
-const KEY_ELEMS: usize = 32_768; // 128 kB per key -> 512 kB model
 const WORK_MS: u64 = 8; // simulated local compute per key
+
+/// `FEDFLARE_BENCH_QUICK=1` selects the CI quick mode.
+fn quick() -> bool {
+    std::env::var("FEDFLARE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// 128 kB per key -> 512 kB model (quick: 16 kB -> 64 kB).
+fn key_elems() -> usize {
+    if quick() {
+        4_096
+    } else {
+        32_768
+    }
+}
 
 fn clients() -> Vec<ClientSpec> {
     (0..CLIENTS)
@@ -54,7 +70,7 @@ fn run_mode(k: usize, max_concurrent: usize, tag: &str) -> ModeRun {
         job.min_clients = CLIENTS;
         job.stream.chunk_bytes = 32 << 10;
         let mut ctl = FedAvg::new(
-            StreamTestExecutor::build_model(KEYS, KEY_ELEMS, 1.0),
+            StreamTestExecutor::build_model(KEYS, key_elems(), 1.0),
             ROUNDS,
             CLIENTS,
         );
@@ -96,7 +112,8 @@ fn main() {
         "k", "seq wall", "conc wall", "speedup", "gather peak", "stage peak"
     );
     let mut rows = Vec::new();
-    for &k in &[1usize, 2, 4, 8] {
+    let ks: &[usize] = if quick() { &[1, 2] } else { &[1, 2, 4, 8] };
+    for &k in ks {
         let seq = run_mode(k, 1, "seq");
         let conc = run_mode(k, k, "conc");
         let speedup = seq.wall_s / conc.wall_s.max(1e-9);
@@ -122,9 +139,10 @@ fn main() {
         "jobs",
         Json::obj([
             ("bench", Json::str("jobs")),
+            ("quick", Json::num(if quick() { 1.0 } else { 0.0 })),
             ("clients", Json::num(CLIENTS as f64)),
             ("rounds", Json::num(ROUNDS as f64)),
-            ("model_bytes", Json::num((KEYS * KEY_ELEMS * 4) as f64)),
+            ("model_bytes", Json::num((KEYS * key_elems() * 4) as f64)),
             ("work_ms_per_key", Json::num(WORK_MS as f64)),
             ("rows", Json::arr(rows)),
         ]),

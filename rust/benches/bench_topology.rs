@@ -3,7 +3,9 @@
 //! emitted both as a table and as machine-readable `BENCH_topology.json`
 //! so the perf trajectory is tracked from PR to PR.
 //!
-//! Run with `cargo bench --bench bench_topology`.
+//! Run with `cargo bench --bench bench_topology`. Set
+//! `FEDFLARE_BENCH_QUICK=1` for the CI-friendly quick mode: smaller
+//! fleets and model, same JSON shape.
 
 use std::time::Instant;
 
@@ -71,15 +73,30 @@ fn run_topology(clients: usize, branching: usize, keys: usize, key_elems: usize)
     }
 }
 
+/// `FEDFLARE_BENCH_QUICK=1` selects the CI quick mode.
+fn quick() -> bool {
+    std::env::var("FEDFLARE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
 fn main() {
     // 1 MB model (4 x 256 kB tensors), one FedAvg round per topology
-    let (keys, key_elems) = (4usize, 65_536usize);
-    let cases: &[(usize, usize)] = &[
+    // (quick mode: 64 kB model, smaller fleets)
+    let (keys, key_elems) = if quick() {
+        (4usize, 4_096usize)
+    } else {
+        (4usize, 65_536usize)
+    };
+    let full_cases: &[(usize, usize)] = &[
         (16, 0),   // flat baseline
         (64, 0),   // flat, 4x fan-in
         (64, 8),   // tree: 8 mid-tier nodes of 8
         (128, 16), // tree: 8 mid-tier nodes of 16
     ];
+    let quick_cases: &[(usize, usize)] = &[
+        (8, 0),  // flat baseline
+        (16, 4), // tree: 4 mid-tier nodes of 4
+    ];
+    let cases = if quick() { quick_cases } else { full_cases };
     println!("== topology: one FedAvg round, 1 MB model ==");
     println!(
         "  {:<26} {:>9} {:>16} {:>16}",
@@ -111,6 +128,7 @@ fn main() {
         "topology",
         Json::obj([
             ("bench", Json::str("topology")),
+            ("quick", Json::num(if quick() { 1.0 } else { 0.0 })),
             ("model_bytes", Json::num((keys * key_elems * 4) as f64)),
             ("rows", Json::arr(rows)),
         ]),

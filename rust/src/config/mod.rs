@@ -98,6 +98,82 @@ impl StreamConfig {
     }
 }
 
+/// Control-plane knobs of a client fleet: heartbeat cadence and the
+/// liveness deadlines the server sweeps against (see
+/// [`crate::fleet::Registry`]). Defaults are deliberately generous so a
+/// loaded CI machine never spuriously demotes a healthy client; tests
+/// and chaos harnesses tighten them.
+#[derive(Debug, Clone)]
+pub struct FleetConfig {
+    /// Seconds between client heartbeats on the shared connection
+    /// (0 = heartbeats and liveness sweeps disabled: membership is
+    /// static, the pre-control-plane behavior).
+    pub heartbeat_interval_s: f64,
+    /// Without liveness evidence for this long, a Live client is demoted
+    /// to Suspect (excluded from new rounds, recoverable).
+    pub suspect_after_s: f64,
+    /// A Suspect client without evidence for this long goes Gone (only a
+    /// rejoin revives it).
+    pub gone_after_s: f64,
+}
+
+impl Default for FleetConfig {
+    fn default() -> FleetConfig {
+        FleetConfig {
+            heartbeat_interval_s: 0.5,
+            suspect_after_s: 10.0,
+            gone_after_s: 30.0,
+        }
+    }
+}
+
+impl FleetConfig {
+    pub fn from_json(j: &Json) -> Result<FleetConfig, ConfigError> {
+        let mut c = FleetConfig::default();
+        if let Some(t) = j.get("heartbeat_interval_s").as_f64() {
+            if t < 0.0 {
+                return Err(ConfigError("heartbeat_interval_s must be >= 0".into()));
+            }
+            c.heartbeat_interval_s = t;
+        }
+        if let Some(t) = j.get("suspect_after_s").as_f64() {
+            if t <= 0.0 {
+                return Err(ConfigError("suspect_after_s must be > 0".into()));
+            }
+            c.suspect_after_s = t;
+        }
+        if let Some(t) = j.get("gone_after_s").as_f64() {
+            if t <= 0.0 {
+                return Err(ConfigError("gone_after_s must be > 0".into()));
+            }
+            c.gone_after_s = t;
+        }
+        if c.gone_after_s < c.suspect_after_s {
+            return Err(ConfigError(
+                "gone_after_s must be >= suspect_after_s".into(),
+            ));
+        }
+        c.validate()?;
+        Ok(c)
+    }
+
+    /// Cross-field sanity: with heartbeats on, the suspect deadline must
+    /// clear at least two heartbeat intervals, or every healthy client
+    /// would flap Live → Suspect between beats.
+    pub fn validate(&self) -> Result<(), ConfigError> {
+        if self.heartbeat_interval_s > 0.0
+            && self.suspect_after_s < 2.0 * self.heartbeat_interval_s
+        {
+            return Err(ConfigError(format!(
+                "suspect_after_s ({}) must be >= 2 x heartbeat_interval_s ({}) \
+                 or healthy clients flap Suspect between heartbeats",
+                self.suspect_after_s, self.heartbeat_interval_s
+            )));
+        }
+        Ok(())
+    }
+}
+
 /// Which aggregation strategy the scatter-and-gather workflow plugs in
 /// (built by `coordinator::build_aggregator`). Pure config data — the
 /// math lives in `coordinator::aggregator`.
@@ -481,6 +557,9 @@ pub struct ScheduleSpec {
     pub max_concurrent: usize,
     /// The fleet's client set.
     pub clients: Vec<ClientSpec>,
+    /// Control-plane knobs (heartbeat cadence, liveness deadlines) — an
+    /// optional `"fleet"` object in the schedule JSON.
+    pub fleet: FleetConfig,
     pub entries: Vec<ScheduleEntry>,
 }
 
@@ -528,6 +607,7 @@ impl ScheduleSpec {
         Ok(ScheduleSpec {
             max_concurrent: max_concurrent.max(1),
             clients,
+            fleet: FleetConfig::default(),
             entries,
         })
     }
@@ -556,11 +636,15 @@ impl ScheduleSpec {
             Some(arr) => clients_from_json(arr)?,
             None => Vec::new(),
         };
-        Self::assemble(
+        let mut spec = Self::assemble(
             j.get("max_concurrent").as_usize().unwrap_or(2),
             clients,
             entries,
-        )
+        )?;
+        if !j.get("fleet").is_null() {
+            spec.fleet = FleetConfig::from_json(j.get("fleet"))?;
+        }
+        Ok(spec)
     }
 
     pub fn from_file(path: &Path) -> Result<ScheduleSpec, ConfigError> {
@@ -749,6 +833,59 @@ mod tests {
             {"name": "x", "artifact": "a", "abort_after_s": 0}
         ]}"#;
         assert!(ScheduleSpec::from_json(&Json::parse(bad_abort).unwrap(), base).is_err());
+    }
+
+    #[test]
+    fn fleet_config_parses_and_validates() {
+        let d = FleetConfig::default();
+        assert!(d.heartbeat_interval_s > 0.0, "heartbeats on by default");
+        assert!(d.suspect_after_s > 2.0 * d.heartbeat_interval_s);
+        assert!(d.gone_after_s >= d.suspect_after_s);
+        let j = Json::parse(
+            r#"{"heartbeat_interval_s": 0.1, "suspect_after_s": 0.4, "gone_after_s": 2}"#,
+        )
+        .unwrap();
+        let c = FleetConfig::from_json(&j).unwrap();
+        assert_eq!(c.heartbeat_interval_s, 0.1);
+        assert_eq!(c.suspect_after_s, 0.4);
+        assert_eq!(c.gone_after_s, 2.0);
+        // 0 disables heartbeats entirely
+        let off = FleetConfig::from_json(
+            &Json::parse(r#"{"heartbeat_interval_s": 0}"#).unwrap(),
+        )
+        .unwrap();
+        assert_eq!(off.heartbeat_interval_s, 0.0);
+        // rejects inverted/invalid deadlines
+        assert!(FleetConfig::from_json(
+            &Json::parse(r#"{"suspect_after_s": 0}"#).unwrap()
+        )
+        .is_err());
+        assert!(FleetConfig::from_json(
+            &Json::parse(r#"{"suspect_after_s": 5, "gone_after_s": 1}"#).unwrap()
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn schedule_parses_fleet_block() {
+        let src = r#"{
+            "fleet": {"heartbeat_interval_s": 0.2, "suspect_after_s": 1.0,
+                      "gone_after_s": 4.0},
+            "jobs": [{"name": "a", "artifact": "stream_test"}]
+        }"#;
+        let s = ScheduleSpec::from_json(&Json::parse(src).unwrap(), Path::new(".")).unwrap();
+        assert_eq!(s.fleet.heartbeat_interval_s, 0.2);
+        assert_eq!(s.fleet.suspect_after_s, 1.0);
+        // absent block -> defaults
+        let s = ScheduleSpec::from_json(
+            &Json::parse(r#"{"jobs": [{"name": "a", "artifact": "x"}]}"#).unwrap(),
+            Path::new("."),
+        )
+        .unwrap();
+        assert_eq!(
+            s.fleet.heartbeat_interval_s,
+            FleetConfig::default().heartbeat_interval_s
+        );
     }
 
     #[test]

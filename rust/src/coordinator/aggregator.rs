@@ -90,6 +90,22 @@ pub trait Aggregator: Send {
             self.name()
         )
     }
+
+    /// Serialize the **cross-round** state for durable checkpointing
+    /// (`serve --state-dir`): whatever must survive a server restart for
+    /// the remaining rounds to be byte-identical to an uninterrupted run
+    /// — FedOpt's server-optimizer moments, for instance. Round-scoped
+    /// fold state is never included (checkpoints are cut between rounds).
+    /// Stateless strategies (the default) export nothing.
+    fn export_state(&self) -> TensorDict {
+        TensorDict::new()
+    }
+
+    /// Restore state produced by [`Aggregator::export_state`] on the same
+    /// strategy. An empty dict is always accepted (fresh start).
+    fn import_state(&mut self, _state: &TensorDict) -> Result<()> {
+        Ok(())
+    }
 }
 
 /// Build an aggregation strategy from its config spec.
@@ -508,6 +524,45 @@ impl Aggregator for FedOpt {
             }
         }
         Ok(out)
+    }
+
+    fn export_state(&self) -> TensorDict {
+        // moments namespaced under m/ and v/, step as a 1-element i32 —
+        // everything a restarted server needs for bit-identical FedOpt
+        // steps over the remaining rounds
+        let mut s = TensorDict::new();
+        for (n, t) in self.m.iter() {
+            s.insert(format!("m/{n}"), t.clone());
+        }
+        for (n, t) in self.v.iter() {
+            s.insert(format!("v/{n}"), t.clone());
+        }
+        s.insert("opt/step", Tensor::i32(vec![1], vec![self.step]));
+        s
+    }
+
+    fn import_state(&mut self, state: &TensorDict) -> Result<()> {
+        if state.is_empty() {
+            return Ok(());
+        }
+        let mut m = TensorDict::new();
+        let mut v = TensorDict::new();
+        let mut step = None;
+        for (n, t) in state.iter() {
+            if let Some(rest) = n.strip_prefix("m/") {
+                m.insert(rest.to_string(), t.clone());
+            } else if let Some(rest) = n.strip_prefix("v/") {
+                v.insert(rest.to_string(), t.clone());
+            } else if n == "opt/step" {
+                step = t.as_i32().and_then(|s| s.first().copied());
+            } else {
+                bail!("fedopt: unknown state tensor '{n}'");
+            }
+        }
+        self.step = step.ok_or_else(|| anyhow!("fedopt: state missing opt/step"))?;
+        self.m = m;
+        self.v = v;
+        Ok(())
     }
 }
 
@@ -948,5 +1003,47 @@ mod tests {
             .name(),
             "fedopt-adam"
         );
+    }
+
+    #[test]
+    fn exported_state_resumes_every_strategy_bit_exact() {
+        // the checkpoint/resume oracle: run 4 rounds straight, vs run 2,
+        // export_state into a FRESH aggregator (a restarted server), run
+        // the last 2 — final models must be byte-identical. FedOpt's
+        // moments/step are the interesting cargo; Mean/FedProx prove the
+        // empty-state path.
+        let global0 = model(&[0.0, 0.0, 0.0]);
+        let rounds: Vec<Vec<FlMessage>> = (0..4)
+            .map(|r| {
+                vec![
+                    result("a", &[r as f32, 1.0, -2.0], 10.0),
+                    result("b", &[0.5, r as f32 * 0.25, 3.0], 30.0),
+                ]
+            })
+            .collect();
+        for spec in specs_under_test() {
+            let mut straight = build_aggregator(&spec);
+            let oracle =
+                run_rounds(straight.as_mut(), &global0, &rounds, |_, k| k).unwrap();
+
+            let mut first = build_aggregator(&spec);
+            let mid = run_rounds(first.as_mut(), &global0, &rounds[..2], |_, k| k).unwrap();
+            let state = first.export_state();
+            let mut resumed = build_aggregator(&spec);
+            resumed.import_state(&state).unwrap();
+            let fin =
+                run_rounds(resumed.as_mut(), &mid, &rounds[2..], |_, k| k).unwrap();
+            assert_eq!(
+                fin.to_bytes(),
+                oracle.to_bytes(),
+                "{spec:?}: resumed run diverged from uninterrupted run"
+            );
+        }
+        // garbage state is rejected, empty state is a fresh start
+        let mut opt = FedOpt::sgd(1.0, 0.9);
+        assert!(opt.import_state(&TensorDict::new()).is_ok());
+        let mut junk = TensorDict::new();
+        junk.insert("nope", Tensor::f32(vec![1], vec![0.0]));
+        assert!(opt.import_state(&junk).is_err());
     }
 }

@@ -65,7 +65,8 @@ pub use aggregator::{
 pub use hierarchy::{shard_plan, MidTier};
 pub use sag::{FedAvg, RoundMetrics, SamplePolicy, ScatterAndGather};
 pub use scheduler::{
-    run_one_job, JobOutcome, JobRequest, JobScheduler, JobStatus, OwnedExecutorFactory,
+    run_one_job, run_one_job_opts, JobOptions, JobOutcome, JobRequest, JobScheduler, JobStatus,
+    OwnedExecutorFactory,
 };
 pub use workflows::{CyclicWeightTransfer, FederatedEval, FederatedInference};
 
@@ -259,9 +260,17 @@ struct WorkerTask {
 /// messenger; tasks (each carrying its gather's reply channel) go down a
 /// channel, results come back on the per-gather channel — which is what
 /// lets a single gather multiplex many clients in completion order.
+///
+/// The handle also supports **channel replacement** (the rejoin
+/// handshake of elastic membership): a fresh registered [`Messenger`]
+/// sent through [`ClientHandle::channel_swapper`] is adopted by the
+/// worker before its next task, so a client that dropped and reconnected
+/// mid-job serves later rounds through the same handle — the job above
+/// never sees the swap.
 pub struct ClientHandle {
     pub name: String,
     task_tx: Sender<WorkerTask>,
+    swap_tx: Sender<Messenger>,
     worker: Option<std::thread::JoinHandle<()>>,
 }
 
@@ -269,6 +278,7 @@ impl ClientHandle {
     /// Spawn the worker for an already-registered client connection.
     pub fn spawn(name: String, mut messenger: Messenger) -> ClientHandle {
         let (task_tx, task_rx) = std::sync::mpsc::channel::<WorkerTask>();
+        let (swap_tx, swap_rx) = std::sync::mpsc::channel::<Messenger>();
         let wname = name.clone();
         let worker = std::thread::Builder::new()
             .name(format!("client-io-{wname}"))
@@ -276,6 +286,20 @@ impl ClientHandle {
                 while let Ok(WorkerTask { msg, tag, reply, gate, mut fold, counter }) =
                     task_rx.recv()
                 {
+                    // adopt the freshest replacement channel, if one
+                    // arrived (rejoin): the swapped-in messenger must
+                    // complete the per-job registration handshake before
+                    // it carries tasks — a replacement that dies mid-
+                    // handshake is discarded and the old channel kept
+                    // (its failure then attributes normally)
+                    while let Ok(mut fresh) = swap_rx.try_recv() {
+                        match accept_registration(&mut fresh) {
+                            Ok(_) => messenger = fresh,
+                            Err(e) => {
+                                log::debug!("{wname}: replacement channel dropped: {e}")
+                            }
+                        }
+                    }
                     let is_bye = msg.kind == Kind::Bye;
                     let outcome = (|| -> Result<(FlMessage, Option<FlowPermit>), StreamError> {
                         messenger.send_msg(&msg)?;
@@ -338,8 +362,16 @@ impl ClientHandle {
         ClientHandle {
             name,
             task_tx,
+            swap_tx,
             worker: Some(worker),
         }
+    }
+
+    /// Sender through which a fresh registered job channel can be
+    /// injected (see the type docs). The worker adopts it before its
+    /// next dispatched task.
+    pub fn channel_swapper(&self) -> Sender<Messenger> {
+        self.swap_tx.clone()
     }
 
     fn dispatch(
@@ -496,6 +528,10 @@ pub fn sample_indices(seed: u64, round: usize, pool: usize, n: usize) -> Vec<usi
     rng.choose(pool, n)
 }
 
+/// Liveness probe of a fleet-backed communicator: true while the named
+/// client is eligible for sampling (fleet-registry `Live`/`Joining`).
+pub type LivenessProbe = Box<dyn Fn(&str) -> bool + Send>;
+
 /// The communicator native to each Controller (paper Listing 3's
 /// `self.communicator`).
 pub struct Communicator {
@@ -506,6 +542,9 @@ pub struct Communicator {
     /// folds share the process-global counter, so per-node peaks — e.g.
     /// "root fan-in memory stays flat" — are read from here.
     counter: Arc<mem::Counter>,
+    /// Fleet-registry liveness view (None = every client always live,
+    /// the static-membership behavior).
+    liveness: Option<LivenessProbe>,
 }
 
 impl Communicator {
@@ -514,7 +553,50 @@ impl Communicator {
             clients,
             seed,
             counter: Arc::new(mem::Counter::new()),
+            liveness: None,
         }
+    }
+
+    /// Attach a fleet-registry liveness probe:
+    /// [`Communicator::live_clients`] and [`Communicator::sample_live`]
+    /// then reflect the current membership epoch instead of assuming
+    /// every handle's peer is alive.
+    pub fn set_liveness(&mut self, probe: LivenessProbe) {
+        self.liveness = Some(probe);
+    }
+
+    /// Indices of clients currently eligible for sampling, in handle
+    /// order. Without a probe, every client.
+    pub fn live_clients(&self) -> Vec<usize> {
+        match &self.liveness {
+            None => (0..self.clients.len()).collect(),
+            Some(p) => (0..self.clients.len())
+                .filter(|&i| p(&self.clients[i].name))
+                .collect(),
+        }
+    }
+
+    /// Deterministic per-(seed, round) sample of `n` clients from an
+    /// already-snapshotted `pool` of client indices (normally one
+    /// [`Communicator::live_clients`] call — snapshotting once keeps a
+    /// membership change between quorum check and sampling from
+    /// splitting the round's view). When the pool is every client this
+    /// reduces exactly to [`Communicator::sample_clients`] (identity
+    /// map), so static runs — and resumed runs over the same client set
+    /// — keep byte-identical participant schedules.
+    pub fn sample_pool(&self, pool: &[usize], n: usize, round: usize) -> Result<Vec<usize>> {
+        if n > pool.len() {
+            bail!("sample_pool: {} > pool of {}", n, pool.len());
+        }
+        Ok(sample_indices(self.seed, round, pool.len(), n)
+            .into_iter()
+            .map(|i| pool[i])
+            .collect())
+    }
+
+    /// [`Communicator::sample_pool`] over a fresh live-view snapshot.
+    pub fn sample_live(&self, n: usize, round: usize) -> Result<Vec<usize>> {
+        self.sample_pool(&self.live_clients(), n, round)
     }
 
     pub fn n_clients(&self) -> usize {
@@ -829,6 +911,11 @@ pub struct ServerCtx {
     /// Where to save global-model checkpoints (None = don't).
     pub ckpt_dir: Option<std::path::PathBuf>,
     pub job_name: String,
+    /// Durable round-state store (`serve --state-dir`): when set, a
+    /// workflow checkpoints each completed round through it and resumes
+    /// from the last checkpoint on startup (see
+    /// [`crate::persist::JobStore`]).
+    pub store: Option<Arc<crate::persist::JobStore>>,
 }
 
 impl ServerCtx {
@@ -837,6 +924,7 @@ impl ServerCtx {
             sink,
             ckpt_dir: None,
             job_name: job_name.to_string(),
+            store: None,
         }
     }
 }

@@ -181,11 +181,65 @@ impl Controller for ScatterAndGather {
             self.rounds,
             self.policy.min_clients
         );
-        for round in 0..self.rounds {
-            // 1. sample this round's participants (deterministic per
-            //    (job seed, round) — resumed and hierarchical runs sample
-            //    identically regardless of call order)
-            let clients = comm.sample_clients(self.policy.targets_per_round(), round)?;
+        // durable resume: with a state store, pick up from the last
+        // completed round's checkpoint (model + aggregator cross-round
+        // state) instead of restarting at round 0 — given the same
+        // client set, the remaining rounds are byte-identical to an
+        // uninterrupted run because sampling is a pure function of
+        // (seed, round) and every aggregator folds deterministically
+        let mut start_round = 0usize;
+        if let Some(store) = &ctx.store {
+            if let Some(ck) = store.load_round(&ctx.job_name)? {
+                self.model = ck.model;
+                if let Some(agg) = self.aggregator.as_mut() {
+                    agg.import_state(&ck.agg_state)?;
+                }
+                start_round = ck.round + 1;
+                log::info!(
+                    "{}: resuming from round-{} checkpoint ({} of {} rounds left)",
+                    ctx.job_name,
+                    ck.round,
+                    self.rounds.saturating_sub(start_round),
+                    self.rounds
+                );
+            }
+        }
+        for round in start_round..self.rounds {
+            // 1. sample this round's participants from the fleet's
+            //    *live* view (epoch-aware: a Gone/Suspect client is not
+            //    sampled; a rejoined client is eligible again from the
+            //    next round). Sampling stays deterministic per (job
+            //    seed, round) over the live pool — with every client
+            //    live this is exactly the classic schedule, so static
+            //    and resumed runs keep byte-identical participants.
+            let mut pool = comm.live_clients();
+            if pool.len() < self.policy.min_clients {
+                // Suspect is a *recoverable* state: give a transient
+                // sub-quorum dip (a heartbeat delayed at a round
+                // boundary, a client mid-rejoin) a bounded grace window
+                // before failing a long-running job — mirroring the
+                // scheduler's admission, which waits for liveness too.
+                let grace = self
+                    .policy
+                    .round_timeout
+                    .unwrap_or(Duration::from_secs(2));
+                let deadline = std::time::Instant::now() + grace;
+                while pool.len() < self.policy.min_clients
+                    && std::time::Instant::now() < deadline
+                {
+                    std::thread::sleep(Duration::from_millis(50));
+                    pool = comm.live_clients();
+                }
+            }
+            if pool.len() < self.policy.min_clients {
+                return Err(anyhow!(
+                    "round {round}: only {} live clients, quorum {} unreachable",
+                    pool.len(),
+                    self.policy.min_clients
+                ));
+            }
+            let targets = self.policy.targets_per_round().min(pool.len());
+            let clients = comm.sample_pool(&pool, targets, round)?;
             // 2. send the current global model; 3. fold each update into
             // the single accumulator tensor record by tensor record as
             // frames arrive (completion order — a fast site aggregates
@@ -232,6 +286,18 @@ impl Controller for ScatterAndGather {
             let folded = agg.folded();
             self.model = agg.finalize()?;
             self.aggregator = Some(agg);
+            // durable checkpoint of the completed round (atomic temp-
+            // file rename inside the store): a server killed after this
+            // line resumes at round+1; killed before it, the round
+            // re-runs — deterministically, either way byte-identical
+            if let Some(store) = &ctx.store {
+                let state = self
+                    .aggregator
+                    .as_ref()
+                    .map(|a| a.export_state())
+                    .unwrap_or_default();
+                store.save_round(&ctx.job_name, round, &self.model, &state)?;
+            }
             // bookkeeping: global-model validation scores from clients
             stats.per_client.sort_by(|a, b| a.0.cmp(&b.0));
             let rm = RoundMetrics {

@@ -28,22 +28,39 @@
 //! untouched** and finish with byte-identical results.
 
 use std::collections::{HashMap, HashSet, VecDeque};
-use std::sync::{Arc, Condvar, Mutex, MutexGuard};
+use std::sync::{Arc, Condvar, Mutex, MutexGuard, Weak};
 use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
 use super::{
     accept_registration, shard_plan, ClientHandle, Communicator, Controller, GatherPolicy,
-    MidTier, ServerCtx,
+    LivenessProbe, MidTier, ServerCtx,
 };
 use crate::config::{ClientSpec, FilterSpec, JobConfig};
 use crate::executor::{Executor, JobStart};
+use crate::fleet::ClientState;
 use crate::metrics::MetricsSink;
-use crate::sim::{ExecutorFactory, Fleet, RunReport};
+use crate::persist::JobStore;
+use crate::sim::{ExecutorFactory, Fleet, RejoinSpec, RunReport};
 use crate::streaming::Messenger;
 
 // ------------------------------------------------------------ run one job
+
+/// Optional control-plane wiring of one job run (see
+/// [`run_one_job_opts`]). Default: no durable store, no mid-job rejoin —
+/// exactly the pre-control-plane behavior.
+#[derive(Default)]
+pub struct JobOptions {
+    /// Durable round checkpointing (`serve --state-dir`): threaded into
+    /// the controller's [`ServerCtx`], so supporting workflows resume
+    /// from their last completed round and checkpoint each new one.
+    pub store: Option<Arc<JobStore>>,
+    /// Shareable executor factory enabling the rejoin handshake: a
+    /// client that drops and reconnects mid-job is re-deployed through
+    /// it (flat topologies only; tree jobs keep static membership).
+    pub rejoin: Option<Arc<Mutex<OwnedExecutorFactory>>>,
+}
 
 /// Run one job's server side over an already-connected [`Fleet`], on the
 /// calling thread. `job_id` must be unique among the fleet's in-flight
@@ -59,6 +76,28 @@ pub fn run_one_job<C: Controller + ?Sized>(
     make_executor: &mut ExecutorFactory,
     results_dir: &str,
 ) -> Result<RunReport> {
+    run_one_job_opts(
+        fleet,
+        job_id,
+        job,
+        controller,
+        make_executor,
+        results_dir,
+        JobOptions::default(),
+    )
+}
+
+/// [`run_one_job`] with control-plane options: durable round state and
+/// mid-job rejoin (see [`JobOptions`]).
+pub fn run_one_job_opts<C: Controller + ?Sized>(
+    fleet: &Fleet,
+    job_id: u32,
+    job: &JobConfig,
+    controller: &mut C,
+    make_executor: &mut ExecutorFactory,
+    results_dir: &str,
+    opts: JobOptions,
+) -> Result<RunReport> {
     let n = job.clients.len();
     if n == 0 {
         bail!("job '{}' has no clients", job.name);
@@ -69,11 +108,21 @@ pub fn run_one_job<C: Controller + ?Sized>(
             anyhow!("job '{}': client '{}' not in the fleet", job.name, c.name)
         })?);
     }
+    let tree = job.branching > 1 && n > job.branching;
     let sink = MetricsSink::create(results_dir, &job.name)?;
     let mut ctx = ServerCtx::new(sink, &job.name);
+    ctx.store = opts.store;
+    // control-plane plumbing before any open: rejoins re-deploy through
+    // it, and open_job counts task loops against it. Every exit below
+    // runs clear_job, so the entry never outlives the job.
+    fleet.register_job(
+        job_id,
+        opts.rejoin.filter(|_| !tree).map(|factory| RejoinSpec {
+            job: job.clone(),
+            factory,
+        }),
+    );
 
-    // clients the job was actually announced to (their loops will report)
-    let mut opened = 0usize;
     let result = (|| -> Result<RunReport> {
         // deploy: one executor + filter chain per participating client,
         // registered in the shared directory, then announce the job on
@@ -96,9 +145,7 @@ pub fn run_one_job<C: Controller + ?Sized>(
         }
         for &fi in &fleet_idx {
             fleet.open_job(fi, job_id, &job.name)?;
-            opened += 1;
         }
-        let tree = job.branching > 1 && n > job.branching;
         if tree {
             run_tree(fleet, job_id, job, &fleet_idx, controller, &mut ctx)
         } else {
@@ -115,20 +162,77 @@ pub fn run_one_job<C: Controller + ?Sized>(
         fleet.abort_job(job_id);
     }
 
-    // collect client-loop outcomes: loops exit on the byes sent during
-    // teardown, or with errors once an abort severed their channels
+    // Tear down the control-plane plumbing FIRST (no further rejoins can
+    // open loops), then collect client-loop outcomes: loops exit on the
+    // byes sent during teardown, or with errors once an abort/kill
+    // severed their channels. `opened` counts every loop ever opened for
+    // this job — initial deployment plus rejoins.
+    let opened = fleet.clear_job(job_id);
     let finishes = fleet
         .directory()
         .wait_finished(job_id, opened, Duration::from_secs(30));
-    let mut client_errs: Vec<String> = finishes
+    // Elastic-membership error semantics: a loop error is fatal only for
+    // a client that is still part of the fleet's live view and never
+    // completed a loop for this job. Errors from churned clients (killed
+    // / Suspect / Gone) and pre-rejoin loops of a client whose later
+    // loop finished cleanly are quorum-tolerated churn, not job
+    // failures — correctness was already decided by the gather's quorum.
+    let ok_names: HashSet<&str> = finishes
         .iter()
-        .filter_map(|(name, r)| r.as_ref().err().map(|e| format!("{name}: {e}")))
+        .filter(|(_, r)| r.is_ok())
+        .map(|(name, _)| name.as_str())
         .collect();
+    let mut client_errs: Vec<String> = Vec::new();
+    let mut churn_errs: Vec<String> = Vec::new();
+    for (name, r) in &finishes {
+        if let Err(e) = r {
+            let eligible = matches!(
+                fleet.client_state(name),
+                Some(ClientState::Live | ClientState::Joining)
+            );
+            if ok_names.contains(name.as_str()) || !eligible {
+                churn_errs.push(format!("{name}: {e}"));
+            } else {
+                client_errs.push(format!("{name}: {e}"));
+            }
+        }
+    }
+    if !churn_errs.is_empty() {
+        log::info!(
+            "job '{}': tolerated churned client loops: {}",
+            job.name,
+            churn_errs.join("; ")
+        );
+    }
     if finishes.len() < opened {
-        client_errs.push(format!(
-            "{} of {opened} opened client loops never reported",
-            opened - finishes.len()
-        ));
+        let missing = opened - finishes.len();
+        // attribute the shortfall: a LIVE client with no report at all is
+        // a wedged loop and fails the job; a shortfall explained entirely
+        // by churned clients' extra loops is tolerated like their errors
+        let unaccounted: Vec<&str> = job
+            .clients
+            .iter()
+            .filter(|c| !finishes.iter().any(|(n, _)| n == &c.name))
+            .filter(|c| {
+                matches!(
+                    fleet.client_state(&c.name),
+                    Some(ClientState::Live | ClientState::Joining)
+                )
+            })
+            .map(|c| c.name.as_str())
+            .collect();
+        if !unaccounted.is_empty() {
+            client_errs.push(format!(
+                "{missing} of {opened} opened client loops never reported \
+                 (live clients without any report: {})",
+                unaccounted.join(", ")
+            ));
+        } else {
+            log::warn!(
+                "job '{}': {missing} of {opened} client loop(s) never reported (churn)",
+                job.name
+            );
+        }
     }
     let report = result?;
     if !client_errs.is_empty() {
@@ -138,6 +242,9 @@ pub fn run_one_job<C: Controller + ?Sized>(
 }
 
 /// Flat star: per-job messengers over the fleet's shared connections.
+/// Registers each handle's channel swapper with the fleet (rejoin
+/// delivery) and gives the communicator the registry's liveness view, so
+/// rounds sample from live members only.
 fn run_flat<C: Controller + ?Sized>(
     fleet: &Fleet,
     job_id: u32,
@@ -159,7 +266,12 @@ fn run_flat<C: Controller + ?Sized>(
             .position(|c| c.name == h.name)
             .unwrap_or(usize::MAX)
     });
-    run_controller(handles, job, controller, ctx)
+    for h in &handles {
+        fleet.register_swap(job_id, &h.name, h.channel_swapper());
+    }
+    let registry = fleet.registry().clone();
+    let probe: LivenessProbe = Box::new(move |name: &str| registry.is_eligible(name));
+    run_controller(handles, job, controller, ctx, Some(probe))
 }
 
 /// 2-level aggregator tree: one mid-tier node per shard folds its leaves
@@ -216,9 +328,11 @@ fn run_tree<C: Controller + ?Sized>(
         let name = accept_registration(&mut m)?;
         handles.push(ClientHandle::spawn(name, m));
     }
-    // zero-padded names sort to shard order
+    // zero-padded names sort to shard order. Mid-tier nodes are
+    // in-process server threads, always alive: no liveness probe (leaf
+    // churn surfaces through the shard gathers' straggler path).
     handles.sort_by(|a, b| a.name.cmp(&b.name));
-    let run_result = run_controller(handles, job, controller, ctx);
+    let run_result = run_controller(handles, job, controller, ctx, None);
 
     let mut errs = Vec::new();
     for (name, t) in mid_threads {
@@ -242,8 +356,12 @@ fn run_controller<C: Controller + ?Sized>(
     job: &JobConfig,
     controller: &mut C,
     ctx: &mut ServerCtx,
+    liveness: Option<LivenessProbe>,
 ) -> Result<RunReport> {
     let mut comm = Communicator::new(handles, job.seed);
+    if let Some(probe) = liveness {
+        comm.set_liveness(probe);
+    }
     let counter = comm.gather_counter();
     let run_result = controller.run(&mut comm, ctx);
     if run_result.is_err() {
@@ -314,6 +432,19 @@ pub enum JobStatus {
     Aborted,
 }
 
+impl JobStatus {
+    /// Stable lowercase name (the durable queue manifest's vocabulary).
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            JobStatus::Queued => "queued",
+            JobStatus::Running => "running",
+            JobStatus::Completed => "completed",
+            JobStatus::Failed => "failed",
+            JobStatus::Aborted => "aborted",
+        }
+    }
+}
+
 /// Terminal outcome of one job. The controller is handed back so callers
 /// can read its history / final model.
 pub struct JobOutcome {
@@ -337,6 +468,7 @@ struct SchedCore {
     fleet: Arc<Fleet>,
     results_dir: String,
     max_concurrent: usize,
+    store: Option<Arc<JobStore>>,
     inner: Mutex<SchedInner>,
     cv: Condvar,
 }
@@ -352,11 +484,24 @@ impl JobScheduler {
     /// A scheduler over a connected fleet. `max_concurrent` is the
     /// resource policy: jobs beyond it queue in submission order.
     pub fn new(fleet: Arc<Fleet>, max_concurrent: usize, results_dir: &str) -> JobScheduler {
-        JobScheduler {
+        Self::with_store(fleet, max_concurrent, results_dir, None)
+    }
+
+    /// [`JobScheduler::new`] with durable job state: statuses land in
+    /// the store's queue manifest and running jobs checkpoint/resume
+    /// per round (`serve --state-dir`).
+    pub fn with_store(
+        fleet: Arc<Fleet>,
+        max_concurrent: usize,
+        results_dir: &str,
+        store: Option<Arc<JobStore>>,
+    ) -> JobScheduler {
+        let sched = JobScheduler {
             core: Arc::new(SchedCore {
                 fleet,
                 results_dir: results_dir.to_string(),
                 max_concurrent: max_concurrent.max(1),
+                store,
                 inner: Mutex::new(SchedInner {
                     queue: VecDeque::new(),
                     statuses: HashMap::new(),
@@ -368,12 +513,76 @@ impl JobScheduler {
                 }),
                 cv: Condvar::new(),
             }),
-        }
+        };
+        // membership changes re-check admission: a queued job waiting on
+        // a Suspect/absent client dispatches the moment the fleet's live
+        // view covers it again (Weak breaks the fleet<->scheduler cycle)
+        let weak: Weak<SchedCore> = Arc::downgrade(&sched.core);
+        sched
+            .core
+            .fleet
+            .set_membership_listener(Box::new(move || {
+                if let Some(core) = weak.upgrade() {
+                    let inner = core.inner.lock().unwrap();
+                    JobScheduler::dispatch(&core, inner);
+                }
+            }));
+        sched
     }
 
-    /// Enqueue a job; it starts as soon as a concurrency slot frees.
-    /// Returns the job id (also the wire-level `job` of all its frames).
+    /// Enqueue a job; it starts as soon as a concurrency slot frees AND
+    /// every client it names is in the fleet's live view (registry-backed
+    /// admission). Returns the job id (also the wire-level `job` of all
+    /// its frames).
     pub fn submit(&self, req: JobRequest) -> u32 {
+        if let Some(store) = &self.core.store {
+            // a name the manifest has never seen is a FRESH job: drop
+            // any stale checkpoint left by an earlier state-dir life, so
+            // it cannot silently resume another job's rounds. A name
+            // with recorded history (queued/running/aborted/...) is a
+            // re-submission and keeps its checkpoint — that's recovery.
+            if store.status(&req.job.name).is_none() {
+                if let Err(e) = store.clear_round(&req.job.name) {
+                    log::warn!("state store: {e}");
+                }
+            }
+            if let Err(e) = store.set_status(&req.job.name, JobStatus::Queued.as_str()) {
+                log::warn!("state store: {e}");
+            }
+        }
+        // fail fast on clients that were never part of the fleet: unlike
+        // a Suspect/Gone member (which may rejoin — the job waits), a
+        // name with no slot is a configuration error, and queueing it
+        // forever would hang wait()/drain() silently.
+        if let Some(missing) = req
+            .job
+            .clients
+            .iter()
+            .find(|c| self.core.fleet.index_of(&c.name).is_none())
+        {
+            let error = format!(
+                "job '{}': client '{}' not in the fleet",
+                req.job.name, missing.name
+            );
+            if let Some(store) = &self.core.store {
+                let _ = store.set_status(&req.job.name, JobStatus::Failed.as_str());
+            }
+            let mut inner = self.core.inner.lock().unwrap();
+            let id = inner.next_id;
+            inner.next_id += 1;
+            inner.statuses.insert(id, JobStatus::Failed);
+            inner.outcomes.insert(
+                id,
+                JobOutcome {
+                    status: JobStatus::Failed,
+                    report: None,
+                    error: Some(error),
+                    controller: Some(req.controller),
+                },
+            );
+            self.core.cv.notify_all();
+            return id;
+        }
         let mut inner = self.core.inner.lock().unwrap();
         let id = inner.next_id;
         inner.next_id += 1;
@@ -381,6 +590,13 @@ impl JobScheduler {
         inner.queue.push_back((id, req));
         Self::dispatch(&self.core, inner);
         id
+    }
+
+    /// Re-check admission now (the fleet's membership listener calls
+    /// this on every epoch change; exposed for manual nudges too).
+    pub fn kick(&self) {
+        let inner = self.core.inner.lock().unwrap();
+        Self::dispatch(&self.core, inner);
     }
 
     /// Current lifecycle state (None = unknown id).
@@ -405,6 +621,9 @@ impl JobScheduler {
                 if let Some(pos) = inner.queue.iter().position(|(j, _)| *j == id) {
                     let (_, req) = inner.queue.remove(pos).expect("position just found");
                     inner.statuses.insert(id, JobStatus::Aborted);
+                    if let Some(store) = &self.core.store {
+                        let _ = store.set_status(&req.job.name, JobStatus::Aborted.as_str());
+                    }
                     inner.outcomes.insert(
                         id,
                         JobOutcome {
@@ -472,15 +691,37 @@ impl JobScheduler {
         }
     }
 
+    /// True while every client the job names is in the fleet's live view
+    /// (`Live`/`Joining`) — the registry-backed admission predicate. A
+    /// job whose clients are Suspect, Gone, or not yet connected stays
+    /// queued; membership changes re-run dispatch via the fleet's
+    /// epoch-change listener.
+    fn admissible(fleet: &Fleet, job: &JobConfig) -> bool {
+        job.clients.iter().all(|c| {
+            matches!(
+                fleet.client_state(&c.name),
+                Some(ClientState::Live | ClientState::Joining)
+            )
+        })
+    }
+
     /// Pop queued jobs into controller threads while capacity allows.
+    /// Admission-aware: skips (leaves queued) jobs whose clients are not
+    /// currently live, so one absent site never head-of-line-blocks the
+    /// rest of the queue.
     fn dispatch(core: &Arc<SchedCore>, mut inner: MutexGuard<'_, SchedInner>) {
         // reap finished controller threads so a long-lived scheduler's
         // bookkeeping stays proportional to running jobs, not total ever
         inner.threads.retain(|h| !h.is_finished());
         while inner.running < core.max_concurrent {
-            let Some((id, req)) = inner.queue.pop_front() else {
+            let Some(pos) = inner
+                .queue
+                .iter()
+                .position(|(_, req)| Self::admissible(&core.fleet, &req.job))
+            else {
                 break;
             };
+            let (id, req) = inner.queue.remove(pos).expect("position just found");
             inner.running += 1;
             inner.statuses.insert(id, JobStatus::Running);
             let core2 = core.clone();
@@ -496,16 +737,31 @@ impl JobScheduler {
         let JobRequest {
             job,
             mut controller,
-            mut factory,
+            factory,
         } = req;
-        let mut shim = |i: usize, s: &ClientSpec| factory(i, s);
-        let result = run_one_job(
+        if let Some(store) = &core.store {
+            let _ = store.set_status(&job.name, JobStatus::Running.as_str());
+        }
+        // the factory is shared with the fleet's rejoin handler: a
+        // client reconnecting mid-job gets a fresh executor through the
+        // same closure that built the initial deployment
+        let factory = Arc::new(Mutex::new(factory));
+        let shared = factory.clone();
+        let mut shim = |i: usize, s: &ClientSpec| {
+            let mut f = shared.lock().unwrap();
+            (*f)(i, s)
+        };
+        let result = run_one_job_opts(
             &core.fleet,
             id,
             &job,
             controller.as_mut(),
             &mut shim,
             &core.results_dir,
+            JobOptions {
+                store: core.store.clone(),
+                rejoin: Some(factory.clone()),
+            },
         );
         let mut inner = core.inner.lock().unwrap();
         let aborted = inner.abort_requested.remove(&id);
@@ -528,6 +784,9 @@ impl JobScheduler {
                 controller: Some(controller),
             },
         };
+        if let Some(store) = &core.store {
+            let _ = store.set_status(&job.name, outcome.status.as_str());
+        }
         inner.statuses.insert(id, outcome.status);
         inner.outcomes.insert(id, outcome);
         inner.running -= 1;

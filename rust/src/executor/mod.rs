@@ -297,11 +297,18 @@ impl JobDirectory {
 /// `job_abort` severs a job's channel so its loop unwinds — and joins
 /// every job loop at the fleet-level bye. One connection, many jobs, one
 /// executor per active job, interleaved task streams.
+///
+/// With a nonzero heartbeat interval, a lightweight loop sends one
+/// [`KIND_HEARTBEAT`](crate::sfm::KIND_HEARTBEAT) control frame per
+/// interval on the shared connection — the client half of the fleet
+/// control plane (the server's deadline sweeps read the arrival times
+/// off the mux; see [`crate::fleet::Registry`]).
 pub struct MultiJobRuntime {
     name: String,
     index: usize,
     mux: MuxConn,
     directory: Arc<JobDirectory>,
+    heartbeat: Duration,
 }
 
 impl MultiJobRuntime {
@@ -310,12 +317,14 @@ impl MultiJobRuntime {
         index: usize,
         mux: MuxConn,
         directory: Arc<JobDirectory>,
+        heartbeat: Duration,
     ) -> MultiJobRuntime {
         MultiJobRuntime {
             name: name.to_string(),
             index,
             mux,
             directory,
+            heartbeat,
         }
     }
 
@@ -324,6 +333,39 @@ impl MultiJobRuntime {
     /// through the [`JobDirectory`], never up from here — a failed job
     /// must not take the connection's other jobs down.
     pub fn run(self) -> Result<()> {
+        // the liveness loop: one empty heartbeat frame per interval,
+        // first one immediately (so a rejoining client turns Live fast).
+        // Sleeps in short slices so shutdown joins promptly, stops on
+        // its own once the transport dies.
+        let hb_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
+        let hb_thread = if self.heartbeat > Duration::ZERO {
+            let mux = self.mux.clone();
+            let stop = hb_stop.clone();
+            let interval = self.heartbeat;
+            Some(
+                std::thread::Builder::new()
+                    .name(format!("hb-{}", self.name))
+                    .stack_size(64 << 10)
+                    .spawn(move || {
+                        use std::sync::atomic::Ordering;
+                        while !stop.load(Ordering::Relaxed) {
+                            if mux.send_heartbeat().is_err() {
+                                break;
+                            }
+                            let mut slept = Duration::ZERO;
+                            while slept < interval && !stop.load(Ordering::Relaxed) {
+                                let slice =
+                                    Duration::from_millis(50).min(interval - slept);
+                                std::thread::sleep(slice);
+                                slept += slice;
+                            }
+                        }
+                    })
+                    .map_err(|e| anyhow!("{}: spawn heartbeat loop: {e}", self.name))?,
+            )
+        } else {
+            None
+        };
         let mut control =
             Messenger::new(Box::new(self.mux.handle(0)), 4096, (self.index + 1) as u32);
         let mut loops: Vec<(u32, std::thread::JoinHandle<()>)> = Vec::new();
@@ -390,6 +432,10 @@ impl MultiJobRuntime {
         // observes Closed instead of deadlocking the join
         for (job, h) in loops {
             self.mux.close_job(job);
+            let _ = h.join();
+        }
+        hb_stop.store(true, std::sync::atomic::Ordering::Relaxed);
+        if let Some(h) = hb_thread {
             let _ = h.join();
         }
         Ok(())

@@ -1,0 +1,329 @@
+//! The fleet control plane: dynamic membership over a long-lived client
+//! fleet (the serving-system half of the paper's "real-world FL" pitch —
+//! sites join late, drop out, and come back, and the server keeps
+//! scheduling rounds over whoever is actually there).
+//!
+//! [`Registry`] tracks one entry per fleet connection slot through the
+//! liveness state machine
+//!
+//! ```text
+//! Joining ──connected──▶ Live ──missed heartbeats──▶ Suspect ──▶ Gone
+//!    ▲                    ▲                             │
+//!    └────── rejoin ──────┴───── heartbeat resumes ─────┘
+//! ```
+//!
+//! driven by [`KIND_HEARTBEAT`](crate::sfm::KIND_HEARTBEAT) control
+//! frames (sent by each client's
+//! [`MultiJobRuntime`](crate::executor::MultiJobRuntime), observed by the
+//! mux receive pump, swept against deadlines by the fleet's sweeper
+//! thread). Every transition bumps the fleet **epoch** — a monotonic
+//! membership version. Consumers act on the *view*, not on events:
+//! [`ScatterAndGather`](crate::coordinator::ScatterAndGather) samples
+//! each round from the currently eligible clients, the
+//! [`JobScheduler`](crate::coordinator::JobScheduler) admits queued jobs
+//! only once their clients are eligible, and a client going Suspect
+//! mid-round simply falls into the existing straggler/quorum path.
+//!
+//! The registry is pure bookkeeping — connections, heartbeat loops, and
+//! the sweeper live in [`crate::sim::Fleet`]; durable job state lives in
+//! [`crate::persist`].
+
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Liveness of one fleet client slot.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClientState {
+    /// Slot allocated, connection being (re)established.
+    Joining,
+    /// Connected and heartbeating within the deadline.
+    Live,
+    /// Missed the heartbeat deadline (or its transport died); excluded
+    /// from new rounds, recoverable if heartbeats resume.
+    Suspect,
+    /// Past the gone deadline (or killed); only a rejoin revives it.
+    Gone,
+}
+
+impl ClientState {
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            ClientState::Joining => "joining",
+            ClientState::Live => "live",
+            ClientState::Suspect => "suspect",
+            ClientState::Gone => "gone",
+        }
+    }
+}
+
+struct Entry {
+    name: String,
+    state: ClientState,
+    /// Last liveness evidence (connect time, then heartbeat arrivals).
+    last_seen: Instant,
+}
+
+#[derive(Default)]
+struct RegInner {
+    entries: Vec<Entry>,
+    epoch: u64,
+}
+
+impl RegInner {
+    fn set_state(&mut self, idx: usize, state: ClientState) {
+        if let Some(e) = self.entries.get_mut(idx) {
+            if e.state != state {
+                e.state = state;
+                self.epoch += 1;
+            }
+        }
+    }
+}
+
+/// Membership + liveness view of one fleet (see module docs). Shared
+/// (`Arc`) between the fleet's sweeper, the scheduler's admission check,
+/// and each running job's per-round sampling probe.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<RegInner>,
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Allocate (or reclaim, by name) a slot in `Joining` state; returns
+    /// its index. Indices are stable across disconnect/rejoin — they
+    /// mirror the fleet's connection slots.
+    pub fn join(&self, name: &str) -> usize {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(idx) = inner.entries.iter().position(|e| e.name == name) {
+            inner.entries[idx].last_seen = Instant::now();
+            inner.set_state(idx, ClientState::Joining);
+            return idx;
+        }
+        inner.entries.push(Entry {
+            name: name.to_string(),
+            state: ClientState::Joining,
+            last_seen: Instant::now(),
+        });
+        inner.epoch += 1;
+        inner.entries.len() - 1
+    }
+
+    /// The slot's connection is established: `Joining -> Live`.
+    pub fn connected(&self, idx: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        if let Some(e) = inner.entries.get_mut(idx) {
+            e.last_seen = Instant::now();
+        }
+        inner.set_state(idx, ClientState::Live);
+    }
+
+    /// Record heartbeat evidence for a slot. A `Suspect` (or still
+    /// `Joining`) client whose heartbeats flow is promoted back to
+    /// `Live`; a `Gone` client is not — it must rejoin through a fresh
+    /// connection.
+    pub fn heard(&self, idx: usize, at: Instant) {
+        let mut inner = self.inner.lock().unwrap();
+        let recovering = match inner.entries.get_mut(idx) {
+            None => return,
+            Some(e) => {
+                if at <= e.last_seen {
+                    return;
+                }
+                e.last_seen = at;
+                matches!(e.state, ClientState::Suspect | ClientState::Joining)
+            }
+        };
+        if recovering {
+            inner.set_state(idx, ClientState::Live);
+        }
+    }
+
+    /// Demote a slot to `Suspect` now (its transport was observed dead).
+    /// Applies to `Live` and `Joining` alike — a connection that died
+    /// mid-establishment is just as gone.
+    pub fn suspect(&self, idx: usize) {
+        let mut inner = self.inner.lock().unwrap();
+        let state = inner.entries.get(idx).map(|e| e.state);
+        if matches!(state, Some(ClientState::Live | ClientState::Joining)) {
+            inner.set_state(idx, ClientState::Suspect);
+        }
+    }
+
+    /// Mark a slot `Gone` now (killed / deregistered).
+    pub fn mark_gone(&self, idx: usize) {
+        self.inner.lock().unwrap().set_state(idx, ClientState::Gone);
+    }
+
+    /// The deadline sweep: demote `Live -> Suspect` past `suspect_after`
+    /// without liveness evidence, `Suspect -> Gone` past `gone_after`.
+    /// Returns the epoch after the sweep.
+    pub fn sweep(&self, suspect_after: Duration, gone_after: Duration) -> u64 {
+        let now = Instant::now();
+        let mut inner = self.inner.lock().unwrap();
+        for idx in 0..inner.entries.len() {
+            let (state, last) = {
+                let e = &inner.entries[idx];
+                (e.state, e.last_seen)
+            };
+            let stale = now.saturating_duration_since(last);
+            match state {
+                // a Joining slot that never completed its connection is
+                // swept like a silent Live one — is_eligible's optimism
+                // about Joining is bounded by this deadline
+                ClientState::Live | ClientState::Joining if stale >= suspect_after => {
+                    inner.set_state(idx, ClientState::Suspect)
+                }
+                ClientState::Suspect if stale >= gone_after => {
+                    inner.set_state(idx, ClientState::Gone)
+                }
+                _ => {}
+            }
+        }
+        inner.epoch
+    }
+
+    /// Current membership version: bumped by every state transition.
+    pub fn epoch(&self) -> u64 {
+        self.inner.lock().unwrap().epoch
+    }
+
+    /// State of a named client (None = never joined).
+    pub fn state_of(&self, name: &str) -> Option<ClientState> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .entries
+            .iter()
+            .find(|e| e.name == name)
+            .map(|e| e.state)
+    }
+
+    /// Whether a named client is eligible for round sampling and job
+    /// admission: `Live`, or `Joining` (a connection mid-establishment is
+    /// treated optimistically — it either completes within a heartbeat
+    /// interval or the sweep demotes it).
+    pub fn is_eligible(&self, name: &str) -> bool {
+        matches!(
+            self.state_of(name),
+            Some(ClientState::Live | ClientState::Joining)
+        )
+    }
+
+    /// Names of currently eligible clients, in slot order.
+    pub fn eligible_names(&self) -> Vec<String> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .entries
+            .iter()
+            .filter(|e| matches!(e.state, ClientState::Live | ClientState::Joining))
+            .map(|e| e.name.clone())
+            .collect()
+    }
+
+    /// Snapshot of (name, state) per slot, for diagnostics and tests.
+    pub fn snapshot(&self) -> Vec<(String, ClientState)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .entries
+            .iter()
+            .map(|e| (e.name.clone(), e.state))
+            .collect()
+    }
+
+    /// Slots tracked (live or not).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().entries.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_joining_live_suspect_gone() {
+        let r = Registry::new();
+        let idx = r.join("site-1");
+        assert_eq!(r.state_of("site-1"), Some(ClientState::Joining));
+        assert!(r.is_eligible("site-1"), "joining counts as eligible");
+        r.connected(idx);
+        assert_eq!(r.state_of("site-1"), Some(ClientState::Live));
+        // no heartbeats: sweep with a zero deadline demotes immediately
+        std::thread::sleep(Duration::from_millis(5));
+        r.sweep(Duration::from_millis(1), Duration::from_secs(60));
+        assert_eq!(r.state_of("site-1"), Some(ClientState::Suspect));
+        assert!(!r.is_eligible("site-1"));
+        // long enough past the gone deadline
+        r.sweep(Duration::from_millis(1), Duration::from_millis(1));
+        assert_eq!(r.state_of("site-1"), Some(ClientState::Gone));
+        assert_eq!(r.state_of("nope"), None);
+    }
+
+    #[test]
+    fn heartbeats_keep_and_restore_liveness() {
+        let r = Registry::new();
+        let idx = r.join("c");
+        r.connected(idx);
+        std::thread::sleep(Duration::from_millis(5));
+        // fresh heartbeat evidence keeps the client Live through a sweep
+        r.heard(idx, Instant::now());
+        r.sweep(Duration::from_millis(3), Duration::from_secs(60));
+        assert_eq!(r.state_of("c"), Some(ClientState::Live));
+        // demote, then resume heartbeats: Suspect recovers to Live
+        std::thread::sleep(Duration::from_millis(5));
+        r.sweep(Duration::from_millis(3), Duration::from_secs(60));
+        assert_eq!(r.state_of("c"), Some(ClientState::Suspect));
+        r.heard(idx, Instant::now());
+        assert_eq!(r.state_of("c"), Some(ClientState::Live));
+        // Gone does NOT recover from a heartbeat — only a rejoin does
+        r.mark_gone(idx);
+        std::thread::sleep(Duration::from_millis(2));
+        r.heard(idx, Instant::now());
+        assert_eq!(r.state_of("c"), Some(ClientState::Gone));
+        let again = r.join("c");
+        assert_eq!(again, idx, "rejoin reclaims the slot by name");
+        assert_eq!(r.state_of("c"), Some(ClientState::Joining));
+        r.connected(idx);
+        assert_eq!(r.state_of("c"), Some(ClientState::Live));
+    }
+
+    #[test]
+    fn epoch_bumps_on_every_membership_transition() {
+        let r = Registry::new();
+        let e0 = r.epoch();
+        let a = r.join("a");
+        assert!(r.epoch() > e0);
+        let e1 = r.epoch();
+        r.connected(a);
+        assert!(r.epoch() > e1);
+        let e2 = r.epoch();
+        // no-op transitions don't bump
+        r.connected(a);
+        r.heard(a, Instant::now());
+        assert_eq!(r.epoch(), e2);
+        r.mark_gone(a);
+        assert!(r.epoch() > e2);
+    }
+
+    #[test]
+    fn eligible_names_reflect_the_live_view() {
+        let r = Registry::new();
+        let a = r.join("a");
+        let b = r.join("b");
+        r.connected(a);
+        r.connected(b);
+        assert_eq!(r.eligible_names(), vec!["a".to_string(), "b".to_string()]);
+        r.mark_gone(b);
+        assert_eq!(r.eligible_names(), vec!["a".to_string()]);
+        assert_eq!(r.len(), 2, "gone slots stay tracked");
+        let snap = r.snapshot();
+        assert_eq!(snap[1], ("b".to_string(), ClientState::Gone));
+    }
+}

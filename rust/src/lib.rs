@@ -56,15 +56,31 @@
 //! `broadcast_and_wait`, `Messenger::send_msg_v1`) remain as
 //! compatibility wrappers; receivers accept both wire formats, while
 //! sending to a pre-v2 peer requires the explicit `send_msg_v1`.
+//!
+//! The serving layer also has a **control plane**: membership is
+//! elastic. Each client's runtime heartbeats on its shared connection
+//! ([`sfm::KIND_HEARTBEAT`], intercepted at the mux), a server-side
+//! sweeper drives the per-client liveness state machine in
+//! [`fleet::Registry`] (`Joining → Live → Suspect → Gone`, every
+//! transition bumping the fleet *epoch*), rounds sample from the live
+//! view, queued jobs are admitted against it, and a client that drops
+//! and rejoins is redeployed into its running jobs mid-flight. Job state
+//! is durable too: with `serve --state-dir`, a [`persist::JobStore`]
+//! checkpoints every completed round (global model + aggregator state)
+//! via atomic temp-file renames, so a killed server resumes each job
+//! from its last completed round — and the resumed rounds are
+//! byte-identical to an uninterrupted run given the same client set.
 
 pub mod config;
 pub mod coordinator;
 pub mod data;
 pub mod executor;
 pub mod filters;
+pub mod fleet;
 pub mod message;
 pub mod metrics;
 pub mod model;
+pub mod persist;
 pub mod repro;
 pub mod runtime;
 pub mod sfm;

@@ -389,6 +389,21 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         "override the schedule's concurrent-job cap",
     )
     .opt("out-dir", Some("results"), "metrics/results directory")
+    .opt(
+        "state-dir",
+        None,
+        "durable job state: checkpoint every round here and resume on restart",
+    )
+    .opt(
+        "heartbeat-interval",
+        None,
+        "seconds between client heartbeats (0 disables the control plane)",
+    )
+    .opt(
+        "suspect-timeout",
+        None,
+        "seconds without heartbeats before a client is marked Suspect",
+    )
     .parse(args)
     .map_err(|e| anyhow!(e))?;
     let spec = ScheduleSpec::from_file(std::path::Path::new(
@@ -438,18 +453,43 @@ fn run_schedule(mut spec: ScheduleSpec, p: &fedflare::util::cli::Parsed) -> Resu
         other => bail!("unknown driver {other}"),
     };
     let out_dir = p.get("out-dir").unwrap().to_string();
+    // control-plane knobs: schedule JSON, then CLI overrides
+    if p.get("heartbeat-interval").is_some() {
+        let t = p.get_f64("heartbeat-interval").map_err(|e| anyhow!(e))?;
+        if t < 0.0 {
+            bail!("--heartbeat-interval must be >= 0 seconds");
+        }
+        spec.fleet.heartbeat_interval_s = t;
+    }
+    if p.get("suspect-timeout").is_some() {
+        let t = p.get_f64("suspect-timeout").map_err(|e| anyhow!(e))?;
+        if t <= 0.0 {
+            bail!("--suspect-timeout must be > 0 seconds");
+        }
+        spec.fleet.suspect_after_s = t;
+        spec.fleet.gone_after_s = spec.fleet.gone_after_s.max(t);
+    }
+    // re-validate after CLI overrides (e.g. a huge --heartbeat-interval
+    // against the default suspect deadline would flap every client)
+    spec.fleet.validate()?;
+    // durable job state: checkpoints + queue manifest under --state-dir
+    let store = match p.get("state-dir") {
+        Some(dir) => Some(std::sync::Arc::new(fedflare::persist::JobStore::open(dir)?)),
+        None => None,
+    };
+    let kind_label = match kind {
+        sim::DriverKind::InProc => "inproc",
+        sim::DriverKind::Tcp => "tcp",
+    };
     // fleet-level link config comes from the first job (window/CRC);
     // each job keeps its own chunking on its multiplexed channel
     let stream = spec.entries[0].job.stream.clone();
-    let fleet = sim::Fleet::connect(&spec.clients, kind, &stream)?;
-    let sched = JobScheduler::new(fleet.clone(), spec.max_concurrent, &out_dir);
+    let fleet = sim::Fleet::connect_with(&spec.clients, kind, &stream, spec.fleet.clone())?;
+    let sched =
+        JobScheduler::with_store(fleet.clone(), spec.max_concurrent, &out_dir, store.clone());
     println!(
-        "serve: fleet of {} clients over {}, {} jobs, max {} concurrent",
+        "serve: fleet of {} clients over {kind_label}, {} jobs, max {} concurrent",
         spec.clients.len(),
-        match kind {
-            sim::DriverKind::InProc => "inproc",
-            sim::DriverKind::Tcp => "tcp",
-        },
         spec.entries.len(),
         spec.max_concurrent
     );
@@ -457,6 +497,19 @@ fn run_schedule(mut spec: ScheduleSpec, p: &fedflare::util::cli::Parsed) -> Resu
     let mut timers = Vec::new();
     for entry in spec.entries {
         let job = entry.job;
+        // recovery: a job the durable manifest already records as
+        // completed is not re-run; anything queued/running at the crash
+        // re-queues and resumes from its last round checkpoint
+        if let Some(store) = &store {
+            if store.status(&job.name).as_deref() == Some("completed") {
+                println!(
+                    "serve: job '{}' already completed in {} — skipping",
+                    job.name,
+                    store.dir().display()
+                );
+                continue;
+            }
+        }
         let rc = if job.artifact == "stream_test" {
             RuntimeClient::start(&job.artifacts_dir).ok()
         } else {

@@ -1,0 +1,339 @@
+//! Durable job state — the `--state-dir` half of the fleet control
+//! plane: a killed `fedflare serve` resumes mid-job instead of
+//! restarting from round 0.
+//!
+//! [`JobStore`] owns one state directory and persists two things:
+//!
+//! * **Per-round checkpoints** (`jobs/<job>.ckpt`): the completed round
+//!   index, the global model tensors, and the aggregator's serialized
+//!   cross-round state
+//!   ([`crate::coordinator::Aggregator::export_state`] — FedOpt's
+//!   server moments, for example). Written by
+//!   [`ScatterAndGather`](crate::coordinator::ScatterAndGather) after
+//!   every completed round; loaded before round 0 on the next run, which
+//!   turns a restart into a resume. Because round sampling is a pure
+//!   function of `(seed, round)` and aggregation is deterministic, the
+//!   remaining rounds of a resumed run are byte-identical to an
+//!   uninterrupted one given the same client set.
+//! * **The queue manifest** (`queue.json`): job name → lifecycle status,
+//!   updated by the [`JobScheduler`](crate::coordinator::JobScheduler)
+//!   at submit and at every terminal transition. On `serve --state-dir`
+//!   startup, completed jobs are skipped and everything else re-queues.
+//!
+//! Every write is **atomic**: serialize to `<path>.tmp`, then rename —
+//! a crash mid-write leaves the previous checkpoint intact, never a torn
+//! file. Unreadable/corrupt checkpoints are treated as absent (the job
+//! restarts from round 0) rather than wedging recovery.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::tensor::TensorDict;
+use crate::util::bytes::{Reader, Writer};
+use crate::util::json::Json;
+
+/// Checkpoint file magic ("FJCP" little-endian).
+const CKPT_MAGIC: u32 = 0x5043_4A46;
+/// Checkpoint format version.
+const CKPT_VERSION: u8 = 1;
+
+/// One job's durable round state, as loaded from disk.
+pub struct RoundCheckpoint {
+    /// Index of the last **completed** round (resume starts at
+    /// `round + 1`).
+    pub round: usize,
+    /// Global model after that round.
+    pub model: TensorDict,
+    /// Aggregator cross-round state (empty for stateless strategies).
+    pub agg_state: TensorDict,
+}
+
+/// Durable store for one `--state-dir` (see module docs). Cheap to share
+/// behind an `Arc`; the manifest read-modify-write cycle is serialized by
+/// an internal lock.
+pub struct JobStore {
+    dir: PathBuf,
+    manifest_lock: Mutex<()>,
+}
+
+impl JobStore {
+    /// Open (creating if needed) a state directory.
+    pub fn open(dir: impl AsRef<Path>) -> Result<JobStore> {
+        let dir = dir.as_ref().to_path_buf();
+        std::fs::create_dir_all(dir.join("jobs"))
+            .with_context(|| format!("create state dir {}", dir.display()))?;
+        Ok(JobStore {
+            dir,
+            manifest_lock: Mutex::new(()),
+        })
+    }
+
+    /// The directory this store persists into.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    fn ckpt_path(&self, job: &str) -> PathBuf {
+        self.dir.join("jobs").join(format!("{}.ckpt", sanitize(job)))
+    }
+
+    fn manifest_path(&self) -> PathBuf {
+        self.dir.join("queue.json")
+    }
+
+    /// Atomically persist the round checkpoint for `job`.
+    pub fn save_round(
+        &self,
+        job: &str,
+        round: usize,
+        model: &TensorDict,
+        agg_state: &TensorDict,
+    ) -> Result<()> {
+        let mut w = Writer::new();
+        w.u32(CKPT_MAGIC);
+        w.u8(CKPT_VERSION);
+        w.u64(round as u64);
+        w.str(job);
+        w.blob(&model.to_bytes());
+        w.blob(&agg_state.to_bytes());
+        atomic_write(&self.ckpt_path(job), w.as_slice())
+    }
+
+    /// Load the last persisted round checkpoint for `job`. `Ok(None)`
+    /// when no (readable) checkpoint exists — corrupt files are logged
+    /// and treated as absent so recovery never wedges on a torn write.
+    pub fn load_round(&self, job: &str) -> Result<Option<RoundCheckpoint>> {
+        let path = self.ckpt_path(job);
+        let bytes = match std::fs::read(&path) {
+            Ok(b) => b,
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => return Ok(None),
+            Err(e) => return Err(anyhow!("read {}: {e}", path.display())),
+        };
+        match decode_checkpoint(&bytes, job) {
+            Ok(ck) => Ok(Some(ck)),
+            Err(e) => {
+                log::warn!(
+                    "job '{job}': ignoring unreadable checkpoint {}: {e}",
+                    path.display()
+                );
+                Ok(None)
+            }
+        }
+    }
+
+    /// Drop `job`'s round checkpoint (a fresh submission under a reused
+    /// name must not resume a previous job's rounds).
+    pub fn clear_round(&self, job: &str) -> Result<()> {
+        match std::fs::remove_file(self.ckpt_path(job)) {
+            Ok(()) => Ok(()),
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
+            Err(e) => Err(anyhow!("clear checkpoint for '{job}': {e}")),
+        }
+    }
+
+    /// Record `job`'s lifecycle status ("queued" / "running" /
+    /// "completed" / "failed" / "aborted") in the queue manifest,
+    /// atomically.
+    pub fn set_status(&self, job: &str, status: &str) -> Result<()> {
+        let _guard = self.manifest_lock.lock().unwrap();
+        let mut map = self.read_manifest();
+        map.insert(job.to_string(), Json::str(status));
+        let mut obj = BTreeMap::new();
+        obj.insert("jobs".to_string(), Json::Obj(map));
+        atomic_write(&self.manifest_path(), Json::Obj(obj).to_string().as_bytes())
+    }
+
+    /// The recorded status of `job`, if any.
+    pub fn status(&self, job: &str) -> Option<String> {
+        let _guard = self.manifest_lock.lock().unwrap();
+        self.read_manifest()
+            .get(job)
+            .and_then(|j| j.as_str().map(|s| s.to_string()))
+    }
+
+    /// All recorded job statuses (name → status).
+    pub fn statuses(&self) -> BTreeMap<String, String> {
+        let _guard = self.manifest_lock.lock().unwrap();
+        self.read_manifest()
+            .into_iter()
+            .filter_map(|(k, v)| v.as_str().map(|s| (k, s.to_string())))
+            .collect()
+    }
+
+    fn read_manifest(&self) -> BTreeMap<String, Json> {
+        let text = match std::fs::read_to_string(self.manifest_path()) {
+            Ok(t) => t,
+            Err(_) => return BTreeMap::new(),
+        };
+        match Json::parse(&text) {
+            Ok(j) => j.get("jobs").as_obj().cloned().unwrap_or_default(),
+            Err(e) => {
+                log::warn!("ignoring unreadable queue manifest: {e}");
+                BTreeMap::new()
+            }
+        }
+    }
+}
+
+fn decode_checkpoint(bytes: &[u8], job: &str) -> Result<RoundCheckpoint> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u32().map_err(|e| anyhow!("{e}"))?;
+    if magic != CKPT_MAGIC {
+        bail!("bad checkpoint magic {magic:#x}");
+    }
+    let ver = r.u8().map_err(|e| anyhow!("{e}"))?;
+    if ver != CKPT_VERSION {
+        bail!("unsupported checkpoint version {ver}");
+    }
+    let round = r.u64().map_err(|e| anyhow!("{e}"))? as usize;
+    let name = r.str().map_err(|e| anyhow!("{e}"))?;
+    if name != job {
+        bail!("checkpoint belongs to job '{name}', not '{job}'");
+    }
+    let model_bytes = r.blob().map_err(|e| anyhow!("{e}"))?;
+    let model = TensorDict::from_bytes(model_bytes).map_err(|e| anyhow!("{e}"))?;
+    let agg_bytes = r.blob().map_err(|e| anyhow!("{e}"))?;
+    let agg_state = TensorDict::from_bytes(agg_bytes).map_err(|e| anyhow!("{e}"))?;
+    r.expect_end().map_err(|e| anyhow!("{e}"))?;
+    Ok(RoundCheckpoint {
+        round,
+        model,
+        agg_state,
+    })
+}
+
+/// Write `bytes` to `path` atomically: temp file in the same directory,
+/// then rename over the target.
+fn atomic_write(path: &Path, bytes: &[u8]) -> Result<()> {
+    let tmp = path.with_extension("tmp");
+    std::fs::write(&tmp, bytes).with_context(|| format!("write {}", tmp.display()))?;
+    std::fs::rename(&tmp, path)
+        .with_context(|| format!("rename {} -> {}", tmp.display(), path.display()))
+}
+
+/// Job names become file names: keep `[A-Za-z0-9._-]`, replace the
+/// rest. A name that needed replacing gets a hash of the raw name
+/// appended, so distinct job names can never share a checkpoint file
+/// ("job a" vs "job:a" would otherwise both map to `job_a`).
+fn sanitize(name: &str) -> String {
+    let cleaned: String = name
+        .chars()
+        .map(|c| {
+            if c.is_ascii_alphanumeric() || matches!(c, '.' | '_' | '-') {
+                c
+            } else {
+                '_'
+            }
+        })
+        .collect();
+    if cleaned == name {
+        cleaned
+    } else {
+        format!(
+            "{cleaned}-{:08x}",
+            crate::util::bytes::crc32(name.as_bytes())
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::tensor::Tensor;
+
+    fn tmp_store(tag: &str) -> JobStore {
+        let dir = std::env::temp_dir().join(format!("fedflare_persist_{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        JobStore::open(&dir).unwrap()
+    }
+
+    fn model(v: f32) -> TensorDict {
+        let mut d = TensorDict::new();
+        d.insert("w", Tensor::f32(vec![3], vec![v, v + 1.0, v + 2.0]));
+        d
+    }
+
+    #[test]
+    fn checkpoint_roundtrips_bit_exact() {
+        let store = tmp_store("roundtrip");
+        let m = model(0.125);
+        let mut agg = TensorDict::new();
+        agg.insert("opt/step", Tensor::i32(vec![1], vec![7]));
+        store.save_round("jobA", 3, &m, &agg).unwrap();
+        let ck = store.load_round("jobA").unwrap().expect("checkpoint");
+        assert_eq!(ck.round, 3);
+        assert_eq!(ck.model.to_bytes(), m.to_bytes(), "model bytes exact");
+        assert_eq!(ck.agg_state.get("opt/step").unwrap().as_i32().unwrap(), &[7]);
+        // a later round overwrites atomically
+        store.save_round("jobA", 4, &model(9.0), &TensorDict::new()).unwrap();
+        let ck = store.load_round("jobA").unwrap().unwrap();
+        assert_eq!(ck.round, 4);
+        assert!(ck.agg_state.is_empty());
+        // absent job
+        assert!(store.load_round("other").unwrap().is_none());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn corrupt_or_mismatched_checkpoints_read_as_absent() {
+        let store = tmp_store("corrupt");
+        store.save_round("j", 1, &model(1.0), &TensorDict::new()).unwrap();
+        // truncate the file mid-payload: torn-write stand-in
+        let path = store.dir().join("jobs").join("j.ckpt");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(store.load_round("j").unwrap().is_none());
+        // a checkpoint saved under one name never resumes another job
+        store.save_round("right", 2, &model(1.0), &TensorDict::new()).unwrap();
+        let right = store.dir().join("jobs").join("right.ckpt");
+        std::fs::copy(&right, store.dir().join("jobs").join("wrong.ckpt")).unwrap();
+        assert!(store.load_round("wrong").unwrap().is_none());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn clear_round_and_weird_names() {
+        let store = tmp_store("clear");
+        store
+            .save_round("job with/odd:name", 0, &model(0.0), &TensorDict::new())
+            .unwrap();
+        assert!(store.load_round("job with/odd:name").unwrap().is_some());
+        store.clear_round("job with/odd:name").unwrap();
+        assert!(store.load_round("job with/odd:name").unwrap().is_none());
+        store.clear_round("never existed").unwrap(); // idempotent
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn sanitized_names_never_collide() {
+        // "job a" and "job:a" both clean to "job_a"; the appended raw-
+        // name hash keeps their checkpoints apart
+        let store = tmp_store("collide");
+        store.save_round("job a", 1, &model(1.0), &TensorDict::new()).unwrap();
+        store.save_round("job:a", 2, &model(2.0), &TensorDict::new()).unwrap();
+        assert_eq!(store.load_round("job a").unwrap().unwrap().round, 1);
+        assert_eq!(store.load_round("job:a").unwrap().unwrap().round, 2);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn queue_manifest_tracks_statuses() {
+        let store = tmp_store("manifest");
+        assert!(store.status("a").is_none());
+        store.set_status("a", "queued").unwrap();
+        store.set_status("b", "running").unwrap();
+        store.set_status("a", "completed").unwrap();
+        assert_eq!(store.status("a").as_deref(), Some("completed"));
+        assert_eq!(store.status("b").as_deref(), Some("running"));
+        let all = store.statuses();
+        assert_eq!(all.len(), 2);
+        assert_eq!(all.get("a").map(String::as_str), Some("completed"));
+        // a fresh store over the same dir sees the persisted manifest
+        let reopened = JobStore::open(store.dir()).unwrap();
+        assert_eq!(reopened.status("b").as_deref(), Some("running"));
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+}

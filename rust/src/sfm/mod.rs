@@ -51,6 +51,16 @@ pub const VERSION_V3: u8 = 3;
 pub const FLAG_FIRST: u8 = 1 << 0;
 pub const FLAG_LAST: u8 = 1 << 1;
 
+/// Frame kind of the fleet-liveness heartbeat (control plane): a
+/// [`mux`]-level control frame sent periodically by each client's
+/// runtime on the shared connection. The receive pump intercepts it —
+/// recording the arrival instant for the server's deadline sweeps — and
+/// never routes it to a job queue, so heartbeats are invisible above the
+/// mux (like [`mux::KIND_MUX_FIN`]). Heartbeats also bypass the
+/// connection's token bucket: a liveness signal must not be starved by
+/// the very congestion it is meant to see through.
+pub const KIND_HEARTBEAT: u16 = u16::MAX - 1;
+
 /// One chunk of a streamed message.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {
@@ -993,6 +1003,84 @@ mod tests {
         assert_eq!(stream, 2);
         assert_eq!(payload, vec![2u8; 4000]);
         mem::track_free(payload.len());
+    }
+
+    #[test]
+    fn byte_cap_eviction_counts_into_the_evicted_counter() {
+        // the max_bytes path must move every evicted byte into
+        // mem::evicted_bytes (PR 4 only pinned the max_age path)
+        let mut re = Reassembler::with_policy(EvictionPolicy {
+            max_age: None,
+            max_bytes: 1500,
+        });
+        let before = mem::evicted_bytes();
+        let (pa, pb) = (vec![1u8; 4000], vec![2u8; 4000]);
+        let a = chunk_frames(0, 1, &pa, 500);
+        let b = chunk_frames(0, 2, &pb, 500);
+        re.push(a[0].clone()).unwrap();
+        re.push(a[1].clone()).unwrap();
+        re.push(a[2].clone()).unwrap(); // stream 1: 1500 bytes, at the cap
+        re.push(b[0].clone()).unwrap(); // 2000 > 1500: stream 1 evicted
+        assert_eq!(re.in_flight(), 1);
+        assert_eq!(re.buffered_bytes(), 500);
+        assert!(
+            mem::evicted_bytes() >= before + 1500,
+            "evicted counter moved {} < 1500",
+            mem::evicted_bytes() - before
+        );
+        // tracked reassembly bytes reflect only the survivor
+        assert_eq!(re.buffered_bytes(), 500);
+    }
+
+    #[test]
+    fn sweep_enforces_the_byte_cap_without_a_push() {
+        // sweep() must enforce max_bytes too (not only max_age): a policy
+        // tightened after frames were buffered reclaims the excess on the
+        // next explicit sweep, counting it as evicted
+        let mut re = Reassembler::new();
+        let payload = vec![3u8; 3000];
+        for f in chunk_frames(0, 7, &payload, 1000).into_iter().take(2) {
+            re.push(f).unwrap(); // 2000 buffered, no policy yet
+        }
+        assert_eq!(re.buffered_bytes(), 2000);
+        re.set_policy(EvictionPolicy {
+            max_age: None,
+            max_bytes: 1000,
+        });
+        let before = mem::evicted_bytes();
+        let evicted = re.sweep();
+        assert_eq!(evicted, 2000, "whole offending stream evicted");
+        assert_eq!(re.in_flight(), 0);
+        assert_eq!(re.buffered_bytes(), 0);
+        assert!(mem::evicted_bytes() >= before + 2000);
+    }
+
+    #[test]
+    fn combined_age_and_byte_policy_evicts_both_ways() {
+        let mut re = Reassembler::with_policy(EvictionPolicy {
+            max_age: Some(std::time::Duration::from_millis(30)),
+            max_bytes: 2500,
+        });
+        let before = mem::evicted_bytes();
+        // stream 1 goes stale
+        let stale = vec![1u8; 2000];
+        re.push(chunk_frames(0, 1, &stale, 1000)[0].clone()).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        // stream 2 grows past the cap in one burst of pushes
+        let big = vec![2u8; 4000];
+        let frames = chunk_frames(0, 2, &big, 1000);
+        re.push(frames[0].clone()).unwrap(); // age-evicts stream 1
+        assert_eq!(re.in_flight(), 1, "stale stream aged out");
+        re.push(frames[1].clone()).unwrap();
+        re.push(frames[2].clone()).unwrap();
+        // 3000 buffered > 2500, but the pusher's own stream is spared by
+        // push-time enforcement — an explicit sweep applies the cap to it
+        assert_eq!(re.buffered_bytes(), 3000);
+        let swept = re.sweep();
+        assert_eq!(swept, 3000);
+        assert_eq!(re.buffered_bytes(), 0);
+        // both the aged-out and the capped bytes are in the counter
+        assert!(mem::evicted_bytes() >= before + 1000 + 3000);
     }
 
     #[test]

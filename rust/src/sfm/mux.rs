@@ -42,10 +42,10 @@
 use std::collections::{HashMap, HashSet};
 use std::sync::mpsc::{Receiver, Sender};
 use std::sync::{Arc, Mutex};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use super::throttle::TokenBucket;
-use super::{Driver, Frame, SfmError, FLAG_FIRST, FLAG_LAST};
+use super::{Driver, Frame, SfmError, FLAG_FIRST, FLAG_LAST, KIND_HEARTBEAT};
 use crate::util::mem;
 
 /// Frame kind of the mux-level per-job FIN (half-close): a dropping
@@ -72,6 +72,27 @@ struct MuxInner {
 
 struct MuxState {
     table: Mutex<RouteTable>,
+    /// When the peer's last [`KIND_HEARTBEAT`] frame arrived (recorded by
+    /// the receive pump; read by the fleet's liveness sweeps).
+    heartbeat: Mutex<Option<Instant>>,
+}
+
+/// Stand-in transport installed by [`MuxConn::kill`]: every operation
+/// reports `Closed`, so the connection is observably dead to all senders
+/// while the real driver (and with it the peer's receive side) has been
+/// dropped.
+struct DeadDriver;
+
+impl Driver for DeadDriver {
+    fn send(&mut self, _frame: Frame) -> Result<(), SfmError> {
+        Err(SfmError::Closed)
+    }
+    fn recv(&mut self) -> Result<Frame, SfmError> {
+        Err(SfmError::Closed)
+    }
+    fn name(&self) -> String {
+        "dead".to_string()
+    }
 }
 
 #[derive(Default)]
@@ -108,6 +129,7 @@ impl MuxConn {
         };
         let state = Arc::new(MuxState {
             table: Mutex::new(RouteTable::default()),
+            heartbeat: Mutex::new(None),
         });
         let pump_state = state.clone();
         let pump_bucket = bucket.clone();
@@ -130,17 +152,25 @@ impl MuxConn {
     }
 
     /// The per-job [`Driver`] view over this connection. One live handle
-    /// per job id; a previously closed id is reopened.
+    /// per job id; a previously closed id is reopened. A handle taken on
+    /// a connection whose transport already died reads `Closed`
+    /// immediately (its queue is born severed) instead of parking on a
+    /// queue no pump will ever feed.
     pub fn handle(&self, job: u32) -> MuxHandle {
         let rx = {
             let mut t = self.inner.state.table.lock().unwrap();
-            t.closed.remove(&job);
-            match t.pending.remove(&job) {
-                Some(rx) => rx,
-                None => {
-                    let (tx, rx) = std::sync::mpsc::channel();
-                    t.queues.insert(job, tx);
-                    rx
+            if t.dead {
+                let (_tx, rx) = std::sync::mpsc::channel();
+                rx
+            } else {
+                t.closed.remove(&job);
+                match t.pending.remove(&job) {
+                    Some(rx) => rx,
+                    None => {
+                        let (tx, rx) = std::sync::mpsc::channel();
+                        t.queues.insert(job, tx);
+                        rx
+                    }
                 }
             }
         };
@@ -162,6 +192,52 @@ impl MuxConn {
     /// True once the underlying transport has closed.
     pub fn is_dead(&self) -> bool {
         self.inner.state.table.lock().unwrap().dead
+    }
+
+    /// When the peer's last heartbeat frame arrived (None = never) — the
+    /// observation the fleet's deadline sweeps run on.
+    pub fn last_heartbeat(&self) -> Option<Instant> {
+        *self.inner.state.heartbeat.lock().unwrap()
+    }
+
+    /// Send one [`KIND_HEARTBEAT`] control frame. Deliberately bypasses
+    /// the connection's token bucket: the liveness signal must stay
+    /// cheap and unstarvable even when the link is saturated (the frame
+    /// itself is empty).
+    pub fn send_heartbeat(&self) -> Result<(), SfmError> {
+        let frame = Frame {
+            flags: FLAG_FIRST | FLAG_LAST,
+            kind: KIND_HEARTBEAT,
+            job: 0,
+            stream: 0,
+            seq: 0,
+            total: 1,
+            payload: Vec::new(),
+        };
+        self.inner.send_half.lock().unwrap().send(frame)
+    }
+
+    /// Abruptly kill the connection (the churn harness's "the site's
+    /// process died"): the real transport is shut down and dropped — so
+    /// the peer observes a vanished endpoint, not a graceful bye — and
+    /// every local queue is severed so consumers read `Closed` now.
+    /// Idempotent.
+    pub fn kill(&self) {
+        {
+            let mut sh = self.inner.send_half.lock().unwrap();
+            sh.shutdown();
+            *sh = Box::new(DeadDriver);
+        }
+        let mut t = self.inner.state.table.lock().unwrap();
+        t.dead = true;
+        t.queues.clear();
+        let pending: Vec<Receiver<Frame>> = t.pending.drain().map(|(_, rx)| rx).collect();
+        drop(t);
+        for rx in pending {
+            while let Ok(f) = rx.try_recv() {
+                mem::track_evicted(f.payload.len());
+            }
+        }
     }
 
     fn send_tagged(&self, mut frame: Frame, job: u32) -> Result<(), SfmError> {
@@ -229,6 +305,13 @@ fn pump(
             Ok(f) => f,
             Err(_) => break,
         };
+        if frame.kind == KIND_HEARTBEAT {
+            // liveness control frame: record its arrival for the deadline
+            // sweeps and consume it — heartbeats never reach a job queue
+            // and never charge the token bucket (see send_heartbeat)
+            *state.heartbeat.lock().unwrap() = Some(Instant::now());
+            continue;
+        }
         if let Some(b) = &bucket {
             take_shared(b, frame.payload.len().max(1));
         }
@@ -243,6 +326,11 @@ fn pump(
         // route; the send is non-blocking (unbounded queue — see module
         // docs for why the pump must never stall on one job)
         let mut t = state.table.lock().unwrap();
+        if t.dead {
+            // the connection was killed locally: drain, never re-route
+            mem::track_evicted(frame.payload.len());
+            continue;
+        }
         if t.closed.contains(&job) {
             mem::track_evicted(frame.payload.len());
             continue;
@@ -507,6 +595,50 @@ mod tests {
             bytes += c1.recv().unwrap().payload.len();
         }
         hog.join().unwrap();
+    }
+
+    #[test]
+    fn heartbeats_are_intercepted_and_timestamped() {
+        let (server, client) = mux_pair(8, 0);
+        assert!(server.last_heartbeat().is_none());
+        client.send_heartbeat().unwrap();
+        // wait for the pump to record it
+        let t0 = Instant::now();
+        while server.last_heartbeat().is_none() && t0.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let first = server.last_heartbeat().expect("heartbeat recorded");
+        // heartbeats never surface on a job queue: data on job 1 still
+        // flows and is the only thing the handle sees
+        let mut s1 = client.handle(1);
+        let mut c1 = server.handle(1);
+        s1.send(chunk_frames(0, 1, b"data", 64).remove(0)).unwrap();
+        assert_eq!(c1.recv().unwrap().payload, b"data");
+        // a later heartbeat advances the timestamp
+        std::thread::sleep(Duration::from_millis(10));
+        client.send_heartbeat().unwrap();
+        let t1 = Instant::now();
+        while server.last_heartbeat() == Some(first) && t1.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(server.last_heartbeat().unwrap() > first);
+    }
+
+    #[test]
+    fn kill_severs_both_sides_abruptly() {
+        let (server, client) = mux_pair(8, 0);
+        let mut c1 = client.handle(1);
+        let mut s1 = server.handle(1);
+        server.kill();
+        // local consumers observe Closed immediately
+        assert!(matches!(s1.recv(), Err(SfmError::Closed)));
+        assert!(server.is_dead());
+        // local sends fail — the transport handle was dropped
+        assert!(s1.send(chunk_frames(0, 1, b"x", 8).remove(0)).is_err());
+        // the peer's pump loses its transport and reads Closed too
+        let t0 = Instant::now();
+        assert!(matches!(c1.recv(), Err(SfmError::Closed)));
+        assert!(t0.elapsed() < Duration::from_secs(2));
     }
 
     #[test]

@@ -30,12 +30,18 @@
 //! `fedflare client`) shares the same per-job code paths over dedicated
 //! (unmuxed) connections.
 
-use std::sync::{Arc, Mutex};
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Mutex, RwLock, Weak};
+use std::time::Duration;
 
-use anyhow::{anyhow, Context, Result};
+use anyhow::{anyhow, bail, Context, Result};
 
-use crate::config::{ClientSpec, JobConfig, StreamConfig};
-use crate::executor::{JobDirectory, MultiJobRuntime};
+use crate::config::{ClientSpec, FleetConfig, JobConfig, StreamConfig};
+use crate::coordinator::OwnedExecutorFactory;
+use crate::executor::{JobDirectory, JobStart, MultiJobRuntime};
+use crate::fleet::{ClientState, Registry};
 use crate::message::FlMessage;
 use crate::sfm::mux::{JobTagged, MuxConn};
 use crate::sfm::{inproc, tcp, Driver, EvictionPolicy};
@@ -69,6 +75,9 @@ pub struct RunReport {
 /// channel (job 0) the scheduler announces jobs on.
 struct FleetConn {
     name: String,
+    /// Launch spec, kept so a kill/revive cycle rebuilds the same link
+    /// (bandwidth, partition).
+    spec: ClientSpec,
     mux: MuxConn,
     control: Mutex<Messenger>,
 }
@@ -76,76 +85,189 @@ struct FleetConn {
 /// A fleet client-runtime thread, by client name.
 type FleetClientThread = (String, std::thread::JoinHandle<Result<()>>);
 
+/// Everything the fleet needs to re-deploy a running job onto a client
+/// that dropped and rejoined: the job's config plus a shareable executor
+/// factory (registered by the scheduler at job start).
+pub struct RejoinSpec {
+    pub job: JobConfig,
+    pub factory: Arc<Mutex<OwnedExecutorFactory>>,
+}
+
+/// Per-job control-plane plumbing while a job runs: its rejoin spec,
+/// the channel-swap senders of its server-side client handles, and how
+/// many client task loops were opened for it (initial + rejoins).
+#[derive(Default)]
+struct JobPlumbing {
+    rejoin: HashMap<u32, RejoinSpec>,
+    swaps: HashMap<(u32, String), Sender<Messenger>>,
+    opens: HashMap<u32, usize>,
+}
+
+/// One unit of rejoin re-deployment work, snapshotted out of the
+/// plumbing lock: (job id, job config, executor factory, swap sender).
+type RejoinWork = (
+    u32,
+    JobConfig,
+    Arc<Mutex<OwnedExecutorFactory>>,
+    Option<Sender<Messenger>>,
+);
+
 /// A connected, persistent client fleet (see module docs): the shared
-/// transports jobs multiplex over, the in-process [`JobDirectory`], and
-/// the client-runtime threads standing in for client processes.
+/// transports jobs multiplex over, the in-process [`JobDirectory`], the
+/// client-runtime threads standing in for client processes — and, since
+/// the control-plane refactor, **elastic membership**: clients may be
+/// killed, revived, or added while jobs run
+/// ([`Fleet::kill_client`] / [`Fleet::revive_client`] /
+/// [`Fleet::add_client`] — the churn harness), liveness is observed via
+/// heartbeats swept by a fleet-owned sweeper thread into the shared
+/// [`Registry`], and a rejoining client is re-deployed into its running
+/// jobs through the registered [`RejoinSpec`]s.
 pub struct Fleet {
-    conns: Vec<FleetConn>,
+    conns: RwLock<Vec<Arc<FleetConn>>>,
     kind: DriverKind,
     window: usize,
     verify: bool,
+    burst: u64,
+    cfg: FleetConfig,
     directory: Arc<JobDirectory>,
+    registry: Arc<Registry>,
     client_threads: Mutex<Vec<FleetClientThread>>,
+    /// TCP fleets keep their listener so clients can (re)join later.
+    listener: Option<Mutex<std::net::TcpListener>>,
+    sweep_stop: Arc<AtomicBool>,
+    sweeper: Mutex<Option<std::thread::JoinHandle<()>>>,
+    plumbing: Mutex<JobPlumbing>,
+    /// Serializes kill/revive/add: registry index allocation and the
+    /// conns-slot update must agree, and they happen under different
+    /// locks — concurrent churn calls would misalign them.
+    churn: Mutex<()>,
+    /// Invoked (from the sweeper / churn entry points) whenever the
+    /// membership epoch changes — the scheduler hooks its admission
+    /// re-check here.
+    on_membership: Mutex<Option<Box<dyn Fn() + Send>>>,
+}
+
+/// Build one muxed inproc connection for `spec`: (server mux, client mux).
+fn connect_inproc_pair(spec: &ClientSpec, window: usize, burst: u64) -> (MuxConn, MuxConn) {
+    let (s, c) = inproc::pair(window, &spec.name);
+    let (sr, cr) = (s.recv_half(), c.recv_half());
+    let server_mux = MuxConn::spawn(Box::new(s), Box::new(sr), spec.bandwidth_bps, burst);
+    let client_mux = MuxConn::spawn(Box::new(c), Box::new(cr), spec.bandwidth_bps, burst);
+    (server_mux, client_mux)
+}
+
+/// Build one muxed TCP-loopback connection for `spec` through the
+/// fleet's listener: (server mux, client mux).
+fn connect_tcp_pair(
+    listener: &std::net::TcpListener,
+    spec: &ClientSpec,
+    verify: bool,
+    burst: u64,
+) -> Result<(MuxConn, MuxConn)> {
+    let addr = listener.local_addr().context("local addr")?;
+    let cd = tcp::TcpDriver::connect(addr, verify)?;
+    let cdr = cd.try_clone()?;
+    let client_mux = MuxConn::spawn(Box::new(cd), Box::new(cdr), spec.bandwidth_bps, burst);
+    let (conn, _) = listener.accept().context("accept")?;
+    let sd = tcp::TcpDriver::from_stream(conn, verify)?;
+    let sdr = sd.try_clone()?;
+    let server_mux = MuxConn::spawn(Box::new(sd), Box::new(sdr), spec.bandwidth_bps, burst);
+    Ok((server_mux, client_mux))
 }
 
 impl Fleet {
     /// Connect one multiplexed connection + client runtime per spec.
     /// `stream` configures the fleet-level links (window, CRC); each job
-    /// keeps its own chunking on top.
+    /// keeps its own chunking on top. Control-plane knobs take their
+    /// defaults (heartbeats on, generous deadlines) — see
+    /// [`Fleet::connect_with`].
     pub fn connect(
         specs: &[ClientSpec],
         kind: DriverKind,
         stream: &StreamConfig,
     ) -> Result<Arc<Fleet>> {
+        Self::connect_with(specs, kind, stream, FleetConfig::default())
+    }
+
+    /// [`Fleet::connect`] with explicit control-plane knobs (heartbeat
+    /// cadence, suspect/gone deadlines). A zero heartbeat interval
+    /// disables heartbeats and the sweeper: membership is static.
+    pub fn connect_with(
+        specs: &[ClientSpec],
+        kind: DriverKind,
+        stream: &StreamConfig,
+        cfg: FleetConfig,
+    ) -> Result<Arc<Fleet>> {
         let directory = JobDirectory::new();
+        let registry = Arc::new(Registry::new());
         let window = stream.window;
         let verify = stream.verify_crc;
         let burst = crate::DEFAULT_CHUNK_BYTES as u64;
+        let hb = Duration::from_secs_f64(cfg.heartbeat_interval_s.max(0.0));
         let mut conns = Vec::with_capacity(specs.len());
         let mut threads = Vec::with_capacity(specs.len());
+        let mut listener = None;
         match kind {
             DriverKind::InProc => {
                 for (i, spec) in specs.iter().enumerate() {
-                    let (s, c) = inproc::pair(window, &spec.name);
-                    let (sr, cr) = (s.recv_half(), c.recv_half());
-                    let server_mux =
-                        MuxConn::spawn(Box::new(s), Box::new(sr), spec.bandwidth_bps, burst);
-                    let client_mux =
-                        MuxConn::spawn(Box::new(c), Box::new(cr), spec.bandwidth_bps, burst);
-                    threads.push(spawn_fleet_client(spec, i, client_mux, directory.clone())?);
-                    conns.push(FleetConn::new(spec, server_mux));
+                    let idx = registry.join(&spec.name);
+                    debug_assert_eq!(idx, i);
+                    let (server_mux, client_mux) = connect_inproc_pair(spec, window, burst);
+                    threads.push(spawn_fleet_client(
+                        spec,
+                        i,
+                        client_mux,
+                        directory.clone(),
+                        hb,
+                    )?);
+                    conns.push(Arc::new(FleetConn::new(spec, server_mux)));
+                    registry.connected(i);
                 }
             }
             DriverKind::Tcp => {
-                let listener = tcp::bind("127.0.0.1:0")?;
-                let addr = listener.local_addr().context("local addr")?;
+                let l = tcp::bind("127.0.0.1:0")?;
                 for (i, spec) in specs.iter().enumerate() {
-                    let cd = tcp::TcpDriver::connect(addr, verify)?;
-                    let cdr = cd.try_clone()?;
-                    let client_mux =
-                        MuxConn::spawn(Box::new(cd), Box::new(cdr), spec.bandwidth_bps, burst);
-                    threads.push(spawn_fleet_client(spec, i, client_mux, directory.clone())?);
-                    let (conn, _) = listener.accept().context("accept")?;
-                    let sd = tcp::TcpDriver::from_stream(conn, verify)?;
-                    let sdr = sd.try_clone()?;
-                    let server_mux =
-                        MuxConn::spawn(Box::new(sd), Box::new(sdr), spec.bandwidth_bps, burst);
-                    conns.push(FleetConn::new(spec, server_mux));
+                    let idx = registry.join(&spec.name);
+                    debug_assert_eq!(idx, i);
+                    let (server_mux, client_mux) = connect_tcp_pair(&l, spec, verify, burst)?;
+                    threads.push(spawn_fleet_client(
+                        spec,
+                        i,
+                        client_mux,
+                        directory.clone(),
+                        hb,
+                    )?);
+                    conns.push(Arc::new(FleetConn::new(spec, server_mux)));
+                    registry.connected(i);
                 }
+                listener = Some(Mutex::new(l));
             }
         }
-        Ok(Arc::new(Fleet {
-            conns,
+        let fleet = Arc::new(Fleet {
+            conns: RwLock::new(conns),
             kind,
             window,
             verify,
+            burst,
+            cfg,
             directory,
+            registry,
             client_threads: Mutex::new(threads),
-        }))
+            listener,
+            sweep_stop: Arc::new(AtomicBool::new(false)),
+            sweeper: Mutex::new(None),
+            plumbing: Mutex::new(JobPlumbing::default()),
+            churn: Mutex::new(()),
+            on_membership: Mutex::new(None),
+        });
+        if hb > Duration::ZERO {
+            spawn_sweeper(&fleet);
+        }
+        Ok(fleet)
     }
 
     pub fn n_clients(&self) -> usize {
-        self.conns.len()
+        self.conns.read().unwrap().len()
     }
 
     pub fn kind(&self) -> DriverKind {
@@ -157,19 +279,38 @@ impl Fleet {
         &self.directory
     }
 
+    /// The fleet's membership/liveness registry (see
+    /// [`crate::fleet::Registry`]).
+    pub fn registry(&self) -> &Arc<Registry> {
+        &self.registry
+    }
+
+    /// Liveness state of a named client.
+    pub fn client_state(&self, name: &str) -> Option<ClientState> {
+        self.registry.state_of(name)
+    }
+
     /// Fleet connection index of a client, by name.
     pub fn index_of(&self, name: &str) -> Option<usize> {
-        self.conns.iter().position(|c| c.name == name)
+        self.conns.read().unwrap().iter().position(|c| c.name == name)
+    }
+
+    /// The connection at `idx` (Arc clone, so callers never hold the
+    /// slot lock across blocking sends).
+    fn conn(&self, idx: usize) -> Result<Arc<FleetConn>> {
+        self.conns
+            .read()
+            .unwrap()
+            .get(idx)
+            .cloned()
+            .ok_or_else(|| anyhow!("no fleet connection at index {idx}"))
     }
 
     /// A server-side messenger over client `idx`'s connection, scoped to
     /// `job` (chunking and stale-stream eviction from `stream`).
     pub fn job_messenger(&self, idx: usize, job: u32, stream: &StreamConfig) -> Messenger {
-        let mut m = Messenger::new(
-            Box::new(self.conns[idx].mux.handle(job)),
-            stream.chunk_bytes,
-            0,
-        );
+        let conn = self.conn(idx).expect("job_messenger: bad index");
+        let mut m = Messenger::new(Box::new(conn.mux.handle(job)), stream.chunk_bytes, 0);
         if let Some(policy) = EvictionPolicy::stale_after_s(stream.stale_stream_age_s) {
             m.set_reassembly_policy(policy);
         }
@@ -178,17 +319,21 @@ impl Fleet {
 
     /// Announce `job` on client `idx`'s control channel; the client's
     /// runtime claims its start spec from the directory and spawns the
-    /// job's task loop.
+    /// job's task loop. Counted per job so teardown knows how many task
+    /// loops (initial + rejoins) will report.
     pub fn open_job(&self, idx: usize, job: u32, name: &str) -> Result<()> {
+        let conn = self.conn(idx)?;
         let msg = FlMessage::task("job_open", 0, TensorDict::new())
             .with_meta("job", Json::num(job as f64))
             .with_meta("job_name", Json::str(name));
-        self.conns[idx]
-            .control
+        conn.control
             .lock()
             .unwrap()
             .send_msg(&msg)
-            .map_err(|e| anyhow!("open job {job} on {}: {e}", self.conns[idx].name))
+            .map_err(|e| anyhow!("open job {job} on {}: {e}", conn.name))?;
+        let mut p = self.plumbing.lock().unwrap();
+        *p.opens.entry(job).or_insert(0) += 1;
+        Ok(())
     }
 
     /// Abort `job` fleet-wide: revoke unclaimed deployments, tell every
@@ -197,11 +342,233 @@ impl Fleet {
     /// ([`crate::util::mem::evicted_bytes`]) instead of stranding buffers.
     pub fn abort_job(&self, job: u32) {
         self.directory.revoke(job);
-        for conn in &self.conns {
+        let conns: Vec<Arc<FleetConn>> = self.conns.read().unwrap().clone();
+        for conn in &conns {
             let msg = FlMessage::task("job_abort", 0, TensorDict::new())
                 .with_meta("job", Json::num(job as f64));
             let _ = conn.control.lock().unwrap().send_msg(&msg);
             conn.mux.close_job(job);
+        }
+    }
+
+    // ------------------------------------------------ control plane
+
+    /// Register a running job's control-plane plumbing. Must run before
+    /// the job's first [`Fleet::open_job`]; `rejoin` enables mid-job
+    /// re-deployment onto rejoining clients (flat jobs only — tree jobs
+    /// keep static membership for now).
+    pub fn register_job(&self, job: u32, rejoin: Option<RejoinSpec>) {
+        let mut p = self.plumbing.lock().unwrap();
+        p.opens.insert(job, 0);
+        if let Some(spec) = rejoin {
+            p.rejoin.insert(job, spec);
+        }
+    }
+
+    /// Register the channel-swap sender of `job`'s server-side handle
+    /// for `client`: a rejoin delivers the fresh per-job messenger here.
+    pub fn register_swap(&self, job: u32, client: &str, swap: Sender<Messenger>) {
+        self.plumbing
+            .lock()
+            .unwrap()
+            .swaps
+            .insert((job, client.to_string()), swap);
+    }
+
+    /// Tear down a job's control-plane plumbing (stops future rejoins
+    /// from touching it) and return how many task loops were opened for
+    /// it — the number of client reports teardown should wait for.
+    pub fn clear_job(&self, job: u32) -> usize {
+        let mut p = self.plumbing.lock().unwrap();
+        p.rejoin.remove(&job);
+        p.swaps.retain(|(j, _), _| *j != job);
+        p.opens.remove(&job).unwrap_or(0)
+    }
+
+    /// Register the membership-change callback (at most one; the
+    /// scheduler's admission kick). Invoked from sweeper/churn threads.
+    pub fn set_membership_listener(&self, cb: Box<dyn Fn() + Send>) {
+        *self.on_membership.lock().unwrap() = Some(cb);
+    }
+
+    fn notify_membership(&self) {
+        if let Some(cb) = self.on_membership.lock().unwrap().as_ref() {
+            cb();
+        }
+    }
+
+    /// Churn harness: abruptly kill a client's connection — transport
+    /// severed (no graceful bye), its runtime and task loops unwind and
+    /// are reaped, the registry demotes it (`Suspect` now, `Gone` once
+    /// the deadline passes). In-flight gathers see the failure through
+    /// the existing straggler/quorum path.
+    pub fn kill_client(&self, name: &str) -> Result<()> {
+        let _churn = self.churn.lock().unwrap();
+        let (idx, conn) = {
+            let conns = self.conns.read().unwrap();
+            let idx = conns
+                .iter()
+                .position(|c| c.name == name)
+                .ok_or_else(|| anyhow!("kill_client: unknown client '{name}'"))?;
+            (idx, conns[idx].clone())
+        };
+        conn.mux.kill();
+        self.registry.suspect(idx);
+        // reap the dead runtime thread so a later revive can respawn it
+        let thread = {
+            let mut threads = self.client_threads.lock().unwrap();
+            threads
+                .iter()
+                .position(|(n, _)| n == name)
+                .map(|p| threads.remove(p))
+        };
+        if let Some((_, t)) = thread {
+            let _ = t.join();
+        }
+        self.notify_membership();
+        Ok(())
+    }
+
+    /// Churn harness: reconnect a previously killed client under its
+    /// original spec — fresh transport, fresh runtime, same slot. The
+    /// client turns `Joining` → `Live`, the epoch bumps, and every
+    /// running job that lists it is re-deployed onto the new connection
+    /// (rejoin handshake); it becomes sampleable from the next round.
+    pub fn revive_client(&self, name: &str) -> Result<()> {
+        let _churn = self.churn.lock().unwrap();
+        let spec = {
+            let conns = self.conns.read().unwrap();
+            let idx = conns
+                .iter()
+                .position(|c| c.name == name)
+                .ok_or_else(|| anyhow!("revive_client: unknown client '{name}'"))?;
+            conns[idx].spec.clone()
+        };
+        let idx = self.registry.join(&spec.name);
+        let (server_mux, client_mux) = self.connect_one(&spec)?;
+        let hb = Duration::from_secs_f64(self.cfg.heartbeat_interval_s.max(0.0));
+        let thread = spawn_fleet_client(&spec, idx, client_mux, self.directory.clone(), hb)?;
+        self.client_threads.lock().unwrap().push(thread);
+        {
+            let mut conns = self.conns.write().unwrap();
+            conns[idx] = Arc::new(FleetConn::new(&spec, server_mux));
+        }
+        self.registry.connected(idx);
+        self.handle_rejoin(idx, name);
+        self.notify_membership();
+        Ok(())
+    }
+
+    /// Elastic join: connect a brand-new client while the fleet serves.
+    /// It becomes eligible for job admission and for rounds of jobs
+    /// submitted after it joined.
+    pub fn add_client(&self, spec: &ClientSpec) -> Result<usize> {
+        let _churn = self.churn.lock().unwrap();
+        if self.index_of(&spec.name).is_some() {
+            bail!(
+                "add_client: '{}' already in the fleet (revive it instead)",
+                spec.name
+            );
+        }
+        let idx = self.registry.join(&spec.name);
+        let (server_mux, client_mux) = self.connect_one(spec)?;
+        let hb = Duration::from_secs_f64(self.cfg.heartbeat_interval_s.max(0.0));
+        let thread = spawn_fleet_client(spec, idx, client_mux, self.directory.clone(), hb)?;
+        self.client_threads.lock().unwrap().push(thread);
+        {
+            let mut conns = self.conns.write().unwrap();
+            debug_assert_eq!(conns.len(), idx);
+            conns.push(Arc::new(FleetConn::new(spec, server_mux)));
+        }
+        self.registry.connected(idx);
+        self.notify_membership();
+        Ok(idx)
+    }
+
+    /// Build one fresh connection of the fleet's driver kind.
+    fn connect_one(&self, spec: &ClientSpec) -> Result<(MuxConn, MuxConn)> {
+        match self.kind {
+            DriverKind::InProc => Ok(connect_inproc_pair(spec, self.window, self.burst)),
+            DriverKind::Tcp => {
+                let listener = self
+                    .listener
+                    .as_ref()
+                    .ok_or_else(|| anyhow!("tcp fleet without a listener"))?;
+                let l = listener.lock().unwrap();
+                connect_tcp_pair(&l, spec, self.verify, self.burst)
+            }
+        }
+    }
+
+    /// The rejoin handshake: for every running job that lists the
+    /// rejoined client, build a fresh executor through the job's
+    /// registered factory, offer the deployment, open the job on the new
+    /// connection, and hand the job's server-side handle a replacement
+    /// channel. Failures are logged, never fatal — the job simply keeps
+    /// running without the client.
+    fn handle_rejoin(&self, idx: usize, name: &str) {
+        let specs: Vec<RejoinWork> = {
+            let p = self.plumbing.lock().unwrap();
+            p.rejoin
+                .iter()
+                .filter(|(_, s)| s.job.clients.iter().any(|c| c.name == name))
+                .map(|(id, s)| {
+                    (
+                        *id,
+                        s.job.clone(),
+                        s.factory.clone(),
+                        p.swaps.get(&(*id, name.to_string())).cloned(),
+                    )
+                })
+                .collect()
+        };
+        for (job_id, job, factory, swap) in specs {
+            // no swap sender yet means the job is still in its deploy/
+            // handshake phase (run_flat registers swaps after the
+            // initial registrations): re-deploying now would open a
+            // task loop no server handle ever reads — a phantom loop
+            // that stalls teardown. Skip; the deploy in flight is
+            // already targeting the fleet's current connections.
+            let Some(swap) = swap else {
+                log::debug!("rejoin {name} into job {job_id}: not yet deployable, skipped");
+                continue;
+            };
+            let i = job
+                .clients
+                .iter()
+                .position(|c| c.name == name)
+                .expect("filtered on membership");
+            let built = {
+                let mut f = factory.lock().unwrap();
+                (*f)(i, &job.clients[i])
+            };
+            let executor = match built {
+                Ok(e) => e,
+                Err(e) => {
+                    log::warn!("rejoin {name} into job {job_id}: executor build failed: {e}");
+                    continue;
+                }
+            };
+            let filters = crate::filters::build_chain(&job.filters, i, job.clients.len());
+            self.directory.offer(
+                job_id,
+                idx,
+                JobStart {
+                    job_name: job.name.clone(),
+                    chunk_bytes: job.stream.chunk_bytes,
+                    stale_stream_age_s: job.stream.stale_stream_age_s,
+                    executor,
+                    filters,
+                },
+            );
+            if let Err(e) = self.open_job(idx, job_id, &job.name) {
+                log::warn!("rejoin {name} into job {job_id}: {e}");
+                continue;
+            }
+            let m = self.job_messenger(idx, job_id, &job.stream);
+            if swap.send(m).is_err() {
+                log::debug!("rejoin {name} into job {job_id}: handle already gone");
+            }
         }
     }
 
@@ -239,10 +606,16 @@ impl Fleet {
         ))
     }
 
-    /// End the fleet: bye every control channel, then join the client
-    /// runtimes (each joins its job loops first). Idempotent.
+    /// End the fleet: stop the sweeper, bye every control channel, then
+    /// join the client runtimes (each joins its job loops first).
+    /// Idempotent.
     pub fn shutdown(&self) {
-        for conn in &self.conns {
+        self.sweep_stop.store(true, Ordering::Relaxed);
+        if let Some(h) = self.sweeper.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let conns: Vec<Arc<FleetConn>> = self.conns.read().unwrap().clone();
+        for conn in &conns {
             let _ = conn.control.lock().unwrap().send_msg(&FlMessage::bye());
         }
         let mut threads = self.client_threads.lock().unwrap();
@@ -256,11 +629,58 @@ impl Fleet {
     }
 }
 
+/// The fleet's liveness sweeper: reads each connection's last heartbeat
+/// off the mux into the registry, demotes against the configured
+/// deadlines, and fires the membership callback on epoch changes. Holds
+/// only a `Weak` fleet reference — it dies with the fleet (or at
+/// [`Fleet::shutdown`], which joins it).
+fn spawn_sweeper(fleet: &Arc<Fleet>) {
+    let weak: Weak<Fleet> = Arc::downgrade(fleet);
+    let stop = fleet.sweep_stop.clone();
+    let suspect = Duration::from_secs_f64(fleet.cfg.suspect_after_s);
+    let gone = Duration::from_secs_f64(fleet.cfg.gone_after_s);
+    let pause = Duration::from_secs_f64(
+        (fleet.cfg.heartbeat_interval_s.min(fleet.cfg.suspect_after_s) / 2.0).max(0.02),
+    );
+    let handle = std::thread::Builder::new()
+        .name("fleet-sweeper".to_string())
+        .stack_size(128 << 10)
+        .spawn(move || {
+            let mut last_epoch = u64::MAX;
+            while !stop.load(Ordering::Relaxed) {
+                let Some(fleet) = weak.upgrade() else { break };
+                {
+                    let conns = fleet.conns.read().unwrap();
+                    for (idx, conn) in conns.iter().enumerate() {
+                        // a dead transport's stale heartbeat is not
+                        // liveness evidence — never let it resurrect a
+                        // just-killed client
+                        if conn.mux.is_dead() {
+                            fleet.registry.suspect(idx);
+                        } else if let Some(at) = conn.mux.last_heartbeat() {
+                            fleet.registry.heard(idx, at);
+                        }
+                    }
+                }
+                let epoch = fleet.registry.sweep(suspect, gone);
+                if epoch != last_epoch {
+                    last_epoch = epoch;
+                    fleet.notify_membership();
+                }
+                drop(fleet);
+                std::thread::sleep(pause);
+            }
+        })
+        .expect("spawn fleet sweeper");
+    *fleet.sweeper.lock().unwrap() = Some(handle);
+}
+
 impl FleetConn {
     fn new(spec: &ClientSpec, mux: MuxConn) -> FleetConn {
         let control = Messenger::new(Box::new(mux.handle(0)), 4096, 0);
         FleetConn {
             name: spec.name.clone(),
+            spec: spec.clone(),
             mux,
             control: Mutex::new(control),
         }
@@ -272,12 +692,13 @@ fn spawn_fleet_client(
     index: usize,
     mux: MuxConn,
     directory: Arc<JobDirectory>,
+    heartbeat: Duration,
 ) -> Result<FleetClientThread> {
     let name = spec.name.clone();
     let tname = name.clone();
     let handle = std::thread::Builder::new()
         .name(format!("fleet-{name}"))
-        .spawn(move || MultiJobRuntime::new(&tname, index, mux, directory).run())
+        .spawn(move || MultiJobRuntime::new(&tname, index, mux, directory, heartbeat).run())
         .context("spawn fleet client")?;
     Ok((name, handle))
 }
