@@ -4,16 +4,22 @@
 #                    rust/artifacts/ (needs Python with jax installed;
 #                    artifact-dependent Rust tests skip when absent)
 #   make test        tier-1 verification: release build + full test suite
-#   make bench       run every Rust benchmark target; bench_topology and
-#                    bench_jobs also write machine-readable
-#                    BENCH_topology.json / BENCH_jobs.json (peak bytes +
-#                    wall-clock per topology / per concurrent-job count)
-#                    at the repo root. FEDFLARE_BENCH_QUICK=1 shrinks
-#                    bench_jobs/bench_topology to the CI quick mode
-#                    (same JSON shape, fraction of the cost)
-#   make lint        rustfmt + clippy, as CI runs them
+#   make bench       run every Rust benchmark target; bench_topology,
+#                    bench_jobs and bench_fleet also write
+#                    machine-readable BENCH_topology.json /
+#                    BENCH_jobs.json / BENCH_fleet.json (peak bytes +
+#                    wall-clock per topology / per concurrent-job count;
+#                    resident threads + churn latency per fleet size).
+#                    FEDFLARE_BENCH_QUICK=1 shrinks them to the CI quick
+#                    mode (same JSON shape, fraction of the cost)
+#   make perfgate    diff fresh quick-mode BENCH_jobs/BENCH_topology
+#                    JSON against bench/baseline/ — fails on >25%
+#                    wall-clock regression (provisional baselines warn)
+#   make threadlint  fail if anything under rust/src/sfm/ or
+#                    rust/src/fleet/ spawns a thread outside the reactor
+#   make lint        rustfmt + clippy + threadlint, as CI runs them
 
-.PHONY: artifacts test bench lint
+.PHONY: artifacts test bench perfgate threadlint lint
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
@@ -26,9 +32,20 @@ bench:
 	cargo bench --bench bench_aggregation
 	cargo bench --bench bench_topology
 	cargo bench --bench bench_jobs
+	cargo bench --bench bench_fleet
 	cargo bench --bench bench_experiments
 	cargo bench --bench bench_runtime
 
-lint:
+# cargo runs bench binaries with the package root (rust/) as cwd, so
+# the fresh JSON lands there
+perfgate:
+	FEDFLARE_BENCH_QUICK=1 cargo bench --bench bench_jobs --bench bench_topology
+	python3 scripts/bench_gate.py bench/baseline/BENCH_jobs.json rust/BENCH_jobs.json
+	python3 scripts/bench_gate.py bench/baseline/BENCH_topology.json rust/BENCH_topology.json
+
+threadlint:
+	sh scripts/check_no_thread_spawn.sh
+
+lint: threadlint
 	cargo fmt --check
 	cargo clippy --all-targets -- -D warnings

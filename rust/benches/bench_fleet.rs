@@ -1,0 +1,221 @@
+//! Fleet control-plane scaling benchmark: how the one-reactor core
+//! holds up as connections pile on. Two axes, emitted as a table and as
+//! machine-readable `BENCH_fleet.json`:
+//!
+//! * **idle scaling** — N muxed, heartbeating, otherwise-idle
+//!   connections vs resident OS threads and RSS. The point of the
+//!   reactor refactor: thread count stays O(cores + active jobs), not
+//!   O(clients), so the rows should show a flat thread column while the
+//!   connection column grows 100x.
+//! * **churn** — kill a batch of clients mid-fleet and immediately
+//!   reconnect them, measuring how long the registry takes to notice
+//!   (kill -> Suspect, via the dead-transport observation on the sweep
+//!   path) and to re-admit (reconnect -> Live with fresh heartbeat
+//!   evidence).
+//!
+//! Run with `cargo bench --bench bench_fleet`. Set
+//! `FEDFLARE_BENCH_QUICK=1` for the CI quick mode: fewer idle points,
+//! same 10,000-connection top end and churn batches, same JSON shape.
+
+use std::time::{Duration, Instant};
+
+use fedflare::fleet::{ClientState, Registry};
+use fedflare::sfm::inproc;
+use fedflare::sfm::mux::MuxConn;
+use fedflare::util::bench::emit_json;
+use fedflare::util::json::Json;
+use fedflare::util::mem;
+
+const HEARTBEAT: Duration = Duration::from_millis(500);
+const SUSPECT_AFTER: Duration = Duration::from_secs(2);
+const GONE_AFTER: Duration = Duration::from_secs(60);
+
+fn quick() -> bool {
+    std::env::var("FEDFLARE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Resident OS threads, from `/proc/self/status` (0 where unavailable).
+fn thread_count() -> u64 {
+    let Ok(status) = std::fs::read_to_string("/proc/self/status") else {
+        return 0;
+    };
+    for line in status.lines() {
+        if let Some(rest) = line.strip_prefix("Threads:") {
+            return rest.trim().parse().unwrap_or(0);
+        }
+    }
+    0
+}
+
+/// One fleet connection: the server-side mux the sweep observes, the
+/// client-side mux doing the heartbeating, and the registry slot.
+struct Slot {
+    name: String,
+    server: MuxConn,
+    client: MuxConn,
+    idx: usize,
+}
+
+fn connect_slot(i: usize, registry: &Registry) -> Slot {
+    let name = format!("site-{i:05}");
+    let (s, c) = inproc::pair(8, &name);
+    let (sr, cr) = (s.recv_half(), c.recv_half());
+    let server = MuxConn::spawn(Box::new(s), Box::new(sr), 0, 4096);
+    let client = MuxConn::spawn(Box::new(c), Box::new(cr), 0, 4096);
+    client.enable_heartbeat(HEARTBEAT);
+    let idx = registry.join(&name);
+    registry.connected(idx);
+    Slot { name, server, client, idx }
+}
+
+/// One pass of the server's liveness observation, exactly as the real
+/// sweep task runs it: dead transport -> Suspect, heartbeat evidence ->
+/// heard, then the deadline sweep.
+fn observe(slots: &[Slot], registry: &Registry) {
+    for s in slots {
+        if s.server.is_dead() {
+            registry.suspect(s.idx);
+        } else if let Some(at) = s.server.last_heartbeat() {
+            registry.heard(s.idx, at);
+        }
+    }
+    registry.sweep(SUSPECT_AFTER, GONE_AFTER);
+}
+
+/// Sweep until `done` holds (or the deadline passes); returns elapsed.
+fn sweep_until(
+    slots: &[Slot],
+    registry: &Registry,
+    timeout: Duration,
+    mut done: impl FnMut() -> bool,
+) -> Duration {
+    let t0 = Instant::now();
+    loop {
+        observe(slots, registry);
+        if done() || t0.elapsed() > timeout {
+            return t0.elapsed();
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+fn all_in(registry: &Registry, names: &[String], want: ClientState) -> bool {
+    names.iter().all(|n| registry.state_of(n) == Some(want))
+}
+
+fn idle_row(n: usize, baseline_threads: u64, baseline_rss: u64) -> Json {
+    let registry = Registry::new();
+    let slots: Vec<Slot> = (0..n).map(|i| connect_slot(i, &registry)).collect();
+    // let every client beat at least twice, then demand a fully-live view
+    std::thread::sleep(HEARTBEAT * 2 + Duration::from_millis(200));
+    observe(&slots, &registry);
+    let live = registry.eligible_names().len();
+    let threads = thread_count();
+    let rss = mem::rss_bytes();
+    println!(
+        "  {n:<12} {live:>10} {threads:>9} {:>12} kB",
+        rss.saturating_sub(baseline_rss) >> 10
+    );
+    assert_eq!(live, n, "idle fleet not fully live at n={n}");
+    Json::obj([
+        ("connections", Json::num(n as f64)),
+        ("live", Json::num(live as f64)),
+        ("resident_threads", Json::num(threads as f64)),
+        ("threads_over_baseline", Json::num(threads.saturating_sub(baseline_threads) as f64)),
+        ("rss_bytes", Json::num(rss as f64)),
+        ("rss_over_baseline_bytes", Json::num(rss.saturating_sub(baseline_rss) as f64)),
+    ])
+}
+
+/// Kill `batch` clients out of a live fleet, wait for Suspect, then
+/// reconnect them and wait for Live again.
+fn churn_row(slots: &mut [Slot], registry: &Registry, batch: usize) -> Json {
+    let names: Vec<String> = slots[..batch].iter().map(|s| s.name.clone()).collect();
+    for s in &slots[..batch] {
+        s.client.kill();
+    }
+    let t0 = Instant::now();
+    let suspect_s = sweep_until(slots, registry, Duration::from_secs(10), || {
+        all_in(registry, &names, ClientState::Suspect)
+    })
+    .as_secs_f64();
+    assert!(
+        all_in(registry, &names, ClientState::Suspect),
+        "churn batch {batch}: kill not observed within deadline"
+    );
+    for (i, slot) in slots[..batch].iter_mut().enumerate() {
+        slot.server.kill(); // the dead peer's half — replaced by the rejoin
+        *slot = connect_slot(i, registry);
+    }
+    // "rejoined" = Live again *with heartbeat evidence on the fresh
+    // connection* — `connected` alone promotes optimistically
+    let view: &[Slot] = slots;
+    let rejoined = || {
+        all_in(registry, &names, ClientState::Live)
+            && view[..batch].iter().all(|s| s.server.last_heartbeat().is_some())
+    };
+    let rejoin_s = sweep_until(view, registry, Duration::from_secs(10), rejoined).as_secs_f64();
+    assert!(
+        all_in(registry, &names, ClientState::Live)
+            && view[..batch].iter().all(|s| s.server.last_heartbeat().is_some()),
+        "churn batch {batch}: rejoin not observed within deadline"
+    );
+    let total_s = t0.elapsed().as_secs_f64();
+    let rate = batch as f64 / total_s.max(1e-9);
+    println!(
+        "  {batch:<10} {rate:>11.1}/s {suspect_s:>11.3}s {rejoin_s:>11.3}s"
+    );
+    Json::obj([
+        ("churn_batch", Json::num(batch as f64)),
+        ("churn_rate_per_s", Json::num(rate)),
+        ("suspect_latency_s", Json::num(suspect_s)),
+        ("rejoin_latency_s", Json::num(rejoin_s)),
+    ])
+}
+
+fn main() {
+    let baseline_threads = thread_count();
+    let baseline_rss = mem::rss_bytes();
+
+    println!("== fleet idle scaling: connections vs resident threads ==");
+    println!(
+        "  {:<12} {:>10} {:>9} {:>15}",
+        "connections", "live", "threads", "rss delta"
+    );
+    let sizes: &[usize] = if quick() {
+        &[1_000, 10_000]
+    } else {
+        &[100, 1_000, 10_000]
+    };
+    let idle_rows: Vec<Json> = sizes.iter().map(|&n| idle_row(n, baseline_threads, baseline_rss)).collect();
+
+    println!("\n== fleet churn: kill + rejoin batches over a 10k fleet ==");
+    println!(
+        "  {:<10} {:>13} {:>12} {:>12}",
+        "batch", "churn rate", "suspect", "rejoin"
+    );
+    let churn_n = 10_000;
+    let registry = Registry::new();
+    let mut slots: Vec<Slot> = (0..churn_n).map(|i| connect_slot(i, &registry)).collect();
+    std::thread::sleep(HEARTBEAT + Duration::from_millis(200));
+    let churn_rows: Vec<Json> = [16usize, 64]
+        .iter()
+        .map(|&b| churn_row(&mut slots, &registry, b))
+        .collect();
+
+    emit_json(
+        "fleet",
+        Json::obj([
+            ("bench", Json::str("fleet")),
+            ("quick", Json::num(if quick() { 1.0 } else { 0.0 })),
+            ("heartbeat_interval_s", Json::num(HEARTBEAT.as_secs_f64())),
+            ("suspect_after_s", Json::num(SUSPECT_AFTER.as_secs_f64())),
+            ("baseline_threads", Json::num(baseline_threads as f64)),
+            ("baseline_rss_bytes", Json::num(baseline_rss as f64)),
+            ("idle", Json::arr(idle_rows)),
+            ("churn_connections", Json::num(churn_n as f64)),
+            ("churn", Json::arr(churn_rows)),
+        ]),
+    )
+    .expect("write BENCH_fleet.json");
+}

@@ -516,7 +516,9 @@ impl JobScheduler {
         };
         // membership changes re-check admission: a queued job waiting on
         // a Suspect/absent client dispatches the moment the fleet's live
-        // view covers it again (Weak breaks the fleet<->scheduler cycle)
+        // view covers it again (Weak breaks the fleet<->scheduler cycle).
+        // The fleet invokes this off its dispatcher thread — never the
+        // reactor — so taking the scheduler lock here is safe.
         let weak: Weak<SchedCore> = Arc::downgrade(&sched.core);
         sched
             .core

@@ -298,11 +298,18 @@ impl JobDirectory {
 /// every job loop at the fleet-level bye. One connection, many jobs, one
 /// executor per active job, interleaved task streams.
 ///
-/// With a nonzero heartbeat interval, a lightweight loop sends one
-/// [`KIND_HEARTBEAT`](crate::sfm::KIND_HEARTBEAT) control frame per
-/// interval on the shared connection — the client half of the fleet
-/// control plane (the server's deadline sweeps read the arrival times
-/// off the mux; see [`crate::fleet::Registry`]).
+/// With a nonzero heartbeat interval, the reactor's timer wheel sends
+/// one [`KIND_HEARTBEAT`](crate::sfm::KIND_HEARTBEAT) control frame per
+/// interval on the shared connection ([`MuxConn::enable_heartbeat`] — no
+/// per-client heartbeat thread) — the client half of the fleet control
+/// plane (the server's deadline sweeps read the arrival times off the
+/// mux; see [`crate::fleet::Registry`]).
+///
+/// The control channel can be serviced two ways: the blocking
+/// [`MultiJobRuntime::run`] loop (standalone `fedflare client`
+/// processes), or piecewise via [`MultiJobRuntime::control_messenger`] /
+/// [`MultiJobRuntime::handle_control`] — how the simulator's control
+/// dispatcher multiplexes every simulated client onto one thread.
 pub struct MultiJobRuntime {
     name: String,
     index: usize,
@@ -328,116 +335,120 @@ impl MultiJobRuntime {
         }
     }
 
-    /// Service control messages until the fleet-level bye (or transport
-    /// close), then join every job loop. Per-job failures are reported
-    /// through the [`JobDirectory`], never up from here — a failed job
-    /// must not take the connection's other jobs down.
-    pub fn run(self) -> Result<()> {
-        // the liveness loop: one empty heartbeat frame per interval,
-        // first one immediately (so a rejoining client turns Live fast).
-        // Sleeps in short slices so shutdown joins promptly, stops on
-        // its own once the transport dies.
-        let hb_stop = Arc::new(std::sync::atomic::AtomicBool::new(false));
-        let hb_thread = if self.heartbeat > Duration::ZERO {
-            let mux = self.mux.clone();
-            let stop = hb_stop.clone();
-            let interval = self.heartbeat;
-            Some(
-                std::thread::Builder::new()
-                    .name(format!("hb-{}", self.name))
-                    .stack_size(64 << 10)
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Start the liveness beat on the reactor's timer wheel: one empty
+    /// heartbeat frame per interval, the first sent immediately (so a
+    /// rejoining client turns Live fast). Stops on its own once the
+    /// connection dies. No-op with a zero interval.
+    pub fn start_heartbeat(&self) {
+        if self.heartbeat > Duration::ZERO {
+            let _ = self.mux.send_heartbeat();
+            self.mux.enable_heartbeat(self.heartbeat);
+        }
+    }
+
+    /// The connection's control channel (job 0) as a [`Messenger`].
+    pub fn control_messenger(&self) -> Messenger {
+        Messenger::new(Box::new(self.mux.handle(0)), 4096, (self.index + 1) as u32)
+    }
+
+    /// Handle one control message; `loops` accumulates the job task-loop
+    /// threads this runtime spawned. Returns `false` on the fleet-level
+    /// bye (caller proceeds to [`MultiJobRuntime::shutdown_jobs`]).
+    /// Per-job failures are reported through the [`JobDirectory`], never
+    /// up from here — a failed job must not take the connection's other
+    /// jobs down.
+    pub fn handle_control(
+        &self,
+        msg: FlMessage,
+        loops: &mut Vec<(u32, std::thread::JoinHandle<()>)>,
+    ) -> Result<bool> {
+        if msg.kind == Kind::Bye {
+            return Ok(false);
+        }
+        let job = msg.metric("job").unwrap_or(0.0) as u32;
+        match msg.task.as_str() {
+            "job_open" => {
+                // reap loops of completed jobs so a long-lived fleet
+                // connection doesn't accumulate one handle per job
+                // ever served (finished threads just detach)
+                loops.retain(|(_, h)| !h.is_finished());
+                let Some(start) = self.directory.claim(job, self.index) else {
+                    self.directory.finish(
+                        job,
+                        &self.name,
+                        Err(format!("no start spec for job {job}")),
+                    );
+                    return Ok(true);
+                };
+                let mut messenger = Messenger::new(
+                    Box::new(self.mux.handle(job)),
+                    start.chunk_bytes,
+                    (self.index + 1) as u32,
+                );
+                if let Some(policy) =
+                    crate::sfm::EvictionPolicy::stale_after_s(start.stale_stream_age_s)
+                {
+                    messenger.set_reassembly_policy(policy);
+                }
+                let name = self.name.clone();
+                let dir = self.directory.clone();
+                let handle = std::thread::Builder::new()
+                    .name(format!("client-{}-job{job}", self.name))
                     .spawn(move || {
-                        use std::sync::atomic::Ordering;
-                        while !stop.load(Ordering::Relaxed) {
-                            if mux.send_heartbeat().is_err() {
-                                break;
-                            }
-                            let mut slept = Duration::ZERO;
-                            while slept < interval && !stop.load(Ordering::Relaxed) {
-                                let slice =
-                                    Duration::from_millis(50).min(interval - slept);
-                                std::thread::sleep(slice);
-                                slept += slice;
-                            }
+                        let mut rt =
+                            ClientRuntime::new(&name, messenger, start.executor, start.filters);
+                        let res = rt.run_loop().map_err(|e| e.to_string());
+                        if let Err(e) = &res {
+                            rt.send_error_marker(e);
                         }
+                        dir.finish(job, &name, res);
                     })
-                    .map_err(|e| anyhow!("{}: spawn heartbeat loop: {e}", self.name))?,
-            )
-        } else {
-            None
-        };
-        let mut control =
-            Messenger::new(Box::new(self.mux.handle(0)), 4096, (self.index + 1) as u32);
+                    .map_err(|e| anyhow!("{}: spawn job {job} loop: {e}", self.name))?;
+                loops.push((job, handle));
+            }
+            "job_abort" => {
+                // sever the job's inbound queue: its loop observes
+                // Closed on the next task receive and unwinds, while
+                // in-flight frames drain into the eviction counters
+                self.mux.close_job(job);
+            }
+            other => log::warn!("{}: unknown control message '{other}'", self.name),
+        }
+        Ok(true)
+    }
+
+    /// Fleet shutdown: sever every job channel before joining, so a loop
+    /// still parked on its next task (a job torn down mid-flight)
+    /// observes Closed instead of deadlocking the join.
+    pub fn shutdown_jobs(&self, loops: Vec<(u32, std::thread::JoinHandle<()>)>) {
+        for (job, h) in loops {
+            self.mux.close_job(job);
+            let _ = h.join();
+        }
+    }
+
+    /// Service control messages until the fleet-level bye (or transport
+    /// close), then join every job loop — the blocking driver for
+    /// standalone client processes (the simulator dispatches the same
+    /// pieces event-driven instead).
+    pub fn run(self) -> Result<()> {
+        self.start_heartbeat();
+        let mut control = self.control_messenger();
         let mut loops: Vec<(u32, std::thread::JoinHandle<()>)> = Vec::new();
         loop {
             let msg = match control.recv_msg() {
                 Ok(m) => m,
                 Err(_) => break, // transport gone: fleet shutdown
             };
-            if msg.kind == Kind::Bye {
+            if !self.handle_control(msg, &mut loops)? {
                 break;
             }
-            let job = msg.metric("job").unwrap_or(0.0) as u32;
-            match msg.task.as_str() {
-                "job_open" => {
-                    // reap loops of completed jobs so a long-lived fleet
-                    // connection doesn't accumulate one handle per job
-                    // ever served (finished threads just detach)
-                    loops.retain(|(_, h)| !h.is_finished());
-                    let Some(start) = self.directory.claim(job, self.index) else {
-                        self.directory.finish(
-                            job,
-                            &self.name,
-                            Err(format!("no start spec for job {job}")),
-                        );
-                        continue;
-                    };
-                    let mut messenger = Messenger::new(
-                        Box::new(self.mux.handle(job)),
-                        start.chunk_bytes,
-                        (self.index + 1) as u32,
-                    );
-                    if let Some(policy) =
-                        crate::sfm::EvictionPolicy::stale_after_s(start.stale_stream_age_s)
-                    {
-                        messenger.set_reassembly_policy(policy);
-                    }
-                    let name = self.name.clone();
-                    let dir = self.directory.clone();
-                    let handle = std::thread::Builder::new()
-                        .name(format!("client-{}-job{job}", self.name))
-                        .spawn(move || {
-                            let mut rt =
-                                ClientRuntime::new(&name, messenger, start.executor, start.filters);
-                            let res = rt.run_loop().map_err(|e| e.to_string());
-                            if let Err(e) = &res {
-                                rt.send_error_marker(e);
-                            }
-                            dir.finish(job, &name, res);
-                        })
-                        .map_err(|e| anyhow!("{}: spawn job {job} loop: {e}", self.name))?;
-                    loops.push((job, handle));
-                }
-                "job_abort" => {
-                    // sever the job's inbound queue: its loop observes
-                    // Closed on the next task receive and unwinds, while
-                    // in-flight frames drain into the eviction counters
-                    self.mux.close_job(job);
-                }
-                other => log::warn!("{}: unknown control message '{other}'", self.name),
-            }
         }
-        // fleet shutdown: sever every job channel before joining, so a
-        // loop still parked on its next task (a job torn down mid-flight)
-        // observes Closed instead of deadlocking the join
-        for (job, h) in loops {
-            self.mux.close_job(job);
-            let _ = h.join();
-        }
-        hb_stop.store(true, std::sync::atomic::Ordering::Relaxed);
-        if let Some(h) = hb_thread {
-            let _ = h.join();
-        }
+        self.shutdown_jobs(loops);
         Ok(())
     }
 }

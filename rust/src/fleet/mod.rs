@@ -13,10 +13,11 @@
 //! ```
 //!
 //! driven by [`KIND_HEARTBEAT`](crate::sfm::KIND_HEARTBEAT) control
-//! frames (sent by each client's
-//! [`MultiJobRuntime`](crate::executor::MultiJobRuntime), observed by the
-//! mux receive pump, swept against deadlines by the fleet's sweeper
-//! thread). Every transition bumps the fleet **epoch** — a monotonic
+//! frames (sent by each client from the reactor's timer wheel, observed
+//! by the mux's priority lane as the reactor routes inbound frames,
+//! swept against deadlines by a fleet-owned timer task on the same
+//! wheel — no dedicated threads anywhere on this path). Every
+//! transition bumps the fleet **epoch** — a monotonic
 //! membership version. Consumers act on the *view*, not on events:
 //! [`ScatterAndGather`](crate::coordinator::ScatterAndGather) samples
 //! each round from the currently eligible clients, the
@@ -24,8 +25,9 @@
 //! only once their clients are eligible, and a client going Suspect
 //! mid-round simply falls into the existing straggler/quorum path.
 //!
-//! The registry is pure bookkeeping — connections, heartbeat loops, and
-//! the sweeper live in [`crate::sim::Fleet`]; durable job state lives in
+//! The registry is pure bookkeeping — connections, heartbeat timers,
+//! and the liveness sweep live in [`crate::sim::Fleet`] (driven by
+//! [`crate::sfm::reactor`]); durable job state lives in
 //! [`crate::persist`].
 
 use std::sync::Mutex;
@@ -81,8 +83,9 @@ impl RegInner {
 }
 
 /// Membership + liveness view of one fleet (see module docs). Shared
-/// (`Arc`) between the fleet's sweeper, the scheduler's admission check,
-/// and each running job's per-round sampling probe.
+/// (`Arc`) between the fleet's liveness sweep (a reactor timer task),
+/// the scheduler's admission check, and each running job's per-round
+/// sampling probe.
 #[derive(Default)]
 pub struct Registry {
     inner: Mutex<RegInner>,

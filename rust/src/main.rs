@@ -9,12 +9,19 @@
 //!     long-lived serving: many jobs multiplexed over one client fleet
 //! fedflare submit --jobs a.json,b.json [--max-concurrent N]
 //!     dispatch a list of job files over one shared fleet
-//! fedflare server --port <p> --job <job.json>
-//! fedflare client --connect <host:port> --name <site> --job <job.json>
-//!     multi-process deployment (server + one process per client)
+//! fedflare server --port <p> --job <job.json> [--site-token s] [--state-dir d]
+//! fedflare client --connect <host:port> --name <site> --job <job.json> [--site-token s]
+//!     multi-process deployment (server + one process per client): muxed
+//!     connections, heartbeats, and rejoin — kill a client and restart it
+//!     and it re-authenticates and picks the job back up
 //! fedflare list-artifacts [--artifacts-dir artifacts]
 //! fedflare fig5-worker ...            (internal: spawned by `repro fig5`)
 //! ```
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
 
 use anyhow::{anyhow, bail, Result};
 
@@ -23,13 +30,21 @@ use fedflare::coordinator::{
     accept_registration, build_aggregator, ClientHandle, Communicator, Controller, JobRequest,
     JobScheduler, JobStatus, SamplePolicy, ScatterAndGather, ServerCtx,
 };
-use fedflare::executor::ClientRuntime;
+use fedflare::executor::{JobDirectory, JobStart, MultiJobRuntime};
+use fedflare::fleet::Registry;
+use fedflare::message::FlMessage;
 use fedflare::metrics::MetricsSink;
 use fedflare::repro;
 use fedflare::runtime::RuntimeClient;
+use fedflare::sfm::mux::MuxConn;
+use fedflare::sfm::tcp::TcpDriver;
+use fedflare::sfm::{reactor, Driver, EvictionPolicy, Frame, FLAG_FIRST, FLAG_LAST, KIND_AUTH};
 use fedflare::sim;
 use fedflare::streaming::Messenger;
+use fedflare::tensor::TensorDict;
+use fedflare::util::bytes::{Reader, Writer};
 use fedflare::util::cli::Args;
+use fedflare::util::json::Json;
 
 fn main() {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -609,12 +624,159 @@ fn override_chunk(job: &mut JobConfig, p: &fedflare::util::cli::Parsed) -> Resul
 }
 
 // ------------------------------------------------------------ server/client
+//
+// The real-network deployment is a first-class fleet member: each client
+// connection authenticates with a [`KIND_AUTH`] handshake, is wrapped in
+// a [`MuxConn`] registered with the shared reactor (no receive thread per
+// connection), heartbeats over the mux's priority lane, and is tracked by
+// a [`Registry`] swept from the reactor's timer wheel. A killed client
+// that reconnects re-authenticates and is swapped back into the running
+// job's worker — the same rejoin semantics the simulator fleet has.
+
+/// The single fleet job id real-network deployments run (the mux reserves
+/// 0 for the control channel).
+const FLEET_JOB_ID: u32 = 1;
+
+/// Build the one-frame [`KIND_AUTH`] handshake: `str site_name | str
+/// site_token`.
+fn auth_frame(name: &str, token: &str) -> Frame {
+    let mut w = Writer::new();
+    w.str(name);
+    w.str(token);
+    Frame {
+        flags: FLAG_FIRST | FLAG_LAST,
+        kind: KIND_AUTH,
+        job: 0,
+        stream: 0,
+        seq: 0,
+        total: 1,
+        payload: w.into_vec(),
+    }
+}
+
+/// Server side of the handshake: read the first frame off an accepted
+/// connection (bounded by a read deadline so a silent dialer cannot wedge
+/// the accept loop), verify the shared secret and the site name, and wrap
+/// the admitted connection in a reactor-registered [`MuxConn`].
+fn auth_accept(
+    stream: std::net::TcpStream,
+    peer: std::net::SocketAddr,
+    job: &JobConfig,
+    token: &str,
+) -> Result<(String, MuxConn)> {
+    let mut drv = TcpDriver::from_stream(stream, job.stream.verify_crc)?;
+    drv.set_read_timeout(Some(Duration::from_secs(5)))?;
+    let frame = drv.recv().map_err(|e| anyhow!("{peer}: auth read: {e}"))?;
+    if frame.kind != KIND_AUTH {
+        bail!("{peer}: first frame was not an auth handshake");
+    }
+    let mut r = Reader::new(&frame.payload);
+    let name = r.str().map_err(|e| anyhow!("{peer}: auth decode: {e}"))?;
+    let presented = r.str().map_err(|e| anyhow!("{peer}: auth decode: {e}"))?;
+    if !token.is_empty() && presented != token {
+        bail!("{peer}: site '{name}' presented a bad token");
+    }
+    if !job.clients.iter().any(|c| c.name == name) {
+        bail!("{peer}: unknown site '{name}'");
+    }
+    drv.set_read_timeout(None)?;
+    let send_half = drv.try_clone()?;
+    let mux = MuxConn::spawn(
+        Box::new(send_half),
+        Box::new(drv),
+        0, // the server never throttles; bandwidth caps are client-side
+        job.stream.chunk_bytes as u64,
+    );
+    Ok((name, mux))
+}
+
+/// Send one control-plane message (job 0) on a connection. Control
+/// messages are single small frames, so a transient messenger per send is
+/// safe: each stream completes before the next begins.
+fn send_control(mux: &MuxConn, msg: &FlMessage) -> Result<()> {
+    Messenger::new(Box::new(mux.handle(0)), 4096, 0)
+        .send_msg(msg)
+        .map_err(|e| anyhow!("control send on {}: {e}", mux.name()))
+}
+
+fn open_msg(job_name: &str) -> FlMessage {
+    FlMessage::task("job_open", 0, TensorDict::new())
+        .with_meta("job", Json::num(FLEET_JOB_ID as f64))
+        .with_meta("job_name", Json::str(job_name))
+}
+
+/// Build the fleet job's channel over a connection (chunking + reassembly
+/// limits from the job's stream config).
+fn fleet_job_messenger(mux: &MuxConn, job: &JobConfig) -> Messenger {
+    let mut m = Messenger::new(
+        Box::new(mux.handle(FLEET_JOB_ID)),
+        job.stream.chunk_bytes,
+        0,
+    );
+    if let Some(policy) = EvictionPolicy::stale_after_s(job.stream.stale_stream_age_s) {
+        m.set_reassembly_policy(policy);
+    }
+    m
+}
+
+/// Admit a reconnecting site mid-job: replace its connection slot, mark it
+/// Joining→Live in the registry, re-open the fleet job on the fresh
+/// connection, and hand a fresh job channel to the site's server worker.
+/// The worker adopts the replacement only after the client's register
+/// arrives on it, so a rejoin that dies mid-handshake is discarded.
+fn admit_rejoin(
+    name: &str,
+    mux: MuxConn,
+    conns: &Mutex<HashMap<String, (usize, MuxConn)>>,
+    registry: &Registry,
+    swappers: &HashMap<String, std::sync::mpsc::Sender<Messenger>>,
+    job: &JobConfig,
+) -> Result<()> {
+    let idx = registry.join(name);
+    let old = conns
+        .lock()
+        .unwrap()
+        .insert(name.to_string(), (idx, mux.clone()));
+    if let Some((_, old_mux)) = old {
+        old_mux.kill();
+    }
+    registry.connected(idx);
+    send_control(&mux, &open_msg(&job.name))?;
+    let m = fleet_job_messenger(&mux, job);
+    let Some(swapper) = swappers.get(name) else {
+        bail!("no job worker for site '{name}'");
+    };
+    swapper
+        .send(m)
+        .map_err(|_| anyhow!("job worker for site '{name}' is gone"))?;
+    Ok(())
+}
 
 fn cmd_server(args: &[String]) -> Result<()> {
     let p = Args::new("server", "FL server (multi-process deployment)")
         .opt("port", Some("8787"), "listen port")
         .opt("job", None, "path to job JSON (required)")
         .opt("out-dir", Some("results"), "metrics directory")
+        .opt(
+            "site-token",
+            Some(""),
+            "shared fleet secret clients must present at connect (empty = allow all)",
+        )
+        .opt(
+            "state-dir",
+            None,
+            "durable job state: checkpoint every round here and resume on restart",
+        )
+        .opt(
+            "heartbeat-interval",
+            Some("0.5"),
+            "seconds between client heartbeats (0 disables liveness tracking)",
+        )
+        .opt(
+            "suspect-timeout",
+            Some("10"),
+            "seconds without heartbeats before a client is marked Suspect",
+        )
         .opt(
             "chunk-bytes",
             None,
@@ -646,28 +808,164 @@ fn cmd_server(args: &[String]) -> Result<()> {
         job.branching = 0;
     }
     let port: u16 = p.get("port").unwrap().parse()?;
+    let token = p.get("site-token").unwrap().to_string();
+    let hb = p.get_f64("heartbeat-interval").map_err(|e| anyhow!(e))?;
+    let suspect = p.get_f64("suspect-timeout").map_err(|e| anyhow!(e))?;
+    if hb < 0.0 {
+        bail!("--heartbeat-interval must be >= 0 seconds");
+    }
+    if suspect <= 0.0 || (hb > 0.0 && suspect < 2.0 * hb) {
+        bail!("--suspect-timeout must be > 0 and at least twice the heartbeat interval");
+    }
     let rc = RuntimeClient::start(&job.artifacts_dir).ok();
     let initial = repro::common::initial_model(&job, rc.as_ref())?;
 
+    // 1. initial connect: every named site authenticates and gets a muxed
+    //    connection + a registry slot
     let listener = fedflare::sfm::tcp::bind(("0.0.0.0", port))?;
     println!(
-        "server: listening on :{port}, waiting for {} clients",
-        job.clients.len()
+        "server: listening on :{port}, waiting for {} sites{}",
+        job.clients.len(),
+        if token.is_empty() {
+            String::new()
+        } else {
+            " (token-gated)".to_string()
+        }
     );
-    let mut handles = Vec::new();
-    for _ in 0..job.clients.len() {
-        let (conn, peer) = listener.accept()?;
-        let drv = fedflare::sfm::tcp::TcpDriver::from_stream(conn, job.stream.verify_crc)?;
-        let mut m = Messenger::new(Box::new(drv), job.stream.chunk_bytes, 0);
-        let name = accept_registration(&mut m)?;
-        println!("server: registered '{name}' from {peer}");
-        handles.push(ClientHandle::spawn(name, m));
+    let registry = Arc::new(Registry::new());
+    let conns: Arc<Mutex<HashMap<String, (usize, MuxConn)>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    while conns.lock().unwrap().len() < job.clients.len() {
+        let (stream, peer) = listener.accept()?;
+        match auth_accept(stream, peer, &job, &token) {
+            Ok((name, mux)) => {
+                let idx = registry.join(&name);
+                registry.connected(idx);
+                println!("server: site '{name}' connected from {peer}");
+                if let Some((_, old)) = conns.lock().unwrap().insert(name, (idx, mux)) {
+                    old.kill(); // a site that dialed twice keeps the newer link
+                }
+            }
+            Err(e) => eprintln!("server: rejected connection: {e}"),
+        }
     }
+
+    // 2. liveness: a reactor timer task reads each mux's last-heartbeat
+    //    observation into the registry and sweeps the deadlines — no
+    //    sweeper thread
+    let sweep_stop = Arc::new(AtomicBool::new(false));
+    let sweep_id = if hb > 0.0 {
+        let registry2 = registry.clone();
+        let conns2 = conns.clone();
+        let stop = sweep_stop.clone();
+        let suspect_after = Duration::from_secs_f64(suspect);
+        let gone_after = Duration::from_secs_f64((3.0 * suspect).max(30.0));
+        let period = Duration::from_secs_f64((hb.min(suspect) / 2.0).max(0.02));
+        Some(reactor::global().add_interval(
+            period,
+            Box::new(move || {
+                if stop.load(Ordering::Relaxed) {
+                    return false;
+                }
+                for (idx, mux) in conns2.lock().unwrap().values() {
+                    if mux.is_dead() {
+                        registry2.suspect(*idx);
+                    } else if let Some(at) = mux.last_heartbeat() {
+                        registry2.heard(*idx, at);
+                    }
+                }
+                registry2.sweep(suspect_after, gone_after);
+                true
+            }),
+        ))
+    } else {
+        None
+    };
+
+    // 3. open the fleet job on every site and spawn its server worker;
+    //    keep each worker's channel swapper for rejoins
+    let mut handles = Vec::new();
+    let mut swappers = HashMap::new();
+    for spec in &job.clients {
+        let mux = conns.lock().unwrap().get(&spec.name).unwrap().1.clone();
+        send_control(&mux, &open_msg(&job.name))?;
+        let mut m = fleet_job_messenger(&mux, &job);
+        let got = accept_registration(&mut m)?;
+        if got != spec.name {
+            bail!(
+                "site '{}' registered as '{got}' on its job channel",
+                spec.name
+            );
+        }
+        let handle = ClientHandle::spawn(got, m);
+        swappers.insert(spec.name.clone(), handle.channel_swapper());
+        handles.push(handle);
+    }
+
+    // 4. rejoin accept loop: a killed-and-restarted client redials, and
+    //    its fresh connection is swapped into the running job
+    let accept_stop = Arc::new(AtomicBool::new(false));
+    listener.set_nonblocking(true)?;
+    let accept_thread = {
+        let conns = conns.clone();
+        let registry = registry.clone();
+        let swappers = swappers.clone();
+        let job = job.clone();
+        let token = token.clone();
+        let stop = accept_stop.clone();
+        std::thread::Builder::new()
+            .name("server-accept".into())
+            .spawn(move || loop {
+                if stop.load(Ordering::Relaxed) {
+                    return;
+                }
+                match listener.accept() {
+                    Ok((stream, peer)) => match auth_accept(stream, peer, &job, &token) {
+                        Ok((name, mux)) => {
+                            match admit_rejoin(&name, mux, &conns, &registry, &swappers, &job) {
+                                Ok(()) => println!("server: site '{name}' rejoined from {peer}"),
+                                Err(e) => eprintln!("server: rejoin of '{name}' failed: {e}"),
+                            }
+                        }
+                        Err(e) => eprintln!("server: rejected connection: {e}"),
+                    },
+                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
+                        std::thread::sleep(Duration::from_millis(50));
+                    }
+                    Err(e) => {
+                        eprintln!("server: accept loop stopped: {e}");
+                        return;
+                    }
+                }
+            })
+            .map_err(|e| anyhow!("spawn accept loop: {e}"))?
+    };
+
+    // 5. run the workflow over the live view; with --state-dir, each
+    //    round checkpoints durably and a restarted server resumes
     let mut comm = Communicator::new(handles, job.seed);
+    let probe_registry = registry.clone();
+    comm.set_liveness(Box::new(move |name| probe_registry.is_eligible(name)));
     let sink = MetricsSink::create(p.get("out-dir").unwrap(), &job.name)?;
     let mut ctx = ServerCtx::new(sink, &job.name);
+    if let Some(dir) = p.get("state-dir") {
+        ctx.store = Some(Arc::new(fedflare::persist::JobStore::open(dir)?));
+    }
     let mut ctl = build_sag(&job, initial);
-    ctl.run(&mut comm, &mut ctx)?;
+    let outcome = ctl.run(&mut comm, &mut ctx);
+
+    // teardown regardless of outcome: stop rejoins and the sweep, then
+    // the fleet-level bye lets each client's control loop exit
+    accept_stop.store(true, Ordering::Relaxed);
+    let _ = accept_thread.join();
+    sweep_stop.store(true, Ordering::Relaxed);
+    if let Some(id) = sweep_id {
+        reactor::global().cancel_interval(id);
+    }
+    for (_, (_, mux)) in conns.lock().unwrap().drain() {
+        let _ = send_control(&mux, &FlMessage::bye());
+    }
+    outcome?;
     println!(
         "server: job complete ({} rounds, {})",
         ctl.history.len(),
@@ -682,6 +980,16 @@ fn cmd_client(args: &[String]) -> Result<()> {
         .opt("name", None, "client/site name (required)")
         .opt("job", None, "path to job JSON (required)")
         .opt(
+            "site-token",
+            Some(""),
+            "shared fleet secret presented at connect (must match the server's)",
+        )
+        .opt(
+            "heartbeat-interval",
+            Some("0.5"),
+            "seconds between liveness heartbeats (0 disables)",
+        )
+        .opt(
             "chunk-bytes",
             None,
             "override the job's streaming chunk size (default 1 MB)",
@@ -692,33 +1000,77 @@ fn cmd_client(args: &[String]) -> Result<()> {
         JobConfig::from_file(std::path::Path::new(p.req("job").map_err(|e| anyhow!(e))?))?;
     override_chunk(&mut job, &p)?;
     let name = p.req("name").map_err(|e| anyhow!(e))?;
+    let hb = p.get_f64("heartbeat-interval").map_err(|e| anyhow!(e))?;
+    if hb < 0.0 {
+        bail!("--heartbeat-interval must be >= 0 seconds");
+    }
     let idx = job
         .clients
         .iter()
         .position(|c| c.name == name)
         .ok_or_else(|| anyhow!("client '{name}' not in job file"))?;
     let spec = &job.clients[idx];
-    let drv = fedflare::sfm::tcp::TcpDriver::connect(
-        p.get("connect").unwrap(),
-        job.stream.verify_crc,
-    )?;
-    let driver: Box<dyn fedflare::sfm::Driver> = if spec.bandwidth_bps > 0 {
-        Box::new(fedflare::sfm::throttle::Throttled::new(
-            drv,
-            spec.bandwidth_bps,
-            job.stream.chunk_bytes as u64,
-        ))
-    } else {
-        Box::new(drv)
-    };
-    let messenger = Messenger::new(driver, job.stream.chunk_bytes, (idx + 1) as u32);
+
+    // connect + authenticate; a restarted client runs this exact same
+    // path, which on the server side is the rejoin handshake
+    let mut drv = TcpDriver::connect(p.get("connect").unwrap(), job.stream.verify_crc)?;
+    drv.send(auth_frame(name, p.get("site-token").unwrap()))
+        .map_err(|e| anyhow!("auth handshake: {e}"))?;
+    let send_half = drv.try_clone()?;
+    // the mux registers the receive half with the reactor and owns the
+    // bandwidth cap (what the Throttled wrapper used to do); heartbeats
+    // ride the priority lane and bypass it
+    let mux = MuxConn::spawn(
+        Box::new(send_half),
+        Box::new(drv),
+        spec.bandwidth_bps,
+        job.stream.chunk_bytes as u64,
+    );
+
+    // stage the local half of the fleet job (executor + filters built
+    // from the local job file) for the server's job_open
     let rc = RuntimeClient::start(&job.artifacts_dir).ok();
     let executor = repro::common::build_executor(&job, idx, rc.as_ref())?;
     let filters = fedflare::filters::build_chain(&job.filters, idx, job.clients.len());
-    let mut rt = ClientRuntime::new(name, messenger, executor, filters);
-    let tasks = rt.run_loop()?;
-    println!("client '{name}': {tasks} tasks completed");
-    Ok(())
+    let directory = JobDirectory::new();
+    directory.offer(
+        FLEET_JOB_ID,
+        idx,
+        JobStart {
+            job_name: job.name.clone(),
+            chunk_bytes: job.stream.chunk_bytes,
+            stale_stream_age_s: job.stream.stale_stream_age_s,
+            executor,
+            filters,
+        },
+    );
+
+    // the multi-job client runtime: heartbeat on the reactor's timer
+    // wheel, control loop until the fleet-level bye, one task loop per
+    // opened job — the same runtime the simulator fleet dispatches
+    let rt = MultiJobRuntime::new(
+        name,
+        idx,
+        mux,
+        directory.clone(),
+        Duration::from_secs_f64(hb),
+    );
+    rt.run()?;
+    match directory
+        .wait_finished(FLEET_JOB_ID, 1, Duration::from_millis(100))
+        .into_iter()
+        .next()
+    {
+        Some((_, Ok(tasks))) => {
+            println!("client '{name}': {tasks} tasks completed");
+            Ok(())
+        }
+        Some((_, Err(e))) => bail!("client '{name}': task loop failed: {e}"),
+        None => {
+            println!("client '{name}': connection closed before the job opened");
+            Ok(())
+        }
+    }
 }
 
 fn cmd_list(args: &[String]) -> Result<()> {

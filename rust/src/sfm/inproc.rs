@@ -6,10 +6,11 @@
 //! frames are in flight the sender blocks, the same semantics a full TCP
 //! socket buffer provides.
 
-use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TrySendError};
+use std::sync::mpsc::{Receiver, RecvTimeoutError, SyncSender, TryRecvError, TrySendError};
 use std::sync::{Arc, Mutex};
 use std::time::Duration;
 
+use super::reactor::{ReadyHook, Registration};
 use super::{Driver, Frame, SfmError};
 
 /// One endpoint of an in-process duplex link.
@@ -17,6 +18,11 @@ pub struct InProcDriver {
     tx: SyncSender<Frame>,
     rx: Arc<Mutex<Receiver<Frame>>>,
     label: String,
+    /// Pokes the reactor owning the *peer's* receive half after each
+    /// send, so inproc delivery is event-driven on the shared loop.
+    tx_hook: ReadyHook,
+    /// Shared with whoever registers *our* inbound channel.
+    rx_hook: ReadyHook,
 }
 
 /// Create a connected (a, b) driver pair with a bounded window per
@@ -24,16 +30,24 @@ pub struct InProcDriver {
 pub fn pair(window: usize, label: &str) -> (InProcDriver, InProcDriver) {
     let (tx_ab, rx_ab) = std::sync::mpsc::sync_channel(window);
     let (tx_ba, rx_ba) = std::sync::mpsc::sync_channel(window);
+    // one hook per direction, shared by that direction's sender and the
+    // receive half the reactor registers
+    let hook_ab = ReadyHook::default();
+    let hook_ba = ReadyHook::default();
     (
         InProcDriver {
             tx: tx_ab,
             rx: Arc::new(Mutex::new(rx_ba)),
             label: format!("inproc:{label}:a"),
+            tx_hook: hook_ab.clone(),
+            rx_hook: hook_ba.clone(),
         },
         InProcDriver {
             tx: tx_ba,
             rx: Arc::new(Mutex::new(rx_ab)),
             label: format!("inproc:{label}:b"),
+            tx_hook: hook_ba,
+            rx_hook: hook_ab,
         },
     )
 }
@@ -53,15 +67,43 @@ fn recv_from(rx: &Mutex<Receiver<Frame>>) -> Result<Frame, SfmError> {
 
 impl Driver for InProcDriver {
     fn send(&mut self, frame: Frame) -> Result<(), SfmError> {
-        self.tx.send(frame).map_err(|_| SfmError::Closed)
+        self.tx.send(frame).map_err(|_| SfmError::Closed)?;
+        self.tx_hook.notify();
+        Ok(())
+    }
+
+    fn send_nowait(&mut self, frame: Frame) -> Result<bool, SfmError> {
+        match self.tx.try_send(frame) {
+            Ok(()) => {
+                self.tx_hook.notify();
+                Ok(true)
+            }
+            Err(TrySendError::Full(_)) => Ok(false),
+            Err(TrySendError::Disconnected(_)) => Err(SfmError::Closed),
+        }
     }
 
     fn recv(&mut self) -> Result<Frame, SfmError> {
         recv_from(&self.rx)
     }
 
+    fn try_recv(&mut self) -> Result<Option<Frame>, SfmError> {
+        match self.rx.lock().expect("inproc rx poisoned").try_recv() {
+            Ok(f) => Ok(Some(f)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(SfmError::Closed),
+        }
+    }
+
     fn name(&self) -> String {
         self.label.clone()
+    }
+
+    fn registration(&mut self) -> Option<Registration> {
+        Some(Registration::Queue {
+            rx: self.rx.clone(),
+            hook: self.rx_hook.clone(),
+        })
     }
 }
 
@@ -69,22 +111,26 @@ impl InProcDriver {
     /// Non-blocking send attempt (used by tests to observe backpressure).
     pub fn try_send(&mut self, frame: Frame) -> Result<(), SfmError> {
         match self.tx.try_send(frame) {
-            Ok(()) => Ok(()),
+            Ok(()) => {
+                self.tx_hook.notify();
+                Ok(())
+            }
             Err(TrySendError::Full(_)) => Err(SfmError::Decode("window full".into())),
             Err(TrySendError::Disconnected(_)) => Err(SfmError::Closed),
         }
     }
 
     /// Receive-only view of this endpoint, sharing the same inbound
-    /// channel but holding **no sender** — the mux split: the pump thread
+    /// channel but holding **no sender** — the mux split: the reactor
     /// owns the receive half while senders keep the original, so dropping
     /// the original is what actually disconnects the peer (a receive half
-    /// keeping a sender clone alive would deadlock two pumps against each
-    /// other at shutdown).
+    /// keeping a sender clone alive would pin two connections against
+    /// each other at shutdown).
     pub fn recv_half(&self) -> InProcRecvHalf {
         InProcRecvHalf {
             rx: self.rx.clone(),
             label: format!("{}:rx", self.label),
+            hook: self.rx_hook.clone(),
         }
     }
 }
@@ -94,6 +140,7 @@ impl InProcDriver {
 pub struct InProcRecvHalf {
     rx: Arc<Mutex<Receiver<Frame>>>,
     label: String,
+    hook: ReadyHook,
 }
 
 impl Driver for InProcRecvHalf {
@@ -105,8 +152,23 @@ impl Driver for InProcRecvHalf {
         recv_from(&self.rx)
     }
 
+    fn try_recv(&mut self) -> Result<Option<Frame>, SfmError> {
+        match self.rx.lock().expect("inproc rx poisoned").try_recv() {
+            Ok(f) => Ok(Some(f)),
+            Err(TryRecvError::Empty) => Ok(None),
+            Err(TryRecvError::Disconnected) => Err(SfmError::Closed),
+        }
+    }
+
     fn name(&self) -> String {
         self.label.clone()
+    }
+
+    fn registration(&mut self) -> Option<Registration> {
+        Some(Registration::Queue {
+            rx: self.rx.clone(),
+            hook: self.hook.clone(),
+        })
     }
 }
 

@@ -33,6 +33,7 @@
 
 pub mod inproc;
 pub mod mux;
+pub mod reactor;
 pub mod tcp;
 pub mod throttle;
 
@@ -60,6 +61,15 @@ pub const FLAG_LAST: u8 = 1 << 1;
 /// connection's token bucket: a liveness signal must not be starved by
 /// the very congestion it is meant to see through.
 pub const KIND_HEARTBEAT: u16 = u16::MAX - 1;
+
+/// Frame kind of the connection-auth handshake (control plane): the very
+/// first frame a real-network `fedflare client` sends after connecting.
+/// Payload is `str site_name | str site_token` ([`crate::util::bytes`]
+/// encoding); the server verifies the token against its `--site-token`
+/// shared secret before the connection is admitted to the fleet — the
+/// first slice of authenticated site identity. Never routed to a job
+/// queue; in-process drivers skip the handshake entirely.
+pub const KIND_AUTH: u16 = u16::MAX - 2;
 
 /// One chunk of a streamed message.
 #[derive(Debug, Clone, PartialEq)]
@@ -169,6 +179,36 @@ pub trait Driver: Send {
     /// [`tcp::TcpDriver::try_clone`]) unblocks with `Closed`. Default:
     /// no-op — channel transports disconnect when their peers drop.
     fn shutdown(&mut self) {}
+
+    /// Non-blocking receive: `Ok(Some)` if a frame was ready, `Ok(None)`
+    /// if the transport is alive but has nothing complete buffered,
+    /// `Err(Closed)` once the peer is gone. Default: degrade to the
+    /// blocking [`Driver::recv`] (correct, but callers that need true
+    /// readiness — the reactor, the control dispatcher — only use
+    /// drivers that override this).
+    fn try_recv(&mut self) -> Result<Option<Frame>, SfmError> {
+        self.recv().map(Some)
+    }
+
+    /// Bounded-time best-effort send for reactor-driven control frames
+    /// (heartbeats): `Ok(false)` means the transport was busy and the
+    /// frame was *not* sent — the caller may retry on its next tick.
+    /// Unlike [`Driver::send`] this must never block indefinitely, so the
+    /// single reactor thread cannot be wedged by one stalled peer.
+    /// Default: the blocking send (fine for in-process channels with a
+    /// send window).
+    fn send_nowait(&mut self, frame: Frame) -> Result<bool, SfmError> {
+        self.send(frame).map(|_| true)
+    }
+
+    /// Describe this receive endpoint to the [`reactor`]: how readiness
+    /// is observed and frames are decoded without a dedicated thread.
+    /// `None` (the default) means the driver only supports blocking
+    /// receive; the mux then falls back to a legacy pump thread (see
+    /// [`reactor::spawn_blocking_pump`]).
+    fn registration(&mut self) -> Option<reactor::Registration> {
+        None
+    }
 }
 
 /// Split a payload into SFM frames of `chunk_bytes` (the paper's 1 MB).

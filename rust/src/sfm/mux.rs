@@ -4,19 +4,21 @@
 //!
 //! [`MuxConn`] wraps the two directions of a connection (send half +
 //! receive half; see [`crate::sfm::inproc::InProcDriver::recv_half`] and
-//! [`crate::sfm::tcp::TcpDriver::try_clone`]) and runs a **receive pump**
-//! thread that routes every inbound frame to a per-job queue.
-//! [`MuxConn::handle`] returns a [`MuxHandle`] — a per-job [`Driver`]
-//! view: `send` stamps the job id onto the frame (selecting the v3
-//! framing), `recv` pops the job's queue. A
+//! [`crate::sfm::tcp::TcpDriver::try_clone`]) and registers the receive
+//! half with the process-wide [`reactor`] — the event loop routes every
+//! inbound frame to a per-job queue through this connection's
+//! [`MuxSink`], so a mostly-idle connection costs a routing-table entry,
+//! not a thread. [`MuxConn::handle`] returns a [`MuxHandle`] — a per-job
+//! [`Driver`] view: `send` stamps the job id onto the frame (selecting
+//! the v3 framing), `recv` pops the job's queue. A
 //! [`Messenger`](crate::streaming::Messenger) built over a handle is
 //! therefore a per-job view over the shared demultiplexer, with zero
 //! changes above the driver seam.
 //!
-//! **The pump never blocks on a slow job** — per-job queues are
+//! **Routing never blocks on a slow job** — per-job queues are
 //! unbounded, deliberately: a bounded queue would let one job's parked
-//! consumer (e.g. a flow-gated gather worker) stall the pump and with it
-//! every other job on the connection — head-of-line blocking that can
+//! consumer (e.g. a flow-gated gather worker) stall the reactor and with
+//! it every other connection — head-of-line blocking that can
 //! deadlock two jobs gated across two connections. Memory stays bounded
 //! anyway because the FL protocol is strictly request/response per job
 //! channel: a client sends one result per task and is not tasked again
@@ -25,25 +27,37 @@
 //! *decoded* bound is still enforced by the gather's flow gate.
 //!
 //! **Throttling is per connection, not per job**: a bandwidth cap is one
-//! shared token bucket applied to the link as a whole, taken *outside*
-//! the send lock so a job waiting for budget never holds the connection
-//! hostage — one throttled job cannot starve another's frames, it can
-//! only compete for the shared budget.
+//! shared token bucket applied to the link as a whole. On the send path
+//! it is taken *outside* the driver lock so a job waiting for budget
+//! never holds the connection hostage. On the receive path the sink
+//! never blocks the reactor: data frames without budget are *parked*
+//! in arrival order and drained on timer-wheel deadlines
+//! ([`crate::sfm::throttle::TokenBucket::eta`]), with reads paused once
+//! the parking buffer is full (backpressure).
+//!
+//! **The priority lane**: [`KIND_HEARTBEAT`] frames and job-0 control
+//! frames (job_open / job_abort / register / bye) are processed the
+//! moment they arrive, ahead of any parked tensor data and exempt from
+//! the token bucket — a heartbeat can never queue behind a
+//! multi-megabyte transfer and false-suspect a healthy site. A per-job
+//! [`KIND_MUX_FIN`] stays *ordered* with its own job's data (an
+//! overtaking FIN would tear the tail off the stream it closes).
 //!
 //! **Aborts drain, they don't strand**: [`MuxConn::close_job`] severs a
 //! job's queue; frames already buffered and frames still arriving for a
 //! closed job are dropped and counted in
 //! [`mem::evicted_bytes`](crate::util::mem::evicted_bytes), so an aborted
-//! job's in-flight streams are drained instead of wedging the pump or
+//! job's in-flight streams are drained instead of wedging the routing or
 //! leaking staged bytes. A dropping [`MuxHandle`] half-closes its job
 //! ([`KIND_MUX_FIN`]) so the peer's side of the channel reads `Closed`
 //! instead of stalling on a vanished endpoint.
 
-use std::collections::{HashMap, HashSet};
-use std::sync::mpsc::{Receiver, Sender};
+use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
 
+use super::reactor::{self, FrameSink, SinkStatus};
 use super::throttle::TokenBucket;
 use super::{Driver, Frame, SfmError, FLAG_FIRST, FLAG_LAST, KIND_HEARTBEAT};
 use crate::util::mem;
@@ -68,13 +82,22 @@ struct MuxInner {
     bucket: Option<Arc<Mutex<TokenBucket>>>,
     state: Arc<MuxState>,
     label: String,
+    /// Reactor registration of the receive half (None when the legacy
+    /// blocking pump carries this connection).
+    token: Mutex<Option<reactor::Token>>,
+    /// Timer-wheel heartbeat task (see [`MuxConn::enable_heartbeat`]).
+    hb_timer: Mutex<Option<reactor::TimerId>>,
 }
 
 struct MuxState {
     table: Mutex<RouteTable>,
     /// When the peer's last [`KIND_HEARTBEAT`] frame arrived (recorded by
-    /// the receive pump; read by the fleet's liveness sweeps).
+    /// this connection's [`MuxSink`] on the reactor thread; read by the
+    /// fleet's liveness sweeps).
     heartbeat: Mutex<Option<Instant>>,
+    /// Invoked (on the reactor thread) after a frame lands in a job's
+    /// queue — the control dispatcher's wakeup signal.
+    on_deliver: Mutex<Option<Box<dyn Fn(u32) + Send>>>,
 }
 
 /// Stand-in transport installed by [`MuxConn::kill`]: every operation
@@ -108,13 +131,15 @@ struct RouteTable {
 }
 
 impl MuxConn {
-    /// Wrap one connection's two directions and start its receive pump.
+    /// Wrap one connection's two directions and register the receive half
+    /// with the process-wide reactor (drivers that cannot express
+    /// readiness fall back to a dedicated legacy pump thread).
     /// `rate_bps > 0` applies a shared whole-connection token bucket to
     /// both directions, with `burst_bytes` of burst capacity (the fleet
     /// uses one default chunk, matching the old per-link decorator).
     pub fn spawn(
         send_half: Box<dyn Driver>,
-        recv_half: Box<dyn Driver>,
+        mut recv_half: Box<dyn Driver>,
         rate_bps: u64,
         burst_bytes: u64,
     ) -> MuxConn {
@@ -130,19 +155,37 @@ impl MuxConn {
         let state = Arc::new(MuxState {
             table: Mutex::new(RouteTable::default()),
             heartbeat: Mutex::new(None),
+            on_deliver: Mutex::new(None),
         });
-        let pump_state = state.clone();
-        let pump_bucket = bucket.clone();
-        std::thread::Builder::new()
-            .name(format!("mux-pump-{label}"))
-            .spawn(move || pump(recv_half, pump_state, pump_bucket))
-            .expect("spawn mux pump");
+        // Parking cap before reads pause: a few bursts' worth, so the
+        // reactor keeps some frames staged for eta-paced delivery without
+        // buffering an unbounded backlog for a slow link.
+        let park_cap = bucket
+            .as_ref()
+            .map(|b| (b.lock().unwrap().capacity() as usize * 4).max(1 << 20))
+            .unwrap_or(usize::MAX);
+        let sink = Box::new(MuxSink {
+            state: state.clone(),
+            bucket: bucket.clone(),
+            parked: VecDeque::new(),
+            parked_bytes: 0,
+            park_cap,
+        });
+        let token = match recv_half.registration() {
+            Some(reg) => Some(reactor::global().register(reg, sink)),
+            None => {
+                reactor::spawn_blocking_pump(recv_half, sink);
+                None
+            }
+        };
         MuxConn {
             inner: Arc::new(MuxInner {
                 send_half: Mutex::new(send_half),
                 bucket,
                 state,
                 label,
+                token: Mutex::new(token),
+                hb_timer: Mutex::new(None),
             }),
         }
     }
@@ -155,7 +198,7 @@ impl MuxConn {
     /// per job id; a previously closed id is reopened. A handle taken on
     /// a connection whose transport already died reads `Closed`
     /// immediately (its queue is born severed) instead of parking on a
-    /// queue no pump will ever feed.
+    /// queue nothing will ever feed.
     pub fn handle(&self, job: u32) -> MuxHandle {
         let rx = {
             let mut t = self.inner.state.table.lock().unwrap();
@@ -205,39 +248,68 @@ impl MuxConn {
     /// cheap and unstarvable even when the link is saturated (the frame
     /// itself is empty).
     pub fn send_heartbeat(&self) -> Result<(), SfmError> {
-        let frame = Frame {
-            flags: FLAG_FIRST | FLAG_LAST,
-            kind: KIND_HEARTBEAT,
-            job: 0,
-            stream: 0,
-            seq: 0,
-            total: 1,
-            payload: Vec::new(),
-        };
-        self.inner.send_half.lock().unwrap().send(frame)
+        self.inner.send_half.lock().unwrap().send(heartbeat_frame())
+    }
+
+    /// Send [`KIND_HEARTBEAT`] frames every `interval` from the reactor's
+    /// timer wheel — replacing the old per-connection heartbeat thread.
+    /// The tick never blocks the reactor: a contended send lock or a full
+    /// socket buffer skips one beat (the suspect deadline is many
+    /// intervals wide). Stops on its own once the connection dies or the
+    /// last [`MuxConn`] clone drops; calling again replaces the previous
+    /// schedule.
+    pub fn enable_heartbeat(&self, interval: Duration) {
+        let weak = Arc::downgrade(&self.inner);
+        let id = reactor::global().add_interval(
+            interval,
+            Box::new(move || {
+                let Some(inner) = weak.upgrade() else {
+                    return false;
+                };
+                if inner.state.table.lock().unwrap().dead {
+                    return false;
+                }
+                if let Ok(mut sh) = inner.send_half.try_lock() {
+                    if sh.send_nowait(heartbeat_frame()).is_err() {
+                        return false;
+                    }
+                }
+                true
+            }),
+        );
+        let prev = self.inner.hb_timer.lock().unwrap().replace(id);
+        if let Some(prev) = prev {
+            reactor::global().cancel_interval(prev);
+        }
+    }
+
+    /// Install (or clear) a callback invoked on the reactor thread right
+    /// after an inbound frame lands in `job`'s queue — how a control
+    /// dispatcher learns there is something to read without a blocked
+    /// thread per connection. Keep it O(1): it runs inline in routing.
+    pub fn set_on_deliver(&self, f: Option<Box<dyn Fn(u32) + Send>>) {
+        *self.inner.state.on_deliver.lock().unwrap() = f;
     }
 
     /// Abruptly kill the connection (the churn harness's "the site's
-    /// process died"): the real transport is shut down and dropped — so
-    /// the peer observes a vanished endpoint, not a graceful bye — and
-    /// every local queue is severed so consumers read `Closed` now.
-    /// Idempotent.
+    /// process died"): the receive half is deregistered from the reactor
+    /// (half-decoded TCP bytes are evicted, parked frames drained), the
+    /// real transport is shut down and dropped — so the peer observes a
+    /// vanished endpoint, not a graceful bye — and every local queue is
+    /// severed so consumers read `Closed` now. Idempotent.
     pub fn kill(&self) {
+        if let Some(id) = self.inner.hb_timer.lock().unwrap().take() {
+            reactor::global().cancel_interval(id);
+        }
+        if let Some(tok) = self.inner.token.lock().unwrap().take() {
+            reactor::global().deregister(tok);
+        }
         {
             let mut sh = self.inner.send_half.lock().unwrap();
             sh.shutdown();
             *sh = Box::new(DeadDriver);
         }
-        let mut t = self.inner.state.table.lock().unwrap();
-        t.dead = true;
-        t.queues.clear();
-        let pending: Vec<Receiver<Frame>> = t.pending.drain().map(|(_, rx)| rx).collect();
-        drop(t);
-        for rx in pending {
-            while let Ok(f) = rx.try_recv() {
-                mem::track_evicted(f.payload.len());
-            }
-        }
+        sever_all(&self.inner.state);
     }
 
     fn send_tagged(&self, mut frame: Frame, job: u32) -> Result<(), SfmError> {
@@ -253,7 +325,13 @@ impl MuxConn {
 
 impl Drop for MuxInner {
     fn drop(&mut self) {
-        // unblock the pump if it is parked in recv on a cloned transport
+        if let Some(id) = self.hb_timer.lock().unwrap().take() {
+            reactor::global().cancel_interval(id);
+        }
+        if let Some(tok) = self.token.lock().unwrap().take() {
+            reactor::global().deregister(tok);
+        }
+        // unblock a legacy pump parked in recv on a cloned transport
         // handle of the same connection (TCP); channel transports
         // disconnect on their own once this send half drops
         self.send_half.lock().unwrap().shutdown();
@@ -269,6 +347,33 @@ fn close_entry(t: &mut RouteTable, job: u32) {
         while let Ok(f) = rx.try_recv() {
             mem::track_evicted(f.payload.len());
         }
+    }
+}
+
+/// Sever every queue: the transport is gone, all consumers read `Closed`
+/// and unclaimed buffered frames are drained + counted.
+fn sever_all(state: &MuxState) {
+    let mut t = state.table.lock().unwrap();
+    t.dead = true;
+    t.queues.clear();
+    let pending: Vec<Receiver<Frame>> = t.pending.drain().map(|(_, rx)| rx).collect();
+    drop(t);
+    for rx in pending {
+        while let Ok(f) = rx.try_recv() {
+            mem::track_evicted(f.payload.len());
+        }
+    }
+}
+
+fn heartbeat_frame() -> Frame {
+    Frame {
+        flags: FLAG_FIRST | FLAG_LAST,
+        kind: KIND_HEARTBEAT,
+        job: 0,
+        stream: 0,
+        seq: 0,
+        total: 1,
+        payload: Vec::new(),
     }
 }
 
@@ -293,72 +398,166 @@ fn take_shared(bucket: &Arc<Mutex<TokenBucket>>, n: usize) {
     }
 }
 
-/// The receive pump: routes inbound frames by job id until the transport
-/// closes, then severs every queue.
-fn pump(
-    mut recv_half: Box<dyn Driver>,
+/// This connection's routing logic, driven by the reactor: routes each
+/// inbound frame to its job queue, timestamps heartbeats, applies the
+/// receive-side bandwidth cap by *parking* data frames (never blocking
+/// the reactor thread), and gives control frames the priority lane the
+/// module docs describe.
+struct MuxSink {
     state: Arc<MuxState>,
     bucket: Option<Arc<Mutex<TokenBucket>>>,
-) {
-    loop {
-        let frame = match recv_half.recv() {
-            Ok(f) => f,
-            Err(_) => break,
-        };
-        if frame.kind == KIND_HEARTBEAT {
-            // liveness control frame: record its arrival for the deadline
-            // sweeps and consume it — heartbeats never reach a job queue
-            // and never charge the token bucket (see send_heartbeat)
-            *state.heartbeat.lock().unwrap() = Some(Instant::now());
-            continue;
-        }
-        if let Some(b) = &bucket {
-            take_shared(b, frame.payload.len().max(1));
-        }
+    /// Data frames awaiting receive budget, in arrival order, each with
+    /// how many bytes were already charged to the bucket (frames larger
+    /// than the burst are charged in capacity-sized installments, like
+    /// the blocking send path in [`take_shared`]).
+    parked: VecDeque<(Frame, usize)>,
+    parked_bytes: usize,
+    /// Once `parked_bytes` exceeds this, reads pause (transport
+    /// backpressure) until the backlog drains.
+    park_cap: usize,
+}
+
+impl MuxSink {
+    /// Route one admitted frame (ordering already settled). FINs sever
+    /// their job here so they stay ordered behind that job's parked data.
+    fn deliver(&self, frame: Frame) {
         let job = frame.job;
-        if frame.kind == KIND_MUX_FIN {
-            // peer half-closed this job: sever its queue so a blocked
-            // consumer observes Closed instead of waiting forever
-            let mut t = state.table.lock().unwrap();
-            close_entry(&mut t, job);
-            continue;
-        }
-        // route; the send is non-blocking (unbounded queue — see module
-        // docs for why the pump must never stall on one job)
-        let mut t = state.table.lock().unwrap();
-        if t.dead {
-            // the connection was killed locally: drain, never re-route
-            mem::track_evicted(frame.payload.len());
-            continue;
-        }
-        if t.closed.contains(&job) {
-            mem::track_evicted(frame.payload.len());
-            continue;
-        }
-        let tx = match t.queues.get(&job) {
-            Some(tx) => tx.clone(),
-            None => {
-                let (tx, rx) = std::sync::mpsc::channel();
-                t.queues.insert(job, tx.clone());
-                t.pending.insert(job, rx);
-                tx
-            }
-        };
         let n = frame.payload.len();
-        if tx.send(frame).is_err() {
-            // handle dropped mid-stream: the job is gone; drain it
-            t.queues.remove(&job);
-            t.closed.insert(job);
-            mem::track_evicted(n);
+        let mut delivered = false;
+        {
+            let mut t = self.state.table.lock().unwrap();
+            if frame.kind == KIND_MUX_FIN {
+                // peer half-closed this job: sever its queue so a blocked
+                // consumer observes Closed instead of waiting forever
+                close_entry(&mut t, job);
+                return;
+            }
+            if t.dead || t.closed.contains(&job) {
+                // killed locally / job aborted: drain, never re-route
+                mem::track_evicted(n);
+                return;
+            }
+            let tx = match t.queues.get(&job) {
+                Some(tx) => tx.clone(),
+                None => {
+                    let (tx, rx) = std::sync::mpsc::channel();
+                    t.queues.insert(job, tx.clone());
+                    t.pending.insert(job, rx);
+                    tx
+                }
+            };
+            if tx.send(frame).is_err() {
+                // handle dropped mid-stream: the job is gone; drain it
+                t.queues.remove(&job);
+                t.closed.insert(job);
+                mem::track_evicted(n);
+            } else {
+                delivered = true;
+            }
+        }
+        if delivered {
+            if let Some(cb) = self.state.on_deliver.lock().unwrap().as_ref() {
+                cb(job);
+            }
         }
     }
-    let mut t = state.table.lock().unwrap();
-    t.dead = true;
-    t.queues.clear();
-    let pending: Vec<Receiver<Frame>> = t.pending.drain().map(|(_, rx)| rx).collect();
-    drop(t);
-    for rx in pending {
-        while let Ok(f) = rx.try_recv() {
+
+    /// The verdict matching the current backlog: `Ready` when nothing is
+    /// parked, otherwise a resume deadline at the front frame's bandwidth
+    /// eta (pausing reads once the backlog passes the cap).
+    fn backoff(&mut self) -> SinkStatus {
+        let Some((front, charged)) = self.parked.front() else {
+            return SinkStatus::Ready;
+        };
+        let bucket = self.bucket.as_ref().expect("parked implies bucket");
+        let mut b = bucket.lock().unwrap();
+        let need = front.payload.len().max(1) - charged;
+        let want = (need as u64).min(b.capacity()) as usize;
+        SinkStatus::Resume {
+            at: Instant::now() + b.eta(want),
+            pause_reads: self.parked_bytes >= self.park_cap,
+        }
+    }
+}
+
+/// Charge a frame's bytes to the bucket in burst-sized installments
+/// without blocking; `charged` tracks progress across attempts. Returns
+/// `true` once the frame is fully paid for.
+fn charge(bucket: &Arc<Mutex<TokenBucket>>, frame: &Frame, charged: &mut usize) -> bool {
+    let need = frame.payload.len().max(1);
+    while *charged < need {
+        let mut b = bucket.lock().unwrap();
+        let want = ((need - *charged) as u64).min(b.capacity()) as usize;
+        if !b.try_take(want) {
+            return false;
+        }
+        *charged += want;
+    }
+    true
+}
+
+impl FrameSink for MuxSink {
+    fn on_frame(&mut self, frame: Frame) -> SinkStatus {
+        if frame.kind == KIND_HEARTBEAT {
+            // priority lane: record its arrival for the deadline sweeps
+            // and consume it — heartbeats never reach a job queue, never
+            // charge the bucket, never wait behind parked data
+            *self.state.heartbeat.lock().unwrap() = Some(Instant::now());
+            return self.backoff();
+        }
+        if frame.job == 0 {
+            // priority lane: job-0 control messages (job_open / abort /
+            // register / bye) route immediately, exempt from the bucket
+            self.deliver(frame);
+            return self.backoff();
+        }
+        let mut charged = 0usize;
+        if self.parked.is_empty() {
+            match &self.bucket {
+                None => {
+                    self.deliver(frame);
+                    return SinkStatus::Ready;
+                }
+                Some(bucket) => {
+                    if charge(bucket, &frame, &mut charged) {
+                        self.deliver(frame);
+                        return self.backoff();
+                    }
+                }
+            }
+        }
+        // no budget (or already a backlog): park in arrival order
+        self.parked_bytes += frame.payload.len();
+        self.parked.push_back((frame, charged));
+        self.backoff()
+    }
+
+    fn on_resume(&mut self) -> SinkStatus {
+        loop {
+            let Some((frame, charged)) = self.parked.front_mut() else {
+                break;
+            };
+            let bucket = self.bucket.as_ref().expect("parked implies bucket");
+            if !charge(bucket, frame, charged) {
+                break;
+            }
+            let (frame, _) = self.parked.pop_front().unwrap();
+            self.parked_bytes -= frame.payload.len();
+            self.deliver(frame);
+        }
+        self.backoff()
+    }
+
+    fn on_closed(&mut self, _err: SfmError) {
+        sever_all(&self.state);
+    }
+}
+
+impl Drop for MuxSink {
+    fn drop(&mut self) {
+        // deregistered (kill / shutdown) with frames still parked: they
+        // are dropped here — account them like any other abort drain
+        for (f, _) in &self.parked {
             mem::track_evicted(f.payload.len());
         }
     }
@@ -385,6 +584,20 @@ impl Driver for MuxHandle {
 
     fn recv(&mut self) -> Result<Frame, SfmError> {
         self.rx.recv().map_err(|_| SfmError::Closed)
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Frame>, SfmError> {
+        match self.rx.try_recv() {
+            Ok(f) => Ok(Some(f)),
+            Err(TryRecvError::Empty) => {
+                if self.conn.is_dead() {
+                    Err(SfmError::Closed)
+                } else {
+                    Ok(None)
+                }
+            }
+            Err(TryRecvError::Disconnected) => Err(SfmError::Closed),
+        }
     }
 
     fn name(&self) -> String {

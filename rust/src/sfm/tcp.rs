@@ -17,10 +17,21 @@ use std::time::Duration;
 use super::{Driver, Frame, SfmError};
 
 /// Blocking TCP driver (one per connection endpoint).
+///
+/// When the receive half of a connection is handed to the
+/// [`crate::sfm::reactor`] (see [`Driver::registration`]), the reactor
+/// switches the socket to non-blocking mode — and because `try_clone`
+/// handles share one file description, the *send* half becomes
+/// non-blocking too. The send path therefore retries `WouldBlock`
+/// internally, preserving blocking semantics for callers either way.
 pub struct TcpDriver {
     stream: TcpStream,
     verify_crc: bool,
     label: String,
+    /// Set by [`TcpDriver::set_read_timeout`]: when a deadline is
+    /// configured, `WouldBlock` on the read path means "timed out" and is
+    /// surfaced instead of retried.
+    read_timeout: Option<Duration>,
 }
 
 impl TcpDriver {
@@ -33,6 +44,7 @@ impl TcpDriver {
             stream,
             verify_crc,
             label,
+            read_timeout: None,
         })
     }
 
@@ -44,12 +56,14 @@ impl TcpDriver {
             stream,
             verify_crc,
             label,
+            read_timeout: None,
         })
     }
 
     /// Set a read timeout (None = block forever).
     pub fn set_read_timeout(&mut self, d: Option<Duration>) -> Result<(), SfmError> {
         self.stream.set_read_timeout(d)?;
+        self.read_timeout = d;
         Ok(())
     }
 
@@ -61,6 +75,7 @@ impl TcpDriver {
             stream: self.stream.try_clone()?,
             verify_crc: self.verify_crc,
             label: self.label.clone(),
+            read_timeout: self.read_timeout,
         })
     }
 
@@ -69,17 +84,57 @@ impl TcpDriver {
     }
 }
 
+/// Encode a frame with its `u32 len` wire prefix in one buffer (a single
+/// write keeps the length/body atomic even over a shared socket clone).
+fn wire_bytes(frame: &Frame) -> Vec<u8> {
+    let bytes = frame.encode();
+    let mut wire = Vec::with_capacity(4 + bytes.len());
+    wire.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
+    wire.extend_from_slice(&bytes);
+    wire
+}
+
 impl Driver for TcpDriver {
     fn send(&mut self, frame: Frame) -> Result<(), SfmError> {
-        let bytes = frame.encode();
-        self.stream.write_all(&(bytes.len() as u32).to_le_bytes())?;
-        self.stream.write_all(&bytes)?;
+        let wire = wire_bytes(&frame);
+        write_all_retrying(&mut self.stream, &wire)?;
         Ok(())
+    }
+
+    fn send_nowait(&mut self, frame: Frame) -> Result<bool, SfmError> {
+        let wire = wire_bytes(&frame);
+        // First attempt: if the socket buffer is completely full the
+        // write returns WouldBlock with zero bytes consumed — the frame
+        // is safely not-sent and the caller retries next tick. Only a
+        // *partial* first write commits us to finishing (abandoning
+        // mid-frame would corrupt the stream) — rare, because it needs
+        // the buffer to have 1..len-1 free bytes exactly.
+        match self.stream.write(&wire) {
+            Ok(0) => Err(SfmError::Closed),
+            Ok(n) if n == wire.len() => Ok(true),
+            Ok(n) => {
+                write_all_retrying(&mut self.stream, &wire[n..])?;
+                Ok(true)
+            }
+            Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(false),
+            Err(e) if e.kind() == std::io::ErrorKind::Interrupted => Ok(false),
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    std::io::ErrorKind::ConnectionReset
+                        | std::io::ErrorKind::ConnectionAborted
+                        | std::io::ErrorKind::BrokenPipe
+                ) =>
+            {
+                Err(SfmError::Closed)
+            }
+            Err(e) => Err(SfmError::Io(e)),
+        }
     }
 
     fn recv(&mut self) -> Result<Frame, SfmError> {
         let mut len_buf = [0u8; 4];
-        read_exact_or_closed(&mut self.stream, &mut len_buf)?;
+        self.read_exact_or_closed(&mut len_buf)?;
         let len = u32::from_le_bytes(len_buf) as usize;
         // sanity bound: a frame is chunk + ~40B header; 1 GiB guards
         // against a desynchronized stream being misread as a huge length
@@ -87,7 +142,7 @@ impl Driver for TcpDriver {
             return Err(SfmError::Decode(format!("implausible frame length {len}")));
         }
         let mut buf = vec![0u8; len];
-        read_exact_or_closed(&mut self.stream, &mut buf)?;
+        self.read_exact_or_closed(&mut buf)?;
         Frame::decode(&buf, self.verify_crc)
     }
 
@@ -98,20 +153,79 @@ impl Driver for TcpDriver {
     fn shutdown(&mut self) {
         let _ = self.stream.shutdown(std::net::Shutdown::Both);
     }
+
+    fn registration(&mut self) -> Option<crate::sfm::reactor::Registration> {
+        let stream = self.stream.try_clone().ok()?;
+        Some(crate::sfm::reactor::Registration::Tcp {
+            stream,
+            verify_crc: self.verify_crc,
+        })
+    }
 }
 
-fn read_exact_or_closed(stream: &mut TcpStream, buf: &mut [u8]) -> Result<(), SfmError> {
-    match stream.read_exact(buf) {
-        Ok(()) => Ok(()),
-        Err(e)
-            if e.kind() == std::io::ErrorKind::UnexpectedEof
-                || e.kind() == std::io::ErrorKind::ConnectionReset
-                || e.kind() == std::io::ErrorKind::ConnectionAborted =>
-        {
-            Err(SfmError::Closed)
+impl TcpDriver {
+    /// `read_exact` that tracks its own offset, so `WouldBlock` from a
+    /// reactor-shared (non-blocking) socket can be retried without losing
+    /// bytes. When a read timeout is configured, `WouldBlock`/`TimedOut`
+    /// is surfaced as an I/O error instead (timeout semantics).
+    fn read_exact_or_closed(&mut self, buf: &mut [u8]) -> Result<(), SfmError> {
+        use std::io::ErrorKind;
+        let mut off = 0;
+        while off < buf.len() {
+            match self.stream.read(&mut buf[off..]) {
+                Ok(0) => return Err(SfmError::Closed),
+                Ok(n) => off += n,
+                Err(e) if e.kind() == ErrorKind::Interrupted => {}
+                Err(e)
+                    if matches!(e.kind(), ErrorKind::WouldBlock | ErrorKind::TimedOut)
+                        && self.read_timeout.is_none() =>
+                {
+                    std::thread::sleep(Duration::from_micros(500));
+                }
+                Err(e)
+                    if matches!(
+                        e.kind(),
+                        ErrorKind::UnexpectedEof
+                            | ErrorKind::ConnectionReset
+                            | ErrorKind::ConnectionAborted
+                    ) =>
+                {
+                    return Err(SfmError::Closed);
+                }
+                Err(e) => return Err(SfmError::Io(e)),
+            }
         }
-        Err(e) => Err(SfmError::Io(e)),
+        Ok(())
     }
+}
+
+/// `write_all` that retries `WouldBlock` (non-blocking shared socket)
+/// with a short sleep, preserving blocking-send semantics.
+fn write_all_retrying(stream: &mut TcpStream, buf: &[u8]) -> Result<(), SfmError> {
+    use std::io::ErrorKind;
+    let mut off = 0;
+    while off < buf.len() {
+        match stream.write(&buf[off..]) {
+            Ok(0) => return Err(SfmError::Closed),
+            Ok(n) => off += n,
+            Err(e) if e.kind() == ErrorKind::WouldBlock => {
+                std::thread::sleep(Duration::from_micros(500));
+            }
+            Err(e) if e.kind() == ErrorKind::Interrupted => {}
+            Err(e)
+                if matches!(
+                    e.kind(),
+                    ErrorKind::ConnectionReset
+                        | ErrorKind::ConnectionAborted
+                        | ErrorKind::BrokenPipe
+                ) =>
+            {
+                return Err(SfmError::Closed);
+            }
+            Err(e) => return Err(SfmError::Io(e)),
+        }
+    }
+    Ok(())
 }
 
 /// Accept loop helper: bind, then hand each accepted connection (as a

@@ -68,6 +68,19 @@ impl TokenBucket {
     pub fn capacity(&self) -> u64 {
         self.capacity as u64
     }
+
+    /// How long until `n` bytes of budget will have accumulated — the
+    /// reactor's throttle-resume deadline, replacing the blocking
+    /// [`TokenBucket::take`] sleep loop with a timer. Clamped like the
+    /// blocking path so wakeups stay sane.
+    pub fn eta(&mut self, n: usize) -> Duration {
+        self.refill();
+        let deficit = (n as f64).min(self.capacity) - self.tokens;
+        if deficit <= 0.0 {
+            return Duration::ZERO;
+        }
+        Duration::from_secs_f64((deficit / self.rate_bps).clamp(0.0005, 0.25))
+    }
 }
 
 /// Driver decorator applying a send-side bandwidth cap.

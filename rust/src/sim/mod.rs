@@ -9,9 +9,13 @@
 //! applies to the connection as a whole (one token bucket per link), so
 //! concurrent jobs share a slow site's budget instead of each minting
 //! their own. Client processes are modeled by
-//! [`MultiJobRuntime`](crate::executor::MultiJobRuntime) threads: one per
-//! connection, servicing `job_open`/`job_abort` control messages and
-//! running one task loop (with its own executor) per active job.
+//! [`MultiJobRuntime`](crate::executor::MultiJobRuntime) cells serviced
+//! by **one** fleet-wide control-dispatcher thread: the reactor's
+//! delivery callback marks a client dirty when a control frame lands,
+//! the dispatcher drains its `job_open`/`job_abort` messages
+//! non-blockingly, and only *active* job task loops (one per open job
+//! per participating client) own threads — so an idle 10 000-client
+//! fleet costs two threads, not 20 000.
 //!
 //! [`run_job`] is now a thin wrapper: connect a fleet of the job's
 //! clients, run the job over it
@@ -30,11 +34,11 @@
 //! `fedflare client`) shares the same per-job code paths over dedicated
 //! (unmuxed) connections.
 
-use std::collections::HashMap;
+use std::collections::{BTreeSet, HashMap};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::Sender;
-use std::sync::{Arc, Mutex, RwLock, Weak};
-use std::time::Duration;
+use std::sync::{Arc, Condvar, Mutex, RwLock, Weak};
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, bail, Context, Result};
 
@@ -44,7 +48,7 @@ use crate::executor::{JobDirectory, JobStart, MultiJobRuntime};
 use crate::fleet::{ClientState, Registry};
 use crate::message::FlMessage;
 use crate::sfm::mux::{JobTagged, MuxConn};
-use crate::sfm::{inproc, tcp, Driver, EvictionPolicy};
+use crate::sfm::{inproc, reactor, tcp, Driver, EvictionPolicy};
 use crate::streaming::Messenger;
 use crate::tensor::TensorDict;
 use crate::util::json::Json;
@@ -82,8 +86,156 @@ struct FleetConn {
     control: Mutex<Messenger>,
 }
 
-/// A fleet client-runtime thread, by client name.
-type FleetClientThread = (String, std::thread::JoinHandle<Result<()>>);
+/// One simulated client process: the runtime cell serviced by the
+/// fleet's control dispatcher. The runtime is kept whole (instead of
+/// being consumed by [`MultiJobRuntime::run`]) so control messages can
+/// be fed to it piecewise as the reactor delivers them; `loops` holds
+/// the task-loop threads of its currently open jobs — the only
+/// per-client threads left, and only while a job is active.
+struct ClientCell {
+    runtime: MultiJobRuntime,
+    control: Messenger,
+    /// The client-side mux, kept so churn can sever the client end
+    /// deterministically instead of waiting on peer-drop detection.
+    mux: MuxConn,
+    loops: Vec<(u32, std::thread::JoinHandle<()>)>,
+    done: bool,
+}
+
+/// The fleet's control dispatcher: a dirty-set + condvar fed by the
+/// reactor's per-connection delivery callbacks (`job == 0` ⇒ a control
+/// frame landed for that client), drained by one `fleet-dispatch`
+/// thread servicing every client cell. Replaces the old
+/// one-thread-per-client `fleet-{name}` runtime loops.
+struct Dispatch {
+    cells: Mutex<HashMap<usize, Arc<Mutex<ClientCell>>>>,
+    /// (dirty client indexes, stop flag).
+    dirty: Mutex<(BTreeSet<usize>, bool)>,
+    /// Deferred membership-kick request (see [`Dispatch::request_kick`]).
+    kick: AtomicBool,
+    cv: Condvar,
+}
+
+impl Dispatch {
+    fn new() -> Arc<Dispatch> {
+        Arc::new(Dispatch {
+            cells: Mutex::new(HashMap::new()),
+            dirty: Mutex::new((BTreeSet::new(), false)),
+            kick: AtomicBool::new(false),
+            cv: Condvar::new(),
+        })
+    }
+
+    /// Mark one client as having pending control traffic.
+    fn mark(&self, idx: usize) {
+        self.dirty.lock().unwrap().0.insert(idx);
+        self.cv.notify_one();
+    }
+
+    /// Mark every cell dirty (the shutdown drain). Never holds the cell
+    /// map and dirty locks together — the dispatcher acquires them in
+    /// the opposite order.
+    fn mark_all(&self) {
+        let keys: Vec<usize> = self.cells.lock().unwrap().keys().copied().collect();
+        let mut d = self.dirty.lock().unwrap();
+        d.0.extend(keys);
+        drop(d);
+        self.cv.notify_one();
+    }
+
+    /// Ask the dispatcher to re-run the fleet's membership callback.
+    /// The liveness sweep runs *on the reactor thread* and must never
+    /// block on control-plane sends, so it hands the (possibly
+    /// blocking) scheduler admission kick over here.
+    fn request_kick(&self) {
+        self.kick.store(true, Ordering::Relaxed);
+        self.cv.notify_one();
+    }
+
+    fn stop(&self) {
+        self.dirty.lock().unwrap().1 = true;
+        self.cv.notify_one();
+    }
+
+    fn remove_cell(&self, idx: usize) -> Option<Arc<Mutex<ClientCell>>> {
+        self.cells.lock().unwrap().remove(&idx)
+    }
+
+    fn all_done(&self) -> bool {
+        self.cells
+            .lock()
+            .unwrap()
+            .values()
+            .all(|c| c.lock().unwrap().done)
+    }
+}
+
+/// The `fleet-dispatch` thread body: wait for dirty marks (or a 200 ms
+/// sweep tick, which catches any delivery that raced cell
+/// installation), service each marked cell, and run deferred
+/// membership kicks outside the reactor thread.
+fn dispatch_loop(dispatch: Arc<Dispatch>, fleet: Weak<Fleet>) {
+    loop {
+        let batch: Vec<usize> = {
+            let mut d = dispatch.dirty.lock().unwrap();
+            loop {
+                if d.1 {
+                    return;
+                }
+                if !d.0.is_empty() || dispatch.kick.load(Ordering::Relaxed) {
+                    break std::mem::take(&mut d.0).into_iter().collect();
+                }
+                let (guard, timeout) = dispatch
+                    .cv
+                    .wait_timeout(d, Duration::from_millis(200))
+                    .unwrap();
+                d = guard;
+                if timeout.timed_out() {
+                    drop(d);
+                    break dispatch.cells.lock().unwrap().keys().copied().collect();
+                }
+            }
+        };
+        for idx in batch {
+            let cell = dispatch.cells.lock().unwrap().get(&idx).cloned();
+            if let Some(cell) = cell {
+                service_cell(&mut cell.lock().unwrap());
+            }
+        }
+        if dispatch.kick.swap(false, Ordering::Relaxed) {
+            if let Some(fleet) = fleet.upgrade() {
+                fleet.notify_membership();
+            }
+        }
+    }
+}
+
+/// Drain one client cell's pending control messages. Nonblocking:
+/// returns as soon as the channel is empty or the client is done.
+fn service_cell(cell: &mut ClientCell) {
+    while !cell.done {
+        match cell.control.recv_msg_nonblocking() {
+            Ok(Some(msg)) => match cell.runtime.handle_control(msg, &mut cell.loops) {
+                Ok(true) => {}
+                Ok(false) => finish_cell(cell),
+                Err(e) => {
+                    log::warn!("fleet client {}: {e}", cell.runtime.name());
+                    finish_cell(cell);
+                }
+            },
+            Ok(None) => return,
+            // transport severed (fleet shutdown or a churn kill): unwind
+            Err(_) => finish_cell(cell),
+        }
+    }
+}
+
+/// A cell's `bye` path: close and join its job task loops.
+fn finish_cell(cell: &mut ClientCell) {
+    cell.done = true;
+    let loops = std::mem::take(&mut cell.loops);
+    cell.runtime.shutdown_jobs(loops);
+}
 
 /// Everything the fleet needs to re-deploy a running job onto a client
 /// that dropped and rejoined: the job's config plus a shareable executor
@@ -114,12 +266,12 @@ type RejoinWork = (
 
 /// A connected, persistent client fleet (see module docs): the shared
 /// transports jobs multiplex over, the in-process [`JobDirectory`], the
-/// client-runtime threads standing in for client processes — and, since
-/// the control-plane refactor, **elastic membership**: clients may be
-/// killed, revived, or added while jobs run
-/// ([`Fleet::kill_client`] / [`Fleet::revive_client`] /
+/// client-runtime cells standing in for client processes (serviced by
+/// one dispatcher thread) — and, since the control-plane refactor,
+/// **elastic membership**: clients may be killed, revived, or added
+/// while jobs run ([`Fleet::kill_client`] / [`Fleet::revive_client`] /
 /// [`Fleet::add_client`] — the churn harness), liveness is observed via
-/// heartbeats swept by a fleet-owned sweeper thread into the shared
+/// heartbeats swept by a reactor timer-wheel task into the shared
 /// [`Registry`], and a rejoining client is re-deployed into its running
 /// jobs through the registered [`RejoinSpec`]s.
 pub struct Fleet {
@@ -131,11 +283,13 @@ pub struct Fleet {
     cfg: FleetConfig,
     directory: Arc<JobDirectory>,
     registry: Arc<Registry>,
-    client_threads: Mutex<Vec<FleetClientThread>>,
+    /// Client cells + the dirty set their control dispatcher drains.
+    dispatch: Arc<Dispatch>,
+    dispatcher: Mutex<Option<std::thread::JoinHandle<()>>>,
     /// TCP fleets keep their listener so clients can (re)join later.
     listener: Option<Mutex<std::net::TcpListener>>,
     sweep_stop: Arc<AtomicBool>,
-    sweeper: Mutex<Option<std::thread::JoinHandle<()>>>,
+    sweep_timer: Mutex<Option<reactor::TimerId>>,
     plumbing: Mutex<JobPlumbing>,
     /// Serializes kill/revive/add: registry index allocation and the
     /// conns-slot update must agree, and they happen under different
@@ -204,8 +358,8 @@ impl Fleet {
         let verify = stream.verify_crc;
         let burst = crate::DEFAULT_CHUNK_BYTES as u64;
         let hb = Duration::from_secs_f64(cfg.heartbeat_interval_s.max(0.0));
+        let dispatch = Dispatch::new();
         let mut conns = Vec::with_capacity(specs.len());
-        let mut threads = Vec::with_capacity(specs.len());
         let mut listener = None;
         match kind {
             DriverKind::InProc => {
@@ -213,13 +367,7 @@ impl Fleet {
                     let idx = registry.join(&spec.name);
                     debug_assert_eq!(idx, i);
                     let (server_mux, client_mux) = connect_inproc_pair(spec, window, burst);
-                    threads.push(spawn_fleet_client(
-                        spec,
-                        i,
-                        client_mux,
-                        directory.clone(),
-                        hb,
-                    )?);
+                    deploy_client(&dispatch, spec, i, client_mux, directory.clone(), hb);
                     conns.push(Arc::new(FleetConn::new(spec, server_mux)));
                     registry.connected(i);
                 }
@@ -230,13 +378,7 @@ impl Fleet {
                     let idx = registry.join(&spec.name);
                     debug_assert_eq!(idx, i);
                     let (server_mux, client_mux) = connect_tcp_pair(&l, spec, verify, burst)?;
-                    threads.push(spawn_fleet_client(
-                        spec,
-                        i,
-                        client_mux,
-                        directory.clone(),
-                        hb,
-                    )?);
+                    deploy_client(&dispatch, spec, i, client_mux, directory.clone(), hb);
                     conns.push(Arc::new(FleetConn::new(spec, server_mux)));
                     registry.connected(i);
                 }
@@ -252,16 +394,24 @@ impl Fleet {
             cfg,
             directory,
             registry,
-            client_threads: Mutex::new(threads),
+            dispatch,
+            dispatcher: Mutex::new(None),
             listener,
             sweep_stop: Arc::new(AtomicBool::new(false)),
-            sweeper: Mutex::new(None),
+            sweep_timer: Mutex::new(None),
             plumbing: Mutex::new(JobPlumbing::default()),
             churn: Mutex::new(()),
             on_membership: Mutex::new(None),
         });
+        let d = fleet.dispatch.clone();
+        let weak = Arc::downgrade(&fleet);
+        let handle = std::thread::Builder::new()
+            .name("fleet-dispatch".to_string())
+            .spawn(move || dispatch_loop(d, weak))
+            .context("spawn fleet dispatcher")?;
+        *fleet.dispatcher.lock().unwrap() = Some(handle);
         if hb > Duration::ZERO {
-            spawn_sweeper(&fleet);
+            start_sweep(&fleet);
         }
         Ok(fleet)
     }
@@ -386,7 +536,9 @@ impl Fleet {
     }
 
     /// Register the membership-change callback (at most one; the
-    /// scheduler's admission kick). Invoked from sweeper/churn threads.
+    /// scheduler's admission kick). Invoked from the dispatcher and
+    /// churn entry points — never on the reactor thread, so it may
+    /// block (e.g. on control-plane sends).
     pub fn set_membership_listener(&self, cb: Box<dyn Fn() + Send>) {
         *self.on_membership.lock().unwrap() = Some(cb);
     }
@@ -414,16 +566,15 @@ impl Fleet {
         };
         conn.mux.kill();
         self.registry.suspect(idx);
-        // reap the dead runtime thread so a later revive can respawn it
-        let thread = {
-            let mut threads = self.client_threads.lock().unwrap();
-            threads
-                .iter()
-                .position(|(n, _)| n == name)
-                .map(|p| threads.remove(p))
-        };
-        if let Some((_, t)) = thread {
-            let _ = t.join();
+        // tear down the client side: sever its mux too (peer-drop
+        // detection would get there, but churn wants determinism) and
+        // join its task loops so a later revive starts clean
+        if let Some(cell) = self.dispatch.remove_cell(idx) {
+            let mut cell = cell.lock().unwrap();
+            if !cell.done {
+                cell.mux.kill();
+                finish_cell(&mut cell);
+            }
         }
         self.notify_membership();
         Ok(())
@@ -447,8 +598,7 @@ impl Fleet {
         let idx = self.registry.join(&spec.name);
         let (server_mux, client_mux) = self.connect_one(&spec)?;
         let hb = Duration::from_secs_f64(self.cfg.heartbeat_interval_s.max(0.0));
-        let thread = spawn_fleet_client(&spec, idx, client_mux, self.directory.clone(), hb)?;
-        self.client_threads.lock().unwrap().push(thread);
+        deploy_client(&self.dispatch, &spec, idx, client_mux, self.directory.clone(), hb);
         {
             let mut conns = self.conns.write().unwrap();
             conns[idx] = Arc::new(FleetConn::new(&spec, server_mux));
@@ -473,8 +623,7 @@ impl Fleet {
         let idx = self.registry.join(&spec.name);
         let (server_mux, client_mux) = self.connect_one(spec)?;
         let hb = Duration::from_secs_f64(self.cfg.heartbeat_interval_s.max(0.0));
-        let thread = spawn_fleet_client(spec, idx, client_mux, self.directory.clone(), hb)?;
-        self.client_threads.lock().unwrap().push(thread);
+        deploy_client(&self.dispatch, spec, idx, client_mux, self.directory.clone(), hb);
         {
             let mut conns = self.conns.write().unwrap();
             debug_assert_eq!(conns.len(), idx);
@@ -606,73 +755,86 @@ impl Fleet {
         ))
     }
 
-    /// End the fleet: stop the sweeper, bye every control channel, then
-    /// join the client runtimes (each joins its job loops first).
-    /// Idempotent.
+    /// End the fleet: cancel the liveness sweep, bye every control
+    /// channel, let the dispatcher drain the byes (each cell joins its
+    /// job loops), then stop the dispatcher and force-finish anything
+    /// left (e.g. clients whose transport already died). Idempotent.
     pub fn shutdown(&self) {
         self.sweep_stop.store(true, Ordering::Relaxed);
-        if let Some(h) = self.sweeper.lock().unwrap().take() {
-            let _ = h.join();
+        if let Some(id) = self.sweep_timer.lock().unwrap().take() {
+            reactor::global().cancel_interval(id);
         }
         let conns: Vec<Arc<FleetConn>> = self.conns.read().unwrap().clone();
         for conn in &conns {
             let _ = conn.control.lock().unwrap().send_msg(&FlMessage::bye());
         }
-        let mut threads = self.client_threads.lock().unwrap();
-        for (name, t) in threads.drain(..) {
-            match t.join() {
-                Ok(Ok(())) => {}
-                Ok(Err(e)) => log::warn!("fleet client {name}: {e}"),
-                Err(_) => log::warn!("fleet client {name}: panicked"),
+        let deadline = Instant::now() + Duration::from_secs(10);
+        while !self.dispatch.all_done() && Instant::now() < deadline {
+            self.dispatch.mark_all();
+            std::thread::sleep(Duration::from_millis(2));
+        }
+        self.dispatch.stop();
+        if let Some(h) = self.dispatcher.lock().unwrap().take() {
+            let _ = h.join();
+        }
+        let cells: Vec<_> = {
+            let mut map = self.dispatch.cells.lock().unwrap();
+            map.drain().collect()
+        };
+        for (_, cell) in cells {
+            let mut cell = cell.lock().unwrap();
+            if !cell.done {
+                cell.mux.kill();
+                finish_cell(&mut cell);
             }
         }
     }
 }
 
-/// The fleet's liveness sweeper: reads each connection's last heartbeat
-/// off the mux into the registry, demotes against the configured
-/// deadlines, and fires the membership callback on epoch changes. Holds
-/// only a `Weak` fleet reference — it dies with the fleet (or at
-/// [`Fleet::shutdown`], which joins it).
-fn spawn_sweeper(fleet: &Arc<Fleet>) {
+/// The fleet's liveness sweep, as a reactor timer-wheel task: reads
+/// each connection's last heartbeat off the mux into the registry,
+/// demotes against the configured deadlines, and (via the dispatcher —
+/// never blocking the reactor thread) fires the membership callback on
+/// epoch changes. Holds only a `Weak` fleet reference, so it cancels
+/// itself once the fleet is gone.
+fn start_sweep(fleet: &Arc<Fleet>) {
     let weak: Weak<Fleet> = Arc::downgrade(fleet);
     let stop = fleet.sweep_stop.clone();
     let suspect = Duration::from_secs_f64(fleet.cfg.suspect_after_s);
     let gone = Duration::from_secs_f64(fleet.cfg.gone_after_s);
-    let pause = Duration::from_secs_f64(
+    let period = Duration::from_secs_f64(
         (fleet.cfg.heartbeat_interval_s.min(fleet.cfg.suspect_after_s) / 2.0).max(0.02),
     );
-    let handle = std::thread::Builder::new()
-        .name("fleet-sweeper".to_string())
-        .stack_size(128 << 10)
-        .spawn(move || {
-            let mut last_epoch = u64::MAX;
-            while !stop.load(Ordering::Relaxed) {
-                let Some(fleet) = weak.upgrade() else { break };
-                {
-                    let conns = fleet.conns.read().unwrap();
-                    for (idx, conn) in conns.iter().enumerate() {
-                        // a dead transport's stale heartbeat is not
-                        // liveness evidence — never let it resurrect a
-                        // just-killed client
-                        if conn.mux.is_dead() {
-                            fleet.registry.suspect(idx);
-                        } else if let Some(at) = conn.mux.last_heartbeat() {
-                            fleet.registry.heard(idx, at);
-                        }
+    let mut last_epoch = u64::MAX;
+    let id = reactor::global().add_interval(
+        period,
+        Box::new(move || {
+            if stop.load(Ordering::Relaxed) {
+                return false;
+            }
+            let Some(fleet) = weak.upgrade() else { return false };
+            {
+                let conns = fleet.conns.read().unwrap();
+                for (idx, conn) in conns.iter().enumerate() {
+                    // a dead transport's stale heartbeat is not liveness
+                    // evidence — never let it resurrect a just-killed
+                    // client
+                    if conn.mux.is_dead() {
+                        fleet.registry.suspect(idx);
+                    } else if let Some(at) = conn.mux.last_heartbeat() {
+                        fleet.registry.heard(idx, at);
                     }
                 }
-                let epoch = fleet.registry.sweep(suspect, gone);
-                if epoch != last_epoch {
-                    last_epoch = epoch;
-                    fleet.notify_membership();
-                }
-                drop(fleet);
-                std::thread::sleep(pause);
             }
-        })
-        .expect("spawn fleet sweeper");
-    *fleet.sweeper.lock().unwrap() = Some(handle);
+            let epoch = fleet.registry.sweep(suspect, gone);
+            if epoch != last_epoch {
+                last_epoch = epoch;
+                fleet.dispatch.request_kick();
+            }
+            true
+        }),
+    );
+    *fleet.sweep_timer.lock().unwrap() = Some(id);
 }
 
 impl FleetConn {
@@ -687,20 +849,41 @@ impl FleetConn {
     }
 }
 
-fn spawn_fleet_client(
+/// Stand up the client side of one fleet connection: build its runtime
+/// cell, start its heartbeat on the reactor's timer wheel, and hook the
+/// connection's delivery callback into the dispatcher's dirty set. No
+/// thread is spawned — the client costs a map entry until a job opens.
+fn deploy_client(
+    dispatch: &Arc<Dispatch>,
     spec: &ClientSpec,
     index: usize,
     mux: MuxConn,
     directory: Arc<JobDirectory>,
     heartbeat: Duration,
-) -> Result<FleetClientThread> {
-    let name = spec.name.clone();
-    let tname = name.clone();
-    let handle = std::thread::Builder::new()
-        .name(format!("fleet-{name}"))
-        .spawn(move || MultiJobRuntime::new(&tname, index, mux, directory, heartbeat).run())
-        .context("spawn fleet client")?;
-    Ok((name, handle))
+) {
+    let runtime = MultiJobRuntime::new(&spec.name, index, mux.clone(), directory, heartbeat);
+    runtime.start_heartbeat();
+    let control = runtime.control_messenger();
+    let cell = Arc::new(Mutex::new(ClientCell {
+        runtime,
+        control,
+        mux: mux.clone(),
+        loops: Vec::new(),
+        done: false,
+    }));
+    dispatch.cells.lock().unwrap().insert(index, cell);
+    // Weak: the callback lives inside the mux, which the cell map owns —
+    // a strong Arc here would cycle dispatch → cell → mux → dispatch.
+    let weak = Arc::downgrade(dispatch);
+    mux.set_on_deliver(Some(Box::new(move |job| {
+        if job == 0 {
+            if let Some(d) = weak.upgrade() {
+                d.mark(index);
+            }
+        }
+    })));
+    // catch anything delivered before the callback was installed
+    dispatch.mark(index);
 }
 
 /// Run a job to completion inside this process. The controller's own

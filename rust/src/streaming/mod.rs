@@ -65,9 +65,21 @@ pub struct Messenger {
     reasm: Reassembler,
     chunk_bytes: usize,
     next_stream: u64,
+    /// Mid-message state carried across [`Messenger::recv_msg_nonblocking`]
+    /// calls (a v2 object stream only partially arrived).
+    inflight: Option<InflightMsg>,
     /// Running transfer counters (bytes of payload, not counting headers).
     pub sent_bytes: u64,
     pub recv_bytes: u64,
+}
+
+/// A v2 object message being assembled across nonblocking receive calls.
+struct InflightMsg {
+    asm: RecordAssembler,
+    head: Option<FlMessage>,
+    declared: usize,
+    names: std::collections::BTreeSet<String>,
+    body: TensorDict,
 }
 
 impl Messenger {
@@ -78,6 +90,7 @@ impl Messenger {
             reasm: Reassembler::new(),
             chunk_bytes,
             next_stream: (tag as u64) << 32,
+            inflight: None,
             sent_bytes: 0,
             recv_bytes: 0,
         }
@@ -374,6 +387,84 @@ impl Messenger {
         }
     }
 
+    /// Non-blocking [`Messenger::recv_msg`]: drain whatever frames the
+    /// driver has buffered and return `Ok(Some(msg))` once a whole object
+    /// message has arrived, `Ok(None)` while one is still (or not yet) in
+    /// flight. Mid-message state persists across calls, so a control
+    /// dispatcher can interleave many messengers on one thread without
+    /// parking on any of them. Object kinds only — the control protocol
+    /// exchanges nothing else.
+    pub fn recv_msg_nonblocking(&mut self) -> Result<Option<FlMessage>, StreamError> {
+        loop {
+            let Some(frame) = self.driver.try_recv()? else {
+                return Ok(None);
+            };
+            let n = frame.payload.len() as u64;
+            match frame.kind {
+                KIND_OBJECT_V2 => {
+                    let fl = self.inflight.get_or_insert_with(|| InflightMsg {
+                        asm: RecordAssembler::new(),
+                        head: None,
+                        declared: 0,
+                        names: Default::default(),
+                        body: TensorDict::new(),
+                    });
+                    let records = fl.asm.push(frame)?;
+                    self.recv_bytes += n;
+                    for rec in records {
+                        match &fl.head {
+                            None => {
+                                let (h, count) = FlMessage::parse_v2_header(&rec)?;
+                                fl.declared = count;
+                                fl.head = Some(h);
+                            }
+                            Some(_) => {
+                                let (name, t) = tensor_record(&rec)?;
+                                if !fl.names.insert(name.clone()) {
+                                    return Err(StreamError::Protocol(format!(
+                                        "v2 stream: duplicate tensor record '{name}'"
+                                    )));
+                                }
+                                fl.body.insert(name, t);
+                            }
+                        }
+                    }
+                    if fl.asm.is_done() {
+                        let fl = self.inflight.take().expect("inflight present");
+                        let mut head = fl.head.ok_or_else(|| {
+                            StreamError::Protocol(
+                                "v2 stream ended without a header record".into(),
+                            )
+                        })?;
+                        if fl.names.len() != fl.declared {
+                            return Err(StreamError::Protocol(format!(
+                                "v2 stream: header declared {} tensors, got {}",
+                                fl.declared,
+                                fl.names.len()
+                            )));
+                        }
+                        head.body = fl.body;
+                        return Ok(Some(head));
+                    }
+                }
+                KIND_OBJECT => {
+                    // legacy v1 blob: partials persist in the reassembler
+                    let done = self.reasm.push(frame)?;
+                    self.recv_bytes += n;
+                    if let Some((_, _, payload)) = done {
+                        mem::track_free(payload.len());
+                        return Ok(Some(FlMessage::from_bytes(&payload)?));
+                    }
+                }
+                other => {
+                    return Err(StreamError::Protocol(format!(
+                        "expected object stream, got kind {other}"
+                    )))
+                }
+            }
+        }
+    }
+
     /// Send the end-of-job control message.
     pub fn send_bye(&mut self) -> Result<(), StreamError> {
         self.send_msg(&FlMessage::bye())
@@ -605,6 +696,40 @@ mod tests {
             .unwrap();
         assert_eq!(head.client, "c1");
         assert_eq!(names, vec!["w"]);
+    }
+
+    #[test]
+    fn recv_msg_nonblocking_assembles_across_calls() {
+        let (mut a, mut b) = pair(64);
+        // nothing in flight: None, not a block
+        assert!(b.recv_msg_nonblocking().unwrap().is_none());
+        let mut body = TensorDict::new();
+        body.insert("w", Tensor::f32(vec![100], vec![1.5; 100])); // several chunks
+        let msg = FlMessage::task("train", 4, body);
+        a.send_msg(&msg).unwrap();
+        // frames are already buffered in the channel: polling drains them
+        // (possibly over multiple calls) until the message completes
+        let t0 = std::time::Instant::now();
+        let got = loop {
+            if let Some(m) = b.recv_msg_nonblocking().unwrap() {
+                break m;
+            }
+            assert!(t0.elapsed() < std::time::Duration::from_secs(2));
+            std::thread::sleep(std::time::Duration::from_millis(1));
+        };
+        assert_eq!(got, msg);
+        // v1 blobs assemble through the same call
+        a.send_msg_v1(&msg).unwrap();
+        let got = loop {
+            if let Some(m) = b.recv_msg_nonblocking().unwrap() {
+                break m;
+            }
+            assert!(t0.elapsed() < std::time::Duration::from_secs(2));
+        };
+        assert_eq!(got, msg);
+        // peer drop surfaces as Closed, not a silent forever-None
+        drop(a);
+        assert!(b.recv_msg_nonblocking().is_err());
     }
 
     #[test]

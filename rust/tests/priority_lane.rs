@@ -1,0 +1,173 @@
+//! Priority-lane regression test: a client in the middle of a large,
+//! bandwidth-throttled transfer must keep heartbeating — the liveness
+//! signal rides the mux's control lane, bypasses the token bucket, and
+//! is timestamped the moment it arrives, so the fleet's deadline sweep
+//! never marks a busy-but-healthy site Suspect. Exercised over both the
+//! inproc and TCP drivers, mirroring how [`sim::Fleet`] and the real
+//! `fedflare server` feed [`fleet::Registry`] from
+//! [`MuxConn::last_heartbeat`].
+
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use fedflare::fleet::{ClientState, Registry};
+use fedflare::sfm::inproc;
+use fedflare::sfm::mux::MuxConn;
+use fedflare::sfm::tcp::{self, TcpDriver};
+use fedflare::sfm::{Driver, Frame, FLAG_FIRST, FLAG_LAST};
+
+/// Client-side send cap: slow enough that the payload takes over a
+/// second on the wire, fast enough to keep the test snappy.
+const RATE_BPS: u64 = 512 * 1024;
+const BURST_BYTES: u64 = 32 * 1024;
+const PAYLOAD: usize = 768 * 1024;
+const CHUNK: usize = 16 * 1024;
+
+const HEARTBEAT: Duration = Duration::from_millis(50);
+const SUSPECT_AFTER: Duration = Duration::from_millis(400);
+
+fn wait_until(timeout: Duration, mut f: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if f() {
+            return true;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+    f()
+}
+
+/// Chunk `payload` into a single multi-frame stream (the job id is
+/// stamped by the [`MuxHandle`](fedflare::sfm::mux::MuxHandle) on send).
+fn chunk_frames(stream: u32, payload: &[u8], chunk: usize) -> Vec<Frame> {
+    let total = payload.len().div_ceil(chunk).max(1) as u32;
+    payload
+        .chunks(chunk)
+        .enumerate()
+        .map(|(i, part)| {
+            let mut flags = 0u8;
+            if i == 0 {
+                flags |= FLAG_FIRST;
+            }
+            if i as u32 == total - 1 {
+                flags |= FLAG_LAST;
+            }
+            Frame {
+                flags,
+                kind: 0,
+                job: 0,
+                stream,
+                seq: i as u32,
+                total,
+                payload: part.to_vec(),
+            }
+        })
+        .collect()
+}
+
+/// A connected (server mux, client mux) pair over inproc channels, the
+/// client's sends throttled to [`RATE_BPS`].
+fn inproc_pair() -> (MuxConn, MuxConn) {
+    let (s, c) = inproc::pair(64, "lane");
+    let (sr, cr) = (s.recv_half(), c.recv_half());
+    let server = MuxConn::spawn(Box::new(s), Box::new(sr), 0, BURST_BYTES);
+    let client = MuxConn::spawn(Box::new(c), Box::new(cr), RATE_BPS, BURST_BYTES);
+    (server, client)
+}
+
+/// Same shape over a real TCP loopback connection.
+fn tcp_pair() -> (MuxConn, MuxConn) {
+    let listener = tcp::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().expect("local addr");
+    let cd = TcpDriver::connect(addr, false).expect("connect");
+    let cdr = cd.try_clone().expect("clone client driver");
+    let client = MuxConn::spawn(Box::new(cd), Box::new(cdr), RATE_BPS, BURST_BYTES);
+    let (conn, _) = listener.accept().expect("accept");
+    let sd = TcpDriver::from_stream(conn, false).expect("wrap accepted");
+    let sdr = sd.try_clone().expect("clone server driver");
+    let server = MuxConn::spawn(Box::new(sd), Box::new(sdr), 0, BURST_BYTES);
+    (server, client)
+}
+
+/// The scenario both drivers run: heartbeats flow, a throttled multi-MB
+/// transfer saturates the link for over a second, and the registry —
+/// swept on a deadline tighter than the transfer — never demotes the
+/// client, because heartbeats keep arriving through the priority lane.
+fn heartbeats_outrun_a_saturated_link(server: MuxConn, client: MuxConn, tag: &str) {
+    let registry = Arc::new(Registry::new());
+    let idx = registry.join(tag);
+    registry.connected(idx);
+    client.enable_heartbeat(HEARTBEAT);
+    assert!(
+        wait_until(Duration::from_secs(5), || server.last_heartbeat().is_some()),
+        "[{tag}] first heartbeat never arrived"
+    );
+
+    // saturate the link: a payload that takes ~1.5s at the send cap,
+    // streamed from a worker thread while the test thread plays the
+    // fleet's liveness sweep
+    let mut tx = client.handle(1);
+    let payload = vec![0xA5u8; PAYLOAD];
+    let t0 = Instant::now();
+    let sender = thread::spawn(move || {
+        for frame in chunk_frames(7, &payload, CHUNK) {
+            tx.send(frame).expect("throttled send");
+        }
+    });
+    let mut rx = server.handle(1);
+    let drain = thread::spawn(move || {
+        let mut got = 0usize;
+        while got < PAYLOAD {
+            got += rx.recv().expect("drain transfer").payload.len();
+        }
+        got
+    });
+
+    // while the transfer is in flight: observe heartbeats exactly the
+    // way the server's sweep task does (last_heartbeat -> heard ->
+    // sweep) and demand the client stays eligible throughout
+    let mut max_staleness = Duration::ZERO;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !(sender.is_finished() && drain.is_finished()) {
+        assert!(Instant::now() < deadline, "[{tag}] transfer wedged");
+        if let Some(at) = server.last_heartbeat() {
+            max_staleness = max_staleness.max(at.elapsed());
+            registry.heard(idx, at);
+        }
+        registry.sweep(SUSPECT_AFTER, Duration::from_secs(60));
+        assert_eq!(
+            registry.state_of(tag),
+            Some(ClientState::Live),
+            "[{tag}] client demoted mid-transfer after {:?}",
+            t0.elapsed()
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(drain.join().unwrap(), PAYLOAD, "[{tag}] payload truncated");
+    sender.join().unwrap();
+
+    // the throttle really applied — the transfer overlapped many
+    // heartbeat intervals, so the assertions above had teeth
+    let took = t0.elapsed();
+    assert!(
+        took >= Duration::from_millis(500),
+        "[{tag}] transfer finished in {took:?}; too fast to exercise the lane"
+    );
+    assert!(
+        max_staleness < SUSPECT_AFTER,
+        "[{tag}] heartbeat gap {max_staleness:?} crossed the suspect deadline"
+    );
+}
+
+#[test]
+fn heartbeats_survive_large_transfer_inproc() {
+    let (server, client) = inproc_pair();
+    heartbeats_outrun_a_saturated_link(server, client, "site-inproc");
+}
+
+#[test]
+fn heartbeats_survive_large_transfer_tcp() {
+    let (server, client) = tcp_pair();
+    heartbeats_outrun_a_saturated_link(server, client, "site-tcp");
+}

@@ -1,0 +1,111 @@
+#!/usr/bin/env python3
+"""Perf trend gate: diff fresh bench JSON against the committed baseline.
+
+Usage:
+    scripts/bench_gate.py BASELINE.json FRESH.json [--threshold 0.25]
+
+Compares every ``wall_s*`` field of every row (rows matched by their
+identity fields: k / clients / branching / connections / churn_batch)
+and fails — exit 1 — when any wall-clock number regressed by more than
+the threshold (default 25%). Non-wall-clock fields (peak bytes, thread
+counts) are reported but never gate: they are tracked via the uploaded
+artifacts instead.
+
+Baselines marked ``"provisional": true`` never fail the gate: they were
+committed without a measured run (e.g. authored on a machine without
+the toolchain) — the gate prints the comparison, asks for the baseline
+to be refreshed from a real run, and exits 0. To refresh::
+
+    FEDFLARE_BENCH_QUICK=1 cargo bench --bench bench_jobs --bench bench_topology
+    cp rust/BENCH_jobs.json bench/baseline/BENCH_jobs.json   # drop "provisional"
+
+Quick-mode output must be compared against a quick-mode baseline (and
+full against full); mismatched modes are skipped with a warning, since
+the workloads differ by design.
+"""
+
+import json
+import sys
+
+ID_KEYS = ("k", "clients", "branching", "connections", "churn_batch")
+
+
+def identity(row):
+    return tuple((k, row[k]) for k in ID_KEYS if k in row)
+
+
+def rows_of(doc):
+    out = {}
+    for key, val in doc.items():
+        if isinstance(val, list) and all(isinstance(r, dict) for r in val):
+            for row in val:
+                out[(key,) + identity(row)] = row
+    return out
+
+
+def main(argv):
+    args = [a for a in argv[1:] if not a.startswith("--")]
+    threshold = 0.25
+    for a in argv[1:]:
+        if a.startswith("--threshold"):
+            threshold = float(a.split("=", 1)[1]) if "=" in a else threshold
+    if len(args) != 2:
+        print(__doc__)
+        return 2
+    base_path, fresh_path = args
+    with open(base_path) as f:
+        base = json.load(f)
+    with open(fresh_path) as f:
+        fresh = json.load(f)
+
+    provisional = bool(base.get("provisional"))
+    if base.get("quick") != fresh.get("quick"):
+        print(
+            f"bench_gate: SKIP {fresh_path}: quick={fresh.get('quick')} vs "
+            f"baseline quick={base.get('quick')} — refresh the baseline in the same mode"
+        )
+        return 0
+
+    base_rows, fresh_rows = rows_of(base), rows_of(fresh)
+    regressions, compared = [], 0
+    for key, brow in sorted(base_rows.items()):
+        frow = fresh_rows.get(key)
+        if frow is None:
+            print(f"bench_gate: warn: baseline row {key} missing from fresh output")
+            continue
+        for field, bval in brow.items():
+            if not field.startswith("wall_s") or not isinstance(bval, (int, float)):
+                continue
+            fval = frow.get(field)
+            if not isinstance(fval, (int, float)):
+                continue
+            if bval < 0.05:  # below measurement noise; don't gate on it
+                continue
+            compared += 1
+            ratio = fval / bval
+            marker = "REGRESSION" if ratio > 1 + threshold else "ok"
+            print(f"  {key} {field}: {bval:.3f}s -> {fval:.3f}s ({ratio - 1:+.0%}) {marker}")
+            if ratio > 1 + threshold:
+                regressions.append((key, field, bval, fval))
+
+    if not compared:
+        print(f"bench_gate: warn: no comparable wall_s fields between {base_path} and {fresh_path}")
+    if regressions:
+        if provisional:
+            print(
+                f"bench_gate: {len(regressions)} wall-clock regression(s) vs a PROVISIONAL "
+                "baseline — not failing. Refresh bench/baseline/ from a measured run "
+                "and drop the provisional flag to arm the gate."
+            )
+            return 0
+        print(f"bench_gate: FAIL — {len(regressions)} wall-clock regression(s) > {threshold:.0%}:")
+        for key, field, bval, fval in regressions:
+            print(f"  {key} {field}: {bval:.3f}s -> {fval:.3f}s")
+        return 1
+    note = " (baseline provisional — refresh it from a measured run)" if provisional else ""
+    print(f"bench_gate: PASS — {compared} wall-clock fields within {threshold:.0%}{note}")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv))

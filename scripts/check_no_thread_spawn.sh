@@ -1,0 +1,35 @@
+#!/usr/bin/env sh
+# CI lint gate for the event-driven connection core: the reactor owns
+# every thread under rust/src/sfm/ and rust/src/fleet/. Any other
+# `thread::spawn` / `thread::Builder` in those trees is a regression to
+# the thread-per-connection design this codebase moved away from —
+# per-connection work belongs on the reactor's poll loop or timer wheel
+# (rust/src/sfm/reactor.rs), not on a new thread.
+#
+# Test modules are exempt: everything after the first `#[cfg(test)]` in
+# a file is ignored (tests spawn threads to act as peers).
+set -eu
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+status=0
+
+for f in $(find "$root/rust/src/sfm" "$root/rust/src/fleet" -name '*.rs' ! -name 'reactor.rs' | sort); do
+    hits="$(awk '
+        /#\[cfg\(test\)\]/ { intest = 1 }
+        intest { next }
+        /thread::spawn|thread::Builder/ { printf "%s:%d: %s\n", FILENAME, FNR, $0 }
+    ' "$f")"
+    if [ -n "$hits" ]; then
+        echo "$hits"
+        status=1
+    fi
+done
+
+if [ "$status" -ne 0 ]; then
+    echo ""
+    echo "error: thread spawn outside the reactor in the connection core." >&2
+    echo "Per-connection receive/timer work must run on the sfm reactor" >&2
+    echo "(rust/src/sfm/reactor.rs) — see rust/README.md, thread budget." >&2
+    exit 1
+fi
+echo "thread-spawn lint: connection core is reactor-only (ok)"
