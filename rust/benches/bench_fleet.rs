@@ -12,6 +12,10 @@
 //!   (kill -> Suspect, via the dead-transport observation on the sweep
 //!   path) and to re-admit (reconnect -> Live with fresh heartbeat
 //!   evidence).
+//! * **checkpoint cost** — `JobStore` full-snapshot vs delta-link write
+//!   and full vs chain-replay resume, swept over model size, so the
+//!   `checkpoint_every_n_rounds` trade-off (bytes + latency per round
+//!   vs resume replay work) is measured rather than assumed.
 //!
 //! Run with `cargo bench --bench bench_fleet`. Set
 //! `FEDFLARE_BENCH_QUICK=1` for the CI quick mode: fewer idle points,
@@ -20,9 +24,11 @@
 use std::time::{Duration, Instant};
 
 use fedflare::fleet::{ClientState, Registry};
+use fedflare::persist::JobStore;
 use fedflare::sfm::inproc;
 use fedflare::sfm::mux::MuxConn;
-use fedflare::util::bench::emit_json;
+use fedflare::tensor::{Tensor, TensorDict};
+use fedflare::util::bench::{bench, emit_json, header, report};
 use fedflare::util::json::Json;
 use fedflare::util::mem;
 
@@ -173,6 +179,90 @@ fn churn_row(slots: &mut [Slot], registry: &Registry, batch: usize) -> Json {
     ])
 }
 
+/// A `tensors`-way split model totalling `mb` MB of f32 payload, the
+/// same shape the delta-checkpoint chain sees from a real job.
+fn ckpt_model(mb: usize, tensors: usize, fill: f32) -> TensorDict {
+    let elems = (mb << 20) / 4 / tensors;
+    let mut model = TensorDict::new();
+    for i in 0..tensors {
+        model.insert(format!("t{i:03}"), Tensor::f32(vec![elems], vec![fill; elems]));
+    }
+    model
+}
+
+/// Checkpoint write/resume cost at one model size: full-snapshot write,
+/// delta-link write (1 of `tensors` records changed — the LoRA shape),
+/// full-snapshot load, and a 5-link chain replay (the worst-case resume
+/// point just before the next full snapshot).
+fn ckpt_row(store: &JobStore, mb: usize) -> Json {
+    const TENSORS: usize = 20;
+    const CHAIN_LINKS: usize = 5;
+    let model = ckpt_model(mb, TENSORS, 0.5);
+    let elems = (mb << 20) / 4 / TENSORS;
+    let agg = TensorDict::new();
+    let jobs_dir = store.dir().join("jobs");
+
+    // full snapshot: every_n = 1 is the dense-checkpoint baseline
+    let job_full = format!("ckpt{mb}_full");
+    let s_full_write = bench(&format!("{mb} MB full snapshot write"), 1, 5, || {
+        store.save_round_chained(&job_full, 0, &model, &agg, 1).unwrap();
+    });
+    report(&s_full_write, Some(format!("{:.0} MB/s", s_full_write.mb_per_sec((mb << 20) as f64))));
+
+    // delta link: base full at round 0, one changed tensor at round 1.
+    // The timed path includes reconstructing the previous round from
+    // disk — that is what a chained save actually costs. Each iteration
+    // removes the link so the chain state is identical every time.
+    let job_delta = format!("ckpt{mb}_delta");
+    store.save_round_chained(&job_delta, 0, &model, &agg, 8).unwrap();
+    let mut next = model.clone();
+    next.insert("t000", Tensor::f32(vec![elems], vec![1.5; elems]));
+    let d1_path = jobs_dir.join(format!("{job_delta}.ckpt.d1"));
+    let s_delta_write = bench(&format!("{mb} MB delta link write (1/{TENSORS} changed)"), 1, 5, || {
+        let _ = std::fs::remove_file(&d1_path);
+        store.save_round_chained(&job_delta, 1, &next, &agg, 8).unwrap();
+    });
+    report(&s_delta_write, None);
+    let delta_file_bytes = std::fs::metadata(&d1_path).map(|m| m.len()).unwrap_or(0);
+    let full_file_bytes = std::fs::metadata(jobs_dir.join(format!("{job_full}.ckpt")))
+        .map(|m| m.len())
+        .unwrap_or(0);
+    assert!(
+        delta_file_bytes > 0 && delta_file_bytes < full_file_bytes / 4,
+        "delta link not materially smaller: {delta_file_bytes} vs {full_file_bytes}"
+    );
+
+    // resume cost: plain full load vs replaying a full + 5-link chain
+    let s_full_load = bench(&format!("{mb} MB full snapshot load"), 1, 5, || {
+        assert_eq!(store.load_round(&job_full).unwrap().unwrap().round, 0);
+    });
+    report(&s_full_load, Some(format!("{:.0} MB/s", s_full_load.mb_per_sec((mb << 20) as f64))));
+    let job_chain = format!("ckpt{mb}_chain");
+    store.save_round_chained(&job_chain, 0, &model, &agg, 8).unwrap();
+    for r in 1..=CHAIN_LINKS {
+        let mut m = model.clone();
+        m.insert("t000", Tensor::f32(vec![elems], vec![r as f32; elems]));
+        store.save_round_chained(&job_chain, r, &m, &agg, 8).unwrap();
+    }
+    let s_chain_load = bench(&format!("{mb} MB chain load ({CHAIN_LINKS} links)"), 1, 5, || {
+        assert_eq!(store.load_round(&job_chain).unwrap().unwrap().round, CHAIN_LINKS);
+    });
+    report(&s_chain_load, None);
+
+    Json::obj([
+        ("model_mb", Json::num(mb as f64)),
+        ("tensors", Json::num(TENSORS as f64)),
+        ("changed_tensors", Json::num(1.0)),
+        ("full_file_bytes", Json::num(full_file_bytes as f64)),
+        ("delta_file_bytes", Json::num(delta_file_bytes as f64)),
+        ("chain_links", Json::num(CHAIN_LINKS as f64)),
+        ("full_write_s", Json::num(s_full_write.mean_ns / 1e9)),
+        ("delta_write_s", Json::num(s_delta_write.mean_ns / 1e9)),
+        ("full_load_s", Json::num(s_full_load.mean_ns / 1e9)),
+        ("chain_load_s", Json::num(s_chain_load.mean_ns / 1e9)),
+    ])
+}
+
 fn main() {
     let baseline_threads = thread_count();
     let baseline_rss = mem::rss_bytes();
@@ -203,6 +293,14 @@ fn main() {
         .map(|&b| churn_row(&mut slots, &registry, b))
         .collect();
 
+    header("checkpoint write/resume cost vs model size");
+    let ckpt_dir = std::env::temp_dir().join("fedflare_bench_fleet_ckpt");
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+    let store = JobStore::open(&ckpt_dir).expect("open bench JobStore");
+    let ckpt_sizes: &[usize] = if quick() { &[1, 4] } else { &[1, 8, 32] };
+    let ckpt_rows: Vec<Json> = ckpt_sizes.iter().map(|&mb| ckpt_row(&store, mb)).collect();
+    let _ = std::fs::remove_dir_all(&ckpt_dir);
+
     emit_json(
         "fleet",
         Json::obj([
@@ -215,6 +313,7 @@ fn main() {
             ("idle", Json::arr(idle_rows)),
             ("churn_connections", Json::num(churn_n as f64)),
             ("churn", Json::arr(churn_rows)),
+            ("checkpoint", Json::arr(ckpt_rows)),
         ]),
     )
     .expect("write BENCH_fleet.json");

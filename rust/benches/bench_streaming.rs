@@ -1,14 +1,24 @@
 //! Streaming-layer benchmarks (paper §2.4 / Fig 5 microscale):
 //! chunk/reassemble throughput vs chunk size, frame encode/decode, CRC,
-//! and full object round-trips over both drivers.
+//! full object round-trips over both drivers, and the delta-native
+//! payload sweep (dense f32 vs f16 vs int8 vs int4 vs LoRA-sparse) —
+//! the last emitted as machine-readable `BENCH_delta.json`.
 //!
-//! Run with `cargo bench --bench bench_streaming`.
+//! Run with `cargo bench --bench bench_streaming`. Set
+//! `FEDFLARE_BENCH_QUICK=1` for the CI quick mode: smaller payloads,
+//! same sections and JSON shape.
 
 use fedflare::message::FlMessage;
 use fedflare::sfm::{chunk_frames, inproc, tcp, Frame, Reassembler};
 use fedflare::streaming::Messenger;
-use fedflare::tensor::{Tensor, TensorDict};
-use fedflare::util::bench::{bench, header, report};
+use fedflare::tensor::{RecordEnc, Tensor, TensorDict};
+use fedflare::util::bench::{bench, emit_json, header, report};
+use fedflare::util::json::Json;
+
+/// `FEDFLARE_BENCH_QUICK=1` selects the CI quick mode.
+fn quick() -> bool {
+    std::env::var("FEDFLARE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
 
 fn model_of(mb: usize) -> TensorDict {
     let mut d = TensorDict::new();
@@ -27,10 +37,10 @@ fn split_model_of(mb: usize, tensors: usize) -> TensorDict {
 }
 
 fn main() {
-    let payload_mb = 16usize;
+    let payload_mb = if quick() { 4usize } else { 16usize };
     let payload = vec![0xA5u8; payload_mb << 20];
 
-    header("chunk + reassemble (16 MB payload)");
+    header(&format!("chunk + reassemble ({payload_mb} MB payload)"));
     for chunk in [64 << 10, 256 << 10, 1 << 20, 4 << 20] {
         let s = bench(&format!("chunk_bytes={}K", chunk >> 10), 1, 8, || {
             let mut re = Reassembler::new();
@@ -77,7 +87,8 @@ fn main() {
     report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec(encoded.len() as f64))));
 
     header("object round-trip: serialize + stream + reassemble + parse");
-    for mb in [1usize, 8, 32] {
+    let rt_sizes: &[usize] = if quick() { &[1, 4] } else { &[1, 8, 32] };
+    for &mb in rt_sizes {
         let model = model_of(mb);
         let msg = FlMessage::task("train", 0, model);
         let s = bench(&format!("{mb} MB model, inproc driver"), 1, 6, || {
@@ -96,7 +107,7 @@ fn main() {
     }
 
     {
-        let mb = 8usize;
+        let mb = if quick() { 2usize } else { 8usize };
         let msg = FlMessage::task("train", 0, model_of(mb));
         let s = bench(&format!("{mb} MB model, tcp loopback"), 1, 6, || {
             let listener = tcp::bind("127.0.0.1:0").unwrap();
@@ -117,9 +128,12 @@ fn main() {
         report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((mb << 20) as f64))));
     }
 
-    header("v2 object round-trip vs chunk size (8 MB model, 16 tensors, inproc)");
+    let v2_mb = if quick() { 2usize } else { 8usize };
+    header(&format!(
+        "v2 object round-trip vs chunk size ({v2_mb} MB model, 16 tensors, inproc)"
+    ));
     {
-        let msg = FlMessage::task("train", 0, split_model_of(8, 16));
+        let msg = FlMessage::task("train", 0, split_model_of(v2_mb, 16));
         for chunk in [64 << 10, 256 << 10, 1 << 20, 4 << 20] {
             let s = bench(&format!("chunk_bytes={}K", chunk >> 10), 1, 6, || {
                 let (a, b) = inproc::pair(64, "benchv2");
@@ -133,13 +147,15 @@ fn main() {
                 h.join().unwrap();
                 std::hint::black_box(got.body.len());
             });
-            report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((8 << 20) as f64))));
+            report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((v2_mb << 20) as f64))));
         }
     }
 
-    header("v2 incremental receive (recv_msg_stream, 8 MB, 16 tensors)");
+    header(&format!(
+        "v2 incremental receive (recv_msg_stream, {v2_mb} MB, 16 tensors)"
+    ));
     {
-        let msg = FlMessage::task("train", 0, split_model_of(8, 16));
+        let msg = FlMessage::task("train", 0, split_model_of(v2_mb, 16));
         let s = bench("fold tensors as frames arrive", 1, 6, || {
             let (a, b) = inproc::pair(64, "benchinc");
             let mut tx = Messenger::new(Box::new(a), 1 << 20, 1);
@@ -159,20 +175,104 @@ fn main() {
             h.join().unwrap();
             std::hint::black_box(folded);
         });
-        report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((8 << 20) as f64))));
+        report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((v2_mb << 20) as f64))));
     }
 
-    header("tensor wire format (8 MB dict)");
-    let model = model_of(8);
+    header(&format!("tensor wire format ({v2_mb} MB dict)"));
+    let model = model_of(v2_mb);
     let s = bench("to_bytes", 1, 16, || {
         std::hint::black_box(model.to_bytes().len());
     });
-    report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((8 << 20) as f64))));
+    report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((v2_mb << 20) as f64))));
     let bytes = model.to_bytes();
     let s = bench("from_bytes", 1, 16, || {
         std::hint::black_box(TensorDict::from_bytes(&bytes).unwrap().len());
     });
-    report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((8 << 20) as f64))));
+    report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((v2_mb << 20) as f64))));
+
+    // -------- delta-native payloads: bytes + round latency per codec --
+    //
+    // One "round" here is a client update upload over the inproc driver:
+    // send_msg_enc + full receive (dequantize-on-decode included). The
+    // sweep covers the dense model under every codec plus the LoRA-style
+    // sparse update (1 of 20 tensors = 5%), dense f32 being the baseline
+    // that `bytes_vs_dense_f32` normalizes against.
+    let delta_mb = if quick() { 2usize } else { 8usize };
+    let tensors = 20usize;
+    header(&format!(
+        "delta payloads: bytes + round latency ({delta_mb} MB model, {tensors} tensors)"
+    ));
+    let full = split_model_of(delta_mb, tensors);
+    let mut adapter = TensorDict::new();
+    adapter.insert("t000", full.get("t000").unwrap().clone());
+    let cases: Vec<(&str, FlMessage, RecordEnc)> = vec![
+        ("dense_f32", FlMessage::result("train", 0, "c", full.clone()), RecordEnc::Raw),
+        ("dense_f16", FlMessage::result("train", 0, "c", full.clone()), RecordEnc::F16),
+        ("dense_int8", FlMessage::result("train", 0, "c", full.clone()), RecordEnc::Int8),
+        ("dense_int4", FlMessage::result("train", 0, "c", full.clone()), RecordEnc::Int4),
+        (
+            "lora_sparse_f32",
+            FlMessage::result("train", 0, "c", adapter.clone()).with_manifest(0, true),
+            RecordEnc::Raw,
+        ),
+        (
+            "lora_sparse_int4",
+            FlMessage::result("train", 0, "c", adapter).with_manifest(0, true),
+            RecordEnc::Int4,
+        ),
+    ];
+    let dense_bytes = cases[0].1.v2_encoded_len(RecordEnc::Raw) as f64;
+    let mut rows = Vec::new();
+    for (case, msg, enc) in &cases {
+        let payload_bytes = msg.v2_encoded_len(*enc);
+        let mut wire_bytes = 0u64;
+        let s = bench(&format!("{case} ({})", enc.as_str()), 1, 6, || {
+            let (a, b) = inproc::pair(64, "benchdelta");
+            let mut tx = Messenger::new(Box::new(a), 1 << 20, 1);
+            let mut rx = Messenger::new(Box::new(b), 1 << 20, 2);
+            let m = msg.clone();
+            let e = *enc;
+            let h = std::thread::spawn(move || {
+                tx.send_msg_enc(&m, e).unwrap();
+                tx.sent_bytes
+            });
+            let got = rx.recv_msg().unwrap();
+            wire_bytes = h.join().unwrap();
+            std::hint::black_box(got.body.len());
+        });
+        assert_eq!(
+            wire_bytes as usize, payload_bytes,
+            "{case}: transported bytes disagree with the computed payload length"
+        );
+        let ratio = dense_bytes / payload_bytes as f64;
+        report(
+            &s,
+            Some(format!(
+                "{:>8} kB  {ratio:>6.1}x under dense f32",
+                payload_bytes >> 10
+            )),
+        );
+        rows.push(Json::obj([
+            ("case", Json::str(*case)),
+            ("codec", Json::str(enc.as_str())),
+            ("payload_bytes", Json::num(payload_bytes as f64)),
+            ("bytes_vs_dense_f32", Json::num(ratio)),
+            ("wall_s", Json::num(s.mean_ns / 1e9)),
+            ("p95_s", Json::num(s.p95_ns / 1e9)),
+        ]));
+    }
+    emit_json(
+        "delta",
+        Json::obj([
+            ("bench", Json::str("delta")),
+            ("quick", Json::num(if quick() { 1.0 } else { 0.0 })),
+            ("model_bytes", Json::num((delta_mb << 20) as f64)),
+            ("tensors", Json::num(tensors as f64)),
+            ("sparse_fraction", Json::num(1.0 / tensors as f64)),
+            ("rows", Json::arr(rows)),
+        ]),
+    )
+    .expect("write BENCH_delta.json");
 
     println!("\nbench_streaming done");
 }

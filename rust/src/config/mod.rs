@@ -7,6 +7,7 @@
 
 use std::path::Path;
 
+use crate::tensor::RecordEnc;
 use crate::util::json::Json;
 
 /// Which server workflow drives the job (paper §2.1/§2.3).
@@ -384,6 +385,21 @@ pub struct JobConfig {
     pub filters: Vec<FilterSpec>,
     /// Communicate only these parameter names (PEFT); empty = all.
     pub trainable_only: bool,
+    /// Tensor-name prefixes treated as trainable: clients send only
+    /// matching tensors and the server folds them sparsely against the
+    /// persistent global (empty = every tensor, dense schema).
+    pub trainable_filter: Vec<String>,
+    /// Transport codec for client update records ("raw", "f16", "int8",
+    /// "int4"). Quantized records dequantize on decode at the server.
+    pub update_codec: RecordEnc,
+    /// Clients send parameter *deltas* (local − global); the server
+    /// rebases the folded mean on the global model. Implies sparse
+    /// folding; flat topology only.
+    pub delta_updates: bool,
+    /// Checkpoint cadence: every Nth completed round writes a full
+    /// snapshot, rounds between write delta checkpoints holding only the
+    /// tensors that changed (1 = always full, the pre-delta behavior).
+    pub checkpoint_every_n_rounds: usize,
     pub seed: u64,
 }
 
@@ -417,8 +433,19 @@ impl JobConfig {
             train: TrainConfig::default(),
             filters: Vec::new(),
             trainable_only: false,
+            trainable_filter: Vec::new(),
+            update_codec: RecordEnc::Raw,
+            delta_updates: false,
+            checkpoint_every_n_rounds: 1,
             seed: 17,
         }
+    }
+
+    /// Whether clients may legally send a *subset* of the global schema
+    /// (a trainable filter or delta updates): the server must then fold
+    /// sparsely against the persistent global model.
+    pub fn sparse_updates(&self) -> bool {
+        self.delta_updates || !self.trainable_filter.is_empty()
     }
 
     pub fn from_json(j: &Json) -> Result<JobConfig, ConfigError> {
@@ -484,6 +511,39 @@ impl JobConfig {
         }
         if let Some(b) = j.get("trainable_only").as_bool() {
             job.trainable_only = b;
+        }
+        if let Some(arr) = j.get("trainable_filter").as_arr() {
+            job.trainable_filter = arr
+                .iter()
+                .map(|p| {
+                    p.as_str().map(|s| s.to_string()).ok_or_else(|| {
+                        ConfigError("trainable_filter entries must be strings".into())
+                    })
+                })
+                .collect::<Result<_, ConfigError>>()?;
+        }
+        if let Some(s) = j.get("update_codec").as_str() {
+            job.update_codec = RecordEnc::from_str(s).ok_or_else(|| {
+                ConfigError(format!(
+                    "unknown update_codec '{s}' (raw | f16 | int8 | int4)"
+                ))
+            })?;
+        }
+        if let Some(b) = j.get("delta_updates").as_bool() {
+            job.delta_updates = b;
+        }
+        if let Some(n) = j.get("checkpoint_every_n_rounds").as_usize() {
+            if n == 0 {
+                return Err(ConfigError("checkpoint_every_n_rounds must be >= 1".into()));
+            }
+            job.checkpoint_every_n_rounds = n;
+        }
+        if job.sparse_updates() && job.branching > 1 {
+            return Err(ConfigError(
+                "sparse/delta updates need a flat topology (branching <= 1): \
+                 mid-tier partials are dense"
+                    .into(),
+            ));
         }
         if job.min_clients > job.clients.len() {
             return Err(ConfigError(format!(
@@ -684,6 +744,10 @@ mod tests {
             "local_steps": 10,
             "seed": 42,
             "trainable_only": true,
+            "trainable_filter": ["lora_a.", "lora_b."],
+            "update_codec": "int8",
+            "delta_updates": true,
+            "checkpoint_every_n_rounds": 4,
             "clients": [
                 {"name": "a"},
                 {"name": "b", "bandwidth_bps": 1000000},
@@ -703,6 +767,11 @@ mod tests {
         assert_eq!(job.stream.chunk_bytes, 65536);
         assert_eq!(job.filters.len(), 2);
         assert!(job.trainable_only);
+        assert_eq!(job.trainable_filter, vec!["lora_a.", "lora_b."]);
+        assert_eq!(job.update_codec, RecordEnc::Int8);
+        assert!(job.delta_updates);
+        assert!(job.sparse_updates());
+        assert_eq!(job.checkpoint_every_n_rounds, 4);
         assert_eq!(job.train.local_steps, 10);
         assert_eq!(
             job.filters[0],
@@ -913,5 +982,23 @@ mod tests {
         let zero_chunk =
             Json::parse(r#"{"name":"a","artifact":"x","stream":{"chunk_bytes":0}}"#).unwrap();
         assert!(JobConfig::from_json(&zero_chunk).is_err());
+        let bad_codec =
+            Json::parse(r#"{"name":"a","artifact":"x","update_codec":"int2"}"#).unwrap();
+        assert!(JobConfig::from_json(&bad_codec).is_err());
+        let zero_ckpt = Json::parse(
+            r#"{"name":"a","artifact":"x","checkpoint_every_n_rounds":0}"#,
+        )
+        .unwrap();
+        assert!(JobConfig::from_json(&zero_ckpt).is_err());
+        let sparse_tree = Json::parse(
+            r#"{"name":"a","artifact":"x","delta_updates":true,"branching":4}"#,
+        )
+        .unwrap();
+        assert!(JobConfig::from_json(&sparse_tree).is_err());
+        let filtered_tree = Json::parse(
+            r#"{"name":"a","artifact":"x","trainable_filter":["lora."],"branching":4}"#,
+        )
+        .unwrap();
+        assert!(JobConfig::from_json(&filtered_tree).is_err());
     }
 }

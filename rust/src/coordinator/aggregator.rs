@@ -106,6 +106,21 @@ pub trait Aggregator: Send {
     fn import_state(&mut self, _state: &TensorDict) -> Result<()> {
         Ok(())
     }
+
+    /// Switch the strategy to **sparse folding**: client streams may cover
+    /// any subset of the schema instead of all of it. Tensors no stream
+    /// touched carry the round anchor (the global model passed to
+    /// [`Aggregator::begin_round`]) forward unchanged; touched tensors
+    /// fold per-tensor order-invariantly over exactly the streams that
+    /// sent them. With `delta`, records are updates `local − base` and
+    /// fold as `global + weighted mean(delta)`. Strategies that cannot
+    /// fold sparsely keep the default and error.
+    fn set_sparse(&mut self, _delta: bool) -> Result<()> {
+        bail!(
+            "aggregator '{}' does not support sparse/delta updates",
+            self.name()
+        )
+    }
 }
 
 /// Build an aggregation strategy from its config spec.
@@ -147,6 +162,15 @@ pub struct StreamingMean {
     tensor_weight: BTreeMap<String, f64>,
     weight: f64,
     folded: usize,
+    /// Sparse mode: streams may cover any schema subset; tensors nobody
+    /// sent carry `anchor` forward at [`StreamingMean::take_mean`].
+    sparse: bool,
+    /// Delta mode (implies sparse): records are `local − anchor` updates,
+    /// so the mean re-bases onto the anchor at finalize.
+    delta: bool,
+    /// The round's global model, kept only in sparse mode (the
+    /// carry-forward source and the delta re-base point).
+    anchor: TensorDict,
 }
 
 impl StreamingMean {
@@ -157,15 +181,22 @@ impl StreamingMean {
             tensor_weight: BTreeMap::new(),
             weight: 0.0,
             folded: 0,
+            sparse: false,
+            delta: false,
+            anchor: TensorDict::new(),
         }
     }
 
-    /// Re-zero the accumulator for a new round over `schema`.
+    /// Re-zero the accumulator for a new round over `schema`. In sparse
+    /// mode the schema doubles as the round anchor.
     pub fn reset(&mut self, schema: &TensorDict) {
         self.agg = schema.zeros_like();
         self.tensor_weight.clear();
         self.weight = 0.0;
         self.folded = 0;
+        if self.sparse {
+            self.anchor = schema.clone();
+        }
     }
 
     /// Aggregation weight of one result (see [`weight_of`]).
@@ -228,7 +259,16 @@ impl StreamingMean {
     /// check, this is the per-record path's equivalent of the old
     /// whole-dict `same_schema` check.
     pub fn client_done(&mut self, w: f64, seen: usize) -> Result<()> {
-        if seen != self.agg.len() {
+        if self.sparse {
+            // a sparse stream may cover any subset (even none — a client
+            // whose trainable set is empty still registers its weight)
+            if seen > self.agg.len() {
+                bail!(
+                    "aggregate: client streamed {seen} tensors, schema has only {}",
+                    self.agg.len()
+                );
+            }
+        } else if seen != self.agg.len() {
             bail!(
                 "aggregate: client streamed {seen} tensors, schema has {}",
                 self.agg.len()
@@ -241,9 +281,11 @@ impl StreamingMean {
 
     /// Fold one whole client result into the accumulator (batch
     /// compatibility path over [`StreamingMean::fold_tensor`]). The caller
-    /// drops the result right after — nothing of it is retained here.
+    /// drops the result right after — nothing of it is retained here. In
+    /// sparse mode any subset body is accepted; each record still
+    /// validates name/shape/dtype against the schema.
     pub fn fold(&mut self, r: &FlMessage) -> Result<()> {
-        if !self.agg.same_schema(&r.body) {
+        if !self.sparse && !self.agg.same_schema(&r.body) {
             bail!(
                 "aggregate: client {} returned mismatched schema ({} tensors vs {})",
                 r.client,
@@ -269,12 +311,51 @@ impl StreamingMean {
     }
 
     /// Take the weighted mean of everything folded (plus its cumulative
-    /// weight), resetting the fold state. Errors if no weight arrived, or
-    /// if any f32 tensor's folded weight disagrees with the total (a
-    /// client stream that went missing partway).
+    /// weight), resetting the fold state.
+    ///
+    /// Dense mode errors if no weight arrived or if any f32 tensor's
+    /// folded weight disagrees with the total (a client stream that went
+    /// missing partway). Sparse mode instead completes the model against
+    /// the round anchor: untouched tensors (f32 with zero folded weight,
+    /// and every i32 tensor) carry the anchor forward, and in delta mode
+    /// touched tensors re-base as `anchor + mean(delta)` — each tensor's
+    /// mean is over exactly the streams that sent it, so the result stays
+    /// order-invariant.
     pub fn take_mean(&mut self) -> Result<(TensorDict, f64)> {
         if self.weight <= 0.0 {
             bail!("aggregate: no samples reported");
+        }
+        if self.sparse {
+            let mut out = std::mem::take(&mut self.agg);
+            for (name, t) in out.iter_mut() {
+                let Some(a) = self.anchor.get(name) else {
+                    continue;
+                };
+                if t.as_f32().is_none() {
+                    // i32 tensors are never aggregated: keep the anchor
+                    *t = a.clone();
+                    continue;
+                }
+                let wt = self.tensor_weight.get(name).copied().unwrap_or(0.0);
+                let Some(base) = a.as_f32() else {
+                    continue;
+                };
+                let x = t.as_f32_mut().expect("checked f32 above");
+                if wt <= 0.0 {
+                    // untouched: the global value carries forward
+                    x.copy_from_slice(base);
+                } else if self.delta {
+                    // touched delta: global + weighted mean of deltas
+                    for (xj, bj) in x.iter_mut().zip(base) {
+                        *xj += bj;
+                    }
+                }
+            }
+            let w = self.weight;
+            self.tensor_weight.clear();
+            self.weight = 0.0;
+            self.folded = 0;
+            return Ok((out, w));
         }
         for (name, t) in self.agg.iter() {
             if t.as_f32().is_none() {
@@ -299,6 +380,19 @@ impl StreamingMean {
     /// convenience over [`StreamingMean::take_mean`]).
     pub fn finish(mut self) -> Result<TensorDict> {
         self.take_mean().map(|(m, _)| m)
+    }
+
+    /// Enable sparse folding (see [`Aggregator::set_sparse`]). Takes
+    /// effect at the next [`StreamingMean::reset`]/`begin_round`, which
+    /// captures the round anchor.
+    pub fn set_sparse_mode(&mut self, delta: bool) {
+        self.sparse = true;
+        self.delta = delta;
+    }
+
+    /// True once sparse folding is enabled.
+    pub fn is_sparse(&self) -> bool {
+        self.sparse
     }
 }
 
@@ -325,7 +419,16 @@ impl Aggregator for StreamingMean {
         self.take_mean().map(|(m, _)| m)
     }
     fn partial(&mut self) -> Result<(TensorDict, f64)> {
+        if self.sparse {
+            // per-tensor weights can differ under sparse folding, and a
+            // (mean, W) pair cannot carry that upstream faithfully
+            bail!("sparse/delta folding cannot forward a single-weight partial; run sparse jobs flat");
+        }
         self.take_mean()
+    }
+    fn set_sparse(&mut self, delta: bool) -> Result<()> {
+        self.set_sparse_mode(delta);
+        Ok(())
     }
 }
 
@@ -387,6 +490,13 @@ impl Aggregator for FedProx {
         // out += (mean - out) / (1 + mu); i32 tensors keep the anchor
         out.lerp((1.0 / (1.0 + self.mu)) as f32, &mean);
         Ok(out)
+    }
+    fn set_sparse(&mut self, delta: bool) -> Result<()> {
+        // the inner mean completes the model against the anchor, so the
+        // proximal pull-back composes unchanged: untouched tensors see
+        // mean == anchor and stay put
+        self.inner.set_sparse_mode(delta);
+        Ok(())
     }
 }
 
@@ -524,6 +634,14 @@ impl Aggregator for FedOpt {
             }
         }
         Ok(out)
+    }
+
+    fn set_sparse(&mut self, delta: bool) -> Result<()> {
+        // untouched tensors come back from the inner mean equal to the
+        // anchor, so their pseudo-gradient is zero and the optimizer
+        // state still decays deterministically — order stays irrelevant
+        self.inner.set_sparse_mode(delta);
+        Ok(())
     }
 
     fn export_state(&self) -> TensorDict {
@@ -1045,5 +1163,167 @@ mod tests {
         let mut junk = TensorDict::new();
         junk.insert("nope", Tensor::f32(vec![1], vec![0.0]));
         assert!(opt.import_state(&junk).is_err());
+    }
+
+    // ------------------------------------------------ sparse/delta folds
+
+    fn two_tensor_global() -> TensorDict {
+        let mut g = TensorDict::new();
+        g.insert("adapter", Tensor::f32(vec![2], vec![1.0, -1.0]));
+        g.insert("base", Tensor::f32(vec![2], vec![10.0, 20.0]));
+        g.insert("steps", Tensor::i32(vec![1], vec![5]));
+        g
+    }
+
+    fn sparse_result(client: &str, name: &str, vals: &[f32], n: f64) -> FlMessage {
+        let mut body = TensorDict::new();
+        body.insert(name, Tensor::f32(vec![vals.len()], vals.to_vec()));
+        FlMessage::result("train", 0, client, body).with_meta("n_samples", Json::num(n))
+    }
+
+    #[test]
+    fn sparse_untouched_tensors_carry_the_anchor_forward() {
+        let global = two_tensor_global();
+        let mut agg = StreamingMean::new(&TensorDict::new());
+        agg.set_sparse_mode(false);
+        agg.begin_round(&global, 0);
+        // both clients send only the adapter, with absolute values
+        agg.fold(&sparse_result("a", "adapter", &[2.0, 0.0], 100.0))
+            .unwrap();
+        agg.fold(&sparse_result("b", "adapter", &[6.0, 4.0], 300.0))
+            .unwrap();
+        let out = agg.finalize().unwrap();
+        // adapter: weighted mean 0.25*[2,0] + 0.75*[6,4] = [5,3]
+        let a = out.get("adapter").unwrap().as_f32().unwrap();
+        assert!((a[0] - 5.0).abs() < 1e-6 && (a[1] - 3.0).abs() < 1e-6, "{a:?}");
+        // base and i32 steps carry the global forward untouched
+        assert_eq!(out.get("base").unwrap().as_f32().unwrap(), &[10.0, 20.0]);
+        assert_eq!(out.get("steps").unwrap().as_i32().unwrap(), &[5]);
+    }
+
+    #[test]
+    fn delta_folds_rebase_on_the_global() {
+        let global = two_tensor_global();
+        let mut agg = StreamingMean::new(&TensorDict::new());
+        agg.set_sparse_mode(true);
+        agg.begin_round(&global, 0);
+        // deltas: weighted mean 0.5*[1,1] + 0.5*[3,-1] = [2,0]
+        agg.fold(&sparse_result("a", "adapter", &[1.0, 1.0], 10.0))
+            .unwrap();
+        agg.fold(&sparse_result("b", "adapter", &[3.0, -1.0], 10.0))
+            .unwrap();
+        let out = agg.finalize().unwrap();
+        // adapter: global [1,-1] + mean delta [2,0] = [3,-1]
+        let a = out.get("adapter").unwrap().as_f32().unwrap();
+        assert!((a[0] - 3.0).abs() < 1e-6 && (a[1] + 1.0).abs() < 1e-6, "{a:?}");
+        assert_eq!(out.get("base").unwrap().as_f32().unwrap(), &[10.0, 20.0]);
+    }
+
+    #[test]
+    fn delta_full_coverage_matches_dense_mean() {
+        // if every client deltas every tensor, delta folding must agree
+        // with the dense absolute path exactly
+        crate::util::prop::check("delta == dense on full coverage", 25, |g| {
+            let len = g.usize_in(1, 20);
+            let k = g.usize_in(2, 5);
+            let global: Vec<f32> = (0..len).map(|_| g.f32_in(-3.0, 3.0)).collect();
+            let gdict = model(&global);
+            let mut dense = StreamingMean::new(&TensorDict::new());
+            dense.begin_round(&gdict, 0);
+            let mut sparse = StreamingMean::new(&TensorDict::new());
+            sparse.set_sparse_mode(true);
+            sparse.begin_round(&gdict, 0);
+            for i in 0..k {
+                let vals: Vec<f32> = (0..len).map(|_| g.f32_in(-5.0, 5.0)).collect();
+                let deltas: Vec<f32> =
+                    vals.iter().zip(&global).map(|(v, b)| v - b).collect();
+                let n = g.usize_in(1, 500) as f64;
+                dense
+                    .fold(&result(&format!("c{i}"), &vals, n))
+                    .map_err(|e| e.to_string())?;
+                sparse
+                    .fold(&sparse_result(&format!("c{i}"), "w", &deltas, n))
+                    .map_err(|e| e.to_string())?;
+            }
+            let d = dense.finalize().map_err(|e| e.to_string())?;
+            let s = sparse.finalize().map_err(|e| e.to_string())?;
+            crate::util::prop::assert_that(
+                d.max_abs_diff(&s) < 1e-4,
+                "delta fold diverged from dense mean",
+            )
+        });
+    }
+
+    #[test]
+    fn prop_sparse_folds_are_order_invariant_for_every_strategy() {
+        // clients send random subsets as deltas; for each strategy the
+        // next global must not depend on fold order
+        crate::util::prop::check("sparse fold order invariance", 15, |g| {
+            let len = g.usize_in(1, 12);
+            let k = g.usize_in(2, 4);
+            let names = ["t0", "t1", "t2"];
+            let mut global = TensorDict::new();
+            for n in names {
+                let vals: Vec<f32> = (0..len).map(|_| g.f32_in(-2.0, 2.0)).collect();
+                global.insert(n, Tensor::f32(vec![len], vals));
+            }
+            let mut results = Vec::new();
+            for i in 0..k {
+                let mut body = TensorDict::new();
+                // every client sends t0 plus a random subset of the rest
+                for (j, n) in names.iter().enumerate() {
+                    if j == 0 || g.usize_in(0, 1) == 1 {
+                        let vals: Vec<f32> =
+                            (0..len).map(|_| g.f32_in(-1.0, 1.0)).collect();
+                        body.insert(*n, Tensor::f32(vec![len], vals));
+                    }
+                }
+                results.push(
+                    FlMessage::result("train", 0, &format!("c{i}"), body)
+                        .with_meta("n_samples", Json::num(g.usize_in(1, 300) as f64)),
+                );
+            }
+            let mut perm: Vec<usize> = (0..k).collect();
+            g.rng().shuffle(&mut perm);
+            for spec in specs_under_test() {
+                let run = |order: &[usize]| -> Result<TensorDict> {
+                    let mut a = build_aggregator(&spec);
+                    a.set_sparse(true)?;
+                    a.begin_round(&global, 0);
+                    for &i in order {
+                        let r = &results[i];
+                        let w = weight_of(r);
+                        for (name, t) in r.body.iter() {
+                            a.fold_tensor(name, t, w)?;
+                        }
+                        a.client_done(w, r.body.len())?;
+                    }
+                    a.finalize()
+                };
+                let fwd = run(&(0..k).collect::<Vec<_>>()).map_err(|e| e.to_string())?;
+                let shuf = run(&perm).map_err(|e| e.to_string())?;
+                crate::util::prop::assert_that(
+                    fwd.max_abs_diff(&shuf) < 1e-4,
+                    "sparse fold diverged under order shuffle",
+                )?;
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn sparse_mode_refuses_partials_and_oversized_streams() {
+        let mut agg = StreamingMean::new(&TensorDict::new());
+        agg.set_sparse_mode(true);
+        agg.begin_round(&model(&[0.0]), 0);
+        agg.fold_tensor("w", &Tensor::f32(vec![1], vec![1.0]), 1.0)
+            .unwrap();
+        agg.client_done(1.0, 1).unwrap();
+        // a mid-tier partial cannot represent per-tensor weights
+        assert!(Aggregator::partial(&mut agg).is_err());
+        // more records than the schema holds is still an error
+        assert!(agg.client_done(1.0, 2).is_err());
+        // sub-schema streams are fine (that's the point)
+        assert!(agg.client_done(1.0, 0).is_ok());
     }
 }

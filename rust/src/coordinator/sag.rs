@@ -118,6 +118,10 @@ pub struct ScatterAndGather {
     /// this empty: the mid-tier nodes mirror the codec instead, and the
     /// partials they forward are plain f32.
     pub recv_filters: Vec<FilterSpec>,
+    /// Checkpoint cadence: every Nth completed round writes a full
+    /// snapshot; rounds between write delta checkpoints carrying only
+    /// the tensors that changed (1 = always full).
+    pub checkpoint_every: usize,
     /// Completed-round metrics.
     pub history: Vec<RoundMetrics>,
     /// Best (lowest) mean val loss and its round.
@@ -155,6 +159,7 @@ impl ScatterAndGather {
             task_name: "train".to_string(),
             model,
             recv_filters: Vec::new(),
+            checkpoint_every: 1,
             history: Vec::new(),
             best: None,
             best_model: None,
@@ -166,6 +171,17 @@ impl ScatterAndGather {
     /// The aggregation strategy's name ("fedavg", "fedprox", ...).
     pub fn aggregator_name(&self) -> &'static str {
         self.name
+    }
+
+    /// Switch the aggregator into sparse folding (delta-native jobs:
+    /// clients send a subset of the global schema; with `delta`, values
+    /// are deltas rebased on the global). Errors if the strategy cannot
+    /// fold sparsely.
+    pub fn set_sparse(&mut self, delta: bool) -> Result<()> {
+        self.aggregator
+            .as_mut()
+            .ok_or_else(|| anyhow!("aggregator lost by a failed round"))?
+            .set_sparse(delta)
     }
 }
 
@@ -296,7 +312,13 @@ impl Controller for ScatterAndGather {
                     .as_ref()
                     .map(|a| a.export_state())
                     .unwrap_or_default();
-                store.save_round(&ctx.job_name, round, &self.model, &state)?;
+                store.save_round_chained(
+                    &ctx.job_name,
+                    round,
+                    &self.model,
+                    &state,
+                    self.checkpoint_every,
+                )?;
             }
             // bookkeeping: global-model validation scores from clients
             stats.per_client.sort_by(|a, b| a.0.cmp(&b.0));

@@ -140,6 +140,8 @@ pub fn run_one_job_opts<C: Controller + ?Sized>(
                     stale_stream_age_s: job.stream.stale_stream_age_s,
                     executor,
                     filters,
+                    enc: job.update_codec,
+                    delta: job.delta_updates,
                 },
             );
         }

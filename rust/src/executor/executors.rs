@@ -163,6 +163,9 @@ pub struct TrainExecutor {
     pub local_steps: usize,
     pub eval_batches: usize,
     pub trainable_only: bool,
+    /// Send (local − global) deltas instead of absolute params (the
+    /// server's delta-mode aggregator rebases the mean on the global).
+    pub delta_updates: bool,
     train_batch: usize,
     eval_batch: usize,
     /// K-fused LM train artifact, when one exists for this family
@@ -202,6 +205,7 @@ impl TrainExecutor {
             local_steps,
             eval_batches,
             trainable_only,
+            delta_updates: false,
             train_batch,
             eval_batch,
             fused,
@@ -264,7 +268,20 @@ impl Executor for TrainExecutor {
                         train_acc = m.acc as f64;
                     }
                 }
-                let body = self.trainer.state.communicated(self.trainable_only);
+                let mut body = self.trainer.state.communicated(self.trainable_only);
+                if self.delta_updates {
+                    for (name, t) in body.iter_mut() {
+                        let (Some(v), Some(g)) = (
+                            t.as_f32_mut(),
+                            task.body.get(name).and_then(|g| g.as_f32()),
+                        ) else {
+                            continue;
+                        };
+                        if v.len() == g.len() {
+                            v.iter_mut().zip(g).for_each(|(x, b)| *x -= b);
+                        }
+                    }
+                }
                 Ok(FlMessage::result(&task.task, task.round, "", body)
                     .with_meta("n_samples", Json::num(self.source.n_samples() as f64))
                     .with_meta("val_loss", Json::num(val_loss))
@@ -368,6 +385,13 @@ pub struct StreamTestExecutor {
     /// Simulated compute time per key (lets Fig-5 runs model slow local
     /// training without a GPU).
     pub work_ms: u64,
+    /// Name prefixes of the "trainable" tensors: only these are touched
+    /// and sent back (empty = all — the dense workload). Models a
+    /// LoRA-style job where adapters are a sliver of the model.
+    pub trainable: Vec<String>,
+    /// Emit per-tensor *deltas* (update − incoming global) instead of
+    /// absolute values.
+    pub emit_delta: bool,
 }
 
 impl StreamTestExecutor {
@@ -376,7 +400,13 @@ impl StreamTestExecutor {
             trainer,
             delta,
             work_ms: 0,
+            trainable: Vec::new(),
+            emit_delta: false,
         }
+    }
+
+    fn is_trainable(&self, name: &str) -> bool {
+        self.trainable.is_empty() || self.trainable.iter().any(|p| name.starts_with(p.as_str()))
     }
 
     /// Build the synthetic model: `keys` tensors of `key_elems` f32 each
@@ -395,36 +425,48 @@ impl StreamTestExecutor {
 
 impl Executor for StreamTestExecutor {
     fn execute(&mut self, task: &FlMessage) -> Result<FlMessage> {
-        let mut body = task.body.clone();
         let delta_t = Tensor::f32(vec![1, 1], vec![self.delta]);
-        for (_name, t) in body.iter_mut() {
+        // sparse jobs send only the trainable subset; dense jobs echo the
+        // whole schema back (the pre-delta behavior)
+        let mut body = TensorDict::new();
+        for (name, t0) in task.body.iter() {
+            if !self.is_trainable(name) {
+                continue;
+            }
             if self.work_ms > 0 {
                 std::thread::sleep(std::time::Duration::from_millis(self.work_ms));
             }
-            let Some(v) = t.as_f32_mut() else { continue };
-            match &mut self.trainer {
-                Some(tr) => {
-                    // run through the Pallas-lowered addnum artifact when the
-                    // key size matches its fixed shape, else fall back
-                    let n = tr
-                        .manifest("addnum")?
-                        .meta
-                        .get("n")
-                        .as_usize()
-                        .unwrap_or(0);
-                    if v.len() == n {
-                        let mut inputs = TensorDict::new();
-                        inputs.insert("x", Tensor::f32(vec![n], v.to_vec()));
-                        inputs.insert("delta", delta_t.clone());
-                        #[allow(clippy::let_and_return)]
-                        let out = tr.runtime().execute("addnum", inputs)?;
-                        v.copy_from_slice(out.get("y").unwrap().as_f32().unwrap());
-                    } else {
-                        v.iter_mut().for_each(|x| *x += self.delta);
+            let mut t = t0.clone();
+            if let Some(v) = t.as_f32_mut() {
+                match &mut self.trainer {
+                    Some(tr) => {
+                        // run through the Pallas-lowered addnum artifact when
+                        // the key size matches its fixed shape, else fall back
+                        let n = tr
+                            .manifest("addnum")?
+                            .meta
+                            .get("n")
+                            .as_usize()
+                            .unwrap_or(0);
+                        if v.len() == n {
+                            let mut inputs = TensorDict::new();
+                            inputs.insert("x", Tensor::f32(vec![n], v.to_vec()));
+                            inputs.insert("delta", delta_t.clone());
+                            #[allow(clippy::let_and_return)]
+                            let out = tr.runtime().execute("addnum", inputs)?;
+                            v.copy_from_slice(out.get("y").unwrap().as_f32().unwrap());
+                        } else {
+                            v.iter_mut().for_each(|x| *x += self.delta);
+                        }
                     }
+                    None => v.iter_mut().for_each(|x| *x += self.delta),
                 }
-                None => v.iter_mut().for_each(|x| *x += self.delta),
+                if self.emit_delta {
+                    let base = t0.as_f32().expect("same tensor, checked f32");
+                    v.iter_mut().zip(base).for_each(|(x, b)| *x -= b);
+                }
             }
+            body.insert(name, t);
         }
         Ok(FlMessage::result(&task.task, task.round, "", body)
             .with_meta("n_samples", Json::num(1.0)))
@@ -494,5 +536,35 @@ mod tests {
         let m = StreamTestExecutor::build_model(64, 512, 0.0);
         assert_eq!(m.len(), 64);
         assert_eq!(m.byte_size(), 64 * 512 * 4);
+    }
+
+    #[test]
+    fn stream_test_sparse_delta_emits_only_trainable_deltas() {
+        let mut exec = StreamTestExecutor::new(None, 0.5);
+        exec.trainable = vec!["key_00".into()]; // key_000..key_009 of 16
+        exec.emit_delta = true;
+        let model = StreamTestExecutor::build_model(16, 8, 1.0);
+        let task = FlMessage::task("stream_test", 0, model);
+        let result = exec.execute(&task).unwrap();
+        // only the ten key_00x tensors leave the client
+        assert_eq!(result.body.len(), 10);
+        assert!(result.body.names().all(|n| n.starts_with("key_00")));
+        // and their values are the *delta*, not the absolute update
+        for (_n, t) in result.body.iter() {
+            assert!(t.as_f32().unwrap().iter().all(|&v| (v - 0.5).abs() < 1e-6));
+        }
+        // empty filter + no delta flag = the dense echo, unchanged
+        let mut dense = StreamTestExecutor::new(None, 0.5);
+        let r = dense
+            .execute(&FlMessage::task(
+                "stream_test",
+                0,
+                StreamTestExecutor::build_model(4, 8, 1.0),
+            ))
+            .unwrap();
+        assert_eq!(r.body.len(), 4);
+        for (_n, t) in r.body.iter() {
+            assert!(t.as_f32().unwrap().iter().all(|&v| (v - 1.5).abs() < 1e-6));
+        }
     }
 }

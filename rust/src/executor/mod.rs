@@ -28,7 +28,7 @@ use crate::filters::Filter;
 use crate::message::{FlMessage, Kind};
 use crate::sfm::mux::MuxConn;
 use crate::streaming::Messenger;
-use crate::tensor::TensorDict;
+use crate::tensor::{RecordEnc, TensorDict};
 use crate::util::json::Json;
 
 /// A client-side task handler (the paper's Executor running inside each
@@ -51,6 +51,12 @@ pub struct ClientRuntime {
     pub timings: Vec<(f64, f64, f64)>,
     /// (task name, round) of the task last received (error attribution).
     last_task: Option<(String, usize)>,
+    /// Transport codec for outgoing result records (delta-native jobs
+    /// quantize to int8/int4; the server dequantizes on decode).
+    enc: RecordEnc,
+    /// Results carry parameter deltas, not absolute values (stamped on
+    /// the outgoing manifest so the server can cross-check its fold mode).
+    delta: bool,
 }
 
 impl ClientRuntime {
@@ -67,7 +73,16 @@ impl ClientRuntime {
             filters,
             timings: Vec::new(),
             last_task: None,
+            enc: RecordEnc::Raw,
+            delta: false,
         }
+    }
+
+    /// Configure the delta-native wire: record codec for outgoing results
+    /// and whether their payloads are deltas against the incoming global.
+    pub fn set_wire(&mut self, enc: RecordEnc, delta: bool) {
+        self.enc = enc;
+        self.delta = delta;
     }
 
     /// Run the task loop to completion. Returns the number of tasks done.
@@ -93,10 +108,14 @@ impl ClientRuntime {
             result.round = task.round;
             result.body =
                 crate::filters::apply_result_chain(&mut self.filters, result.body, task.round);
+            // manifest + base_version stamp: the server can verify which
+            // tensors this update carries and which global it was
+            // computed against (delta-native payloads)
+            let result = result.with_manifest(task.round, self.delta);
             let exec_s = t1.elapsed().as_secs_f64();
             let t2 = Instant::now();
             self.messenger
-                .send_msg(&result)
+                .send_msg_enc(&result, self.enc)
                 .map_err(|e| anyhow!("{}: send result: {e}", self.name))?;
             // the task is fully answered: a later failure (e.g. a severed
             // channel while idle) must NOT emit a marker for this round —
@@ -217,6 +236,11 @@ pub struct JobStart {
     pub stale_stream_age_s: Option<f64>,
     pub executor: Box<dyn Executor>,
     pub filters: Vec<Box<dyn Filter>>,
+    /// Transport codec for this job's result records.
+    pub enc: RecordEnc,
+    /// Results are deltas against the incoming global (stamped on the
+    /// outgoing manifest).
+    pub delta: bool,
 }
 
 /// One client task-loop outcome: (client name, tasks-done or error).
@@ -401,6 +425,7 @@ impl MultiJobRuntime {
                     .spawn(move || {
                         let mut rt =
                             ClientRuntime::new(&name, messenger, start.executor, start.filters);
+                        rt.set_wire(start.enc, start.delta);
                         let res = rt.run_loop().map_err(|e| e.to_string());
                         if let Err(e) = &res {
                             rt.send_error_marker(e);

@@ -360,6 +360,14 @@ fn build_sag(job: &JobConfig, initial: fedflare::tensor::TensorDict) -> ScatterA
     if job.artifact == "stream_test" {
         c.task_name = "stream_test".into();
     }
+    c.checkpoint_every = job.checkpoint_every_n_rounds;
+    if job.sparse_updates() {
+        // clients send a subset of the global schema (trainable filter)
+        // and possibly deltas: fold sparsely against the persistent
+        // global. Config validation already rejected tree topologies.
+        c.set_sparse(job.delta_updates)
+            .expect("sparse_updates validated against the aggregator spec");
+    }
     // in a tree the trailing-codec mirror runs on the mid-tier nodes;
     // the partials reaching the root are plain f32
     c.recv_filters = if tree {
@@ -1042,6 +1050,8 @@ fn cmd_client(args: &[String]) -> Result<()> {
             stale_stream_age_s: job.stream.stale_stream_age_s,
             executor,
             filters,
+            enc: job.update_codec,
+            delta: job.delta_updates,
         },
     );
 

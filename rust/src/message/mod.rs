@@ -146,6 +146,58 @@ impl FlMessage {
         self.meta.get(key).as_f64()
     }
 
+    // -------------------------------------------------- sparse manifests
+    //
+    // A sparse update carries only a subset of the global model's tensors
+    // (LoRA adapters, frozen-base deltas). The meta header declares what
+    // the body contains and which global version it was computed against,
+    // so the server can validate and fold without ever seeing the rest of
+    // the model. Riding meta keeps the v2 record framing unchanged.
+
+    /// Stamp this message as a sparse update: a `manifest` of the body's
+    /// tensor names, the `base_version` (round) of the global model it was
+    /// computed against, and whether the records are deltas
+    /// (`local - base`) rather than absolute values.
+    pub fn with_manifest(self, base_version: usize, delta: bool) -> FlMessage {
+        let names = Json::arr(self.body.names().map(Json::str).collect::<Vec<_>>());
+        self.with_meta(META_MANIFEST, names)
+            .with_meta(META_BASE_VERSION, Json::num(base_version as f64))
+            .with_meta(META_DELTA, Json::Bool(delta))
+    }
+
+    /// The declared tensor-name manifest, if this is a sparse update.
+    pub fn manifest(&self) -> Option<Vec<String>> {
+        self.meta.get(META_MANIFEST).as_arr().map(|a| {
+            a.iter()
+                .filter_map(|v| v.as_str().map(str::to_string))
+                .collect()
+        })
+    }
+
+    /// The global-model version (round) a sparse update was computed
+    /// against.
+    pub fn base_version(&self) -> Option<usize> {
+        self.meta.get(META_BASE_VERSION).as_usize()
+    }
+
+    /// True if the body's records are deltas against the base version.
+    pub fn is_delta(&self) -> bool {
+        self.meta.get(META_DELTA).as_bool().unwrap_or(false)
+    }
+
+    /// Check the body against its own manifest: every declared tensor
+    /// arrived and nothing undeclared did. A message without a manifest
+    /// passes vacuously.
+    pub fn manifest_complete(&self) -> bool {
+        match self.manifest() {
+            None => true,
+            Some(names) => {
+                names.len() == self.body.len()
+                    && names.iter().all(|n| self.body.contains(n))
+            }
+        }
+    }
+
     /// The JSON routing/meta header shared by both wire versions.
     fn header_json(&self) -> String {
         Json::obj([
@@ -274,6 +326,13 @@ impl FlMessage {
 pub const V2_MAGIC: u32 = 0x3276_5746;
 /// Wire format v2 version byte.
 pub const V2_VERSION: u8 = 2;
+
+/// Meta key: sorted tensor-name manifest of a sparse body.
+pub const META_MANIFEST: &str = "manifest";
+/// Meta key: global-model version (round) a sparse update folds against.
+pub const META_BASE_VERSION: &str = "base_version";
+/// Meta key: body records are deltas (`local - base`), not absolutes.
+pub const META_DELTA: &str = "delta";
 
 /// Lazy frame encoder for wire format v2: walks the message's records one
 /// at a time, cutting fixed-size SFM frames as it goes. At any moment it
@@ -486,10 +545,54 @@ mod tests {
     #[test]
     fn v2_encoded_len_is_exact() {
         for m in [msg(), FlMessage::bye(), FlMessage::register("c9")] {
-            for enc in [RecordEnc::Raw, RecordEnc::F16] {
+            for enc in [
+                RecordEnc::Raw,
+                RecordEnc::F16,
+                RecordEnc::Int8,
+                RecordEnc::Int4,
+            ] {
                 assert_eq!(m.to_v2_bytes(enc).len(), m.v2_encoded_len(enc));
             }
         }
+        // odd element counts exercise int4's tail-nibble packing
+        let mut body = TensorDict::new();
+        body.insert("odd", Tensor::f32(vec![5], vec![1., 2., 3., 4., 5.]));
+        let m = FlMessage::result("t", 0, "c", body);
+        assert_eq!(
+            m.to_v2_bytes(RecordEnc::Int4).len(),
+            m.v2_encoded_len(RecordEnc::Int4)
+        );
+    }
+
+    #[test]
+    fn manifest_rides_meta_over_both_wire_formats() {
+        let m = msg().with_manifest(7, true);
+        assert_eq!(m.base_version(), Some(7));
+        assert!(m.is_delta());
+        assert_eq!(m.manifest(), Some(vec!["w".to_string()]));
+        assert!(m.manifest_complete());
+        for decoded in [
+            FlMessage::from_bytes(&m.to_bytes()).unwrap(),
+            FlMessage::from_v2_bytes(&m.to_v2_bytes(RecordEnc::Int8)).unwrap(),
+        ] {
+            assert_eq!(decoded.base_version(), Some(7));
+            assert!(decoded.is_delta());
+            assert_eq!(decoded.manifest(), Some(vec!["w".to_string()]));
+        }
+        // a message without a manifest is vacuously complete and not a delta
+        assert!(msg().manifest_complete());
+        assert!(!msg().is_delta());
+        assert_eq!(msg().base_version(), None);
+    }
+
+    #[test]
+    fn manifest_mismatch_detected() {
+        let mut m = msg().with_manifest(1, false);
+        m.body.insert("extra", Tensor::f32(vec![1], vec![9.0]));
+        assert!(!m.manifest_complete()); // undeclared tensor arrived
+        let mut m = msg().with_manifest(1, false);
+        m.body.remove("w");
+        assert!(!m.manifest_complete()); // declared tensor missing
     }
 
     #[test]

@@ -15,6 +15,16 @@
 //!   function of `(seed, round)` and aggregation is deterministic, the
 //!   remaining rounds of a resumed run are byte-identical to an
 //!   uninterrupted one given the same client set.
+//!
+//!   With `checkpoint_every_n_rounds > 1`
+//!   ([`JobStore::save_round_chained`]) only every Nth round writes the
+//!   full snapshot; rounds between write **delta checkpoints**
+//!   (`jobs/<job>.ckpt.d<round>`) holding just the tensors that changed
+//!   since the previous round — as raw v2 tensor records — plus the
+//!   aggregator state, so checkpoint write cost is proportional to what
+//!   changed. [`JobStore::load_round`] reconstructs by replaying the
+//!   chain onto the snapshot; a torn chain (gap, corrupt or mismatched
+//!   link) reads as absent, exactly like a corrupt full checkpoint.
 //! * **The queue manifest** (`queue.json`): job name → lifecycle status,
 //!   updated by the [`JobScheduler`](crate::coordinator::JobScheduler)
 //!   at submit and at every terminal transition. On `serve --state-dir`
@@ -31,7 +41,7 @@ use std::sync::Mutex;
 
 use anyhow::{anyhow, bail, Context, Result};
 
-use crate::tensor::TensorDict;
+use crate::tensor::{decode_record, encode_record, RecordEnc, Tensor, TensorDict};
 use crate::util::bytes::{Reader, Writer};
 use crate::util::json::Json;
 
@@ -39,6 +49,10 @@ use crate::util::json::Json;
 const CKPT_MAGIC: u32 = 0x5043_4A46;
 /// Checkpoint format version.
 const CKPT_VERSION: u8 = 1;
+/// Delta-checkpoint file magic ("FJCD" little-endian).
+const DELTA_MAGIC: u32 = 0x4443_4A46;
+/// Delta-checkpoint format version.
+const DELTA_VERSION: u8 = 1;
 
 /// One job's durable round state, as loaded from disk.
 pub struct RoundCheckpoint {
@@ -80,6 +94,38 @@ impl JobStore {
         self.dir.join("jobs").join(format!("{}.ckpt", sanitize(job)))
     }
 
+    /// Delta-checkpoint path for one round. The `.ckpt.d<round>` suffix
+    /// extends the full snapshot's exact file name, so no other job's
+    /// files can ever match this job's chain scan (sanitize keeps `.`,
+    /// but `<other>.ckpt.d<n>` only matches if the remainder after
+    /// `<this>.ckpt.d` is a bare integer — appending anything to it
+    /// breaks that).
+    fn delta_path(&self, job: &str, round: usize) -> PathBuf {
+        self.dir
+            .join("jobs")
+            .join(format!("{}.ckpt.d{round}", sanitize(job)))
+    }
+
+    /// Rounds with a delta-checkpoint file on disk, sorted ascending.
+    fn delta_rounds(&self, job: &str) -> Vec<usize> {
+        let prefix = format!("{}.ckpt.d", sanitize(job));
+        let mut rounds = Vec::new();
+        let Ok(entries) = std::fs::read_dir(self.dir.join("jobs")) else {
+            return rounds;
+        };
+        for entry in entries.flatten() {
+            let name = entry.file_name();
+            let Some(name) = name.to_str() else { continue };
+            if let Some(tail) = name.strip_prefix(&prefix) {
+                if let Ok(r) = tail.parse::<usize>() {
+                    rounds.push(r);
+                }
+            }
+        }
+        rounds.sort_unstable();
+        rounds
+    }
+
     fn manifest_path(&self) -> PathBuf {
         self.dir.join("queue.json")
     }
@@ -102,10 +148,71 @@ impl JobStore {
         atomic_write(&self.ckpt_path(job), w.as_slice())
     }
 
-    /// Load the last persisted round checkpoint for `job`. `Ok(None)`
-    /// when no (readable) checkpoint exists — corrupt files are logged
-    /// and treated as absent so recovery never wedges on a torn write.
-    pub fn load_round(&self, job: &str) -> Result<Option<RoundCheckpoint>> {
+    /// Chain-aware save: with `every_n > 1`, only every Nth round (and
+    /// any round that can't extend the current chain) writes the full
+    /// snapshot; rounds between append a **delta checkpoint** holding
+    /// just the tensors that changed since the previous round, as raw v2
+    /// tensor records, plus the aggregator state. `every_n <= 1` is
+    /// exactly [`JobStore::save_round`].
+    pub fn save_round_chained(
+        &self,
+        job: &str,
+        round: usize,
+        model: &TensorDict,
+        agg_state: &TensorDict,
+        every_n: usize,
+    ) -> Result<()> {
+        if every_n > 1 {
+            if let Some(full) = self.load_full(job)? {
+                // extend the chain only when it is intact, ends exactly
+                // at the previous round, and the cadence hasn't elapsed
+                if round > full.round && round - full.round < every_n {
+                    if let Some(prev) = self.load_round(job)? {
+                        if prev.round + 1 == round {
+                            return self.save_delta(job, round, &prev.model, model, agg_state);
+                        }
+                    }
+                }
+            }
+        }
+        // full snapshot: drop the old chain *first*, so a crash between
+        // the two steps leaves the previous full checkpoint with no
+        // stray deltas (a resume then re-runs rounds deterministically)
+        self.clear_deltas(job)?;
+        self.save_round(job, round, model, agg_state)
+    }
+
+    /// Write the delta checkpoint for `round`: tensors of `model` that
+    /// differ from (or are absent in) `prev`, plus the aggregator state.
+    fn save_delta(
+        &self,
+        job: &str,
+        round: usize,
+        prev: &TensorDict,
+        model: &TensorDict,
+        agg_state: &TensorDict,
+    ) -> Result<()> {
+        let changed: Vec<(&str, &Tensor)> = model
+            .iter()
+            .filter(|(name, t)| prev.get(name) != Some(*t))
+            .collect();
+        let mut w = Writer::new();
+        w.u32(DELTA_MAGIC);
+        w.u8(DELTA_VERSION);
+        w.u64(round as u64);
+        w.str(job);
+        w.u32(changed.len() as u32);
+        for (name, t) in changed {
+            // raw v2 records: quantizing a checkpoint would break the
+            // byte-identical-resume guarantee
+            w.blob(&encode_record(name, t, RecordEnc::Raw));
+        }
+        w.blob(&agg_state.to_bytes());
+        atomic_write(&self.delta_path(job, round), w.as_slice())
+    }
+
+    /// Load just the full snapshot, ignoring any delta chain on top.
+    fn load_full(&self, job: &str) -> Result<Option<RoundCheckpoint>> {
         let path = self.ckpt_path(job);
         let bytes = match std::fs::read(&path) {
             Ok(b) => b,
@@ -124,14 +231,75 @@ impl JobStore {
         }
     }
 
-    /// Drop `job`'s round checkpoint (a fresh submission under a reused
-    /// name must not resume a previous job's rounds).
+    /// Load the last persisted round checkpoint for `job`, replaying any
+    /// delta chain onto the full snapshot. `Ok(None)` when no (readable)
+    /// checkpoint exists — corrupt files are logged and treated as
+    /// absent so recovery never wedges on a torn write, and a **torn
+    /// chain** (a round gap, a corrupt or mismatched delta) makes the
+    /// whole checkpoint read as absent: resuming from a partial replay
+    /// would silently diverge from the uninterrupted run.
+    pub fn load_round(&self, job: &str) -> Result<Option<RoundCheckpoint>> {
+        let Some(mut ck) = self.load_full(job)? else {
+            return Ok(None);
+        };
+        let rounds = self.delta_rounds(job);
+        let mut expect = ck.round + 1;
+        for r in rounds {
+            if r != expect {
+                log::warn!(
+                    "job '{job}': delta chain torn (found round {r}, expected {expect}); \
+                     treating checkpoint as absent"
+                );
+                return Ok(None);
+            }
+            let path = self.delta_path(job, r);
+            let bytes = std::fs::read(&path)
+                .map_err(|e| anyhow!("read {}: {e}", path.display()))?;
+            match decode_delta(&bytes, job, r) {
+                Ok((changed, agg_state)) => {
+                    for (name, t) in changed {
+                        ck.model.insert(name, t);
+                    }
+                    ck.agg_state = agg_state;
+                    ck.round = r;
+                }
+                Err(e) => {
+                    log::warn!(
+                        "job '{job}': unreadable delta checkpoint {}: {e}; \
+                         treating checkpoint as absent",
+                        path.display()
+                    );
+                    return Ok(None);
+                }
+            }
+            expect += 1;
+        }
+        Ok(Some(ck))
+    }
+
+    /// Drop `job`'s round checkpoint and its whole delta chain (a fresh
+    /// submission under a reused name must not resume a previous job's
+    /// rounds). The full snapshot goes first: if a crash interrupts the
+    /// sweep, the leftover deltas have no base and read as absent.
     pub fn clear_round(&self, job: &str) -> Result<()> {
         match std::fs::remove_file(self.ckpt_path(job)) {
-            Ok(()) => Ok(()),
-            Err(e) if e.kind() == std::io::ErrorKind::NotFound => Ok(()),
-            Err(e) => Err(anyhow!("clear checkpoint for '{job}': {e}")),
+            Ok(()) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+            Err(e) => return Err(anyhow!("clear checkpoint for '{job}': {e}")),
         }
+        self.clear_deltas(job)
+    }
+
+    /// Remove every delta-checkpoint file of `job`'s chain.
+    fn clear_deltas(&self, job: &str) -> Result<()> {
+        for r in self.delta_rounds(job) {
+            match std::fs::remove_file(self.delta_path(job, r)) {
+                Ok(()) => {}
+                Err(e) if e.kind() == std::io::ErrorKind::NotFound => {}
+                Err(e) => return Err(anyhow!("clear delta {r} for '{job}': {e}")),
+            }
+        }
+        Ok(())
     }
 
     /// Record `job`'s lifecycle status ("queued" / "running" /
@@ -203,6 +371,37 @@ fn decode_checkpoint(bytes: &[u8], job: &str) -> Result<RoundCheckpoint> {
         model,
         agg_state,
     })
+}
+
+fn decode_delta(bytes: &[u8], job: &str, round: usize) -> Result<(Vec<(String, Tensor)>, TensorDict)> {
+    let mut r = Reader::new(bytes);
+    let magic = r.u32().map_err(|e| anyhow!("{e}"))?;
+    if magic != DELTA_MAGIC {
+        bail!("bad delta-checkpoint magic {magic:#x}");
+    }
+    let ver = r.u8().map_err(|e| anyhow!("{e}"))?;
+    if ver != DELTA_VERSION {
+        bail!("unsupported delta-checkpoint version {ver}");
+    }
+    let got_round = r.u64().map_err(|e| anyhow!("{e}"))? as usize;
+    if got_round != round {
+        bail!("delta checkpoint is for round {got_round}, not {round}");
+    }
+    let name = r.str().map_err(|e| anyhow!("{e}"))?;
+    if name != job {
+        bail!("delta checkpoint belongs to job '{name}', not '{job}'");
+    }
+    let n = r.u32().map_err(|e| anyhow!("{e}"))? as usize;
+    let mut changed = Vec::with_capacity(n);
+    for _ in 0..n {
+        let rec = r.blob().map_err(|e| anyhow!("{e}"))?;
+        let (name, t) = decode_record(rec).map_err(|e| anyhow!("{e}"))?;
+        changed.push((name, t));
+    }
+    let agg_bytes = r.blob().map_err(|e| anyhow!("{e}"))?;
+    let agg_state = TensorDict::from_bytes(agg_bytes).map_err(|e| anyhow!("{e}"))?;
+    r.expect_end().map_err(|e| anyhow!("{e}"))?;
+    Ok((changed, agg_state))
 }
 
 /// Write `bytes` to `path` atomically: temp file in the same directory,
@@ -316,6 +515,130 @@ mod tests {
         store.save_round("job:a", 2, &model(2.0), &TensorDict::new()).unwrap();
         assert_eq!(store.load_round("job a").unwrap().unwrap().round, 1);
         assert_eq!(store.load_round("job:a").unwrap().unwrap().round, 2);
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    fn two_tensor_model(hot: f32, cold: f32) -> TensorDict {
+        let mut d = TensorDict::new();
+        d.insert("hot", Tensor::f32(vec![2], vec![hot, hot + 1.0]));
+        d.insert("cold", Tensor::f32(vec![2], vec![cold, cold + 1.0]));
+        d
+    }
+
+    fn has_bytes(haystack: &[u8], needle: &[u8]) -> bool {
+        haystack.windows(needle.len()).any(|w| w == needle)
+    }
+
+    #[test]
+    fn delta_chain_reconstructs_every_round() {
+        let store = tmp_store("chain");
+        for r in 0..6 {
+            let m = model(r as f32);
+            let mut agg = TensorDict::new();
+            agg.insert("opt/step", Tensor::i32(vec![1], vec![r as i32]));
+            store.save_round_chained("j", r, &m, &agg, 3).unwrap();
+            // every intermediate state reconstructs byte-exact, including
+            // a resume that lands mid-chain between full snapshots
+            let ck = store.load_round("j").unwrap().expect("checkpoint");
+            assert_eq!(ck.round, r);
+            assert_eq!(ck.model.to_bytes(), m.to_bytes(), "round {r} model exact");
+            assert_eq!(
+                ck.agg_state.get("opt/step").unwrap().as_i32().unwrap(),
+                &[r as i32],
+                "round {r} agg state follows the chain"
+            );
+        }
+        // cadence 3: fulls at rounds 0 and 3 (the round-3 full clears
+        // d1/d2), deltas only at 4 and 5
+        let jobs = store.dir().join("jobs");
+        assert!(jobs.join("j.ckpt").exists());
+        for d in [4usize, 5] {
+            assert!(jobs.join(format!("j.ckpt.d{d}")).exists(), "delta {d}");
+        }
+        for d in [0usize, 1, 2, 3] {
+            assert!(!jobs.join(format!("j.ckpt.d{d}")).exists(), "no delta {d}");
+        }
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn delta_records_only_changed_tensors() {
+        let store = tmp_store("sparse_delta");
+        store
+            .save_round_chained("j", 0, &two_tensor_model(0.0, 7.0), &TensorDict::new(), 4)
+            .unwrap();
+        store
+            .save_round_chained("j", 1, &two_tensor_model(1.0, 7.0), &TensorDict::new(), 4)
+            .unwrap();
+        let bytes = std::fs::read(store.dir().join("jobs").join("j.ckpt.d1")).unwrap();
+        assert!(has_bytes(&bytes, b"hot"), "changed tensor is in the delta");
+        assert!(!has_bytes(&bytes, b"cold"), "untouched tensor is not");
+        let ck = store.load_round("j").unwrap().unwrap();
+        assert_eq!(
+            ck.model.to_bytes(),
+            two_tensor_model(1.0, 7.0).to_bytes(),
+            "untouched tensor carries forward from the full snapshot"
+        );
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn torn_chain_reads_as_absent_and_next_save_heals() {
+        let store = tmp_store("torn");
+        for r in 0..4 {
+            store
+                .save_round_chained("j", r, &model(r as f32), &TensorDict::new(), 8)
+                .unwrap();
+        }
+        // tear the chain in the middle: the whole checkpoint must read
+        // as absent — replaying past a gap would silently diverge
+        let jobs = store.dir().join("jobs");
+        std::fs::remove_file(jobs.join("j.ckpt.d2")).unwrap();
+        assert!(store.load_round("j").unwrap().is_none());
+        // the next chained save can't extend a torn chain: it falls back
+        // to a full snapshot and sweeps the stale deltas
+        store
+            .save_round_chained("j", 4, &model(4.0), &TensorDict::new(), 8)
+            .unwrap();
+        let ck = store.load_round("j").unwrap().expect("healed");
+        assert_eq!(ck.round, 4);
+        assert_eq!(ck.model.to_bytes(), model(4.0).to_bytes());
+        assert!(!jobs.join("j.ckpt.d1").exists(), "stale deltas swept");
+        assert!(!jobs.join("j.ckpt.d3").exists(), "stale deltas swept");
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn corrupt_delta_reads_as_absent() {
+        let store = tmp_store("corrupt_delta");
+        for r in 0..3 {
+            store
+                .save_round_chained("j", r, &model(r as f32), &TensorDict::new(), 8)
+                .unwrap();
+        }
+        let path = store.dir().join("jobs").join("j.ckpt.d1");
+        let bytes = std::fs::read(&path).unwrap();
+        std::fs::write(&path, &bytes[..bytes.len() / 2]).unwrap();
+        assert!(store.load_round("j").unwrap().is_none());
+        let _ = std::fs::remove_dir_all(store.dir());
+    }
+
+    #[test]
+    fn clear_round_removes_the_whole_chain() {
+        let store = tmp_store("chain_clear");
+        for r in 0..3 {
+            store
+                .save_round_chained("j", r, &model(r as f32), &TensorDict::new(), 8)
+                .unwrap();
+        }
+        let jobs = store.dir().join("jobs");
+        assert!(jobs.join("j.ckpt.d1").exists());
+        store.clear_round("j").unwrap();
+        assert!(store.load_round("j").unwrap().is_none());
+        assert!(!jobs.join("j.ckpt").exists());
+        assert!(!jobs.join("j.ckpt.d1").exists());
+        assert!(!jobs.join("j.ckpt.d2").exists());
+        store.clear_round("j").unwrap(); // idempotent
         let _ = std::fs::remove_dir_all(store.dir());
     }
 

@@ -129,13 +129,15 @@ pub fn token_train_executor_from(
     }
     let seq = trainer.train_manifest()?.seq();
     let src = TokenSource::new(train, eval, seq, cls, job.seed ^ 0xC11E ^ client_idx as u64);
-    Ok(Box::new(TrainExecutor::new(
+    let mut ex = TrainExecutor::new(
         trainer,
         Box::new(src),
         job.train.local_steps,
         job.train.eval_batches,
         job.trainable_only,
-    )?))
+    )?;
+    ex.delta_updates = job.delta_updates;
+    Ok(Box::new(ex))
 }
 
 /// Generic executor factory for `fedflare run/server/client`: maps the
@@ -157,7 +159,10 @@ pub fn build_executor(
                 .map(|rc| Trainer::eval_only(rc.clone(), "addnum", "addnum", 0))
                 .transpose()
                 .unwrap_or(None);
-            Ok(Box::new(StreamTestExecutor::new(trainer, 0.01)))
+            let mut ex = StreamTestExecutor::new(trainer, 0.01);
+            ex.trainable = job.trainable_filter.clone();
+            ex.emit_delta = job.delta_updates;
+            Ok(Box::new(ex))
         }
         "gpt_small_lora" => {
             let rc = rc.ok_or_else(|| anyhow!("artifact {family} needs a runtime"))?;

@@ -708,6 +708,8 @@ impl Fleet {
                     stale_stream_age_s: job.stream.stale_stream_age_s,
                     executor,
                     filters,
+                    enc: job.update_codec,
+                    delta: job.delta_updates,
                 },
             );
             if let Err(e) = self.open_job(idx, job_id, &job.name) {

@@ -397,6 +397,15 @@ pub enum RecordEnc {
     /// back to f32, so the dtype on both ends stays f32 and only the wire
     /// bytes halve.
     F16,
+    /// Affine 8-bit quantization: an 8-byte `f32 scale | f32 min` prefix
+    /// followed by one code byte per element (`x ≈ min + code * scale`).
+    /// f32 tensors only — i32 records fall back to raw. Per-element
+    /// dequantize error is bounded by `scale / 2 = (max - min) / 510`.
+    Int8,
+    /// Affine 4-bit quantization: the same 8-byte prefix followed by two
+    /// codes per byte (low nibble first; an odd tail leaves the high
+    /// nibble zero). Error bound is `scale / 2 = (max - min) / 30`.
+    Int4,
 }
 
 impl RecordEnc {
@@ -404,13 +413,35 @@ impl RecordEnc {
         match self {
             RecordEnc::Raw => 0,
             RecordEnc::F16 => 1,
+            RecordEnc::Int8 => 2,
+            RecordEnc::Int4 => 3,
         }
     }
     fn from_tag(t: u8) -> Option<RecordEnc> {
         match t {
             0 => Some(RecordEnc::Raw),
             1 => Some(RecordEnc::F16),
+            2 => Some(RecordEnc::Int8),
+            3 => Some(RecordEnc::Int4),
             _ => None,
+        }
+    }
+    /// Parse a config/CLI codec name.
+    pub fn from_str(s: &str) -> Option<RecordEnc> {
+        match s {
+            "raw" | "f32" => Some(RecordEnc::Raw),
+            "f16" => Some(RecordEnc::F16),
+            "int8" => Some(RecordEnc::Int8),
+            "int4" => Some(RecordEnc::Int4),
+            _ => None,
+        }
+    }
+    pub fn as_str(&self) -> &'static str {
+        match self {
+            RecordEnc::Raw => "raw",
+            RecordEnc::F16 => "f16",
+            RecordEnc::Int8 => "int8",
+            RecordEnc::Int4 => "int4",
         }
     }
 }
@@ -421,6 +452,8 @@ impl RecordEnc {
 pub fn record_payload_len(name: &str, t: &Tensor, enc: RecordEnc) -> usize {
     let data_len = match (enc, &t.data) {
         (RecordEnc::F16, Data::F32(v)) => v.len() * 2,
+        (RecordEnc::Int8, Data::F32(v)) => Q_PREFIX + v.len(),
+        (RecordEnc::Int4, Data::F32(v)) => Q_PREFIX + v.len().div_ceil(2),
         _ => t.data.len() * 4,
     };
     4 + name.len() + 1 + 1 + 1 + 4 * t.shape.len() + 4 + data_len
@@ -447,6 +480,26 @@ pub fn write_record(w: &mut Writer, name: &str, t: &Tensor, enc: RecordEnc) {
                 w.u32(d as u32);
             }
             let bytes = f32_to_f16_bytes(v);
+            w.u32(bytes.len() as u32);
+            w.bytes(&bytes);
+        }
+        (RecordEnc::Int8, Data::F32(v)) => {
+            w.u8(RecordEnc::Int8.tag());
+            w.u8(t.shape.len() as u8);
+            for &d in &t.shape {
+                w.u32(d as u32);
+            }
+            let bytes = f32_to_q8_bytes(v);
+            w.u32(bytes.len() as u32);
+            w.bytes(&bytes);
+        }
+        (RecordEnc::Int4, Data::F32(v)) => {
+            w.u8(RecordEnc::Int4.tag());
+            w.u8(t.shape.len() as u8);
+            for &d in &t.shape {
+                w.u32(d as u32);
+            }
+            let bytes = f32_to_q4_bytes(v);
             w.u32(bytes.len() as u32);
             w.bytes(&bytes);
         }
@@ -503,14 +556,22 @@ pub fn decode_record(buf: &[u8]) -> Result<(String, Tensor), ByteError> {
             shape,
             data: Data::F32(f16_bytes_to_f32(raw)?),
         },
+        (DType::F32, RecordEnc::Int8) => Tensor {
+            shape,
+            data: Data::F32(q8_bytes_to_f32(raw)?),
+        },
+        (DType::F32, RecordEnc::Int4) => Tensor {
+            shape,
+            data: Data::F32(q4_bytes_to_f32(raw, numel)?),
+        },
         (DType::I32, RecordEnc::Raw) => Tensor {
             shape,
             data: Data::I32(bytes::bytes_to_i32_vec(raw)?),
         },
-        (DType::I32, RecordEnc::F16) => {
+        (DType::I32, enc) => {
             return Err(ByteError {
                 offset: 0,
-                msg: format!("record {name}: f16 encoding on i32 tensor"),
+                msg: format!("record {name}: {} encoding on i32 tensor", enc.as_str()),
             })
         }
     };
@@ -544,6 +605,111 @@ pub fn lerp_slice(a: &mut [f32], c: f32, b: &[f32]) {
     for i in 0..n {
         a[i] += c * (b[i] - a[i]);
     }
+}
+
+// ------------------------------------------------------------ int8 / int4
+//
+// Affine per-record quantization: the payload carries its own `f32 scale
+// | f32 min` prefix, so each record dequantizes on its own — the same
+// self-delimiting property the v2 record format is built on.
+
+/// Byte length of the quantization-parameter prefix (`f32 scale | f32 min`).
+pub const Q_PREFIX: usize = 8;
+
+/// Affine quantization parameters for a slice at `levels + 1` code points:
+/// `(scale, min)` with `scale = (max - min) / levels`. Degenerate inputs
+/// (empty, constant, or non-finite range) get `scale = 0`, which decodes
+/// every element to `min`.
+fn affine_params(v: &[f32], levels: f32) -> (f32, f32) {
+    let mut lo = f32::INFINITY;
+    let mut hi = f32::NEG_INFINITY;
+    for &x in v {
+        lo = lo.min(x);
+        hi = hi.max(x);
+    }
+    if !lo.is_finite() || !hi.is_finite() || hi <= lo {
+        return (0.0, if lo.is_finite() { lo } else { 0.0 });
+    }
+    ((hi - lo) / levels, lo)
+}
+
+fn quantize_code(x: f32, scale: f32, min: f32, levels: f32) -> u8 {
+    if scale <= 0.0 {
+        return 0;
+    }
+    ((x - min) / scale).round().clamp(0.0, levels) as u8
+}
+
+fn read_q_prefix(b: &[u8]) -> Result<(f32, f32), ByteError> {
+    if b.len() < Q_PREFIX {
+        return Err(ByteError {
+            offset: 0,
+            msg: "quantized payload shorter than its scale/min prefix".into(),
+        });
+    }
+    let scale = f32::from_le_bytes(b[0..4].try_into().unwrap());
+    let min = f32::from_le_bytes(b[4..8].try_into().unwrap());
+    Ok((scale, min))
+}
+
+/// Encode an f32 slice as affine int8 bytes: `f32 scale | f32 min | one
+/// code byte per element`.
+pub fn f32_to_q8_bytes(v: &[f32]) -> Vec<u8> {
+    let (scale, min) = affine_params(v, 255.0);
+    let mut out = Vec::with_capacity(Q_PREFIX + v.len());
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&min.to_le_bytes());
+    for &x in v {
+        out.push(quantize_code(x, scale, min, 255.0));
+    }
+    out
+}
+
+/// Decode affine int8 bytes back to f32.
+pub fn q8_bytes_to_f32(b: &[u8]) -> Result<Vec<f32>, ByteError> {
+    let (scale, min) = read_q_prefix(b)?;
+    Ok(b[Q_PREFIX..].iter().map(|&q| min + q as f32 * scale).collect())
+}
+
+/// Encode an f32 slice as affine int4 bytes: `f32 scale | f32 min | two
+/// codes per byte` (low nibble first; an odd tail leaves the high nibble
+/// zero).
+pub fn f32_to_q4_bytes(v: &[f32]) -> Vec<u8> {
+    let (scale, min) = affine_params(v, 15.0);
+    let mut out = Vec::with_capacity(Q_PREFIX + v.len().div_ceil(2));
+    out.extend_from_slice(&scale.to_le_bytes());
+    out.extend_from_slice(&min.to_le_bytes());
+    for pair in v.chunks(2) {
+        let lo = quantize_code(pair[0], scale, min, 15.0);
+        let hi = pair.get(1).map_or(0, |&x| quantize_code(x, scale, min, 15.0));
+        out.push(lo | (hi << 4));
+    }
+    out
+}
+
+/// Decode affine int4 bytes back to f32. The element count comes from the
+/// record's shape (`numel`), since an odd count shares its last byte with
+/// a zero pad nibble.
+pub fn q4_bytes_to_f32(b: &[u8], numel: usize) -> Result<Vec<f32>, ByteError> {
+    let (scale, min) = read_q_prefix(b)?;
+    if b.len() - Q_PREFIX != numel.div_ceil(2) {
+        return Err(ByteError {
+            offset: Q_PREFIX,
+            msg: format!(
+                "int4 payload {} bytes does not pack {} elements",
+                b.len() - Q_PREFIX,
+                numel
+            ),
+        });
+    }
+    let mut out = Vec::with_capacity(numel);
+    for &byte in &b[Q_PREFIX..] {
+        out.push(min + (byte & 0x0F) as f32 * scale);
+        if out.len() < numel {
+            out.push(min + (byte >> 4) as f32 * scale);
+        }
+    }
+    Ok(out)
 }
 
 // --------------------------------------------------------------------- f16
@@ -766,6 +932,78 @@ mod tests {
     }
 
     #[test]
+    fn record_roundtrip_int8_and_int4() {
+        let t = Tensor::f32(vec![5], vec![-4.0, -1.0, 0.0, 2.5, 4.0]);
+        for enc in [RecordEnc::Int8, RecordEnc::Int4] {
+            let payload = encode_record("w", &t, enc);
+            assert_eq!(payload.len(), record_payload_len("w", &t, enc));
+            let (n2, t2) = decode_record(&payload).unwrap();
+            assert_eq!(n2, "w");
+            assert_eq!(t2.shape, t.shape);
+            let scale = match enc {
+                RecordEnc::Int8 => 8.0 / 255.0,
+                _ => 8.0 / 15.0,
+            };
+            for (a, b) in t.as_f32().unwrap().iter().zip(t2.as_f32().unwrap()) {
+                assert!((a - b).abs() <= scale * 0.5 + 1e-5, "{a} {b} ({enc:?})");
+            }
+        }
+        // i32 tensors fall back to raw under both quantized encodings
+        let ids = Tensor::i32(vec![2], vec![3, -9]);
+        for enc in [RecordEnc::Int8, RecordEnc::Int4] {
+            let (_, back) = decode_record(&encode_record("ids", &ids, enc)).unwrap();
+            assert_eq!(back, ids);
+        }
+        // constant and empty tensors survive exactly (scale = 0 path)
+        let flat = Tensor::f32(vec![3], vec![2.5, 2.5, 2.5]);
+        let (_, back) = decode_record(&encode_record("flat", &flat, RecordEnc::Int4)).unwrap();
+        assert_eq!(back, flat);
+        let empty = Tensor::f32(vec![0], vec![]);
+        let (_, back) = decode_record(&encode_record("e", &empty, RecordEnc::Int8)).unwrap();
+        assert_eq!(back, empty);
+    }
+
+    #[test]
+    fn int4_odd_length_packs_tail_nibble() {
+        for n in [1usize, 3, 7] {
+            let data: Vec<f32> = (0..n).map(|i| i as f32).collect();
+            let t = Tensor::f32(vec![n], data.clone());
+            let payload = encode_record("w", &t, RecordEnc::Int4);
+            assert_eq!(payload.len(), record_payload_len("w", &t, RecordEnc::Int4));
+            let (_, t2) = decode_record(&payload).unwrap();
+            assert_eq!(t2.numel(), n);
+            let scale = if n > 1 { (n - 1) as f32 / 15.0 } else { 0.0 };
+            for (a, b) in data.iter().zip(t2.as_f32().unwrap()) {
+                assert!((a - b).abs() <= scale * 0.5 + 1e-5, "n={n} {a} {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn prop_int8_int4_error_bounded_by_half_step() {
+        prop::check("int8/int4 dequantize error bound", 80, |g| {
+            let data = g.f32s(1, 200);
+            let lo = data.iter().cloned().fold(f32::INFINITY, f32::min);
+            let hi = data.iter().cloned().fold(f32::NEG_INFINITY, f32::max);
+            let name = g.ident();
+            for (enc, levels) in [(RecordEnc::Int8, 255.0f32), (RecordEnc::Int4, 15.0f32)] {
+                let t = Tensor::f32(vec![data.len()], data.clone());
+                let (n2, t2) = decode_record(&encode_record(&name, &t, enc))
+                    .map_err(|e| e.to_string())?;
+                prop::assert_that(n2 == name, "name mismatch")?;
+                let bound = if hi > lo { (hi - lo) / levels * 0.5 } else { 0.0 };
+                for (a, b) in data.iter().zip(t2.as_f32().unwrap()) {
+                    prop::assert_that(
+                        (a - b).abs() <= bound + bound.abs() * 1e-4 + 1e-6,
+                        "dequantize error above half quantization step",
+                    )?;
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
     fn record_rejects_corruption() {
         let t = Tensor::f32(vec![3], vec![1., 2., 3.]);
         let payload = encode_record("w", &t, RecordEnc::Raw);
@@ -780,6 +1018,13 @@ mod tests {
         let mut bad = payload;
         bad[4 + 4] = 9; // first dim low byte (after name, dtype, enc, ndim)
         assert!(decode_record(&bad).is_err());
+        // int4: a shape that disagrees with the packed byte count is rejected
+        let t = Tensor::f32(vec![4], vec![1., 2., 3., 4.]);
+        let mut bad = encode_record("w", &t, RecordEnc::Int4);
+        bad[4 + 4] = 9; // 2 packed bytes cannot hold 9 elements
+        assert!(decode_record(&bad).is_err());
+        // int8: a payload shorter than its scale/min prefix is rejected
+        assert!(q8_bytes_to_f32(&[0, 0, 0]).is_err());
     }
 
     #[test]

@@ -47,6 +47,15 @@ const V2_W: &str =
 /// v2 f16-encoded record of tensor `w` (payload halves to 2 bytes/elem).
 const V2_W_F16: &str = "0100000077000102020000000200000008000000003800c080424056";
 
+/// v2 int8-encoded record of tensor `w`: an 8-byte `f32 scale | f32 min`
+/// prefix (scale = 102/255, min = -2.0) then one code byte per element.
+const V2_W_INT8: &str =
+    "010000007700020202000000020000000c000000cdcccc3e000000c006000dff";
+
+/// v2 int4-encoded record of tensor `w`: the same prefix (scale =
+/// 102/15) then two codes per byte, low nibble first.
+const V2_W_INT4: &str = "010000007700030202000000020000000a0000009a99d940000000c000f1";
+
 #[test]
 fn v1_blob_bytes_are_stable() {
     let d = fixture_dict();
@@ -89,6 +98,92 @@ fn v2_f16_record_bytes_are_stable() {
     let (n2, t2) = decode_record(&unhex(V2_W_F16)).unwrap();
     assert_eq!(n2, "w");
     assert_eq!(&t2, t);
+}
+
+#[test]
+fn v2_int8_record_bytes_are_stable() {
+    let d = fixture_dict();
+    let t = d.get("w").unwrap();
+    assert_eq!(
+        encode_record("w", t, RecordEnc::Int8),
+        unhex(V2_W_INT8),
+        "v2 int8 record format drifted"
+    );
+    // decoding dequantizes; every element lands within scale/2 of the
+    // original (scale = (100 - (-2)) / 255 = 0.4)
+    let (n2, t2) = decode_record(&unhex(V2_W_INT8)).unwrap();
+    assert_eq!(n2, "w");
+    assert_eq!(t2.shape, t.shape);
+    let (orig, deq) = (t.as_f32().unwrap(), t2.as_f32().unwrap());
+    for (a, b) in orig.iter().zip(deq) {
+        assert!((a - b).abs() <= 0.4 / 2.0 + 1e-6, "int8 |{a} - {b}| > scale/2");
+    }
+    // the range endpoints are code 0 and code 255: they decode exactly
+    assert_eq!(deq[1], -2.0);
+    assert_eq!(deq[3], 100.0);
+}
+
+#[test]
+fn v2_int4_record_bytes_are_stable() {
+    let d = fixture_dict();
+    let t = d.get("w").unwrap();
+    assert_eq!(
+        encode_record("w", t, RecordEnc::Int4),
+        unhex(V2_W_INT4),
+        "v2 int4 record format drifted"
+    );
+    let (n2, t2) = decode_record(&unhex(V2_W_INT4)).unwrap();
+    assert_eq!(n2, "w");
+    assert_eq!(t2.shape, t.shape);
+    let (orig, deq) = (t.as_f32().unwrap(), t2.as_f32().unwrap());
+    for (a, b) in orig.iter().zip(deq) {
+        assert!((a - b).abs() <= 6.8 / 2.0 + 1e-5, "int4 |{a} - {b}| > scale/2");
+    }
+    assert_eq!(deq[1], -2.0);
+    assert_eq!(deq[3], 100.0);
+}
+
+#[test]
+fn int8_int4_roundtrip_error_is_bounded_property() {
+    // random f32 tensors: quantize -> dequantize error stays within the
+    // documented scale/2 bound for both code widths (mirrors the f16
+    // lossless-fixture test, at the codecs' coarser precision)
+    fedflare::util::prop::check("int8/int4 error bound", 80, |g| {
+        let data = g.f32s(1, 200);
+        let t = Tensor::f32(vec![data.len()], data.clone());
+        let (lo, hi) = data
+            .iter()
+            .fold((f32::INFINITY, f32::NEG_INFINITY), |(l, h), &x| {
+                (l.min(x), h.max(x))
+            });
+        let range = (hi - lo).max(0.0) as f64;
+        for (enc, levels) in [(RecordEnc::Int8, 255.0), (RecordEnc::Int4, 15.0)] {
+            let rec = encode_record("t", &t, enc);
+            let (_, back) = decode_record(&rec).map_err(|e| e.to_string())?;
+            let deq = back.as_f32().unwrap();
+            // scale/2 plus f32 rounding headroom on the affine arithmetic
+            let bound = range / levels / 2.0 + 1e-4 * range + 1e-6;
+            for (a, b) in data.iter().zip(deq) {
+                fedflare::util::prop::assert_that(
+                    ((*a as f64) - (*b as f64)).abs() <= bound,
+                    &format!("{} error |{a} - {b}| exceeds {bound}", enc.as_str()),
+                )?;
+            }
+        }
+        Ok(())
+    });
+}
+
+#[test]
+fn quantized_payloads_shrink_on_the_wire() {
+    // 1000 elements: raw 4 B/elem, int8 ~1 B/elem, int4 ~0.5 B/elem
+    // (plus the fixed 8-byte scale/min prefix and record header)
+    let t = Tensor::f32(vec![1000], (0..1000).map(|i| i as f32).collect());
+    let raw = encode_record("t", &t, RecordEnc::Raw).len();
+    let q8 = encode_record("t", &t, RecordEnc::Int8).len();
+    let q4 = encode_record("t", &t, RecordEnc::Int4).len();
+    assert!(q8 * 3 < raw, "int8 not ~4x smaller: {q8} vs {raw}");
+    assert!(q4 * 6 < raw, "int4 not ~8x smaller: {q4} vs {raw}");
 }
 
 #[test]
