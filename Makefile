@@ -12,11 +12,13 @@
 #                    resident threads + churn latency per fleet size).
 #                    FEDFLARE_BENCH_QUICK=1 shrinks them to the CI quick
 #                    mode (same JSON shape, fraction of the cost)
-#   make perfgate    diff fresh quick-mode BENCH_jobs/BENCH_topology
-#                    JSON against bench/baseline/ — fails on >25%
-#                    wall-clock regression (provisional baselines warn)
+#   make perfgate    diff fresh quick-mode BENCH_jobs/BENCH_topology/
+#                    BENCH_fleet/BENCH_delta JSON against
+#                    bench/baseline/ — fails on >25% wall-clock
+#                    regression (provisional baselines warn)
 #   make threadlint  fail if anything under rust/src/sfm/ or
-#                    rust/src/fleet/ spawns a thread outside the reactor
+#                    rust/src/fleet/ spawns a thread outside the
+#                    reactor's single marked shard-pool spawn site
 #   make lint        rustfmt + clippy + threadlint, as CI runs them
 
 .PHONY: artifacts test bench perfgate threadlint lint
@@ -39,9 +41,11 @@ bench:
 # cargo runs bench binaries with the package root (rust/) as cwd, so
 # the fresh JSON lands there
 perfgate:
-	FEDFLARE_BENCH_QUICK=1 cargo bench --bench bench_jobs --bench bench_topology
+	FEDFLARE_BENCH_QUICK=1 cargo bench --bench bench_jobs --bench bench_topology --bench bench_fleet --bench bench_streaming
 	python3 scripts/bench_gate.py bench/baseline/BENCH_jobs.json rust/BENCH_jobs.json
 	python3 scripts/bench_gate.py bench/baseline/BENCH_topology.json rust/BENCH_topology.json
+	python3 scripts/bench_gate.py bench/baseline/BENCH_fleet.json rust/BENCH_fleet.json
+	python3 scripts/bench_gate.py bench/baseline/BENCH_delta.json rust/BENCH_delta.json
 
 threadlint:
 	sh scripts/check_no_thread_spawn.sh

@@ -1,43 +1,70 @@
-//! Fleet control-plane scaling benchmark: how the one-reactor core
-//! holds up as connections pile on. Two axes, emitted as a table and as
+//! Fleet data-plane scaling benchmark: how the sharded reactor core
+//! holds up as connections pile on. Four axes, emitted as a table and as
 //! machine-readable `BENCH_fleet.json`:
 //!
 //! * **idle scaling** — N muxed, heartbeating, otherwise-idle
-//!   connections vs resident OS threads and RSS. The point of the
-//!   reactor refactor: thread count stays O(cores + active jobs), not
-//!   O(clients), so the rows should show a flat thread column while the
-//!   connection column grows 100x.
-//! * **churn** — kill a batch of clients mid-fleet and immediately
-//!   reconnect them, measuring how long the registry takes to notice
-//!   (kill -> Suspect, via the dead-transport observation on the sweep
-//!   path) and to re-admit (reconnect -> Live with fresh heartbeat
-//!   evidence).
+//!   connections vs resident OS threads, RSS, and per-shard connection
+//!   balance. The point of the reactor refactor: thread count stays
+//!   O(cores + active jobs), not O(clients), while the least-loaded
+//!   pinning keeps every shard within 2x of its siblings all the way to
+//!   the 100k top end.
+//! * **churn** — kill a batch of clients out of the top-end fleet and
+//!   immediately reconnect them, measuring how long the registry takes
+//!   to notice (kill -> Suspect, via the dead-transport observation on
+//!   the sweep path) and to re-admit (reconnect -> Live with fresh
+//!   heartbeat evidence).
+//! * **accept storm** — N real TCP dialers hit the event-driven
+//!   [`fedflare::sfm::accept::AuthAcceptor`] at once; the row records
+//!   how long the full herd takes to authenticate and admit.
 //! * **checkpoint cost** — `JobStore` full-snapshot vs delta-link write
 //!   and full vs chain-replay resume, swept over model size, so the
 //!   `checkpoint_every_n_rounds` trade-off (bytes + latency per round
 //!   vs resume replay work) is measured rather than assumed.
 //!
 //! Run with `cargo bench --bench bench_fleet`. Set
-//! `FEDFLARE_BENCH_QUICK=1` for the CI quick mode: fewer idle points,
-//! same 10,000-connection top end and churn batches, same JSON shape.
+//! `FEDFLARE_BENCH_QUICK=1` for the CI quick mode: fewer idle points
+//! and smaller storms, but the same 100,000-connection top end, churn
+//! batches, and JSON shape.
 
+use std::io::Write as _;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use fedflare::fleet::{ClientState, Registry};
 use fedflare::persist::JobStore;
-use fedflare::sfm::inproc;
+use fedflare::sfm::accept::{AuthAcceptor, AuthInfo};
 use fedflare::sfm::mux::MuxConn;
+use fedflare::sfm::reactor::{self, FrameSink, SinkStatus};
+use fedflare::sfm::{inproc, Frame, SfmError, FLAG_FIRST, FLAG_LAST, KIND_AUTH};
 use fedflare::tensor::{Tensor, TensorDict};
 use fedflare::util::bench::{bench, emit_json, header, report};
+use fedflare::util::bytes::Writer;
 use fedflare::util::json::Json;
 use fedflare::util::mem;
 
-const HEARTBEAT: Duration = Duration::from_millis(500);
-const SUSPECT_AFTER: Duration = Duration::from_secs(2);
 const GONE_AFTER: Duration = Duration::from_secs(60);
 
 fn quick() -> bool {
     std::env::var("FEDFLARE_BENCH_QUICK").map(|v| v == "1").unwrap_or(false)
+}
+
+/// Heartbeat interval for an `n`-connection fleet. At the 100k top end a
+/// 500 ms beat would mean 200k timer fires per second — more than a small
+/// CI box can sustain — so big fleets beat slower, with the suspect
+/// deadline scaled to match ([`suspect_after`]).
+fn heartbeat_for(n: usize) -> Duration {
+    if n >= 100_000 {
+        Duration::from_secs(2)
+    } else {
+        Duration::from_millis(500)
+    }
+}
+
+/// Suspect deadline paired with [`heartbeat_for`]: always ≥ 4 beats, so
+/// a live-but-slow fleet never flaps into Suspect.
+fn suspect_after(hb: Duration) -> Duration {
+    hb * 4
 }
 
 /// Resident OS threads, from `/proc/self/status` (0 where unavailable).
@@ -62,13 +89,13 @@ struct Slot {
     idx: usize,
 }
 
-fn connect_slot(i: usize, registry: &Registry) -> Slot {
-    let name = format!("site-{i:05}");
+fn connect_slot(i: usize, registry: &Registry, hb: Duration) -> Slot {
+    let name = format!("site-{i:06}");
     let (s, c) = inproc::pair(8, &name);
     let (sr, cr) = (s.recv_half(), c.recv_half());
     let server = MuxConn::spawn(Box::new(s), Box::new(sr), 0, 4096);
     let client = MuxConn::spawn(Box::new(c), Box::new(cr), 0, 4096);
-    client.enable_heartbeat(HEARTBEAT);
+    client.enable_heartbeat(hb);
     let idx = registry.join(&name);
     registry.connected(idx);
     Slot { name, server, client, idx }
@@ -77,7 +104,7 @@ fn connect_slot(i: usize, registry: &Registry) -> Slot {
 /// One pass of the server's liveness observation, exactly as the real
 /// sweep task runs it: dead transport -> Suspect, heartbeat evidence ->
 /// heard, then the deadline sweep.
-fn observe(slots: &[Slot], registry: &Registry) {
+fn observe(slots: &[Slot], registry: &Registry, suspect: Duration) {
     for s in slots {
         if s.server.is_dead() {
             registry.suspect(s.idx);
@@ -85,19 +112,20 @@ fn observe(slots: &[Slot], registry: &Registry) {
             registry.heard(s.idx, at);
         }
     }
-    registry.sweep(SUSPECT_AFTER, GONE_AFTER);
+    registry.sweep(suspect, GONE_AFTER);
 }
 
 /// Sweep until `done` holds (or the deadline passes); returns elapsed.
 fn sweep_until(
     slots: &[Slot],
     registry: &Registry,
+    suspect: Duration,
     timeout: Duration,
     mut done: impl FnMut() -> bool,
 ) -> Duration {
     let t0 = Instant::now();
     loop {
-        observe(slots, registry);
+        observe(slots, registry, suspect);
         if done() || t0.elapsed() > timeout {
             return t0.elapsed();
         }
@@ -109,20 +137,51 @@ fn all_in(registry: &Registry, names: &[String], want: ClientState) -> bool {
     names.iter().all(|n| registry.state_of(n) == Some(want))
 }
 
-fn idle_row(n: usize, baseline_threads: u64, baseline_rss: u64) -> Json {
-    let registry = Registry::new();
-    let slots: Vec<Slot> = (0..n).map(|i| connect_slot(i, &registry)).collect();
-    // let every client beat at least twice, then demand a fully-live view
-    std::thread::sleep(HEARTBEAT * 2 + Duration::from_millis(200));
-    observe(&slots, &registry);
+/// Per-shard registered-connection counts plus their max/min imbalance
+/// ratio (1.0 = perfectly even; shards with zero conns are excluded so a
+/// near-empty fleet doesn't divide by zero).
+fn shard_balance() -> (Vec<usize>, f64) {
+    let conns: Vec<usize> = reactor::global()
+        .shard_stats()
+        .iter()
+        .map(|s| s.conns)
+        .collect();
+    let loaded: Vec<usize> = conns.iter().copied().filter(|&c| c > 0).collect();
+    let ratio = match (loaded.iter().max(), loaded.iter().min()) {
+        (Some(&max), Some(&min)) if min > 0 => max as f64 / min as f64,
+        _ => 1.0,
+    };
+    (conns, ratio)
+}
+
+/// Measure a live fleet of `slots` (already connected and beating):
+/// wait for two beats, demand a fully-live registry view, and record
+/// thread/RSS/per-shard load.
+fn idle_stats(
+    slots: &[Slot],
+    registry: &Registry,
+    hb: Duration,
+    baseline_threads: u64,
+    baseline_rss: u64,
+) -> Json {
+    let n = slots.len();
+    std::thread::sleep(hb * 2 + Duration::from_millis(200));
+    observe(slots, registry, suspect_after(hb));
     let live = registry.eligible_names().len();
     let threads = thread_count();
     let rss = mem::rss_bytes();
+    let (shard_conns, balance) = shard_balance();
     println!(
-        "  {n:<12} {live:>10} {threads:>9} {:>12} kB",
+        "  {n:<12} {live:>10} {threads:>9} {:>12} kB   {shard_conns:?} ({balance:.2}x)",
         rss.saturating_sub(baseline_rss) >> 10
     );
     assert_eq!(live, n, "idle fleet not fully live at n={n}");
+    if reactor::global().shard_count() > 1 {
+        assert!(
+            balance <= 2.0,
+            "shard imbalance {balance:.2}x at n={n}: {shard_conns:?}"
+        );
+    }
     Json::obj([
         ("connections", Json::num(n as f64)),
         ("live", Json::num(live as f64)),
@@ -130,18 +189,24 @@ fn idle_row(n: usize, baseline_threads: u64, baseline_rss: u64) -> Json {
         ("threads_over_baseline", Json::num(threads.saturating_sub(baseline_threads) as f64)),
         ("rss_bytes", Json::num(rss as f64)),
         ("rss_over_baseline_bytes", Json::num(rss.saturating_sub(baseline_rss) as f64)),
+        (
+            "shard_conns",
+            Json::arr(shard_conns.iter().map(|&c| Json::num(c as f64)).collect()),
+        ),
+        ("shard_balance", Json::num(balance)),
     ])
 }
 
 /// Kill `batch` clients out of a live fleet, wait for Suspect, then
 /// reconnect them and wait for Live again.
-fn churn_row(slots: &mut [Slot], registry: &Registry, batch: usize) -> Json {
+fn churn_row(slots: &mut [Slot], registry: &Registry, batch: usize, hb: Duration) -> Json {
+    let suspect = suspect_after(hb);
     let names: Vec<String> = slots[..batch].iter().map(|s| s.name.clone()).collect();
     for s in &slots[..batch] {
         s.client.kill();
     }
     let t0 = Instant::now();
-    let suspect_s = sweep_until(slots, registry, Duration::from_secs(10), || {
+    let suspect_s = sweep_until(slots, registry, suspect, Duration::from_secs(10), || {
         all_in(registry, &names, ClientState::Suspect)
     })
     .as_secs_f64();
@@ -151,7 +216,7 @@ fn churn_row(slots: &mut [Slot], registry: &Registry, batch: usize) -> Json {
     );
     for (i, slot) in slots[..batch].iter_mut().enumerate() {
         slot.server.kill(); // the dead peer's half — replaced by the rejoin
-        *slot = connect_slot(i, registry);
+        *slot = connect_slot(i, registry, hb);
     }
     // "rejoined" = Live again *with heartbeat evidence on the fresh
     // connection* — `connected` alone promotes optimistically
@@ -160,7 +225,8 @@ fn churn_row(slots: &mut [Slot], registry: &Registry, batch: usize) -> Json {
         all_in(registry, &names, ClientState::Live)
             && view[..batch].iter().all(|s| s.server.last_heartbeat().is_some())
     };
-    let rejoin_s = sweep_until(view, registry, Duration::from_secs(10), rejoined).as_secs_f64();
+    let rejoin_s =
+        sweep_until(view, registry, suspect, Duration::from_secs(10), rejoined).as_secs_f64();
     assert!(
         all_in(registry, &names, ClientState::Live)
             && view[..batch].iter().all(|s| s.server.last_heartbeat().is_some()),
@@ -176,6 +242,97 @@ fn churn_row(slots: &mut [Slot], registry: &Registry, batch: usize) -> Json {
         ("churn_rate_per_s", Json::num(rate)),
         ("suspect_latency_s", Json::num(suspect_s)),
         ("rejoin_latency_s", Json::num(rejoin_s)),
+        ("wall_s_suspect", Json::num(suspect_s)),
+        ("wall_s_rejoin", Json::num(rejoin_s)),
+    ])
+}
+
+/// Sink installed behind the auth gate for storm connections: counts
+/// frames, otherwise inert.
+struct StormSink;
+impl FrameSink for StormSink {
+    fn on_frame(&mut self, _f: Frame) -> SinkStatus {
+        SinkStatus::Ready
+    }
+    fn on_resume(&mut self) -> SinkStatus {
+        SinkStatus::Ready
+    }
+    fn on_closed(&mut self, _e: SfmError) {}
+}
+
+/// The length-prefixed wire bytes of one auth handshake frame.
+fn auth_wire(name: &str, token: &str) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.str(name);
+    w.str(token);
+    let f = Frame {
+        flags: FLAG_FIRST | FLAG_LAST,
+        kind: KIND_AUTH,
+        job: 0,
+        stream: 0,
+        seq: 0,
+        total: 1,
+        payload: w.into_vec(),
+    };
+    let bytes = f.encode();
+    let mut wire = (bytes.len() as u32).to_le_bytes().to_vec();
+    wire.extend_from_slice(&bytes);
+    wire
+}
+
+/// `n` real TCP dialers hit one [`AuthAcceptor`] as fast as ~16 worker
+/// threads can dial; the row is the wall time for the whole herd to
+/// authenticate and be admitted.
+fn accept_storm_row(n: usize) -> Json {
+    let listener = fedflare::sfm::tcp::bind("127.0.0.1:0").expect("bind storm listener");
+    let admitted = Arc::new(AtomicUsize::new(0));
+    let adm = admitted.clone();
+    let acceptor = AuthAcceptor::spawn(
+        listener,
+        true,
+        Duration::from_secs(30),
+        Arc::new(move |_info: AuthInfo, _send, _tok| {
+            adm.fetch_add(1, Ordering::SeqCst);
+            Ok(Box::new(StormSink) as Box<dyn FrameSink>)
+        }),
+    )
+    .expect("spawn storm acceptor");
+    let addr = acceptor.local_addr();
+    let wire: Arc<Vec<u8>> = Arc::new(auth_wire("storm-site", "storm-token"));
+
+    let workers = 16.min(n);
+    let t0 = Instant::now();
+    let handles: Vec<_> = (0..workers)
+        .map(|w| {
+            let wire = wire.clone();
+            let dials = n / workers + usize::from(w < n % workers);
+            std::thread::spawn(move || {
+                let mut streams = Vec::with_capacity(dials);
+                for _ in 0..dials {
+                    let mut s = std::net::TcpStream::connect(addr).expect("storm dial");
+                    s.write_all(&wire).expect("storm auth write");
+                    streams.push(s); // keep alive until the herd is admitted
+                }
+                streams
+            })
+        })
+        .collect();
+    let streams: Vec<_> = handles.into_iter().map(|h| h.join().unwrap()).collect();
+    let deadline = Instant::now() + Duration::from_secs(60);
+    while admitted.load(Ordering::SeqCst) < n && Instant::now() < deadline {
+        std::thread::sleep(Duration::from_millis(5));
+    }
+    let wall_s = t0.elapsed().as_secs_f64();
+    let got = admitted.load(Ordering::SeqCst);
+    assert_eq!(got, n, "accept storm: only {got}/{n} admitted");
+    let rate = n as f64 / wall_s.max(1e-9);
+    println!("  {n:<10} {wall_s:>9.3}s {rate:>11.0}/s");
+    drop(streams); // EOF -> the reactor reaps every storm connection
+    acceptor.shutdown();
+    Json::obj([
+        ("storm", Json::num(n as f64)),
+        ("wall_s", Json::num(wall_s)),
+        ("accepts_per_s", Json::num(rate)),
     ])
 }
 
@@ -260,38 +417,64 @@ fn ckpt_row(store: &JobStore, mb: usize) -> Json {
         ("delta_write_s", Json::num(s_delta_write.mean_ns / 1e9)),
         ("full_load_s", Json::num(s_full_load.mean_ns / 1e9)),
         ("chain_load_s", Json::num(s_chain_load.mean_ns / 1e9)),
+        ("wall_s_full_write", Json::num(s_full_write.mean_ns / 1e9)),
+        ("wall_s_delta_write", Json::num(s_delta_write.mean_ns / 1e9)),
+        ("wall_s_full_load", Json::num(s_full_load.mean_ns / 1e9)),
+        ("wall_s_chain_load", Json::num(s_chain_load.mean_ns / 1e9)),
     ])
 }
 
 fn main() {
+    // A 1-core CI box would otherwise get a single shard, making the
+    // balance sweep vacuous; an explicit setting always wins.
+    if std::env::var_os("FEDFLARE_REACTOR_SHARDS").is_none() {
+        std::env::set_var("FEDFLARE_REACTOR_SHARDS", "4");
+    }
     let baseline_threads = thread_count();
     let baseline_rss = mem::rss_bytes();
+    let shards = reactor::global().shard_count();
 
-    println!("== fleet idle scaling: connections vs resident threads ==");
+    println!("== fleet idle scaling: connections vs threads + shard balance ({shards} shards) ==");
     println!(
-        "  {:<12} {:>10} {:>9} {:>15}",
+        "  {:<12} {:>10} {:>9} {:>15}   per-shard conns",
         "connections", "live", "threads", "rss delta"
     );
     let sizes: &[usize] = if quick() {
-        &[1_000, 10_000]
+        &[10_000, 100_000]
     } else {
-        &[100, 1_000, 10_000]
+        &[100, 1_000, 10_000, 100_000]
     };
-    let idle_rows: Vec<Json> = sizes.iter().map(|&n| idle_row(n, baseline_threads, baseline_rss)).collect();
+    let top = *sizes.last().unwrap();
+    let mut idle_rows = Vec::new();
+    for &n in &sizes[..sizes.len() - 1] {
+        let registry = Registry::new();
+        let hb = heartbeat_for(n);
+        let slots: Vec<Slot> = (0..n).map(|i| connect_slot(i, &registry, hb)).collect();
+        idle_rows.push(idle_stats(&slots, &registry, hb, baseline_threads, baseline_rss));
+    }
+    // the top-end fleet is built once and reused for the churn axis
+    let registry = Registry::new();
+    let hb = heartbeat_for(top);
+    let mut slots: Vec<Slot> = (0..top).map(|i| connect_slot(i, &registry, hb)).collect();
+    idle_rows.push(idle_stats(&slots, &registry, hb, baseline_threads, baseline_rss));
 
-    println!("\n== fleet churn: kill + rejoin batches over a 10k fleet ==");
+    println!("\n== fleet churn: kill + rejoin batches over the {top}-connection fleet ==");
     println!(
         "  {:<10} {:>13} {:>12} {:>12}",
         "batch", "churn rate", "suspect", "rejoin"
     );
-    let churn_n = 10_000;
-    let registry = Registry::new();
-    let mut slots: Vec<Slot> = (0..churn_n).map(|i| connect_slot(i, &registry)).collect();
-    std::thread::sleep(HEARTBEAT + Duration::from_millis(200));
     let churn_rows: Vec<Json> = [16usize, 64]
         .iter()
-        .map(|&b| churn_row(&mut slots, &registry, b))
+        .map(|&b| churn_row(&mut slots, &registry, b, hb))
         .collect();
+
+    println!("\n== accept storm: concurrent TCP dialers vs the auth gate ==");
+    println!("  {:<10} {:>10} {:>13}", "dialers", "wall", "admit rate");
+    let storm_sizes: &[usize] = if quick() { &[512] } else { &[512, 2048] };
+    let storm_rows: Vec<Json> = storm_sizes.iter().map(|&n| accept_storm_row(n)).collect();
+
+    // free ~200k mux registrations before the checkpoint I/O section
+    drop(slots);
 
     header("checkpoint write/resume cost vs model size");
     let ckpt_dir = std::env::temp_dir().join("fedflare_bench_fleet_ckpt");
@@ -306,13 +489,15 @@ fn main() {
         Json::obj([
             ("bench", Json::str("fleet")),
             ("quick", Json::num(if quick() { 1.0 } else { 0.0 })),
-            ("heartbeat_interval_s", Json::num(HEARTBEAT.as_secs_f64())),
-            ("suspect_after_s", Json::num(SUSPECT_AFTER.as_secs_f64())),
+            ("shards", Json::num(shards as f64)),
+            ("heartbeat_interval_s", Json::num(hb.as_secs_f64())),
+            ("suspect_after_s", Json::num(suspect_after(hb).as_secs_f64())),
             ("baseline_threads", Json::num(baseline_threads as f64)),
             ("baseline_rss_bytes", Json::num(baseline_rss as f64)),
             ("idle", Json::arr(idle_rows)),
-            ("churn_connections", Json::num(churn_n as f64)),
+            ("churn_connections", Json::num(top as f64)),
             ("churn", Json::arr(churn_rows)),
+            ("accept_storm", Json::arr(storm_rows)),
             ("checkpoint", Json::arr(ckpt_rows)),
         ]),
     )

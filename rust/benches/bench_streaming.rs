@@ -261,6 +261,52 @@ fn main() {
             ("p95_s", Json::num(s.p95_ns / 1e9)),
         ]));
     }
+    // -------- quantize/dequantize hot path: codec throughput ----------
+    //
+    // The record codec in isolation (no framing, no driver): one flat
+    // f32 slice through each int8/int4 encode/decode. Rows land in the
+    // same BENCH_delta.json keyed by "op" so the perf gate tracks the
+    // codec separately from the end-to-end rounds above.
+    let q_elems = delta_mb << 20 >> 2;
+    header(&format!(
+        "quantize/dequantize throughput ({q_elems} f32 elements)"
+    ));
+    let src: Vec<f32> = (0..q_elems).map(|i| (i % 997) as f32 * 0.01 - 4.0).collect();
+    let src_mb = (q_elems * 4) as f64;
+    let q8 = fedflare::tensor::f32_to_q8_bytes(&src);
+    let q4 = fedflare::tensor::f32_to_q4_bytes(&src);
+    let ops: Vec<(&str, Box<dyn Fn() -> usize>)> = vec![
+        ("q8_encode", {
+            let src = src.clone();
+            Box::new(move || fedflare::tensor::f32_to_q8_bytes(&src).len())
+        }),
+        ("q8_decode", {
+            let q8 = q8.clone();
+            Box::new(move || fedflare::tensor::q8_bytes_to_f32(&q8).unwrap().len())
+        }),
+        ("q4_encode", {
+            let src = src.clone();
+            Box::new(move || fedflare::tensor::f32_to_q4_bytes(&src).len())
+        }),
+        ("q4_decode", {
+            let q4 = q4.clone();
+            Box::new(move || fedflare::tensor::q4_bytes_to_f32(&q4, q_elems).unwrap().len())
+        }),
+    ];
+    for (op, f) in &ops {
+        let s = bench(op, 2, 16, || {
+            std::hint::black_box(f());
+        });
+        report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec(src_mb))));
+        rows.push(Json::obj([
+            ("op", Json::str(*op)),
+            ("elements", Json::num(q_elems as f64)),
+            ("mb_per_s", Json::num(s.mb_per_sec(src_mb))),
+            ("wall_s", Json::num(s.mean_ns / 1e9)),
+            ("p95_s", Json::num(s.p95_ns / 1e9)),
+        ]));
+    }
+
     emit_json(
         "delta",
         Json::obj([

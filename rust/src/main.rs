@@ -36,13 +36,14 @@ use fedflare::message::FlMessage;
 use fedflare::metrics::MetricsSink;
 use fedflare::repro;
 use fedflare::runtime::RuntimeClient;
+use fedflare::sfm::accept::{AdmitFn, AuthAcceptor, AuthInfo};
 use fedflare::sfm::mux::MuxConn;
 use fedflare::sfm::tcp::TcpDriver;
 use fedflare::sfm::{reactor, Driver, EvictionPolicy, Frame, FLAG_FIRST, FLAG_LAST, KIND_AUTH};
 use fedflare::sim;
 use fedflare::streaming::Messenger;
 use fedflare::tensor::TensorDict;
-use fedflare::util::bytes::{Reader, Writer};
+use fedflare::util::bytes::Writer;
 use fedflare::util::cli::Args;
 use fedflare::util::json::Json;
 
@@ -662,41 +663,9 @@ fn auth_frame(name: &str, token: &str) -> Frame {
     }
 }
 
-/// Server side of the handshake: read the first frame off an accepted
-/// connection (bounded by a read deadline so a silent dialer cannot wedge
-/// the accept loop), verify the shared secret and the site name, and wrap
-/// the admitted connection in a reactor-registered [`MuxConn`].
-fn auth_accept(
-    stream: std::net::TcpStream,
-    peer: std::net::SocketAddr,
-    job: &JobConfig,
-    token: &str,
-) -> Result<(String, MuxConn)> {
-    let mut drv = TcpDriver::from_stream(stream, job.stream.verify_crc)?;
-    drv.set_read_timeout(Some(Duration::from_secs(5)))?;
-    let frame = drv.recv().map_err(|e| anyhow!("{peer}: auth read: {e}"))?;
-    if frame.kind != KIND_AUTH {
-        bail!("{peer}: first frame was not an auth handshake");
-    }
-    let mut r = Reader::new(&frame.payload);
-    let name = r.str().map_err(|e| anyhow!("{peer}: auth decode: {e}"))?;
-    let presented = r.str().map_err(|e| anyhow!("{peer}: auth decode: {e}"))?;
-    if !token.is_empty() && presented != token {
-        bail!("{peer}: site '{name}' presented a bad token");
-    }
-    if !job.clients.iter().any(|c| c.name == name) {
-        bail!("{peer}: unknown site '{name}'");
-    }
-    drv.set_read_timeout(None)?;
-    let send_half = drv.try_clone()?;
-    let mux = MuxConn::spawn(
-        Box::new(send_half),
-        Box::new(drv),
-        0, // the server never throttles; bandwidth caps are client-side
-        job.stream.chunk_bytes as u64,
-    );
-    Ok((name, mux))
-}
+/// How long an accepted connection may stay silent before the auth-gate
+/// deadline drops it (the old blocking read timeout, now a wheel entry).
+const HANDSHAKE_DEADLINE: Duration = Duration::from_secs(5);
 
 /// Send one control-plane message (job 0) on a connection. Control
 /// messages are single small frames, so a transient messenger per send is
@@ -828,8 +797,11 @@ fn cmd_server(args: &[String]) -> Result<()> {
     let rc = RuntimeClient::start(&job.artifacts_dir).ok();
     let initial = repro::common::initial_model(&job, rc.as_ref())?;
 
-    // 1. initial connect: every named site authenticates and gets a muxed
-    //    connection + a registry slot
+    // 1. event-driven admission: the listener parks on a reactor shard
+    //    and every accepted connection is auth-gated there — no accept
+    //    thread, no blocking handshake read. The same admit path serves
+    //    initial joins and rejoins (a site is a rejoin once its job
+    //    worker exists in `swappers`).
     let listener = fedflare::sfm::tcp::bind(("0.0.0.0", port))?;
     println!(
         "server: listening on :{port}, waiting for {} sites{}",
@@ -843,19 +815,59 @@ fn cmd_server(args: &[String]) -> Result<()> {
     let registry = Arc::new(Registry::new());
     let conns: Arc<Mutex<HashMap<String, (usize, MuxConn)>>> =
         Arc::new(Mutex::new(HashMap::new()));
-    while conns.lock().unwrap().len() < job.clients.len() {
-        let (stream, peer) = listener.accept()?;
-        match auth_accept(stream, peer, &job, &token) {
-            Ok((name, mux)) => {
+    let swappers: Arc<Mutex<HashMap<String, std::sync::mpsc::Sender<Messenger>>>> =
+        Arc::new(Mutex::new(HashMap::new()));
+    let (join_tx, join_rx) = std::sync::mpsc::channel::<String>();
+    let admit: AdmitFn = {
+        let job = job.clone();
+        let token = token.clone();
+        let registry = registry.clone();
+        let conns = conns.clone();
+        let swappers = swappers.clone();
+        let join_tx = Mutex::new(join_tx);
+        Arc::new(move |info: AuthInfo, send_stream, tok| {
+            let AuthInfo { name, token: presented, peer } = info;
+            if !token.is_empty() && presented != token {
+                return Err(format!("site '{name}' presented a bad token"));
+            }
+            if !job.clients.iter().any(|c| c.name == name) {
+                return Err(format!("unknown site '{name}'"));
+            }
+            let drv = TcpDriver::from_stream(send_stream, job.stream.verify_crc)
+                .map_err(|e| format!("{peer}: wrap send half: {e}"))?;
+            let (mux, sink) = MuxConn::adopt(
+                Box::new(drv),
+                0, // the server never throttles; bandwidth caps are client-side
+                job.stream.chunk_bytes as u64,
+                tok,
+            );
+            let is_rejoin = swappers.lock().unwrap().contains_key(&name);
+            if is_rejoin {
+                let sw = swappers.lock().unwrap();
+                match admit_rejoin(&name, mux, &conns, &registry, &sw, &job) {
+                    Ok(()) => println!("server: site '{name}' rejoined from {peer}"),
+                    Err(e) => eprintln!("server: rejoin of '{name}' failed: {e}"),
+                }
+            } else {
                 let idx = registry.join(&name);
                 registry.connected(idx);
                 println!("server: site '{name}' connected from {peer}");
-                if let Some((_, old)) = conns.lock().unwrap().insert(name, (idx, mux)) {
+                if let Some((_, old)) = conns.lock().unwrap().insert(name.clone(), (idx, mux)) {
                     old.kill(); // a site that dialed twice keeps the newer link
                 }
+                let _ = join_tx.lock().unwrap().send(name);
             }
-            Err(e) => eprintln!("server: rejected connection: {e}"),
+            Ok(sink)
+        })
+    };
+    let acceptor = AuthAcceptor::spawn(listener, job.stream.verify_crc, HANDSHAKE_DEADLINE, admit)?;
+    loop {
+        if conns.lock().unwrap().len() >= job.clients.len() {
+            break;
         }
+        join_rx
+            .recv()
+            .map_err(|_| anyhow!("accept pipeline closed before all sites joined"))?;
     }
 
     // 2. liveness: a reactor timer task reads each mux's last-heartbeat
@@ -891,9 +903,12 @@ fn cmd_server(args: &[String]) -> Result<()> {
     };
 
     // 3. open the fleet job on every site and spawn its server worker;
-    //    keep each worker's channel swapper for rejoins
+    //    publishing each worker's channel swapper flips the admit path
+    //    from "initial join" to "rejoin" for that site — a
+    //    killed-and-restarted client redials the same listener and its
+    //    fresh connection is swapped into the running job (no separate
+    //    accept thread)
     let mut handles = Vec::new();
-    let mut swappers = HashMap::new();
     for spec in &job.clients {
         let mux = conns.lock().unwrap().get(&spec.name).unwrap().1.clone();
         send_control(&mux, &open_msg(&job.name))?;
@@ -906,50 +921,14 @@ fn cmd_server(args: &[String]) -> Result<()> {
             );
         }
         let handle = ClientHandle::spawn(got, m);
-        swappers.insert(spec.name.clone(), handle.channel_swapper());
+        swappers
+            .lock()
+            .unwrap()
+            .insert(spec.name.clone(), handle.channel_swapper());
         handles.push(handle);
     }
 
-    // 4. rejoin accept loop: a killed-and-restarted client redials, and
-    //    its fresh connection is swapped into the running job
-    let accept_stop = Arc::new(AtomicBool::new(false));
-    listener.set_nonblocking(true)?;
-    let accept_thread = {
-        let conns = conns.clone();
-        let registry = registry.clone();
-        let swappers = swappers.clone();
-        let job = job.clone();
-        let token = token.clone();
-        let stop = accept_stop.clone();
-        std::thread::Builder::new()
-            .name("server-accept".into())
-            .spawn(move || loop {
-                if stop.load(Ordering::Relaxed) {
-                    return;
-                }
-                match listener.accept() {
-                    Ok((stream, peer)) => match auth_accept(stream, peer, &job, &token) {
-                        Ok((name, mux)) => {
-                            match admit_rejoin(&name, mux, &conns, &registry, &swappers, &job) {
-                                Ok(()) => println!("server: site '{name}' rejoined from {peer}"),
-                                Err(e) => eprintln!("server: rejoin of '{name}' failed: {e}"),
-                            }
-                        }
-                        Err(e) => eprintln!("server: rejected connection: {e}"),
-                    },
-                    Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => {
-                        std::thread::sleep(Duration::from_millis(50));
-                    }
-                    Err(e) => {
-                        eprintln!("server: accept loop stopped: {e}");
-                        return;
-                    }
-                }
-            })
-            .map_err(|e| anyhow!("spawn accept loop: {e}"))?
-    };
-
-    // 5. run the workflow over the live view; with --state-dir, each
+    // 4. run the workflow over the live view; with --state-dir, each
     //    round checkpoints durably and a restarted server resumes
     let mut comm = Communicator::new(handles, job.seed);
     let probe_registry = registry.clone();
@@ -961,11 +940,11 @@ fn cmd_server(args: &[String]) -> Result<()> {
     }
     let mut ctl = build_sag(&job, initial);
     let outcome = ctl.run(&mut comm, &mut ctx);
+    fedflare::metrics::log_reactor_load(&mut ctx.sink);
 
     // teardown regardless of outcome: stop rejoins and the sweep, then
     // the fleet-level bye lets each client's control loop exit
-    accept_stop.store(true, Ordering::Relaxed);
-    let _ = accept_thread.join();
+    acceptor.shutdown();
     sweep_stop.store(true, Ordering::Relaxed);
     if let Some(id) = sweep_id {
         reactor::global().cancel_interval(id);

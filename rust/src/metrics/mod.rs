@@ -59,6 +59,47 @@ impl MetricsSink {
     }
 }
 
+/// Log one `reactor_shard` event per reactor shard (connection count,
+/// queue depth, frame/byte throughput, loop saturation) plus a single
+/// `reactor_mem` event with the fleet-wide parked-byte and throttle-wait
+/// counters from [`crate::util::mem`]. Call it from a periodic timer or
+/// at round boundaries to chart data-plane load over a run.
+pub fn log_reactor_load(sink: &mut MetricsSink) {
+    for s in crate::sfm::reactor::global().shard_stats() {
+        sink.event(
+            "reactor_shard",
+            &[
+                ("shard", Json::num(s.shard as f64)),
+                ("conns", Json::num(s.conns as f64)),
+                ("tcp_conns", Json::num(s.tcp_conns as f64)),
+                ("queue_depth", Json::num(s.queue_depth as f64)),
+                ("timers", Json::num(s.timers as f64)),
+                ("intervals", Json::num(s.intervals as f64)),
+                ("frames_in", Json::num(s.frames_in as f64)),
+                ("bytes_in", Json::num(s.bytes_in as f64)),
+                ("saturation", Json::num(s.saturation())),
+            ],
+        );
+    }
+    sink.event(
+        "reactor_mem",
+        &[
+            (
+                "parked_bytes",
+                Json::num(crate::util::mem::parked_bytes() as f64),
+            ),
+            (
+                "parked_peak",
+                Json::num(crate::util::mem::parked_peak() as f64),
+            ),
+            (
+                "throttle_wait_ms",
+                Json::num(crate::util::mem::throttle_wait_ns() as f64 / 1e6),
+            ),
+        ],
+    );
+}
+
 /// Standalone CSV writer.
 pub fn write_csv(path: &Path, header: &[&str], rows: &[Vec<String>]) -> Result<()> {
     let mut f = BufWriter::new(File::create(path).with_context(|| format!("{}", path.display()))?);

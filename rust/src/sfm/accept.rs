@@ -1,0 +1,350 @@
+//! Event-driven connection admission: a non-blocking listener plus a
+//! per-connection auth gate, replacing the blocking accept loop and the
+//! 5-second `set_read_timeout` handshake read.
+//!
+//! [`AuthAcceptor::spawn`] parks a `TcpListener` on a reactor shard
+//! ([`reactor::Reactor::register_listener`]). Each accepted socket is
+//! registered immediately with a [`GateSink`] in front of it: the gate
+//! holds the connection until its first frame — which the protocol
+//! requires to be [`KIND_AUTH`] (`str site_name | str site_token`) —
+//! then hands identity, the send half, and the already-live reactor
+//! token to the caller's [`AdmitFn`]. The admit callback builds the real
+//! [`FrameSink`] (via [`super::mux::MuxConn::adopt`]) and the gate swaps
+//! it in **in place**: frames already decoded behind the auth frame flow
+//! straight into the new sink, so nothing is re-registered, reordered,
+//! or dropped.
+//!
+//! A timer-wheel deadline replaces the blocking read timeout: a
+//! connection that has not authenticated within `handshake_deadline` is
+//! deregistered by a one-shot wheel entry. An accept storm of thousands
+//! of joins therefore costs no threads and cannot serialize behind one
+//! slow (or silent) client — each handshake is just another parked
+//! connection until its bytes arrive.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::reactor::{self, FrameSink, SinkStatus};
+use super::{Frame, SfmError, KIND_AUTH};
+use crate::util::bytes::Reader;
+
+/// The identity a connection presented in its auth frame, plus where it
+/// dialed from. Verifying the token is the [`AdmitFn`]'s job.
+pub struct AuthInfo {
+    pub name: String,
+    pub token: String,
+    pub peer: SocketAddr,
+}
+
+/// Admission decision, invoked on the connection's reactor shard after a
+/// well-formed auth frame: given the presented identity, the socket's
+/// send half, and the connection's live reactor token, return the
+/// [`FrameSink`] that takes over the connection (typically from
+/// [`super::mux::MuxConn::adopt`]) or an error string to reject it.
+pub type AdmitFn =
+    Arc<dyn Fn(AuthInfo, TcpStream, reactor::Token) -> Result<Box<dyn FrameSink>, String> + Send + Sync>;
+
+/// Handle to a listening accept pipeline; dropping it does **not** stop
+/// accepting — call [`AuthAcceptor::shutdown`].
+pub struct AuthAcceptor {
+    listener_token: reactor::Token,
+    local_addr: SocketAddr,
+}
+
+impl AuthAcceptor {
+    /// Park `listener` on a reactor shard and gate every accepted
+    /// connection behind the auth handshake. `verify_crc` applies to the
+    /// registered receive path; `handshake_deadline` bounds how long an
+    /// unauthenticated connection may hold its slot.
+    pub fn spawn(
+        listener: TcpListener,
+        verify_crc: bool,
+        handshake_deadline: Duration,
+        admit: AdmitFn,
+    ) -> std::io::Result<AuthAcceptor> {
+        let local_addr = listener.local_addr()?;
+        let on_accept: reactor::AcceptFn = Box::new(move |stream: TcpStream, peer| {
+            let recv = match stream.try_clone() {
+                Ok(s) => s,
+                Err(e) => {
+                    log::warn!("accept {peer}: clone failed: {e}");
+                    return;
+                }
+            };
+            let authed = Arc::new(AtomicBool::new(false));
+            let gate_authed = authed.clone();
+            let admit = admit.clone();
+            let tok = reactor::global().register_with(
+                reactor::Registration::Tcp {
+                    stream: recv,
+                    verify_crc,
+                },
+                move |tok| {
+                    Box::new(GateSink {
+                        gate: Gate::Pending {
+                            admit,
+                            stream: Some(stream),
+                            peer,
+                            authed: gate_authed,
+                            token: tok,
+                        },
+                    })
+                },
+            );
+            // The read-timeout replacement: one wheel entry instead of a
+            // blocked thread. Fires once; a connection that authenticated
+            // in time is left alone.
+            let deadline_authed = authed;
+            reactor::global().add_interval(
+                handshake_deadline,
+                Box::new(move || {
+                    if !deadline_authed.load(Ordering::SeqCst) {
+                        log::warn!("auth: {peer} silent past the handshake deadline; dropping");
+                        reactor::global().deregister(tok);
+                    }
+                    false
+                }),
+            );
+        });
+        let listener_token = reactor::global().register_listener(listener, on_accept)?;
+        Ok(AuthAcceptor {
+            listener_token,
+            local_addr,
+        })
+    }
+
+    /// The bound address (useful with port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.local_addr
+    }
+
+    /// Stop accepting: the listener is deregistered and closed. Already
+    /// admitted connections are unaffected; connections still inside the
+    /// handshake are cleaned up by their deadlines.
+    pub fn shutdown(&self) {
+        reactor::global().deregister(self.listener_token);
+    }
+}
+
+enum Gate {
+    /// Waiting for the auth frame.
+    Pending {
+        admit: AdmitFn,
+        /// The socket's send half, handed to `admit` on success.
+        stream: Option<TcpStream>,
+        peer: SocketAddr,
+        /// Shared with the deadline timer: set before `admit` runs so a
+        /// slow admission is not raced by the drop.
+        authed: Arc<AtomicBool>,
+        token: reactor::Token,
+    },
+    /// Admitted: all frames delegate to the real sink.
+    Passing(Box<dyn FrameSink>),
+    /// Rejected / malformed; the reactor is deregistering us.
+    Failed,
+}
+
+/// The per-connection auth gate (see module docs).
+struct GateSink {
+    gate: Gate,
+}
+
+impl GateSink {
+    /// Consume the pending state and run admission for `frame`.
+    fn admit_first(&mut self, frame: Frame) -> SinkStatus {
+        let Gate::Pending {
+            admit,
+            mut stream,
+            peer,
+            authed,
+            token,
+        } = std::mem::replace(&mut self.gate, Gate::Failed)
+        else {
+            unreachable!("admit_first only runs while pending");
+        };
+        if frame.kind != KIND_AUTH {
+            log::warn!("auth: {peer} sent kind {} before authenticating", frame.kind);
+            return SinkStatus::Closed;
+        }
+        let mut r = Reader::new(&frame.payload);
+        let (name, presented) = match (r.str(), r.str()) {
+            (Ok(n), Ok(t)) => (n, t),
+            _ => {
+                log::warn!("auth: {peer} sent a malformed auth frame");
+                return SinkStatus::Closed;
+            }
+        };
+        // Mark before admitting: the deadline timer must not drop a
+        // connection that is mid-admission.
+        authed.store(true, Ordering::SeqCst);
+        let send_half = stream.take().expect("send half present while pending");
+        let info = AuthInfo {
+            name,
+            token: presented,
+            peer,
+        };
+        match admit(info, send_half, token) {
+            Ok(sink) => {
+                self.gate = Gate::Passing(sink);
+                SinkStatus::Ready
+            }
+            Err(why) => {
+                log::warn!("auth: rejected {peer}: {why}");
+                SinkStatus::Closed
+            }
+        }
+    }
+}
+
+impl FrameSink for GateSink {
+    fn on_frame(&mut self, frame: Frame) -> SinkStatus {
+        match &mut self.gate {
+            Gate::Passing(sink) => sink.on_frame(frame),
+            Gate::Pending { .. } => self.admit_first(frame),
+            Gate::Failed => SinkStatus::Closed,
+        }
+    }
+
+    fn on_resume(&mut self) -> SinkStatus {
+        match &mut self.gate {
+            Gate::Passing(sink) => sink.on_resume(),
+            _ => SinkStatus::Ready,
+        }
+    }
+
+    fn on_closed(&mut self, err: SfmError) {
+        if let Gate::Passing(sink) = &mut self.gate {
+            sink.on_closed(err);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sfm::{FLAG_FIRST, FLAG_LAST};
+    use crate::util::bytes::Writer;
+    use std::io::Write;
+    use std::sync::Mutex;
+    use std::time::Instant;
+
+    fn auth_wire(name: &str, token: &str) -> Vec<u8> {
+        let mut w = Writer::new();
+        w.str(name);
+        w.str(token);
+        let f = Frame {
+            flags: FLAG_FIRST | FLAG_LAST,
+            kind: KIND_AUTH,
+            job: 0,
+            stream: 0,
+            seq: 0,
+            total: 1,
+            payload: w.into_vec(),
+        };
+        let bytes = f.encode();
+        let mut wire = (bytes.len() as u32).to_le_bytes().to_vec();
+        wire.extend_from_slice(&bytes);
+        wire
+    }
+
+    fn wait_until(timeout: Duration, mut cond: impl FnMut() -> bool) -> bool {
+        let t0 = Instant::now();
+        while t0.elapsed() < timeout {
+            if cond() {
+                return true;
+            }
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        cond()
+    }
+
+    struct DropSink;
+    impl FrameSink for DropSink {
+        fn on_frame(&mut self, _f: Frame) -> SinkStatus {
+            SinkStatus::Ready
+        }
+        fn on_resume(&mut self) -> SinkStatus {
+            SinkStatus::Ready
+        }
+        fn on_closed(&mut self, _e: SfmError) {}
+    }
+
+    #[test]
+    fn handshake_admits_and_rejects_without_blocking() {
+        let listener = crate::sfm::tcp::bind("127.0.0.1:0").unwrap();
+        let admitted: Arc<Mutex<Vec<String>>> = Arc::new(Mutex::new(Vec::new()));
+        let adm = admitted.clone();
+        let acceptor = AuthAcceptor::spawn(
+            listener,
+            true,
+            Duration::from_secs(5),
+            Arc::new(move |info: AuthInfo, _send, _tok| {
+                if info.token == "sekrit" {
+                    adm.lock().unwrap().push(info.name.clone());
+                    Ok(Box::new(DropSink) as Box<dyn FrameSink>)
+                } else {
+                    Err("bad token".into())
+                }
+            }),
+        )
+        .unwrap();
+        let addr = acceptor.local_addr();
+
+        // a good client
+        let mut good = std::net::TcpStream::connect(addr).unwrap();
+        good.write_all(&auth_wire("site-a", "sekrit")).unwrap();
+        // a bad client
+        let mut bad = std::net::TcpStream::connect(addr).unwrap();
+        bad.write_all(&auth_wire("site-b", "wrong")).unwrap();
+
+        assert!(
+            wait_until(Duration::from_secs(2), || {
+                admitted.lock().unwrap().as_slice() == ["site-a".to_string()]
+            }),
+            "admitted: {:?}",
+            admitted.lock().unwrap()
+        );
+        // the rejected client's socket is closed by the server
+        bad.set_read_timeout(Some(Duration::from_secs(2))).unwrap();
+        let mut buf = [0u8; 1];
+        assert_eq!(std::io::Read::read(&mut bad, &mut buf).unwrap_or(0), 0);
+        acceptor.shutdown();
+    }
+
+    #[test]
+    fn silent_client_is_dropped_at_the_deadline_not_before() {
+        let listener = crate::sfm::tcp::bind("127.0.0.1:0").unwrap();
+        let admitted = Arc::new(AtomicBool::new(false));
+        let adm = admitted.clone();
+        let acceptor = AuthAcceptor::spawn(
+            listener,
+            true,
+            Duration::from_millis(150),
+            Arc::new(move |_info, _send, _tok| {
+                adm.store(true, Ordering::SeqCst);
+                Ok(Box::new(DropSink) as Box<dyn FrameSink>)
+            }),
+        )
+        .unwrap();
+        let addr = acceptor.local_addr();
+        // connect, say nothing
+        let mut silent = std::net::TcpStream::connect(addr).unwrap();
+        silent
+            .set_read_timeout(Some(Duration::from_secs(3)))
+            .unwrap();
+        let t0 = Instant::now();
+        let mut buf = [0u8; 1];
+        // the server closes us at the deadline — observed as EOF
+        let n = std::io::Read::read(&mut silent, &mut buf).unwrap_or(0);
+        assert_eq!(n, 0, "expected EOF from the deadline drop");
+        let waited = t0.elapsed();
+        assert!(
+            waited >= Duration::from_millis(100),
+            "dropped too early: {waited:?}"
+        );
+        assert!(!admitted.load(Ordering::SeqCst));
+        acceptor.shutdown();
+    }
+}

@@ -31,6 +31,7 @@
 //! receiver accepts both, so v2 peers interoperate as "everything is the
 //! default job".
 
+pub mod accept;
 pub mod inproc;
 pub mod mux;
 pub mod reactor;
@@ -203,9 +204,9 @@ pub trait Driver: Send {
 
     /// Describe this receive endpoint to the [`reactor`]: how readiness
     /// is observed and frames are decoded without a dedicated thread.
-    /// `None` (the default) means the driver only supports blocking
-    /// receive; the mux then falls back to a legacy pump thread (see
-    /// [`reactor::spawn_blocking_pump`]).
+    /// `None` (the default) means the driver cannot express readiness;
+    /// the mux then falls back to a timer-wheel poll task (see
+    /// [`reactor::spawn_poll_pump`]) driven by [`Driver::try_recv`].
     fn registration(&mut self) -> Option<reactor::Registration> {
         None
     }

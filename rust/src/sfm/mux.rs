@@ -53,6 +53,7 @@
 //! instead of stalling on a vanished endpoint.
 
 use std::collections::{HashMap, HashSet, VecDeque};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -82,8 +83,8 @@ struct MuxInner {
     bucket: Option<Arc<Mutex<TokenBucket>>>,
     state: Arc<MuxState>,
     label: String,
-    /// Reactor registration of the receive half (None when the legacy
-    /// blocking pump carries this connection).
+    /// Reactor registration of the receive half (None when the fallback
+    /// poll pump carries this connection).
     token: Mutex<Option<reactor::Token>>,
     /// Timer-wheel heartbeat task (see [`MuxConn::enable_heartbeat`]).
     hb_timer: Mutex<Option<reactor::TimerId>>,
@@ -98,6 +99,14 @@ struct MuxState {
     /// Invoked (on the reactor thread) after a frame lands in a job's
     /// queue — the control dispatcher's wakeup signal.
     on_deliver: Mutex<Option<Box<dyn Fn(u32) + Send>>>,
+    /// Bytes currently parked in this connection's receive backlog
+    /// (mirrors the sink's internal count for lock-free observation; the
+    /// process-wide total lives in [`mem::parked_bytes`]).
+    parked_bytes: AtomicUsize,
+    /// Cumulative ns this connection's receive path spent throttled
+    /// (a non-empty parked backlog) — the per-connection "bucket
+    /// throttle time" load signal.
+    throttle_wait_ns: AtomicU64,
 }
 
 /// Stand-in transport installed by [`MuxConn::kill`]: every operation
@@ -131,18 +140,13 @@ struct RouteTable {
 }
 
 impl MuxConn {
-    /// Wrap one connection's two directions and register the receive half
-    /// with the process-wide reactor (drivers that cannot express
-    /// readiness fall back to a dedicated legacy pump thread).
-    /// `rate_bps > 0` applies a shared whole-connection token bucket to
-    /// both directions, with `burst_bytes` of burst capacity (the fleet
-    /// uses one default chunk, matching the old per-link decorator).
-    pub fn spawn(
+    /// Build the connection + its sink without wiring a receive path.
+    fn build(
         send_half: Box<dyn Driver>,
-        mut recv_half: Box<dyn Driver>,
         rate_bps: u64,
         burst_bytes: u64,
-    ) -> MuxConn {
+        token: Option<reactor::Token>,
+    ) -> (MuxConn, Box<MuxSink>) {
         let label = format!("mux({})", send_half.name());
         let bucket = if rate_bps > 0 {
             Some(Arc::new(Mutex::new(TokenBucket::new(
@@ -156,6 +160,8 @@ impl MuxConn {
             table: Mutex::new(RouteTable::default()),
             heartbeat: Mutex::new(None),
             on_deliver: Mutex::new(None),
+            parked_bytes: AtomicUsize::new(0),
+            throttle_wait_ns: AtomicU64::new(0),
         });
         // Parking cap before reads pause: a few bursts' worth, so the
         // reactor keeps some frames staged for eta-paced delivery without
@@ -170,15 +176,9 @@ impl MuxConn {
             parked: VecDeque::new(),
             parked_bytes: 0,
             park_cap,
+            stall_since: None,
         });
-        let token = match recv_half.registration() {
-            Some(reg) => Some(reactor::global().register(reg, sink)),
-            None => {
-                reactor::spawn_blocking_pump(recv_half, sink);
-                None
-            }
-        };
-        MuxConn {
+        let conn = MuxConn {
             inner: Arc::new(MuxInner {
                 send_half: Mutex::new(send_half),
                 bucket,
@@ -187,7 +187,48 @@ impl MuxConn {
                 token: Mutex::new(token),
                 hb_timer: Mutex::new(None),
             }),
-        }
+        };
+        (conn, sink)
+    }
+
+    /// Wrap one connection's two directions and register the receive half
+    /// with the process-wide reactor (drivers that cannot express
+    /// readiness fall back to [`reactor::spawn_poll_pump`], a timer-wheel
+    /// poll task). `rate_bps > 0` applies a shared whole-connection token
+    /// bucket to both directions, with `burst_bytes` of burst capacity
+    /// (the fleet uses one default chunk, matching the old per-link
+    /// decorator).
+    pub fn spawn(
+        send_half: Box<dyn Driver>,
+        mut recv_half: Box<dyn Driver>,
+        rate_bps: u64,
+        burst_bytes: u64,
+    ) -> MuxConn {
+        let (conn, sink) = Self::build(send_half, rate_bps, burst_bytes, None);
+        let token = match recv_half.registration() {
+            Some(reg) => Some(reactor::global().register(reg, sink)),
+            None => {
+                reactor::spawn_poll_pump(recv_half, sink);
+                None
+            }
+        };
+        *conn.inner.token.lock().unwrap() = token;
+        conn
+    }
+
+    /// Adopt a receive path that is **already registered** with the
+    /// reactor under `token` (the auth-gate flow: `sfm::accept` registers
+    /// the socket to drive the handshake, then swaps in the returned sink
+    /// in place). The caller installs the sink; this connection owns the
+    /// token from here (kill / drop deregisters it).
+    pub fn adopt(
+        send_half: Box<dyn Driver>,
+        rate_bps: u64,
+        burst_bytes: u64,
+        token: reactor::Token,
+    ) -> (MuxConn, Box<dyn FrameSink>) {
+        let (conn, sink) = Self::build(send_half, rate_bps, burst_bytes, Some(token));
+        (conn, sink)
     }
 
     pub fn name(&self) -> String {
@@ -241,6 +282,19 @@ impl MuxConn {
     /// observation the fleet's deadline sweeps run on.
     pub fn last_heartbeat(&self) -> Option<Instant> {
         *self.inner.state.heartbeat.lock().unwrap()
+    }
+
+    /// Bytes currently parked in this connection's receive backlog,
+    /// awaiting bucket budget (0 when unthrottled or drained).
+    pub fn parked_bytes(&self) -> usize {
+        self.inner.state.parked_bytes.load(Ordering::Relaxed)
+    }
+
+    /// Cumulative time this connection's receive path has spent
+    /// throttled (backlog non-empty) — the per-connection load signal
+    /// `bench_fleet` and `metrics` report.
+    pub fn throttle_wait(&self) -> Duration {
+        Duration::from_nanos(self.inner.state.throttle_wait_ns.load(Ordering::Relaxed))
     }
 
     /// Send one [`KIND_HEARTBEAT`] control frame. Deliberately bypasses
@@ -415,6 +469,9 @@ struct MuxSink {
     /// Once `parked_bytes` exceeds this, reads pause (transport
     /// backpressure) until the backlog drains.
     park_cap: usize,
+    /// When the backlog last went non-empty; drained (or dropped) into
+    /// `MuxState::throttle_wait_ns`.
+    stall_since: Option<Instant>,
 }
 
 impl MuxSink {
@@ -527,7 +584,13 @@ impl FrameSink for MuxSink {
             }
         }
         // no budget (or already a backlog): park in arrival order
-        self.parked_bytes += frame.payload.len();
+        let n = frame.payload.len();
+        if self.parked.is_empty() {
+            self.stall_since = Some(Instant::now());
+        }
+        self.parked_bytes += n;
+        self.state.parked_bytes.fetch_add(n, Ordering::Relaxed);
+        mem::park_track_alloc(n);
         self.parked.push_back((frame, charged));
         self.backoff()
     }
@@ -542,8 +605,18 @@ impl FrameSink for MuxSink {
                 break;
             }
             let (frame, _) = self.parked.pop_front().unwrap();
-            self.parked_bytes -= frame.payload.len();
+            let n = frame.payload.len();
+            self.parked_bytes -= n;
+            self.state.parked_bytes.fetch_sub(n, Ordering::Relaxed);
+            mem::park_track_free(n);
             self.deliver(frame);
+        }
+        if self.parked.is_empty() {
+            if let Some(t0) = self.stall_since.take() {
+                let ns = t0.elapsed().as_nanos() as u64;
+                self.state.throttle_wait_ns.fetch_add(ns, Ordering::Relaxed);
+                mem::track_throttle_wait_ns(ns);
+            }
         }
         self.backoff()
     }
@@ -559,6 +632,15 @@ impl Drop for MuxSink {
         // are dropped here — account them like any other abort drain
         for (f, _) in &self.parked {
             mem::track_evicted(f.payload.len());
+            mem::park_track_free(f.payload.len());
+        }
+        self.state
+            .parked_bytes
+            .fetch_sub(self.parked_bytes, Ordering::Relaxed);
+        if let Some(t0) = self.stall_since.take() {
+            let ns = t0.elapsed().as_nanos() as u64;
+            self.state.throttle_wait_ns.fetch_add(ns, Ordering::Relaxed);
+            mem::track_throttle_wait_ns(ns);
         }
     }
 }

@@ -1,54 +1,78 @@
-//! The event-driven fleet core: **one** reactor thread owns every
-//! registered connection, so resident thread count is O(cores + active
-//! jobs) instead of O(clients).
+//! The event-driven fleet core: a **shard pool** of reactor threads
+//! owns every registered connection, so resident thread count is
+//! O(cores + active jobs) instead of O(clients).
 //!
 //! Before this module, each fleet connection cost a dedicated receive
 //! pump thread (blocking `Driver::recv`) plus a heartbeat thread — 512
-//! simulated clients passed, 10 000 could not even be spawned. The
-//! reactor inverts that model:
+//! simulated clients passed, 10 000 could not even be spawned. PR 6
+//! inverted that model with a single reactor thread; this revision
+//! shards it across cores so one poll loop is no longer the ceiling:
 //!
 //! ```text
-//!                         ┌──────────────────────────────┐
-//!   TcpStream (nonblock) ─┤                              │
-//!   TcpStream (nonblock) ─┤        sfm-reactor           │──▶ MuxSink
-//!   inproc rx + ReadyHook─┤  poll / readiness / decode   │──▶ MuxSink
-//!   inproc rx + ReadyHook─┤  + one timer wheel           │──▶ ...
-//!                         │  (heartbeats, throttle       │
-//!                         │   resumes, fleet sweeps)     │
-//!                         └──────────────────────────────┘
+//!                          ┌────────────────────────────┐
+//!    TcpStream (nonblock) ─┤  sfm-reactor/0             │──▶ MuxSink
+//!    inproc rx + ReadyHook─┤  poll set + timer wheel    │──▶ MuxSink
+//!                          ├────────────────────────────┤
+//!    TcpListener (accept) ─┤  sfm-reactor/1             │──▶ AcceptFn
+//!    TcpStream (nonblock) ─┤  poll set + timer wheel    │──▶ MuxSink
+//!                          ├────────────────────────────┤
+//!                          │  ... (default min(cores,8),│
+//!                          │  FEDFLARE_REACTOR_SHARDS)  │
+//!                          └────────────────────────────┘
 //! ```
 //!
+//! * **Sharding**: each shard owns its own poll set, partial-frame
+//!   buffers, ready queue, and timer wheel. A connection is pinned to
+//!   the least-loaded shard at registration and its shard index is
+//!   packed into the high bits of its [`Token`], so every frame, resume
+//!   timer, and close of that connection runs on one thread — ordering
+//!   and priority-lane guarantees are exactly the single-reactor
+//!   semantics, scaled out. With `FEDFLARE_REACTOR_SHARDS=1` the pool
+//!   degenerates to PR 6's single thread, byte for byte.
 //! * **TCP** connections are switched to non-blocking mode and polled;
 //!   incoming bytes accumulate in a per-connection partial buffer and
 //!   complete `u32 len | frame` records are decoded incrementally. A
 //!   connection deregistered mid-frame drops its partial bytes into
 //!   [`mem::track_evicted`] — never leaked, never delivered torn.
-//! * **In-process** connections ride the same loop through a
-//!   [`ReadyHook`]: the sending side pokes the reactor after each
-//!   channel push, so inproc delivery stays event-driven (no polling
-//!   tax), with a slow probe sweep catching peer-drop disconnects.
+//! * **Listeners** ride the same poll sets: [`Reactor::register_listener`]
+//!   parks a non-blocking `TcpListener` on a shard and invokes an
+//!   [`AcceptFn`] per accepted socket (bounded per round so an accept
+//!   storm cannot starve established connections). No blocking accept
+//!   thread, no per-handshake read timeout — see `sfm::accept`.
+//! * **In-process** connections ride the loop through a [`ReadyHook`]:
+//!   the sending side pokes the owning shard after each channel push
+//!   (the shard index travels inside the token), so inproc delivery
+//!   stays event-driven, with a slow probe sweep catching peer-drop
+//!   disconnects.
 //! * **Timers** (heartbeat sends, throttle resume deadlines, the fleet
-//!   suspect/gone sweep) share one wheel, so "periodic work" no longer
-//!   implies "a parked thread".
+//!   suspect/gone sweep) live on the wheel of the shard that owns the
+//!   connection; free-standing intervals round-robin across shards.
 //!
 //! Frames are handed to a [`FrameSink`] (the mux's routing/priority
 //! logic). The sink always takes ownership of the frame — when receive
 //! throttling has no budget the sink *parks* data frames internally and
-//! answers with [`SinkStatus::Resume`], so the reactor thread never
-//! blocks in a token bucket. Control frames (heartbeats, FIN, job 0)
-//! bypass parking entirely — the priority lane that keeps a heartbeat
-//! from queueing behind a multi-megabyte tensor transfer.
+//! answers with [`SinkStatus::Resume`], so reactor threads never block
+//! in a token bucket. Control frames (heartbeats, FIN, job 0) bypass
+//! parking entirely — the priority lane that keeps a heartbeat from
+//! queueing behind a multi-megabyte tensor transfer.
+//!
+//! Each shard exports load counters ([`Reactor::shard_stats`]): resident
+//! connections, ready-queue depth, frames/bytes ingested, and loop
+//! saturation (busy vs idle time) — the signals `bench_fleet` records as
+//! per-shard balance and `metrics` can sample per round.
 //!
 //! This is the only module under `rust/src/sfm/` and `rust/src/fleet/`
-//! allowed to spawn threads (CI enforces it; see
-//! `scripts/check_no_thread_spawn.sh`): the reactor thread itself, plus
-//! [`spawn_blocking_pump`] — the legacy escape hatch for driver stacks
-//! that cannot express readiness.
+//! allowed to spawn threads, and only at the single marked shard-pool
+//! site in [`global`] (CI enforces it; see
+//! `scripts/check_no_thread_spawn.sh`). Driver stacks that cannot
+//! express readiness use [`spawn_poll_pump`] — a timer-wheel poll task,
+//! not a thread.
 
 use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::io::Read;
-use std::net::TcpStream;
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
@@ -56,13 +80,19 @@ use std::time::{Duration, Instant};
 use super::{Driver, Frame, SfmError};
 use crate::util::mem;
 
-/// Identifies one registered connection.
+/// Identifies one registered connection. The owning shard's index is
+/// packed into the high bits (see [`shard_index`]).
 pub type Token = u64;
-/// Identifies one interval task on the timer wheel.
+/// Identifies one interval task on a shard's timer wheel (shard index
+/// in the high bits, like [`Token`]).
 pub type TimerId = u64;
-/// An interval task: runs every period on the reactor thread; return
+/// An interval task: runs every period on its shard's thread; return
 /// `false` to cancel.
 pub type IntervalFn = Box<dyn FnMut() -> bool + Send>;
+/// Callback for each socket accepted by a registered listener. Runs on
+/// the listener's shard; may call back into the reactor (e.g.
+/// [`Reactor::register`]) — no shard lock is held during the call.
+pub type AcceptFn = Box<dyn FnMut(TcpStream, SocketAddr) + Send>;
 
 /// Poll cadence for non-blocking TCP sockets (no epoll in the offline
 /// crate set, so readiness is sampled; each sample drains everything
@@ -75,6 +105,22 @@ const QUEUE_PROBE: Duration = Duration::from_millis(250);
 /// Per-connection read budget per service round, so one firehose
 /// connection cannot starve the rest of the loop.
 const MAX_READ_PER_ROUND: usize = 1 << 20;
+/// Accepts per listener per service round, so an accept storm cannot
+/// starve established connections on the same shard.
+const MAX_ACCEPT_PER_ROUND: usize = 256;
+/// Poll cadence for [`spawn_poll_pump`] fallback drains.
+const POLL_PUMP_PERIOD: Duration = Duration::from_millis(1);
+
+/// Shard index lives in the top bits of every token / timer id.
+const SHARD_SHIFT: u32 = 48;
+/// Without `FEDFLARE_REACTOR_SHARDS`, the pool defaults to
+/// `min(available_parallelism, MAX_DEFAULT_SHARDS)`.
+const MAX_DEFAULT_SHARDS: usize = 8;
+
+/// The shard that owns `id` (a [`Token`] or [`TimerId`]).
+pub fn shard_index(id: u64) -> usize {
+    (id >> SHARD_SHIFT) as usize
+}
 
 /// How a receive endpoint plugs into the reactor (see
 /// [`Driver::registration`]).
@@ -93,7 +139,8 @@ pub enum Registration {
 }
 
 /// Shared between an in-process sender and the reactor: once the peer's
-/// receive half is registered, every send pokes the reactor awake.
+/// receive half is registered, every send pokes the owning shard awake
+/// (the shard rides inside the bound token).
 #[derive(Clone, Default)]
 pub struct ReadyHook {
     token: Arc<Mutex<Option<Token>>>,
@@ -141,6 +188,10 @@ pub trait FrameSink: Send {
 enum Source {
     Tcp(TcpSource),
     Queue { rx: Arc<Mutex<Receiver<Frame>>> },
+    Listener {
+        listener: TcpListener,
+        on_accept: AcceptFn,
+    },
 }
 
 struct TcpSource {
@@ -160,6 +211,20 @@ impl Drop for TcpSource {
     }
 }
 
+/// Sink for listener slots: a listener produces sockets via its
+/// [`AcceptFn`], never frames.
+struct NullSink;
+
+impl FrameSink for NullSink {
+    fn on_frame(&mut self, _frame: Frame) -> SinkStatus {
+        SinkStatus::Ready
+    }
+    fn on_resume(&mut self) -> SinkStatus {
+        SinkStatus::Ready
+    }
+    fn on_closed(&mut self, _err: SfmError) {}
+}
+
 struct Conn {
     source: Source,
     sink: Box<dyn FrameSink>,
@@ -171,6 +236,7 @@ struct Conn {
 
 struct ConnSlot {
     conn: Arc<Mutex<Conn>>,
+    /// Polled every TCP round (true for sockets *and* listeners).
     is_tcp: bool,
 }
 
@@ -204,7 +270,7 @@ impl Ord for TimerEntry {
 
 struct IntervalTask {
     period: Duration,
-    /// Taken out while running (outside the reactor lock).
+    /// Taken out while running (outside the shard lock).
     f: Option<IntervalFn>,
 }
 
@@ -227,71 +293,169 @@ impl Inner {
     }
 }
 
-/// The process-wide reactor (one thread, started on first use).
-pub struct Reactor {
+/// One reactor shard: its own poll set, ready queue, and timer wheel,
+/// plus lock-free load counters for balance metrics.
+struct Shard {
+    idx: usize,
     inner: Mutex<Inner>,
     cv: Condvar,
+    /// Resident connections (including listeners) — the least-loaded
+    /// pinning signal, readable without the shard lock.
+    conn_count: AtomicUsize,
+    frames_in: AtomicU64,
+    bytes_in: AtomicU64,
+    /// Nanoseconds spent doing work (outside the condvar wait).
+    busy_ns: AtomicU64,
+    /// Nanoseconds spent parked in the condvar wait.
+    idle_ns: AtomicU64,
 }
 
-/// The process-wide reactor instance.
+/// A point-in-time load snapshot of one shard (see
+/// [`Reactor::shard_stats`]).
+#[derive(Debug, Clone)]
+pub struct ShardStats {
+    pub shard: usize,
+    /// Resident connections, listeners included.
+    pub conns: usize,
+    /// Polled (TCP + listener) connections.
+    pub tcp_conns: usize,
+    /// Ready-queue depth at sample time.
+    pub queue_depth: usize,
+    /// Pending timer-wheel entries.
+    pub timers: usize,
+    /// Live interval tasks.
+    pub intervals: usize,
+    /// Cumulative frames ingested by this shard.
+    pub frames_in: u64,
+    /// Cumulative payload/wire bytes ingested by this shard.
+    pub bytes_in: u64,
+    /// Cumulative ns spent servicing (outside the condvar wait).
+    pub busy_ns: u64,
+    /// Cumulative ns parked in the condvar wait.
+    pub idle_ns: u64,
+}
+
+impl ShardStats {
+    /// Fraction of loop time spent busy, 0.0..=1.0 (loop saturation).
+    pub fn saturation(&self) -> f64 {
+        let total = self.busy_ns.saturating_add(self.idle_ns);
+        if total == 0 {
+            0.0
+        } else {
+            self.busy_ns as f64 / total as f64
+        }
+    }
+}
+
+/// The process-wide reactor: a pool of shards, each a thread started on
+/// first use. All public methods route by the shard index packed into
+/// the token / timer id, so callers keep the single-reactor API.
+pub struct Reactor {
+    shards: Vec<Shard>,
+    /// Round-robin cursor for free-standing intervals.
+    rr: AtomicUsize,
+}
+
+fn configured_shards() -> usize {
+    if let Ok(v) = std::env::var("FEDFLARE_REACTOR_SHARDS") {
+        if let Ok(n) = v.trim().parse::<usize>() {
+            return n.max(1);
+        }
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(MAX_DEFAULT_SHARDS)
+}
+
+/// The process-wide reactor instance. Shard count is latched on first
+/// use: `FEDFLARE_REACTOR_SHARDS` if set, else
+/// `min(available_parallelism, 8)`.
 pub fn global() -> &'static Reactor {
     static GLOBAL: OnceLock<&'static Reactor> = OnceLock::new();
     GLOBAL.get_or_init(|| {
+        let n = configured_shards();
+        let shards = (0..n)
+            .map(|idx| Shard {
+                idx,
+                inner: Mutex::new(Inner::default()),
+                cv: Condvar::new(),
+                conn_count: AtomicUsize::new(0),
+                frames_in: AtomicU64::new(0),
+                bytes_in: AtomicU64::new(0),
+                busy_ns: AtomicU64::new(0),
+                idle_ns: AtomicU64::new(0),
+            })
+            .collect();
         let r: &'static Reactor = Box::leak(Box::new(Reactor {
-            inner: Mutex::new(Inner::default()),
-            cv: Condvar::new(),
+            shards,
+            rr: AtomicUsize::new(0),
         }));
-        std::thread::Builder::new()
-            .name("sfm-reactor".into())
-            .stack_size(512 << 10)
-            .spawn(move || r.run_loop())
-            .expect("spawn sfm-reactor");
+        for shard in &r.shards {
+            // threadlint-allow: shard-pool
+            std::thread::Builder::new()
+                .name(format!("sfm-reactor/{}", shard.idx))
+                .stack_size(512 << 10)
+                .spawn(move || shard.run_loop())
+                .expect("spawn sfm-reactor shard");
+        }
         r
     })
 }
 
 impl Reactor {
+    /// Number of shards in the pool.
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// The shard owning `id` (defensive clamp for garbage ids).
+    fn shard_of(&self, id: u64) -> &Shard {
+        let idx = shard_index(id).min(self.shards.len() - 1);
+        &self.shards[idx]
+    }
+
+    fn least_loaded(&self) -> &Shard {
+        self.shards
+            .iter()
+            .min_by_key(|s| s.conn_count.load(Ordering::Relaxed))
+            .expect("reactor has at least one shard")
+    }
+
     /// Register a connection; frames flow into `sink` from now on.
     pub fn register(&self, reg: Registration, sink: Box<dyn FrameSink>) -> Token {
-        let (token, hook) = {
-            let mut inner = self.inner.lock().unwrap();
-            let token = inner.next_token;
-            inner.next_token += 1;
-            let (source, hook, is_tcp) = match reg {
-                Registration::Tcp { stream, verify_crc } => {
-                    let _ = stream.set_nonblocking(true);
-                    inner.tcp_conns += 1;
-                    (
-                        Source::Tcp(TcpSource {
-                            stream,
-                            verify_crc,
-                            buf: Vec::new(),
-                        }),
-                        None,
-                        true,
-                    )
-                }
-                Registration::Queue { rx, hook } => {
-                    (Source::Queue { rx }, Some(hook), false)
-                }
-            };
-            inner.conns.insert(
-                token,
-                ConnSlot {
-                    conn: Arc::new(Mutex::new(Conn {
-                        source,
-                        sink,
-                        reads_paused: false,
-                        resume_pending: false,
-                        closed: false,
-                    })),
-                    is_tcp,
-                },
-            );
-            (token, hook)
+        self.register_with(reg, move |_| sink)
+    }
+
+    /// Register a connection whose sink needs to know its own token
+    /// (e.g. to deregister itself later): `make` runs after the token is
+    /// minted but before any frame is serviced, with no shard lock held.
+    pub fn register_with(
+        &self,
+        reg: Registration,
+        make: impl FnOnce(Token) -> Box<dyn FrameSink>,
+    ) -> Token {
+        let shard = self.least_loaded();
+        let token = shard.mint_token();
+        let sink = make(token);
+        let (source, hook, is_tcp) = match reg {
+            Registration::Tcp { stream, verify_crc } => {
+                let _ = stream.set_nonblocking(true);
+                (
+                    Source::Tcp(TcpSource {
+                        stream,
+                        verify_crc,
+                        buf: Vec::new(),
+                    }),
+                    None,
+                    true,
+                )
+            }
+            Registration::Queue { rx, hook } => (Source::Queue { rx }, Some(hook), false),
         };
-        // Bind outside the reactor lock (hook lock then reactor lock is
-        // the sender's order; never nest the other way).
+        shard.install(token, source, sink, is_tcp);
+        // Bind outside the shard lock (hook lock then shard lock is the
+        // sender's order; never nest the other way).
         if let Some(hook) = hook {
             hook.bind(token);
         }
@@ -300,9 +464,118 @@ impl Reactor {
         token
     }
 
+    /// Park a non-blocking listener on a shard: `on_accept` runs on that
+    /// shard for every accepted socket (at most [`MAX_ACCEPT_PER_ROUND`]
+    /// per poll round). Deregister the returned token to stop accepting.
+    pub fn register_listener(
+        &self,
+        listener: TcpListener,
+        on_accept: AcceptFn,
+    ) -> std::io::Result<Token> {
+        listener.set_nonblocking(true)?;
+        let shard = self.least_loaded();
+        let token = shard.mint_token();
+        shard.install(
+            token,
+            Source::Listener { listener, on_accept },
+            Box::new(NullSink),
+            true,
+        );
+        Ok(token)
+    }
+
     /// Remove a connection. The sink is dropped without `on_closed`; a
     /// TCP partial-frame buffer is accounted as evicted.
     pub fn deregister(&self, token: Token) {
+        self.shard_of(token).deregister_local(token);
+    }
+
+    /// Wake the owning shard: `token` has frames queued.
+    pub fn mark_ready(&self, token: Token) {
+        let shard = self.shard_of(token);
+        let mut inner = shard.inner.lock().unwrap();
+        if inner.conns.contains_key(&token) {
+            inner.ready.insert(token);
+            shard.cv.notify_all();
+        }
+    }
+
+    /// Run `f` every `period` on a reactor shard until it returns
+    /// `false` (or [`Reactor::cancel_interval`]). First run after one
+    /// period. Free-standing intervals round-robin across shards.
+    pub fn add_interval(&self, period: Duration, f: IntervalFn) -> TimerId {
+        let idx = self.rr.fetch_add(1, Ordering::Relaxed) % self.shards.len();
+        let shard = &self.shards[idx];
+        let mut inner = shard.inner.lock().unwrap();
+        let id = ((shard.idx as u64) << SHARD_SHIFT) | inner.next_id;
+        inner.next_id += 1;
+        inner.intervals.insert(id, IntervalTask { period, f: Some(f) });
+        inner.push_timer(Instant::now() + period, TimerKind::Interval(id));
+        shard.cv.notify_all();
+        id
+    }
+
+    /// Cancel an interval task (no-op if already finished).
+    pub fn cancel_interval(&self, id: TimerId) {
+        self.shard_of(id).inner.lock().unwrap().intervals.remove(&id);
+    }
+
+    /// Per-shard load snapshot: connection counts, queue depths,
+    /// ingest counters, and loop saturation.
+    pub fn shard_stats(&self) -> Vec<ShardStats> {
+        self.shards
+            .iter()
+            .map(|s| {
+                let inner = s.inner.lock().unwrap();
+                ShardStats {
+                    shard: s.idx,
+                    conns: inner.conns.len(),
+                    tcp_conns: inner.tcp_conns,
+                    queue_depth: inner.ready.len(),
+                    timers: inner.timers.len(),
+                    intervals: inner.intervals.len(),
+                    frames_in: s.frames_in.load(Ordering::Relaxed),
+                    bytes_in: s.bytes_in.load(Ordering::Relaxed),
+                    busy_ns: s.busy_ns.load(Ordering::Relaxed),
+                    idle_ns: s.idle_ns.load(Ordering::Relaxed),
+                }
+            })
+            .collect()
+    }
+}
+
+impl Shard {
+    fn mint_token(&self) -> Token {
+        let mut inner = self.inner.lock().unwrap();
+        let token = ((self.idx as u64) << SHARD_SHIFT) | inner.next_token;
+        inner.next_token += 1;
+        token
+    }
+
+    fn install(&self, token: Token, source: Source, sink: Box<dyn FrameSink>, is_tcp: bool) {
+        let mut inner = self.inner.lock().unwrap();
+        if is_tcp {
+            inner.tcp_conns += 1;
+        }
+        inner.conns.insert(
+            token,
+            ConnSlot {
+                conn: Arc::new(Mutex::new(Conn {
+                    source,
+                    sink,
+                    reads_paused: false,
+                    resume_pending: false,
+                    closed: false,
+                })),
+                is_tcp,
+            },
+        );
+        drop(inner);
+        self.conn_count.fetch_add(1, Ordering::Relaxed);
+        self.cv.notify_all();
+    }
+
+    fn deregister_local(&self, token: Token) {
         let slot = {
             let mut inner = self.inner.lock().unwrap();
             let slot = inner.conns.remove(&token);
@@ -312,36 +585,12 @@ impl Reactor {
             }
             slot
         };
+        if slot.is_some() {
+            self.conn_count.fetch_sub(1, Ordering::Relaxed);
+        }
         // Drop outside the lock: TcpSource::drop tracks torn-frame bytes
         // and the sink's drop may run arbitrary (mux) code.
         drop(slot);
-    }
-
-    /// Wake the reactor: `token` has frames queued.
-    pub fn mark_ready(&self, token: Token) {
-        let mut inner = self.inner.lock().unwrap();
-        if inner.conns.contains_key(&token) {
-            inner.ready.insert(token);
-            self.cv.notify_all();
-        }
-    }
-
-    /// Run `f` every `period` on the reactor thread until it returns
-    /// `false` (or [`Reactor::cancel_interval`]). First run after one
-    /// period.
-    pub fn add_interval(&self, period: Duration, f: IntervalFn) -> TimerId {
-        let mut inner = self.inner.lock().unwrap();
-        let id = inner.next_id;
-        inner.next_id += 1;
-        inner.intervals.insert(id, IntervalTask { period, f: Some(f) });
-        inner.push_timer(Instant::now() + period, TimerKind::Interval(id));
-        self.cv.notify_all();
-        id
-    }
-
-    /// Cancel an interval task (no-op if already finished).
-    pub fn cancel_interval(&self, id: TimerId) {
-        self.inner.lock().unwrap().intervals.remove(&id);
     }
 
     // ------------------------------------------------------------ loop
@@ -349,6 +598,7 @@ impl Reactor {
     fn run_loop(&self) {
         let mut last_probe = Instant::now();
         loop {
+            let loop_start = Instant::now();
             let mut resumes: Vec<(Token, Arc<Mutex<Conn>>)> = Vec::new();
             let mut intervals: Vec<(TimerId, IntervalFn, Duration)> = Vec::new();
             let mut service: Vec<(Token, Arc<Mutex<Conn>>)> = Vec::new();
@@ -415,6 +665,8 @@ impl Reactor {
             }
 
             let inner = self.inner.lock().unwrap();
+            self.busy_ns
+                .fetch_add(loop_start.elapsed().as_nanos() as u64, Ordering::Relaxed);
             if !inner.ready.is_empty() {
                 continue;
             }
@@ -426,7 +678,10 @@ impl Reactor {
             if wait.is_zero() {
                 continue;
             }
+            let park = Instant::now();
             let _ = self.cv.wait_timeout(inner, wait);
+            self.idle_ns
+                .fetch_add(park.elapsed().as_nanos() as u64, Ordering::Relaxed);
         }
     }
 
@@ -450,6 +705,10 @@ impl Reactor {
         let rx = match &c.source {
             Source::Queue { rx } => Some(rx.clone()),
             Source::Tcp(_) => None,
+            Source::Listener { .. } => {
+                self.service_listener(&mut c);
+                return;
+            }
         };
         match rx {
             Some(rx) => loop {
@@ -459,6 +718,9 @@ impl Reactor {
                 let polled = rx.lock().unwrap().try_recv();
                 match polled {
                     Ok(frame) => {
+                        self.frames_in.fetch_add(1, Ordering::Relaxed);
+                        self.bytes_in
+                            .fetch_add(frame.payload.len() as u64, Ordering::Relaxed);
                         let status = c.sink.on_frame(frame);
                         self.apply(&mut c, token, status);
                     }
@@ -470,6 +732,28 @@ impl Reactor {
                 }
             },
             None => self.service_tcp(&mut c, token),
+        }
+    }
+
+    /// Accept up to [`MAX_ACCEPT_PER_ROUND`] sockets; the callback may
+    /// re-enter the reactor (no shard lock is held here).
+    fn service_listener(&self, c: &mut Conn) {
+        use std::io::ErrorKind;
+        for _ in 0..MAX_ACCEPT_PER_ROUND {
+            let Source::Listener { listener, on_accept } = &mut c.source else {
+                return;
+            };
+            match listener.accept() {
+                Ok((stream, peer)) => on_accept(stream, peer),
+                Err(e) if e.kind() == ErrorKind::WouldBlock => return,
+                Err(e) if e.kind() == ErrorKind::Interrupted => continue,
+                Err(e) => {
+                    // Transient (EMFILE under fd pressure, aborted
+                    // handshake): keep the listener, retry next round.
+                    log::warn!("listener accept error: {e}");
+                    return;
+                }
+            }
         }
     }
 
@@ -485,6 +769,8 @@ impl Reactor {
                 };
                 read_and_decode(src)
             };
+            self.frames_in.fetch_add(frames.len() as u64, Ordering::Relaxed);
+            self.bytes_in.fetch_add(read_n as u64, Ordering::Relaxed);
             // 2) feed decoded frames (the sink owns them even if it
             //    answers with backpressure mid-batch)
             for frame in frames {
@@ -504,7 +790,8 @@ impl Reactor {
         }
     }
 
-    /// Apply a sink verdict; `true` = keep feeding.
+    /// Apply a sink verdict; `true` = keep feeding. Resume timers land
+    /// on this shard's own wheel, preserving per-connection ordering.
     fn apply(&self, c: &mut Conn, token: Token, status: SinkStatus) -> bool {
         match status {
             SinkStatus::Ready => true,
@@ -521,7 +808,7 @@ impl Reactor {
             }
             SinkStatus::Closed => {
                 c.closed = true;
-                self.deregister(token);
+                self.deregister_local(token);
                 false
             }
         }
@@ -530,7 +817,7 @@ impl Reactor {
     fn close_conn(&self, c: &mut Conn, token: Token, err: SfmError) {
         c.closed = true;
         c.sink.on_closed(err);
-        self.deregister(token);
+        self.deregister_local(token);
     }
 }
 
@@ -600,40 +887,90 @@ fn read_and_decode(src: &mut TcpSource) -> (Vec<Frame>, usize, Option<SfmError>)
     (frames, read_n, fail)
 }
 
-/// Legacy fallback for driver stacks without a [`Driver::registration`]:
-/// one dedicated pump thread with the pre-reactor blocking semantics.
-/// Kept so arbitrary decorator combinations still work; nothing in the
-/// repo's standard paths uses it.
-pub fn spawn_blocking_pump(mut driver: Box<dyn Driver>, mut sink: Box<dyn FrameSink>) {
-    let name = format!("mux-pump({})", driver.name());
-    std::thread::Builder::new()
-        .name(name)
-        .stack_size(256 << 10)
-        .spawn(move || loop {
-            match driver.recv() {
-                Ok(frame) => {
-                    let mut status = sink.on_frame(frame);
-                    loop {
-                        match status {
-                            SinkStatus::Ready => break,
-                            SinkStatus::Closed => return,
-                            SinkStatus::Resume { at, .. } => {
-                                let now = Instant::now();
-                                if at > now {
-                                    std::thread::sleep(at - now);
-                                }
-                                status = sink.on_resume();
-                            }
-                        }
-                    }
+/// Fallback for driver stacks without a [`Driver::registration`]: a
+/// timer-wheel poll task (no thread) that drains [`Driver::try_recv`]
+/// every millisecond and honors the same park/resume protocol as a
+/// registered connection. The driver must provide a genuinely
+/// non-blocking `try_recv`; the repo's decorator stacks all do. Nothing
+/// in the standard paths uses this — registration is the fast path.
+pub fn spawn_poll_pump(driver: Box<dyn Driver>, sink: Box<dyn FrameSink>) {
+    struct Pump {
+        driver: Box<dyn Driver>,
+        sink: Box<dyn FrameSink>,
+        resume_at: Option<Instant>,
+        reads_paused: bool,
+        done: bool,
+    }
+
+    impl Pump {
+        /// `true` = keep feeding this tick.
+        fn apply(&mut self, status: SinkStatus) -> bool {
+            match status {
+                SinkStatus::Ready => {
+                    self.resume_at = None;
+                    self.reads_paused = false;
+                    true
                 }
-                Err(err) => {
-                    sink.on_closed(err);
-                    return;
+                SinkStatus::Resume { at, pause_reads } => {
+                    self.resume_at = Some(at);
+                    self.reads_paused = pause_reads;
+                    !pause_reads
+                }
+                SinkStatus::Closed => {
+                    self.done = true;
+                    false
                 }
             }
-        })
-        .expect("spawn mux pump");
+        }
+
+        /// Interval body; `false` cancels the task.
+        fn tick(&mut self) -> bool {
+            if self.done {
+                return false;
+            }
+            if let Some(at) = self.resume_at {
+                if Instant::now() < at {
+                    if self.reads_paused {
+                        return true; // parked: wait for the deadline
+                    }
+                } else {
+                    self.resume_at = None;
+                    self.reads_paused = false;
+                    let status = self.sink.on_resume();
+                    if !self.apply(status) {
+                        return !self.done;
+                    }
+                }
+            }
+            if self.reads_paused {
+                return true;
+            }
+            loop {
+                match self.driver.try_recv() {
+                    Ok(Some(frame)) => {
+                        let status = self.sink.on_frame(frame);
+                        if !self.apply(status) {
+                            return !self.done;
+                        }
+                    }
+                    Ok(None) => return true,
+                    Err(err) => {
+                        self.sink.on_closed(err);
+                        return false;
+                    }
+                }
+            }
+        }
+    }
+
+    let mut pump = Pump {
+        driver,
+        sink,
+        resume_at: None,
+        reads_paused: false,
+        done: false,
+    };
+    global().add_interval(POLL_PUMP_PERIOD, Box::new(move || pump.tick()));
 }
 
 #[cfg(test)]
@@ -819,5 +1156,31 @@ mod tests {
         let frozen = *c2.lock().unwrap();
         std::thread::sleep(Duration::from_millis(50));
         assert!(*c2.lock().unwrap() <= frozen + 1, "cancel_interval ignored");
+    }
+
+    #[test]
+    fn listener_accepts_without_blocking() {
+        let listener = crate::sfm::tcp::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let accepted = Arc::new(Mutex::new(Vec::new()));
+        let acc = accepted.clone();
+        let tok = global()
+            .register_listener(
+                listener,
+                Box::new(move |_stream, peer| {
+                    acc.lock().unwrap().push(peer);
+                }),
+            )
+            .unwrap();
+        let clients: Vec<_> = (0..5)
+            .map(|_| std::net::TcpStream::connect(addr).unwrap())
+            .collect();
+        assert!(
+            wait_until(Duration::from_secs(2), || accepted.lock().unwrap().len() == 5),
+            "accepted {} of 5",
+            accepted.lock().unwrap().len()
+        );
+        global().deregister(tok);
+        drop(clients);
     }
 }

@@ -228,23 +228,6 @@ fn write_all_retrying(stream: &mut TcpStream, buf: &[u8]) -> Result<(), SfmError
     Ok(())
 }
 
-/// Accept loop helper: bind, then hand each accepted connection (as a
-/// [`TcpDriver`]) to the callback until the callback returns `false`.
-pub fn serve(
-    addr: impl ToSocketAddrs,
-    verify_crc: bool,
-    mut on_conn: impl FnMut(TcpDriver) -> bool,
-) -> Result<(), SfmError> {
-    let listener = TcpListener::bind(addr)?;
-    for conn in listener.incoming() {
-        let driver = TcpDriver::from_stream(conn?, verify_crc)?;
-        if !on_conn(driver) {
-            break;
-        }
-    }
-    Ok(())
-}
-
 /// Bind a listener (for callers that need the bound port before accepting).
 pub fn bind(addr: impl ToSocketAddrs) -> Result<TcpListener, SfmError> {
     Ok(TcpListener::bind(addr)?)

@@ -87,6 +87,11 @@ impl TokenBucket {
 pub struct Throttled<D: Driver> {
     inner: D,
     bucket: TokenBucket,
+    /// Receive budget still owed from a frame already delivered via the
+    /// non-blocking [`Driver::try_recv`] path: the next poll pays it
+    /// down before another frame is released, preserving the average
+    /// rate without ever blocking a reactor shard.
+    recv_debt: usize,
 }
 
 impl<D: Driver> Throttled<D> {
@@ -97,6 +102,7 @@ impl<D: Driver> Throttled<D> {
         Throttled {
             inner,
             bucket: TokenBucket::new(rate_bps, burst_bytes.max(1)),
+            recv_debt: 0,
         }
     }
 }
@@ -116,6 +122,28 @@ impl<D: Driver> Driver for Throttled<D> {
         let frame = self.inner.recv()?;
         self.bucket.take(frame.payload.len().max(1));
         Ok(frame)
+    }
+
+    fn try_recv(&mut self) -> Result<Option<Frame>, SfmError> {
+        // Non-blocking variant for [`super::reactor::spawn_poll_pump`]:
+        // settle the previous frame's debt before releasing another, so
+        // the average rate matches `recv` without sleeping on a shard.
+        if self.recv_debt > 0 {
+            if !self.bucket.try_take(self.recv_debt) {
+                return Ok(None);
+            }
+            self.recv_debt = 0;
+        }
+        match self.inner.try_recv()? {
+            Some(frame) => {
+                let n = frame.payload.len().max(1);
+                if !self.bucket.try_take(n) {
+                    self.recv_debt = n;
+                }
+                Ok(Some(frame))
+            }
+            None => Ok(None),
+        }
     }
 
     fn name(&self) -> String {

@@ -31,6 +31,15 @@ static STAGE_PEAK: AtomicU64 = AtomicU64::new(0);
 /// mux. Monotonic — a serving system's "memory reclaimed from dead
 /// streams" gauge, so an aborted job's drained buffers are observable.
 static EVICTED: AtomicU64 = AtomicU64::new(0);
+/// Bytes currently *parked* by receive-side throttling: frames the
+/// reactor has accepted but a connection's token bucket has not admitted
+/// downstream yet (the mux's per-connection backlog, globally summed).
+static PARKED: AtomicI64 = AtomicI64::new(0);
+/// High-water mark of `PARKED`.
+static PARKED_PEAK: AtomicU64 = AtomicU64::new(0);
+/// Cumulative ns connections spent with a non-empty parked backlog —
+/// the fleet-wide "bucket throttle time" gauge.
+static THROTTLE_WAIT_NS: AtomicU64 = AtomicU64::new(0);
 
 /// Record an allocation of `n` bytes in the streaming layer.
 pub fn track_alloc(n: usize) {
@@ -120,6 +129,40 @@ pub fn track_evicted(n: usize) {
 /// Total bytes discarded by eviction since process start.
 pub fn evicted_bytes() -> u64 {
     EVICTED.load(Ordering::Relaxed)
+}
+
+/// Record `n` bytes parked by a receive-side throttle backlog (frames
+/// the reactor accepted but a token bucket has not admitted yet).
+pub fn park_track_alloc(n: usize) {
+    let cur = PARKED.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
+    PARKED_PEAK.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+}
+
+/// Record `n` parked bytes released (admitted downstream or dropped with
+/// their connection).
+pub fn park_track_free(n: usize) {
+    PARKED.fetch_sub(n as i64, Ordering::Relaxed);
+}
+
+/// Bytes currently parked across all throttled connections.
+pub fn parked_bytes() -> i64 {
+    PARKED.load(Ordering::Relaxed)
+}
+
+/// High-water mark of the parked counter since start.
+pub fn parked_peak() -> u64 {
+    PARKED_PEAK.load(Ordering::Relaxed)
+}
+
+/// Record `ns` nanoseconds a connection's receive path spent throttled
+/// (non-empty parked backlog). Cumulative across all connections.
+pub fn track_throttle_wait_ns(ns: u64) {
+    THROTTLE_WAIT_NS.fetch_add(ns, Ordering::Relaxed);
+}
+
+/// Total receive-throttle stall time, in ns, since process start.
+pub fn throttle_wait_ns() -> u64 {
+    THROTTLE_WAIT_NS.load(Ordering::Relaxed)
 }
 
 /// A scoped byte counter (current + high-water mark). The process-global

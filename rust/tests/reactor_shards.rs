@@ -1,0 +1,373 @@
+//! Sharded-reactor property tests: pinning, ordering, balance, liveness
+//! under load, kill/rejoin, and the event-driven accept path — all with
+//! the shard count forced to a multi-shard configuration (so a 1-core CI
+//! box still exercises cross-shard behavior). The same suite must also
+//! pass with `FEDFLARE_REACTOR_SHARDS=1`, where every multi-shard
+//! assertion gates itself off and the remaining checks pin the
+//! single-shard (pre-sharding) semantics.
+
+use std::io::Write as _;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::thread;
+use std::time::{Duration, Instant};
+
+use fedflare::fleet::{ClientState, Registry};
+use fedflare::sfm::accept::{AuthAcceptor, AuthInfo};
+use fedflare::sfm::inproc;
+use fedflare::sfm::mux::MuxConn;
+use fedflare::sfm::reactor::{self, FrameSink, SinkStatus};
+use fedflare::sfm::{Frame, SfmError, FLAG_FIRST, FLAG_LAST, KIND_AUTH};
+use fedflare::util::bytes::Writer;
+
+/// Force a multi-shard reactor before its first use unless the caller
+/// (CI's shard-count sweep) pinned a count explicitly.
+fn force_shards() {
+    if std::env::var_os("FEDFLARE_REACTOR_SHARDS").is_none() {
+        std::env::set_var("FEDFLARE_REACTOR_SHARDS", "4");
+    }
+}
+
+fn wait_until(timeout: Duration, mut f: impl FnMut() -> bool) -> bool {
+    let t0 = Instant::now();
+    while t0.elapsed() < timeout {
+        if f() {
+            return true;
+        }
+        thread::sleep(Duration::from_millis(5));
+    }
+    f()
+}
+
+/// A connected (server mux, client mux) inproc pair; `rate_bps = 0`
+/// means unthrottled.
+fn mux_pair(tag: &str, rate_bps: u64) -> (MuxConn, MuxConn) {
+    let (s, c) = inproc::pair(64, tag);
+    let (sr, cr) = (s.recv_half(), c.recv_half());
+    let server = MuxConn::spawn(Box::new(s), Box::new(sr), 0, 32 * 1024);
+    let client = MuxConn::spawn(Box::new(c), Box::new(cr), rate_bps, 32 * 1024);
+    (server, client)
+}
+
+/// One single-frame message carrying a u32 counter.
+fn counter_frame(stream: u32, i: u32) -> Frame {
+    Frame {
+        flags: FLAG_FIRST | FLAG_LAST,
+        kind: 0,
+        job: 0,
+        stream,
+        seq: 0,
+        total: 1,
+        payload: i.to_le_bytes().to_vec(),
+    }
+}
+
+/// Frames on one connection must arrive in send order no matter how the
+/// connection pool spreads over shards — a connection lives on exactly
+/// one shard, so there is no cross-thread reordering to defend against.
+/// Also checks the pinning balance: with shards > 1 every shard carries
+/// load and no shard holds more than 2x another's connections.
+#[test]
+fn frames_stay_ordered_and_connections_balance_across_shards() {
+    force_shards();
+    const PAIRS: usize = 32;
+    const FRAMES: u32 = 200;
+    let pairs: Vec<(MuxConn, MuxConn)> =
+        (0..PAIRS).map(|i| mux_pair(&format!("ord-{i}"), 0)).collect();
+
+    // balance: 2 registered receive paths per pair, least-loaded pinned
+    let stats = reactor::global().shard_stats();
+    let conns: Vec<usize> = stats.iter().map(|s| s.conns).collect();
+    let total: usize = conns.iter().sum();
+    assert!(
+        total >= 2 * PAIRS,
+        "expected at least {} registered conns, shards report {conns:?}",
+        2 * PAIRS
+    );
+    if reactor::global().shard_count() > 1 {
+        let loaded: Vec<usize> = conns.iter().copied().filter(|&c| c > 0).collect();
+        assert!(
+            loaded.len() == conns.len(),
+            "idle shard with {} conns to place: {conns:?}",
+            total
+        );
+        let (max, min) = (
+            *loaded.iter().max().unwrap(),
+            *loaded.iter().min().unwrap(),
+        );
+        // +4 of additive slack: other tests in this binary register and
+        // drop their own connections concurrently with the snapshot
+        assert!(
+            max <= 2 * min + 4,
+            "shard imbalance beyond 2x: {conns:?}"
+        );
+    }
+
+    // ordering: every connection ships its counters concurrently; each
+    // receiver must observe a strictly increasing sequence
+    let senders: Vec<_> = pairs
+        .iter()
+        .map(|(_, client)| {
+            let mut tx = client.handle(1);
+            thread::spawn(move || {
+                for i in 0..FRAMES {
+                    tx.send(counter_frame(7, i)).expect("send counter");
+                }
+            })
+        })
+        .collect();
+    let receivers: Vec<_> = pairs
+        .iter()
+        .map(|(server, _)| {
+            let mut rx = server.handle(1);
+            thread::spawn(move || {
+                for want in 0..FRAMES {
+                    let f = rx.recv().expect("recv counter");
+                    let got = u32::from_le_bytes(f.payload[..4].try_into().unwrap());
+                    assert_eq!(got, want, "frame reordered on one connection");
+                }
+            })
+        })
+        .collect();
+    for h in senders {
+        h.join().unwrap();
+    }
+    for h in receivers {
+        h.join().unwrap();
+    }
+}
+
+/// The priority-lane guarantee holds verbatim under sharding: a client
+/// mid-saturating-transfer keeps heartbeating, and the registry sweep
+/// never demotes it. (With shards forced to 1 this re-pins the
+/// pre-sharding behavior byte-for-byte.)
+#[test]
+fn heartbeats_survive_saturating_transfer_with_shards() {
+    force_shards();
+    const RATE_BPS: u64 = 512 * 1024;
+    const PAYLOAD: usize = 768 * 1024;
+    const CHUNK: usize = 16 * 1024;
+    const HEARTBEAT: Duration = Duration::from_millis(50);
+    const SUSPECT_AFTER: Duration = Duration::from_millis(400);
+
+    let (server, client) = mux_pair("lane-sharded", RATE_BPS);
+    let registry = Arc::new(Registry::new());
+    let idx = registry.join("lane-sharded");
+    registry.connected(idx);
+    client.enable_heartbeat(HEARTBEAT);
+    assert!(
+        wait_until(Duration::from_secs(5), || server.last_heartbeat().is_some()),
+        "first heartbeat never arrived"
+    );
+
+    let mut tx = client.handle(1);
+    let payload = vec![0xA5u8; PAYLOAD];
+    let total = PAYLOAD.div_ceil(CHUNK) as u32;
+    let sender = thread::spawn(move || {
+        for (i, part) in payload.chunks(CHUNK).enumerate() {
+            let mut flags = 0u8;
+            if i == 0 {
+                flags |= FLAG_FIRST;
+            }
+            if i as u32 == total - 1 {
+                flags |= FLAG_LAST;
+            }
+            tx.send(Frame {
+                flags,
+                kind: 0,
+                job: 0,
+                stream: 9,
+                seq: i as u32,
+                total,
+                payload: part.to_vec(),
+            })
+            .expect("throttled send");
+        }
+    });
+    let mut rx = server.handle(1);
+    let drain = thread::spawn(move || {
+        let mut got = 0usize;
+        while got < PAYLOAD {
+            got += rx.recv().expect("drain transfer").payload.len();
+        }
+        got
+    });
+
+    let mut max_staleness = Duration::ZERO;
+    let deadline = Instant::now() + Duration::from_secs(30);
+    while !(sender.is_finished() && drain.is_finished()) {
+        assert!(Instant::now() < deadline, "transfer wedged");
+        if let Some(at) = server.last_heartbeat() {
+            max_staleness = max_staleness.max(at.elapsed());
+            registry.heard(idx, at);
+        }
+        registry.sweep(SUSPECT_AFTER, Duration::from_secs(60));
+        assert_eq!(
+            registry.state_of("lane-sharded"),
+            Some(ClientState::Live),
+            "client demoted mid-transfer"
+        );
+        thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(drain.join().unwrap(), PAYLOAD, "payload truncated");
+    sender.join().unwrap();
+    assert!(
+        max_staleness < SUSPECT_AFTER,
+        "heartbeat gap {max_staleness:?} crossed the suspect deadline"
+    );
+}
+
+/// Fleet kill/rejoin semantics are shard-count independent: a killed
+/// client goes Suspect via the dead-transport observation, and a fresh
+/// connection brings it back to Live with new heartbeat evidence.
+#[test]
+fn kill_and_rejoin_pass_under_forced_shards() {
+    force_shards();
+    const HEARTBEAT: Duration = Duration::from_millis(50);
+    const SUSPECT_AFTER: Duration = Duration::from_millis(400);
+    let registry = Arc::new(Registry::new());
+
+    let observe = |server: &MuxConn, idx: usize| {
+        if server.is_dead() {
+            registry.suspect(idx);
+        } else if let Some(at) = server.last_heartbeat() {
+            registry.heard(idx, at);
+        }
+        registry.sweep(SUSPECT_AFTER, Duration::from_secs(60));
+    };
+
+    let (server, client) = mux_pair("rejoin-0", 0);
+    client.enable_heartbeat(HEARTBEAT);
+    let idx = registry.join("rejoin-0");
+    registry.connected(idx);
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            observe(&server, idx);
+            registry.state_of("rejoin-0") == Some(ClientState::Live)
+                && server.last_heartbeat().is_some()
+        }),
+        "client never went Live"
+    );
+
+    client.kill();
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            observe(&server, idx);
+            registry.state_of("rejoin-0") == Some(ClientState::Suspect)
+        }),
+        "kill never observed as Suspect"
+    );
+    server.kill();
+
+    // the rejoin: a brand-new connection (fresh shard pinning) for the
+    // same site name, promoted on fresh heartbeat evidence
+    let (server2, client2) = mux_pair("rejoin-0", 0);
+    client2.enable_heartbeat(HEARTBEAT);
+    let idx2 = registry.join("rejoin-0");
+    registry.connected(idx2);
+    assert!(
+        wait_until(Duration::from_secs(5), || {
+            observe(&server2, idx2);
+            registry.state_of("rejoin-0") == Some(ClientState::Live)
+                && server2.last_heartbeat().is_some()
+        }),
+        "rejoin never observed as Live with heartbeat evidence"
+    );
+}
+
+/// The length-prefixed wire bytes of one auth handshake frame.
+fn auth_wire(name: &str, token: &str) -> Vec<u8> {
+    let mut w = Writer::new();
+    w.str(name);
+    w.str(token);
+    let f = Frame {
+        flags: FLAG_FIRST | FLAG_LAST,
+        kind: KIND_AUTH,
+        job: 0,
+        stream: 0,
+        seq: 0,
+        total: 1,
+        payload: w.into_vec(),
+    };
+    let bytes = f.encode();
+    let mut wire = (bytes.len() as u32).to_le_bytes().to_vec();
+    wire.extend_from_slice(&bytes);
+    wire
+}
+
+struct CountSink;
+impl FrameSink for CountSink {
+    fn on_frame(&mut self, _f: Frame) -> SinkStatus {
+        SinkStatus::Ready
+    }
+    fn on_resume(&mut self) -> SinkStatus {
+        SinkStatus::Ready
+    }
+    fn on_closed(&mut self, _e: SfmError) {}
+}
+
+/// An accept storm against the event-driven gate: many clients auth at
+/// once and all are admitted, while one silent dialer is reaped by the
+/// timer-wheel deadline instead of wedging anything.
+#[test]
+fn accept_storm_admits_herd_and_reaps_silent_dialer() {
+    force_shards();
+    const HERD: usize = 50;
+    let admitted = Arc::new(std::sync::Mutex::new(Vec::<String>::new()));
+    let rejected = Arc::new(AtomicBool::new(false));
+    let adm = admitted.clone();
+    let rej = rejected.clone();
+    let acceptor = AuthAcceptor::spawn(
+        fedflare::sfm::tcp::bind("127.0.0.1:0").unwrap(),
+        true,
+        Duration::from_millis(500),
+        Arc::new(move |info: AuthInfo, _send, _tok| {
+            if info.token != "letmein" {
+                rej.store(true, Ordering::SeqCst);
+                return Err("bad token".into());
+            }
+            adm.lock().unwrap().push(info.name);
+            Ok(Box::new(CountSink) as Box<dyn FrameSink>)
+        }),
+    )
+    .unwrap();
+    let addr = acceptor.local_addr();
+
+    let mut silent = std::net::TcpStream::connect(addr).unwrap();
+    let dialers: Vec<_> = (0..HERD)
+        .map(|i| {
+            thread::spawn(move || {
+                let mut s = std::net::TcpStream::connect(addr).unwrap();
+                s.write_all(&auth_wire(&format!("site-{i:02}"), "letmein"))
+                    .unwrap();
+                s
+            })
+        })
+        .collect();
+    let streams: Vec<_> = dialers.into_iter().map(|h| h.join().unwrap()).collect();
+
+    assert!(
+        wait_until(Duration::from_secs(10), || admitted.lock().unwrap().len() == HERD),
+        "only {}/{HERD} admitted",
+        admitted.lock().unwrap().len()
+    );
+    assert!(!rejected.load(Ordering::SeqCst), "a valid dialer was rejected");
+    let mut names = admitted.lock().unwrap().clone();
+    names.sort();
+    names.dedup();
+    assert_eq!(names.len(), HERD, "duplicate admissions");
+
+    // the silent dialer is dropped at the deadline — observed as EOF.
+    // A read timeout here would mean the gate never reaped it: the
+    // deadline is 500 ms, so 5 s of patience distinguishes the two.
+    silent
+        .set_read_timeout(Some(Duration::from_secs(5)))
+        .unwrap();
+    let mut buf = [0u8; 1];
+    let n = std::io::Read::read(&mut silent, &mut buf)
+        .expect("silent dialer not reaped: read timed out instead of EOF");
+    assert_eq!(n, 0, "silent dialer was not reaped by the deadline");
+
+    drop(streams);
+    acceptor.shutdown();
+}

@@ -5,8 +5,8 @@ Usage:
     scripts/bench_gate.py BASELINE.json FRESH.json [--threshold 0.25]
 
 Compares every ``wall_s*`` field of every row (rows matched by their
-identity fields: k / clients / branching / connections / churn_batch)
-and fails — exit 1 — when any wall-clock number regressed by more than
+identity fields: k / clients / branching / connections / churn_batch /
+model_mb / case / op / storm) and fails — exit 1 — when any wall-clock number regressed by more than
 the threshold (default 25%). Non-wall-clock fields (peak bytes, thread
 counts) are reported but never gate: they are tracked via the uploaded
 artifacts instead.
@@ -16,7 +16,8 @@ committed without a measured run (e.g. authored on a machine without
 the toolchain) — the gate prints the comparison, asks for the baseline
 to be refreshed from a real run, and exits 0. To refresh::
 
-    FEDFLARE_BENCH_QUICK=1 cargo bench --bench bench_jobs --bench bench_topology
+    FEDFLARE_BENCH_QUICK=1 cargo bench --bench bench_jobs --bench bench_topology \
+        --bench bench_fleet --bench bench_streaming
     cp rust/BENCH_jobs.json bench/baseline/BENCH_jobs.json   # drop "provisional"
 
 Quick-mode output must be compared against a quick-mode baseline (and
@@ -27,7 +28,17 @@ the workloads differ by design.
 import json
 import sys
 
-ID_KEYS = ("k", "clients", "branching", "connections", "churn_batch")
+ID_KEYS = (
+    "k",
+    "clients",
+    "branching",
+    "connections",
+    "churn_batch",
+    "model_mb",
+    "case",
+    "op",
+    "storm",
+)
 
 
 def identity(row):

@@ -1,10 +1,13 @@
 #!/usr/bin/env sh
 # CI lint gate for the event-driven connection core: the reactor owns
-# every thread under rust/src/sfm/ and rust/src/fleet/. Any other
-# `thread::spawn` / `thread::Builder` in those trees is a regression to
-# the thread-per-connection design this codebase moved away from —
-# per-connection work belongs on the reactor's poll loop or timer wheel
-# (rust/src/sfm/reactor.rs), not on a new thread.
+# every thread under rust/src/sfm/ and rust/src/fleet/. The ONLY place
+# allowed to spawn is the reactor's shard pool — one `thread::Builder`
+# call in rust/src/sfm/reactor.rs whose preceding line carries the
+# marker comment `threadlint-allow: shard-pool`. Any other
+# `thread::spawn` / `thread::Builder` in those trees (reactor.rs
+# included) is a regression to the thread-per-connection design this
+# codebase moved away from — per-connection work belongs on a reactor
+# shard's poll loop or timer wheel, not on a new thread.
 #
 # Test modules are exempt: everything after the first `#[cfg(test)]` in
 # a file is ignored (tests spawn threads to act as peers).
@@ -12,24 +15,48 @@ set -eu
 
 root="$(cd "$(dirname "$0")/.." && pwd)"
 status=0
+marked=0
 
-for f in $(find "$root/rust/src/sfm" "$root/rust/src/fleet" -name '*.rs' ! -name 'reactor.rs' | sort); do
+for f in $(find "$root/rust/src/sfm" "$root/rust/src/fleet" -name '*.rs' | sort); do
     hits="$(awk '
         /#\[cfg\(test\)\]/ { intest = 1 }
         intest { next }
-        /thread::spawn|thread::Builder/ { printf "%s:%d: %s\n", FILENAME, FNR, $0 }
+        /thread::spawn|thread::Builder/ {
+            if (prev ~ /threadlint-allow: shard-pool/) {
+                printf "MARKED %s:%d\n", FILENAME, FNR
+            } else {
+                printf "%s:%d: %s\n", FILENAME, FNR, $0
+            }
+        }
+        { prev = $0 }
     ' "$f")"
     if [ -n "$hits" ]; then
-        echo "$hits"
-        status=1
+        # count + strip the sanctioned shard-pool site, report the rest
+        n="$(printf '%s\n' "$hits" | grep -c '^MARKED ' || true)"
+        marked=$((marked + n))
+        bad="$(printf '%s\n' "$hits" | grep -v '^MARKED ' || true)"
+        if [ -n "$bad" ]; then
+            echo "$bad"
+            status=1
+        fi
     fi
 done
 
+# the marker may only sanction the reactor's shard pool, exactly once
+if [ "$marked" -ne 1 ]; then
+    echo "error: expected exactly one 'threadlint-allow: shard-pool' spawn site" >&2
+    echo "in rust/src/sfm/reactor.rs, found $marked." >&2
+    status=1
+elif ! grep -q 'threadlint-allow: shard-pool' "$root/rust/src/sfm/reactor.rs"; then
+    echo "error: the shard-pool marker is not in rust/src/sfm/reactor.rs." >&2
+    status=1
+fi
+
 if [ "$status" -ne 0 ]; then
     echo ""
-    echo "error: thread spawn outside the reactor in the connection core." >&2
-    echo "Per-connection receive/timer work must run on the sfm reactor" >&2
+    echo "error: thread spawn outside the reactor shard pool in the connection core." >&2
+    echo "Per-connection receive/timer work must run on an sfm reactor shard" >&2
     echo "(rust/src/sfm/reactor.rs) — see rust/README.md, thread budget." >&2
     exit 1
 fi
-echo "thread-spawn lint: connection core is reactor-only (ok)"
+echo "thread-spawn lint: connection core spawns only the reactor shard pool (ok)"
