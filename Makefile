@@ -19,9 +19,13 @@
 #   make threadlint  fail if anything under rust/src/sfm/ or
 #                    rust/src/fleet/ spawns a thread outside the
 #                    reactor's single marked shard-pool spawn site
-#   make lint        rustfmt + clippy + threadlint, as CI runs them
+#   make alloclint   fail if the data-plane hot path (sfm/reactor.rs,
+#                    sfm/mux.rs) allocates per-frame byte buffers
+#                    outside the buffer pool / an alloclint-allow marker
+#   make lint        rustfmt + clippy + threadlint + alloclint, as CI
+#                    runs them
 
-.PHONY: artifacts test bench perfgate threadlint lint
+.PHONY: artifacts test bench perfgate threadlint alloclint lint
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
@@ -50,6 +54,9 @@ perfgate:
 threadlint:
 	sh scripts/check_no_thread_spawn.sh
 
-lint: threadlint
+alloclint:
+	sh scripts/check_no_hot_alloc.sh
+
+lint: threadlint alloclint
 	cargo fmt --check
 	cargo clippy --all-targets -- -D warnings

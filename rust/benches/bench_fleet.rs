@@ -272,7 +272,7 @@ fn auth_wire(name: &str, token: &str) -> Vec<u8> {
         stream: 0,
         seq: 0,
         total: 1,
-        payload: w.into_vec(),
+        payload: w.into_vec().into(),
     };
     let bytes = f.encode();
     let mut wire = (bytes.len() as u32).to_le_bytes().to_vec();
@@ -284,6 +284,12 @@ fn auth_wire(name: &str, token: &str) -> Vec<u8> {
 /// threads can dial; the row is the wall time for the whole herd to
 /// authenticate and be admitted.
 fn accept_storm_row(n: usize) -> Json {
+    // writev batching over the storm: every server-side send (auth acks,
+    // heartbeats) goes through the vectored write path, so the
+    // frames-per-syscall ratio here is the data plane's batching floor —
+    // control-plane singles land at 1.0, coalesced bulk pushes it up
+    let wv_calls0 = mem::writev_calls();
+    let wv_frames0 = mem::writev_frames();
     let listener = fedflare::sfm::tcp::bind("127.0.0.1:0").expect("bind storm listener");
     let admitted = Arc::new(AtomicUsize::new(0));
     let adm = admitted.clone();
@@ -326,13 +332,19 @@ fn accept_storm_row(n: usize) -> Json {
     let got = admitted.load(Ordering::SeqCst);
     assert_eq!(got, n, "accept storm: only {got}/{n} admitted");
     let rate = n as f64 / wall_s.max(1e-9);
-    println!("  {n:<10} {wall_s:>9.3}s {rate:>11.0}/s");
     drop(streams); // EOF -> the reactor reaps every storm connection
     acceptor.shutdown();
+    let wv_calls = mem::writev_calls() - wv_calls0;
+    let wv_frames = mem::writev_frames() - wv_frames0;
+    let wv_batch = wv_frames as f64 / (wv_calls as f64).max(1.0);
+    println!("  {n:<10} {wall_s:>9.3}s {rate:>11.0}/s   {wv_batch:.2} frames/writev");
     Json::obj([
         ("storm", Json::num(n as f64)),
         ("wall_s", Json::num(wall_s)),
         ("accepts_per_s", Json::num(rate)),
+        ("writev_calls", Json::num(wv_calls as f64)),
+        ("writev_frames", Json::num(wv_frames as f64)),
+        ("writev_batch_mean", Json::num(wv_batch)),
     ])
 }
 
@@ -469,7 +481,10 @@ fn main() {
         .collect();
 
     println!("\n== accept storm: concurrent TCP dialers vs the auth gate ==");
-    println!("  {:<10} {:>10} {:>13}", "dialers", "wall", "admit rate");
+    println!(
+        "  {:<10} {:>10} {:>13}   {}",
+        "dialers", "wall", "admit rate", "writev batch"
+    );
     let storm_sizes: &[usize] = if quick() { &[512] } else { &[512, 2048] };
     let storm_rows: Vec<Json> = storm_sizes.iter().map(|&n| accept_storm_row(n)).collect();
 

@@ -66,7 +66,7 @@ fn main() {
         stream: 9,
         seq: 0,
         total: 1,
-        payload: vec![7u8; 1 << 20],
+        payload: vec![7u8; 1 << 20].into(),
     };
     let s = bench("encode", 2, 32, || {
         std::hint::black_box(frame.encode().len());
@@ -109,6 +109,10 @@ fn main() {
     {
         let mb = if quick() { 2usize } else { 8usize };
         let msg = FlMessage::task("train", 0, model_of(mb));
+        // frames-per-syscall over the run: the batched writev path should
+        // coalesce a send window's worth of data frames into each call
+        let wv_calls0 = fedflare::util::mem::writev_calls();
+        let wv_frames0 = fedflare::util::mem::writev_frames();
         let s = bench(&format!("{mb} MB model, tcp loopback"), 1, 6, || {
             let listener = tcp::bind("127.0.0.1:0").unwrap();
             let addr = listener.local_addr().unwrap();
@@ -125,7 +129,16 @@ fn main() {
             h.join().unwrap();
             std::hint::black_box(got.body.len());
         });
-        report(&s, Some(format!("{:.0} MB/s", s.mb_per_sec((mb << 20) as f64))));
+        let wv_calls = fedflare::util::mem::writev_calls() - wv_calls0;
+        let wv_frames = fedflare::util::mem::writev_frames() - wv_frames0;
+        let wv_batch = wv_frames as f64 / (wv_calls as f64).max(1.0);
+        report(
+            &s,
+            Some(format!(
+                "{:.0} MB/s, {wv_batch:.1} frames/writev",
+                s.mb_per_sec((mb << 20) as f64)
+            )),
+        );
     }
 
     let v2_mb = if quick() { 2usize } else { 8usize };
@@ -226,6 +239,11 @@ fn main() {
     for (case, msg, enc) in &cases {
         let payload_bytes = msg.v2_encoded_len(*enc);
         let mut wire_bytes = 0u64;
+        // frame-payload heap allocations across the case's rounds (pool
+        // misses + unpooled wraps), amortized per round: cold size
+        // classes miss in the first round, then the pooled data plane
+        // should hold this near zero
+        let allocs0 = fedflare::util::mem::frame_allocs();
         let s = bench(&format!("{case} ({})", enc.as_str()), 1, 6, || {
             let (a, b) = inproc::pair(64, "benchdelta");
             let mut tx = Messenger::new(Box::new(a), 1 << 20, 1);
@@ -244,11 +262,13 @@ fn main() {
             wire_bytes as usize, payload_bytes,
             "{case}: transported bytes disagree with the computed payload length"
         );
+        let allocs_per_round =
+            (fedflare::util::mem::frame_allocs() - allocs0) as f64 / (1 + 6) as f64;
         let ratio = dense_bytes / payload_bytes as f64;
         report(
             &s,
             Some(format!(
-                "{:>8} kB  {ratio:>6.1}x under dense f32",
+                "{:>8} kB  {ratio:>6.1}x under dense f32  {allocs_per_round:.1} allocs/round",
                 payload_bytes >> 10
             )),
         );
@@ -257,6 +277,7 @@ fn main() {
             ("codec", Json::str(enc.as_str())),
             ("payload_bytes", Json::num(payload_bytes as f64)),
             ("bytes_vs_dense_f32", Json::num(ratio)),
+            ("allocs_per_round", Json::num(allocs_per_round)),
             ("wall_s", Json::num(s.mean_ns / 1e9)),
             ("p95_s", Json::num(s.p95_ns / 1e9)),
         ]));

@@ -659,7 +659,7 @@ fn auth_frame(name: &str, token: &str) -> Frame {
         stream: 0,
         seq: 0,
         total: 1,
-        payload: w.into_vec(),
+        payload: w.into_vec().into(),
     }
 }
 

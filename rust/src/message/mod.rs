@@ -32,6 +32,7 @@ use crate::tensor::{self, RecordEnc, Tensor, TensorDict};
 use crate::util::bytes::{ByteError, Reader, Writer};
 use crate::util::json::Json;
 use crate::util::mem;
+use crate::util::pool::{self, Payload};
 
 /// Message kinds of the FL protocol.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -342,8 +343,9 @@ pub const META_DELTA: &str = "delta";
 pub struct FrameIter<'a> {
     entries: Vec<(&'a str, &'a Tensor)>,
     next_entry: usize,
-    /// Current record, including its u32 length prefix.
-    record: Vec<u8>,
+    /// Current record, including its u32 length prefix, frozen in a
+    /// pooled buffer — frames within one record are zero-copy views.
+    record: Payload,
     record_off: usize,
     kind: u16,
     stream: u64,
@@ -371,7 +373,11 @@ impl<'a> FrameIter<'a> {
             total_len += 4 + tensor::record_payload_len(name, t, enc);
         }
         let total = total_len.div_ceil(chunk_bytes).max(1) as u32;
-        let record = prefixed(head);
+        let mut pb = pool::take(4 + head.len());
+        pb.vec_mut().extend_from_slice(&(head.len() as u32).to_le_bytes());
+        pb.vec_mut().extend_from_slice(&head);
+        mem::track_bytes_copied(head.len());
+        let record = pb.freeze();
         mem::track_alloc(record.len());
         FrameIter {
             entries,
@@ -395,31 +401,25 @@ impl<'a> FrameIter<'a> {
     /// Swap the spent record buffer for the next one (tracking follows).
     fn advance_record(&mut self) -> bool {
         mem::track_free(self.record.len());
-        self.record = Vec::new();
+        self.record = Payload::new();
         self.record_off = 0;
         if self.next_entry >= self.entries.len() {
             return false;
         }
         let (name, t) = self.entries[self.next_entry];
         self.next_entry += 1;
-        // length prefix and payload share one buffer: no re-copy of the
-        // encoded tensor bytes (record_payload_len is exact)
+        // length prefix and payload share one pooled buffer: the codec
+        // encodes straight into the frame's eventual backing store
+        // (record_payload_len is exact)
         let len = tensor::record_payload_len(name, t, self.enc);
-        let mut w = Writer::with_capacity(4 + len);
-        w.u32(len as u32);
-        tensor::write_record(&mut w, name, t, self.enc);
-        debug_assert_eq!(w.len(), 4 + len);
-        self.record = w.into_vec();
+        let mut pb = pool::take(4 + len);
+        pb.vec_mut().extend_from_slice(&(len as u32).to_le_bytes());
+        tensor::encode_record_into(name, t, self.enc, &mut pb);
+        debug_assert_eq!(pb.len(), 4 + len);
+        self.record = pb.freeze();
         mem::track_alloc(self.record.len());
         true
     }
-}
-
-fn prefixed(payload: Vec<u8>) -> Vec<u8> {
-    let mut v = Vec::with_capacity(4 + payload.len());
-    v.extend_from_slice(&(payload.len() as u32).to_le_bytes());
-    v.extend_from_slice(&payload);
-    v
 }
 
 impl Iterator for FrameIter<'_> {
@@ -429,18 +429,39 @@ impl Iterator for FrameIter<'_> {
         if self.seq >= self.total {
             return None;
         }
-        let mut payload = Vec::with_capacity(self.chunk_bytes);
-        while payload.len() < self.chunk_bytes {
-            if self.record_off >= self.record.len() {
-                if !self.advance_record() {
-                    break;
-                }
-            }
-            let want = self.chunk_bytes - payload.len();
-            let end = (self.record_off + want).min(self.record.len());
-            payload.extend_from_slice(&self.record[self.record_off..end]);
-            self.record_off = end;
+        if self.record_off >= self.record.len() {
+            self.advance_record();
         }
+        let remaining = self.record.len() - self.record_off;
+        let payload = if remaining >= self.chunk_bytes {
+            // chunk lies wholly inside the current record: the frame is a
+            // zero-copy view of the pooled record buffer
+            let p = self.record.slice(self.record_off..self.record_off + self.chunk_bytes);
+            self.record_off += self.chunk_bytes;
+            p
+        } else if remaining > 0 && self.next_entry >= self.entries.len() {
+            // final partial chunk: also a view, no staging copy
+            let p = self.record.slice(self.record_off..self.record.len());
+            self.record_off = self.record.len();
+            p
+        } else {
+            // chunk spans record boundaries: stage into a pooled buffer
+            // (the only copy on this path, counted as such)
+            let mut pb = pool::take(self.chunk_bytes);
+            while pb.len() < self.chunk_bytes {
+                if self.record_off >= self.record.len() {
+                    if !self.advance_record() {
+                        break;
+                    }
+                }
+                let want = self.chunk_bytes - pb.len();
+                let end = (self.record_off + want).min(self.record.len());
+                pb.vec_mut().extend_from_slice(&self.record[self.record_off..end]);
+                mem::track_bytes_copied(end - self.record_off);
+                self.record_off = end;
+            }
+            pb.freeze()
+        };
         let mut flags = 0;
         if self.seq == 0 {
             flags |= FLAG_FIRST;

@@ -241,7 +241,7 @@ mod tests {
             stream: 0,
             seq: 0,
             total: 1,
-            payload: w.into_vec(),
+            payload: w.into_vec().into(),
         };
         let bytes = f.encode();
         let mut wire = (bytes.len() as u32).to_le_bytes().to_vec();

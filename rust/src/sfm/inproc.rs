@@ -222,7 +222,7 @@ mod tests {
             stream: 1,
             seq: 0,
             total: 10,
-            payload: vec![0; 8],
+            payload: vec![0; 8].into(),
         };
         assert!(a.try_send(f.clone()).is_ok());
         assert!(a.try_send(f.clone()).is_ok());
@@ -241,7 +241,7 @@ mod tests {
             stream: 1,
             seq: 0,
             total: 1,
-            payload: vec![],
+            payload: vec![].into(),
         };
         assert!(matches!(a.send(f), Err(SfmError::Closed)));
         assert!(matches!(a.recv(), Err(SfmError::Closed)));

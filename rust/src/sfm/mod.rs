@@ -41,8 +41,9 @@ pub mod throttle;
 use std::collections::BTreeMap;
 use std::time::{Duration, Instant};
 
-use crate::util::bytes::{crc32, Reader, Writer};
+use crate::util::bytes::{crc32, Reader};
 use crate::util::mem;
+use crate::util::pool::{self, Payload};
 
 pub const MAGIC: u32 = 0x4653_464D;
 /// Frame header version of the v2 wire format (no job field).
@@ -85,8 +86,16 @@ pub struct Frame {
     pub stream: u64,
     pub seq: u32,
     pub total: u32,
-    pub payload: Vec<u8>,
+    /// Shared-slice payload: cloning a frame (or slicing chunks out of one
+    /// encoded record) shares the backing buffer instead of copying it,
+    /// and pooled backings return to [`pool`] when the last view drops.
+    pub payload: Payload,
 }
+
+/// Maximum encoded frame-header length (v3 framing; v2 is 4 less). The
+/// CRC covers only the payload, so the header can be built on the stack
+/// and vector-written next to the shared payload — no concatenation.
+pub const FRAME_HEADER_MAX: usize = 36;
 
 impl Frame {
     pub fn is_first(&self) -> bool {
@@ -96,28 +105,44 @@ impl Frame {
         self.flags & FLAG_LAST != 0
     }
 
+    /// Build the frame header (everything up to and including the payload
+    /// length prefix) into a stack buffer; returns the encoded length.
+    /// `encode()` is exactly this header followed by the payload bytes.
+    pub fn encode_header_into(&self, out: &mut [u8; FRAME_HEADER_MAX]) -> usize {
+        let mut n = 0usize;
+        let mut put = |bytes: &[u8]| {
+            out[n..n + bytes.len()].copy_from_slice(bytes);
+            n += bytes.len();
+        };
+        put(&MAGIC.to_le_bytes());
+        if self.job == 0 {
+            put(&[VERSION]);
+        } else {
+            put(&[VERSION_V3]);
+        }
+        put(&[self.flags]);
+        put(&self.kind.to_le_bytes());
+        if self.job != 0 {
+            put(&self.job.to_le_bytes());
+        }
+        put(&self.stream.to_le_bytes());
+        put(&self.seq.to_le_bytes());
+        put(&self.total.to_le_bytes());
+        put(&crc32(&self.payload).to_le_bytes());
+        put(&(self.payload.len() as u32).to_le_bytes());
+        n
+    }
+
     /// Encode including the length prefix and CRC. Frames of the default
     /// job (0) encode in the v2 framing — byte-identical to pre-v3 peers;
     /// a nonzero `job` selects the v3 header.
     pub fn encode(&self) -> Vec<u8> {
-        let mut w = Writer::with_capacity(36 + self.payload.len());
-        w.u32(MAGIC);
-        if self.job == 0 {
-            w.u8(VERSION);
-        } else {
-            w.u8(VERSION_V3);
-        }
-        w.u8(self.flags);
-        w.u16(self.kind);
-        if self.job != 0 {
-            w.u32(self.job);
-        }
-        w.u64(self.stream);
-        w.u32(self.seq);
-        w.u32(self.total);
-        w.u32(crc32(&self.payload));
-        w.blob(&self.payload);
-        w.into_vec()
+        let mut hdr = [0u8; FRAME_HEADER_MAX];
+        let n = self.encode_header_into(&mut hdr);
+        let mut out = Vec::with_capacity(n + self.payload.len());
+        out.extend_from_slice(&hdr[..n]);
+        out.extend_from_slice(&self.payload);
+        out
     }
 
     /// Decode one frame from a buffer (must contain exactly one frame).
@@ -144,10 +169,18 @@ impl Frame {
         let seq = r.u32().map_err(|e| SfmError::Decode(e.to_string()))?;
         let total = r.u32().map_err(|e| SfmError::Decode(e.to_string()))?;
         let crc = r.u32().map_err(|e| SfmError::Decode(e.to_string()))?;
-        let payload = r
-            .blob()
-            .map_err(|e| SfmError::Decode(e.to_string()))?
-            .to_vec();
+        let bytes = r.blob().map_err(|e| SfmError::Decode(e.to_string()))?;
+        // copy the wire bytes into a pooled buffer: a hit at steady state
+        // (decoded payload sizes repeat round over round), and the only
+        // copy between the socket buffer and reassembly
+        let payload = if bytes.is_empty() {
+            Payload::new()
+        } else {
+            let mut pb = pool::take(bytes.len());
+            pb.vec_mut().extend_from_slice(bytes);
+            mem::track_bytes_copied(bytes.len());
+            pb.freeze()
+        };
         r.expect_end()
             .map_err(|e| SfmError::Decode(e.to_string()))?;
         if verify_crc && crc32(&payload) != crc {
@@ -202,6 +235,19 @@ pub trait Driver: Send {
         self.send(frame).map(|_| true)
     }
 
+    /// Send several ready frames as one batch. Transports that can
+    /// coalesce (TCP's vectored write) override this to cut per-frame
+    /// syscalls; the default preserves per-frame semantics exactly.
+    /// Like [`Driver::send`], an error leaves the number of frames
+    /// actually delivered unspecified — callers treat the connection as
+    /// broken either way.
+    fn send_batch(&mut self, frames: Vec<Frame>) -> Result<(), SfmError> {
+        for f in frames {
+            self.send(f)?;
+        }
+        Ok(())
+    }
+
     /// Describe this receive endpoint to the [`reactor`]: how readiness
     /// is observed and frames are decoded without a dedicated thread.
     /// `None` (the default) means the driver cannot express readiness;
@@ -217,6 +263,13 @@ pub trait Driver: Send {
 pub fn chunk_frames(kind: u16, stream: u64, payload: &[u8], chunk_bytes: usize) -> Vec<Frame> {
     assert!(chunk_bytes > 0);
     let total = payload.len().div_ceil(chunk_bytes).max(1) as u32;
+    // one staging copy into a pooled buffer; every chunk is then a
+    // zero-copy sub-view of it (the backing returns to the pool when the
+    // last frame drops)
+    let mut pb = pool::take(payload.len());
+    pb.vec_mut().extend_from_slice(payload);
+    mem::track_bytes_copied(payload.len());
+    let shared = pb.freeze();
     let mut frames = Vec::with_capacity(total as usize);
     for seq in 0..total {
         let start = seq as usize * chunk_bytes;
@@ -235,7 +288,7 @@ pub fn chunk_frames(kind: u16, stream: u64, payload: &[u8], chunk_bytes: usize) 
             stream,
             seq,
             total,
-            payload: payload[start..end].to_vec(),
+            payload: shared.slice(start..end),
         });
     }
     frames
@@ -246,7 +299,9 @@ struct Partial {
     /// Application tag latched from the stream's first-seen frame; every
     /// later frame must agree (like the `total` consistency check).
     kind: u16,
-    chunks: Vec<Option<Vec<u8>>>,
+    /// Shared views of the arrived frames' payloads — no copy until the
+    /// completed stream is concatenated for the caller.
+    chunks: Vec<Option<Payload>>,
     received: usize,
     bytes: usize,
     /// When the stream last made progress (eviction clock).
@@ -362,6 +417,7 @@ impl Reassembler {
             for c in p.chunks {
                 out.extend_from_slice(&c.unwrap());
             }
+            mem::track_bytes_copied(out.len());
             mem::track_free(p.bytes);
             // hand off as a tracked allocation owned by the caller,
             // tagged with the kind latched on the stream's first frame
@@ -506,8 +562,9 @@ pub fn latch_frame(
 #[derive(Default)]
 pub struct RecordAssembler {
     latched: Option<(u64, u16, u32)>,
-    /// Out-of-order frames beyond the contiguous frontier.
-    pending: BTreeMap<u32, Vec<u8>>,
+    /// Out-of-order frames beyond the contiguous frontier (shared views —
+    /// parking a frame out of order costs no copy).
+    pending: BTreeMap<u32, Payload>,
     next_seq: u32,
     /// Contiguous bytes not yet consumed as complete records.
     buf: Vec<u8>,
@@ -532,6 +589,7 @@ impl RecordAssembler {
         // advance the contiguous frontier...
         while let Some(chunk) = self.pending.remove(&self.next_seq) {
             self.buf.extend_from_slice(&chunk);
+            mem::track_bytes_copied(chunk.len());
             self.next_seq += 1;
         }
         // ...and slice complete records off its head
@@ -595,7 +653,7 @@ impl RecordAssembler {
 
     /// Reconcile the staging counter with current buffer contents.
     fn retrack(&mut self) {
-        let now = self.buf.len() + self.pending.values().map(Vec::len).sum::<usize>();
+        let now = self.buf.len() + self.pending.values().map(Payload::len).sum::<usize>();
         match now.cmp(&self.staged) {
             std::cmp::Ordering::Greater => mem::stage_track_alloc(now - self.staged),
             std::cmp::Ordering::Less => mem::stage_track_free(self.staged - now),
@@ -638,7 +696,7 @@ mod tests {
             stream: 0xDEADBEEF,
             seq: 0,
             total: 1,
-            payload: vec![1, 2, 3, 4, 5],
+            payload: vec![1, 2, 3, 4, 5].into(),
         };
         let enc = f.encode();
         // default job: v2 framing on the wire
@@ -657,7 +715,7 @@ mod tests {
             stream: 99,
             seq: 0,
             total: 2,
-            payload: vec![8; 33],
+            payload: vec![8; 33].into(),
         };
         let enc = f.encode();
         assert_eq!(enc[4], VERSION_V3);
@@ -688,7 +746,7 @@ mod tests {
             stream: 5,
             seq: 1,
             total: 2,
-            payload: vec![1, 2, 3],
+            payload: vec![1, 2, 3].into(),
         };
         let decoded = Frame::decode(&f.encode(), true).unwrap();
         assert_eq!(decoded.job, 0);
@@ -704,7 +762,7 @@ mod tests {
             stream: 1,
             seq: 0,
             total: 1,
-            payload: vec![9; 64],
+            payload: vec![9; 64].into(),
         };
         let mut enc = f.encode();
         // flip a payload bit -> CRC error
@@ -816,7 +874,7 @@ mod tests {
             stream: 5,
             seq,
             total,
-            payload: vec![0; 10],
+            payload: vec![0; 10].into(),
         };
         re.push(mk(0, 3)).unwrap();
         assert!(re.push(mk(1, 4)).is_err()); // total changed
@@ -834,7 +892,7 @@ mod tests {
             stream: 6,
             seq,
             total: 2,
-            payload: vec![1; 10],
+            payload: vec![1; 10].into(),
         };
         // kind drift inside one stream is an error, not a silent accept
         let mut re = Reassembler::new();
@@ -922,7 +980,7 @@ mod tests {
             stream,
             seq,
             total,
-            payload: vec![0; 8],
+            payload: vec![0; 8].into(),
         };
         let mut asm = RecordAssembler::new();
         asm.push(mk(5, 4, 0, 3)).unwrap();

@@ -62,6 +62,7 @@ use super::reactor::{self, FrameSink, SinkStatus};
 use super::throttle::TokenBucket;
 use super::{Driver, Frame, SfmError, FLAG_FIRST, FLAG_LAST, KIND_HEARTBEAT};
 use crate::util::mem;
+use crate::util::pool::Payload;
 
 /// Frame kind of the mux-level per-job FIN (half-close): a dropping
 /// [`MuxHandle`] sends one so the peer severs the job's queue — a
@@ -375,6 +376,21 @@ impl MuxConn {
         }
         self.inner.send_half.lock().unwrap().send(frame)
     }
+
+    /// Batched form of [`MuxConn::send_tagged`]: stamps the job onto every
+    /// frame, charges the link budget per frame (outside the driver lock,
+    /// in capacity-sized installments like the single-frame path), then
+    /// hands the whole window to the driver in one lock acquisition — a
+    /// TCP driver turns it into one writev train.
+    fn send_batch_tagged(&self, mut frames: Vec<Frame>, job: u32) -> Result<(), SfmError> {
+        for f in &mut frames {
+            f.job = job;
+            if let Some(b) = &self.inner.bucket {
+                take_shared(b, f.payload.len().max(1));
+            }
+        }
+        self.inner.send_half.lock().unwrap().send_batch(frames)
+    }
 }
 
 impl Drop for MuxInner {
@@ -427,7 +443,7 @@ fn heartbeat_frame() -> Frame {
         stream: 0,
         seq: 0,
         total: 1,
-        payload: Vec::new(),
+        payload: Payload::new(),
     }
 }
 
@@ -664,6 +680,10 @@ impl Driver for MuxHandle {
         self.conn.send_tagged(frame, self.job)
     }
 
+    fn send_batch(&mut self, frames: Vec<Frame>) -> Result<(), SfmError> {
+        self.conn.send_batch_tagged(frames, self.job)
+    }
+
     fn recv(&mut self) -> Result<Frame, SfmError> {
         self.rx.recv().map_err(|_| SfmError::Closed)
     }
@@ -699,7 +719,7 @@ impl Drop for MuxHandle {
             stream: 0,
             seq: 0,
             total: 1,
-            payload: Vec::new(),
+            payload: Payload::new(),
         };
         let _ = self.conn.send_tagged(fin, self.job);
         self.conn.close_job(self.job);
@@ -934,6 +954,46 @@ mod tests {
         let t0 = Instant::now();
         assert!(matches!(c1.recv(), Err(SfmError::Closed)));
         assert!(t0.elapsed() < Duration::from_secs(2));
+    }
+
+    /// Pool-correctness satellite: frames parked by the receive throttle
+    /// hold pooled shared-slice payloads; a [`MuxConn::kill`] mid-stream
+    /// must drain them into [`mem::evicted_bytes`] (no leak, no delivery)
+    /// when the reactor drops the deregistered sink.
+    #[test]
+    fn kill_drains_parked_pooled_frames_into_evicted() {
+        // 2 kB/s receive budget with a 2 kB burst: a 16 kB stream of
+        // pooled chunk frames exhausts the burst and parks the rest
+        let (server, client) = mux_pair(64, 2_000);
+        let mut c1 = client.handle(1);
+        let bulk = vec![5u8; 16_384];
+        for f in chunk_frames(0, 1, &bulk, 1024) {
+            c1.send(f).unwrap();
+        }
+        let t0 = Instant::now();
+        while server.parked_bytes() == 0 && t0.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        let parked = server.parked_bytes();
+        assert!(parked > 0, "throttle never parked anything");
+        let before = mem::evicted_bytes();
+        server.kill();
+        // the reactor thread may still hold the sink while servicing; its
+        // Drop (which counts the parked frames) runs when it lets go
+        let t1 = Instant::now();
+        let drained = |srv: &MuxConn| {
+            mem::evicted_bytes() - before >= parked as u64 && srv.parked_bytes() == 0
+        };
+        while !drained(&server) && t1.elapsed() < Duration::from_secs(2) {
+            std::thread::sleep(Duration::from_millis(5));
+        }
+        assert!(
+            drained(&server),
+            "parked pooled frames leaked on kill: evicted delta {}, parked snapshot {}, gauge {}",
+            mem::evicted_bytes() - before,
+            parked,
+            server.parked_bytes()
+        );
     }
 
     #[test]

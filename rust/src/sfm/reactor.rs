@@ -1006,7 +1006,7 @@ mod tests {
             stream: 1,
             seq,
             total: 1,
-            payload,
+            payload: payload.into(),
         }
     }
 

@@ -10,11 +10,12 @@
 //! driver stands in for the rest — the point being that the upper layers
 //! cannot tell the difference.)
 
-use std::io::{Read, Write};
+use std::io::{IoSlice, Read, Write};
 use std::net::{TcpListener, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
-use super::{Driver, Frame, SfmError};
+use super::{Driver, Frame, SfmError, FRAME_HEADER_MAX};
+use crate::util::mem;
 
 /// Blocking TCP driver (one per connection endpoint).
 ///
@@ -84,36 +85,52 @@ impl TcpDriver {
     }
 }
 
-/// Encode a frame with its `u32 len` wire prefix in one buffer (a single
-/// write keeps the length/body atomic even over a shared socket clone).
-fn wire_bytes(frame: &Frame) -> Vec<u8> {
-    let bytes = frame.encode();
-    let mut wire = Vec::with_capacity(4 + bytes.len());
-    wire.extend_from_slice(&(bytes.len() as u32).to_le_bytes());
-    wire.extend_from_slice(&bytes);
-    wire
+/// Largest stack wire header: `u32 len` prefix + frame header.
+const WIRE_HEADER_MAX: usize = 4 + FRAME_HEADER_MAX;
+
+/// Build a frame's `u32 len | frame header` wire prefix on the stack;
+/// returns the buffer and its encoded length. The payload is vector-
+/// written next to it, so nothing is concatenated on the heap — write
+/// atomicity over a shared socket clone comes from the mux's send lock.
+fn wire_header(frame: &Frame) -> ([u8; WIRE_HEADER_MAX], usize) {
+    let mut hdr = [0u8; FRAME_HEADER_MAX];
+    let n = frame.encode_header_into(&mut hdr);
+    let mut out = [0u8; WIRE_HEADER_MAX];
+    out[..4].copy_from_slice(&((n + frame.payload.len()) as u32).to_le_bytes());
+    out[4..4 + n].copy_from_slice(&hdr[..n]);
+    (out, 4 + n)
 }
 
 impl Driver for TcpDriver {
     fn send(&mut self, frame: Frame) -> Result<(), SfmError> {
-        let wire = wire_bytes(&frame);
-        write_all_retrying(&mut self.stream, &wire)?;
+        let (hdr, hn) = wire_header(&frame);
+        write_vectored_from(&mut self.stream, &[&hdr[..hn], &frame.payload], 0, 0)?;
+        mem::track_writev(1);
         Ok(())
     }
 
     fn send_nowait(&mut self, frame: Frame) -> Result<bool, SfmError> {
-        let wire = wire_bytes(&frame);
+        let (hdr, hn) = wire_header(&frame);
+        let total = hn + frame.payload.len();
         // First attempt: if the socket buffer is completely full the
         // write returns WouldBlock with zero bytes consumed — the frame
         // is safely not-sent and the caller retries next tick. Only a
         // *partial* first write commits us to finishing (abandoning
         // mid-frame would corrupt the stream) — rare, because it needs
         // the buffer to have 1..len-1 free bytes exactly.
-        match self.stream.write(&wire) {
+        match self
+            .stream
+            .write_vectored(&[IoSlice::new(&hdr[..hn]), IoSlice::new(&frame.payload)])
+        {
             Ok(0) => Err(SfmError::Closed),
-            Ok(n) if n == wire.len() => Ok(true),
+            Ok(n) if n == total => {
+                mem::track_writev(1);
+                Ok(true)
+            }
             Ok(n) => {
-                write_all_retrying(&mut self.stream, &wire[n..])?;
+                let (idx, off) = if n < hn { (0, n) } else { (1, n - hn) };
+                write_vectored_from(&mut self.stream, &[&hdr[..hn], &frame.payload], idx, off)?;
+                mem::track_writev(1);
                 Ok(true)
             }
             Err(e) if e.kind() == std::io::ErrorKind::WouldBlock => Ok(false),
@@ -130,6 +147,30 @@ impl Driver for TcpDriver {
             }
             Err(e) => Err(SfmError::Io(e)),
         }
+    }
+
+    /// Coalesce a batch of ready frames into one writev train: every
+    /// frame's wire header goes on the stack and each payload rides as its
+    /// own [`IoSlice`] — one syscall per batch at steady state instead of
+    /// one per frame.
+    fn send_batch(&mut self, frames: Vec<Frame>) -> Result<(), SfmError> {
+        if frames.is_empty() {
+            return Ok(());
+        }
+        let mut hdrs = Vec::with_capacity(frames.len());
+        for f in &frames {
+            hdrs.push(wire_header(f));
+        }
+        let mut bufs: Vec<&[u8]> = Vec::with_capacity(frames.len() * 2);
+        for (f, (hdr, hn)) in frames.iter().zip(&hdrs) {
+            bufs.push(&hdr[..*hn]);
+            if !f.payload.is_empty() {
+                bufs.push(&f.payload);
+            }
+        }
+        write_vectored_from(&mut self.stream, &bufs, 0, 0)?;
+        mem::track_writev(frames.len());
+        Ok(())
     }
 
     fn recv(&mut self) -> Result<Frame, SfmError> {
@@ -199,15 +240,44 @@ impl TcpDriver {
     }
 }
 
-/// `write_all` that retries `WouldBlock` (non-blocking shared socket)
-/// with a short sleep, preserving blocking-send semantics.
-fn write_all_retrying(stream: &mut TcpStream, buf: &[u8]) -> Result<(), SfmError> {
+/// Vectored `write_all` starting at (`idx`, `off`) within `bufs`, retrying
+/// `WouldBlock` (non-blocking shared socket) with a short sleep —
+/// preserving blocking-send semantics across a partial writev.
+fn write_vectored_from(
+    stream: &mut TcpStream,
+    bufs: &[&[u8]],
+    mut idx: usize,
+    mut off: usize,
+) -> Result<(), SfmError> {
     use std::io::ErrorKind;
-    let mut off = 0;
-    while off < buf.len() {
-        match stream.write(&buf[off..]) {
+    let mut win: Vec<IoSlice> = Vec::with_capacity(bufs.len());
+    loop {
+        // skip consumed (or empty) slices before rebuilding the window
+        while idx < bufs.len() && off >= bufs[idx].len() {
+            idx += 1;
+            off = 0;
+        }
+        if idx == bufs.len() {
+            return Ok(());
+        }
+        win.clear();
+        win.push(IoSlice::new(&bufs[idx][off..]));
+        win.extend(bufs[idx + 1..].iter().map(|b| IoSlice::new(b)));
+        match stream.write_vectored(&win) {
             Ok(0) => return Err(SfmError::Closed),
-            Ok(n) => off += n,
+            Ok(mut n) => {
+                while n > 0 {
+                    let rem = bufs[idx].len() - off;
+                    if n >= rem {
+                        n -= rem;
+                        idx += 1;
+                        off = 0;
+                    } else {
+                        off += n;
+                        n = 0;
+                    }
+                }
+            }
             Err(e) if e.kind() == ErrorKind::WouldBlock => {
                 std::thread::sleep(Duration::from_micros(500));
             }
@@ -225,7 +295,6 @@ fn write_all_retrying(stream: &mut TcpStream, buf: &[u8]) -> Result<(), SfmError
             Err(e) => return Err(SfmError::Io(e)),
         }
     }
-    Ok(())
 }
 
 /// Bind a listener (for callers that need the bound port before accepting).
@@ -263,7 +332,8 @@ mod tests {
                         total: 1,
                         payload: (payload == expected)
                             .then(|| b"ok".to_vec())
-                            .unwrap_or_else(|| b"bad".to_vec()),
+                            .unwrap_or_else(|| b"bad".to_vec())
+                            .into(),
                     })
                     .unwrap();
                     break;

@@ -202,7 +202,7 @@ mod tests {
                         stream: 1,
                         seq: i,
                         total: frames,
-                        payload: payload.clone(),
+                        payload: payload.clone().into(),
                     })
                     .unwrap();
             }

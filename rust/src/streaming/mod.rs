@@ -26,6 +26,11 @@ use crate::sfm::{
 };
 use crate::tensor::{RecordEnc, Tensor, TensorDict};
 use crate::util::mem;
+use crate::util::pool::{self, Payload};
+
+/// Frames coalesced per [`crate::sfm::Driver::send_batch`] window on the
+/// object send path — over TCP each window becomes one writev train.
+const SEND_BATCH: usize = 16;
 
 /// Application payload tags carried in the SFM `kind` field.
 pub const KIND_BYTES: u16 = 0;
@@ -155,10 +160,24 @@ impl Messenger {
     /// (e.g. [`RecordEnc::F16`] to halve f32 bytes on the wire).
     pub fn send_msg_enc(&mut self, msg: &FlMessage, enc: RecordEnc) -> Result<(), StreamError> {
         let stream = self.alloc_stream();
+        // Coalesce ready frames into small windows: one driver handoff
+        // (over TCP, one writev train) per window instead of one per
+        // frame. Counters move only after the driver accepts a window.
+        let mut batch: Vec<Frame> = Vec::with_capacity(SEND_BATCH);
+        let mut batch_bytes = 0u64;
         for frame in FrameIter::new(msg, KIND_OBJECT_V2, stream, self.chunk_bytes, enc) {
-            let n = frame.payload.len() as u64;
-            self.driver.send(frame)?;
-            self.sent_bytes += n;
+            batch_bytes += frame.payload.len() as u64;
+            batch.push(frame);
+            if batch.len() == SEND_BATCH {
+                self.driver.send_batch(std::mem::take(&mut batch))?;
+                self.sent_bytes += batch_bytes;
+                batch_bytes = 0;
+                batch.reserve(SEND_BATCH);
+            }
+        }
+        if !batch.is_empty() {
+            self.driver.send_batch(batch)?;
+            self.sent_bytes += batch_bytes;
         }
         Ok(())
     }
@@ -179,7 +198,6 @@ impl Messenger {
         let stream = self.alloc_stream();
         let total = size.div_ceil(self.chunk_bytes).max(1) as u32;
         let mut file = std::fs::File::open(path)?;
-        let mut buf = vec![0u8; self.chunk_bytes];
         for seq in 0..total {
             let want = if seq == total - 1 && size > 0 {
                 size - seq as usize * self.chunk_bytes
@@ -188,7 +206,11 @@ impl Messenger {
             } else {
                 self.chunk_bytes
             };
-            file.read_exact(&mut buf[..want])?;
+            // read straight into a pooled chunk buffer (a pool hit after
+            // the first frame) — no reusable scratch + per-frame to_vec
+            let mut pb = pool::take(self.chunk_bytes);
+            pb.vec_mut().resize(want, 0);
+            file.read_exact(&mut pb.vec_mut()[..want])?;
             let mut flags = 0;
             if seq == 0 {
                 flags |= FLAG_FIRST;
@@ -203,7 +225,7 @@ impl Messenger {
                 stream,
                 seq,
                 total,
-                payload: buf[..want].to_vec(),
+                payload: pb.freeze(),
             })?;
             self.sent_bytes += want as u64;
         }
@@ -361,7 +383,7 @@ impl Messenger {
     /// protocol error rather than silent corruption of the output file.
     pub fn recv_file(&mut self, out: &Path) -> Result<u64, StreamError> {
         let mut file = std::fs::File::create(out)?;
-        let mut pending: std::collections::BTreeMap<u32, Vec<u8>> = Default::default();
+        let mut pending: std::collections::BTreeMap<u32, Payload> = Default::default();
         let mut latched: Option<(u64, u16, u32)> = None;
         let mut next_seq = 0u32;
         let mut written = 0u64;
@@ -563,7 +585,7 @@ mod tests {
             stream,
             seq,
             total,
-            payload: vec![seq as u8; 16],
+            payload: vec![seq as u8; 16].into(),
         };
         raw.send(mk(1, 0, 3)).unwrap();
         raw.send(mk(2, 0, 3)).unwrap(); // second stream interleaves
@@ -588,7 +610,7 @@ mod tests {
             stream: 9,
             seq,
             total,
-            payload: vec![seq as u8; 16],
+            payload: vec![seq as u8; 16].into(),
         };
         raw.send(mk(0, 3)).unwrap();
         raw.send(mk(1, 4)).unwrap(); // total changed mid-stream

@@ -321,7 +321,15 @@ impl TensorDict {
     /// Serialize to the binary wire format:
     /// `u32 count | per tensor: str name, u8 dtype, u8 ndim, u32 dims.., u32 len, payload`.
     pub fn to_bytes(&self) -> Vec<u8> {
-        let mut w = Writer::with_capacity(self.byte_size() + 64 * self.len() + 4);
+        // Exact encoded length (per tensor: str prefix + name + dtype +
+        // ndim + dims + len prefix + 4 bytes/element) — no heuristic
+        // padding, so the buffer never reallocates and never over-reserves.
+        let cap = 4 + self
+            .map
+            .iter()
+            .map(|(name, t)| 4 + name.len() + 1 + 1 + 4 * t.shape.len() + 4 + t.data.len() * 4)
+            .sum::<usize>();
+        let mut w = Writer::with_capacity(cap);
         w.u32(self.map.len() as u32);
         for (name, t) in &self.map {
             w.str(name);
@@ -462,66 +470,57 @@ pub fn record_payload_len(name: &str, t: &Tensor, enc: RecordEnc) -> usize {
 /// Serialize one named tensor as a v2 record payload:
 /// `str name | u8 dtype | u8 enc | u8 ndim | u32 dims.. | u32 len | bytes`.
 pub fn encode_record(name: &str, t: &Tensor, enc: RecordEnc) -> Vec<u8> {
-    let mut w = Writer::with_capacity(record_payload_len(name, t, enc));
-    write_record(&mut w, name, t, enc);
-    w.into_vec()
+    let mut out = Vec::with_capacity(record_payload_len(name, t, enc));
+    write_record_into(&mut out, name, t, enc);
+    out
 }
 
 /// Append one record payload to an existing writer (the sender's
 /// zero-extra-copy path: the length prefix and payload share one buffer).
 pub fn write_record(w: &mut Writer, name: &str, t: &Tensor, enc: RecordEnc) {
-    w.str(name);
-    w.u8(t.dtype().tag());
-    match (enc, &t.data) {
-        (RecordEnc::F16, Data::F32(v)) => {
-            w.u8(RecordEnc::F16.tag());
-            w.u8(t.shape.len() as u8);
-            for &d in &t.shape {
-                w.u32(d as u32);
-            }
-            let bytes = f32_to_f16_bytes(v);
-            w.u32(bytes.len() as u32);
-            w.bytes(&bytes);
-        }
-        (RecordEnc::Int8, Data::F32(v)) => {
-            w.u8(RecordEnc::Int8.tag());
-            w.u8(t.shape.len() as u8);
-            for &d in &t.shape {
-                w.u32(d as u32);
-            }
-            let bytes = f32_to_q8_bytes(v);
-            w.u32(bytes.len() as u32);
-            w.bytes(&bytes);
-        }
-        (RecordEnc::Int4, Data::F32(v)) => {
-            w.u8(RecordEnc::Int4.tag());
-            w.u8(t.shape.len() as u8);
-            for &d in &t.shape {
-                w.u32(d as u32);
-            }
-            let bytes = f32_to_q4_bytes(v);
-            w.u32(bytes.len() as u32);
-            w.bytes(&bytes);
-        }
-        (_, Data::F32(v)) => {
-            w.u8(RecordEnc::Raw.tag());
-            w.u8(t.shape.len() as u8);
-            for &d in &t.shape {
-                w.u32(d as u32);
-            }
-            w.u32((v.len() * 4) as u32);
-            w.bytes(bytes::f32_slice_as_bytes(v));
-        }
-        (_, Data::I32(v)) => {
-            w.u8(RecordEnc::Raw.tag());
-            w.u8(t.shape.len() as u8);
-            for &d in &t.shape {
-                w.u32(d as u32);
-            }
-            w.u32((v.len() * 4) as u32);
-            w.bytes(bytes::i32_slice_as_bytes(v));
-        }
+    write_record_into(w.vec_mut(), name, t, enc);
+}
+
+/// Encode one record straight into a pooled buffer — the zero-copy send
+/// path: the codec output lands in the frame's eventual backing store,
+/// with no intermediate `Vec` per record.
+pub fn encode_record_into(name: &str, t: &Tensor, enc: RecordEnc, out: &mut crate::util::pool::PoolBuf) {
+    write_record_into(out.vec_mut(), name, t, enc);
+}
+
+/// The encode-into primitive behind [`encode_record`], [`write_record`]
+/// and [`encode_record_into`]: appends the record bytes to `out` with the
+/// quantized/f16 payload encoded in place (no per-codec temporary).
+pub fn write_record_into(out: &mut Vec<u8>, name: &str, t: &Tensor, enc: RecordEnc) {
+    out.reserve(record_payload_len(name, t, enc));
+    out.extend_from_slice(&(name.len() as u32).to_le_bytes());
+    out.extend_from_slice(name.as_bytes());
+    out.push(t.dtype().tag());
+    // The compressed encodings apply to f32 data only; i32 falls back to
+    // raw on the wire exactly as before.
+    let enc = match (enc, &t.data) {
+        (RecordEnc::F16 | RecordEnc::Int8 | RecordEnc::Int4, Data::F32(_)) => enc,
+        _ => RecordEnc::Raw,
+    };
+    out.push(enc.tag());
+    out.push(t.shape.len() as u8);
+    for &d in &t.shape {
+        out.extend_from_slice(&(d as u32).to_le_bytes());
     }
+    // Reserve the u32 payload-length slot, encode in place, patch it —
+    // keeps the length prefix and payload in one buffer without
+    // precomputing the codec's output size twice.
+    let len_at = out.len();
+    out.extend_from_slice(&[0u8; 4]);
+    match (enc, &t.data) {
+        (RecordEnc::F16, Data::F32(v)) => f32_to_f16_into(v, out),
+        (RecordEnc::Int8, Data::F32(v)) => f32_to_q8_into(v, out),
+        (RecordEnc::Int4, Data::F32(v)) => f32_to_q4_into(v, out),
+        (_, Data::F32(v)) => out.extend_from_slice(bytes::f32_slice_as_bytes(v)),
+        (_, Data::I32(v)) => out.extend_from_slice(bytes::i32_slice_as_bytes(v)),
+    }
+    let n = (out.len() - len_at - 4) as u32;
+    out[len_at..len_at + 4].copy_from_slice(&n.to_le_bytes());
 }
 
 /// Decode one v2 record payload back into a named tensor. F16-encoded
@@ -664,14 +663,22 @@ fn read_q_prefix(b: &[u8]) -> Result<(f32, f32), ByteError> {
 /// Encode an f32 slice as affine int8 bytes: `f32 scale | f32 min | one
 /// code byte per element`.
 pub fn f32_to_q8_bytes(v: &[f32]) -> Vec<u8> {
-    let (scale, min) = affine_params(v, 255.0);
     let mut out = Vec::with_capacity(Q_PREFIX + v.len());
+    f32_to_q8_into(v, &mut out);
+    out
+}
+
+/// Appending form of [`f32_to_q8_bytes`] (byte-identical output).
+pub fn f32_to_q8_into(v: &[f32], out: &mut Vec<u8>) {
+    let (scale, min) = affine_params(v, 255.0);
+    out.reserve(Q_PREFIX + v.len());
     out.extend_from_slice(&scale.to_le_bytes());
     out.extend_from_slice(&min.to_le_bytes());
     if scale <= 0.0 {
         // degenerate range: every code is 0 — skip the per-element math
-        out.resize(Q_PREFIX + v.len(), 0);
-        return out;
+        let end = out.len() + v.len();
+        out.resize(end, 0);
+        return;
     }
     // The division must stay a division (not a precomputed reciprocal
     // multiply): the golden wire fixtures pin these exact code bytes.
@@ -679,7 +686,6 @@ pub fn f32_to_q8_bytes(v: &[f32]) -> Vec<u8> {
         v.iter()
             .map(|&x| ((x - min) / scale).round().clamp(0.0, 255.0) as u8),
     );
-    out
 }
 
 /// Decode affine int8 bytes back to f32.
@@ -692,13 +698,21 @@ pub fn q8_bytes_to_f32(b: &[u8]) -> Result<Vec<f32>, ByteError> {
 /// codes per byte` (low nibble first; an odd tail leaves the high nibble
 /// zero).
 pub fn f32_to_q4_bytes(v: &[f32]) -> Vec<u8> {
-    let (scale, min) = affine_params(v, 15.0);
     let mut out = Vec::with_capacity(Q_PREFIX + v.len().div_ceil(2));
+    f32_to_q4_into(v, &mut out);
+    out
+}
+
+/// Appending form of [`f32_to_q4_bytes`] (byte-identical output).
+pub fn f32_to_q4_into(v: &[f32], out: &mut Vec<u8>) {
+    let (scale, min) = affine_params(v, 15.0);
+    out.reserve(Q_PREFIX + v.len().div_ceil(2));
     out.extend_from_slice(&scale.to_le_bytes());
     out.extend_from_slice(&min.to_le_bytes());
     if scale <= 0.0 {
-        out.resize(Q_PREFIX + v.len().div_ceil(2), 0);
-        return out;
+        let end = out.len() + v.len().div_ceil(2);
+        out.resize(end, 0);
+        return;
     }
     let q = |x: f32| ((x - min) / scale).round().clamp(0.0, 15.0) as u8;
     // chunks_exact lets the pair pack run branch-free; the odd tail keeps
@@ -708,7 +722,6 @@ pub fn f32_to_q4_bytes(v: &[f32]) -> Vec<u8> {
     if let [x] = pairs.remainder() {
         out.push(q(*x));
     }
-    out
 }
 
 /// Decode affine int4 bytes back to f32. The element count comes from the
@@ -744,10 +757,16 @@ pub fn q4_bytes_to_f32(b: &[u8], numel: usize) -> Result<Vec<f32>, ByteError> {
 /// transport format).
 pub fn f32_to_f16_bytes(v: &[f32]) -> Vec<u8> {
     let mut out = Vec::with_capacity(v.len() * 2);
+    f32_to_f16_into(v, &mut out);
+    out
+}
+
+/// Appending form of [`f32_to_f16_bytes`] (byte-identical output).
+pub fn f32_to_f16_into(v: &[f32], out: &mut Vec<u8>) {
+    out.reserve(v.len() * 2);
     for &x in v {
         out.extend_from_slice(&f32_to_f16_bits(x).to_le_bytes());
     }
-    out
 }
 
 /// Decode IEEE half-precision bytes back to f32.
@@ -836,6 +855,33 @@ mod tests {
         d.insert("a.bias", Tensor::f32(vec![3], vec![-1., 0., 1.]));
         d.insert("ids", Tensor::i32(vec![2], vec![7, -9]));
         d
+    }
+
+    #[test]
+    fn to_bytes_capacity_is_exact() {
+        // The capacity computation must match the encoded length exactly:
+        // no reallocation mid-encode, no over-reservation per tensor.
+        let buf = sample_dict().to_bytes();
+        assert_eq!(buf.len(), buf.capacity());
+    }
+
+    #[test]
+    fn encode_into_matches_allocating_codecs() {
+        let v = vec![0.0f32, 1.5, -2.25, 7.125, 0.33, -9.0, 4.0];
+        for (name, t, enc) in [
+            ("w", Tensor::f32(vec![7], v.clone()), RecordEnc::Raw),
+            ("w", Tensor::f32(vec![7], v.clone()), RecordEnc::F16),
+            ("w", Tensor::f32(vec![7], v.clone()), RecordEnc::Int8),
+            ("w", Tensor::f32(vec![7], v.clone()), RecordEnc::Int4),
+            ("ids", Tensor::i32(vec![2], vec![3, -4]), RecordEnc::Int8),
+            ("flat", Tensor::f32(vec![0], vec![]), RecordEnc::Int4),
+        ] {
+            let rec = encode_record(name, &t, enc);
+            assert_eq!(rec.len(), record_payload_len(name, &t, enc));
+            let mut pooled = crate::util::pool::take(rec.len());
+            encode_record_into(name, &t, enc, &mut pooled);
+            assert_eq!(&*pooled.freeze(), &rec[..]);
+        }
     }
 
     #[test]

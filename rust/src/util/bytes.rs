@@ -56,6 +56,11 @@ impl Writer {
     pub fn into_vec(self) -> Vec<u8> {
         self.buf
     }
+    /// Direct access to the backing vec, for encode-into call sites that
+    /// append through a `Writer` facade without an intermediate copy.
+    pub fn vec_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
     pub fn as_slice(&self) -> &[u8] {
         &self.buf
     }

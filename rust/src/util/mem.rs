@@ -40,6 +40,29 @@ static PARKED_PEAK: AtomicU64 = AtomicU64::new(0);
 /// Cumulative ns connections spent with a non-empty parked backlog —
 /// the fleet-wide "bucket throttle time" gauge.
 static THROTTLE_WAIT_NS: AtomicU64 = AtomicU64::new(0);
+/// Buffer-pool checkouts served from a free list (no heap traffic).
+static POOL_HITS: AtomicU64 = AtomicU64::new(0);
+/// Buffer-pool checkouts that had to allocate (cold class or oversize).
+/// At steady state this must stop moving — pinned by the zero-allocation
+/// regression test.
+static POOL_MISSES: AtomicU64 = AtomicU64::new(0);
+/// Bytes currently parked in the pool's free lists.
+static POOL_HELD: AtomicI64 = AtomicI64::new(0);
+/// High-water mark of `POOL_HELD`.
+static POOL_HELD_PEAK: AtomicU64 = AtomicU64::new(0);
+/// Cumulative heap allocations that became frame payloads: pool misses
+/// plus unpooled `Vec<u8>` payload wraps. The per-frame allocation count
+/// of the data plane — zero growth per frame at steady state.
+static FRAME_ALLOCS: AtomicU64 = AtomicU64::new(0);
+/// Cumulative payload bytes memcpy'd on the send/receive path (encode
+/// staging, record-boundary chunk assembly, wire decode, reassembly
+/// concatenation). Shared-slice payload routing does not count — that is
+/// the point of it.
+static BYTES_COPIED: AtomicU64 = AtomicU64::new(0);
+/// Vectored-write syscalls issued by the TCP send path.
+static WRITEV_CALLS: AtomicU64 = AtomicU64::new(0);
+/// Frames carried by those writev calls (frames/calls = mean batch size).
+static WRITEV_FRAMES: AtomicU64 = AtomicU64::new(0);
 
 /// Record an allocation of `n` bytes in the streaming layer.
 pub fn track_alloc(n: usize) {
@@ -163,6 +186,84 @@ pub fn track_throttle_wait_ns(ns: u64) {
 /// Total receive-throttle stall time, in ns, since process start.
 pub fn throttle_wait_ns() -> u64 {
     THROTTLE_WAIT_NS.load(Ordering::Relaxed)
+}
+
+/// Record a buffer-pool checkout served without allocating.
+pub fn pool_hit() {
+    POOL_HITS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Record a buffer-pool checkout that allocated.
+pub fn pool_miss() {
+    POOL_MISSES.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Pool checkouts served from a free list since process start.
+pub fn pool_hits() -> u64 {
+    POOL_HITS.load(Ordering::Relaxed)
+}
+
+/// Pool checkouts that allocated since process start.
+pub fn pool_misses() -> u64 {
+    POOL_MISSES.load(Ordering::Relaxed)
+}
+
+/// Record `n` bytes entering the pool's free lists.
+pub fn pool_held_add(n: usize) {
+    let cur = POOL_HELD.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
+    POOL_HELD_PEAK.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+}
+
+/// Record `n` bytes checked back out of the free lists.
+pub fn pool_held_sub(n: usize) {
+    POOL_HELD.fetch_sub(n as i64, Ordering::Relaxed);
+}
+
+/// Bytes currently parked in pool free lists.
+pub fn pool_held_bytes() -> i64 {
+    POOL_HELD.load(Ordering::Relaxed)
+}
+
+/// High-water mark of pooled free-list bytes since process start.
+pub fn pool_held_peak() -> u64 {
+    POOL_HELD_PEAK.load(Ordering::Relaxed)
+}
+
+/// Record one heap allocation that became a frame payload.
+pub fn track_frame_alloc() {
+    FRAME_ALLOCS.fetch_add(1, Ordering::Relaxed);
+}
+
+/// Heap allocations that became frame payloads since process start
+/// (cumulative; flat at steady state).
+pub fn frame_allocs() -> u64 {
+    FRAME_ALLOCS.load(Ordering::Relaxed)
+}
+
+/// Record `n` payload bytes memcpy'd on the send/receive path.
+pub fn track_bytes_copied(n: usize) {
+    BYTES_COPIED.fetch_add(n as u64, Ordering::Relaxed);
+}
+
+/// Payload bytes memcpy'd on the data plane since process start.
+pub fn bytes_copied() -> u64 {
+    BYTES_COPIED.load(Ordering::Relaxed)
+}
+
+/// Record one vectored-write syscall that carried `frames` frames.
+pub fn track_writev(frames: usize) {
+    WRITEV_CALLS.fetch_add(1, Ordering::Relaxed);
+    WRITEV_FRAMES.fetch_add(frames as u64, Ordering::Relaxed);
+}
+
+/// Vectored-write syscalls issued since process start.
+pub fn writev_calls() -> u64 {
+    WRITEV_CALLS.load(Ordering::Relaxed)
+}
+
+/// Frames carried by vectored writes since process start.
+pub fn writev_frames() -> u64 {
+    WRITEV_FRAMES.load(Ordering::Relaxed)
 }
 
 /// A scoped byte counter (current + high-water mark). The process-global

@@ -8,5 +8,6 @@ pub mod bytes;
 pub mod cli;
 pub mod json;
 pub mod mem;
+pub mod pool;
 pub mod prop;
 pub mod rng;

@@ -1,0 +1,473 @@
+//! Pooled byte buffers and shared-slice payloads — the allocator of the
+//! zero-copy data plane.
+//!
+//! [`take`] checks a buffer out of a global pool of power-of-two size
+//! classes (4 KiB..4 MiB, striped free lists so reactor shards don't
+//! contend on one lock). The returned [`PoolBuf`] is an owned, writable
+//! `Vec<u8>` that goes back to its class's free list on drop, so at
+//! steady state the send/receive hot path allocates nothing: every frame
+//! payload of a size seen before is a pool hit ([`crate::util::mem`]
+//! counts hits, misses, and the held-bytes high-water mark).
+//!
+//! [`PoolBuf::freeze`] converts the buffer into a [`Payload`] — a
+//! cheap-clone shared view (`Arc`-backed offset/len slice) that the frame
+//! layer routes through mux demux, priority-lane parking, throttle
+//! backlogs, and reassembly **without copying**: cloning a frame clones a
+//! pointer, and [`Payload::slice`] cuts a sub-view of the same backing
+//! buffer (how [`crate::message::FrameIter`] carves chunk-sized frames
+//! out of one encoded record). When the last view drops, the backing
+//! buffer returns to the pool.
+
+use std::ops::{Deref, Range};
+use std::sync::{Arc, Mutex, OnceLock};
+
+use super::mem;
+
+/// Smallest pooled size class: 4 KiB.
+const MIN_CLASS_SHIFT: u32 = 12;
+/// Largest pooled size class: 4 MiB. Bigger requests are unpooled (and
+/// counted as misses) — at the default 1 MB chunk size nothing on the
+/// frame path should ever exceed this.
+const MAX_CLASS_SHIFT: u32 = 22;
+const CLASSES: usize = (MAX_CLASS_SHIFT - MIN_CLASS_SHIFT + 1) as usize;
+/// Free-list stripes per class: checkouts/returns from different threads
+/// (reactor shards, per-job controller threads) spread over independent
+/// locks.
+const STRIPES: usize = 8;
+/// Buffers retained per stripe per class; overflow frees to the global
+/// allocator so an eviction burst cannot grow the pool without bound.
+const STRIPE_CAP: usize = 16;
+
+struct Pool {
+    /// `classes[c][s]` = free list of stripe `s` in size class `c`.
+    classes: Vec<[Mutex<Vec<Vec<u8>>>; STRIPES]>,
+}
+
+fn pool() -> &'static Pool {
+    static POOL: OnceLock<Pool> = OnceLock::new();
+    POOL.get_or_init(|| Pool {
+        classes: (0..CLASSES)
+            .map(|_| std::array::from_fn(|_| Mutex::new(Vec::new())))
+            .collect(),
+    })
+}
+
+/// Size class index for a capacity request, or `None` if it exceeds the
+/// largest class. Class `c` holds buffers of exactly
+/// `1 << (MIN_CLASS_SHIFT + c)` bytes of capacity.
+fn class_of(min_cap: usize) -> Option<usize> {
+    let shift = usize::BITS - min_cap.max(1).saturating_sub(1).leading_zeros();
+    let shift = shift.max(MIN_CLASS_SHIFT);
+    if shift > MAX_CLASS_SHIFT {
+        None
+    } else {
+        Some((shift - MIN_CLASS_SHIFT) as usize)
+    }
+}
+
+fn class_bytes(class: usize) -> usize {
+    1usize << (MIN_CLASS_SHIFT + class as u32)
+}
+
+/// The stripe this thread prefers (round-robin assigned at first use, so
+/// a pool of worker threads spreads evenly without hashing thread ids).
+fn home_stripe() -> usize {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    static NEXT: AtomicUsize = AtomicUsize::new(0);
+    thread_local! {
+        static STRIPE: usize = NEXT.fetch_add(1, Ordering::Relaxed) % STRIPES;
+    }
+    STRIPE.with(|s| *s)
+}
+
+/// Check a buffer of at least `min_cap` capacity out of the pool. A hit
+/// reuses a previously returned buffer of the same size class (no heap
+/// traffic); a miss allocates one at full class capacity so it is
+/// poolable on return. Requests beyond the largest class get an unpooled
+/// buffer (counted as a miss).
+pub fn take(min_cap: usize) -> PoolBuf {
+    let Some(class) = class_of(min_cap) else {
+        mem::pool_miss();
+        mem::track_frame_alloc();
+        return PoolBuf {
+            buf: Vec::with_capacity(min_cap),
+            class: None,
+        };
+    };
+    let p = pool();
+    let home = home_stripe();
+    for i in 0..STRIPES {
+        let stripe = &p.classes[class][(home + i) % STRIPES];
+        if let Some(buf) = stripe.lock().expect("pool stripe poisoned").pop() {
+            mem::pool_hit();
+            mem::pool_held_sub(buf.capacity());
+            return PoolBuf {
+                buf,
+                class: Some(class),
+            };
+        }
+    }
+    mem::pool_miss();
+    mem::track_frame_alloc();
+    PoolBuf {
+        buf: Vec::with_capacity(class_bytes(class)),
+        class: Some(class),
+    }
+}
+
+/// Return a buffer to its class's free list (or free it if the stripe is
+/// full / the buffer is unpooled).
+fn give_back(mut buf: Vec<u8>, class: Option<usize>) {
+    let Some(class) = class else {
+        return;
+    };
+    if buf.capacity() < class_bytes(class) {
+        // shrank under us (e.g. a caller took the Vec out) — don't pool a
+        // buffer that would miss its class's capacity contract
+        return;
+    }
+    buf.clear();
+    let stripe = &pool().classes[class][home_stripe()];
+    let mut list = stripe.lock().expect("pool stripe poisoned");
+    if list.len() < STRIPE_CAP {
+        mem::pool_held_add(buf.capacity());
+        list.push(buf);
+    }
+}
+
+/// An owned, writable pooled buffer (RAII: returns to the pool on drop).
+/// Write through [`PoolBuf::vec_mut`], then [`PoolBuf::freeze`] into a
+/// shareable [`Payload`].
+#[derive(Debug, Default)]
+pub struct PoolBuf {
+    buf: Vec<u8>,
+    class: Option<usize>,
+}
+
+impl PoolBuf {
+    /// The underlying `Vec` for encoding into. Appending beyond the size
+    /// class's capacity works (the Vec grows) but forfeits pooling on
+    /// return, so size requests honestly via [`take`].
+    pub fn vec_mut(&mut self) -> &mut Vec<u8> {
+        &mut self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.buf.capacity()
+    }
+
+    /// Convert into a cheap-clone shared view. The backing buffer returns
+    /// to the pool when the last [`Payload`] referencing it drops.
+    pub fn freeze(mut self) -> Payload {
+        let buf = std::mem::take(&mut self.buf);
+        let class = self.class.take();
+        let len = buf.len();
+        Payload {
+            chunk: Arc::new(Chunk { buf, class }),
+            off: 0,
+            len,
+        }
+    }
+}
+
+impl Deref for PoolBuf {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &self.buf
+    }
+}
+
+impl Drop for PoolBuf {
+    fn drop(&mut self) {
+        give_back(std::mem::take(&mut self.buf), self.class.take());
+    }
+}
+
+/// Frozen backing storage of one or more [`Payload`] views.
+#[derive(Debug)]
+struct Chunk {
+    buf: Vec<u8>,
+    class: Option<usize>,
+}
+
+impl Drop for Chunk {
+    fn drop(&mut self) {
+        give_back(std::mem::take(&mut self.buf), self.class.take());
+    }
+}
+
+fn empty_chunk() -> Arc<Chunk> {
+    static EMPTY: OnceLock<Arc<Chunk>> = OnceLock::new();
+    EMPTY
+        .get_or_init(|| {
+            Arc::new(Chunk {
+                buf: Vec::new(),
+                class: None,
+            })
+        })
+        .clone()
+}
+
+/// A cheap-clone shared byte slice — the frame payload type. Dereferences
+/// to `&[u8]`; `clone` copies a pointer; [`Payload::slice`] cuts a
+/// sub-view of the same backing buffer. Backed either by a pooled buffer
+/// (via [`PoolBuf::freeze`] — returns to the pool when the last view
+/// drops) or by a plain `Vec<u8>` (via `From`, for control frames and
+/// tests).
+#[derive(Clone)]
+pub struct Payload {
+    chunk: Arc<Chunk>,
+    off: usize,
+    len: usize,
+}
+
+impl Payload {
+    /// The empty payload. Allocation-free: every empty payload shares one
+    /// static backing chunk (heartbeats and FINs are sent per tick fleet-
+    /// wide; they must not cost an allocation each).
+    pub fn new() -> Payload {
+        Payload {
+            chunk: empty_chunk(),
+            off: 0,
+            len: 0,
+        }
+    }
+
+    /// A zero-copy sub-view sharing this payload's backing buffer.
+    pub fn slice(&self, range: Range<usize>) -> Payload {
+        assert!(
+            range.start <= range.end && range.end <= self.len,
+            "slice {range:?} out of bounds for payload of {}",
+            self.len
+        );
+        Payload {
+            chunk: self.chunk.clone(),
+            off: self.off + range.start,
+            len: range.end - range.start,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.chunk.buf[self.off..self.off + self.len]
+    }
+}
+
+impl Default for Payload {
+    fn default() -> Payload {
+        Payload::new()
+    }
+}
+
+impl Deref for Payload {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl AsRef<[u8]> for Payload {
+    fn as_ref(&self) -> &[u8] {
+        self.as_slice()
+    }
+}
+
+impl From<Vec<u8>> for Payload {
+    /// Wrap an existing heap buffer (unpooled). This is the control-frame
+    /// and test path; data frames should come from [`take`] +
+    /// [`PoolBuf::freeze`]. Counted in [`mem::frame_allocs`] so the
+    /// steady-state zero-allocation regression test sees strays.
+    fn from(buf: Vec<u8>) -> Payload {
+        mem::track_frame_alloc();
+        let len = buf.len();
+        Payload {
+            chunk: Arc::new(Chunk { buf, class: None }),
+            off: 0,
+            len,
+        }
+    }
+}
+
+impl From<&[u8]> for Payload {
+    fn from(b: &[u8]) -> Payload {
+        b.to_vec().into()
+    }
+}
+
+impl std::fmt::Debug for Payload {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(f, "{:?}", self.as_slice())
+    }
+}
+
+impl PartialEq for Payload {
+    fn eq(&self, other: &Payload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+impl Eq for Payload {}
+
+impl PartialEq<[u8]> for Payload {
+    fn eq(&self, other: &[u8]) -> bool {
+        self.as_slice() == other
+    }
+}
+impl PartialEq<&[u8]> for Payload {
+    fn eq(&self, other: &&[u8]) -> bool {
+        self.as_slice() == *other
+    }
+}
+impl PartialEq<Vec<u8>> for Payload {
+    fn eq(&self, other: &Vec<u8>) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+impl PartialEq<Payload> for Vec<u8> {
+    fn eq(&self, other: &Payload) -> bool {
+        self.as_slice() == other.as_slice()
+    }
+}
+impl<const N: usize> PartialEq<[u8; N]> for Payload {
+    fn eq(&self, other: &[u8; N]) -> bool {
+        self.as_slice() == other
+    }
+}
+impl<const N: usize> PartialEq<&[u8; N]> for Payload {
+    fn eq(&self, other: &&[u8; N]) -> bool {
+        self.as_slice() == *other
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn size_classes_round_up_and_cap_out() {
+        assert_eq!(class_of(0), Some(0));
+        assert_eq!(class_of(1), Some(0));
+        assert_eq!(class_of(4096), Some(0));
+        assert_eq!(class_of(4097), Some(1));
+        assert_eq!(class_of(8192), Some(1));
+        assert_eq!(class_of(1 << 22), Some(CLASSES - 1));
+        assert_eq!(class_of((1 << 22) + 1), None);
+        for c in 0..CLASSES {
+            assert!(class_bytes(c) >= 4096);
+        }
+    }
+
+    #[test]
+    fn checkout_return_is_a_hit_and_promotion_changes_class() {
+        // round 1: miss, allocate; return to pool on drop
+        let hits0 = mem::pool_hits();
+        {
+            let mut b = take(100);
+            b.vec_mut().extend_from_slice(&[1, 2, 3]);
+            assert_eq!(&b[..], &[1, 2, 3]);
+            assert!(b.capacity() >= 4096);
+        }
+        // round 2: same class — must be a hit, and arrive cleared
+        let b = take(4000);
+        assert!(mem::pool_hits() > hits0, "second checkout should hit");
+        assert!(b.is_empty());
+        drop(b);
+
+        // size-class promotion: a request one byte over the class boundary
+        // gets the next class up, not a truncated buffer
+        let small = take(4096);
+        let promoted = take(4097);
+        assert!(promoted.capacity() >= 8192);
+        assert!(promoted.capacity() > small.capacity());
+
+        // oversize requests are honored unpooled
+        let big = take((1 << 22) + 5);
+        assert!(big.capacity() >= (1 << 22) + 5);
+    }
+
+    #[test]
+    fn freeze_share_slice_and_return() {
+        let mut b = take(64);
+        b.vec_mut().extend_from_slice(b"hello, pooled world");
+        let p = b.freeze();
+        let view = p.slice(7..13);
+        assert_eq!(view, b"pooled");
+        let clone = p.clone();
+        drop(p);
+        // backing buffer still alive through the clone and the sub-view
+        assert_eq!(clone, b"hello, pooled world");
+        assert_eq!(view, b"pooled");
+        let hits0 = mem::pool_hits();
+        drop(clone);
+        drop(view);
+        // last view gone -> buffer is back in the pool -> next take hits
+        let again = take(64);
+        assert!(mem::pool_hits() > hits0, "frozen buffer should return");
+        drop(again);
+    }
+
+    #[test]
+    fn empty_payload_is_allocation_free_and_comparable() {
+        let a0 = mem::frame_allocs();
+        let e = Payload::new();
+        let e2 = Payload::default();
+        assert_eq!(mem::frame_allocs(), a0, "empty payloads must not allocate");
+        assert!(e.is_empty());
+        assert_eq!(e, e2);
+        assert_eq!(e, Vec::<u8>::new());
+        assert_eq!(e.slice(0..0), e2);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn slice_out_of_bounds_panics() {
+        let p: Payload = vec![1u8, 2, 3].into();
+        let _ = p.slice(1..5);
+    }
+
+    #[test]
+    fn concurrent_checkout_return_across_threads() {
+        // satellite: pool correctness under the reactor-shard access
+        // pattern — many threads checking out, writing, freezing, and
+        // dropping concurrently. Asserts no deadlock/panic, data
+        // integrity, and that the held-bytes gauge stays non-negative.
+        let threads: Vec<_> = (0..8)
+            .map(|t| {
+                std::thread::spawn(move || {
+                    for i in 0..500usize {
+                        let size = 1 + (i * 37 + t * 101) % 20_000;
+                        let mut b = take(size);
+                        b.vec_mut().resize(size, t as u8);
+                        let p = b.freeze();
+                        assert_eq!(p.len(), size);
+                        assert!(p.iter().all(|&x| x == t as u8));
+                        let half = p.slice(0..size / 2);
+                        drop(p);
+                        assert!(half.iter().all(|&x| x == t as u8));
+                    }
+                })
+            })
+            .collect();
+        for t in threads {
+            t.join().unwrap();
+        }
+        assert!(mem::pool_held_bytes() >= 0);
+        // bounded retention: every stripe of every class respects its cap
+        let worst = (CLASSES * STRIPES * STRIPE_CAP) as i64 * (1 << MAX_CLASS_SHIFT);
+        assert!(mem::pool_held_bytes() <= worst);
+    }
+}

@@ -60,7 +60,7 @@ fn chunk_frames(stream: u32, payload: &[u8], chunk: usize) -> Vec<Frame> {
                 stream,
                 seq: i as u32,
                 total,
-                payload: part.to_vec(),
+                payload: part.to_vec().into(),
             }
         })
         .collect()

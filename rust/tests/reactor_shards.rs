@@ -58,7 +58,7 @@ fn counter_frame(stream: u32, i: u32) -> Frame {
         stream,
         seq: 0,
         total: 1,
-        payload: i.to_le_bytes().to_vec(),
+        payload: i.to_le_bytes().to_vec().into(),
     }
 }
 
@@ -179,7 +179,7 @@ fn heartbeats_survive_saturating_transfer_with_shards() {
                 stream: 9,
                 seq: i as u32,
                 total,
-                payload: part.to_vec(),
+                payload: part.to_vec().into(),
             })
             .expect("throttled send");
         }
@@ -287,7 +287,7 @@ fn auth_wire(name: &str, token: &str) -> Vec<u8> {
         stream: 0,
         seq: 0,
         total: 1,
-        payload: w.into_vec(),
+        payload: w.into_vec().into(),
     };
     let bytes = f.encode();
     let mut wire = (bytes.len() as u32).to_le_bytes().to_vec();

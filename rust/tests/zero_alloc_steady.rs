@@ -1,0 +1,75 @@
+//! Zero-allocation steady-state regression — the tentpole's acceptance
+//! gate. After a warmup round populates the buffer pool's size classes,
+//! a multi-round object exchange must run the whole codec → frame →
+//! driver path without a single pool miss or unpooled payload wrap:
+//! [`fedflare::util::mem::pool_misses`] and
+//! [`fedflare::util::mem::frame_allocs`] stay flat while
+//! [`fedflare::util::mem::pool_hits`] keeps climbing.
+//!
+//! This test lives alone in its own binary on purpose: the counters are
+//! process-global, and a sibling test sending control frames (unpooled
+//! `Vec<u8>` payload wraps are *counted*, by design) would make the
+//! zero-delta assertion flaky.
+
+use fedflare::message::FlMessage;
+use fedflare::sfm::inproc;
+use fedflare::streaming::Messenger;
+use fedflare::tensor::{Tensor, TensorDict};
+use fedflare::util::mem;
+
+#[test]
+fn steady_state_rounds_allocate_nothing_on_the_frame_path() {
+    // 4 x 64 KiB tensors over 16 KiB chunks: every pooled size class the
+    // path touches (header record, tensor records, boundary staging) is
+    // exercised each round, and records span multiple chunks so both the
+    // zero-copy slice branch and the staging branch run.
+    let mut body = TensorDict::new();
+    for i in 0..4 {
+        body.insert(
+            format!("layer{i}"),
+            Tensor::f32(vec![16_384], vec![0.5; 16_384]),
+        );
+    }
+    let msg = FlMessage::task("train", 0, body);
+
+    let (a, b) = inproc::pair(256, "zero-alloc");
+    let mut tx = Messenger::new(Box::new(a), 16 << 10, 1);
+    let mut rx = Messenger::new(Box::new(b), 16 << 10, 2);
+
+    let mut round = |tx: &mut Messenger, rx: &mut Messenger| {
+        tx.send_msg(&msg).expect("send round");
+        let got = rx.recv_msg().expect("recv round");
+        assert_eq!(got.body.len(), 4);
+    };
+
+    // warmup: cold size classes miss once while the pool fills
+    for _ in 0..2 {
+        round(&mut tx, &mut rx);
+    }
+
+    let misses0 = mem::pool_misses();
+    let allocs0 = mem::frame_allocs();
+    let hits0 = mem::pool_hits();
+
+    for _ in 0..5 {
+        round(&mut tx, &mut rx);
+    }
+
+    assert_eq!(
+        mem::pool_misses() - misses0,
+        0,
+        "pool missed after warmup: the hot path allocated"
+    );
+    assert_eq!(
+        mem::frame_allocs() - allocs0,
+        0,
+        "a frame payload was heap-allocated outside the pool after warmup"
+    );
+    // guard against vacuous success: the rounds really did go through the
+    // pool (a rewrite that bypasses `pool::take` entirely would keep the
+    // miss counter flat too)
+    assert!(
+        mem::pool_hits() > hits0,
+        "no pool checkouts at all — the data plane stopped using the pool"
+    );
+}

@@ -1,0 +1,47 @@
+#!/usr/bin/env sh
+# CI lint gate for the zero-copy data plane: the frame hot path in
+# rust/src/sfm/reactor.rs and rust/src/sfm/mux.rs must not allocate
+# per-frame byte buffers. Payloads come from the buffer pool
+# (rust/src/util/pool.rs: `pool::take` + `PoolBuf::freeze`) and travel as
+# shared `Payload` slices; a `.to_vec()`, `vec![..]`, or
+# `Vec::with_capacity(..)` creeping back into those files reintroduces
+# the copy-per-hop design this codebase moved away from and silently
+# breaks the steady-state zero-allocation regression test
+# (rust/tests/zero_alloc_steady.rs).
+#
+# A deliberate, reviewed allocation site can be sanctioned by putting the
+# marker comment `alloclint-allow: <reason>` on the line directly above
+# it. Test modules are exempt: everything after the first `#[cfg(test)]`
+# in a file is ignored (tests build fixture buffers freely).
+set -eu
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+status=0
+
+for f in "$root/rust/src/sfm/reactor.rs" "$root/rust/src/sfm/mux.rs"; do
+    hits="$(awk '
+        /#\[cfg\(test\)\]/ { intest = 1 }
+        intest { next }
+        /\.to_vec\(|vec!\[|Vec::with_capacity\(/ {
+            if (prev !~ /alloclint-allow:/) {
+                printf "%s:%d: %s\n", FILENAME, FNR, $0
+            }
+        }
+        { prev = $0 }
+    ' "$f")"
+    if [ -n "$hits" ]; then
+        echo "$hits"
+        status=1
+    fi
+done
+
+if [ "$status" -ne 0 ]; then
+    echo ""
+    echo "error: per-frame buffer allocation on the data-plane hot path." >&2
+    echo "Frame payloads in sfm/reactor.rs and sfm/mux.rs must come from the" >&2
+    echo "buffer pool (util/pool.rs) or ride as shared Payload slices — see" >&2
+    echo "rust/README.md, buffer lifecycle. If the allocation is deliberate," >&2
+    echo "mark the preceding line with 'alloclint-allow: <reason>'." >&2
+    exit 1
+fi
+echo "hot-alloc lint: data-plane hot path allocates through the pool only (ok)"
