@@ -22,10 +22,13 @@
 #   make alloclint   fail if the data-plane hot path (sfm/reactor.rs,
 #                    sfm/mux.rs) allocates per-frame byte buffers
 #                    outside the buffer pool / an alloclint-allow marker
-#   make lint        rustfmt + clippy + threadlint + alloclint, as CI
-#                    runs them
+#   make loglint     fail if the library core (sfm/, coordinator/,
+#                    fleet/) writes diagnostics via eprintln!/println!
+#                    instead of obs::log! / a loglint-allow marker
+#   make lint        rustfmt + clippy + threadlint + alloclint + loglint,
+#                    as CI runs them
 
-.PHONY: artifacts test bench perfgate threadlint alloclint lint
+.PHONY: artifacts test bench perfgate threadlint alloclint loglint lint
 
 artifacts:
 	cd python && python3 -m compile.aot --out-dir ../rust/artifacts
@@ -57,6 +60,9 @@ threadlint:
 alloclint:
 	sh scripts/check_no_hot_alloc.sh
 
-lint: threadlint alloclint
+loglint:
+	sh scripts/check_no_eprintln.sh
+
+lint: threadlint alloclint loglint
 	cargo fmt --check
 	cargo clippy --all-targets -- -D warnings

@@ -348,6 +348,56 @@ fn accept_storm_row(n: usize) -> Json {
     ])
 }
 
+/// Observability overhead: the cost of one registry snapshot, and the
+/// throughput tax a live 10 ms-period [`fedflare::obs::Exporter`] puts
+/// on a hot counter/histogram loop — the acceptance bar is <2% at the
+/// real 1 s cadence, so the 100x-faster cadence here is a hard ceiling.
+fn exporter_row() -> Json {
+    let s_snap = bench("registry snapshot", 3, 50, || {
+        std::hint::black_box(fedflare::obs::global().snapshot());
+    });
+    report(&s_snap, None);
+
+    let busy = Duration::from_millis(300);
+    let work = || {
+        let ops = fedflare::obs::counter("bench.exporter.ops");
+        let lat = fedflare::obs::histo("bench.exporter.lat_us");
+        let t0 = Instant::now();
+        let mut n = 0u64;
+        while t0.elapsed() < busy {
+            for _ in 0..1000 {
+                ops.inc();
+                lat.observe(n & 1023);
+                n += 1;
+            }
+        }
+        n
+    };
+    let ops_off = work();
+    let dir = std::env::temp_dir().join("fedflare_bench_fleet_exporter");
+    let _ = std::fs::remove_dir_all(&dir);
+    let sink = fedflare::metrics::MetricsSink::create(&dir, "bench_exporter")
+        .expect("exporter bench sink");
+    let exporter = fedflare::obs::Exporter::with_period(sink, Duration::from_millis(10));
+    let ops_on = work();
+    drop(exporter);
+    let _ = std::fs::remove_dir_all(&dir);
+    let overhead = 1.0 - ops_on as f64 / ops_off as f64;
+    println!(
+        "  hot loop: {ops_off} ops/300ms off, {ops_on} on ({:+.2}% tax at 10 ms cadence)",
+        overhead * 100.0
+    );
+    Json::obj([
+        ("exporter", Json::str("hot-counter-loop")),
+        ("snapshot_us", Json::num(s_snap.mean_ns / 1e3)),
+        ("busy_window_s", Json::num(busy.as_secs_f64())),
+        ("export_period_ms", Json::num(10.0)),
+        ("ops_exporter_off", Json::num(ops_off as f64)),
+        ("ops_exporter_on", Json::num(ops_on as f64)),
+        ("overhead_frac", Json::num(overhead)),
+    ])
+}
+
 /// A `tensors`-way split model totalling `mb` MB of f32 payload, the
 /// same shape the delta-checkpoint chain sees from a real job.
 fn ckpt_model(mb: usize, tensors: usize, fill: f32) -> TensorDict {
@@ -491,6 +541,9 @@ fn main() {
     // free ~200k mux registrations before the checkpoint I/O section
     drop(slots);
 
+    header("observability: snapshot cost + live exporter overhead");
+    let exporter_rows = vec![exporter_row()];
+
     header("checkpoint write/resume cost vs model size");
     let ckpt_dir = std::env::temp_dir().join("fedflare_bench_fleet_ckpt");
     let _ = std::fs::remove_dir_all(&ckpt_dir);
@@ -513,6 +566,7 @@ fn main() {
             ("churn_connections", Json::num(top as f64)),
             ("churn", Json::arr(churn_rows)),
             ("accept_storm", Json::arr(storm_rows)),
+            ("observability", Json::arr(exporter_rows)),
             ("checkpoint", Json::arr(ckpt_rows)),
         ]),
     )

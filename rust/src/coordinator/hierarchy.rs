@@ -30,6 +30,7 @@ use anyhow::{anyhow, Result};
 use super::{Aggregator, Communicator, GatherPolicy, StreamingMean};
 use crate::config::FilterSpec;
 use crate::message::{FlMessage, Kind};
+use crate::obs;
 use crate::streaming::Messenger;
 use crate::tensor::TensorDict;
 use crate::util::json::Json;
@@ -132,7 +133,7 @@ impl MidTier {
             let up = match self.serve_round(&task) {
                 Ok(up) => up,
                 Err(e) => {
-                    log::warn!("{}: round {} failed: {e}", self.name, task.round);
+                    obs::log!(warn, "{}: round {} failed: {e}", self.name, task.round);
                     FlMessage::result(&task.task, task.round, &self.name, TensorDict::new())
                         .with_meta("error", Json::str(e.to_string()))
                 }

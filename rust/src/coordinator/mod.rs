@@ -70,6 +70,7 @@ pub use scheduler::{
 };
 pub use workflows::{CyclicWeightTransfer, FederatedEval, FederatedInference};
 
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::mpsc::{Receiver, RecvTimeoutError, Sender};
 use std::sync::{Arc, Mutex};
 use std::time::{Duration, Instant};
@@ -80,6 +81,7 @@ use crate::config::FilterSpec;
 use crate::filters::Filter;
 use crate::message::{FlMessage, Kind};
 use crate::metrics::MetricsSink;
+use crate::obs;
 use crate::streaming::{Messenger, StreamError};
 use crate::util::mem;
 use crate::util::rng::Rng;
@@ -153,6 +155,10 @@ struct FoldState {
 
 pub struct TensorFold {
     state: Mutex<FoldState>,
+    /// Span id of the owning gather (0 until its span starts): the
+    /// explicit parent of the per-site `gather.site` spans recorded on
+    /// worker threads, which cannot inherit it from their own stacks.
+    span: AtomicU64,
 }
 
 /// A worker's share of one tensor-granular gather: the shared fold target
@@ -296,7 +302,7 @@ impl ClientHandle {
                         match accept_registration(&mut fresh) {
                             Ok(_) => messenger = fresh,
                             Err(e) => {
-                                log::debug!("{wname}: replacement channel dropped: {e}")
+                                obs::log!(debug, "{wname}: replacement channel dropped: {e}")
                             }
                         }
                     }
@@ -321,6 +327,13 @@ impl ClientHandle {
                                 // this worker's own filter chain (no lock),
                                 // fold it into the shared aggregator the
                                 // moment its frames arrive, then drop it
+                                let t0 = Instant::now();
+                                let _site_span = obs::span!(
+                                    "gather.site",
+                                    parent: ft.shared.span.load(Ordering::Relaxed),
+                                    round: msg.round as u32,
+                                    site: msg.client.as_str()
+                                );
                                 let mut seen = 0usize;
                                 let head = messenger.recv_msg_stream(|head, name, tensor| {
                                     ft.fold_record(head, name, tensor)?;
@@ -329,6 +342,8 @@ impl ClientHandle {
                                 })?;
                                 reject_error_marker(&head)?;
                                 ft.finish_stream(&head, seen)?;
+                                obs::histo_with("gather.site_ms", &[("site", msg.client.as_str())])
+                                    .observe(t0.elapsed().as_millis() as u64);
                                 Ok((head, permit))
                             }
                         }
@@ -730,17 +745,26 @@ impl Communicator {
                 active: 0,
                 poisoned: false,
             }),
+            span: AtomicU64::new(0),
         });
         let n = targets.len().max(1);
         let counter = self.counter.clone();
-        let mut gather = self.start_gather(task, targets, gate, |pos| {
-            Some(FoldTask {
-                shared: fold.clone(),
-                filters: crate::filters::build_chain(recv_filters, pos, n),
-                counter: counter.clone(),
-                started: false,
-            })
-        })?;
+        let mut gather = {
+            let _scatter = obs::span!("scatter", round: task.round as u32);
+            self.start_gather(task, targets, gate, |pos| {
+                Some(FoldTask {
+                    shared: fold.clone(),
+                    filters: crate::filters::build_chain(recv_filters, pos, n),
+                    counter: counter.clone(),
+                    started: false,
+                })
+            })?
+        };
+        // the per-site worker spans parent onto this gather span; the
+        // id lands in the shared fold *after* dispatch, which is fine —
+        // no result can stream back before the task even went out
+        let gather_span = obs::span!("gather", round: task.round as u32);
+        fold.span.store(gather_span.id(), Ordering::Relaxed);
         let deadline = policy.timeout.map(|t| Instant::now() + t);
         let mut completed = 0usize;
         let mut failures: Vec<String> = Vec::new();
@@ -753,7 +777,7 @@ impl Communicator {
                     drop(r.held);
                 }
                 GatherEvent::Failure(e) => {
-                    log::warn!("gather: {e}");
+                    obs::log!(warn, "gather: {e}");
                     failures.push(e);
                     if targets.len() - failures.len() < quorum {
                         bail!(
@@ -781,7 +805,8 @@ impl Communicator {
                     gather.remaining()
                 );
             }
-            log::warn!(
+            obs::log!(
+                warn,
                 "gather timed out; finalizing with {completed}/{} results, abandoning {} \
                  straggler(s)",
                 targets.len(),
@@ -814,7 +839,7 @@ impl Communicator {
                         drop(r.held);
                     }
                     GatherEvent::Failure(e) => {
-                        log::warn!("gather (draining): {e}");
+                        obs::log!(warn, "gather (draining): {e}");
                         failures.push(e);
                     }
                     GatherEvent::TimedOut | GatherEvent::Disconnected => {}
@@ -911,6 +936,9 @@ pub struct ServerCtx {
     /// Where to save global-model checkpoints (None = don't).
     pub ckpt_dir: Option<std::path::PathBuf>,
     pub job_name: String,
+    /// Wire-level job id (the scheduler's allocation; 0 for contexts
+    /// outside the serving path) — stamped onto this job's spans.
+    pub job_id: u32,
     /// Durable round-state store (`serve --state-dir`): when set, a
     /// workflow checkpoints each completed round through it and resumes
     /// from the last checkpoint on startup (see
@@ -924,6 +952,7 @@ impl ServerCtx {
             sink,
             ckpt_dir: None,
             job_name: job_name.to_string(),
+            job_id: 0,
             store: None,
         }
     }

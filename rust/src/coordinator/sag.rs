@@ -15,13 +15,14 @@
 //! accumulator plus O(largest tensor) regardless of client count and
 //! model size.
 
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use anyhow::{anyhow, Result};
 
 use super::{Aggregator, Communicator, Controller, GatherPolicy, ServerCtx, StreamingMean};
 use crate::config::FilterSpec;
 use crate::message::FlMessage;
+use crate::obs;
 use crate::tensor::TensorDict;
 use crate::util::json::Json;
 
@@ -191,7 +192,8 @@ impl Controller for ScatterAndGather {
     }
 
     fn run(&mut self, comm: &mut Communicator, ctx: &mut ServerCtx) -> Result<()> {
-        log::info!(
+        obs::log!(
+            info,
             "Start {} ({} rounds, quorum {})",
             self.name,
             self.rounds,
@@ -211,7 +213,8 @@ impl Controller for ScatterAndGather {
                     agg.import_state(&ck.agg_state)?;
                 }
                 start_round = ck.round + 1;
-                log::info!(
+                obs::log!(
+                    info,
                     "{}: resuming from round-{} checkpoint ({} of {} rounds left)",
                     ctx.job_name,
                     ck.round,
@@ -221,6 +224,13 @@ impl Controller for ScatterAndGather {
             }
         }
         for round in start_round..self.rounds {
+            // the round span is the root of this round's trace: scatter /
+            // gather / fold / checkpoint all record on this thread (or
+            // parent explicitly, for the per-site gather streams) and
+            // nest under it via the thread-local span stack
+            let _round_span = obs::span!("round", job: ctx.job_id, round: round as u32);
+            let round_t0 = Instant::now();
+            obs::gauge_with("job.round", &[("job", ctx.job_name.as_str())]).set(round as i64);
             // 1. sample this round's participants from the fleet's
             //    *live* view (epoch-aware: a Gone/Suspect client is not
             //    sampled; a rejoined client is eligible again from the
@@ -300,13 +310,17 @@ impl Controller for ScatterAndGather {
             )?;
             // 4. update the global model
             let folded = agg.folded();
-            self.model = agg.finalize()?;
+            {
+                let _fold = obs::span!("fold", round: round as u32);
+                self.model = agg.finalize()?;
+            }
             self.aggregator = Some(agg);
             // durable checkpoint of the completed round (atomic temp-
             // file rename inside the store): a server killed after this
             // line resumes at round+1; killed before it, the round
             // re-runs — deterministically, either way byte-identical
             if let Some(store) = &ctx.store {
+                let _ckpt = obs::span!("checkpoint", round: round as u32);
                 let state = self
                     .aggregator
                     .as_ref()
@@ -351,16 +365,20 @@ impl Controller for ScatterAndGather {
                 let path = dir.join(format!("{}_global.bin", ctx.job_name));
                 std::fs::write(path, self.model.to_bytes())?;
             }
-            log::info!(
+            obs::log!(
+                info,
                 "round {round}: val_loss={:.4} val_acc={:.4} train_loss={:.4} folded={folded}",
                 rm.val_loss,
                 rm.val_acc,
                 rm.train_loss
             );
+            obs::histo_with("round.ms", &[("job", ctx.job_name.as_str())])
+                .observe(round_t0.elapsed().as_millis() as u64);
+            obs::counter("rounds.completed").inc();
             self.history.push(rm);
         }
         comm.shutdown();
-        log::info!("Finished {}.", self.name);
+        obs::log!(info, "Finished {}.", self.name);
         Ok(())
     }
 }

@@ -41,7 +41,9 @@ use crate::config::{ClientSpec, FilterSpec, JobConfig};
 use crate::executor::{Executor, JobStart};
 use crate::fleet::ClientState;
 use crate::metrics::MetricsSink;
+use crate::obs;
 use crate::persist::JobStore;
+use crate::util::json::Json;
 use crate::sim::{ExecutorFactory, Fleet, RejoinSpec, RunReport};
 use crate::streaming::Messenger;
 
@@ -111,7 +113,14 @@ pub fn run_one_job_opts<C: Controller + ?Sized>(
     let tree = job.branching > 1 && n > job.branching;
     let sink = MetricsSink::create(results_dir, &job.name)?;
     let mut ctx = ServerCtx::new(sink, &job.name);
+    ctx.job_id = job_id;
     ctx.store = opts.store;
+    // the job span roots this job's whole trace (rounds nest under it on
+    // this thread); the exporter streams registry deltas + completed
+    // spans into the job's JSONL until it drops at the end of this fn,
+    // when it takes a final export and flushes
+    let _job_span = obs::span!("job", job: job_id, site: job.name.as_str());
+    let _exporter = obs::Exporter::start(ctx.sink.clone());
     // control-plane plumbing before any open: rejoins re-deploy through
     // it, and open_job counts task loops against it. Every exit below
     // runs clear_job, so the entry never outlives the job.
@@ -128,25 +137,31 @@ pub fn run_one_job_opts<C: Controller + ?Sized>(
         // registered in the shared directory, then announce the job on
         // every client's control channel (the clients spawn their job
         // loops and register back over the job's own channel)
-        for (i, spec) in job.clients.iter().enumerate() {
-            let executor = make_executor(i, spec)?;
-            let filters = crate::filters::build_chain(&job.filters, i, n);
-            fleet.directory().offer(
-                job_id,
-                fleet_idx[i],
-                JobStart {
-                    job_name: job.name.clone(),
-                    chunk_bytes: job.stream.chunk_bytes,
-                    stale_stream_age_s: job.stream.stale_stream_age_s,
-                    executor,
-                    filters,
-                    enc: job.update_codec,
-                    delta: job.delta_updates,
-                },
-            );
+        {
+            let _deploy = obs::span!("job.deploy", job: job_id);
+            for (i, spec) in job.clients.iter().enumerate() {
+                let executor = make_executor(i, spec)?;
+                let filters = crate::filters::build_chain(&job.filters, i, n);
+                fleet.directory().offer(
+                    job_id,
+                    fleet_idx[i],
+                    JobStart {
+                        job_name: job.name.clone(),
+                        chunk_bytes: job.stream.chunk_bytes,
+                        stale_stream_age_s: job.stream.stale_stream_age_s,
+                        executor,
+                        filters,
+                        enc: job.update_codec,
+                        delta: job.delta_updates,
+                    },
+                );
+            }
         }
-        for &fi in &fleet_idx {
-            fleet.open_job(fi, job_id, &job.name)?;
+        {
+            let _open = obs::span!("job.open", job: job_id);
+            for &fi in &fleet_idx {
+                fleet.open_job(fi, job_id, &job.name)?;
+            }
         }
         if tree {
             run_tree(fleet, job_id, job, &fleet_idx, controller, &mut ctx)
@@ -200,7 +215,8 @@ pub fn run_one_job_opts<C: Controller + ?Sized>(
         }
     }
     if !churn_errs.is_empty() {
-        log::info!(
+        obs::log!(
+            info,
             "job '{}': tolerated churned client loops: {}",
             job.name,
             churn_errs.join("; ")
@@ -230,7 +246,8 @@ pub fn run_one_job_opts<C: Controller + ?Sized>(
                 unaccounted.join(", ")
             ));
         } else {
-            log::warn!(
+            obs::log!(
+                warn,
                 "job '{}': {missing} of {opened} client loop(s) never reported (churn)",
                 job.name
             );
@@ -459,6 +476,10 @@ pub struct JobOutcome {
 struct SchedInner {
     queue: VecDeque<(u32, JobRequest)>,
     statuses: HashMap<u32, JobStatus>,
+    /// id -> job name, for every id ever allocated (the status probe
+    /// reports jobs by name; requests carry the name only inside the
+    /// queued `JobRequest`, which dispatch consumes).
+    names: HashMap<u32, String>,
     outcomes: HashMap<u32, JobOutcome>,
     abort_requested: HashSet<u32>,
     running: usize,
@@ -507,6 +528,7 @@ impl JobScheduler {
                 inner: Mutex::new(SchedInner {
                     queue: VecDeque::new(),
                     statuses: HashMap::new(),
+                    names: HashMap::new(),
                     outcomes: HashMap::new(),
                     abort_requested: HashSet::new(),
                     running: 0,
@@ -531,6 +553,43 @@ impl JobScheduler {
                     JobScheduler::dispatch(&core, inner);
                 }
             }));
+        // status provider: merges the scheduler's job table and the
+        // fleet's membership view into the status document. The probe is
+        // answered in place on a reactor thread, so the scheduler lock is
+        // only try_lock'ed — a contended tick reports sites without job
+        // detail instead of stalling the data plane. Weak: a dropped
+        // scheduler degrades the document, it doesn't dangle.
+        let weak: Weak<SchedCore> = Arc::downgrade(&sched.core);
+        obs::status::set_provider(move || {
+            let mut out = std::collections::BTreeMap::new();
+            let Some(core) = weak.upgrade() else {
+                return Json::Obj(out);
+            };
+            if let Ok(inner) = core.inner.try_lock() {
+                let mut jobs = std::collections::BTreeMap::new();
+                for (id, status) in &inner.statuses {
+                    jobs.insert(
+                        id.to_string(),
+                        Json::obj([
+                            (
+                                "name",
+                                Json::str(
+                                    inner.names.get(id).map(|s| s.as_str()).unwrap_or("?"),
+                                ),
+                            ),
+                            ("status", Json::str(status.as_str())),
+                        ]),
+                    );
+                }
+                out.insert("jobs".to_string(), Json::Obj(jobs));
+            }
+            let mut sites = std::collections::BTreeMap::new();
+            for (name, state) in core.fleet.registry().snapshot() {
+                sites.insert(name, Json::str(state.as_str()));
+            }
+            out.insert("sites".to_string(), Json::Obj(sites));
+            Json::Obj(out)
+        });
         sched
     }
 
@@ -539,6 +598,8 @@ impl JobScheduler {
     /// admission). Returns the job id (also the wire-level `job` of all
     /// its frames).
     pub fn submit(&self, req: JobRequest) -> u32 {
+        let _submit = obs::span!("job.submit", site: req.job.name.as_str());
+        obs::counter("jobs.submitted").inc();
         if let Some(store) = &self.core.store {
             // a name the manifest has never seen is a FRESH job: drop
             // any stale checkpoint left by an earlier state-dir life, so
@@ -547,11 +608,11 @@ impl JobScheduler {
             // re-submission and keeps its checkpoint — that's recovery.
             if store.status(&req.job.name).is_none() {
                 if let Err(e) = store.clear_round(&req.job.name) {
-                    log::warn!("state store: {e}");
+                    obs::log!(warn, "state store: {e}");
                 }
             }
             if let Err(e) = store.set_status(&req.job.name, JobStatus::Queued.as_str()) {
-                log::warn!("state store: {e}");
+                obs::log!(warn, "state store: {e}");
             }
         }
         // fail fast on clients that were never part of the fleet: unlike
@@ -575,6 +636,8 @@ impl JobScheduler {
             let id = inner.next_id;
             inner.next_id += 1;
             inner.statuses.insert(id, JobStatus::Failed);
+            inner.names.insert(id, req.job.name.clone());
+            obs::counter("jobs.failed").inc();
             inner.outcomes.insert(
                 id,
                 JobOutcome {
@@ -591,6 +654,7 @@ impl JobScheduler {
         let id = inner.next_id;
         inner.next_id += 1;
         inner.statuses.insert(id, JobStatus::Queued);
+        inner.names.insert(id, req.job.name.clone());
         inner.queue.push_back((id, req));
         Self::dispatch(&self.core, inner);
         id
@@ -728,6 +792,7 @@ impl JobScheduler {
             let (id, req) = inner.queue.remove(pos).expect("position just found");
             inner.running += 1;
             inner.statuses.insert(id, JobStatus::Running);
+            obs::gauge("jobs.running").add(1);
             let core2 = core.clone();
             let handle = std::thread::Builder::new()
                 .name(format!("job-{id}"))
@@ -791,6 +856,12 @@ impl JobScheduler {
         if let Some(store) = &core.store {
             let _ = store.set_status(&job.name, outcome.status.as_str());
         }
+        match outcome.status {
+            JobStatus::Completed => obs::counter("jobs.completed").inc(),
+            JobStatus::Aborted => obs::counter("jobs.aborted").inc(),
+            _ => obs::counter("jobs.failed").inc(),
+        }
+        obs::gauge("jobs.running").sub(1);
         inner.statuses.insert(id, outcome.status);
         inner.outcomes.insert(id, outcome);
         inner.running -= 1;

@@ -26,6 +26,7 @@ use anyhow::{anyhow, Result};
 
 use crate::filters::Filter;
 use crate::message::{FlMessage, Kind};
+use crate::obs;
 use crate::sfm::mux::MuxConn;
 use crate::streaming::Messenger;
 use crate::tensor::{RecordEnc, TensorDict};
@@ -103,6 +104,11 @@ impl ClientRuntime {
             }
             self.last_task = Some((task.task.clone(), task.round));
             let t1 = Instant::now();
+            let _train = obs::span!(
+                "train",
+                round: task.round as u32,
+                site: self.name.as_str()
+            );
             let mut result = self.executor.execute(&task)?;
             result.client = self.name.clone();
             result.round = task.round;
@@ -141,7 +147,7 @@ impl ClientRuntime {
         let msg = FlMessage::result(&task, round, &self.name, TensorDict::new())
             .with_meta("error", Json::str(err));
         if let Err(e) = self.messenger.send_msg(&msg) {
-            log::debug!("{}: error marker not delivered: {e}", self.name);
+            obs::log!(debug, "{}: error marker not delivered: {e}", self.name);
         }
     }
 }
@@ -441,7 +447,7 @@ impl MultiJobRuntime {
                 // in-flight frames drain into the eviction counters
                 self.mux.close_job(job);
             }
-            other => log::warn!("{}: unknown control message '{other}'", self.name),
+            other => obs::log!(warn, "{}: unknown control message '{other}'", self.name),
         }
         Ok(true)
     }

@@ -80,6 +80,7 @@ pub mod fleet;
 pub mod message;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod persist;
 pub mod repro;
 pub mod runtime;

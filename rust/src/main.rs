@@ -14,6 +14,9 @@
 //!     multi-process deployment (server + one process per client): muxed
 //!     connections, heartbeats, and rejoin — kill a client and restart it
 //!     and it re-authenticates and picks the job back up
+//! fedflare status --addr <host:port> [--site-token s] [--watch N]
+//!     live introspection of a running server: jobs, rounds, sites,
+//!     per-shard reactor load, in-flight spans
 //! fedflare list-artifacts [--artifacts-dir artifacts]
 //! fedflare fig5-worker ...            (internal: spawned by `repro fig5`)
 //! ```
@@ -73,6 +76,7 @@ fn dispatch(args: &[String]) -> Result<()> {
         "submit" => cmd_submit(rest),
         "server" => cmd_server(rest),
         "client" => cmd_client(rest),
+        "status" => cmd_status(rest),
         "list-artifacts" => cmd_list(rest),
         "fig5-worker" => cmd_fig5_worker(rest),
         "--help" | "-h" | "help" => {
@@ -92,6 +96,7 @@ fn print_usage() {
          \x20 serve --schedule <file>                       multi-job serving over one fleet\n\
          \x20 submit --jobs a.json,b.json                   dispatch job files over one fleet\n\
          \x20 server / client                               multi-process deployment\n\
+         \x20 status --addr <host:port> [--watch N]         live server introspection\n\
          \x20 list-artifacts                                show compiled model artifacts\n\n\
          run `fedflare repro fig5 --help` etc. for per-command options",
         fedflare::VERSION
@@ -428,6 +433,11 @@ fn cmd_serve(args: &[String]) -> Result<()> {
         None,
         "seconds without heartbeats before a client is marked Suspect",
     )
+    .opt(
+        "status-port",
+        None,
+        "answer `fedflare status` probes on this local port (0 = any free port)",
+    )
     .parse(args)
     .map_err(|e| anyhow!(e))?;
     let spec = ScheduleSpec::from_file(std::path::Path::new(
@@ -446,6 +456,11 @@ fn cmd_submit(args: &[String]) -> Result<()> {
         .opt("driver", Some("inproc"), "transport: inproc | tcp")
         .opt("max-concurrent", Some("2"), "jobs running at once")
         .opt("out-dir", Some("results"), "metrics/results directory")
+        .opt(
+            "status-port",
+            None,
+            "answer `fedflare status` probes on this local port (0 = any free port)",
+        )
         .parse(args)
         .map_err(|e| anyhow!(e))?;
     let mut entries = Vec::new();
@@ -511,6 +526,22 @@ fn run_schedule(mut spec: ScheduleSpec, p: &fedflare::util::cli::Parsed) -> Resu
     let fleet = sim::Fleet::connect_with(&spec.clients, kind, &stream, spec.fleet.clone())?;
     let sched =
         JobScheduler::with_store(fleet.clone(), spec.max_concurrent, &out_dir, store.clone());
+    // live introspection endpoint: status probes authenticate like sites
+    // and are answered from the scheduler's registered status provider
+    let status_acceptor = match p.get("status-port") {
+        Some(port) => {
+            let listener = fedflare::sfm::tcp::bind(("127.0.0.1", port.parse::<u16>()?))?;
+            let admit: AdmitFn = Arc::new(|_info: AuthInfo, send_stream, _tok| {
+                fedflare::obs::status::StatusSink::new(send_stream)
+                    .map(|s| Box::new(s) as _)
+                    .map_err(|e| format!("status probe: {e}"))
+            });
+            let a = AuthAcceptor::spawn(listener, true, HANDSHAKE_DEADLINE, admit)?;
+            println!("serve: status endpoint on {}", a.local_addr());
+            Some(a)
+        }
+        None => None,
+    };
     println!(
         "serve: fleet of {} clients over {kind_label}, {} jobs, max {} concurrent",
         spec.clients.len(),
@@ -586,6 +617,9 @@ fn run_schedule(mut spec: ScheduleSpec, p: &fedflare::util::cli::Parsed) -> Resu
     sched.drain();
     for t in timers {
         let _ = t.join();
+    }
+    if let Some(a) = status_acceptor {
+        a.shutdown();
     }
     fleet.shutdown();
     if !failed.is_empty() {
@@ -830,6 +864,14 @@ fn cmd_server(args: &[String]) -> Result<()> {
             if !token.is_empty() && presented != token {
                 return Err(format!("site '{name}' presented a bad token"));
             }
+            // `fedflare status` probes authenticate like a site (same
+            // token gate) but never join the fleet: a StatusSink answers
+            // their KIND_STATUS requests and the connection dies with them
+            if name == fedflare::obs::status::PROBE_SITE {
+                return fedflare::obs::status::StatusSink::new(send_stream)
+                    .map(|s| Box::new(s) as _)
+                    .map_err(|e| format!("{peer}: status probe: {e}"));
+            }
             if !job.clients.iter().any(|c| c.name == name) {
                 return Err(format!("unknown site '{name}'"));
             }
@@ -935,15 +977,46 @@ fn cmd_server(args: &[String]) -> Result<()> {
     comm.set_liveness(Box::new(move |name| probe_registry.is_eligible(name)));
     let sink = MetricsSink::create(p.get("out-dir").unwrap(), &job.name)?;
     let mut ctx = ServerCtx::new(sink, &job.name);
+    ctx.job_id = FLEET_JOB_ID;
     if let Some(dir) = p.get("state-dir") {
         ctx.store = Some(Arc::new(fedflare::persist::JobStore::open(dir)?));
     }
+    // live introspection: `fedflare status` probes see this job and the
+    // registry's site states merged into the base document
+    {
+        let registry = Arc::downgrade(&registry);
+        let job_name = job.name.clone();
+        fedflare::obs::status::set_provider(move || {
+            let mut out = std::collections::BTreeMap::new();
+            let mut jobs = std::collections::BTreeMap::new();
+            jobs.insert(
+                FLEET_JOB_ID.to_string(),
+                Json::obj([
+                    ("name", Json::str(job_name.as_str())),
+                    ("status", Json::str("running")),
+                ]),
+            );
+            out.insert("jobs".to_string(), Json::Obj(jobs));
+            if let Some(registry) = registry.upgrade() {
+                let mut sites = std::collections::BTreeMap::new();
+                for (name, state) in registry.snapshot() {
+                    sites.insert(name, Json::str(state.as_str()));
+                }
+                out.insert("sites".to_string(), Json::Obj(sites));
+            }
+            Json::Obj(out)
+        });
+    }
+    // periodic export of registry deltas + completed spans into the
+    // job's metrics JSONL; the final export happens on drop
+    let exporter = fedflare::obs::Exporter::start(ctx.sink.clone());
     let mut ctl = build_sag(&job, initial);
     let outcome = ctl.run(&mut comm, &mut ctx);
-    fedflare::metrics::log_reactor_load(&mut ctx.sink);
+    drop(exporter);
 
     // teardown regardless of outcome: stop rejoins and the sweep, then
     // the fleet-level bye lets each client's control loop exit
+    fedflare::obs::status::clear_provider();
     acceptor.shutdown();
     sweep_stop.store(true, Ordering::Relaxed);
     if let Some(id) = sweep_id {
@@ -1060,6 +1133,145 @@ fn cmd_client(args: &[String]) -> Result<()> {
             Ok(())
         }
     }
+}
+
+// ----------------------------------------------------------------- status
+
+/// `fedflare status`: dial a running server (the `server` command's main
+/// port, or a `serve --status-port` endpoint), authenticate as the
+/// reserved probe identity, and render the live status document.
+fn cmd_status(args: &[String]) -> Result<()> {
+    let p = Args::new("status", "live introspection of a running fedflare server")
+        .opt(
+            "addr",
+            Some("127.0.0.1:8787"),
+            "server or status-endpoint address",
+        )
+        .opt(
+            "site-token",
+            Some(""),
+            "shared fleet secret (must match the server's)",
+        )
+        .opt("watch", None, "refresh every N seconds until interrupted")
+        .opt("timeout", Some("5"), "seconds to wait for each reply")
+        .opt("json", None, "dump the raw JSON document instead of tables (any value)")
+        .parse(args)
+        .map_err(|e| anyhow!(e))?;
+    let addr = p.get("addr").unwrap();
+    let token = p.get("site-token").unwrap();
+    let timeout = Duration::from_secs_f64(p.get_f64("timeout").map_err(|e| anyhow!(e))?.max(0.1));
+    let watch = match p.get("watch") {
+        Some(_) => Some(Duration::from_secs_f64(
+            p.get_f64("watch").map_err(|e| anyhow!(e))?.max(0.2),
+        )),
+        None => None,
+    };
+    let raw = p.get("json").is_some();
+    loop {
+        let doc = fedflare::obs::status::query(
+            addr,
+            fedflare::obs::status::PROBE_SITE,
+            token,
+            timeout,
+        )?;
+        if raw {
+            println!("{}", doc.to_string());
+        } else {
+            render_status(&doc);
+        }
+        match watch {
+            Some(every) => std::thread::sleep(every),
+            None => return Ok(()),
+        }
+    }
+}
+
+/// Render the status document: jobs (live round index from the
+/// `job.round{job=...}` gauge), sites (gather state from in-flight
+/// `gather.site` spans), and per-shard reactor load.
+fn render_status(doc: &Json) {
+    let metrics = doc.get("metrics");
+    if let Some(jobs) = doc.get("jobs").as_obj() {
+        let mut t = fedflare::metrics::Table::new(&["job", "name", "status", "round"]);
+        for (id, j) in jobs {
+            let name = j.get("name").as_str().unwrap_or("?");
+            let round = metrics
+                .get("gauges")
+                .get(&format!("job.round{{job={name}}}"))
+                .get("cur")
+                .as_f64();
+            t.row(vec![
+                id.clone(),
+                name.to_string(),
+                j.get("status").as_str().unwrap_or("?").to_string(),
+                round.map(|r| format!("{r}")).unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        println!("jobs:");
+        t.print();
+    }
+    if let Some(sites) = doc.get("sites").as_obj() {
+        let gathering: std::collections::HashSet<&str> = doc
+            .get("active_spans")
+            .as_arr()
+            .unwrap_or(&[])
+            .iter()
+            .filter(|s| s.get("name").as_str() == Some("gather.site"))
+            .filter_map(|s| s.get("site").as_str())
+            .collect();
+        let mut t = fedflare::metrics::Table::new(&["site", "state", "gather"]);
+        for (name, state) in sites {
+            let gather = if gathering.contains(name.as_str()) {
+                "receiving"
+            } else {
+                "idle"
+            };
+            t.row(vec![
+                name.clone(),
+                state.as_str().unwrap_or("?").to_string(),
+                gather.to_string(),
+            ]);
+        }
+        println!("sites:");
+        t.print();
+    }
+    if let Some(shards) = doc.get("shards").as_arr() {
+        let mut t = fedflare::metrics::Table::new(&[
+            "shard",
+            "conns",
+            "queue",
+            "frames_in",
+            "bytes_in",
+            "saturation",
+        ]);
+        for s in shards {
+            t.row(vec![
+                status_cell(s.get("shard")),
+                status_cell(s.get("conns")),
+                status_cell(s.get("queue_depth")),
+                status_cell(s.get("frames_in")),
+                status_cell(s.get("bytes_in")),
+                s.get("saturation")
+                    .as_f64()
+                    .map(|x| format!("{x:.3}"))
+                    .unwrap_or_else(|| "-".into()),
+            ]);
+        }
+        println!("reactor shards:");
+        t.print();
+    }
+    let spans = doc
+        .get("active_spans")
+        .as_arr()
+        .map(|a| a.len())
+        .unwrap_or(0);
+    println!("in-flight spans: {spans}");
+}
+
+fn status_cell(j: &Json) -> String {
+    j.as_f64()
+        .map(|x| format!("{x}"))
+        .unwrap_or_else(|| "-".into())
 }
 
 fn cmd_list(args: &[String]) -> Result<()> {

@@ -5,6 +5,7 @@
 use std::fs::File;
 use std::io::{BufWriter, Write};
 use std::path::{Path, PathBuf};
+use std::sync::{Arc, Mutex};
 use std::time::Instant;
 
 use anyhow::{Context, Result};
@@ -12,8 +13,18 @@ use anyhow::{Context, Result};
 use crate::util::json::Json;
 
 /// Append-only JSONL event sink + CSV writer rooted at a results dir.
+///
+/// Cloning shares the underlying writer (one JSONL stream, many
+/// emitters — the round loop and the periodic exporter both write).
+/// Events are buffered; they hit disk on [`MetricsSink::flush`], on the
+/// exporter's cadence, or when the last clone drops — not per event.
+#[derive(Clone)]
 pub struct MetricsSink {
     dir: PathBuf,
+    inner: Arc<Mutex<SinkInner>>,
+}
+
+struct SinkInner {
     events: BufWriter<File>,
     t0: Instant,
 }
@@ -26,8 +37,10 @@ impl MetricsSink {
         let events = BufWriter::new(File::create(&path)?);
         Ok(MetricsSink {
             dir,
-            events,
-            t0: Instant::now(),
+            inner: Arc::new(Mutex::new(SinkInner {
+                events,
+                t0: Instant::now(),
+            })),
         })
     }
 
@@ -35,20 +48,27 @@ impl MetricsSink {
         &self.dir
     }
 
-    /// Log one event (timestamped since sink creation).
-    pub fn event(&mut self, kind: &str, fields: &[(&str, Json)]) {
+    /// Log one event (timestamped since sink creation). Buffered; see
+    /// [`MetricsSink::flush`].
+    pub fn event(&self, kind: &str, fields: &[(&str, Json)]) {
+        let mut inner = self.inner.lock().unwrap();
         let mut obj = std::collections::BTreeMap::new();
         obj.insert(
             "t_ms".to_string(),
-            Json::num(self.t0.elapsed().as_millis() as f64),
+            Json::num(inner.t0.elapsed().as_millis() as f64),
         );
         obj.insert("kind".to_string(), Json::str(kind));
         for (k, v) in fields {
             obj.insert(k.to_string(), v.clone());
         }
         let line = Json::Obj(obj).to_string();
-        let _ = writeln!(self.events, "{line}");
-        let _ = self.events.flush();
+        let _ = writeln!(inner.events, "{line}");
+    }
+
+    /// Flush buffered events to disk (the `BufWriter` also flushes when
+    /// the last clone drops).
+    pub fn flush(&self) {
+        let _ = self.inner.lock().unwrap().events.flush();
     }
 
     /// Write a CSV file into the results dir.
@@ -57,47 +77,6 @@ impl MetricsSink {
         write_csv(&path, header, rows)?;
         Ok(path)
     }
-}
-
-/// Log one `reactor_shard` event per reactor shard (connection count,
-/// queue depth, frame/byte throughput, loop saturation) plus a single
-/// `reactor_mem` event with the fleet-wide parked-byte and throttle-wait
-/// counters from [`crate::util::mem`]. Call it from a periodic timer or
-/// at round boundaries to chart data-plane load over a run.
-pub fn log_reactor_load(sink: &mut MetricsSink) {
-    for s in crate::sfm::reactor::global().shard_stats() {
-        sink.event(
-            "reactor_shard",
-            &[
-                ("shard", Json::num(s.shard as f64)),
-                ("conns", Json::num(s.conns as f64)),
-                ("tcp_conns", Json::num(s.tcp_conns as f64)),
-                ("queue_depth", Json::num(s.queue_depth as f64)),
-                ("timers", Json::num(s.timers as f64)),
-                ("intervals", Json::num(s.intervals as f64)),
-                ("frames_in", Json::num(s.frames_in as f64)),
-                ("bytes_in", Json::num(s.bytes_in as f64)),
-                ("saturation", Json::num(s.saturation())),
-            ],
-        );
-    }
-    sink.event(
-        "reactor_mem",
-        &[
-            (
-                "parked_bytes",
-                Json::num(crate::util::mem::parked_bytes() as f64),
-            ),
-            (
-                "parked_peak",
-                Json::num(crate::util::mem::parked_peak() as f64),
-            ),
-            (
-                "throttle_wait_ms",
-                Json::num(crate::util::mem::throttle_wait_ns() as f64 / 1e6),
-            ),
-        ],
-    );
 }
 
 /// Standalone CSV writer.
@@ -174,9 +153,10 @@ mod tests {
     fn sink_writes_events_and_csv() {
         let dir = std::env::temp_dir().join("fedflare_metrics_test");
         let _ = std::fs::remove_dir_all(&dir);
-        let mut sink = MetricsSink::create(&dir, "job1").unwrap();
+        let sink = MetricsSink::create(&dir, "job1").unwrap();
         sink.event("round", &[("round", Json::num(1.0)), ("loss", Json::num(0.5))]);
         sink.event("round", &[("round", Json::num(2.0))]);
+        sink.flush();
         let text = std::fs::read_to_string(dir.join("job1.events.jsonl")).unwrap();
         assert_eq!(text.lines().count(), 2);
         let first = Json::parse(text.lines().next().unwrap()).unwrap();
@@ -191,6 +171,26 @@ mod tests {
         .unwrap();
         let csv = std::fs::read_to_string(dir.join("series.csv")).unwrap();
         assert!(csv.starts_with("step,value\n1,0.5\n"));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn events_buffer_until_flush() {
+        let dir = std::env::temp_dir().join("fedflare_metrics_buffer_test");
+        let _ = std::fs::remove_dir_all(&dir);
+        let sink = MetricsSink::create(&dir, "job1").unwrap();
+        sink.event("tick", &[]);
+        let path = dir.join("job1.events.jsonl");
+        assert_eq!(
+            std::fs::read_to_string(&path).unwrap(),
+            "",
+            "small events must not hit disk until an explicit flush"
+        );
+        // a clone shares the same buffered stream
+        let clone = sink.clone();
+        clone.event("tock", &[]);
+        clone.flush();
+        assert_eq!(std::fs::read_to_string(&path).unwrap().lines().count(), 2);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -1,0 +1,135 @@
+//! Periodic exporter: a reactor interval that appends registry deltas
+//! and completed spans to a job's [`MetricsSink`] JSONL.
+//!
+//! Each tick emits one `metrics` event (delta-since-last counters and
+//! histogram increments plus current gauge levels, via
+//! [`super::registry::DeltaCursor`]) and one `span` event per span
+//! completed since the previous tick, then flushes the sink — so the
+//! buffered sink still hits disk on a bounded cadence. [`Exporter::stop`]
+//! (or drop) cancels the timer and runs one final export, so short jobs
+//! lose nothing even with a long interval.
+//!
+//! The cadence comes from `FEDFLARE_OBS_EXPORT_MS` (default 1000).
+
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use super::registry::DeltaCursor;
+use super::span::RingCursor;
+use crate::metrics::MetricsSink;
+use crate::util::json::Json;
+
+/// Default export period when `FEDFLARE_OBS_EXPORT_MS` is unset.
+pub const DEFAULT_EXPORT_MS: u64 = 1000;
+
+/// Export cadence from the environment.
+pub fn export_period() -> Duration {
+    let ms = std::env::var("FEDFLARE_OBS_EXPORT_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .filter(|ms| *ms > 0)
+        .unwrap_or(DEFAULT_EXPORT_MS);
+    Duration::from_millis(ms)
+}
+
+struct ExportState {
+    delta: DeltaCursor,
+    spans: RingCursor,
+}
+
+/// One export pass: registry delta + completed spans, then flush.
+fn export_once(state: &Mutex<ExportState>, sink: &MetricsSink) {
+    let (delta, spans) = {
+        let mut st = state.lock().unwrap();
+        (st.delta.delta(crate::obs::global()), st.spans.drain())
+    };
+    sink.event(
+        "metrics",
+        &[
+            ("counters", delta.get("counters").clone()),
+            ("gauges", delta.get("gauges").clone()),
+            ("histos", delta.get("histos").clone()),
+        ],
+    );
+    for rec in spans {
+        let mut fields = vec![
+            ("name", Json::str(rec.name)),
+            ("id", Json::num(rec.id as f64)),
+            ("parent", Json::num(rec.parent as f64)),
+            ("start_us", Json::num(rec.start_us as f64)),
+            ("dur_us", Json::num(rec.dur_us as f64)),
+        ];
+        if rec.job != 0 {
+            fields.push(("job", Json::num(rec.job as f64)));
+        }
+        if rec.round != 0 {
+            fields.push(("round", Json::num(rec.round as f64)));
+        }
+        if !rec.site.is_empty() {
+            fields.push(("site", Json::str(rec.site.as_str())));
+        }
+        sink.event("span", &fields);
+    }
+    sink.flush();
+}
+
+/// Handle to a running periodic exporter; stop (or drop) cancels the
+/// reactor timer and performs a final export.
+pub struct Exporter {
+    timer: crate::sfm::reactor::TimerId,
+    state: Arc<Mutex<ExportState>>,
+    sink: MetricsSink,
+    stopped: bool,
+}
+
+impl Exporter {
+    /// Start exporting to `sink` on the [`export_period`] cadence. Spans
+    /// completed before this call are not re-exported (the cursor starts
+    /// at the ring head).
+    pub fn start(sink: MetricsSink) -> Exporter {
+        Exporter::with_period(sink, export_period())
+    }
+
+    pub fn with_period(sink: MetricsSink, period: Duration) -> Exporter {
+        let state = Arc::new(Mutex::new(ExportState {
+            delta: DeltaCursor::new(),
+            spans: RingCursor::at_head(),
+        }));
+        let tick_state = state.clone();
+        let tick_sink = sink.clone();
+        let timer = crate::sfm::reactor::global().add_interval(
+            period,
+            Box::new(move || {
+                export_once(&tick_state, &tick_sink);
+                true
+            }),
+        );
+        Exporter {
+            timer,
+            state,
+            sink,
+            stopped: false,
+        }
+    }
+
+    /// Cancel the timer and export whatever accumulated since the last
+    /// tick.
+    pub fn stop(mut self) {
+        self.finish();
+    }
+
+    fn finish(&mut self) {
+        if self.stopped {
+            return;
+        }
+        self.stopped = true;
+        crate::sfm::reactor::global().cancel_interval(self.timer);
+        export_once(&self.state, &self.sink);
+    }
+}
+
+impl Drop for Exporter {
+    fn drop(&mut self) {
+        self.finish();
+    }
+}

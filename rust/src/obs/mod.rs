@@ -1,0 +1,65 @@
+//! Observability plane: one metrics surface, tracing spans, leveled
+//! logging, periodic export, and live status introspection.
+//!
+//! * [`registry`] — process-wide named [`Counter`]s / [`Gauge`]s /
+//!   log2-bucketed [`Histo`]grams with `&'static` handles and a stable
+//!   JSON [`Registry::snapshot`]. `util::mem` and the reactor's shard
+//!   stats are shims over this registry, so *everything* lands in one
+//!   document.
+//! * [`span`] — the flight recorder: `crate::span!("round", job: j)`
+//!   guards record start/duration/parent into a lock-free ring,
+//!   instrumented across the round lifecycle and control plane.
+//! * [`logging`] — `obs::log!(warn, "…")`, gated by `FEDFLARE_LOG`.
+//! * [`export`] — a reactor-timer [`Exporter`] appending registry deltas
+//!   and completed spans to a job's `MetricsSink` JSONL.
+//! * [`status`] — the `KIND_STATUS` control frame + provider hook behind
+//!   `fedflare status`.
+//!
+//! The free functions here ([`counter`], [`gauge`], [`histo`] and their
+//! `_with` label variants) are the everyday entry points; they hit the
+//! [`global`] registry.
+
+pub mod export;
+pub mod logging;
+pub mod registry;
+pub mod span;
+pub mod status;
+
+pub use export::Exporter;
+pub use registry::{global, Counter, DeltaCursor, Gauge, Histo, Registry};
+pub use span::{RingCursor, SpanBuilder, SpanGuard, SpanRec};
+
+// `obs::span!(…)` / `obs::log!(…)`: the macros live at the crate root
+// (macro_export); these aliases give them their natural paths.
+pub use crate::obs_log as log;
+pub use crate::span;
+
+/// Global named counter (interned on first use).
+pub fn counter(name: &str) -> &'static Counter {
+    global().counter(name)
+}
+
+/// Global labeled counter: `counter_with("reactor.frames_in", &[("shard", "0")])`.
+pub fn counter_with(name: &str, labels: &[(&str, &str)]) -> &'static Counter {
+    global().counter_with(name, labels)
+}
+
+/// Global named gauge.
+pub fn gauge(name: &str) -> &'static Gauge {
+    global().gauge(name)
+}
+
+/// Global labeled gauge.
+pub fn gauge_with(name: &str, labels: &[(&str, &str)]) -> &'static Gauge {
+    global().gauge_with(name, labels)
+}
+
+/// Global named histogram.
+pub fn histo(name: &str) -> &'static Histo {
+    global().histo(name)
+}
+
+/// Global labeled histogram.
+pub fn histo_with(name: &str, labels: &[(&str, &str)]) -> &'static Histo {
+    global().histo_with(name, labels)
+}

@@ -1,0 +1,483 @@
+//! Process-wide metrics registry: named counters, gauges, and
+//! log2-bucketed histograms with cheap atomic hot paths.
+//!
+//! Handles are `&'static` — interning a name leaks one small allocation
+//! per distinct metric (bounded by name/label cardinality), so the hot
+//! path after the first lookup is a single relaxed atomic op with no
+//! locks. Labeled families bake their labels into the key
+//! (`name{k=v,...}`), which keeps lookup and snapshotting uniform.
+//!
+//! [`Registry::snapshot`] renders the whole surface as one stable
+//! [`Json`] document (BTreeMap ordering), and [`DeltaCursor`] turns
+//! successive snapshots into deltas so periodic emitters chart rates
+//! instead of lifetime totals.
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
+use std::sync::{OnceLock, RwLock};
+
+use crate::util::json::Json;
+
+/// Monotonic event counter.
+#[derive(Debug, Default)]
+pub struct Counter {
+    v: AtomicU64,
+}
+
+impl Counter {
+    pub const fn new() -> Counter {
+        Counter {
+            v: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn inc(&self) {
+        self.v.fetch_add(1, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        self.v.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.v.load(Ordering::Relaxed)
+    }
+}
+
+/// Up/down level with a high-water mark (the `util::mem`
+/// current+peak idiom: `add` raises the peak, `reset_peak` stores the
+/// current level back into it).
+#[derive(Debug, Default)]
+pub struct Gauge {
+    cur: AtomicI64,
+    peak: AtomicU64,
+}
+
+impl Gauge {
+    pub const fn new() -> Gauge {
+        Gauge {
+            cur: AtomicI64::new(0),
+            peak: AtomicU64::new(0),
+        }
+    }
+
+    #[inline]
+    pub fn add(&self, n: u64) {
+        let cur = self.cur.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
+        self.peak.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+    }
+
+    #[inline]
+    pub fn sub(&self, n: u64) {
+        self.cur.fetch_sub(n as i64, Ordering::Relaxed);
+    }
+
+    /// Set the level outright (e.g. `job.round`); raises the peak.
+    pub fn set(&self, v: i64) {
+        self.cur.store(v, Ordering::Relaxed);
+        self.peak.fetch_max(v.max(0) as u64, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> i64 {
+        self.cur.load(Ordering::Relaxed)
+    }
+
+    pub fn peak(&self) -> u64 {
+        self.peak.load(Ordering::Relaxed)
+    }
+
+    pub fn reset_peak(&self) {
+        self.peak
+            .store(self.get().max(0) as u64, Ordering::Relaxed);
+    }
+}
+
+/// Number of log2 buckets: bucket `b` counts samples whose bit length is
+/// `b` (i.e. `v` in `[2^(b-1), 2^b)`; bucket 0 counts `v == 0`).
+pub const HISTO_BUCKETS: usize = 64;
+
+/// Log2-bucketed histogram (count, sum, 64 buckets); `observe` is three
+/// relaxed atomic adds.
+#[derive(Debug)]
+pub struct Histo {
+    count: AtomicU64,
+    sum: AtomicU64,
+    buckets: [AtomicU64; HISTO_BUCKETS],
+}
+
+impl Default for Histo {
+    fn default() -> Histo {
+        Histo::new()
+    }
+}
+
+impl Histo {
+    pub fn new() -> Histo {
+        Histo {
+            count: AtomicU64::new(0),
+            sum: AtomicU64::new(0),
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        }
+    }
+
+    #[inline]
+    pub fn observe(&self, v: u64) {
+        self.count.fetch_add(1, Ordering::Relaxed);
+        self.sum.fetch_add(v, Ordering::Relaxed);
+        let b = (u64::BITS - v.leading_zeros()) as usize;
+        self.buckets[b.min(HISTO_BUCKETS - 1)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn sum(&self) -> u64 {
+        self.sum.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> f64 {
+        let n = self.count();
+        if n == 0 {
+            0.0
+        } else {
+            self.sum() as f64 / n as f64
+        }
+    }
+
+    /// Non-empty buckets as `(bit_length, count)` pairs, ascending.
+    pub fn buckets(&self) -> Vec<(usize, u64)> {
+        self.buckets
+            .iter()
+            .enumerate()
+            .filter_map(|(b, c)| {
+                let c = c.load(Ordering::Relaxed);
+                (c > 0).then_some((b, c))
+            })
+            .collect()
+    }
+}
+
+/// Named metric store. Most code uses the process-wide [`global`]
+/// registry through the free functions in [`crate::obs`]; tests build
+/// their own for deterministic snapshots.
+#[derive(Default)]
+pub struct Registry {
+    counters: RwLock<BTreeMap<String, &'static Counter>>,
+    gauges: RwLock<BTreeMap<String, &'static Gauge>>,
+    histos: RwLock<BTreeMap<String, &'static Histo>>,
+}
+
+/// Render `name{k=v,...}` (or just `name` with no labels).
+pub fn keyed(name: &str, labels: &[(&str, &str)]) -> String {
+    if labels.is_empty() {
+        return name.to_string();
+    }
+    let mut key = String::with_capacity(name.len() + 16);
+    key.push_str(name);
+    key.push('{');
+    for (i, (k, v)) in labels.iter().enumerate() {
+        if i > 0 {
+            key.push(',');
+        }
+        key.push_str(k);
+        key.push('=');
+        key.push_str(v);
+    }
+    key.push('}');
+    key
+}
+
+fn intern<T: Default>(map: &RwLock<BTreeMap<String, &'static T>>, key: &str) -> &'static T {
+    if let Some(h) = map.read().unwrap().get(key) {
+        return h;
+    }
+    let mut w = map.write().unwrap();
+    w.entry(key.to_string())
+        .or_insert_with(|| Box::leak(Box::new(T::default())))
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    pub fn counter(&self, name: &str) -> &'static Counter {
+        intern(&self.counters, name)
+    }
+
+    pub fn counter_with(&self, name: &str, labels: &[(&str, &str)]) -> &'static Counter {
+        intern(&self.counters, &keyed(name, labels))
+    }
+
+    pub fn gauge(&self, name: &str) -> &'static Gauge {
+        intern(&self.gauges, name)
+    }
+
+    pub fn gauge_with(&self, name: &str, labels: &[(&str, &str)]) -> &'static Gauge {
+        intern(&self.gauges, &keyed(name, labels))
+    }
+
+    pub fn histo(&self, name: &str) -> &'static Histo {
+        intern(&self.histos, name)
+    }
+
+    pub fn histo_with(&self, name: &str, labels: &[(&str, &str)]) -> &'static Histo {
+        intern(&self.histos, &keyed(name, labels))
+    }
+
+    /// Full snapshot as a stable JSON document:
+    ///
+    /// ```json
+    /// {"counters": {"name": total, ...},
+    ///  "gauges":   {"name": {"cur": level, "peak": hwm}, ...},
+    ///  "histos":   {"name": {"count": n, "sum": s,
+    ///                        "buckets": [[bit_len, count], ...]}, ...}}
+    /// ```
+    pub fn snapshot(&self) -> Json {
+        let counters: BTreeMap<String, Json> = self
+            .counters
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, c)| (k.clone(), Json::num(c.get() as f64)))
+            .collect();
+        let gauges: BTreeMap<String, Json> = self
+            .gauges
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, g)| {
+                (
+                    k.clone(),
+                    Json::obj([
+                        ("cur", Json::num(g.get() as f64)),
+                        ("peak", Json::num(g.peak() as f64)),
+                    ]),
+                )
+            })
+            .collect();
+        let histos: BTreeMap<String, Json> = self
+            .histos
+            .read()
+            .unwrap()
+            .iter()
+            .map(|(k, h)| {
+                let buckets = Json::arr(h.buckets().into_iter().map(|(b, c)| {
+                    Json::arr([Json::num(b as f64), Json::num(c as f64)])
+                }));
+                (
+                    k.clone(),
+                    Json::obj([
+                        ("count", Json::num(h.count() as f64)),
+                        ("sum", Json::num(h.sum() as f64)),
+                        ("buckets", buckets),
+                    ]),
+                )
+            })
+            .collect();
+        Json::obj([
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histos", Json::Obj(histos)),
+        ])
+    }
+}
+
+/// Rate view over a registry: each [`DeltaCursor::delta`] call reports
+/// what moved since the previous call — counter increments and histogram
+/// count/sum increments (zero-delta entries omitted), plus current gauge
+/// levels (gauges are point-in-time, not rates).
+#[derive(Default)]
+pub struct DeltaCursor {
+    counters: BTreeMap<String, u64>,
+    histos: BTreeMap<String, (u64, u64)>,
+}
+
+impl DeltaCursor {
+    pub fn new() -> DeltaCursor {
+        DeltaCursor::default()
+    }
+
+    pub fn delta(&mut self, reg: &Registry) -> Json {
+        let mut counters = BTreeMap::new();
+        for (k, c) in reg.counters.read().unwrap().iter() {
+            let now = c.get();
+            let prev = self.counters.insert(k.clone(), now).unwrap_or(0);
+            if now > prev {
+                counters.insert(k.clone(), Json::num((now - prev) as f64));
+            }
+        }
+        let mut gauges = BTreeMap::new();
+        for (k, g) in reg.gauges.read().unwrap().iter() {
+            gauges.insert(
+                k.clone(),
+                Json::obj([
+                    ("cur", Json::num(g.get() as f64)),
+                    ("peak", Json::num(g.peak() as f64)),
+                ]),
+            );
+        }
+        let mut histos = BTreeMap::new();
+        for (k, h) in reg.histos.read().unwrap().iter() {
+            let now = (h.count(), h.sum());
+            let prev = self.histos.insert(k.clone(), now).unwrap_or((0, 0));
+            if now.0 > prev.0 {
+                histos.insert(
+                    k.clone(),
+                    Json::obj([
+                        ("count", Json::num((now.0 - prev.0) as f64)),
+                        ("sum", Json::num(now.1.saturating_sub(prev.1) as f64)),
+                    ]),
+                );
+            }
+        }
+        Json::obj([
+            ("counters", Json::Obj(counters)),
+            ("gauges", Json::Obj(gauges)),
+            ("histos", Json::Obj(histos)),
+        ])
+    }
+}
+
+/// The process-wide registry.
+pub fn global() -> &'static Registry {
+    static GLOBAL: OnceLock<Registry> = OnceLock::new();
+    GLOBAL.get_or_init(Registry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counter_and_gauge_basics() {
+        let r = Registry::new();
+        let c = r.counter("t.counter");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name -> same handle
+        r.counter("t.counter").inc();
+        assert_eq!(c.get(), 6);
+
+        let g = r.gauge("t.gauge");
+        g.add(100);
+        g.sub(30);
+        assert_eq!(g.get(), 70);
+        assert_eq!(g.peak(), 100);
+        g.reset_peak();
+        assert_eq!(g.peak(), 70);
+        g.set(5);
+        assert_eq!(g.get(), 5);
+        assert_eq!(g.peak(), 70, "set below peak leaves the hwm");
+    }
+
+    #[test]
+    fn labeled_families_get_distinct_keys() {
+        let r = Registry::new();
+        r.counter_with("t.fam", &[("shard", "0")]).add(1);
+        r.counter_with("t.fam", &[("shard", "1")]).add(2);
+        let snap = r.snapshot();
+        assert_eq!(
+            snap.get("counters").get("t.fam{shard=0}").as_f64(),
+            Some(1.0)
+        );
+        assert_eq!(
+            snap.get("counters").get("t.fam{shard=1}").as_f64(),
+            Some(2.0)
+        );
+    }
+
+    #[test]
+    fn histo_buckets_by_bit_length() {
+        let r = Registry::new();
+        let h = r.histo("t.ms");
+        h.observe(0); // bucket 0
+        h.observe(1); // bucket 1
+        h.observe(3); // bucket 2
+        h.observe(1024); // bucket 11
+        assert_eq!(h.count(), 4);
+        assert_eq!(h.sum(), 1028);
+        assert_eq!(h.buckets(), vec![(0, 1), (1, 1), (2, 1), (11, 1)]);
+    }
+
+    #[test]
+    fn concurrent_updates_snapshot_consistently() {
+        let r: &'static Registry = Box::leak(Box::new(Registry::new()));
+        let threads = 8;
+        let per = 10_000u64;
+        let handles: Vec<_> = (0..threads)
+            .map(|_| {
+                // threadlint-allow: test-only concurrency probe
+                std::thread::spawn(move || {
+                    let c = r.counter("t.conc");
+                    let h = r.histo("t.conc_ms");
+                    for i in 0..per {
+                        c.inc();
+                        h.observe(i % 257);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let snap = r.snapshot();
+        let total = (threads as u64) * per;
+        assert_eq!(
+            snap.get("counters").get("t.conc").as_f64(),
+            Some(total as f64)
+        );
+        let histo = snap.get("histos").get("t.conc_ms");
+        assert_eq!(histo.get("count").as_f64(), Some(total as f64));
+        let bucket_sum: f64 = histo
+            .get("buckets")
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|p| p.as_arr().unwrap()[1].as_f64().unwrap())
+            .sum();
+        assert_eq!(bucket_sum, total as f64);
+    }
+
+    #[test]
+    fn snapshot_schema_is_stable() {
+        // golden fixture: schema changes must be deliberate
+        let r = Registry::new();
+        r.counter("a.count").add(3);
+        let g = r.gauge("b.level");
+        g.add(10);
+        g.sub(4);
+        r.histo("c.ms").observe(5);
+        r.histo("c.ms").observe(6);
+        assert_eq!(
+            r.snapshot().to_string(),
+            "{\"counters\":{\"a.count\":3},\
+             \"gauges\":{\"b.level\":{\"cur\":6,\"peak\":10}},\
+             \"histos\":{\"c.ms\":{\"buckets\":[[3,2]],\"count\":2,\"sum\":11}}}"
+        );
+    }
+
+    #[test]
+    fn delta_cursor_reports_rates_not_totals() {
+        let r = Registry::new();
+        let c = r.counter("d.count");
+        let h = r.histo("d.ms");
+        c.add(10);
+        h.observe(100);
+        let mut cur = DeltaCursor::new();
+        let first = cur.delta(&r);
+        assert_eq!(first.get("counters").get("d.count").as_f64(), Some(10.0));
+        assert_eq!(first.get("histos").get("d.ms").get("sum").as_f64(), Some(100.0));
+        // nothing moved: delta omits the entries entirely
+        let idle = cur.delta(&r);
+        assert!(idle.get("counters").get("d.count").is_null());
+        assert!(idle.get("histos").get("d.ms").is_null());
+        c.add(2);
+        let third = cur.delta(&r);
+        assert_eq!(third.get("counters").get("d.count").as_f64(), Some(2.0));
+    }
+}

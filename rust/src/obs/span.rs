@@ -1,0 +1,472 @@
+//! Tracing spans and the flight recorder.
+//!
+//! A span measures one phase of work (`round`, `gather`, `train`, …) with
+//! a start/duration and a parent link, so a slow round decomposes into
+//! *which phase, which site*. Open a span with [`crate::span!`]; dropping
+//! the returned [`SpanGuard`] closes it and writes one [`SpanRec`] into a
+//! fixed-size lock-free ring buffer — the *flight recorder* — that the
+//! periodic exporter drains into the job's JSONL and that `fedflare
+//! status` reads for recent history. In-flight spans are additionally
+//! tracked in a small table so a live snapshot can show what the process
+//! is doing *right now*.
+//!
+//! Parentage: each thread keeps a stack of open spans, so a span started
+//! while another is open on the same thread becomes its child. Work that
+//! hops threads (gather folds on client-io workers, job threads) passes
+//! the parent id explicitly: `span!("gather.site", parent: gid)`.
+//!
+//! The ring is a seqlock per slot: writers claim a slot with one
+//! `fetch_add` and stamp it invalid while writing; readers copy and
+//! re-validate the stamp, dropping any record they observed mid-write or
+//! that was overwritten under them. Nothing blocks and nothing tears.
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::util::json::Json;
+
+/// Slots in the flight-recorder ring (completed spans kept for export /
+/// status before being overwritten).
+pub const RING_SLOTS: usize = 4096;
+
+/// Inline site/peer label — fixed size so [`SpanRec`] stays `Copy` and
+/// ring writes are a plain memcpy. Longer names are truncated.
+#[derive(Clone, Copy)]
+pub struct Label {
+    buf: [u8; 24],
+    len: u8,
+}
+
+impl Label {
+    pub const EMPTY: Label = Label {
+        buf: [0; 24],
+        len: 0,
+    };
+
+    pub fn new(s: &str) -> Label {
+        let mut buf = [0u8; 24];
+        // truncate on a char boundary so as_str stays valid UTF-8
+        let mut n = s.len().min(24);
+        while n > 0 && !s.is_char_boundary(n) {
+            n -= 1;
+        }
+        buf[..n].copy_from_slice(&s.as_bytes()[..n]);
+        Label { buf, len: n as u8 }
+    }
+
+    pub fn as_str(&self) -> &str {
+        std::str::from_utf8(&self.buf[..self.len as usize]).unwrap_or("")
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl std::fmt::Debug for Label {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        self.as_str().fmt(f)
+    }
+}
+
+/// One completed span.
+#[derive(Clone, Copy, Debug)]
+pub struct SpanRec {
+    /// Non-zero, process-unique.
+    pub id: u64,
+    /// Parent span id, 0 for roots.
+    pub parent: u64,
+    pub name: &'static str,
+    /// FL job id (0 = none / control plane).
+    pub job: u32,
+    /// FL round (0 = none).
+    pub round: u32,
+    /// Site / peer label (empty = none).
+    pub site: Label,
+    /// Start, µs since the recorder epoch (process start).
+    pub start_us: u64,
+    pub dur_us: u64,
+}
+
+impl SpanRec {
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("name", Json::str(self.name)),
+            ("id", Json::num(self.id as f64)),
+            ("parent", Json::num(self.parent as f64)),
+            ("start_us", Json::num(self.start_us as f64)),
+            ("dur_us", Json::num(self.dur_us as f64)),
+        ];
+        if self.job != 0 {
+            pairs.push(("job", Json::num(self.job as f64)));
+        }
+        if self.round != 0 {
+            pairs.push(("round", Json::num(self.round as f64)));
+        }
+        if !self.site.is_empty() {
+            pairs.push(("site", Json::str(self.site.as_str())));
+        }
+        Json::obj(pairs)
+    }
+}
+
+const EMPTY_REC: SpanRec = SpanRec {
+    id: 0,
+    parent: 0,
+    name: "",
+    job: 0,
+    round: 0,
+    site: Label::EMPTY,
+    start_us: 0,
+    dur_us: 0,
+};
+
+/// Stamp value while a writer owns the slot.
+const WRITING: u64 = u64::MAX;
+
+struct Slot {
+    /// `claim_index + 1` once the record is stable, [`WRITING`] while a
+    /// writer is inside, 0 when never written.
+    stamp: AtomicU64,
+    rec: std::cell::UnsafeCell<SpanRec>,
+}
+
+/// The seqlock protocol makes cross-thread access to `rec` safe: readers
+/// only trust a copy whose stamp was identical (and not `WRITING`) before
+/// and after the memcpy.
+unsafe impl Sync for Slot {}
+
+struct Ring {
+    slots: Vec<Slot>,
+    /// Next claim index (monotonic; slot = index % RING_SLOTS).
+    head: AtomicU64,
+}
+
+impl Ring {
+    fn push(&self, rec: SpanRec) {
+        let idx = self.head.fetch_add(1, Ordering::Relaxed);
+        let slot = &self.slots[(idx as usize) % RING_SLOTS];
+        slot.stamp.store(WRITING, Ordering::Release);
+        // safety: seqlock — readers discard records whose stamp changed
+        // around their copy. Two writers in one slot requires RING_SLOTS
+        // concurrent unfinished pushes; the stamp still keeps readers
+        // from trusting such a record.
+        unsafe { *slot.rec.get() = rec };
+        slot.stamp.store(idx + 1, Ordering::Release);
+    }
+
+    /// Copy stable records in `[from, head)`; returns them with the new
+    /// cursor position. Records older than one ring lap are gone.
+    fn drain(&self, from: u64) -> (Vec<SpanRec>, u64) {
+        let head = self.head.load(Ordering::Acquire);
+        let start = from.max(head.saturating_sub(RING_SLOTS as u64));
+        let mut out = Vec::with_capacity((head - start) as usize);
+        for idx in start..head {
+            let slot = &self.slots[(idx as usize) % RING_SLOTS];
+            let before = slot.stamp.load(Ordering::Acquire);
+            if before != idx + 1 {
+                continue; // overwritten by a lap, or mid-write
+            }
+            let rec = unsafe { *slot.rec.get() };
+            if slot.stamp.load(Ordering::Acquire) == before {
+                out.push(rec);
+            }
+        }
+        (out, head)
+    }
+}
+
+fn ring() -> &'static Ring {
+    static RING: OnceLock<Ring> = OnceLock::new();
+    RING.get_or_init(|| Ring {
+        slots: (0..RING_SLOTS)
+            .map(|_| Slot {
+                stamp: AtomicU64::new(0),
+                rec: std::cell::UnsafeCell::new(EMPTY_REC),
+            })
+            .collect(),
+        head: AtomicU64::new(0),
+    })
+}
+
+/// Reader position in the flight recorder (one per consumer; the
+/// exporter owns one, tests own their own).
+#[derive(Default)]
+pub struct RingCursor {
+    pos: u64,
+}
+
+impl RingCursor {
+    pub fn new() -> RingCursor {
+        RingCursor::default()
+    }
+
+    /// Start at the current head: only spans completed after this call.
+    pub fn at_head() -> RingCursor {
+        RingCursor {
+            pos: ring().head.load(Ordering::Acquire),
+        }
+    }
+
+    /// Completed spans since the last drain.
+    pub fn drain(&mut self) -> Vec<SpanRec> {
+        let (recs, pos) = ring().drain(self.pos);
+        self.pos = pos;
+        recs
+    }
+}
+
+/// Spans completed over the whole recorder lifetime (monotonic).
+pub fn completed_total() -> u64 {
+    ring().head.load(Ordering::Relaxed)
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_us() -> u64 {
+    epoch().elapsed().as_micros() as u64
+}
+
+fn active() -> &'static Mutex<HashMap<u64, SpanRec>> {
+    static ACTIVE: OnceLock<Mutex<HashMap<u64, SpanRec>>> = OnceLock::new();
+    ACTIVE.get_or_init(|| Mutex::new(HashMap::new()))
+}
+
+thread_local! {
+    static STACK: RefCell<Vec<u64>> = const { RefCell::new(Vec::new()) };
+}
+
+/// In-flight spans right now (id order), as partial [`SpanRec`]s with
+/// `dur_us` = elapsed so far.
+pub fn active_spans() -> Vec<SpanRec> {
+    let now = now_us();
+    let mut spans: Vec<SpanRec> = active()
+        .lock()
+        .unwrap()
+        .values()
+        .map(|r| {
+            let mut r = *r;
+            r.dur_us = now.saturating_sub(r.start_us);
+            r
+        })
+        .collect();
+    spans.sort_by_key(|r| r.id);
+    spans
+}
+
+/// Builder for one span; see [`crate::span!`] for the usual entry point.
+pub struct SpanBuilder {
+    rec: SpanRec,
+    explicit_parent: bool,
+}
+
+impl SpanBuilder {
+    pub fn new(name: &'static str) -> SpanBuilder {
+        SpanBuilder {
+            rec: SpanRec {
+                name,
+                ..EMPTY_REC
+            },
+            explicit_parent: false,
+        }
+    }
+
+    pub fn job(mut self, job: u32) -> SpanBuilder {
+        self.rec.job = job;
+        self
+    }
+
+    pub fn round(mut self, round: u32) -> SpanBuilder {
+        self.rec.round = round;
+        self
+    }
+
+    pub fn site(mut self, site: &str) -> SpanBuilder {
+        self.rec.site = Label::new(site);
+        self
+    }
+
+    /// Explicit parent id for work that hops threads (0 = root).
+    pub fn parent(mut self, parent: u64) -> SpanBuilder {
+        self.rec.parent = parent;
+        self.explicit_parent = true;
+        self
+    }
+
+    pub fn start(mut self) -> SpanGuard {
+        static NEXT_ID: AtomicU64 = AtomicU64::new(1);
+        self.rec.id = NEXT_ID.fetch_add(1, Ordering::Relaxed);
+        if !self.explicit_parent {
+            self.rec.parent = STACK.with(|s| s.borrow().last().copied().unwrap_or(0));
+        }
+        self.rec.start_us = now_us();
+        active().lock().unwrap().insert(self.rec.id, self.rec);
+        STACK.with(|s| s.borrow_mut().push(self.rec.id));
+        SpanGuard {
+            rec: self.rec,
+            start: Instant::now(),
+        }
+    }
+}
+
+/// Open span; dropping it records the completed [`SpanRec`].
+pub struct SpanGuard {
+    rec: SpanRec,
+    start: Instant,
+}
+
+impl SpanGuard {
+    /// This span's id, for parenting cross-thread children.
+    pub fn id(&self) -> u64 {
+        self.rec.id
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        self.rec.dur_us = self.start.elapsed().as_micros() as u64;
+        active().lock().unwrap().remove(&self.rec.id);
+        // the guard may be dropped on another thread than it was started
+        // on (moved into a worker); only pop our own stack entry
+        STACK.with(|s| {
+            let mut s = s.borrow_mut();
+            if s.last() == Some(&self.rec.id) {
+                s.pop();
+            } else if let Some(pos) = s.iter().rposition(|id| *id == self.rec.id) {
+                s.remove(pos);
+            }
+        });
+        ring().push(self.rec);
+    }
+}
+
+/// Open a span: `span!("round", job: jid, round: r)`. Attributes are
+/// optional builder calls ([`SpanBuilder::job`], `round`, `site`,
+/// `parent`). Returns a [`SpanGuard`]; the span closes when it drops.
+#[macro_export]
+macro_rules! span {
+    ($name:expr $(, $k:ident : $v:expr)* $(,)?) => {{
+        #[allow(unused_mut)]
+        let builder = $crate::obs::span::SpanBuilder::new($name);
+        $(let builder = builder.$k($v);)*
+        builder.start()
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nesting_links_parents_on_one_thread() {
+        let mut cur = RingCursor::at_head();
+        let outer_id;
+        {
+            let outer = crate::span!("t.outer", job: 7);
+            outer_id = outer.id();
+            {
+                let _inner = crate::span!("t.inner", round: 3);
+            }
+        }
+        let recs = cur.drain();
+        let inner = recs.iter().find(|r| r.name == "t.inner").unwrap();
+        let outer = recs.iter().find(|r| r.name == "t.outer").unwrap();
+        assert_eq!(inner.parent, outer_id);
+        assert_eq!(inner.round, 3);
+        assert_eq!(outer.id, outer_id);
+        assert_eq!(outer.job, 7);
+        assert_eq!(outer.parent, 0);
+        assert!(outer.dur_us >= inner.dur_us);
+    }
+
+    #[test]
+    fn explicit_parent_crosses_threads() {
+        let mut cur = RingCursor::at_head();
+        let outer = crate::span!("t.x_outer");
+        let pid = outer.id();
+        // threadlint-allow: test-only cross-thread parent check
+        std::thread::spawn(move || {
+            let _child = crate::span!("t.x_child", parent: pid, site: "site-9");
+        })
+        .join()
+        .unwrap();
+        drop(outer);
+        let recs = cur.drain();
+        let child = recs.iter().find(|r| r.name == "t.x_child").unwrap();
+        assert_eq!(child.parent, pid);
+        assert_eq!(child.site.as_str(), "site-9");
+    }
+
+    #[test]
+    fn active_table_shows_in_flight_spans() {
+        let g = crate::span!("t.active_probe", job: 42);
+        let act = active_spans();
+        let me = act.iter().find(|r| r.id == g.id()).unwrap();
+        assert_eq!(me.name, "t.active_probe");
+        assert_eq!(me.job, 42);
+        drop(g);
+        assert!(!active_spans().iter().any(|r| r.name == "t.active_probe"));
+    }
+
+    #[test]
+    fn ring_wraps_without_tearing() {
+        // overrun the ring from several threads, then check every drained
+        // record is internally consistent (id encodes its own payload)
+        let mut cur = RingCursor::at_head();
+        let threads = 4;
+        let per = RING_SLOTS; // 4 laps total
+        let handles: Vec<_> = (0..threads)
+            .map(|t| {
+                // threadlint-allow: test-only ring stress
+                std::thread::spawn(move || {
+                    for i in 0..per {
+                        let g = SpanBuilder::new("t.wrap")
+                            .job(t as u32)
+                            .round(i as u32)
+                            .parent(0)
+                            .start();
+                        drop(g);
+                    }
+                })
+            })
+            .collect();
+        for h in handles {
+            h.join().unwrap();
+        }
+        let recs: Vec<SpanRec> = cur
+            .drain()
+            .into_iter()
+            .filter(|r| r.name == "t.wrap")
+            .collect();
+        // at most one ring of survivors, and every survivor is untorn:
+        // a torn record would pair one writer's job with another's round
+        // only if two writers hit one slot, which the stamp detects
+        assert!(recs.len() <= RING_SLOTS);
+        assert!(recs.len() >= RING_SLOTS / 2, "drained {}", recs.len());
+        for r in &recs {
+            assert!((r.job as usize) < threads);
+            assert!((r.round as usize) < per);
+            assert_eq!(r.parent, 0);
+        }
+        // ids are unique — a duplicate would mean a stamp let a stale
+        // copy through alongside its overwriter
+        let mut ids: Vec<u64> = recs.iter().map(|r| r.id).collect();
+        ids.sort_unstable();
+        ids.dedup();
+        assert_eq!(ids.len(), recs.len());
+    }
+
+    #[test]
+    fn label_truncates_on_char_boundary() {
+        let l = Label::new("sité-with-a-very-long-name-indeed");
+        assert!(l.as_str().len() <= 24);
+        assert!(l.as_str().starts_with("sité"));
+        assert_eq!(Label::new("short").as_str(), "short");
+    }
+}

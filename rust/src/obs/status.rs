@@ -1,0 +1,174 @@
+//! Live introspection: the `KIND_STATUS` control frame and the status
+//! document behind `fedflare status`.
+//!
+//! A status *request* is an empty-payload [`crate::sfm::KIND_STATUS`]
+//! frame on job 0; the *reply* carries [`current`] serialized as JSON in
+//! the same frame shape. Requests are answered in two places: the mux
+//! intercepts them on any admitted fleet connection (its priority lane,
+//! like heartbeats), and [`StatusSink`] serves dedicated status probes
+//! admitted by an [`crate::sfm::accept::AuthAcceptor`].
+//!
+//! The base document always carries the registry snapshot, in-flight
+//! spans, and per-shard reactor load; the serving layer registers a
+//! *provider* ([`set_provider`]) that merges scheduler-level fields
+//! (jobs, rounds, sites) into it.
+
+use std::net::TcpStream;
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::sfm::reactor::{FrameSink, SinkStatus};
+use crate::sfm::tcp::TcpDriver;
+use crate::sfm::{Driver, Frame, SfmError, FLAG_FIRST, FLAG_LAST, KIND_AUTH, KIND_STATUS};
+use crate::util::bytes::Writer;
+use crate::util::json::Json;
+
+/// The reserved identity a status probe authenticates as. Never a real
+/// fleet member: admit paths route this name to a [`StatusSink`] before
+/// any site-membership check.
+pub const PROBE_SITE: &str = "_status";
+
+type Provider = Arc<dyn Fn() -> Json + Send + Sync>;
+
+fn provider_slot() -> &'static Mutex<Option<Provider>> {
+    static SLOT: Mutex<Option<Provider>> = Mutex::new(None);
+    &SLOT
+}
+
+/// Register the serving layer's status fields (jobs, rounds, sites);
+/// the returned object's fields are merged over the base document.
+pub fn set_provider(f: impl Fn() -> Json + Send + Sync + 'static) {
+    *provider_slot().lock().unwrap() = Some(Arc::new(f));
+}
+
+/// Drop the provider (job runtime shutting down).
+pub fn clear_provider() {
+    *provider_slot().lock().unwrap() = None;
+}
+
+/// Build the status document: metrics snapshot + in-flight spans +
+/// per-shard reactor load, merged with the registered provider's fields.
+pub fn current() -> Json {
+    let mut obj = std::collections::BTreeMap::new();
+    obj.insert("v".to_string(), Json::num(1.0));
+    obj.insert("metrics".to_string(), crate::obs::global().snapshot());
+    obj.insert(
+        "active_spans".to_string(),
+        Json::arr(
+            crate::obs::span::active_spans()
+                .iter()
+                .map(|s| s.to_json()),
+        ),
+    );
+    obj.insert(
+        "shards".to_string(),
+        Json::arr(crate::sfm::reactor::global().shard_stats().iter().map(|s| {
+            Json::obj([
+                ("shard", Json::num(s.shard as f64)),
+                ("conns", Json::num(s.conns as f64)),
+                ("tcp_conns", Json::num(s.tcp_conns as f64)),
+                ("queue_depth", Json::num(s.queue_depth as f64)),
+                ("timers", Json::num(s.timers as f64)),
+                ("intervals", Json::num(s.intervals as f64)),
+                ("frames_in", Json::num(s.frames_in as f64)),
+                ("bytes_in", Json::num(s.bytes_in as f64)),
+                ("saturation", Json::num(s.saturation())),
+            ])
+        })),
+    );
+    let provider = provider_slot().lock().unwrap().clone();
+    if let Some(p) = provider {
+        if let Json::Obj(extra) = p() {
+            for (k, v) in extra {
+                obj.insert(k, v);
+            }
+        }
+    }
+    Json::Obj(obj)
+}
+
+/// A `KIND_STATUS` frame: empty payload = request, JSON payload = reply.
+pub fn status_frame(payload: Vec<u8>) -> Frame {
+    Frame {
+        flags: FLAG_FIRST | FLAG_LAST,
+        kind: KIND_STATUS,
+        job: 0,
+        stream: 0,
+        seq: 0,
+        total: 1,
+        payload: payload.into(),
+    }
+}
+
+/// Serialized [`current`] for a reply frame.
+pub fn reply_payload() -> Vec<u8> {
+    current().to_string().into_bytes()
+}
+
+/// [`FrameSink`] for a dedicated status probe connection (admitted by an
+/// [`crate::sfm::accept::AuthAcceptor`]): answers every `KIND_STATUS`
+/// request with the current document and ignores everything else.
+pub struct StatusSink {
+    send: TcpDriver,
+}
+
+impl StatusSink {
+    pub fn new(send_half: TcpStream) -> Result<StatusSink, SfmError> {
+        Ok(StatusSink {
+            send: TcpDriver::from_stream(send_half, true)?,
+        })
+    }
+}
+
+impl FrameSink for StatusSink {
+    fn on_frame(&mut self, frame: Frame) -> SinkStatus {
+        if frame.kind == KIND_STATUS {
+            crate::obs::counter("status.requests").inc();
+            if self.send.send(status_frame(reply_payload())).is_err() {
+                return SinkStatus::Closed;
+            }
+        }
+        SinkStatus::Ready
+    }
+
+    fn on_resume(&mut self) -> SinkStatus {
+        SinkStatus::Ready
+    }
+
+    fn on_closed(&mut self, _err: SfmError) {}
+}
+
+/// Dial `addr`, authenticate as `name` with `token`, send one status
+/// request, and parse the reply — the client side of `fedflare status`
+/// (and of tests asserting a live snapshot mid-round).
+pub fn query(addr: &str, name: &str, token: &str, timeout: Duration) -> Result<Json> {
+    let mut drv =
+        TcpDriver::connect(addr, true).with_context(|| format!("connect {addr}"))?;
+    drv.set_read_timeout(Some(timeout))
+        .map_err(|e| anyhow!("set status read timeout: {e}"))?;
+    let mut w = Writer::new();
+    w.str(name);
+    w.str(token);
+    drv.send(Frame {
+        flags: FLAG_FIRST | FLAG_LAST,
+        kind: KIND_AUTH,
+        job: 0,
+        stream: 0,
+        seq: 0,
+        total: 1,
+        payload: w.into_vec().into(),
+    })
+    .map_err(|e| anyhow!("send auth: {e}"))?;
+    drv.send(status_frame(Vec::new()))
+        .map_err(|e| anyhow!("send status request: {e}"))?;
+    loop {
+        let f = drv.recv().map_err(|e| anyhow!("await status reply: {e}"))?;
+        if f.kind == KIND_STATUS && !f.payload.is_empty() {
+            let text = std::str::from_utf8(&f.payload).context("status reply utf8")?;
+            return Json::parse(text).map_err(|e| anyhow!("status reply json: {e}"));
+        }
+        // heartbeats or unrelated control frames may interleave; skip
+    }
+}

@@ -28,6 +28,7 @@ use std::time::Duration;
 
 use super::reactor::{self, FrameSink, SinkStatus};
 use super::{Frame, SfmError, KIND_AUTH};
+use crate::obs;
 use crate::util::bytes::Reader;
 
 /// The identity a connection presented in its auth frame, plus where it
@@ -69,7 +70,7 @@ impl AuthAcceptor {
             let recv = match stream.try_clone() {
                 Ok(s) => s,
                 Err(e) => {
-                    log::warn!("accept {peer}: clone failed: {e}");
+                    obs::log!(warn, "accept {peer}: clone failed: {e}");
                     return;
                 }
             };
@@ -101,7 +102,8 @@ impl AuthAcceptor {
                 handshake_deadline,
                 Box::new(move || {
                     if !deadline_authed.load(Ordering::SeqCst) {
-                        log::warn!("auth: {peer} silent past the handshake deadline; dropping");
+                        obs::log!(warn, "auth: {peer} silent past the handshake deadline; dropping");
+                        obs::counter("auth.deadline_drops").inc();
                         reactor::global().deregister(tok);
                     }
                     false
@@ -165,17 +167,18 @@ impl GateSink {
             unreachable!("admit_first only runs while pending");
         };
         if frame.kind != KIND_AUTH {
-            log::warn!("auth: {peer} sent kind {} before authenticating", frame.kind);
+            obs::log!(warn, "auth: {peer} sent kind {} before authenticating", frame.kind);
             return SinkStatus::Closed;
         }
         let mut r = Reader::new(&frame.payload);
         let (name, presented) = match (r.str(), r.str()) {
             (Ok(n), Ok(t)) => (n, t),
             _ => {
-                log::warn!("auth: {peer} sent a malformed auth frame");
+                obs::log!(warn, "auth: {peer} sent a malformed auth frame");
                 return SinkStatus::Closed;
             }
         };
+        let _admit_span = obs::span!("admit", site: name.as_str());
         // Mark before admitting: the deadline timer must not drop a
         // connection that is mid-admission.
         authed.store(true, Ordering::SeqCst);
@@ -187,11 +190,13 @@ impl GateSink {
         };
         match admit(info, send_half, token) {
             Ok(sink) => {
+                obs::counter("auth.admitted").inc();
                 self.gate = Gate::Passing(sink);
                 SinkStatus::Ready
             }
             Err(why) => {
-                log::warn!("auth: rejected {peer}: {why}");
+                obs::log!(warn, "auth: rejected {peer}: {why}");
+                obs::counter("auth.rejected").inc();
                 SinkStatus::Closed
             }
         }

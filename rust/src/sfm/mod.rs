@@ -73,6 +73,15 @@ pub const KIND_HEARTBEAT: u16 = u16::MAX - 1;
 /// queue; in-process drivers skip the handshake entirely.
 pub const KIND_AUTH: u16 = u16::MAX - 2;
 
+/// Frame kind of the live-introspection probe (control plane): an
+/// empty-payload request on job 0 that the server answers with the
+/// current observability snapshot ([`crate::obs::status::current`]) as a
+/// JSON payload in the same frame shape. Intercepted at the [`mux`] like
+/// heartbeats — never routed to a job queue, never charged to the token
+/// bucket — and also served by dedicated status-probe connections (the
+/// `fedflare status` CLI dials in through the auth gate like any site).
+pub const KIND_STATUS: u16 = u16::MAX - 3;
+
 /// One chunk of a streamed message.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Frame {

@@ -55,12 +55,13 @@
 use std::collections::{HashMap, HashSet, VecDeque};
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, Sender, TryRecvError};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 use super::reactor::{self, FrameSink, SinkStatus};
 use super::throttle::TokenBucket;
-use super::{Driver, Frame, SfmError, FLAG_FIRST, FLAG_LAST, KIND_HEARTBEAT};
+use super::{Driver, Frame, SfmError, FLAG_FIRST, FLAG_LAST, KIND_HEARTBEAT, KIND_STATUS};
+use crate::obs::{self, status};
 use crate::util::mem;
 use crate::util::pool::Payload;
 
@@ -108,6 +109,11 @@ struct MuxState {
     /// (a non-empty parked backlog) — the per-connection "bucket
     /// throttle time" load signal.
     throttle_wait_ns: AtomicU64,
+    /// Back-reference to the connection for reactor-thread replies to
+    /// intercepted control frames (the [`KIND_STATUS`] probe). Weak
+    /// because [`MuxInner`] owns this state — a strong ref would leak
+    /// the connection. Filled in by [`MuxConn::build`].
+    conn: Mutex<Weak<MuxInner>>,
 }
 
 /// Stand-in transport installed by [`MuxConn::kill`]: every operation
@@ -163,6 +169,7 @@ impl MuxConn {
             on_deliver: Mutex::new(None),
             parked_bytes: AtomicUsize::new(0),
             throttle_wait_ns: AtomicU64::new(0),
+            conn: Mutex::new(Weak::new()),
         });
         // Parking cap before reads pause: a few bursts' worth, so the
         // reactor keeps some frames staged for eta-paced delivery without
@@ -189,6 +196,7 @@ impl MuxConn {
                 hb_timer: Mutex::new(None),
             }),
         };
+        *conn.inner.state.conn.lock().unwrap() = Arc::downgrade(&conn.inner);
         (conn, sink)
     }
 
@@ -576,6 +584,25 @@ impl FrameSink for MuxSink {
             // and consume it — heartbeats never reach a job queue, never
             // charge the bucket, never wait behind parked data
             *self.state.heartbeat.lock().unwrap() = Some(Instant::now());
+            return self.backoff();
+        }
+        if frame.kind == KIND_STATUS {
+            if frame.payload.is_empty() {
+                // priority lane: answer the live-introspection probe in
+                // place without ever blocking the reactor — a contended
+                // send lock or a full socket buffer drops the request
+                // (the prober retries on its own cadence)
+                obs::counter("status.requests").inc();
+                if let Some(inner) = self.state.conn.lock().unwrap().upgrade() {
+                    if let Ok(mut sh) = inner.send_half.try_lock() {
+                        let _ = sh.send_nowait(status::status_frame(status::reply_payload()));
+                    }
+                }
+            } else {
+                // a peer's reply addressed to a local prober: route it
+                // like job-0 control so the asking side can read it
+                self.deliver(frame);
+            }
             return self.backoff();
         }
         if frame.job == 0 {

@@ -72,12 +72,13 @@ use std::cmp::Reverse;
 use std::collections::{BinaryHeap, HashMap, HashSet};
 use std::io::Read;
 use std::net::{SocketAddr, TcpListener, TcpStream};
-use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{Receiver, TryRecvError};
 use std::sync::{Arc, Condvar, Mutex, OnceLock};
 use std::time::{Duration, Instant};
 
 use super::{Driver, Frame, SfmError};
+use crate::obs;
 use crate::util::mem;
 
 /// Identifies one registered connection. The owning shard's index is
@@ -294,20 +295,28 @@ impl Inner {
 }
 
 /// One reactor shard: its own poll set, ready queue, and timer wheel,
-/// plus lock-free load counters for balance metrics.
+/// plus lock-free load counters for balance metrics. The counters are
+/// `&'static` handles into the [`obs`] registry (labeled `{shard=i}`),
+/// so shard load shows up in every registry snapshot — `shard_stats`
+/// reads the same handles, keeping the two views one surface.
 struct Shard {
     idx: usize,
     inner: Mutex<Inner>,
     cv: Condvar,
     /// Resident connections (including listeners) — the least-loaded
-    /// pinning signal, readable without the shard lock.
-    conn_count: AtomicUsize,
-    frames_in: AtomicU64,
-    bytes_in: AtomicU64,
-    /// Nanoseconds spent doing work (outside the condvar wait).
-    busy_ns: AtomicU64,
-    /// Nanoseconds spent parked in the condvar wait.
-    idle_ns: AtomicU64,
+    /// pinning signal, readable without the shard lock
+    /// (`reactor.conns{shard=i}`).
+    conn_count: &'static obs::Gauge,
+    /// `reactor.frames_in{shard=i}`.
+    frames_in: &'static obs::Counter,
+    /// `reactor.bytes_in{shard=i}`.
+    bytes_in: &'static obs::Counter,
+    /// Nanoseconds spent doing work, outside the condvar wait
+    /// (`reactor.busy_ns{shard=i}`).
+    busy_ns: &'static obs::Counter,
+    /// Nanoseconds spent parked in the condvar wait
+    /// (`reactor.idle_ns{shard=i}`).
+    idle_ns: &'static obs::Counter,
 }
 
 /// A point-in-time load snapshot of one shard (see
@@ -376,15 +385,19 @@ pub fn global() -> &'static Reactor {
     GLOBAL.get_or_init(|| {
         let n = configured_shards();
         let shards = (0..n)
-            .map(|idx| Shard {
-                idx,
-                inner: Mutex::new(Inner::default()),
-                cv: Condvar::new(),
-                conn_count: AtomicUsize::new(0),
-                frames_in: AtomicU64::new(0),
-                bytes_in: AtomicU64::new(0),
-                busy_ns: AtomicU64::new(0),
-                idle_ns: AtomicU64::new(0),
+            .map(|idx| {
+                let label = idx.to_string();
+                let l: &[(&str, &str)] = &[("shard", &label)];
+                Shard {
+                    idx,
+                    inner: Mutex::new(Inner::default()),
+                    cv: Condvar::new(),
+                    conn_count: obs::gauge_with("reactor.conns", l),
+                    frames_in: obs::counter_with("reactor.frames_in", l),
+                    bytes_in: obs::counter_with("reactor.bytes_in", l),
+                    busy_ns: obs::counter_with("reactor.busy_ns", l),
+                    idle_ns: obs::counter_with("reactor.idle_ns", l),
+                }
             })
             .collect();
         let r: &'static Reactor = Box::leak(Box::new(Reactor {
@@ -418,7 +431,7 @@ impl Reactor {
     fn least_loaded(&self) -> &Shard {
         self.shards
             .iter()
-            .min_by_key(|s| s.conn_count.load(Ordering::Relaxed))
+            .min_by_key(|s| s.conn_count.get())
             .expect("reactor has at least one shard")
     }
 
@@ -534,10 +547,10 @@ impl Reactor {
                     queue_depth: inner.ready.len(),
                     timers: inner.timers.len(),
                     intervals: inner.intervals.len(),
-                    frames_in: s.frames_in.load(Ordering::Relaxed),
-                    bytes_in: s.bytes_in.load(Ordering::Relaxed),
-                    busy_ns: s.busy_ns.load(Ordering::Relaxed),
-                    idle_ns: s.idle_ns.load(Ordering::Relaxed),
+                    frames_in: s.frames_in.get(),
+                    bytes_in: s.bytes_in.get(),
+                    busy_ns: s.busy_ns.get(),
+                    idle_ns: s.idle_ns.get(),
                 }
             })
             .collect()
@@ -571,7 +584,7 @@ impl Shard {
             },
         );
         drop(inner);
-        self.conn_count.fetch_add(1, Ordering::Relaxed);
+        self.conn_count.add(1);
         self.cv.notify_all();
     }
 
@@ -586,7 +599,7 @@ impl Shard {
             slot
         };
         if slot.is_some() {
-            self.conn_count.fetch_sub(1, Ordering::Relaxed);
+            self.conn_count.sub(1);
         }
         // Drop outside the lock: TcpSource::drop tracks torn-frame bytes
         // and the sink's drop may run arbitrary (mux) code.
@@ -665,8 +678,7 @@ impl Shard {
             }
 
             let inner = self.inner.lock().unwrap();
-            self.busy_ns
-                .fetch_add(loop_start.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.busy_ns.add(loop_start.elapsed().as_nanos() as u64);
             if !inner.ready.is_empty() {
                 continue;
             }
@@ -680,8 +692,7 @@ impl Shard {
             }
             let park = Instant::now();
             let _ = self.cv.wait_timeout(inner, wait);
-            self.idle_ns
-                .fetch_add(park.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            self.idle_ns.add(park.elapsed().as_nanos() as u64);
         }
     }
 
@@ -718,9 +729,8 @@ impl Shard {
                 let polled = rx.lock().unwrap().try_recv();
                 match polled {
                     Ok(frame) => {
-                        self.frames_in.fetch_add(1, Ordering::Relaxed);
-                        self.bytes_in
-                            .fetch_add(frame.payload.len() as u64, Ordering::Relaxed);
+                        self.frames_in.inc();
+                        self.bytes_in.add(frame.payload.len() as u64);
                         let status = c.sink.on_frame(frame);
                         self.apply(&mut c, token, status);
                     }
@@ -750,7 +760,7 @@ impl Shard {
                 Err(e) => {
                     // Transient (EMFILE under fd pressure, aborted
                     // handshake): keep the listener, retry next round.
-                    log::warn!("listener accept error: {e}");
+                    obs::log!(warn, "listener accept error: {e}");
                     return;
                 }
             }
@@ -769,8 +779,8 @@ impl Shard {
                 };
                 read_and_decode(src)
             };
-            self.frames_in.fetch_add(frames.len() as u64, Ordering::Relaxed);
-            self.bytes_in.fetch_add(read_n as u64, Ordering::Relaxed);
+            self.frames_in.add(frames.len() as u64);
+            self.bytes_in.add(read_n as u64);
             // 2) feed decoded frames (the sink owns them even if it
             //    answers with backpressure mid-batch)
             for frame in frames {

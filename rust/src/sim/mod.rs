@@ -47,6 +47,7 @@ use crate::coordinator::OwnedExecutorFactory;
 use crate::executor::{JobDirectory, JobStart, MultiJobRuntime};
 use crate::fleet::{ClientState, Registry};
 use crate::message::FlMessage;
+use crate::obs;
 use crate::sfm::mux::{JobTagged, MuxConn};
 use crate::sfm::{inproc, reactor, tcp, Driver, EvictionPolicy};
 use crate::streaming::Messenger;
@@ -219,7 +220,7 @@ fn service_cell(cell: &mut ClientCell) {
                 Ok(true) => {}
                 Ok(false) => finish_cell(cell),
                 Err(e) => {
-                    log::warn!("fleet client {}: {e}", cell.runtime.name());
+                    obs::log!(warn, "fleet client {}: {e}", cell.runtime.name());
                     finish_cell(cell);
                 }
             },
@@ -656,6 +657,8 @@ impl Fleet {
     /// channel. Failures are logged, never fatal — the job simply keeps
     /// running without the client.
     fn handle_rejoin(&self, idx: usize, name: &str) {
+        let _rejoin_span = obs::span!("rejoin", site: name);
+        obs::counter("fleet.rejoins").inc();
         let specs: Vec<RejoinWork> = {
             let p = self.plumbing.lock().unwrap();
             p.rejoin
@@ -679,7 +682,7 @@ impl Fleet {
             // that stalls teardown. Skip; the deploy in flight is
             // already targeting the fleet's current connections.
             let Some(swap) = swap else {
-                log::debug!("rejoin {name} into job {job_id}: not yet deployable, skipped");
+                obs::log!(debug, "rejoin {name} into job {job_id}: not yet deployable, skipped");
                 continue;
             };
             let i = job
@@ -694,7 +697,7 @@ impl Fleet {
             let executor = match built {
                 Ok(e) => e,
                 Err(e) => {
-                    log::warn!("rejoin {name} into job {job_id}: executor build failed: {e}");
+                    obs::log!(warn, "rejoin {name} into job {job_id}: executor build failed: {e}");
                     continue;
                 }
             };
@@ -713,12 +716,12 @@ impl Fleet {
                 },
             );
             if let Err(e) = self.open_job(idx, job_id, &job.name) {
-                log::warn!("rejoin {name} into job {job_id}: {e}");
+                obs::log!(warn, "rejoin {name} into job {job_id}: {e}");
                 continue;
             }
             let m = self.job_messenger(idx, job_id, &job.stream);
             if swap.send(m).is_err() {
-                log::debug!("rejoin {name} into job {job_id}: handle already gone");
+                obs::log!(debug, "rejoin {name} into job {job_id}: handle already gone");
             }
         }
     }

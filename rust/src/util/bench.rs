@@ -95,6 +95,17 @@ pub fn report(s: &BenchStats, throughput: Option<String>) {
 /// perf trajectory of every bench is trackable across PRs). Returns the
 /// path written.
 pub fn emit_json(name: &str, payload: crate::util::json::Json) -> std::io::Result<String> {
+    use crate::util::json::Json;
+    // every report carries the run's final observability snapshot, so a
+    // perf trend can be cross-read against the counters behind it
+    // (allocations, writev batching, reactor load) from the same run
+    let payload = match payload {
+        Json::Obj(mut obj) => {
+            obj.insert("obs".to_string(), crate::obs::global().snapshot());
+            Json::Obj(obj)
+        }
+        other => other,
+    };
     let path = format!("BENCH_{name}.json");
     std::fs::write(&path, payload.to_string())?;
     println!("\nwrote {path}");

@@ -2,268 +2,275 @@
 //! counter (incremented by the streaming layer's payload allocations) plus
 //! a `/proc/self/status` RSS reader, and a background sampler thread that
 //! writes a time series.
+//!
+//! Since the observability plane landed, every process-global counter
+//! here is a thin shim over the [`crate::obs`] metrics registry — the
+//! same numbers appear in registry snapshots, `fedflare status`, and the
+//! exporter's JSONL under the `mem.*` / `pool.*` / `sfm.*` names — while
+//! this module keeps its historical function-per-counter API so hot-path
+//! call sites and tests are untouched. Handles are interned once per
+//! process; after that each call is a single relaxed atomic op, exactly
+//! as before.
 
 use std::sync::atomic::{AtomicI64, AtomicU64, Ordering};
-use std::sync::{mpsc, Arc};
+use std::sync::{mpsc, Arc, OnceLock};
 use std::time::{Duration, Instant};
 
-/// Bytes currently held by tracked streaming buffers (global).
-static TRACKED: AtomicI64 = AtomicI64::new(0);
-/// High-water mark of `TRACKED`.
-static TRACKED_PEAK: AtomicU64 = AtomicU64::new(0);
-/// Bytes of client results currently held by the server's gather path
-/// (the streaming aggregator's in-flight inputs) — separate from
-/// `TRACKED` so a single-process simulation can still observe the
-/// server-side aggregation footprint in isolation.
-static GATHER: AtomicI64 = AtomicI64::new(0);
-/// High-water mark of `GATHER`.
-static GATHER_PEAK: AtomicU64 = AtomicU64::new(0);
-/// Bytes staged by tensor-granular record assembly: out-of-order chunks
-/// plus the partial record at the contiguous frontier. With wire format
-/// v2 this is the receive-side footprint *between* frames arriving and a
-/// tensor record completing — O(largest tensor + in-flight chunks), where
-/// the v1 blob path staged the whole payload.
-static STAGE: AtomicI64 = AtomicI64::new(0);
-/// High-water mark of `STAGE`.
-static STAGE_PEAK: AtomicU64 = AtomicU64::new(0);
-/// Cumulative bytes *discarded* by eviction: stale reassembly partials of
-/// vanished peers, frames of closed/aborted jobs dropped by the session
-/// mux. Monotonic — a serving system's "memory reclaimed from dead
-/// streams" gauge, so an aborted job's drained buffers are observable.
-static EVICTED: AtomicU64 = AtomicU64::new(0);
-/// Bytes currently *parked* by receive-side throttling: frames the
-/// reactor has accepted but a connection's token bucket has not admitted
-/// downstream yet (the mux's per-connection backlog, globally summed).
-static PARKED: AtomicI64 = AtomicI64::new(0);
-/// High-water mark of `PARKED`.
-static PARKED_PEAK: AtomicU64 = AtomicU64::new(0);
-/// Cumulative ns connections spent with a non-empty parked backlog —
-/// the fleet-wide "bucket throttle time" gauge.
-static THROTTLE_WAIT_NS: AtomicU64 = AtomicU64::new(0);
-/// Buffer-pool checkouts served from a free list (no heap traffic).
-static POOL_HITS: AtomicU64 = AtomicU64::new(0);
-/// Buffer-pool checkouts that had to allocate (cold class or oversize).
-/// At steady state this must stop moving — pinned by the zero-allocation
-/// regression test.
-static POOL_MISSES: AtomicU64 = AtomicU64::new(0);
-/// Bytes currently parked in the pool's free lists.
-static POOL_HELD: AtomicI64 = AtomicI64::new(0);
-/// High-water mark of `POOL_HELD`.
-static POOL_HELD_PEAK: AtomicU64 = AtomicU64::new(0);
-/// Cumulative heap allocations that became frame payloads: pool misses
-/// plus unpooled `Vec<u8>` payload wraps. The per-frame allocation count
-/// of the data plane — zero growth per frame at steady state.
-static FRAME_ALLOCS: AtomicU64 = AtomicU64::new(0);
-/// Cumulative payload bytes memcpy'd on the send/receive path (encode
-/// staging, record-boundary chunk assembly, wire decode, reassembly
-/// concatenation). Shared-slice payload routing does not count — that is
-/// the point of it.
-static BYTES_COPIED: AtomicU64 = AtomicU64::new(0);
-/// Vectored-write syscalls issued by the TCP send path.
-static WRITEV_CALLS: AtomicU64 = AtomicU64::new(0);
-/// Frames carried by those writev calls (frames/calls = mean batch size).
-static WRITEV_FRAMES: AtomicU64 = AtomicU64::new(0);
+use crate::obs;
+
+/// Cache one `&'static` registry handle per metric (the registry lookup
+/// takes a lock; the shims must stay lock-free after first use).
+macro_rules! handle {
+    ($fn_name:ident, $ty:ty, $lookup:ident, $metric:expr) => {
+        fn $fn_name() -> &'static $ty {
+            static H: OnceLock<&'static $ty> = OnceLock::new();
+            H.get_or_init(|| obs::$lookup($metric))
+        }
+    };
+}
+
+// Bytes currently held by tracked streaming buffers (global).
+handle!(tracked, obs::Gauge, gauge, "mem.tracked_bytes");
+// Bytes of client results currently held by the server's gather path
+// (the streaming aggregator's in-flight inputs) — separate from
+// `mem.tracked_bytes` so a single-process simulation can still observe
+// the server-side aggregation footprint in isolation.
+handle!(gather, obs::Gauge, gauge, "mem.gather_bytes");
+// Bytes staged by tensor-granular record assembly: out-of-order chunks
+// plus the partial record at the contiguous frontier. With wire format
+// v2 this is the receive-side footprint *between* frames arriving and a
+// tensor record completing — O(largest tensor + in-flight chunks), where
+// the v1 blob path staged the whole payload.
+handle!(stage, obs::Gauge, gauge, "mem.stage_bytes");
+// Cumulative bytes *discarded* by eviction: stale reassembly partials of
+// vanished peers, frames of closed/aborted jobs dropped by the session
+// mux. Monotonic — a serving system's "memory reclaimed from dead
+// streams" gauge, so an aborted job's drained buffers are observable.
+handle!(evicted, obs::Counter, counter, "mem.evicted_bytes");
+// Bytes currently *parked* by receive-side throttling: frames the
+// reactor has accepted but a connection's token bucket has not admitted
+// downstream yet (the mux's per-connection backlog, globally summed).
+handle!(parked, obs::Gauge, gauge, "mem.parked_bytes");
+// Cumulative ns connections spent with a non-empty parked backlog —
+// the fleet-wide "bucket throttle time" gauge.
+handle!(throttle_ns, obs::Counter, counter, "mem.throttle_wait_ns");
+// Buffer-pool checkouts served from a free list (no heap traffic).
+handle!(pool_hits_c, obs::Counter, counter, "pool.hits");
+// Buffer-pool checkouts that had to allocate (cold class or oversize).
+// At steady state this must stop moving — pinned by the zero-allocation
+// regression test.
+handle!(pool_misses_c, obs::Counter, counter, "pool.misses");
+// Bytes currently parked in the pool's free lists.
+handle!(pool_held, obs::Gauge, gauge, "pool.held_bytes");
+// Cumulative heap allocations that became frame payloads: pool misses
+// plus unpooled `Vec<u8>` payload wraps. The per-frame allocation count
+// of the data plane — zero growth per frame at steady state.
+handle!(frame_allocs_c, obs::Counter, counter, "sfm.frame_allocs");
+// Cumulative payload bytes memcpy'd on the send/receive path (encode
+// staging, record-boundary chunk assembly, wire decode, reassembly
+// concatenation). Shared-slice payload routing does not count — that is
+// the point of it.
+handle!(bytes_copied_c, obs::Counter, counter, "sfm.bytes_copied");
+// Vectored-write syscalls issued by the TCP send path, and the frames
+// they carried (frames/calls = mean batch size).
+handle!(writev_calls_c, obs::Counter, counter, "sfm.writev_calls");
+handle!(writev_frames_c, obs::Counter, counter, "sfm.writev_frames");
 
 /// Record an allocation of `n` bytes in the streaming layer.
 pub fn track_alloc(n: usize) {
-    let cur = TRACKED.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
-    TRACKED_PEAK.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+    tracked().add(n as u64);
 }
 
 /// Record a release of `n` bytes.
 pub fn track_free(n: usize) {
-    TRACKED.fetch_sub(n as i64, Ordering::Relaxed);
+    tracked().sub(n as u64);
 }
 
 /// Current tracked bytes.
 pub fn tracked_bytes() -> i64 {
-    TRACKED.load(Ordering::Relaxed)
+    tracked().get()
 }
 
 /// High-water mark since process start (or [`reset_peak`]).
 pub fn tracked_peak() -> u64 {
-    TRACKED_PEAK.load(Ordering::Relaxed)
+    tracked().peak()
 }
 
 pub fn reset_peak() {
-    TRACKED_PEAK.store(tracked_bytes().max(0) as u64, Ordering::Relaxed);
+    tracked().reset_peak();
 }
 
 /// Record `n` bytes entering the server-side gather path.
 pub fn gather_track_alloc(n: usize) {
-    let cur = GATHER.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
-    GATHER_PEAK.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+    gather().add(n as u64);
 }
 
 /// Record `n` bytes leaving the gather path (folded into the accumulator
 /// and dropped).
 pub fn gather_track_free(n: usize) {
-    GATHER.fetch_sub(n as i64, Ordering::Relaxed);
+    gather().sub(n as u64);
 }
 
 /// Bytes of in-flight gathered results right now.
 pub fn gather_bytes() -> i64 {
-    GATHER.load(Ordering::Relaxed)
+    gather().get()
 }
 
 /// High-water mark of the gather counter since start (or
 /// [`reset_gather_peak`]).
 pub fn gather_peak() -> u64 {
-    GATHER_PEAK.load(Ordering::Relaxed)
+    gather().peak()
 }
 
 pub fn reset_gather_peak() {
-    GATHER_PEAK.store(gather_bytes().max(0) as u64, Ordering::Relaxed);
+    gather().reset_peak();
 }
 
 /// Record `n` bytes entering record-assembly staging.
 pub fn stage_track_alloc(n: usize) {
-    let cur = STAGE.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
-    STAGE_PEAK.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+    stage().add(n as u64);
 }
 
 /// Record `n` bytes leaving record-assembly staging (record completed or
 /// assembler dropped).
 pub fn stage_track_free(n: usize) {
-    STAGE.fetch_sub(n as i64, Ordering::Relaxed);
+    stage().sub(n as u64);
 }
 
 /// Bytes currently staged by record assemblers.
 pub fn stage_bytes() -> i64 {
-    STAGE.load(Ordering::Relaxed)
+    stage().get()
 }
 
 /// High-water mark of the staging counter since start (or
 /// [`reset_stage_peak`]).
 pub fn stage_peak() -> u64 {
-    STAGE_PEAK.load(Ordering::Relaxed)
+    stage().peak()
 }
 
 pub fn reset_stage_peak() {
-    STAGE_PEAK.store(stage_bytes().max(0) as u64, Ordering::Relaxed);
+    stage().reset_peak();
 }
 
 /// Record `n` bytes discarded by eviction (stale partial streams, frames
 /// of closed jobs). Cumulative; never decremented.
 pub fn track_evicted(n: usize) {
-    EVICTED.fetch_add(n as u64, Ordering::Relaxed);
+    evicted().add(n as u64);
 }
 
 /// Total bytes discarded by eviction since process start.
 pub fn evicted_bytes() -> u64 {
-    EVICTED.load(Ordering::Relaxed)
+    evicted().get()
 }
 
 /// Record `n` bytes parked by a receive-side throttle backlog (frames
 /// the reactor accepted but a token bucket has not admitted yet).
 pub fn park_track_alloc(n: usize) {
-    let cur = PARKED.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
-    PARKED_PEAK.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+    parked().add(n as u64);
 }
 
 /// Record `n` parked bytes released (admitted downstream or dropped with
 /// their connection).
 pub fn park_track_free(n: usize) {
-    PARKED.fetch_sub(n as i64, Ordering::Relaxed);
+    parked().sub(n as u64);
 }
 
 /// Bytes currently parked across all throttled connections.
 pub fn parked_bytes() -> i64 {
-    PARKED.load(Ordering::Relaxed)
+    parked().get()
 }
 
 /// High-water mark of the parked counter since start.
 pub fn parked_peak() -> u64 {
-    PARKED_PEAK.load(Ordering::Relaxed)
+    parked().peak()
 }
 
 /// Record `ns` nanoseconds a connection's receive path spent throttled
 /// (non-empty parked backlog). Cumulative across all connections.
 pub fn track_throttle_wait_ns(ns: u64) {
-    THROTTLE_WAIT_NS.fetch_add(ns, Ordering::Relaxed);
+    throttle_ns().add(ns);
 }
 
 /// Total receive-throttle stall time, in ns, since process start.
 pub fn throttle_wait_ns() -> u64 {
-    THROTTLE_WAIT_NS.load(Ordering::Relaxed)
+    throttle_ns().get()
 }
 
 /// Record a buffer-pool checkout served without allocating.
 pub fn pool_hit() {
-    POOL_HITS.fetch_add(1, Ordering::Relaxed);
+    pool_hits_c().inc();
 }
 
 /// Record a buffer-pool checkout that allocated.
 pub fn pool_miss() {
-    POOL_MISSES.fetch_add(1, Ordering::Relaxed);
+    pool_misses_c().inc();
 }
 
 /// Pool checkouts served from a free list since process start.
 pub fn pool_hits() -> u64 {
-    POOL_HITS.load(Ordering::Relaxed)
+    pool_hits_c().get()
 }
 
 /// Pool checkouts that allocated since process start.
 pub fn pool_misses() -> u64 {
-    POOL_MISSES.load(Ordering::Relaxed)
+    pool_misses_c().get()
 }
 
 /// Record `n` bytes entering the pool's free lists.
 pub fn pool_held_add(n: usize) {
-    let cur = POOL_HELD.fetch_add(n as i64, Ordering::Relaxed) + n as i64;
-    POOL_HELD_PEAK.fetch_max(cur.max(0) as u64, Ordering::Relaxed);
+    pool_held().add(n as u64);
 }
 
 /// Record `n` bytes checked back out of the free lists.
 pub fn pool_held_sub(n: usize) {
-    POOL_HELD.fetch_sub(n as i64, Ordering::Relaxed);
+    pool_held().sub(n as u64);
 }
 
 /// Bytes currently parked in pool free lists.
 pub fn pool_held_bytes() -> i64 {
-    POOL_HELD.load(Ordering::Relaxed)
+    pool_held().get()
 }
 
 /// High-water mark of pooled free-list bytes since process start.
 pub fn pool_held_peak() -> u64 {
-    POOL_HELD_PEAK.load(Ordering::Relaxed)
+    pool_held().peak()
 }
 
 /// Record one heap allocation that became a frame payload.
 pub fn track_frame_alloc() {
-    FRAME_ALLOCS.fetch_add(1, Ordering::Relaxed);
+    frame_allocs_c().inc();
 }
 
 /// Heap allocations that became frame payloads since process start
 /// (cumulative; flat at steady state).
 pub fn frame_allocs() -> u64 {
-    FRAME_ALLOCS.load(Ordering::Relaxed)
+    frame_allocs_c().get()
 }
 
 /// Record `n` payload bytes memcpy'd on the send/receive path.
 pub fn track_bytes_copied(n: usize) {
-    BYTES_COPIED.fetch_add(n as u64, Ordering::Relaxed);
+    bytes_copied_c().add(n as u64);
 }
 
 /// Payload bytes memcpy'd on the data plane since process start.
 pub fn bytes_copied() -> u64 {
-    BYTES_COPIED.load(Ordering::Relaxed)
+    bytes_copied_c().get()
 }
 
 /// Record one vectored-write syscall that carried `frames` frames.
 pub fn track_writev(frames: usize) {
-    WRITEV_CALLS.fetch_add(1, Ordering::Relaxed);
-    WRITEV_FRAMES.fetch_add(frames as u64, Ordering::Relaxed);
+    writev_calls_c().inc();
+    writev_frames_c().add(frames as u64);
 }
 
 /// Vectored-write syscalls issued since process start.
 pub fn writev_calls() -> u64 {
-    WRITEV_CALLS.load(Ordering::Relaxed)
+    writev_calls_c().get()
 }
 
 /// Frames carried by vectored writes since process start.
 pub fn writev_frames() -> u64 {
-    WRITEV_FRAMES.load(Ordering::Relaxed)
+    writev_frames_c().get()
 }
 
 /// A scoped byte counter (current + high-water mark). The process-global

@@ -1,0 +1,261 @@
+//! Observability-plane integration tests: a scheduled run must leave a
+//! span tree (round → scatter/gather/fold, gather → per-site streams)
+//! and the per-site gather histograms in the job's JSONL, and a live
+//! tcp deployment must answer `fedflare status` probes mid-round.
+
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use fedflare::config::{ClientSpec, JobConfig};
+use fedflare::coordinator::{FedAvg, JobRequest, JobScheduler, JobStatus};
+use fedflare::executor::{Executor, StreamTestExecutor};
+use fedflare::obs::status::{self, StatusSink, PROBE_SITE};
+use fedflare::sfm::accept::{AdmitFn, AuthAcceptor, AuthInfo};
+use fedflare::sim::{DriverKind, Fleet};
+use fedflare::util::json::Json;
+
+/// The status provider is a process-global slot (last scheduler wins), so
+/// tests that assert on provider-sourced fields must not overlap.
+static PROVIDER_LOCK: Mutex<()> = Mutex::new(());
+
+fn results_dir(tag: &str) -> String {
+    let d = std::env::temp_dir().join(format!("fedflare_obs_tests_{tag}"));
+    let _ = std::fs::remove_dir_all(&d);
+    let _ = std::fs::create_dir_all(&d);
+    d.to_string_lossy().to_string()
+}
+
+fn fleet_clients(n: usize) -> Vec<ClientSpec> {
+    (0..n)
+        .map(|i| ClientSpec {
+            name: format!("site-{:02}", i + 1),
+            bandwidth_bps: 0,
+            partition: i,
+        })
+        .collect()
+}
+
+fn add_delta_job(name: &str, n_clients: usize, rounds: usize) -> JobConfig {
+    let mut job = JobConfig::named(name, "stream_test");
+    job.rounds = rounds;
+    job.clients = fleet_clients(n_clients);
+    job.min_clients = n_clients;
+    job.stream.chunk_bytes = 4096;
+    job
+}
+
+fn submit(sched: &JobScheduler, job: JobConfig, work_ms: u64) -> u32 {
+    let initial = StreamTestExecutor::build_model(4, 256, 1.0);
+    let mut ctl = FedAvg::new(initial, job.rounds, job.min_clients);
+    ctl.task_name = "stream_test".into();
+    let factory: fedflare::coordinator::OwnedExecutorFactory = Box::new(move |_i, _s| {
+        let mut e = StreamTestExecutor::new(None, 0.5);
+        e.work_ms = work_ms;
+        Ok(Box::new(e) as Box<dyn Executor>)
+    });
+    sched.submit(JobRequest {
+        job,
+        controller: Box::new(ctl),
+        factory,
+    })
+}
+
+/// One parsed `span` JSONL event.
+#[derive(Debug, Clone)]
+struct Span {
+    name: String,
+    id: u64,
+    parent: u64,
+    job: u64,
+    site: String,
+    dur_us: f64,
+}
+
+/// Parse a job's `*.events.jsonl`: (spans by id, union of exported histo
+/// keys across all `metrics` delta events).
+fn parse_events(path: &std::path::Path) -> (HashMap<u64, Span>, Vec<String>) {
+    let text = std::fs::read_to_string(path)
+        .unwrap_or_else(|e| panic!("read {}: {e}", path.display()));
+    let mut spans = HashMap::new();
+    let mut histo_keys = Vec::new();
+    for line in text.lines().filter(|l| !l.trim().is_empty()) {
+        let doc = Json::parse(line).unwrap_or_else(|e| panic!("bad JSONL line: {e}\n{line}"));
+        match doc.get("kind").as_str() {
+            Some("span") => {
+                let s = Span {
+                    name: doc.get("name").as_str().unwrap_or("").to_string(),
+                    id: doc.get("id").as_f64().unwrap_or(0.0) as u64,
+                    parent: doc.get("parent").as_f64().unwrap_or(0.0) as u64,
+                    job: doc.get("job").as_f64().unwrap_or(0.0) as u64,
+                    site: doc.get("site").as_str().unwrap_or("").to_string(),
+                    dur_us: doc.get("dur_us").as_f64().unwrap_or(0.0),
+                };
+                assert!(s.id != 0, "span with zero id: {line}");
+                spans.insert(s.id, s);
+            }
+            Some("metrics") => {
+                if let Some(h) = doc.get("histos").as_obj() {
+                    for k in h.keys() {
+                        if !histo_keys.contains(k) {
+                            histo_keys.push(k.clone());
+                        }
+                    }
+                }
+            }
+            _ => {}
+        }
+    }
+    (spans, histo_keys)
+}
+
+#[test]
+fn two_job_run_exports_span_trees_and_gather_histograms() {
+    let _g = PROVIDER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = results_dir("jsonl");
+    let fleet =
+        Fleet::connect(&fleet_clients(3), DriverKind::InProc, &Default::default()).unwrap();
+    let sched = JobScheduler::new(fleet.clone(), 2, &dir);
+    let a = submit(&sched, add_delta_job("obs_a", 3, 3), 0);
+    let b = submit(&sched, add_delta_job("obs_b", 3, 2), 0);
+    for id in [a, b] {
+        let outcome = sched.wait(id);
+        assert_eq!(outcome.status, JobStatus::Completed, "{:?}", outcome.error);
+    }
+    sched.drain();
+    fleet.shutdown();
+
+    // the span ring is process-global, so each job's exporter may also
+    // drain the other job's spans — the tree structure disambiguates
+    let (spans, histo_keys) = parse_events(&std::path::Path::new(&dir).join("obs_a.events.jsonl"));
+
+    // job roots exist and carry the wire-level job id
+    let job_roots: Vec<&Span> = spans.values().filter(|s| s.name == "job").collect();
+    assert!(!job_roots.is_empty(), "no job spans exported");
+    assert!(job_roots.iter().all(|s| s.job != 0));
+
+    // every round span parents a scatter, a gather, and a fold, and the
+    // children's summed duration stays within the round's envelope
+    let rounds: Vec<&Span> = spans.values().filter(|s| s.name == "round").collect();
+    assert!(!rounds.is_empty(), "no round spans exported");
+    let mut full_rounds = 0;
+    for r in &rounds {
+        assert!(r.job != 0, "round span missing its job id");
+        let kids: Vec<&Span> = spans.values().filter(|s| s.parent == r.id).collect();
+        let has = |n: &str| kids.iter().any(|s| s.name == n);
+        if has("scatter") && has("gather") && has("fold") {
+            full_rounds += 1;
+            let child_sum: f64 = kids.iter().map(|s| s.dur_us).sum();
+            assert!(
+                child_sum <= r.dur_us * 1.2,
+                "children ({child_sum} µs) overflow their round ({} µs)",
+                r.dur_us
+            );
+        }
+    }
+    assert!(
+        full_rounds > 0,
+        "no round span parents scatter+gather+fold: {rounds:?}"
+    );
+
+    // per-site gather streams hang off a gather span and name their site
+    let gather_sites: Vec<&Span> = spans
+        .values()
+        .filter(|s| s.name == "gather.site")
+        .collect();
+    assert!(!gather_sites.is_empty(), "no gather.site spans exported");
+    for gs in &gather_sites {
+        assert!(!gs.site.is_empty(), "gather.site span without a site");
+        let parent = spans
+            .get(&gs.parent)
+            .unwrap_or_else(|| panic!("gather.site {gs:?} has a dangling parent"));
+        assert_eq!(parent.name, "gather", "gather.site parent is {parent:?}");
+    }
+
+    // client train spans made it across threads with their site label
+    assert!(
+        spans
+            .values()
+            .any(|s| s.name == "train" && !s.site.is_empty()),
+        "no train spans exported"
+    );
+
+    // the per-site gather histogram family landed in a metrics delta
+    assert!(
+        histo_keys
+            .iter()
+            .any(|k| k.starts_with("gather.site_ms{site=")),
+        "no gather.site_ms histograms exported; saw {histo_keys:?}"
+    );
+}
+
+#[test]
+fn status_query_answers_mid_round_over_tcp() {
+    let _g = PROVIDER_LOCK.lock().unwrap_or_else(|e| e.into_inner());
+    let dir = results_dir("status");
+    let fleet =
+        Fleet::connect(&fleet_clients(4), DriverKind::Tcp, &Default::default()).unwrap();
+    // `with_store`/`new` installs the scheduler's status provider
+    let sched = JobScheduler::new(fleet.clone(), 1, &dir);
+
+    // the status endpoint: probe connections authenticate like sites and
+    // are answered by a StatusSink (same wiring as `serve --status-port`)
+    let listener = fedflare::sfm::tcp::bind("127.0.0.1:0").unwrap();
+    let admit: AdmitFn = Arc::new(|_info: AuthInfo, send_stream, _tok| {
+        StatusSink::new(send_stream)
+            .map(|s| Box::new(s) as _)
+            .map_err(|e| format!("status probe: {e}"))
+    });
+    let acceptor =
+        AuthAcceptor::spawn(listener, true, Duration::from_secs(5), admit).unwrap();
+    let addr = acceptor.local_addr().to_string();
+
+    // a job slow enough (5 rounds x ~400 ms of simulated compute) that
+    // the probe below lands mid-round
+    let id = submit(&sched, add_delta_job("obs_status", 4, 5), 100);
+    let t0 = Instant::now();
+    let mut doc;
+    loop {
+        doc = status::query(&addr, PROBE_SITE, "", Duration::from_secs(5)).unwrap();
+        let running = doc
+            .get("jobs")
+            .get(&id.to_string())
+            .get("status")
+            .as_str()
+            == Some("running");
+        if running || t0.elapsed() > Duration::from_secs(10) {
+            break;
+        }
+        std::thread::sleep(Duration::from_millis(20));
+    }
+
+    assert_eq!(doc.get("v").as_f64(), Some(1.0));
+    // the probe saw our job mid-flight, by id and name
+    let job = doc.get("jobs").get(&id.to_string());
+    assert_eq!(job.get("name").as_str(), Some("obs_status"));
+    assert_eq!(job.get("status").as_str(), Some("running"));
+    // per-site fleet state from the registry snapshot
+    let sites = doc.get("sites").as_obj().expect("sites object");
+    assert_eq!(sites.len(), 4, "sites: {sites:?}");
+    for (name, state) in sites {
+        assert!(name.starts_with("site-"));
+        assert_eq!(state.as_str(), Some("live"), "site {name}: {state:?}");
+    }
+    // per-shard reactor load: the tcp fleet's connections are parked on
+    // the global reactor, so the shard table must show them
+    let shards = doc.get("shards").as_arr().expect("shards array");
+    assert!(!shards.is_empty());
+    let conns: f64 = shards
+        .iter()
+        .map(|s| s.get("conns").as_f64().unwrap_or(0.0))
+        .sum();
+    assert!(conns >= 4.0, "expected >= 4 reactor connections, saw {conns}");
+    // the metrics snapshot rides along
+    assert!(doc.get("metrics").get("counters").as_obj().is_some());
+
+    let outcome = sched.wait(id);
+    assert_eq!(outcome.status, JobStatus::Completed, "{:?}", outcome.error);
+    acceptor.shutdown();
+    sched.drain();
+    fleet.shutdown();
+}

@@ -38,6 +38,7 @@ ID_KEYS = (
     "case",
     "op",
     "storm",
+    "exporter",
 )
 
 

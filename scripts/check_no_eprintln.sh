@@ -1,0 +1,47 @@
+#!/usr/bin/env sh
+# CI lint gate for the observability plane: the library core
+# (rust/src/sfm/, rust/src/coordinator/, rust/src/fleet/) must not write
+# ad-hoc diagnostics to stdout/stderr. Library diagnostics go through
+# `obs::log!` (leveled, `FEDFLARE_LOG`-gated, counted per level in the
+# metrics registry) so operators control verbosity with one knob and the
+# `log.lines{level=...}` counters stay truthful; an `eprintln!` or
+# `println!` creeping back in bypasses both. The CLI layer (main.rs,
+# repro/) prints user-facing output freely — it is not linted.
+#
+# A deliberate, reviewed print site can be sanctioned by putting the
+# marker comment `loglint-allow: <reason>` on the line directly above
+# it. Test modules are exempt: everything after the first `#[cfg(test)]`
+# in a file is ignored.
+set -eu
+
+root="$(cd "$(dirname "$0")/.." && pwd)"
+status=0
+
+for f in $(find "$root/rust/src/sfm" "$root/rust/src/coordinator" "$root/rust/src/fleet" -name '*.rs' | sort); do
+    hits="$(awk '
+        /#\[cfg\(test\)\]/ { intest = 1 }
+        intest { next }
+        /eprintln!|println!/ {
+            if (prev !~ /loglint-allow:/) {
+                printf "%s:%d: %s\n", FILENAME, FNR, $0
+            }
+        }
+        { prev = $0 }
+    ' "$f")"
+    if [ -n "$hits" ]; then
+        echo "$hits"
+        status=1
+    fi
+done
+
+if [ "$status" -ne 0 ]; then
+    echo ""
+    echo "error: ad-hoc stdout/stderr diagnostics in the library core." >&2
+    echo "Library code under sfm/, coordinator/ and fleet/ logs through" >&2
+    echo "obs::log!(level, ...) — leveled, FEDFLARE_LOG-gated, and counted" >&2
+    echo "in the metrics registry (see rust/README.md, Observability). If" >&2
+    echo "the print is deliberate, mark the preceding line with" >&2
+    echo "'loglint-allow: <reason>'." >&2
+    exit 1
+fi
+echo "log lint: library core logs through obs::log! only (ok)"
